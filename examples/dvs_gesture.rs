@@ -1,0 +1,60 @@
+//! DVS gesture recognition on the spiking-CNN family (paper §6, Fig 3/5):
+//! renders one event frame as ASCII (the Fig-3 ON/OFF overlap view), then
+//! evaluates each family member, reproducing the accuracy-vs-size and
+//! energy/latency-vs-size trends.
+//!
+//!     make models
+//!     cargo run --release --example dvs_gesture [-- --samples 100]
+
+use anyhow::Result;
+use hiaer_spike::harness::{self, models_dir};
+use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::model_fmt::read_hsd;
+use hiaer_spike::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env(&[]).map_err(anyhow::Error::msg)?;
+    let samples = args.get_usize("samples", 100).map_err(anyhow::Error::msg)?;
+    let dir = models_dir();
+    let entries = harness::load_manifest(&dir)?;
+    let gestures: Vec<_> = entries.iter().filter(|e| e.task == "dvs_gesture").collect();
+    anyhow::ensure!(!gestures.is_empty(), "no gesture models; run `make models`");
+
+    // ---- Fig-3 style frame view from the first test sample
+    let ts = read_hsd(dir.join(format!("{}.hsd", gestures[0].name)))?;
+    let (c, h, w) = gestures[0].input;
+    assert_eq!(c, 2);
+    let frame = &ts.samples[0].frames[4.min(ts.frames_per_sample - 1)];
+    let mut on = vec![false; h * w];
+    let mut off = vec![false; h * w];
+    for &a in frame {
+        let a = a as usize;
+        if a < h * w {
+            on[a] = true;
+        } else {
+            off[a - h * w] = true;
+        }
+    }
+    println!("Fig-3 view (sample 0, frame 4; + = ON, - = OFF, * = both):");
+    for y in (0..h).step_by(2) {
+        let row: String = (0..w)
+            .map(|x| match (on[y * w + x], off[y * w + x]) {
+                (true, true) => '*',
+                (true, false) => '+',
+                (false, true) => '-',
+                _ => '.',
+            })
+            .collect();
+        println!("  {row}");
+    }
+
+    // ---- family evaluation
+    println!("\n== DVS gesture spiking-CNN family ==\n");
+    harness::print_header();
+    for e in &gestures {
+        let r = harness::evaluate_model(&dir, e, samples, SlotStrategy::BalanceFanIn)?;
+        harness::print_row(e, &r);
+    }
+    println!("\nlarger models: higher accuracy at higher energy/latency per gesture (paper Fig 5)");
+    Ok(())
+}

@@ -1,0 +1,234 @@
+//! DVS Pong (paper §6, Fig 4): the converted spiking policy network plays
+//! Atari-style Pong against the scripted opponent, observing DVS ON/OFF
+//! frame-difference events. Reports the mean score over N episodes
+//! (paper scale: max +21), the Table-2 "Score" column.
+//!
+//! The environment reimplements `python/data/pong.py` (the training
+//! environment) move-for-move; constants must stay in sync with that
+//! spec.
+//!
+//!     make models
+//!     cargo run --release --example dvs_pong [-- --episodes 50]
+
+use anyhow::Result;
+use hiaer_spike::convert::{run_inference, Readout};
+use hiaer_spike::energy::EnergyModel;
+use hiaer_spike::engine::{CoreEngine, RustBackend};
+use hiaer_spike::harness::{self, models_dir};
+use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::metrics::CostSeries;
+use hiaer_spike::util::cli::Args;
+use hiaer_spike::util::prng::Xorshift32;
+
+// ---- environment constants (sync with python/data/pong.py) ----
+const W: f32 = 160.0;
+const H: f32 = 210.0;
+const PADDLE_H: f32 = 16.0;
+const PADDLE_W: f32 = 4.0;
+const BALL: f32 = 2.0;
+const AGENT_X: f32 = W - 8.0;
+const OPP_X: f32 = 4.0;
+const DVS_THRESH: f32 = 10.0;
+const FRAME_LAG: usize = 4;
+
+struct Pong {
+    rng: Xorshift32,
+    agent_y: f32,
+    opp_y: f32,
+    ball: [f32; 2],
+    vel: [f32; 2],
+    score: [i32; 2],
+    history: Vec<Vec<u8>>, // grayscale frames, H*W
+}
+
+impl Pong {
+    fn new(seed: u32) -> Self {
+        let mut p = Pong {
+            rng: Xorshift32::new(seed),
+            agent_y: H / 2.0,
+            opp_y: H / 2.0,
+            ball: [W / 2.0, H / 2.0],
+            vel: [2.5, 0.0],
+            score: [0, 0],
+            history: Vec::new(),
+        };
+        p.serve();
+        let f = p.render();
+        p.history = vec![f; FRAME_LAG + 1];
+        p
+    }
+
+    fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.rng.next_u32() as f32 / u32::MAX as f32) * (hi - lo)
+    }
+
+    fn normal_ish(&mut self, sd: f32) -> f32 {
+        // triangular approximation is fine for opponent jitter
+        (self.uniform(-1.0, 1.0) + self.uniform(-1.0, 1.0)) * sd * 0.7071
+    }
+
+    fn serve(&mut self) {
+        self.ball = [W / 2.0, H / 2.0];
+        let dir = if self.rng.chance(0.5) { 1.0 } else { -1.0 };
+        self.vel = [dir * self.uniform(2.0, 3.0), self.uniform(-2.0, 2.0)];
+    }
+
+    /// Returns reward.
+    fn step(&mut self, action: usize) -> f32 {
+        match action {
+            2 | 4 => self.agent_y = (self.agent_y - 4.0).max(PADDLE_H / 2.0),
+            3 | 5 => self.agent_y = (self.agent_y + 4.0).min(H - PADDLE_H / 2.0),
+            _ => {}
+        }
+        let target = self.ball[1] + self.normal_ish(4.0);
+        if target > self.opp_y + 2.0 {
+            self.opp_y = (self.opp_y + 3.0).min(H - PADDLE_H / 2.0);
+        } else if target < self.opp_y - 2.0 {
+            self.opp_y = (self.opp_y - 3.0).max(PADDLE_H / 2.0);
+        }
+
+        self.ball[0] += self.vel[0];
+        self.ball[1] += self.vel[1];
+        let mut reward = 0.0;
+        if self.ball[1] < BALL || self.ball[1] > H - BALL {
+            self.vel[1] = -self.vel[1];
+            self.ball[1] = self.ball[1].clamp(BALL, H - BALL);
+        }
+        if self.ball[0] >= AGENT_X - PADDLE_W && self.vel[0] > 0.0 {
+            if (self.ball[1] - self.agent_y).abs() <= PADDLE_H / 2.0 + BALL {
+                self.vel[0] = -self.vel[0].abs() * 1.05;
+                self.vel[1] += (self.ball[1] - self.agent_y) * 0.15;
+                self.ball[0] = AGENT_X - PADDLE_W;
+            } else if self.ball[0] > W {
+                self.score[0] += 1;
+                reward = -1.0;
+                self.serve();
+            }
+        }
+        if self.ball[0] <= OPP_X + PADDLE_W && self.vel[0] < 0.0 {
+            if (self.ball[1] - self.opp_y).abs() <= PADDLE_H / 2.0 + BALL {
+                self.vel[0] = self.vel[0].abs() * 1.05;
+                self.vel[1] += (self.ball[1] - self.opp_y) * 0.15;
+                self.ball[0] = OPP_X + PADDLE_W;
+            } else if self.ball[0] < 0.0 {
+                self.score[1] += 1;
+                reward = 1.0;
+                self.serve();
+            }
+        }
+        self.vel[0] = self.vel[0].clamp(-6.0, 6.0);
+        self.vel[1] = self.vel[1].clamp(-5.0, 5.0);
+
+        let f = self.render();
+        self.history.push(f);
+        if self.history.len() > FRAME_LAG + 1 {
+            self.history.remove(0);
+        }
+        reward
+    }
+
+    fn render(&self) -> Vec<u8> {
+        let (w, h) = (W as usize, H as usize);
+        let mut f = vec![0u8; w * h];
+        let mut rect = |x0: usize, x1: usize, y0: usize, y1: usize, v: u8| {
+            for y in y0..y1.min(h) {
+                for x in x0..x1.min(w) {
+                    f[y * w + x] = v;
+                }
+            }
+        };
+        let ay = self.agent_y as usize;
+        let oy = self.opp_y as usize;
+        let ph = PADDLE_H as usize / 2;
+        rect(AGENT_X as usize, AGENT_X as usize + PADDLE_W as usize, ay.saturating_sub(ph), ay + ph, 200);
+        rect(OPP_X as usize, OPP_X as usize + PADDLE_W as usize, oy.saturating_sub(ph), oy + ph, 200);
+        let (bx, by) = (self.ball[0] as usize, self.ball[1] as usize);
+        rect(bx.saturating_sub(2), bx + 2, by.saturating_sub(2), by + 2, 255);
+        f
+    }
+
+    /// DVS observation: active input-axon ids (2x84x84 layout, ON then
+    /// OFF channel), mirroring python/data/pong.py::dvs_frame.
+    fn dvs_axons(&self) -> Vec<u32> {
+        let (w, h) = (W as usize, H as usize);
+        let cur = &self.history[FRAME_LAG];
+        let old = &self.history[0];
+        let c0 = (h - 168) / 2;
+        let mut axons = Vec::new();
+        for oy in 0..84 {
+            for ox in 0..80 {
+                // 2x2 mean downsample of the 168x160 crop
+                let mut dc = 0f32;
+                let mut doo = 0f32;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let idx = (c0 + oy * 2 + dy) * w + ox * 2 + dx;
+                        dc += cur[idx] as f32;
+                        doo += old[idx] as f32;
+                    }
+                }
+                let d = (dc - doo) / 4.0;
+                let x = ox + 2; // pad 80 -> 84 centered
+                if d > DVS_THRESH {
+                    axons.push((oy * 84 + x) as u32);
+                } else if d < -DVS_THRESH {
+                    axons.push((84 * 84 + oy * 84 + x) as u32);
+                }
+            }
+        }
+        axons.sort_unstable();
+        axons
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env(&[]).map_err(anyhow::Error::msg)?;
+    let episodes = args.get_usize("episodes", 50).map_err(anyhow::Error::msg)?;
+    let max_frames = args.get_usize("max-frames", 3000).map_err(anyhow::Error::msg)?;
+    let dir = models_dir();
+    let (graph, conv) = harness::load_model(&dir, "pong_dqn")?;
+    let mut engine = CoreEngine::new(&conv.net, SlotStrategy::BalanceFanIn, RustBackend)?;
+    let energy = EnergyModel::default();
+    let layers = graph.layers.len();
+    let t = graph.timesteps;
+
+    println!(
+        "DVS Pong: {} neurons, {} synapses, T={} rate steps/decision",
+        conv.net.n_neurons(),
+        conv.net.n_synapses(),
+        t
+    );
+
+    let mut scores = Vec::new();
+    let mut costs = CostSeries::default();
+    for ep in 0..episodes {
+        let mut env = Pong::new(1000 + ep as u32);
+        let mut frames_played = 0usize;
+        while env.score[0].max(env.score[1]) < 21 && frames_played < max_frames {
+            // rate-coded decision: present the DVS observation T times
+            let obs = env.dvs_axons();
+            let frames: Vec<Vec<u32>> = (0..t).map(|_| obs.clone()).collect();
+            let inf = run_inference(&mut engine, &conv, &frames, layers, Readout::Rate, &energy)?;
+            costs.push(&inf.cost);
+            env.step(inf.prediction);
+            frames_played += 1;
+        }
+        let score = env.score[1] - env.score[0];
+        scores.push(score as f64);
+        if ep < 5 || (ep + 1) % 10 == 0 {
+            println!(
+                "  episode {:>3}: agent {:>2} - {:<2} opponent (score {:+})",
+                ep + 1,
+                env.score[1],
+                env.score[0],
+                score
+            );
+        }
+    }
+    let (mean, sd) = hiaer_spike::util::stats::mean_std(&scores);
+    let (em, es) = costs.energy_mean_std();
+    let (lm, ls) = costs.latency_mean_std();
+    println!("\nmean score over {episodes} episodes: {mean:.2} ± {sd:.2} (max +21)");
+    println!("per-decision HBM energy {em:.1}±{es:.1} uJ, latency {lm:.1}±{ls:.1} us");
+    Ok(())
+}

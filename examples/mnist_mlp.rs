@@ -1,0 +1,45 @@
+//! End-to-end driver (the repo's headline validation run): evaluate every
+//! trained MNIST model on the full platform path —
+//!
+//!   .hsl (quantized torch export) -> Supp-A.2 converter -> HBM routing
+//!   table -> event-driven core engine -> membrane readout
+//!
+//! and report the Table-2 columns: software(quantized) vs HiAER accuracy
+//! (which must match EXACTLY — the paper's conversion-fidelity claim),
+//! HBM energy and latency per inference.
+//!
+//!     make models   # once (trains + exports)
+//!     cargo run --release --example mnist_mlp [-- --samples 500]
+
+use anyhow::Result;
+use hiaer_spike::harness::{self, models_dir};
+use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env(&[]).map_err(anyhow::Error::msg)?;
+    let samples = args.get_usize("samples", 500).map_err(anyhow::Error::msg)?;
+    let dir = models_dir();
+    let entries = harness::load_manifest(&dir)?;
+
+    println!("== MNIST end-to-end (event-driven HBM engine, single core) ==\n");
+    harness::print_header();
+    let mut all_parity = true;
+    for e in entries.iter().filter(|e| e.task == "mnist") {
+        let r = harness::evaluate_model(&dir, e, samples, SlotStrategy::BalanceFanIn)?;
+        harness::print_row(e, &r);
+        let parity = (r.accuracy - e.acc_quant).abs() < 1e-9;
+        all_parity &= parity;
+        if !parity {
+            println!(
+                "   !! parity broken: quantized-software {:.4} vs HiAER {:.4}",
+                e.acc_quant, r.accuracy
+            );
+        }
+    }
+    println!(
+        "\nconversion fidelity: software==hardware accuracy parity {}",
+        if all_parity { "HOLDS for all models" } else { "VIOLATED (see above)" }
+    );
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: build and run the paper's Supplementary-A.1 example
+//! network (Fig 6) through the full platform path — keyed builder ->
+//! flattened network -> HBM image -> event-driven core engine — and poke
+//! the hs_api-style interaction surface (step / read_membrane /
+//! read_synapse / write_synapse).
+//!
+//!     cargo run --release --example quickstart
+
+use anyhow::Result;
+use hiaer_spike::energy::EnergyModel;
+use hiaer_spike::engine::{CoreEngine, RustBackend};
+use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::snn::{NetworkBuilder, NeuronModel};
+
+fn main() -> Result<()> {
+    // --- define neuron models (paper §5.1)
+    let lif_ab = NeuronModel::lif(3, 0, 63, false)?; // theta 3, ~no leak
+    let lif_c = NeuronModel::lif(4, 0, 2, false)?; // theta 4, leak lam=2
+    let ann_d = NeuronModel::ann(5, 0, true)?; // stochastic binary
+
+    // --- define the network (axons dict / neurons dict / outputs list)
+    let mut b = NetworkBuilder::new().seed(42);
+    b.add_neuron("a", lif_ab, &[("b", 1), ("d", 2)])?;
+    b.add_neuron("b", lif_ab, &[])?;
+    b.add_neuron("c", lif_c, &[])?;
+    b.add_neuron("d", ann_d, &[("c", 1)])?;
+    b.add_axon("alpha", &[("a", 3), ("c", 2)])?;
+    b.add_axon("beta", &[("b", 3)])?;
+    b.add_output("a");
+    b.add_output("b");
+    let (mut net, keys) = b.build()?;
+
+    // --- write_synapse before deployment (hs_api API surface)
+    let a = keys.neuron("a").unwrap();
+    let bn = keys.neuron("b").unwrap();
+    let w = net.read_synapse(false, a, bn).unwrap();
+    println!("synapse a->b weight = {w}, bumping by 1");
+    net.write_synapse(false, a, bn, w + 1);
+
+    // --- compile to the HBM routing table + run on the core engine
+    let mut core = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend)?;
+    println!(
+        "HBM image: {} synapse rows, packing density {:.2}",
+        core.hbm.image.stats.synapse_rows, core.hbm.image.stats.packing_density
+    );
+
+    let alpha = keys.axon("alpha").unwrap();
+    let beta = keys.axon("beta").unwrap();
+    for t in 0..6 {
+        let inputs: Vec<u32> = if t < 2 { vec![alpha, beta] } else { vec![] };
+        let out = core.step(&inputs)?;
+        let fired: Vec<&str> = out
+            .output_spikes
+            .iter()
+            .map(|&i| keys.neuron_keys[i as usize].as_str())
+            .collect();
+        let pots = core.read_membrane(&[a, bn]);
+        println!("t={t}: outputs fired {fired:?}, V(a)={}, V(b)={}", pots[0], pots[1]);
+    }
+
+    let cost = core.cost(&EnergyModel::default());
+    println!(
+        "run cost: {} HBM row accesses, {:.4} uJ, {:.4} us (simulated)",
+        cost.hbm_rows, cost.energy_uj, cost.latency_us
+    );
+    Ok(())
+}

@@ -1,0 +1,168 @@
+"""AOT-lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the `xla` crate
+links) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/gen_hlo.py.
+
+Also emits golden test vectors (artifacts/golden/*.json) that the Rust
+test suite checks bit-exactly against its own engines, closing the
+python<->rust loop without python on the request path.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+`make artifacts` calls this once; it is a no-op if inputs are unchanged
+(handled by make's dependency tracking).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+# Shape variants compiled ahead of time. The Rust runtime picks the
+# smallest variant that fits the partitioned core (see
+# rust/src/runtime/registry.rs). Capacities are powers of two; the
+# hardware core capacity ceiling is 4M neurons/FPGA over 32 cores
+# = 128K neurons/core.
+NEURON_UPDATE_SIZES = [1024, 4096, 16384, 65536, 131072]
+SYNAPSE_ACCUM_SIZES = [(1024, 4096), (4096, 16384), (16384, 16384),
+                       (16384, 65536), (65536, 65536), (131072, 65536)]
+DENSE_STEP_SIZES = [(256, 256), (1024, 1024), (2048, 2048)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> list[str]:
+    written = []
+
+    def emit(name, fn, spec):
+        lowered = jax.jit(fn).lower(*spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(path)
+        print(f"  {name}: {len(text)} chars")
+
+    for n in NEURON_UPDATE_SIZES:
+        emit(f"neuron_update_n{n}", model.neuron_update_fn, model.neuron_update_spec(n))
+    for n, e in SYNAPSE_ACCUM_SIZES:
+        emit(f"synapse_accum_n{n}_e{e}", model.synapse_accum_fn,
+             model.synapse_accum_spec(n, e))
+    for n, a in DENSE_STEP_SIZES:
+        emit(f"dense_step_n{n}_a{a}", model.dense_step_fn, model.dense_step_spec(n, a))
+    return written
+
+
+def golden_vectors(out_dir: str) -> None:
+    """Deterministic cross-language test vectors, checked by Rust tests."""
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.RandomState(0xC0FFEE % (2**31))
+
+    # --- prng golden: mix_seed + noise17 over a few (seed, idx) pairs
+    seeds = [1, 0xDEADBEEF, 0x12345678, 2**32 - 1]
+    prng = {"mix_seed": [], "noise17": []}
+    for s in seeds:
+        for step in [0, 1, 7, 1000]:
+            ms = int(ref.mix_seed(s, step))
+            prng["mix_seed"].append([s, step, ms])
+        for idx in [0, 1, 255, 131071]:
+            prng["noise17"].append([s, idx, int(ref.noise17(jnp.uint32(s), idx))])
+    with open(os.path.join(gdir, "prng.json"), "w") as f:
+        json.dump(prng, f)
+
+    # --- neuron_update golden: randomized params, N=1024
+    n = 1024
+    v = rng.randint(-(2**20), 2**20, n).astype(np.int32)
+    theta = rng.randint(0, 2**16, n).astype(np.int32)
+    nu = rng.randint(-32, 32, n).astype(np.int32)
+    lam = rng.randint(0, 64, n).astype(np.int32)
+    flags = rng.randint(0, 4, n).astype(np.int32)
+    step_seed = int(ref.mix_seed(42, 3))
+    v2, s = ref.neuron_update_ref(v, theta, nu, lam, flags, jnp.uint32(step_seed))
+    golden = {
+        "n": n,
+        "step_seed": step_seed,
+        "v": v.tolist(), "theta": theta.tolist(), "nu": nu.tolist(),
+        "lam": lam.tolist(), "flags": flags.tolist(),
+        "v_out": np.asarray(v2).tolist(), "spikes": np.asarray(s).tolist(),
+    }
+    with open(os.path.join(gdir, "neuron_update.json"), "w") as f:
+        json.dump(golden, f)
+
+    # --- synapse_accum golden with padding drops
+    e = 4096
+    targets = rng.randint(0, n + 1, e).astype(np.int32)  # n == dropped pad
+    weights = rng.randint(-(2**15), 2**15, e).astype(np.int32)
+    v3 = np.asarray(ref.synapse_accum_ref(v, targets, weights))
+    with open(os.path.join(gdir, "synapse_accum.json"), "w") as f:
+        json.dump({"n": n, "e": e, "v": v.tolist(), "targets": targets.tolist(),
+                   "weights": weights.tolist(), "v_out": v3.tolist()}, f)
+
+    # --- multi-step dense network golden (drives the three-way parity test)
+    nn, na, steps = 64, 16, 12
+    w_neuron = (rng.randint(-40, 40, (nn, nn)) * (rng.rand(nn, nn) < 0.2)).astype(np.int32)
+    w_axon = (rng.randint(-40, 40, (na, nn)) * (rng.rand(na, nn) < 0.5)).astype(np.int32)
+    theta = rng.randint(10, 120, nn).astype(np.int32)
+    nu = rng.randint(-8, 4, nn).astype(np.int32)
+    lam = rng.randint(1, 64, nn).astype(np.int32)
+    flags = rng.randint(0, 4, nn).astype(np.int32)
+    v = np.zeros(nn, np.int32)
+    axon_seq = (rng.rand(steps, na) < 0.3).astype(np.int32)
+    base_seed = 777
+    spikes_hist, v_hist = [], []
+    for t in range(steps):
+        ss = ref.mix_seed(base_seed, t)
+        v, s = ref.dense_step_ref(v, theta, nu, lam, flags, ss,
+                                  w_neuron, w_axon, axon_seq[t])
+        v = np.asarray(v)
+        spikes_hist.append(np.asarray(s).tolist())
+        v_hist.append(v.tolist())
+    with open(os.path.join(gdir, "dense_net.json"), "w") as f:
+        json.dump({"n": nn, "a": na, "steps": steps, "base_seed": base_seed,
+                   "w_neuron": w_neuron.tolist(), "w_axon": w_axon.tolist(),
+                   "theta": theta.tolist(), "nu": nu.tolist(), "lam": lam.tolist(),
+                   "flags": flags.tolist(), "axon_seq": axon_seq.tolist(),
+                   "spikes": spikes_hist, "v": v_hist}, f)
+    print(f"  golden vectors -> {gdir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__),
+                                                      "..", "..", "artifacts"))
+    ap.add_argument("--skip-large", action="store_true",
+                    help="skip the >=64K variants (CI fast path)")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+    if args.skip_large:
+        global NEURON_UPDATE_SIZES, SYNAPSE_ACCUM_SIZES
+        NEURON_UPDATE_SIZES = [s for s in NEURON_UPDATE_SIZES if s <= 16384]
+        SYNAPSE_ACCUM_SIZES = [(n, e) for n, e in SYNAPSE_ACCUM_SIZES if n <= 16384]
+    print(f"lowering artifacts -> {out}")
+    lower_all(out)
+    golden_vectors(out)
+    # stamp for make freshness
+    with open(os.path.join(out, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

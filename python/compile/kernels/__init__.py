@@ -1,0 +1,5 @@
+"""HiAER-Spike L1 kernels: the Pallas membrane-update kernel and its
+pure-jnp oracle."""
+
+from . import ref  # noqa: F401
+from .neuron_update import neuron_update  # noqa: F401

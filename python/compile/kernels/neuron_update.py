@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: the HiAER-Spike membrane-update hot spot.
+
+The FPGA updates neurons sequentially in 16-wide parallel port groups fed
+from URAM membrane registers. On TPU the analogous schedule is: tile the
+neuron state into VMEM-resident blocks and run phases 1-3 (noise, spike +
+reset, leak) elementwise per block on the VPU — there is no matmul here,
+so the MXU is idle by design; the kernel is memory-streaming and its
+roofline is HBM->VMEM bandwidth. BlockSpec expresses the HBM<->VMEM
+schedule that the FPGA expresses with its URAM banking.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO so the Rust runtime
+can run the artifact. Real-TPU perf is estimated in DESIGN.md from the
+VMEM footprint (BLOCK * 5 int32 arrays = 5 KiB/block at BLOCK=256).
+
+Bit-exact contract: must match kernels.ref.neuron_update_ref for all
+inputs. Verified by python/tests/test_kernel.py (hypothesis sweeps).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .ref import FLAG_LIF, FLAG_NOISE
+
+# numpy scalar (not jnp array): jnp constants would be captured consts,
+# which pallas_call rejects.
+_PHI32 = np.uint32(0x9E3779B9)
+
+# Default VMEM tile: 256 neurons x 5 int32 in-arrays + 2 out-arrays
+# = 7 KiB per grid step. Chosen by the block-size sweep in
+# python/tests/test_kernel.py::test_block_size_equivalence; any multiple
+# of 128 lanes is valid.
+DEFAULT_BLOCK = 256
+
+
+def _noise17_block(step_seed, base, n):
+    """noise17 for indices [base, base+n) as uint32 vector ops.
+
+    Identical arithmetic to ref.noise17 (double-round xorshift32 hash of
+    step_seed ^ idx*phi32) so the artifact and all Rust engines agree.
+    """
+    idx = base + jax.lax.broadcasted_iota(jnp.uint32, (n,), 0)
+    x = step_seed ^ (idx * _PHI32)
+    for _ in range(2):
+        x = x ^ (x << np.uint32(13))
+        x = x ^ (x >> np.uint32(17))
+        x = x ^ (x << np.uint32(5))
+    lo = (x & np.uint32(0x1FFFF)).astype(jnp.int32)
+    return (lo - np.int32(1 << 16)) | np.int32(1)
+
+
+def _neuron_update_kernel(
+    seed_ref, v_ref, theta_ref, nu_ref, lam_ref, flags_ref, v_out_ref, s_out_ref, *, block
+):
+    """One VMEM block of phases 1-3. seed_ref is a (1,) scalar block."""
+    pid = pl.program_id(0)
+    base = pid.astype(jnp.uint32) * jnp.uint32(block)
+
+    v = v_ref[...]
+    theta = theta_ref[...]
+    nu = nu_ref[...]
+    lam = lam_ref[...]
+    flags = flags_ref[...]
+    step_seed = seed_ref[0].astype(jnp.uint32)
+
+    # 1. noise (stochastic neurons only)
+    xi = _noise17_block(step_seed, base, block)
+    left = jnp.clip(nu, 0, 31)
+    right = jnp.clip(-nu, 0, 31)
+    xi = jnp.where(nu >= 0, xi << left, xi >> right).astype(jnp.int32)
+    v = jnp.where((flags & FLAG_NOISE) != 0, v + xi, v)
+
+    # 2. spike threshold (strict >) + hard reset to 0
+    spikes = (v > theta).astype(jnp.int32)
+    v = jnp.where(spikes != 0, jnp.int32(0), v)
+
+    # 3. leak: LIF v -= v >> lam; ANN v = 0
+    lam_c = jnp.clip(lam, 0, 31)
+    v = jnp.where((flags & FLAG_LIF) != 0, v - (v >> lam_c), jnp.int32(0))
+
+    v_out_ref[...] = v
+    s_out_ref[...] = spikes
+
+
+def neuron_update(v, theta, nu, lam, flags, step_seed, *, block: int = DEFAULT_BLOCK):
+    """Pallas-tiled neuron update. N must be a multiple of `block`
+    (the AOT path always pads cores to a power-of-two capacity).
+
+    Returns (v_next int32[N], spikes int32[N]).
+    """
+    n = v.shape[0]
+    if n % block != 0:
+        raise ValueError(f"N={n} must be a multiple of block={block}")
+    grid = (n // block,)
+    bspec = pl.BlockSpec((block,), lambda i: (i,))
+    seed_spec = pl.BlockSpec((1,), lambda i: (0,))
+    seed_arr = jnp.asarray(step_seed, jnp.uint32).reshape((1,))
+    kernel = functools.partial(_neuron_update_kernel, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[seed_spec, bspec, bspec, bspec, bspec, bspec],
+        out_specs=[bspec, bspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(seed_arr, v, theta, nu, lam, flags)

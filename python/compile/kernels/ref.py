@@ -1,0 +1,135 @@
+"""Pure-jnp oracle for the HiAER-Spike neuron-update semantics (Table 1 / Fig 8).
+
+This module is the single source of truth for the bit-level neuron dynamics.
+The Pallas kernel (neuron_update.py), the Rust dense engine
+(rust/src/engine/dense.rs), and the Rust event-driven HBM engine
+(rust/src/engine/core.rs) must all agree bit-exactly with these functions.
+
+Per-timestep order of operations (exactly the hardware / Fig-8 simulator):
+
+  1. noise:    V += xi            (only if the neuron's model is stochastic)
+               xi = (U17 | 1) << nu   (nu >= 0)   or   >> -nu   (nu < 0)
+               U17 ~ 17-bit uniform in [-2^16, 2^16), LSB forced to 1
+  2. spike:    S = (V > theta)  (strict >);  V[S] = 0
+  3. membrane: LIF:  V = V - (V >> lam)      (arithmetic shift = floor div)
+               ANN:  V = 0
+  4. integrate:V += sum_j w_ij * S_j  + axon inputs   (same step's spikes)
+
+All state is int32; weights are int16 widened to int32. lam is clamped to
+[0, 31]: for int32 V, V >> 31 equals floor(V / 2^63) for every
+representable V (0 for V >= 0, -1 for V < 0), so the hardware's 6-bit
+lam in [32, 63] is exactly represented by a 31 shift.
+
+Noise PRNG: a counter-based double-round xorshift32 hash of
+(step_seed, neuron_index) — deterministic, stateless, and cheap enough to
+implement identically in jnp, Pallas, and Rust (rust/src/util/prng.rs).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Neuron flag bits (mirrored in rust/src/snn/neuron.rs).
+FLAG_LIF = 1  # bit0: 1 = LIF membrane update, 0 = ANN (memoryless binary)
+FLAG_NOISE = 2  # bit1: 1 = stochastic (apply the noise update)
+
+GOLDEN_RATIO32 = jnp.uint32(0x9E3779B9)
+
+
+def mix_seed(base_seed, step):
+    """Per-step seed: one xorshift round over base ^ (step * phi32).
+
+    Must match rust/src/util/prng.rs::mix_seed bit-for-bit.
+    """
+    base_seed = jnp.uint32(base_seed)
+    step = jnp.uint32(step)
+    x = base_seed ^ (step * GOLDEN_RATIO32)
+    x = x ^ (x << jnp.uint32(13))
+    x = x ^ (x >> jnp.uint32(17))
+    x = x ^ (x << jnp.uint32(5))
+    # avoid the all-zero fixed point of xorshift
+    return x | jnp.uint32(1)
+
+
+def noise17(step_seed, idx):
+    """17-bit odd uniform noise per neuron index (int32 result).
+
+    Counter-based: hash(step_seed, idx) -> low 17 bits -> [-2^16, 2^16) -> |1.
+    Matches rust/src/util/prng.rs::noise17.
+    """
+    x = jnp.uint32(step_seed) ^ (jnp.asarray(idx, jnp.uint32) * GOLDEN_RATIO32)
+    for _ in range(2):
+        x = x ^ (x << jnp.uint32(13))
+        x = x ^ (x >> jnp.uint32(17))
+        x = x ^ (x << jnp.uint32(5))
+    lo = (x & jnp.uint32(0x1FFFF)).astype(jnp.int32)  # [0, 2^17)
+    v = lo - jnp.int32(1 << 16)  # [-2^16, 2^16)
+    return v | jnp.int32(1)  # odd, balanced around 0
+
+
+def shift_noise(xi, nu):
+    """Apply the nu scaling shift: left shift for nu>0, arithmetic right
+    shift for nu<0. Shift amounts clamp to [0, 31] (int32 registers)."""
+    nu = jnp.asarray(nu, jnp.int32)
+    left = jnp.clip(nu, 0, 31)
+    right = jnp.clip(-nu, 0, 31)
+    shifted = jnp.where(nu >= 0, xi << left, xi >> right)
+    return shifted.astype(jnp.int32)
+
+
+def neuron_update_ref(v, theta, nu, lam, flags, step_seed):
+    """Phases 1-3 of the timestep: noise, spike/reset, leak.
+
+    Args:
+      v:     int32[N] membrane potentials
+      theta: int32[N] spike thresholds
+      nu:    int32[N] noise shift exponents (6-bit signed semantics)
+      lam:   int32[N] leak exponents (clamped to 31)
+      flags: int32[N] bitfield (FLAG_LIF | FLAG_NOISE)
+      step_seed: uint32 scalar (mix_seed(base, step))
+
+    Returns: (v_next int32[N], spikes int32[N] in {0,1})
+    """
+    v = jnp.asarray(v, jnp.int32)
+    n = v.shape[0]
+    idx = jnp.arange(n, dtype=jnp.uint32)
+
+    # 1. noise
+    xi = shift_noise(noise17(step_seed, idx), nu)
+    noisy = (jnp.asarray(flags, jnp.int32) & FLAG_NOISE) != 0
+    v = jnp.where(noisy, v + xi, v)
+
+    # 2. spike + reset (strict >)
+    spikes = (v > jnp.asarray(theta, jnp.int32)).astype(jnp.int32)
+    v = jnp.where(spikes != 0, jnp.int32(0), v)
+
+    # 3. leak (LIF) or clear (ANN)
+    lam_c = jnp.clip(jnp.asarray(lam, jnp.int32), 0, 31)
+    is_lif = (jnp.asarray(flags, jnp.int32) & FLAG_LIF) != 0
+    v = jnp.where(is_lif, v - (v >> lam_c), jnp.int32(0))
+
+    return v, spikes
+
+
+def synapse_accum_ref(v, targets, weights):
+    """Phase 4: scatter-add gathered synaptic events into V.
+
+    Padding convention: target == N (out of range) entries are dropped.
+    """
+    v = jnp.asarray(v, jnp.int32)
+    return v.at[jnp.asarray(targets, jnp.int32)].add(
+        jnp.asarray(weights, jnp.int32), mode="drop"
+    )
+
+
+def dense_step_ref(v, theta, nu, lam, flags, step_seed, w_neuron, w_axon, axon_in):
+    """One full timestep with dense weight matrices — the Fig-8 software
+    simulator. w_neuron[i, j] = weight of synapse i -> j (pre-major),
+    w_axon[a, j] likewise for axons. axon_in is the 0/1 axon firing vector.
+
+    Returns (v_next, spikes).
+    """
+    v, spikes = neuron_update_ref(v, theta, nu, lam, flags, step_seed)
+    contrib = spikes @ jnp.asarray(w_neuron, jnp.int32)
+    contrib = contrib + jnp.asarray(axon_in, jnp.int32) @ jnp.asarray(w_axon, jnp.int32)
+    return v + contrib, spikes

@@ -1,0 +1,64 @@
+"""L2: the HiAER-Spike per-timestep compute graphs, built on the L1 kernel.
+
+Three executables (each AOT-lowered to HLO text by aot.py and executed
+from the Rust runtime):
+
+* neuron_update(N)     — phases 1-3 (noise / spike+reset / leak) via the
+                         Pallas kernel; returns (V', spikes).
+* synapse_accum(N, E)  — phase 4: scatter-add E gathered (target, weight)
+                         synaptic events into V. Padded events carry
+                         target == N and are dropped. This is the compute
+                         half of the HBM two-phase routing: L3 Rust walks
+                         the HBM adjacency table (counting accesses) and
+                         hands the gathered events here.
+* dense_step(N, A)     — the full Fig-8 software-simulator step with dense
+                         weight matrices (used for the CPU software
+                         baseline the paper compares throughput against).
+
+All graphs are int32-pure and bit-exact with kernels.ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import neuron_update as pallas_neuron_update
+from .kernels import ref
+
+
+def neuron_update_fn(v, theta, nu, lam, flags, step_seed):
+    """(V, params, seed) -> (V', spikes) — Pallas-kerneled phases 1-3."""
+    seed = jnp.asarray(step_seed, jnp.uint32).reshape(())
+    v2, s = pallas_neuron_update(v, theta, nu, lam, flags, seed)
+    return v2, s
+
+
+def synapse_accum_fn(v, targets, weights):
+    """(V, events) -> V'. targets/weights are int32[E]; target==N drops."""
+    return ref.synapse_accum_ref(v, targets, weights)
+
+
+def dense_step_fn(v, theta, nu, lam, flags, step_seed, w_neuron, w_axon, axon_in):
+    """Full dense timestep (Fig 8), Pallas kernel for phases 1-3."""
+    v2, s = neuron_update_fn(v, theta, nu, lam, flags, step_seed)
+    contrib = s @ w_neuron + axon_in @ w_axon
+    return v2 + contrib, s
+
+
+def neuron_update_spec(n: int):
+    """Example-args spec for lowering neuron_update at capacity n."""
+    i32 = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)  # noqa: E731
+    u32 = jax.ShapeDtypeStruct((), jnp.uint32)
+    return (i32(n), i32(n), i32(n), i32(n), i32(n), u32)
+
+
+def synapse_accum_spec(n: int, e: int):
+    i32 = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)  # noqa: E731
+    return (i32(n), i32(e), i32(e))
+
+
+def dense_step_spec(n: int, a: int):
+    i32 = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)  # noqa: E731
+    u32 = jax.ShapeDtypeStruct((), jnp.uint32)
+    return (i32(n), i32(n), i32(n), i32(n), i32(n), u32, i32(n, n), i32(a, n), i32(a))

@@ -1,0 +1,10 @@
+"""Synthetic dataset generators.
+
+The build environment is offline (no MNIST/DVS-Gesture/CIFAR-10
+downloads), so each benchmark dataset is replaced by a deterministic
+procedural generator with the same shapes, channel conventions and task
+structure (DESIGN.md "Substitutions"). Table 2's headline results —
+software<->hardware accuracy parity and energy/latency scaling — are
+dataset-agnostic; absolute accuracies reported in EXPERIMENTS.md are for
+these synthetic sets.
+"""

@@ -1,0 +1,171 @@
+"""Minimal Pong environment + DVS frame conversion (paper §6, Fig 4).
+
+The environment is a 160x210 Atari-like court: the agent's paddle on the
+right, a scripted opponent on the left, one ball. Episodes end at 21
+points for either side; agent reward = agent points - opponent points
+(max +21, the paper's score scale).
+
+DVS conversion (paper's method): compare each frame with the frame four
+frames prior; grayscale -> downsample/crop to 84x84 -> ON/OFF change
+events with threshold 10 (on 0..255 intensity).
+
+The same environment dynamics are reimplemented in Rust
+(`examples/dvs_pong.rs`); the constants here are the spec (keep in sync).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+W, H = 160, 210
+PADDLE_H = 16
+PADDLE_W = 4
+BALL = 2
+AGENT_X = W - 8
+OPP_X = 4
+ACTIONS = 6  # Atari action set: NOOP FIRE UP DOWN UPFIRE DOWNFIRE
+DVS_SIZE = 84
+DVS_THRESH = 10
+FRAME_LAG = 4
+
+
+class PongEnv:
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.RandomState(seed)
+        self.reset()
+
+    def reset(self):
+        self.agent_y = H // 2
+        self.opp_y = H // 2
+        self.score = [0, 0]  # [opponent, agent]
+        self._serve()
+        self.history = [self.render() for _ in range(FRAME_LAG + 1)]
+        return self.history[-1]
+
+    def _serve(self):
+        self.ball = np.array([W / 2, H / 2], np.float32)
+        vx = self.rng.choice([-1.0, 1.0]) * self.rng.uniform(2.0, 3.0)
+        vy = self.rng.uniform(-2.0, 2.0)
+        self.vel = np.array([vx, vy], np.float32)
+
+    def step(self, action: int):
+        """Returns (frame, reward, done)."""
+        # agent paddle: UP/UPFIRE = 2,4; DOWN/DOWNFIRE = 3,5
+        if action in (2, 4):
+            self.agent_y = max(PADDLE_H // 2, self.agent_y - 4)
+        elif action in (3, 5):
+            self.agent_y = min(H - PADDLE_H // 2, self.agent_y + 4)
+        # scripted opponent tracks the ball with limited speed + lag
+        target = self.ball[1] + self.rng.normal(0, 4)
+        if target > self.opp_y + 2:
+            self.opp_y = min(H - PADDLE_H // 2, self.opp_y + 3)
+        elif target < self.opp_y - 2:
+            self.opp_y = max(PADDLE_H // 2, self.opp_y - 3)
+
+        self.ball += self.vel
+        reward = 0.0
+        # wall bounce
+        if self.ball[1] < BALL or self.ball[1] > H - BALL:
+            self.vel[1] = -self.vel[1]
+            self.ball[1] = np.clip(self.ball[1], BALL, H - BALL)
+        # paddles
+        if self.ball[0] >= AGENT_X - PADDLE_W and self.vel[0] > 0:
+            if abs(self.ball[1] - self.agent_y) <= PADDLE_H // 2 + BALL:
+                self.vel[0] = -abs(self.vel[0]) * 1.05
+                self.vel[1] += (self.ball[1] - self.agent_y) * 0.15
+                self.ball[0] = AGENT_X - PADDLE_W
+            elif self.ball[0] > W:
+                self.score[0] += 1
+                reward = -1.0
+                self._serve()
+        if self.ball[0] <= OPP_X + PADDLE_W and self.vel[0] < 0:
+            if abs(self.ball[1] - self.opp_y) <= PADDLE_H // 2 + BALL:
+                self.vel[0] = abs(self.vel[0]) * 1.05
+                self.vel[1] += (self.ball[1] - self.opp_y) * 0.15
+                self.ball[0] = OPP_X + PADDLE_W
+            elif self.ball[0] < 0:
+                self.score[1] += 1
+                reward = 1.0
+                self._serve()
+        self.vel[0] = np.clip(self.vel[0], -6, 6)
+        self.vel[1] = np.clip(self.vel[1], -5, 5)
+
+        frame = self.render()
+        self.history.append(frame)
+        if len(self.history) > FRAME_LAG + 1:
+            self.history.pop(0)
+        done = max(self.score) >= 21
+        return frame, reward, done
+
+    def render(self) -> np.ndarray:
+        """Grayscale frame [H, W] uint8."""
+        f = np.zeros((H, W), np.uint8)
+        ay = int(self.agent_y)
+        oy = int(self.opp_y)
+        f[max(0, ay - PADDLE_H // 2) : ay + PADDLE_H // 2, AGENT_X : AGENT_X + PADDLE_W] = 200
+        f[max(0, oy - PADDLE_H // 2) : oy + PADDLE_H // 2, OPP_X : OPP_X + PADDLE_W] = 200
+        bx, by = int(self.ball[0]), int(self.ball[1])
+        f[max(0, by - BALL) : by + BALL, max(0, bx - BALL) : bx + BALL] = 255
+        return f
+
+    def dvs_obs(self) -> np.ndarray:
+        """[2, 84, 84] binary ON/OFF events vs the frame 4 steps back."""
+        cur = self.history[-1]
+        old = self.history[0]
+        return dvs_frame(cur, old)
+
+    def expert_action(self) -> int:
+        """Scripted expert: track the ball (used for behaviour cloning)."""
+        if self.ball[1] > self.agent_y + 3:
+            return 3
+        if self.ball[1] < self.agent_y - 3:
+            return 2
+        return 0
+
+
+def dvs_frame(cur: np.ndarray, old: np.ndarray) -> np.ndarray:
+    """Downsample 160x210 -> 84x84 (crop top/bottom margin, 2x2 mean),
+    then ON/OFF threshold on the intensity change."""
+    # crop to 168 rows centered, downsample by 2 -> 84x80, pad to 84
+    c0 = (H - 168) // 2
+    cur_c = cur[c0 : c0 + 168, :].astype(np.int16)
+    old_c = old[c0 : c0 + 168, :].astype(np.int16)
+
+    def ds(f):
+        return f.reshape(84, 2, 80, 2).mean(axis=(1, 3))
+
+    d = ds(cur_c) - ds(old_c)
+    on = np.zeros((84, 84), np.uint8)
+    off = np.zeros((84, 84), np.uint8)
+    on[:, 2:82] = d > DVS_THRESH
+    off[:, 2:82] = d < -DVS_THRESH
+    return np.stack([on, off])
+
+
+def collect_bc_dataset(n_frames: int, seed: int = 0):
+    """Behaviour-cloning dataset: (obs [n,2,84,84] uint8, actions [n])."""
+    env = PongEnv(seed)
+    obs, acts = [], []
+    while len(obs) < n_frames:
+        a = env.expert_action()
+        _, _, done = env.step(a)
+        obs.append(env.dvs_obs())
+        acts.append(a)
+        if done:
+            env.reset()
+    return np.stack(obs), np.array(acts, np.int64)
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--demo" in sys.argv:
+        env = PongEnv(1)
+        for _ in range(30):
+            env.step(env.expert_action())
+        o = env.dvs_obs()
+        print(f"ON events: {o[0].sum()}, OFF events: {o[1].sum()}")
+        for y in range(0, 84, 2):
+            print("".join(
+                "+" if o[0, y, x] else ("-" if o[1, y, x] else ".") for x in range(84)
+            ))

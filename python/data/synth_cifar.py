@@ -1,0 +1,76 @@
+"""Synthetic CIFAR-10: 10 classes of procedurally textured/shaped 32x32
+RGB images, bit-sliced into 15 binary channels (5 most-significant bits
+per RGB channel) exactly as the paper feeds CIFAR-10 to the spiking CNN
+(input shape (15, 32, 32)).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+N_CLASSES = 10
+SIZE = 32
+BITS = 5  # bit-slicing depth per colour channel -> 15 binary channels
+
+
+def _texture(cls: int, rng: np.random.RandomState) -> np.ndarray:
+    """32x32x3 float image in [0,1] with class-specific structure."""
+    yy, xx = np.mgrid[0:SIZE, 0:SIZE].astype(np.float32) / SIZE
+    ph = rng.uniform(0, 2 * np.pi)
+    f = rng.uniform(2, 5)
+    base = rng.uniform(0.2, 0.8, 3)
+    img = np.zeros((SIZE, SIZE, 3), np.float32)
+    if cls == 0:  # horizontal stripes
+        pat = 0.5 + 0.5 * np.sin(2 * np.pi * f * yy + ph)
+    elif cls == 1:  # vertical stripes
+        pat = 0.5 + 0.5 * np.sin(2 * np.pi * f * xx + ph)
+    elif cls == 2:  # diagonal stripes
+        pat = 0.5 + 0.5 * np.sin(2 * np.pi * f * (xx + yy) + ph)
+    elif cls == 3:  # rings
+        r = np.hypot(xx - rng.uniform(0.3, 0.7), yy - rng.uniform(0.3, 0.7))
+        pat = 0.5 + 0.5 * np.sin(2 * np.pi * f * 2 * r + ph)
+    elif cls == 4:  # checkerboard
+        k = int(rng.randint(3, 6))
+        pat = (((xx * k).astype(int) + (yy * k).astype(int)) % 2).astype(np.float32)
+    elif cls == 5:  # centered disc
+        r = np.hypot(xx - 0.5, yy - 0.5)
+        pat = (r < rng.uniform(0.2, 0.35)).astype(np.float32)
+    elif cls == 6:  # square
+        s = rng.uniform(0.15, 0.3)
+        pat = ((np.abs(xx - 0.5) < s) & (np.abs(yy - 0.5) < s)).astype(np.float32)
+    elif cls == 7:  # cross
+        w = rng.uniform(0.06, 0.12)
+        pat = ((np.abs(xx - 0.5) < w) | (np.abs(yy - 0.5) < w)).astype(np.float32)
+    elif cls == 8:  # gradient
+        a = rng.uniform(0, 2 * np.pi)
+        pat = np.clip(np.cos(a) * xx + np.sin(a) * yy, 0, 1)
+    else:  # blobs
+        pat = np.zeros((SIZE, SIZE), np.float32)
+        for _ in range(4):
+            cx, cy = rng.uniform(0.1, 0.9, 2)
+            r2 = (xx - cx) ** 2 + (yy - cy) ** 2
+            pat += np.exp(-r2 / 0.01)
+        pat = np.clip(pat, 0, 1)
+    hue = rng.permutation(3)
+    for c in range(3):
+        img[:, :, c] = np.clip(base[c] * 0.4 + pat * (0.6 if hue[c] == 0 else 0.3), 0, 1)
+    img += rng.normal(0, 0.04, img.shape)
+    return np.clip(img, 0, 1)
+
+
+def bit_slice(img: np.ndarray) -> np.ndarray:
+    """[H,W,3] float -> [15,H,W] binary (5 MSBs per channel)."""
+    q = (img * 255).astype(np.uint8)
+    planes = []
+    for c in range(3):
+        for b in range(BITS):
+            planes.append((q[:, :, c] >> (7 - b)) & 1)
+    return np.stack(planes).astype(np.uint8)
+
+
+def generate(n: int, seed: int = 0):
+    """Return (planes uint8 [n, 15, 32, 32], labels [n])."""
+    rng = np.random.RandomState(seed)
+    labels = rng.randint(0, N_CLASSES, n)
+    planes = np.stack([bit_slice(_texture(int(c), rng)) for c in labels])
+    return planes, labels

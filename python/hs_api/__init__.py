@@ -1,0 +1,11 @@
+"""hs_api — the HiAER-Spike user-facing Python network API (paper §5).
+
+Build/author-time only: this package is used to define networks, simulate
+them on the local machine (the Fig-8 numpy simulator), and export them to
+the `.hsn` network format that the Rust coordinator compiles into the HBM
+synaptic routing table. It is never on the accelerated request path.
+"""
+
+from .neuron_models import ANN_neuron, LIF_neuron  # noqa: F401
+from .network import CRI_network  # noqa: F401
+from .simulator import NumpySimulator  # noqa: F401

@@ -1,0 +1,181 @@
+"""CRI_network — the user-facing network object (paper §5.2, Supp A.1).
+
+Networks are defined by three data structures:
+
+* ``axons``   — dict: axon key -> list of (postsynaptic neuron key, weight)
+* ``neurons`` — dict: neuron key -> (list of outgoing synapses, neuron model)
+* ``outputs`` — list of neuron keys whose spiking is monitored
+
+`step(inputs)` runs one timestep on the local numpy simulator (Fig 8).
+`export_hsn(path)` serialises the flattened network to the binary `.hsn`
+format that the Rust coordinator compiles into the HBM routing table
+(rust/src/model_fmt/hsn.rs mirrors the reader).
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from .neuron_models import ANN_neuron, LIF_neuron
+from .simulator import NumpySimulator
+
+HSN_MAGIC = b"HSNET1\x00\x00"
+WEIGHT_MIN, WEIGHT_MAX = -(2**15), 2**15 - 1  # int16 synapses
+
+
+class CRI_network:
+    """A HiAER-Spike network with the hs_api interaction surface."""
+
+    def __init__(self, axons: dict, neurons: dict, outputs: list, base_seed: int = 0):
+        self.axon_keys = list(axons.keys())
+        self.neuron_keys = list(neurons.keys())
+        self.axon_index = {k: i for i, k in enumerate(self.axon_keys)}
+        self.neuron_index = {k: i for i, k in enumerate(self.neuron_keys)}
+        if len(self.axon_index) != len(self.axon_keys):
+            raise ValueError("duplicate axon keys")
+        if len(self.neuron_index) != len(self.neuron_keys):
+            raise ValueError("duplicate neuron keys")
+
+        n, a = len(self.neuron_keys), len(self.axon_keys)
+        self.outputs = list(outputs)
+        for k in self.outputs:
+            if k not in self.neuron_index:
+                raise ValueError(f"output {k!r} is not a neuron")
+
+        # per-neuron model parameter arrays
+        theta = np.zeros(n, np.int32)
+        nu = np.zeros(n, np.int32)
+        lam = np.zeros(n, np.int32)
+        flags = np.zeros(n, np.int32)
+        self.models = []
+        for i, k in enumerate(self.neuron_keys):
+            syns, model = neurons[k]
+            if not isinstance(model, (LIF_neuron, ANN_neuron)):
+                raise TypeError(f"neuron {k!r}: bad model {model!r}")
+            theta[i] = model.theta
+            nu[i] = model.nu
+            lam[i] = model.lam
+            flags[i] = model.flags
+            self.models.append(model)
+
+        # adjacency (kept sparse for export, densified for simulation)
+        self.neuron_syns: list[list[tuple[int, int]]] = []
+        for k in self.neuron_keys:
+            syns, _ = neurons[k]
+            self.neuron_syns.append([self._syn(k, s) for s in syns])
+        self.axon_syns: list[list[tuple[int, int]]] = []
+        for k in self.axon_keys:
+            self.axon_syns.append([self._syn(k, s) for s in axons[k]])
+
+        w_neuron = np.zeros((n, n), np.int32)
+        for i, syns in enumerate(self.neuron_syns):
+            for j, w in syns:
+                w_neuron[i, j] += w
+        w_axon = np.zeros((a, n), np.int32)
+        for i, syns in enumerate(self.axon_syns):
+            for j, w in syns:
+                w_axon[i, j] += w
+
+        self.sim = NumpySimulator(w_axon, w_neuron, theta, nu, lam, flags, base_seed)
+        self._out_idx = np.array([self.neuron_index[k] for k in self.outputs], np.int64)
+
+    def _syn(self, src, s):
+        post, w = s
+        if post not in self.neuron_index:
+            raise ValueError(f"synapse {src!r}->{post!r}: unknown postsynaptic neuron")
+        w = int(w)
+        if not (WEIGHT_MIN <= w <= WEIGHT_MAX):
+            raise ValueError(f"synapse {src!r}->{post!r}: weight {w} outside int16")
+        return (self.neuron_index[post], w)
+
+    # ------------------------------------------------------------------ API
+
+    def step(self, inputs: list, membranePotential: bool = False):
+        """Run one timestep; `inputs` is a list of axon keys to activate.
+
+        Returns the list of output-neuron keys that spiked (and, when
+        membranePotential=True, the list of (key, V) for every neuron).
+        """
+        axon_in = np.zeros(len(self.axon_keys), np.int32)
+        for k in inputs:
+            axon_in[self.axon_index[k]] = 1
+        spikes = self.sim.step(axon_in)
+        fired = [k for k in self.outputs if spikes[self.neuron_index[k]]]
+        if membranePotential:
+            pots = [(k, int(self.sim.v[i])) for i, k in enumerate(self.neuron_keys)]
+            return fired, pots
+        return fired
+
+    def reset(self):
+        self.sim.reset()
+
+    def read_synapse(self, pre, post) -> int:
+        syns = self._syns_of(pre)
+        j = self.neuron_index[post]
+        for t, w in syns:
+            if t == j:
+                return w
+        raise KeyError(f"no synapse {pre!r} -> {post!r}")
+
+    def write_synapse(self, pre, post, weight: int) -> None:
+        if not (WEIGHT_MIN <= int(weight) <= WEIGHT_MAX):
+            raise ValueError(f"weight {weight} outside int16")
+        syns = self._syns_of(pre)
+        j = self.neuron_index[post]
+        for i, (t, w) in enumerate(syns):
+            if t == j:
+                delta = int(weight) - w
+                syns[i] = (t, int(weight))
+                if pre in self.neuron_index:
+                    self.sim.w_neuron[self.neuron_index[pre], j] += delta
+                else:
+                    self.sim.w_axon[self.axon_index[pre], j] += delta
+                return
+        raise KeyError(f"no synapse {pre!r} -> {post!r}")
+
+    def read_membrane(self, *keys) -> list[int]:
+        return [int(self.sim.v[self.neuron_index[k]]) for k in keys]
+
+    def _syns_of(self, pre):
+        if pre in self.neuron_index:
+            return self.neuron_syns[self.neuron_index[pre]]
+        if pre in self.axon_index:
+            return self.axon_syns[self.axon_index[pre]]
+        raise KeyError(f"unknown presynaptic key {pre!r}")
+
+    # --------------------------------------------------------------- export
+
+    def export_hsn(self, path: str, base_seed: int | None = None) -> None:
+        """Write the flattened network in the binary .hsn format."""
+        n, a = len(self.neuron_keys), len(self.axon_keys)
+        out = bytearray()
+        out += HSN_MAGIC
+        out += struct.pack(
+            "<IIIIi", a, n, len(self.outputs), 0,
+            int(base_seed if base_seed is not None else self.sim.base_seed),
+        )
+        sim = self.sim
+        params = np.stack(
+            [sim.theta, sim.nu, sim.lam, sim.flags], axis=1
+        ).astype("<i4")
+        out += params.tobytes()
+
+        def pack_adj(adj):
+            buf = bytearray()
+            for syns in adj:
+                buf += struct.pack("<I", len(syns))
+                if syns:
+                    arr = np.array(syns, np.int64)
+                    rec = np.zeros(len(syns), dtype=[("t", "<u4"), ("w", "<i2")])
+                    rec["t"] = arr[:, 0]
+                    rec["w"] = arr[:, 1]
+                    buf += rec.tobytes()
+            return bytes(buf)
+
+        out += pack_adj(self.neuron_syns)
+        out += pack_adj(self.axon_syns)
+        out += np.asarray(self._out_idx, "<u4").tobytes()
+        with open(path, "wb") as f:
+            f.write(bytes(out))

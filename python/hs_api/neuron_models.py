@@ -1,0 +1,62 @@
+"""Neuron model classes (paper §5.1, Table 1).
+
+Two model classes: LIF (theta, nu, lambda) and ANN/binary (theta, nu).
+`nu` is a 6-bit signed noise shift; `stochastic=False` models the
+deterministic variants (no noise term at all). `lam` is the 6-bit leak
+exponent; lam = 63 approximates an integrate-and-fire neuron.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+FLAG_LIF = 1
+FLAG_NOISE = 2
+
+LAM_MAX = 63  # 2^6 - 1
+NU_MIN, NU_MAX = -32, 31  # 6-bit signed
+
+
+@dataclass(frozen=True)
+class LIF_neuron:
+    """Leaky-integrate-and-fire neuron model: V -= V >> lam each step."""
+
+    theta: int
+    nu: int = 0
+    lam: int = LAM_MAX
+    stochastic: bool = False
+
+    def __post_init__(self):
+        if not (NU_MIN <= self.nu <= NU_MAX):
+            raise ValueError(f"nu={self.nu} outside 6-bit signed range")
+        if not (0 <= self.lam <= LAM_MAX):
+            raise ValueError(f"lam={self.lam} outside [0, {LAM_MAX}]")
+
+    @property
+    def flags(self) -> int:
+        return FLAG_LIF | (FLAG_NOISE if self.stochastic else 0)
+
+
+@dataclass(frozen=True)
+class ANN_neuron:
+    """Binary (memoryless) neuron: V is cleared every step after spiking.
+
+    With stochastic=True and nu > -17 it behaves as a Boltzmann-like
+    stochastic binary neuron (paper Table 1 note).
+    """
+
+    theta: int
+    nu: int = 0
+    stochastic: bool = False
+
+    def __post_init__(self):
+        if not (NU_MIN <= self.nu <= NU_MAX):
+            raise ValueError(f"nu={self.nu} outside 6-bit signed range")
+
+    @property
+    def lam(self) -> int:  # unused by the update rule; stored as 0
+        return 0
+
+    @property
+    def flags(self) -> int:
+        return FLAG_NOISE if self.stochastic else 0

@@ -1,0 +1,91 @@
+"""Fig-8 numpy software simulator — bit-exact with compile.kernels.ref.
+
+Sparse weight matrices are stored as CSR-ish (indices per row) but the
+update itself follows the exact phase order of the hardware:
+noise -> threshold/reset -> leak -> integrate (same step's spikes).
+
+int32 arithmetic wraps (numpy semantics) exactly like the int32 HLO and
+the Rust engines (wrapping_add).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PHI32 = np.uint32(0x9E3779B9)
+FLAG_LIF = 1
+FLAG_NOISE = 2
+
+
+def mix_seed(base_seed: int, step: int) -> int:
+    """Per-step seed; matches ref.mix_seed / rust util::prng::mix_seed."""
+    x = np.uint32((int(base_seed) ^ ((int(step) * 0x9E3779B9) & 0xFFFFFFFF)) & 0xFFFFFFFF)
+    with np.errstate(over="ignore"):
+        x = x ^ (x << np.uint32(13))
+        x = x ^ (x >> np.uint32(17))
+        x = x ^ (x << np.uint32(5))
+    return int(x | np.uint32(1))
+
+
+def noise17(step_seed: int, idx: np.ndarray) -> np.ndarray:
+    """Vectorised 17-bit odd noise; matches ref.noise17."""
+    x = np.uint32(step_seed) ^ (idx.astype(np.uint32) * PHI32)
+    for _ in range(2):
+        x = x ^ (x << np.uint32(13))
+        x = x ^ (x >> np.uint32(17))
+        x = x ^ (x << np.uint32(5))
+    lo = (x & np.uint32(0x1FFFF)).astype(np.int32)
+    return (lo - np.int32(1 << 16)) | np.int32(1)
+
+
+class NumpySimulator:
+    """Dense-matrix software simulation of one HiAER-Spike core."""
+
+    def __init__(self, w_axon, w_neuron, theta, nu, lam, flags, base_seed=0):
+        self.w_axon = np.asarray(w_axon, np.int32)  # [A, N] pre-major
+        self.w_neuron = np.asarray(w_neuron, np.int32)  # [N, N]
+        self.theta = np.asarray(theta, np.int32)
+        self.nu = np.asarray(nu, np.int32)
+        self.lam = np.asarray(lam, np.int32)
+        self.flags = np.asarray(flags, np.int32)
+        self.n = self.w_neuron.shape[0]
+        self.v = np.zeros(self.n, np.int32)
+        self.base_seed = base_seed
+        self.step_num = 0
+
+    def reset(self):
+        self.v[:] = 0
+        self.step_num = 0
+
+    def step(self, axon_in: np.ndarray):
+        """One timestep. axon_in: 0/1 int vector [A]. Returns spike vec [N]."""
+        v = self.v
+        ss = mix_seed(self.base_seed, self.step_num)
+
+        # 1. noise
+        xi = noise17(ss, np.arange(self.n, dtype=np.uint32))
+        nu = self.nu
+        with np.errstate(over="ignore"):
+            left = np.clip(nu, 0, 31).astype(np.int32)
+            right = np.clip(-nu, 0, 31).astype(np.int32)
+            shifted = np.where(nu >= 0, xi << left, xi >> right).astype(np.int32)
+            noisy = (self.flags & FLAG_NOISE) != 0
+            v = np.where(noisy, v + shifted, v)
+
+            # 2. spike + reset (strict >)
+            spikes = (v > self.theta).astype(np.int32)
+            v = np.where(spikes != 0, np.int32(0), v)
+
+            # 3. leak / clear
+            lam_c = np.clip(self.lam, 0, 31).astype(np.int32)
+            is_lif = (self.flags & FLAG_LIF) != 0
+            v = np.where(is_lif, v - (v >> lam_c), np.int32(0))
+
+            # 4. integrate this step's spikes + axon inputs
+            contrib = spikes @ self.w_neuron
+            contrib = contrib + np.asarray(axon_in, np.int32) @ self.w_axon
+            v = (v + contrib).astype(np.int32)
+
+        self.v = v
+        self.step_num += 1
+        return spikes

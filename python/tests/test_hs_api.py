@@ -1,0 +1,121 @@
+"""hs_api user-API tests: the Fig-6 example network, simulator parity with
+the jnp oracle, synapse read/write, and .hsn export round-trip structure."""
+
+import struct
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from hs_api import ANN_neuron, CRI_network, LIF_neuron
+from hs_api.network import HSN_MAGIC
+from hs_api import simulator as hs_sim
+
+
+def fig6_network(base_seed=0):
+    """The Supplementary A.1 example: neurons a-d, axons alpha/beta."""
+    lif_ab = LIF_neuron(theta=3, nu=0, lam=63)
+    lif_c = LIF_neuron(theta=4, nu=0, lam=2)
+    ann_d = ANN_neuron(theta=5, nu=0, stochastic=True)
+    axons = {
+        "alpha": [("a", 3), ("c", 2)],
+        "beta": [("b", 3)],
+    }
+    neurons = {
+        "a": ([("b", 1), ("d", 2)], lif_ab),
+        "b": ([], lif_ab),
+        "c": ([], lif_c),
+        "d": ([("c", 1)], ann_d),
+    }
+    return CRI_network(axons, neurons, outputs=["a", "b"], base_seed=base_seed)
+
+
+def test_fig6_steps():
+    net = fig6_network()
+    # step 1: alpha+beta fire; a gets +3 (> theta 3? strict: 3 > 3 false)
+    fired = net.step(["alpha", "beta"])
+    assert fired == []
+    assert net.read_membrane("a") == [3]
+    assert net.read_membrane("b") == [3]
+    # step 2: drive again; a: V=3 noise-free, 3 > 3 false -> no spike yet,
+    # leak lam=63 keeps V, then +3 -> 6
+    fired = net.step(["alpha", "beta"])
+    assert fired == []
+    assert net.read_membrane("a") == [6]
+    # step 3: no input; a: 6 > 3 -> spike, resets, propagates to b (+1)
+    fired = net.step([])
+    assert "a" in fired and "b" in fired  # b was at 6 too
+    assert net.read_membrane("a") == [0 + 0]  # reset, no inputs
+    assert net.read_membrane("b")[0] >= 1  # got a's synapse
+
+
+def test_simulator_matches_ref_oracle():
+    rng = np.random.RandomState(3)
+    n, a = 96, 24
+    wn = (rng.randint(-60, 60, (n, n)) * (rng.rand(n, n) < 0.2)).astype(np.int32)
+    wa = (rng.randint(-60, 60, (a, n)) * (rng.rand(a, n) < 0.5)).astype(np.int32)
+    theta = rng.randint(1, 150, n).astype(np.int32)
+    nu = rng.randint(-10, 6, n).astype(np.int32)
+    lam = rng.randint(0, 64, n).astype(np.int32)
+    flags = rng.randint(0, 4, n).astype(np.int32)
+    sim = hs_sim.NumpySimulator(wa, wn, theta, nu, lam, flags, base_seed=55)
+    v_ref = np.zeros(n, np.int32)
+    for t in range(10):
+        ax = (rng.rand(a) < 0.35).astype(np.int32)
+        s_np = sim.step(ax)
+        ss = ref.mix_seed(55, t)
+        v_ref, s_jnp = ref.dense_step_ref(v_ref, theta, nu, lam, flags,
+                                          jnp.uint32(ss), wn, wa, ax)
+        v_ref = np.asarray(v_ref)
+        np.testing.assert_array_equal(s_np, np.asarray(s_jnp))
+        np.testing.assert_array_equal(sim.v, v_ref)
+
+
+def test_numpy_prng_matches_jnp():
+    for seed in [0, 1, 0xDEADBEEF, 2**32 - 1]:
+        for step in [0, 5, 999]:
+            assert hs_sim.mix_seed(seed, step) == int(ref.mix_seed(seed, step))
+        idx = np.arange(512, dtype=np.uint32)
+        np.testing.assert_array_equal(
+            hs_sim.noise17(seed, idx), np.asarray(ref.noise17(jnp.uint32(seed), idx))
+        )
+
+
+def test_read_write_synapse():
+    net = fig6_network()
+    assert net.read_synapse("a", "b") == 1
+    net.write_synapse("a", "b", net.read_synapse("a", "b") + 1)
+    assert net.read_synapse("a", "b") == 2
+    assert net.read_synapse("alpha", "a") == 3
+    net.write_synapse("alpha", "a", -5)
+    assert net.read_synapse("alpha", "a") == -5
+    # dense matrix must track
+    assert net.sim.w_axon[net.axon_index["alpha"], net.neuron_index["a"]] == -5
+
+
+def test_weight_range_validation():
+    import pytest
+    lif = LIF_neuron(theta=1)
+    with pytest.raises(ValueError):
+        CRI_network({"x": [("n", 2**15)]}, {"n": ([], lif)}, ["n"])
+    with pytest.raises(ValueError):
+        LIF_neuron(theta=1, nu=99)
+    with pytest.raises(ValueError):
+        LIF_neuron(theta=1, lam=64)
+
+
+def test_hsn_export_header(tmp_path):
+    net = fig6_network(base_seed=7)
+    p = tmp_path / "fig6.hsn"
+    net.export_hsn(str(p))
+    blob = p.read_bytes()
+    assert blob[:8] == HSN_MAGIC
+    a, n, o, reserved, seed = struct.unpack_from("<IIIIi", blob, 8)
+    assert (a, n, o) == (2, 4, 2)
+    assert seed == 7
+    # params block: 4 x int32 per neuron
+    params = np.frombuffer(blob, "<i4", count=4 * n, offset=8 + 20).reshape(n, 4)
+    names = net.neuron_keys
+    assert params[names.index("a"), 0] == 3  # theta
+    assert params[names.index("c"), 2] == 2  # lam
+    assert params[names.index("d"), 3] == 2  # ANN stochastic -> FLAG_NOISE

@@ -1,0 +1,160 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes/params; every case asserts bit-exact equality
+(int32 semantics, so allclose == equality)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import neuron_update, ref
+
+
+def run_both(v, theta, nu, lam, flags, seed, block=256):
+    ss = jnp.uint32(seed)
+    v1, s1 = ref.neuron_update_ref(v, theta, nu, lam, flags, ss)
+    v2, s2 = neuron_update(
+        jnp.asarray(v), jnp.asarray(theta), jnp.asarray(nu),
+        jnp.asarray(lam), jnp.asarray(flags), ss, block=block,
+    )
+    return (np.asarray(v1), np.asarray(s1)), (np.asarray(v2), np.asarray(s2))
+
+
+def rand_case(rng, n):
+    return (
+        rng.randint(-(2**24), 2**24, n).astype(np.int32),
+        rng.randint(-(2**15), 2**16, n).astype(np.int32),
+        rng.randint(-32, 32, n).astype(np.int32),
+        rng.randint(0, 64, n).astype(np.int32),
+        rng.randint(0, 4, n).astype(np.int32),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_blocks=st.integers(1, 8),
+    seed=st.integers(0, 2**32 - 1),
+    data_seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_random(n_blocks, seed, data_seed):
+    rng = np.random.RandomState(data_seed)
+    n = 256 * n_blocks
+    v, theta, nu, lam, flags = rand_case(rng, n)
+    (v1, s1), (v2, s2) = run_both(v, theta, nu, lam, flags, seed)
+    np.testing.assert_array_equal(v1, v2)
+    np.testing.assert_array_equal(s1, s2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(block_pow=st.sampled_from([128, 256, 512, 1024]), seed=st.integers(0, 2**32 - 1))
+def test_block_size_equivalence(block_pow, seed):
+    """Result must not depend on the VMEM tile size (pure data parallel)."""
+    rng = np.random.RandomState(7)
+    n = 2048
+    v, theta, nu, lam, flags = rand_case(rng, n)
+    (_, _), (v_a, s_a) = run_both(v, theta, nu, lam, flags, seed, block=block_pow)
+    (_, _), (v_b, s_b) = run_both(v, theta, nu, lam, flags, seed, block=256)
+    np.testing.assert_array_equal(v_a, v_b)
+    np.testing.assert_array_equal(s_a, s_b)
+
+
+def test_strict_threshold():
+    """V == theta must NOT spike (paper: strict >, unlike SpikingJelly >=)."""
+    n = 256
+    v = np.full(n, 100, np.int32)
+    theta = np.full(n, 100, np.int32)
+    flags = np.zeros(n, np.int32)  # ANN, deterministic
+    (_, s1), (_, s2) = run_both(v, theta, np.zeros(n, np.int32),
+                                np.zeros(n, np.int32), flags, 1)
+    assert s1.sum() == 0 and s2.sum() == 0
+    v2 = v + 1
+    (_, s1), (_, s2) = run_both(v2, theta, np.zeros(n, np.int32),
+                                np.zeros(n, np.int32), flags, 1)
+    assert s1.sum() == n and s2.sum() == n
+
+
+def test_ann_clears_membrane():
+    """ANN neurons accumulate no membrane potential between steps."""
+    n = 256
+    v = np.arange(-128, 128, dtype=np.int32)
+    theta = np.full(n, 2**30, np.int32)  # never spike
+    flags = np.zeros(n, np.int32)
+    (v1, _), (v2, _) = run_both(v, theta, np.zeros(n, np.int32),
+                                np.zeros(n, np.int32), flags, 1)
+    assert (v1 == 0).all() and (v2 == 0).all()
+
+
+@pytest.mark.parametrize("lam,expect", [
+    (0, 0),        # v - (v >> 0) = 0
+    (1, 500),      # 1000 - 500
+    (2, 750),      # 1000 - 250
+    (63, 1000),    # clamped shift 31 -> v - 0
+])
+def test_lif_leak_values(lam, expect):
+    n = 256
+    v = np.full(n, 1000, np.int32)
+    theta = np.full(n, 2**30, np.int32)
+    flags = np.full(n, ref.FLAG_LIF, np.int32)
+    (v1, _), (v2, _) = run_both(v, theta, np.zeros(n, np.int32),
+                                np.full(n, lam, np.int32), flags, 1)
+    assert (v1 == expect).all() and (v2 == expect).all()
+
+
+def test_lif_leak_negative_floor():
+    """Leak uses floor division (python //): -1000 - (-1000 >> 2) = -750."""
+    n = 256
+    v = np.full(n, -1000, np.int32)
+    theta = np.full(n, 2**30, np.int32)
+    flags = np.full(n, ref.FLAG_LIF, np.int32)
+    (v1, _), (v2, _) = run_both(v, theta, np.zeros(n, np.int32),
+                                np.full(n, 2, np.int32), flags, 1)
+    # -1000 >> 2 == floor(-1000/4) == -250; v - (-250) == -750
+    assert (v1 == -750).all() and (v2 == -750).all()
+
+
+def test_noise_is_odd_and_bounded():
+    """Raw 17-bit noise: odd, in [-2^16, 2^16), and roughly balanced."""
+    idx = np.arange(65536, dtype=np.uint32)
+    xi = np.asarray(ref.noise17(jnp.uint32(99), idx))
+    assert (xi % 2 != 0).all()
+    assert xi.min() >= -(2**16) and xi.max() < 2**16
+    # LSB=1 balances the distribution around 0 (paper 5.1)
+    assert abs(float(xi.mean())) < 300.0
+
+
+def test_noise_shift_left_right():
+    xi = np.asarray(ref.noise17(jnp.uint32(5), np.arange(256, dtype=np.uint32)))
+    left = np.asarray(ref.shift_noise(jnp.asarray(xi), jnp.full(256, 3, jnp.int32)))
+    right = np.asarray(ref.shift_noise(jnp.asarray(xi), jnp.full(256, -3, jnp.int32)))
+    np.testing.assert_array_equal(left, (xi.astype(np.int64) << 3).astype(np.int32))
+    np.testing.assert_array_equal(right, xi >> 3)
+
+
+def test_deterministic_neurons_see_no_noise():
+    n = 256
+    v = np.full(n, 10, np.int32)
+    theta = np.full(n, 2**30, np.int32)
+    flags = np.full(n, ref.FLAG_LIF, np.int32)  # no FLAG_NOISE
+    lam = np.full(n, 63, np.int32)
+    (v1, _), (v2, _) = run_both(v, theta, np.full(n, 5, np.int32), lam, flags, 1234)
+    assert (v1 == 10).all() and (v2 == 10).all()
+
+
+def test_stochastic_binary_is_boltzmann_like():
+    """ANN neuron with noise and theta=0 fires ~50% of the time (nu=-17
+    keeps |xi| small but sign-balanced)."""
+    n = 65536
+    v = np.zeros(n, np.int32)
+    theta = np.zeros(n, np.int32)
+    flags = np.full(n, ref.FLAG_NOISE, np.int32)
+    nu = np.zeros(n, np.int32)
+    (_, s1), _ = run_both(v, theta, nu, np.zeros(n, np.int32), flags, 31337)
+    rate = s1.mean()
+    assert 0.45 < rate < 0.55
+
+
+def test_mix_seed_varies_per_step():
+    seeds = {int(ref.mix_seed(1, t)) for t in range(100)}
+    assert len(seeds) == 100
+    assert all(s != 0 for s in seeds)

@@ -1,0 +1,101 @@
+"""L2 graph tests: synapse_accum scatter semantics, dense_step equivalence,
+and lowering shape checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(data_seed=st.integers(0, 2**31 - 1))
+def test_synapse_accum_drops_padding(data_seed):
+    rng = np.random.RandomState(data_seed)
+    n, e = 512, 1024
+    v = rng.randint(-1000, 1000, n).astype(np.int32)
+    targets = rng.randint(0, n + 1, e).astype(np.int32)
+    weights = rng.randint(-100, 100, e).astype(np.int32)
+    got = np.asarray(model.synapse_accum_fn(jnp.asarray(v), jnp.asarray(targets),
+                                            jnp.asarray(weights)))
+    want = v.copy().astype(np.int64)
+    for t, w in zip(targets, weights):
+        if t < n:
+            want[t] += w
+    np.testing.assert_array_equal(got, want.astype(np.int32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(data_seed=st.integers(0, 2**31 - 1), seed=st.integers(0, 2**32 - 1))
+def test_dense_step_matches_ref(data_seed, seed):
+    rng = np.random.RandomState(data_seed)
+    n, a = 256, 64
+    v = rng.randint(-500, 500, n).astype(np.int32)
+    theta = rng.randint(0, 200, n).astype(np.int32)
+    nu = rng.randint(-20, 10, n).astype(np.int32)
+    lam = rng.randint(0, 64, n).astype(np.int32)
+    flags = rng.randint(0, 4, n).astype(np.int32)
+    wn = rng.randint(-30, 30, (n, n)).astype(np.int32)
+    wa = rng.randint(-30, 30, (a, n)).astype(np.int32)
+    ax = (rng.rand(a) < 0.4).astype(np.int32)
+    ss = jnp.uint32(seed)
+    v1, s1 = ref.dense_step_ref(v, theta, nu, lam, flags, ss, wn, wa, ax)
+    v2, s2 = model.dense_step_fn(
+        jnp.asarray(v), jnp.asarray(theta), jnp.asarray(nu), jnp.asarray(lam),
+        jnp.asarray(flags), ss, jnp.asarray(wn), jnp.asarray(wa), jnp.asarray(ax))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_event_path_equals_dense_path():
+    """Gather-then-scatter (the HBM two-phase path) must equal the dense
+    matmul path: the core cross-engine invariant of the whole system."""
+    rng = np.random.RandomState(9)
+    n, a, steps = 128, 32, 8
+    wn = (rng.randint(-50, 50, (n, n)) * (rng.rand(n, n) < 0.15)).astype(np.int32)
+    wa = (rng.randint(-50, 50, (a, n)) * (rng.rand(a, n) < 0.4)).astype(np.int32)
+    theta = rng.randint(5, 100, n).astype(np.int32)
+    nu = np.full(n, -4, np.int32)
+    lam = rng.randint(1, 64, n).astype(np.int32)
+    flags = rng.randint(0, 4, n).astype(np.int32)
+
+    v_dense = np.zeros(n, np.int32)
+    v_event = np.zeros(n, np.int32)
+    for t in range(steps):
+        ax = (rng.rand(a) < 0.3).astype(np.int32)
+        ss = ref.mix_seed(1234, t)
+        # dense
+        v_dense, s_dense = ref.dense_step_ref(v_dense, theta, nu, lam, flags, ss,
+                                              wn, wa, ax)
+        v_dense = np.asarray(v_dense)
+        # event-driven: neuron_update, then gather fired rows, then scatter
+        v2, s2 = ref.neuron_update_ref(v_event, theta, nu, lam, flags, ss)
+        v2, s2 = np.asarray(v2), np.asarray(s2)
+        np.testing.assert_array_equal(s2, np.asarray(s_dense))
+        targets, weights = [], []
+        for i in np.nonzero(s2)[0]:
+            for j in np.nonzero(wn[i])[0]:
+                targets.append(j)
+                weights.append(wn[i, j])
+        for i in np.nonzero(ax)[0]:
+            for j in np.nonzero(wa[i])[0]:
+                targets.append(j)
+                weights.append(wa[i, j])
+        # pad to fixed E with dropped events
+        e = 4096
+        tgt = np.full(e, n, np.int32)
+        wgt = np.zeros(e, np.int32)
+        tgt[: len(targets)] = targets
+        wgt[: len(weights)] = weights
+        v_event = np.asarray(ref.synapse_accum_ref(v2, tgt, wgt))
+        np.testing.assert_array_equal(v_event, v_dense)
+
+
+def test_lowering_shapes():
+    lowered = jax.jit(model.neuron_update_fn).lower(*model.neuron_update_spec(1024))
+    text = lowered.as_text()
+    assert "1024" in text
+    lowered = jax.jit(model.synapse_accum_fn).lower(*model.synapse_accum_spec(512, 2048))
+    assert lowered is not None

@@ -1,0 +1,7 @@
+"""Quantization-aware training pipeline (build-time only).
+
+Trains the paper's Table-2 model families on the synthetic datasets,
+quantizes weights to int16, exports `.hsl` layer graphs + `.hsd` test
+sets for the Rust platform, and records fp32/quantized software
+accuracies in `models/manifest.json`.
+"""

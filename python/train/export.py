@@ -1,0 +1,107 @@
+"""Binary exporters: `.hsl` layer graphs (read by rust/src/model_fmt/hsl.rs)
+and `.hsd` test sets (read by rust/src/model_fmt/testset.rs)."""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+import torch.nn as nn
+
+HSL_MAGIC = b"HSLAY1\x00\x00"
+HSD_MAGIC = b"HSDATA1\x00"
+
+
+def write_hsl(
+    path: str,
+    torch_layers,
+    scales,
+    thetas,
+    neuron_kind: int,
+    in_shape,
+    timesteps: int,
+):
+    """Serialise quantized torch layers.
+
+    torch_layers: the module list (Conv2d / Linear / MaxPool2d);
+    scales: per-weighted-layer quantization scale (weights multiplied then
+    rounded); thetas: per-weighted-layer int threshold.
+    """
+    c, h, w = in_shape
+    out = bytearray()
+    out += HSL_MAGIC
+    out += struct.pack("<I", 1)
+    out += struct.pack("<B", neuron_kind)
+    out += struct.pack("<IIIII", c, h, w, timesteps, len(list(torch_layers)))
+    wi = 0
+    for m in torch_layers:
+        if isinstance(m, nn.Conv2d):
+            s = scales[wi]
+            wq = np.clip(np.round(m.weight.detach().numpy() * s), -32768, 32767).astype("<i2")
+            out += struct.pack("<B", 0)
+            out += struct.pack(
+                "<IIIII",
+                m.out_channels,
+                m.kernel_size[0],
+                m.kernel_size[1],
+                m.stride[0],
+                m.padding[0],
+            )
+            out += struct.pack("<i", int(thetas[wi]))
+            has_bias = m.bias is not None
+            out += struct.pack("<B", int(has_bias))
+            out += wq.tobytes()
+            if has_bias:
+                bq = np.round(m.bias.detach().numpy() * s).astype("<i4")
+                out += bq.tobytes()
+            wi += 1
+        elif isinstance(m, nn.Linear):
+            s = scales[wi]
+            wq = np.clip(np.round(m.weight.detach().numpy() * s), -32768, 32767).astype("<i2")
+            out += struct.pack("<B", 1)
+            out += struct.pack("<I", m.out_features)
+            out += struct.pack("<i", int(thetas[wi]))
+            has_bias = m.bias is not None
+            out += struct.pack("<B", int(has_bias))
+            out += wq.tobytes()  # [out, in] row-major
+            if has_bias:
+                bq = np.round(m.bias.detach().numpy() * s).astype("<i4")
+                out += bq.tobytes()
+            wi += 1
+        elif isinstance(m, nn.MaxPool2d):
+            out += struct.pack("<B", 2)
+            k = m.kernel_size if isinstance(m.kernel_size, int) else m.kernel_size[0]
+            st = m.stride if isinstance(m.stride, int) else m.stride[0]
+            out += struct.pack("<II", k, st)
+        else:
+            raise TypeError(f"unsupported layer {m}")
+    with open(path, "wb") as f:
+        f.write(bytes(out))
+
+
+def write_hsd(path: str, samples, labels, n_axons: int):
+    """Test set: samples is a list of per-sample frame lists; each frame is
+    a sorted array of active axon ids. labels: int array."""
+    frames_per_sample = len(samples[0])
+    out = bytearray()
+    out += HSD_MAGIC
+    out += struct.pack("<III", len(samples), frames_per_sample, n_axons)
+    for frames, label in zip(samples, labels):
+        assert len(frames) == frames_per_sample
+        out += struct.pack("<B", int(label))
+        for fr in frames:
+            ids = np.asarray(fr, "<u4")
+            out += struct.pack("<I", len(ids))
+            out += ids.tobytes()
+    with open(path, "wb") as f:
+        f.write(bytes(out))
+
+
+def frames_from_binary(x: np.ndarray) -> list:
+    """[C,H,W] or [T,C,H,W] binary array -> list of per-frame active axon
+    id arrays (axon id = c*H*W + y*W + x, matching convert/mod.rs)."""
+    if x.ndim == 3:
+        x = x[None]
+    t = x.shape[0]
+    flat = x.reshape(t, -1)
+    return [np.nonzero(flat[i])[0].astype(np.uint32) for i in range(t)]

@@ -1,0 +1,113 @@
+"""Torch model definitions: binary (ANN) nets with straight-through
+binary activations, and IF spiking nets with ATan surrogate gradients
+matching HiAER-Spike's threshold/order-of-ops conventions (strict >,
+integration at end of step, hard reset to 0)."""
+
+from __future__ import annotations
+
+import torch
+import torch.nn as nn
+
+
+class BinaryAct(torch.autograd.Function):
+    """spike = (z > 0); STE gradient clipped to |z| < 1."""
+
+    @staticmethod
+    def forward(ctx, z):
+        ctx.save_for_backward(z)
+        return (z > 0).float()
+
+    @staticmethod
+    def backward(ctx, g):
+        (z,) = ctx.saved_tensors
+        return g * (z.abs() < 1.0).float()
+
+
+class AtanSpike(torch.autograd.Function):
+    """spike = (v > theta); ATan surrogate (SpikingJelly default)."""
+
+    @staticmethod
+    def forward(ctx, v):
+        ctx.save_for_backward(v)
+        return (v > 0).float()
+
+    @staticmethod
+    def backward(ctx, g):
+        (v,) = ctx.saved_tensors
+        alpha = 2.0
+        return g * (alpha / 2) / (1 + (torch.pi / 2 * alpha * v) ** 2)
+
+
+def binary(z):
+    return BinaryAct.apply(z)
+
+
+class BinaryNet(nn.Module):
+    """A stack of conv/pool/fc layers with binary activations after every
+    weighted layer — the ANN-neuron model family (binarized MNIST)."""
+
+    def __init__(self, layers: list):
+        super().__init__()
+        self.layers = nn.ModuleList(layers)
+
+    def forward(self, x):
+        for m in self.layers:
+            if isinstance(m, (nn.Conv2d, nn.Linear)):
+                if isinstance(m, nn.Linear) and x.dim() > 2:
+                    x = x.flatten(1)
+                x = binary(m(x))
+            else:  # pooling
+                x = m(x)
+        return x
+
+    def logits(self, x):
+        """Forward, but the LAST weighted layer returns raw z (the
+        membrane potential the paper reads out instead of spikes)."""
+        mods = list(self.layers)
+        for i, m in enumerate(mods):
+            last = i == len(mods) - 1
+            if isinstance(m, (nn.Conv2d, nn.Linear)):
+                if isinstance(m, nn.Linear) and x.dim() > 2:
+                    x = x.flatten(1)
+                z = m(x)
+                x = z if last else binary(z)
+            else:
+                x = m(x)
+        return x
+
+
+class IFNet(nn.Module):
+    """Rate-coded IF spiking net matching HiAER-Spike semantics: per step,
+    threshold (strict >) then hard reset then integrate; threshold 1.0
+    during training (rescaled at quantization). Input: [B, T, C, H, W]."""
+
+    def __init__(self, layers: list):
+        super().__init__()
+        self.layers = nn.ModuleList(layers)
+
+    def forward(self, x):
+        """Returns output spike-count rates [B, n_out]."""
+        b, t = x.shape[0], x.shape[1]
+        # per-layer membrane states
+        vs = [None] * len(self.layers)
+        counts = None
+        for step in range(t):
+            cur = x[:, step]
+            for i, m in enumerate(self.layers):
+                if isinstance(m, (nn.Conv2d, nn.Linear)):
+                    if isinstance(m, nn.Linear) and cur.dim() > 2:
+                        cur = cur.flatten(1)
+                    z = m(cur)
+                    if vs[i] is None:
+                        vs[i] = torch.zeros_like(z)
+                    # integrate this step's input, then spike at the next
+                    # threshold crossing — equivalent rate semantics to the
+                    # hardware's (threshold -> reset -> integrate) order.
+                    v = vs[i] + z
+                    s = AtanSpike.apply(v - 1.0)
+                    vs[i] = v * (1 - s.detach())  # hard reset to 0
+                    cur = s
+                else:
+                    cur = m(cur)
+            counts = cur if counts is None else counts + cur
+        return counts / t

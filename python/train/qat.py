@@ -1,0 +1,158 @@
+"""Quantization + exact integer reference evaluation.
+
+Quantization: per weighted layer, scale = HEADROOM / max|W| (dynamic
+alpha scaling, paper §6), weights -> int16, biases -> int32, IF threshold
+1.0 -> round(scale). Binary/IF neurons are scale-equivariant per layer,
+so quantization only loses weight-rounding precision.
+
+`int_forward_*` replicate the HiAER-Spike hardware update bit-exactly on
+the layer graph (including the lam=63 "+1 per step on negative membrane"
+floor-division quirk), so their accuracy is the paper's "software
+accuracy after quantization", and must equal the Rust/hardware accuracy
+exactly (Table 2's parity columns)."""
+
+from __future__ import annotations
+
+import numpy as np
+import torch
+import torch.nn as nn
+
+HEADROOM = 8191.0  # keep |w_int| << 2^15 so sums stay far from i32 limits
+
+
+def layer_scales(torch_layers, max_scale=HEADROOM):
+    """Per weighted layer: quantization scale."""
+    scales = []
+    for m in torch_layers:
+        if isinstance(m, (nn.Conv2d, nn.Linear)):
+            wmax = float(m.weight.detach().abs().max())
+            scales.append(max_scale / max(wmax, 1e-6))
+    return scales
+
+
+def quantized_arrays(torch_layers, scales):
+    """Yield per-layer (kind, W_int float64, b_int float64|None, extras)."""
+    out = []
+    wi = 0
+    for m in torch_layers:
+        if isinstance(m, nn.Conv2d):
+            s = scales[wi]
+            w = np.clip(np.round(m.weight.detach().numpy().astype(np.float64) * s), -32768, 32767)
+            b = (
+                np.round(m.bias.detach().numpy().astype(np.float64) * s)
+                if m.bias is not None
+                else None
+            )
+            out.append(("conv", w, b, (m.stride[0], m.padding[0])))
+            wi += 1
+        elif isinstance(m, nn.Linear):
+            s = scales[wi]
+            w = np.clip(np.round(m.weight.detach().numpy().astype(np.float64) * s), -32768, 32767)
+            b = (
+                np.round(m.bias.detach().numpy().astype(np.float64) * s)
+                if m.bias is not None
+                else None
+            )
+            out.append(("fc", w, b, None))
+            wi += 1
+        elif isinstance(m, nn.MaxPool2d):
+            k = m.kernel_size if isinstance(m.kernel_size, int) else m.kernel_size[0]
+            st = m.stride if isinstance(m.stride, int) else m.stride[0]
+            out.append(("pool", None, None, (k, st)))
+    return out
+
+
+def _conv_int(x, w, b, stride, pad):
+    """Exact integer conv via float64 torch (values far below 2^52)."""
+    xt = torch.from_numpy(x.astype(np.float64))
+    wt = torch.from_numpy(w)
+    bt = torch.from_numpy(b) if b is not None else None
+    z = torch.nn.functional.conv2d(xt, wt, bt, stride=stride, padding=pad)
+    return z.numpy()
+
+
+def _fc_int(x, w, b):
+    z = x.reshape(x.shape[0], -1).astype(np.float64) @ w.T
+    if b is not None:
+        z = z + b
+    return z
+
+
+def _pool_max(x, k, stride):
+    xt = torch.from_numpy(x.astype(np.float64))
+    return torch.nn.functional.max_pool2d(xt, k, stride).numpy()
+
+
+def _pool_sum(x, k, stride):
+    """Window sum (what the weight-1 pool neuron's membrane receives)."""
+    xt = torch.from_numpy(x.astype(np.float64))
+    return (torch.nn.functional.avg_pool2d(xt, k, stride) * (k * k)).round().numpy()
+
+
+def int_forward_binary(qlayers, thetas, x):
+    """ANN-binary cascade: spike = (z > theta). x: [B,C,H,W] binary.
+    Returns final-layer membrane (logits) [B, n_out] int64."""
+    act = x.astype(np.float64)
+    wi = 0
+    n = len(qlayers)
+    for i, (kind, w, b, extra) in enumerate(qlayers):
+        last = i == n - 1
+        if kind == "conv":
+            z = _conv_int(act, w, b, extra[0], extra[1])
+            act = z if last else (z > thetas[wi]).astype(np.float64)
+            wi += 1
+        elif kind == "fc":
+            z = _fc_int(act, w, b)
+            act = z if last else (z > thetas[wi]).astype(np.float64)
+            wi += 1
+        else:
+            act = _pool_max(act, extra[0], extra[1])
+    return act.astype(np.int64)
+
+
+def if_recurrence(z_train, theta):
+    """HiAER IF recurrence over a per-step input train z_train
+    [T_total, ...]: per step, spike (strict >), hard reset, lam=63 leak
+    (v += 1 when v < 0: floor-division artifact), integrate.
+    Returns the spike train [T_total, ...] and final membrane."""
+    v = np.zeros_like(z_train[0])
+    spikes = np.zeros_like(z_train)
+    for t in range(len(z_train)):
+        s = v > theta
+        v = np.where(s, 0.0, v)
+        v = v + (v < 0)  # v -= (v >> 31): +1 for negative v
+        v = v + z_train[t]
+        spikes[t] = s
+    return spikes, v
+
+
+def int_forward_if(qlayers, thetas, frames, extra_steps):
+    """Rate-coded IF evaluation. frames: [B,T,C,H,W] binary. Runs
+    T + extra_steps total steps (extra = #layers, the pipeline depth).
+    Returns (spike counts [B,n_out], final membrane [B,n_out])."""
+    b, t = frames.shape[0], frames.shape[1]
+    t_total = t + extra_steps
+    # layer-0 input train padded with empty frames
+    train = np.zeros((t_total, b) + frames.shape[2:], np.float64)
+    train[:t] = frames.transpose(1, 0, 2, 3, 4).astype(np.float64)
+    wi = 0
+    v = None
+    for kind, w, bias, extra in qlayers:
+        if kind == "conv":
+            z = np.stack(
+                [_conv_int(train[i], w, bias, extra[0], extra[1]) for i in range(t_total)]
+            )
+            train, v = if_recurrence(z, thetas[wi])
+            wi += 1
+        elif kind == "fc":
+            z = np.stack([_fc_int(train[i], w, bias) for i in range(t_total)])
+            train, v = if_recurrence(z, thetas[wi])
+            wi += 1
+        else:
+            # pool neurons are IF with theta=0 fed weight-1 synapses: the
+            # membrane receives the window SUM and fires (one step later)
+            # iff it is > 0 — OR over binary inputs, like max pooling.
+            z = np.stack([_pool_sum(train[i], extra[0], extra[1]) for i in range(t_total)])
+            train, _ = if_recurrence(z, 0.0)
+    counts = train.sum(axis=0)
+    return counts.astype(np.int64), v.astype(np.int64)

@@ -1,0 +1,310 @@
+"""Train every Table-2 model family and export .hsl/.hsd + manifest.
+
+Usage:  cd python && python -m train.train_all [--out ../models] [--quick]
+
+Architectures follow the paper's families, channel-scaled to train in
+minutes on CPU (the paper's absolute accuracy is not the reproduction
+target — software<->hardware parity and energy/latency scaling are).
+IF (spiking) nets are trained without biases: the paper's conversion
+absorbs/drops them, and bias-free layers make threshold-mode conversion
+exact for rate coding.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import torch
+import torch.nn as nn
+
+from data import dvs_gesture, pong, synth_cifar, synth_mnist
+from train import export, qat
+from train.models import BinaryNet, IFNet
+
+torch.manual_seed(0)
+
+
+def train_torch(model, xs, ys, *, epochs, batch, lr=1e-3, spiking=False):
+    opt = torch.optim.Adam(model.parameters(), lr=lr)
+    loss_fn = nn.CrossEntropyLoss()
+    n = len(xs)
+    for ep in range(epochs):
+        perm = torch.randperm(n)
+        tot = 0.0
+        for i in range(0, n, batch):
+            idx = perm[i : i + batch]
+            x = torch.from_numpy(xs[idx.numpy()]).float()
+            y = torch.from_numpy(ys[idx.numpy()])
+            opt.zero_grad()
+            out = model(x) if spiking else model.logits(x)
+            loss = loss_fn(out, y)
+            loss.backward()
+            opt.step()
+            tot += float(loss) * len(idx)
+        print(f"    epoch {ep + 1}/{epochs} loss {tot / n:.4f}", flush=True)
+
+
+def eval_float(model, xs, ys, batch=128, spiking=False):
+    correct = 0
+    with torch.no_grad():
+        for i in range(0, len(xs), batch):
+            x = torch.from_numpy(xs[i : i + batch]).float()
+            out = model(x) if spiking else model.logits(x)
+            correct += int((out.argmax(1).numpy() == ys[i : i + batch]).sum())
+    return correct / len(xs)
+
+
+def eval_quant_binary(layers, thetas_int, xs, ys, batch=256):
+    q = qat.quantized_arrays(layers, qat.layer_scales(layers))
+    correct = 0
+    for i in range(0, len(xs), batch):
+        logits = qat.int_forward_binary(q, thetas_int, xs[i : i + batch])
+        correct += int((logits.argmax(1) == ys[i : i + batch]).sum())
+    return correct / len(xs)
+
+
+def eval_quant_if(layers, scales, xs, ys, batch=16):
+    q = qat.quantized_arrays(layers, scales)
+    thetas = [round(s) for s in scales]
+    n_weighted = len(thetas)
+    n_layers = len(list(layers))
+    correct = 0
+    for i in range(0, len(xs), batch):
+        counts, v = qat.int_forward_if(q, thetas, xs[i : i + batch], n_layers)
+        # rate readout with membrane tie-break
+        pred = (counts * 1_000_000 + np.clip(v, -500_000, 500_000)).argmax(1)
+        correct += int((pred == ys[i : i + batch]).sum())
+    del q
+    return correct / len(xs), thetas, n_weighted
+
+
+def export_model(out_dir, name, layers, thetas, kind, in_shape, timesteps, scales):
+    path = os.path.join(out_dir, f"{name}.hsl")
+    export.write_hsl(path, layers, scales, thetas, kind, in_shape, timesteps)
+    return path
+
+
+def count_params(layers):
+    return sum(
+        int(np.prod(m.weight.shape)) for m in layers if isinstance(m, (nn.Conv2d, nn.Linear))
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "models"))
+    ap.add_argument("--quick", action="store_true", help="tiny datasets, 1 epoch (CI)")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    quick = args.quick
+    manifest = {}
+
+    n_train = 400 if quick else 2500
+    n_test = 100 if quick else 500
+    epochs = 1 if quick else 6
+
+    # ------------------------------------------------------------- MNIST
+    print("== synthetic MNIST (binary ANN nets)")
+    xs, ys = synth_mnist.generate(n_train, seed=1)
+    xt, yt = synth_mnist.generate(n_test, seed=2)
+    xs4 = xs[:, None].astype(np.float32)
+    xt4 = xt[:, None].astype(np.float32)
+
+    mnist_models = {
+        "mlp_128": [nn.Linear(784, 128), nn.Linear(128, 10)],
+        "mlp_2k1k": [nn.Linear(784, 2048), nn.Linear(2048, 1024), nn.Linear(1024, 10)],
+        "lenet5_s2": [
+            nn.Conv2d(1, 6, 5, stride=2),
+            nn.Conv2d(6, 16, 5, stride=2),
+            nn.Linear(16 * 4 * 4, 120),
+            nn.Linear(120, 84),
+            nn.Linear(84, 10),
+        ],
+        "lenet5_mp": [
+            nn.Conv2d(1, 6, 5),
+            nn.MaxPool2d(2, 2),
+            nn.Conv2d(6, 16, 5),
+            nn.MaxPool2d(2, 2),
+            nn.Linear(16 * 4 * 4, 120),
+            nn.Linear(120, 84),
+            nn.Linear(84, 10),
+        ],
+    }
+    for name, layers in mnist_models.items():
+        print(f"  -- {name}")
+        model = BinaryNet(layers)
+        t0 = time.time()
+        train_torch(model, xs4.reshape(len(xs4), 1, 28, 28), ys, epochs=epochs, batch=64)
+        acc_f = eval_float(model, xt4, yt)
+        thetas = [0] * sum(isinstance(m, (nn.Conv2d, nn.Linear)) for m in layers)
+        acc_q = eval_quant_binary(model.layers, thetas, xt4, yt)
+        scales = qat.layer_scales(model.layers)
+        export_model(out_dir, name, model.layers, thetas, 0, (1, 28, 28), 1, scales)
+        export.write_hsd(
+            os.path.join(out_dir, f"{name}.hsd"),
+            [export.frames_from_binary(x) for x in xt4.astype(np.uint8)],
+            yt,
+            784,
+        )
+        manifest[name] = {
+            "task": "mnist",
+            "kind": "ann",
+            "readout": "membrane",
+            "input": [1, 28, 28],
+            "timesteps": 1,
+            "acc_float": acc_f,
+            "acc_quant": acc_q,
+            "params": count_params(layers),
+            "train_s": round(time.time() - t0, 1),
+        }
+        print(f"    float {acc_f:.4f} quant {acc_q:.4f}")
+
+    # -------------------------------------------------------- DVS gesture
+    print("== synthetic DVS gesture (IF spiking CNN family)")
+    n_train_g = 200 if quick else 700
+    n_test_g = 60 if quick else 200
+    gx, gy = dvs_gesture.generate(n_train_g, seed=3)
+    gxt, gyt = dvs_gesture.generate(n_test_g, seed=4)
+    gx = gx.astype(np.float32)
+    gxt = gxt.astype(np.float32)
+
+    def dvs_fc_in(conv_specs, size=63):
+        c, h, w = 2, size, size
+        for out_c, k, s in conv_specs:
+            h = (h - k) // s + 1
+            w = (w - k) // s + 1
+            c = out_c
+        return c * h * w
+
+    gesture_family = {
+        "dvs_c4": [(4, 5, 2)],
+        "dvs_c8": [(8, 5, 2)],
+        "dvs_c8c8": [(8, 5, 2), (8, 5, 2)],
+        "dvs_c12c16": [(12, 5, 2), (16, 5, 2)],
+        "dvs_c16c24": [(16, 5, 2), (24, 5, 2)],
+    }
+    ge = 1 if quick else 3
+    for name, spec in gesture_family.items():
+        print(f"  -- {name}")
+        layers = []
+        in_c = 2
+        for out_c, k, s in spec:
+            layers.append(nn.Conv2d(in_c, out_c, k, stride=s, bias=False))
+            in_c = out_c
+        layers += [
+            nn.Linear(dvs_fc_in(spec), 120, bias=False),
+            nn.Linear(120, 84, bias=False),
+            nn.Linear(84, 11, bias=False),
+        ]
+        model = IFNet(layers)
+        t0 = time.time()
+        train_torch(model, gx, gy, epochs=ge, batch=16, spiking=True)
+        acc_f = eval_float(model, gxt, gyt, batch=16, spiking=True)
+        scales = qat.layer_scales(model.layers)
+        acc_q, thetas, _ = eval_quant_if(model.layers, scales, gxt, gyt)
+        export_model(out_dir, name, model.layers, thetas, 1, (2, 63, 63), 10, scales)
+        export.write_hsd(
+            os.path.join(out_dir, f"{name}.hsd"),
+            [export.frames_from_binary(x) for x in gxt.astype(np.uint8)],
+            gyt,
+            2 * 63 * 63,
+        )
+        manifest[name] = {
+            "task": "dvs_gesture",
+            "kind": "if",
+            "readout": "rate",
+            "input": [2, 63, 63],
+            "timesteps": 10,
+            "acc_float": acc_f,
+            "acc_quant": acc_q,
+            "params": count_params(layers),
+            "train_s": round(time.time() - t0, 1),
+        }
+        print(f"    float {acc_f:.4f} quant {acc_q:.4f}")
+
+    # ----------------------------------------------------------- CIFAR-10
+    print("== synthetic CIFAR-10 (bit-sliced, IF CNN)")
+    cx, cy = synth_cifar.generate(n_train, seed=5)
+    cxt, cyt = synth_cifar.generate(n_test, seed=6)
+    # present the 15-plane image at every one of T timesteps (rate code)
+    T_CIFAR = 4
+    cx_t = np.repeat(cx[:, None], T_CIFAR, axis=1).astype(np.float32)
+    cxt_t = np.repeat(cxt[:, None], T_CIFAR, axis=1).astype(np.float32)
+    layers = [
+        nn.Conv2d(15, 16, 3, stride=2, bias=False),
+        nn.Conv2d(16, 32, 3, stride=2, bias=False),
+        nn.Linear(32 * 7 * 7, 256, bias=False),
+        nn.Linear(256, 10, bias=False),
+    ]
+    model = IFNet(layers)
+    t0 = time.time()
+    train_torch(model, cx_t, cy, epochs=max(1, epochs // 2), batch=32, spiking=True)
+    acc_f = eval_float(model, cxt_t, cyt, batch=32, spiking=True)
+    scales = qat.layer_scales(model.layers)
+    acc_q, thetas, _ = eval_quant_if(model.layers, scales, cxt_t, cyt)
+    export_model(out_dir, "cifar_cnn", model.layers, thetas, 1, (15, 32, 32), T_CIFAR, scales)
+    export.write_hsd(
+        os.path.join(out_dir, "cifar_cnn.hsd"),
+        [[f[0]] * T_CIFAR for f in ([export.frames_from_binary(x) for x in cxt.astype(np.uint8)])],
+        cyt,
+        15 * 32 * 32,
+    )
+    manifest["cifar_cnn"] = {
+        "task": "cifar10",
+        "kind": "if",
+        "readout": "rate",
+        "input": [15, 32, 32],
+        "timesteps": T_CIFAR,
+        "acc_float": acc_f,
+        "acc_quant": acc_q,
+        "params": count_params(layers),
+        "train_s": round(time.time() - t0, 1),
+    }
+    print(f"    float {acc_f:.4f} quant {acc_q:.4f}")
+
+    # --------------------------------------------------------------- Pong
+    print("== DVS Pong (behaviour cloning of the scripted expert)")
+    n_bc = 1500 if quick else 8000
+    px, pa = pong.collect_bc_dataset(n_bc, seed=7)
+    T_PONG = 4
+    px_t = np.repeat(px[:, None], T_PONG, axis=1).astype(np.float32)
+    layers = [
+        nn.Conv2d(2, 8, 8, stride=4, bias=False),
+        nn.Conv2d(8, 16, 4, stride=2, bias=False),
+        nn.Linear(16 * 9 * 9, 128, bias=False),
+        nn.Linear(128, 6, bias=False),
+    ]
+    model = IFNet(layers)
+    t0 = time.time()
+    train_torch(model, px_t, pa, epochs=max(1, epochs // 3), batch=32, spiking=True)
+    acc_f = eval_float(model, px_t[: len(px_t) // 4], pa[: len(pa) // 4], batch=32, spiking=True)
+    scales = qat.layer_scales(model.layers)
+    acc_q, thetas, _ = eval_quant_if(
+        model.layers, scales, px_t[: len(px_t) // 8], pa[: len(pa) // 8]
+    )
+    export_model(out_dir, "pong_dqn", model.layers, thetas, 1, (2, 84, 84), T_PONG, scales)
+    manifest["pong_dqn"] = {
+        "task": "pong",
+        "kind": "if",
+        "readout": "rate",
+        "input": [2, 84, 84],
+        "timesteps": T_PONG,
+        "acc_float": acc_f,  # action agreement with the expert
+        "acc_quant": acc_q,
+        "params": count_params(layers),
+        "train_s": round(time.time() - t0, 1),
+    }
+    print(f"    action-agreement float {acc_f:.4f} quant {acc_q:.4f}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest -> {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+//! Regenerates paper Fig 10 + the §6 scaling analysis: HBM energy and
+//! latency per inference vs neuron count, with OLS linear fits per model
+//! family (MLP, LeNet-5, DVS-Gesture spiking CNN).
+//!
+//! The paper reports, for the DVS family (n = 5):
+//!   Energy(uJ)  = 0.0294 x - 30.293   (R^2 = 0.994)
+//!   Latency(us) = 0.0658 x - 53.031   (R^2 = 0.995)
+//! and per-neuron cost ratios MLP ~2.4x / DVS ~10.5x the LeNet slope.
+//! The shape to reproduce: strong linear fits (R^2 > 0.9) and the same
+//! family ordering of per-neuron cost.
+
+use hiaer_spike::harness::{self, models_dir};
+use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::util::stats::linear_fit;
+
+fn main() {
+    let dir = models_dir();
+    let entries = match harness::load_manifest(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("fig10: {e:#}\nrun `make models` first");
+            return;
+        }
+    };
+    let families: &[(&str, Box<dyn Fn(&str) -> bool>)] = &[
+        ("MLP", Box::new(|n: &str| n.starts_with("mlp_"))),
+        ("LeNet-5", Box::new(|n: &str| n.starts_with("lenet5_"))),
+        ("DVS CNN", Box::new(|n: &str| n.starts_with("dvs_"))),
+    ];
+
+    println!("== Fig 10: HBM energy/latency per inference vs neuron count ==\n");
+    let mut slopes: Vec<(String, f64, f64)> = Vec::new();
+    for (fam, pred) in families {
+        let mut pts_e = Vec::new();
+        let mut pts_l = Vec::new();
+        println!("family {fam}:");
+        println!(
+            "  {:<12} {:>9} {:>13} {:>13}",
+            "model", "neurons", "energy uJ", "latency us"
+        );
+        let mut members: Vec<_> = entries.iter().filter(|e| pred(&e.name)).collect();
+        members.sort_by_key(|e| e.params);
+        for e in members {
+            match harness::evaluate_model(&dir, e, 100, SlotStrategy::BalanceFanIn) {
+                Ok(r) => {
+                    println!(
+                        "  {:<12} {:>9} {:>13.2} {:>13.2}",
+                        e.name, r.neurons, r.energy_mean, r.latency_mean
+                    );
+                    pts_e.push((r.neurons as f64, r.energy_mean));
+                    pts_l.push((r.neurons as f64, r.latency_mean));
+                }
+                Err(err) => println!("  {:<12} ERROR {err:#}", e.name),
+            }
+        }
+        if let (Some(fe), Some(fl)) = (linear_fit(&pts_e), linear_fit(&pts_l)) {
+            println!(
+                "  fit: Energy(uJ)  = {:.5} x + {:.3}   (R^2 = {:.4}, n = {})",
+                fe.slope, fe.intercept, fe.r2, fe.n
+            );
+            println!(
+                "  fit: Latency(us) = {:.5} x + {:.3}   (R^2 = {:.4}, n = {})",
+                fl.slope, fl.intercept, fl.r2, fl.n
+            );
+            slopes.push((fam.to_string(), fe.slope, fl.slope));
+        } else {
+            println!("  (family too small for a fit)");
+        }
+        println!();
+    }
+    if let (Some(mlp), Some(lenet), Some(dvs)) = (
+        slopes.iter().find(|s| s.0 == "MLP"),
+        slopes.iter().find(|s| s.0 == "LeNet-5"),
+        slopes.iter().find(|s| s.0 == "DVS CNN"),
+    ) {
+        println!("per-neuron HBM energy cost relative to LeNet-5 (paper: MLP ~2.4x, DVS ~10.5x):");
+        println!("  MLP / LeNet   = {:.2}x (energy)  {:.2}x (latency)",
+            mlp.1 / lenet.1, mlp.2 / lenet.2);
+        println!("  DVS / LeNet   = {:.2}x (energy)  {:.2}x (latency)",
+            dvs.1 / lenet.1, dvs.2 / lenet.2);
+    }
+    println!("paper DVS fits: E = 0.0294x - 30.3 (R2 .994); L = 0.0658x - 53.0 (R2 .995)");
+}

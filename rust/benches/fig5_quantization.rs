@@ -1,0 +1,58 @@
+//! Regenerates paper Fig 5: DVS-gesture test accuracy across model sizes
+//! for (a) full-precision software, (b) int16-quantized software, and
+//! (c) the hardware (event-driven HBM engine). Quantized-vs-hardware must
+//! match exactly; float-vs-quantized shows the quantization cost.
+
+use hiaer_spike::harness::{self, models_dir};
+use hiaer_spike::hbm::SlotStrategy;
+
+fn main() {
+    let dir = models_dir();
+    let entries = match harness::load_manifest(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("fig5: {e:#}\nrun `make models` first");
+            return;
+        }
+    };
+    let mut gest: Vec<_> = entries.iter().filter(|e| e.task == "dvs_gesture").collect();
+    gest.sort_by_key(|e| e.params);
+
+    println!("== Fig 5: DVS gesture accuracy vs model size and precision ==\n");
+    println!(
+        "{:<12} {:>9} {:>9} {:>11} {:>11} {:>10}",
+        "Model", "Params", "Neurons", "float32 %", "int16 %", "hardware %"
+    );
+    println!("{}", "-".repeat(68));
+    let mut series = Vec::new();
+    for e in &gest {
+        match harness::evaluate_model(&dir, e, usize::MAX, SlotStrategy::BalanceFanIn) {
+            Ok(r) => {
+                println!(
+                    "{:<12} {:>9} {:>9} {:>11.2} {:>11.2} {:>10.2}",
+                    e.name,
+                    e.params,
+                    r.neurons,
+                    e.acc_float * 100.0,
+                    e.acc_quant * 100.0,
+                    r.accuracy * 100.0
+                );
+                series.push((e.params as f64, r.accuracy));
+            }
+            Err(err) => println!("{:<12} ERROR {err:#}", e.name),
+        }
+    }
+    if series.len() >= 2 {
+        let first = series.first().unwrap().1;
+        let last = series.last().unwrap().1;
+        println!(
+            "\ntrend: accuracy {} with model size ({}: {:.1}% -> {}: {:.1}%), as in Fig 5",
+            if last >= first { "increases" } else { "decreases" },
+            gest.first().unwrap().name,
+            first * 100.0,
+            gest.last().unwrap().name,
+            last * 100.0
+        );
+    }
+    println!("int16 == hardware column-match is the conversion-fidelity invariant.");
+}

@@ -1,0 +1,233 @@
+//! Hot-path performance bench + ablations (EXPERIMENTS.md §Perf):
+//!
+//! 1. event-driven core engine steps/s across network sizes (rust
+//!    backend), synaptic events/s;
+//! 2. dense software-simulator baseline (the paper's Fig-8 CPU
+//!    comparison): event-driven wins on sparse activity;
+//! 3. HBM slot-strategy ablation (Modulo vs BalanceFanIn packing);
+//! 4. XLA/PJRT backend (the AOT Pallas artifact path) vs native rust
+//!    backend, when artifacts are present;
+//! 5. multi-core scaling of wall-clock throughput.
+//!
+//! env: HOTPATH_STEPS (default 300), HOTPATH_XLA=0 to skip PJRT.
+
+use std::time::Instant;
+
+use hiaer_spike::cluster::MultiCoreEngine;
+use hiaer_spike::engine::{CoreEngine, DenseEngine, RustBackend};
+use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::partition::{ClusterTopology, CoreCapacity};
+use hiaer_spike::runtime::{Runtime, XlaBackend};
+use hiaer_spike::snn::{Network, NeuronModel, Synapse};
+use hiaer_spike::util::prng::Xorshift32;
+
+/// Random net: n neurons, avg degree d, theta tuned for sustained sparse
+/// activity from periodic axon drive.
+fn make_net(n: usize, d: usize, seed: u32) -> Network {
+    let mut rng = Xorshift32::new(seed);
+    let m = NeuronModel::if_neuron(60);
+    let mut net = Network {
+        params: vec![m; n],
+        neuron_adj: vec![Vec::new(); n],
+        axon_adj: vec![Vec::new(); 64.min(n)],
+        outputs: (0..(n as u32).min(8)).collect(),
+        base_seed: seed,
+    };
+    for i in 0..n {
+        for _ in 0..d {
+            net.neuron_adj[i].push(Synapse {
+                target: rng.below(n as u32),
+                weight: rng.range_i32(5, 40) as i16,
+            });
+        }
+    }
+    for a in 0..net.axon_adj.len() {
+        for _ in 0..8 {
+            net.axon_adj[a].push(Synapse {
+                target: rng.below(n as u32),
+                weight: 80,
+            });
+        }
+    }
+    net
+}
+
+/// Clustered net: `p_local` of synapses stay within the neuron's block.
+fn make_clustered_net(n: usize, d: usize, block: usize, p_local: f64, seed: u32) -> Network {
+    let mut rng = Xorshift32::new(seed);
+    let m = NeuronModel::if_neuron(60);
+    let mut net = Network {
+        params: vec![m; n],
+        neuron_adj: vec![Vec::new(); n],
+        axon_adj: vec![Vec::new(); 64.min(n)],
+        outputs: (0..(n as u32).min(8)).collect(),
+        base_seed: seed,
+    };
+    for i in 0..n {
+        let b0 = (i / block) * block;
+        for _ in 0..d {
+            let target = if rng.chance(p_local) {
+                (b0 + rng.below(block as u32) as usize).min(n - 1) as u32
+            } else {
+                rng.below(n as u32)
+            };
+            net.neuron_adj[i].push(Synapse { target, weight: rng.range_i32(5, 40) as i16 });
+        }
+    }
+    for a in 0..net.axon_adj.len() {
+        for _ in 0..8 {
+            net.axon_adj[a].push(Synapse { target: rng.below(n as u32), weight: 80 });
+        }
+    }
+    net
+}
+
+fn drive(step: usize, n_axons: usize) -> Vec<u32> {
+    // burst every 3 steps
+    if step % 3 == 0 {
+        (0..n_axons as u32).step_by(2).collect()
+    } else {
+        Vec::new()
+    }
+}
+
+fn main() {
+    let steps: usize = std::env::var("HOTPATH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let do_xla = std::env::var("HOTPATH_XLA").map(|v| v != "0").unwrap_or(true);
+
+    println!("== hot-path bench (steps = {steps}) ==\n");
+
+    // ---------- 1. event-driven engine scaling
+    println!("[1] event-driven core engine (rust backend)");
+    println!("{:>8} {:>6} {:>12} {:>14} {:>12}", "neurons", "deg", "steps/s", "events/s", "rows/step");
+    for &(n, d) in &[(1_000, 16), (10_000, 16), (50_000, 16), (100_000, 8)] {
+        let net = make_net(n, d, 42);
+        let mut e = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap();
+        let t0 = Instant::now();
+        for s in 0..steps {
+            e.step(&drive(s, net.n_axons())).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let c = e.counters();
+        println!(
+            "{:>8} {:>6} {:>12.0} {:>14.0} {:>12.1}",
+            n,
+            d,
+            steps as f64 / dt,
+            c.events as f64 / dt,
+            c.hbm_rows() as f64 / steps as f64
+        );
+    }
+
+    // ---------- 2. dense software baseline (Fig 8 comparison)
+    println!("\n[2] dense software simulator baseline (same nets)");
+    println!("{:>8} {:>12} {:>16}", "neurons", "steps/s", "vs event-driven");
+    for &(n, d) in &[(1_000, 16), (10_000, 16)] {
+        let net = make_net(n, d, 42);
+        let mut ev = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap();
+        let t0 = Instant::now();
+        for s in 0..steps {
+            ev.step(&drive(s, net.n_axons())).unwrap();
+        }
+        let ev_rate = steps as f64 / t0.elapsed().as_secs_f64();
+        let mut de = DenseEngine::new(&net);
+        let t0 = Instant::now();
+        let dense_steps = steps.min(100);
+        for s in 0..dense_steps {
+            de.step(&drive(s, net.n_axons()));
+        }
+        let de_rate = dense_steps as f64 / t0.elapsed().as_secs_f64();
+        println!("{:>8} {:>12.0} {:>15.1}x", n, de_rate, ev_rate / de_rate);
+    }
+
+    // ---------- 3. slot-strategy ablation
+    println!("\n[3] HBM packing ablation (50k neurons, hub-heavy fan-in)");
+    let mut net = make_net(50_000, 12, 7);
+    // add hub targets to stress slot skew
+    let mut rng = Xorshift32::new(9);
+    for i in 0..net.n_neurons() {
+        if rng.chance(0.3) {
+            let hub = rng.below(16); // first 16 neurons are hubs
+            net.neuron_adj[i].push(Synapse { target: hub, weight: 10 });
+        }
+    }
+    for strat in [SlotStrategy::Modulo, SlotStrategy::BalanceFanIn] {
+        let mut e = CoreEngine::new(&net, strat, RustBackend).unwrap();
+        let t0 = Instant::now();
+        for s in 0..steps {
+            e.step(&drive(s, net.n_axons())).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "  {:?}: density {:.3}, rows/step {:.1}, steps/s {:.0}",
+            strat,
+            e.hbm.image.stats.packing_density,
+            e.counters().hbm_rows() as f64 / steps as f64,
+            steps as f64 / dt
+        );
+    }
+
+    // ---------- 4. XLA backend vs rust backend
+    if do_xla {
+        println!("\n[4] AOT Pallas artifact path (PJRT CPU) vs native backend (10k neurons)");
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("neuron_update_n16384.hlo.txt").exists() {
+            let net = make_net(10_000, 16, 42);
+            let xla_steps = steps.min(100);
+            match Runtime::cpu(&dir).map(std::sync::Arc::new).and_then(|rt| {
+                let backend = XlaBackend::new(rt, net.n_neurons())?;
+                CoreEngine::new(&net, SlotStrategy::BalanceFanIn, backend)
+            }) {
+                Ok(mut e) => {
+                    let t0 = Instant::now();
+                    for s in 0..xla_steps {
+                        e.step(&drive(s, net.n_axons())).unwrap();
+                    }
+                    let dt = t0.elapsed().as_secs_f64();
+                    println!("  xla backend:  {:.0} steps/s", xla_steps as f64 / dt);
+                }
+                Err(e) => println!("  xla backend unavailable: {e:#}"),
+            }
+            let mut e = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap();
+            let t0 = Instant::now();
+            for s in 0..steps {
+                e.step(&drive(s, net.n_axons())).unwrap();
+            }
+            println!(
+                "  rust backend: {:.0} steps/s",
+                steps as f64 / t0.elapsed().as_secs_f64()
+            );
+        } else {
+            println!("  (skipped: run `make artifacts` first)");
+        }
+    }
+
+    // ---------- 5. multi-core scaling
+    // Locality matters: the paper's fabric keeps most traffic on-chip by
+    // partitioning *clustered* networks (cortical-column-like). A uniform
+    // random graph has no cut smaller than ~(1 - 1/k) and inflates HBM
+    // routing when split; a clustered one parallelises.
+    println!("\n[5] multi-core wall-clock scaling (100k neurons, clustered: 95% local)");
+    let net = make_clustered_net(100_000, 8, 6_250, 0.95, 11);
+    for cores in [1usize, 2, 4, 8, 16] {
+        let topo = ClusterTopology { servers: 1, fpgas_per_server: 1, cores_per_fpga: cores };
+        let cap = CoreCapacity {
+            max_neurons: net.n_neurons().div_ceil(cores),
+            max_synapses: usize::MAX,
+        };
+        match MultiCoreEngine::new(&net, topo, cap, SlotStrategy::BalanceFanIn) {
+            Ok(mut mc) => {
+                let t0 = Instant::now();
+                for s in 0..steps.min(100) {
+                    mc.step(&drive(s, net.n_axons())).unwrap();
+                }
+                let dt = t0.elapsed().as_secs_f64();
+                println!("  {cores:>2} cores: {:>8.0} steps/s", steps.min(100) as f64 / dt);
+            }
+            Err(e) => println!("  {cores:>2} cores: {e:#}"),
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! NSG-portal-style job management (paper §3/§5: users submit Python
+//! scripts over the Neuroscience Gateway; here a job is a network file +
+//! a stimulus file executed on the simulated cluster).
+//!
+//! Stimulus format (text, one line per timestep): whitespace-separated
+//! global axon ids to activate that step; blank line = no input. Results
+//! report per-step output spikes and the energy/latency cost.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::energy::EnergyModel;
+use crate::hbm::SlotStrategy;
+use crate::model_fmt::read_hsn;
+use crate::cluster::multicore::MultiCoreEngine;
+use crate::partition::{ClusterTopology, CoreCapacity};
+
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: u64,
+    pub net_path: PathBuf,
+    /// per-step axon activations (ascending ids per step)
+    pub stimulus: Vec<Vec<u32>>,
+    pub topology: ClusterTopology,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed(String),
+}
+
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub status: JobStatus,
+    /// output-neuron spikes per step (global ids)
+    pub spikes: Vec<Vec<u32>>,
+    pub energy_uj: f64,
+    pub latency_us: f64,
+}
+
+/// Parse a stimulus file: one line per step, axon ids separated by
+/// whitespace.
+pub fn parse_stimulus(text: &str) -> Result<Vec<Vec<u32>>> {
+    let mut steps = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.starts_with('#') {
+            continue;
+        }
+        let mut ids = Vec::new();
+        for tok in line.split_whitespace() {
+            ids.push(
+                tok.parse::<u32>()
+                    .with_context(|| format!("stimulus line {}: bad axon id {tok:?}", ln + 1))?,
+            );
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        steps.push(ids);
+    }
+    Ok(steps)
+}
+
+/// Execute one job synchronously.
+pub fn run_job(job: &Job, energy: &EnergyModel) -> JobResult {
+    let inner = || -> Result<(Vec<Vec<u32>>, f64, f64)> {
+        let net = read_hsn(&job.net_path)?;
+        let mut engine = MultiCoreEngine::new(
+            &net,
+            job.topology,
+            CoreCapacity::default(),
+            SlotStrategy::BalanceFanIn,
+        )?;
+        let mut spikes = Vec::with_capacity(job.stimulus.len());
+        for axons in &job.stimulus {
+            spikes.push(engine.step(axons)?.to_vec());
+        }
+        let cost = engine.cost(energy);
+        Ok((spikes, cost.energy_uj, cost.latency_us))
+    };
+    match inner() {
+        Ok((spikes, e, l)) => JobResult {
+            id: job.id,
+            status: JobStatus::Done,
+            spikes,
+            energy_uj: e,
+            latency_us: l,
+        },
+        Err(e) => JobResult {
+            id: job.id,
+            status: JobStatus::Failed(e.to_string()),
+            spikes: Vec::new(),
+            energy_uj: 0.0,
+            latency_us: 0.0,
+        },
+    }
+}
+
+/// A bounded multi-worker job queue (the head-node scheduler).
+pub struct JobQueue {
+    inner: Arc<QueueInner>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct QueueInner {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    energy: EnergyModel,
+}
+
+#[derive(Default)]
+struct QueueState {
+    queue: VecDeque<Job>,
+    results: Vec<JobResult>,
+    shutdown: bool,
+    in_flight: usize,
+}
+
+impl JobQueue {
+    pub fn start(workers: usize, energy: EnergyModel) -> Self {
+        let inner = Arc::new(QueueInner {
+            state: Mutex::new(QueueState::default()),
+            cv: Condvar::new(),
+            energy,
+        });
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let inner = inner.clone();
+                std::thread::spawn(move || worker_loop(inner))
+            })
+            .collect();
+        Self { inner, workers: handles }
+    }
+
+    pub fn submit(&self, job: Job) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.queue.push_back(job);
+        self.inner.cv.notify_one();
+    }
+
+    /// Block until all submitted jobs finish; returns results sorted by id.
+    pub fn drain(&self) -> Vec<JobResult> {
+        let mut st = self.inner.state.lock().unwrap();
+        while !st.queue.is_empty() || st.in_flight > 0 {
+            st = self.inner.cv.wait(st).unwrap();
+        }
+        let mut out = std::mem::take(&mut st.results);
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    pub fn shutdown(mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            self.inner.cv.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<QueueInner>) {
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.queue.pop_front() {
+                    st.in_flight += 1;
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = inner.cv.wait(st).unwrap();
+            }
+        };
+        let result = run_job(&job, &inner.energy);
+        let mut st = inner.state.lock().unwrap();
+        st.results.push(result);
+        st.in_flight -= 1;
+        inner.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_fmt::write_hsn;
+    use crate::snn::{NetworkBuilder, NeuronModel};
+
+    fn tiny_net_path(name: &str) -> PathBuf {
+        let m = NeuronModel::if_neuron(0);
+        let mut b = NetworkBuilder::new();
+        b.add_neuron("x", m, &[("y", 1)]).unwrap();
+        b.add_neuron("y", m, &[]).unwrap();
+        b.add_axon("in", &[("x", 1)]).unwrap();
+        b.add_output("y");
+        let net = b.build().unwrap().0;
+        let p = std::env::temp_dir().join(format!("job_{}_{name}.hsn", std::process::id()));
+        write_hsn(&net, &p).unwrap();
+        p
+    }
+
+    #[test]
+    fn parse_stimulus_lines() {
+        let s = parse_stimulus("0 2 1\n\n# comment\n3\n").unwrap();
+        assert_eq!(s, vec![vec![0, 1, 2], vec![], vec![3]]);
+        assert!(parse_stimulus("xyz").is_err());
+    }
+
+    #[test]
+    fn run_job_propagates_spike() {
+        let p = tiny_net_path("prop");
+        let job = Job {
+            id: 1,
+            net_path: p.clone(),
+            // axon fires at t0: x gets +1 (integrated at end of t0),
+            // x spikes during t1 (1 > 0), y integrates, y spikes at t2
+            stimulus: vec![vec![0], vec![], vec![]],
+            topology: ClusterTopology::single_core(),
+        };
+        let r = run_job(&job, &EnergyModel::default());
+        std::fs::remove_file(&p).ok();
+        assert_eq!(r.status, JobStatus::Done);
+        assert_eq!(r.spikes, vec![vec![], vec![], vec![1]]);
+        assert!(r.energy_uj > 0.0);
+    }
+
+    #[test]
+    fn queue_runs_jobs_in_parallel_and_reports_failures() {
+        let p = tiny_net_path("queue");
+        let q = JobQueue::start(3, EnergyModel::default());
+        for id in 0..6 {
+            q.submit(Job {
+                id,
+                net_path: if id == 3 { PathBuf::from("/nonexistent.hsn") } else { p.clone() },
+                stimulus: vec![vec![0], vec![]],
+                topology: ClusterTopology::single_core(),
+            });
+        }
+        let results = q.drain();
+        q.shutdown();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            if r.id == 3 {
+                assert!(matches!(r.status, JobStatus::Failed(_)));
+            } else {
+                assert_eq!(r.status, JobStatus::Done);
+            }
+        }
+    }
+}

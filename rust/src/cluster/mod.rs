@@ -1,0 +1,9 @@
+//! Cluster orchestration: the multi-core / multi-FPGA / multi-server
+//! execution engine (paper §3, Fig 9) and the NSG-portal-style job queue.
+
+mod jobs;
+mod pool;
+mod multicore;
+
+pub use jobs::{parse_stimulus, run_job, Job, JobQueue, JobResult, JobStatus};
+pub use multicore::{ClusterCost, MultiCoreEngine};

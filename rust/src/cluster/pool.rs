@@ -1,0 +1,266 @@
+//! Persistent core-worker pool.
+//!
+//! §Perf: the first multi-core implementation spawned two `thread::scope`
+//! generations per timestep (one per phase); at 300 steps x 16 cores that
+//! is ~10k thread spawns/s and wall-clock throughput *decreased* with
+//! core count. This pool pins one OS thread per simulated core for the
+//! engine's lifetime and drives phases with a lightweight
+//! generation-counter barrier (Mutex+Condvar, no busy wait).
+//!
+//! Safety model: the pool owns the `CoreEngine`s. `run_phase` hands each
+//! worker a raw pointer to its own engine plus a shared borrow of the
+//! phase input; workers never touch another worker's engine, and the
+//! caller blocks until all workers finish the phase, so no aliasing
+//! outlives the call.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::engine::{CoreEngine, RustBackend};
+
+/// Which phase the workers should run this generation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    Update,
+    Route,
+    Exit,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    start_cv: Condvar,
+    done_cv: Condvar,
+    pending: AtomicUsize,
+    /// per-core routed axon inputs for the Route phase (set by the driver
+    /// before raising the generation).
+    inputs: Mutex<Vec<Vec<u32>>>,
+    /// engines, one slot per core. Workers take a raw pointer to their
+    /// slot; the driver only touches engines between phases.
+    engines: Mutex<Vec<*mut CoreEngine<RustBackend>>>,
+}
+
+// Raw pointers to engines are only dereferenced by their owning worker
+// while the driver is blocked in run_phase.
+unsafe impl Send for Shared {}
+unsafe impl Sync for Shared {}
+
+struct State {
+    generation: u64,
+    phase: Phase,
+    errors: Vec<String>,
+}
+
+pub struct CorePool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// boxed engines; stable addresses for the worker pointers
+    cores: Vec<Box<CoreEngine<RustBackend>>>,
+    n: usize,
+}
+
+impl CorePool {
+    pub fn new(mut cores_in: Vec<CoreEngine<RustBackend>>) -> Self {
+        let n = cores_in.len();
+        let mut cores: Vec<Box<CoreEngine<RustBackend>>> =
+            cores_in.drain(..).map(Box::new).collect();
+        let ptrs: Vec<*mut CoreEngine<RustBackend>> =
+            cores.iter_mut().map(|b| &mut **b as *mut _).collect();
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { generation: 0, phase: Phase::Update, errors: Vec::new() }),
+            start_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            pending: AtomicUsize::new(0),
+            inputs: Mutex::new(vec![Vec::new(); n]),
+            engines: Mutex::new(ptrs),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("hiaer-core-{i}"))
+                    .spawn(move || worker_loop(shared, i))
+                    .expect("spawn core worker")
+            })
+            .collect();
+        Self { shared, workers, cores, n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[allow(dead_code)]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Immutable access between phases.
+    pub fn core(&self, i: usize) -> &CoreEngine<RustBackend> {
+        &self.cores[i]
+    }
+
+    /// Mutable access between phases (reset, counters).
+    pub fn core_mut(&mut self, i: usize) -> &mut CoreEngine<RustBackend> {
+        &mut self.cores[i]
+    }
+
+    fn run_phase(&self, phase: Phase) -> anyhow::Result<()> {
+        let mut st = self.shared.state.lock().unwrap();
+        self.shared.pending.store(self.n, Ordering::SeqCst);
+        st.phase = phase;
+        st.generation += 1;
+        self.shared.start_cv.notify_all();
+        while self.shared.pending.load(Ordering::SeqCst) != 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        if !st.errors.is_empty() {
+            let msg = st.errors.join("; ");
+            st.errors.clear();
+            return Err(anyhow::anyhow!("core worker error: {msg}"));
+        }
+        Ok(())
+    }
+
+    /// Phase A: membrane sweep on every core.
+    pub fn phase_update(&self) -> anyhow::Result<()> {
+        self.run_phase(Phase::Update)
+    }
+
+    /// Phase B: routing + accumulate, with per-core axon inputs.
+    pub fn phase_route(&self, inputs: &[Vec<u32>]) -> anyhow::Result<()> {
+        {
+            let mut slot = self.shared.inputs.lock().unwrap();
+            for (dst, src) in slot.iter_mut().zip(inputs) {
+                dst.clear();
+                dst.extend_from_slice(src);
+            }
+        }
+        self.run_phase(Phase::Route)
+    }
+}
+
+impl Drop for CorePool {
+    fn drop(&mut self) {
+        let _ = self.run_phase(Phase::Exit);
+        for w in self.workers.drain(..) {
+            w.join().ok();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, idx: usize) {
+    let engine: *mut CoreEngine<RustBackend> = shared.engines.lock().unwrap()[idx];
+    let mut seen_gen = 0u64;
+    let mut axon_buf: Vec<u32> = Vec::new();
+    loop {
+        let phase = {
+            let mut st = shared.state.lock().unwrap();
+            while st.generation == seen_gen {
+                st = shared.start_cv.wait(st).unwrap();
+            }
+            seen_gen = st.generation;
+            st.phase
+        };
+        if phase == Phase::Exit {
+            shared.pending.fetch_sub(1, Ordering::SeqCst);
+            shared.done_cv.notify_all();
+            return;
+        }
+        // SAFETY: this worker is the only one holding engine `idx`, and
+        // the driver is blocked until `pending` reaches zero.
+        let result = unsafe {
+            let e = &mut *engine;
+            match phase {
+                Phase::Update => e.phase_update(),
+                Phase::Route => {
+                    // copy this core's inputs out and RELEASE the lock —
+                    // holding it across phase_route would serialise the
+                    // whole phase across workers (§Perf iteration 2).
+                    axon_buf.clear();
+                    {
+                        let inputs = shared.inputs.lock().unwrap();
+                        axon_buf.extend_from_slice(&inputs[idx]);
+                    }
+                    e.phase_route(&axon_buf)
+                }
+                Phase::Exit => unreachable!(),
+            }
+        };
+        if let Err(err) = result {
+            shared.state.lock().unwrap().errors.push(format!("core {idx}: {err:#}"));
+        }
+        if shared.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _guard = shared.state.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hbm::SlotStrategy;
+    use crate::snn::{Network, NeuronModel, Synapse};
+    use crate::util::prng::Xorshift32;
+
+    fn small_net(seed: u32) -> Network {
+        let mut rng = Xorshift32::new(seed);
+        let n = 40;
+        let mut net = Network {
+            params: vec![NeuronModel::if_neuron(5); n],
+            neuron_adj: vec![Vec::new(); n],
+            axon_adj: vec![vec![Synapse { target: 0, weight: 10 }]],
+            outputs: vec![0, 1],
+            base_seed: seed,
+        };
+        for i in 0..n {
+            for _ in 0..4 {
+                net.neuron_adj[i]
+                    .push(Synapse { target: rng.below(n as u32), weight: rng.range_i32(1, 9) as i16 });
+            }
+        }
+        net
+    }
+
+    #[test]
+    fn pool_matches_direct_execution() {
+        let nets: Vec<Network> = (0..4).map(|i| small_net(i)).collect();
+        let mut direct: Vec<CoreEngine<RustBackend>> = nets
+            .iter()
+            .map(|n| CoreEngine::new(n, SlotStrategy::Modulo, RustBackend).unwrap())
+            .collect();
+        let pooled: Vec<CoreEngine<RustBackend>> = nets
+            .iter()
+            .map(|n| CoreEngine::new(n, SlotStrategy::Modulo, RustBackend).unwrap())
+            .collect();
+        let mut pool = CorePool::new(pooled);
+        for step in 0..20 {
+            let inputs: Vec<Vec<u32>> =
+                (0..4).map(|c| if (step + c) % 3 == 0 { vec![0u32] } else { vec![] }).collect();
+            for (c, e) in direct.iter_mut().enumerate() {
+                e.phase_update().unwrap();
+                e.phase_route(&inputs[c]).unwrap();
+            }
+            pool.phase_update().unwrap();
+            pool.phase_route(&inputs).unwrap();
+            for c in 0..4 {
+                assert_eq!(pool.core(c).v, direct[c].v, "core {c} step {step}");
+            }
+        }
+        // mutable access between phases works
+        pool.core_mut(0).reset();
+        assert!(pool.core(0).v.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn pool_shuts_down_cleanly() {
+        let nets: Vec<Network> = (0..2).map(small_net).collect();
+        let engines = nets
+            .iter()
+            .map(|n| CoreEngine::new(n, SlotStrategy::Modulo, RustBackend).unwrap())
+            .collect();
+        let pool = CorePool::new(engines);
+        pool.phase_update().unwrap();
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,516 @@
+//! PyTorch-model -> HiAER-Spike network conversion (Supplementary A.2).
+//!
+//! The Python training pipeline exports a quantized feed-forward layer
+//! graph (`.hsl`); this module maps it onto axons/neurons/synapses:
+//!
+//! * the input image becomes one axon per (channel, y, x) pixel;
+//! * each conv layer's output feature-map pixels become neurons; a
+//!   sliding window over an index tensor (exactly the A.2 technique)
+//!   connects every presynaptic axon/neuron in the receptive field to the
+//!   feature-map neuron with the kernel weight;
+//! * max-pool layers become threshold-OR neurons (theta = 0, weight 1 —
+//!   they spike iff any input in the window spiked, exact for binary
+//!   activations);
+//! * fully-connected layers get all-to-all synapses;
+//! * biases are subtracted from the neuron threshold (the A.2 first
+//!   method) or attached to an always-on bias axon (second method).
+//!
+//! Neuron models: ANN binary neurons for binarized-MNIST style models,
+//! IF neurons (LIF with lam = 63) for rate-coded spiking CNNs.
+
+use anyhow::{bail, Result};
+
+use crate::model_fmt::{Layer, LayerGraph, NeuronKind};
+use crate::snn::{Network, NeuronModel, Synapse, WEIGHT_MAX, WEIGHT_MIN};
+
+/// How to realise trained biases in the spiking network (Supp A.2 lists
+/// both; the threshold method is exact and free, the axon method keeps
+/// thresholds uniform at the cost of one always-active axon).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BiasMode {
+    /// theta_i = layer_theta - bias_i
+    Threshold,
+    /// A dedicated axon (activated every timestep by the runner) carries
+    /// weight = bias_i to each biased neuron.
+    Axon,
+}
+
+/// Conversion result: the network plus the index maps the runner needs.
+#[derive(Clone, Debug)]
+pub struct Converted {
+    pub net: Network,
+    /// Axon id of input pixel (c, y, x) = c*H*W + y*W + x.
+    pub n_input_axons: usize,
+    /// Present when BiasMode::Axon was used: activate this axon every step.
+    pub bias_axon: Option<u32>,
+    /// Neuron ids of the final layer (the model outputs, in order).
+    pub output_neurons: Vec<u32>,
+    /// Trained bias of each output neuron. In `BiasMode::Threshold` the
+    /// bias is folded into the threshold, which preserves *spiking*
+    /// exactly but drops out of the raw membrane value; the membrane
+    /// readout must add it back (`scores = V + output_bias`).
+    pub output_bias: Vec<i32>,
+    /// Rate-coding timesteps the model was trained for.
+    pub timesteps: usize,
+}
+
+/// Convert a trained layer graph into a flat HiAER-Spike network.
+pub fn convert(graph: &LayerGraph, bias_mode: BiasMode, base_seed: u32) -> Result<Converted> {
+    let shapes = graph.shapes()?;
+    let n_inputs = graph.n_inputs();
+
+    // count neurons: every layer's output elements
+    let mut layer_base = Vec::with_capacity(graph.layers.len());
+    let mut total = 0usize;
+    for s in &shapes[1..] {
+        layer_base.push(total);
+        total += count(s);
+    }
+
+    let neuron_model = |theta: i32| -> NeuronModel {
+        match graph.neuron_kind {
+            NeuronKind::AnnBinary => NeuronModel::ann(theta, 0, false).expect("nu=0 valid"),
+            NeuronKind::IntegrateFire => NeuronModel::if_neuron(theta),
+        }
+    };
+
+    let mut params: Vec<NeuronModel> = vec![neuron_model(0); total];
+    let mut neuron_adj: Vec<Vec<Synapse>> = vec![Vec::new(); total];
+    let n_axons = n_inputs + usize::from(bias_mode == BiasMode::Axon);
+    let mut axon_adj: Vec<Vec<Synapse>> = vec![Vec::new(); n_axons];
+    let bias_axon = (bias_mode == BiasMode::Axon).then_some(n_inputs as u32);
+
+    // Push a synapse from presynaptic element `pre` (layer -1 = axons) to
+    // neuron `post`.
+    let connect = |pre_layer: isize,
+                       pre_idx: usize,
+                       post: usize,
+                       w: i32,
+                       layer_base: &[usize],
+                       neuron_adj: &mut Vec<Vec<Synapse>>,
+                       axon_adj: &mut Vec<Vec<Synapse>>|
+     -> Result<()> {
+        if w == 0 {
+            return Ok(()); // pruned — adjacency lists store sparse nets
+        }
+        if !(WEIGHT_MIN..=WEIGHT_MAX).contains(&w) {
+            bail!("weight {w} outside int16 after quantization");
+        }
+        let syn = Synapse { target: post as u32, weight: w as i16 };
+        if pre_layer < 0 {
+            axon_adj[pre_idx].push(syn);
+        } else {
+            neuron_adj[layer_base[pre_layer as usize] + pre_idx].push(syn);
+        }
+        Ok(())
+    };
+
+    for (li, layer) in graph.layers.iter().enumerate() {
+        let (ic, ih, iw) = shapes[li];
+        let (oc, oh, ow) = shapes[li + 1];
+        let pre_layer = li as isize - 1;
+        let base = layer_base[li];
+        match layer {
+            Layer::Conv { out_c, kh, kw, stride, pad, theta, weights, bias } => {
+                debug_assert_eq!(*out_c, oc);
+                for f in 0..oc {
+                    let b = bias.as_ref().map(|b| b[f]).unwrap_or(0);
+                    let th = match bias_mode {
+                        BiasMode::Threshold => theta.saturating_sub(b),
+                        BiasMode::Axon => *theta,
+                    };
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let post = base + (f * oh + oy) * ow + ox;
+                            params[post] = neuron_model(th);
+                            if bias_mode == BiasMode::Axon && b != 0 {
+                                axon_adj[n_inputs].push(Synapse {
+                                    target: post as u32,
+                                    weight: b.clamp(WEIGHT_MIN, WEIGHT_MAX) as i16,
+                                });
+                            }
+                            // sliding window over the input index tensor
+                            for c in 0..ic {
+                                for ky in 0..*kh {
+                                    for kx in 0..*kw {
+                                        let y = (oy * stride + ky) as isize - *pad as isize;
+                                        let x = (ox * stride + kx) as isize - *pad as isize;
+                                        if y < 0 || x < 0 || y >= ih as isize || x >= iw as isize
+                                        {
+                                            continue;
+                                        }
+                                        let pre = (c * ih + y as usize) * iw + x as usize;
+                                        let w = weights
+                                            [((f * ic + c) * kh + ky) * kw + kx]
+                                            as i32;
+                                        connect(
+                                            pre_layer,
+                                            pre,
+                                            post,
+                                            w,
+                                            &layer_base,
+                                            &mut neuron_adj,
+                                            &mut axon_adj,
+                                        )?;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Layer::Fc { out_features, theta, weights, bias } => {
+                let in_features = if ih == usize::MAX { ic } else { ic * ih * iw };
+                for o in 0..*out_features {
+                    let b = bias.as_ref().map(|b| b[o]).unwrap_or(0);
+                    let th = match bias_mode {
+                        BiasMode::Threshold => theta.saturating_sub(b),
+                        BiasMode::Axon => *theta,
+                    };
+                    let post = base + o;
+                    params[post] = neuron_model(th);
+                    if bias_mode == BiasMode::Axon && b != 0 {
+                        axon_adj[n_inputs].push(Synapse {
+                            target: post as u32,
+                            weight: b.clamp(WEIGHT_MIN, WEIGHT_MAX) as i16,
+                        });
+                    }
+                    for i in 0..in_features {
+                        let w = weights[o * in_features + i] as i32;
+                        connect(
+                            pre_layer,
+                            i,
+                            post,
+                            w,
+                            &layer_base,
+                            &mut neuron_adj,
+                            &mut axon_adj,
+                        )?;
+                    }
+                }
+            }
+            Layer::MaxPool { k, stride } => {
+                // threshold-OR: theta=0 (strict >, weight 1 => spikes iff
+                // any input spiked)
+                for c in 0..oc {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let post = base + (c * oh + oy) * ow + ox;
+                            params[post] = neuron_model(0);
+                            for ky in 0..*k {
+                                for kx in 0..*k {
+                                    let y = oy * stride + ky;
+                                    let x = ox * stride + kx;
+                                    if y >= ih || x >= iw {
+                                        continue;
+                                    }
+                                    let pre = (c * ih + y) * iw + x;
+                                    connect(
+                                        pre_layer,
+                                        pre,
+                                        post,
+                                        1,
+                                        &layer_base,
+                                        &mut neuron_adj,
+                                        &mut axon_adj,
+                                    )?;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let last_base = *layer_base.last().unwrap_or(&0);
+    let out_count = count(shapes.last().unwrap());
+    let output_neurons: Vec<u32> = (last_base..last_base + out_count).map(|i| i as u32).collect();
+    // In Axon mode the bias axon already delivers b into the membrane, so
+    // the readout correction applies to Threshold mode only.
+    let output_bias: Vec<i32> = match (bias_mode, graph.layers.last()) {
+        (BiasMode::Threshold, Some(Layer::Fc { bias: Some(b), .. })) => b.clone(),
+        (BiasMode::Threshold, Some(Layer::Conv { bias: Some(b), out_c, .. })) => {
+            // per-feature-map bias broadcast over positions
+            let per_map = out_count / out_c;
+            (0..out_count).map(|i| b[i / per_map]).collect()
+        }
+        _ => vec![0; out_count],
+    };
+
+    let net = Network {
+        params,
+        neuron_adj,
+        axon_adj,
+        outputs: output_neurons.clone(),
+        base_seed,
+    };
+    net.validate().map_err(|e| anyhow::anyhow!("converted network invalid: {e}"))?;
+    Ok(Converted {
+        net,
+        n_input_axons: n_inputs,
+        bias_axon,
+        output_neurons,
+        output_bias,
+        timesteps: graph.timesteps.max(1),
+    })
+}
+
+fn count(s: &(usize, usize, usize)) -> usize {
+    if s.1 == usize::MAX {
+        s.0
+    } else {
+        s.0 * s.1 * s.2
+    }
+}
+
+/// Direct (dense, float-free) forward pass of the layer graph over a
+/// binary input — the oracle the converter is tested against: running the
+/// converted network for one step per layer must reproduce these
+/// activations exactly (binary neurons).
+pub fn reference_forward_binary(graph: &LayerGraph, input: &[i32]) -> Result<Vec<Vec<i32>>> {
+    let shapes = graph.shapes()?;
+    let mut act: Vec<i32> = input.to_vec();
+    let mut all = Vec::new();
+    for (li, layer) in graph.layers.iter().enumerate() {
+        let (ic, ih, iw) = shapes[li];
+        let (oc, oh, ow) = shapes[li + 1];
+        let next = match layer {
+            Layer::Conv { kh, kw, stride, pad, theta, weights, bias, .. } => {
+                let mut out = vec![0i32; oc * oh * ow];
+                for f in 0..oc {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let mut acc: i64 =
+                                bias.as_ref().map(|b| b[f] as i64).unwrap_or(0);
+                            for c in 0..ic {
+                                for ky in 0..*kh {
+                                    for kx in 0..*kw {
+                                        let y = (oy * stride + ky) as isize - *pad as isize;
+                                        let x = (ox * stride + kx) as isize - *pad as isize;
+                                        if y < 0
+                                            || x < 0
+                                            || y >= ih as isize
+                                            || x >= iw as isize
+                                        {
+                                            continue;
+                                        }
+                                        let pre = (c * ih + y as usize) * iw + x as usize;
+                                        acc += act[pre] as i64
+                                            * weights[((f * ic + c) * kh + ky) * kw + kx]
+                                                as i64;
+                                    }
+                                }
+                            }
+                            out[(f * oh + oy) * ow + ox] = (acc > *theta as i64) as i32;
+                        }
+                    }
+                }
+                out
+            }
+            Layer::Fc { out_features, theta, weights, bias } => {
+                let in_features = act.len();
+                let mut out = vec![0i32; *out_features];
+                for o in 0..*out_features {
+                    let mut acc: i64 = bias.as_ref().map(|b| b[o] as i64).unwrap_or(0);
+                    for i in 0..in_features {
+                        acc += act[i] as i64 * weights[o * in_features + i] as i64;
+                    }
+                    out[o] = (acc > *theta as i64) as i32;
+                }
+                out
+            }
+            Layer::MaxPool { k, stride } => {
+                let mut out = vec![0i32; oc * oh * ow];
+                for c in 0..oc {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let mut m = 0;
+                            for ky in 0..*k {
+                                for kx in 0..*k {
+                                    let y = oy * stride + ky;
+                                    let x = ox * stride + kx;
+                                    if y < ih && x < iw {
+                                        m = m.max(act[(c * ih + y) * iw + x]);
+                                    }
+                                }
+                            }
+                            out[(c * oh + oy) * ow + ox] = m;
+                        }
+                    }
+                }
+                out
+            }
+        };
+        act = next.clone();
+        all.push(next);
+    }
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::DenseEngine;
+    use crate::util::prng::Xorshift32;
+    use crate::util::ptest;
+
+    fn random_graph(rng: &mut Xorshift32, kind: NeuronKind) -> LayerGraph {
+        let in_c = 1 + rng.below(2) as usize;
+        let in_h = 6 + rng.below(6) as usize;
+        let in_w = in_h;
+        let mut layers = Vec::new();
+        let (mut c, mut h, mut w) = (in_c, in_h, in_w);
+        // conv
+        let out_c = 1 + rng.below(4) as usize;
+        let k = 3;
+        let stride = 1 + rng.below(2) as usize;
+        let pad = rng.below(2) as usize;
+        let weights: Vec<i16> =
+            (0..out_c * c * k * k).map(|_| rng.range_i32(-40, 40) as i16).collect();
+        let bias = rng
+            .chance(0.5)
+            .then(|| (0..out_c).map(|_| rng.range_i32(-50, 50)).collect::<Vec<i32>>());
+        layers.push(Layer::Conv {
+            out_c,
+            kh: k,
+            kw: k,
+            stride,
+            pad,
+            theta: rng.range_i32(-5, 30),
+            weights,
+            bias,
+        });
+        h = (h + 2 * pad - k) / stride + 1;
+        w = (w + 2 * pad - k) / stride + 1;
+        c = out_c;
+        // optional pool
+        if rng.chance(0.5) && h >= 2 && w >= 2 {
+            layers.push(Layer::MaxPool { k: 2, stride: 2 });
+            h = (h - 2) / 2 + 1;
+            w = (w - 2) / 2 + 1;
+        }
+        // fc head
+        let in_features = c * h * w;
+        let out_features = 3;
+        let weights: Vec<i16> =
+            (0..out_features * in_features).map(|_| rng.range_i32(-30, 30) as i16).collect();
+        layers.push(Layer::Fc {
+            out_features,
+            theta: rng.range_i32(-5, 40),
+            weights,
+            bias: Some((0..out_features).map(|_| rng.range_i32(-40, 40)).collect()),
+        });
+        LayerGraph { neuron_kind: kind, in_c, in_h, in_w, timesteps: 1, layers }
+    }
+
+    /// Run the converted network with the dense engine: present the input
+    /// for one step, then propagate one extra step per layer; collect each
+    /// layer's spike wave. ANN binary neurons make the network a pure
+    /// pipeline, so layer L's activations appear at step L.
+    fn run_converted_binary(conv: &Converted, graph: &LayerGraph, input: &[i32]) -> Vec<Vec<i32>> {
+        let mut e = DenseEngine::new(&conv.net);
+        let axons: Vec<u32> = input
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b != 0)
+            .map(|(i, _)| i as u32)
+            .chain(conv.bias_axon.iter().copied())
+            .collect();
+        let shapes = graph.shapes().unwrap();
+        let sizes: Vec<usize> = shapes[1..].iter().map(count).collect();
+        let mut base = Vec::new();
+        let mut acc = 0;
+        for s in &sizes {
+            base.push(acc);
+            acc += s;
+        }
+        // inputs presented at step 0 integrate at the END of step 0, so
+        // layer li's data-driven wave fires during step li + 1.
+        let mut waves = Vec::new();
+        for t in 0..=graph.layers.len() {
+            let inputs: Vec<u32> = if t == 0 {
+                axons.clone()
+            } else {
+                conv.bias_axon.iter().copied().collect()
+            };
+            e.step(&inputs);
+            if t >= 1 {
+                let li = t - 1;
+                let mut layer = vec![0i32; sizes[li]];
+                for &f in &e.fired() {
+                    let f = f as usize;
+                    if f >= base[li] && f < base[li] + sizes[li] {
+                        layer[f - base[li]] = 1;
+                    }
+                }
+                waves.push(layer);
+            }
+        }
+        waves
+    }
+
+    #[test]
+    fn prop_converted_network_matches_reference_forward() {
+        ptest::check("convert_equals_reference", 20, |rng| {
+            let graph = random_graph(rng, NeuronKind::AnnBinary);
+            let conv = convert(&graph, BiasMode::Threshold, 0)
+                .map_err(|e| format!("convert: {e}"))?;
+            let n_in = graph.n_inputs();
+            let input: Vec<i32> = (0..n_in).map(|_| rng.chance(0.3) as i32).collect();
+            let want = reference_forward_binary(&graph, &input)
+                .map_err(|e| format!("ref: {e}"))?;
+            let got = run_converted_binary(&conv, &graph, &input);
+            for (li, (w, g)) in want.iter().zip(&got).enumerate() {
+                ptest::prop_assert_eq(g.clone(), w.clone(), &format!("layer {li}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bias_modes_agree_on_binary_pipeline() {
+        ptest::check("bias_threshold_equals_axon", 10, |rng| {
+            let graph = random_graph(rng, NeuronKind::AnnBinary);
+            let a = convert(&graph, BiasMode::Threshold, 0).map_err(|e| e.to_string())?;
+            let b = convert(&graph, BiasMode::Axon, 0).map_err(|e| e.to_string())?;
+            let n_in = graph.n_inputs();
+            let input: Vec<i32> = (0..n_in).map(|_| rng.chance(0.3) as i32).collect();
+            let wa = run_converted_binary(&a, &graph, &input);
+            let wb = run_converted_binary(&b, &graph, &input);
+            ptest::prop_assert_eq(wa.last().cloned(), wb.last().cloned(), "final layer")
+        });
+    }
+
+    #[test]
+    fn pruned_zero_weights_not_stored() {
+        let graph = LayerGraph {
+            neuron_kind: NeuronKind::AnnBinary,
+            in_c: 1,
+            in_h: 2,
+            in_w: 2,
+            timesteps: 1,
+            layers: vec![Layer::Fc {
+                out_features: 2,
+                theta: 0,
+                weights: vec![1, 0, 0, 0, 0, 0, 0, 2],
+                bias: None,
+            }],
+        };
+        let conv = convert(&graph, BiasMode::Threshold, 0).unwrap();
+        assert_eq!(conv.net.n_synapses(), 2);
+    }
+
+    #[test]
+    fn output_neurons_are_last_layer() {
+        let mut rng = Xorshift32::new(5);
+        let graph = random_graph(&mut rng, NeuronKind::IntegrateFire);
+        let conv = convert(&graph, BiasMode::Threshold, 0).unwrap();
+        assert_eq!(conv.output_neurons.len(), 3);
+        assert_eq!(conv.net.outputs, conv.output_neurons);
+        assert_eq!(conv.timesteps, 1);
+    }
+}
+
+pub mod runner;
+pub use runner::{run_inference, Inference, Readout};

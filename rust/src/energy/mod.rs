@@ -1,0 +1,92 @@
+//! Energy & latency model (paper §6).
+//!
+//! The paper derives **energy** as `(HBM accesses per inference) x (energy
+//! per HBM access)` and **latency** from FPGA-reported clock cycles. We do
+//! exactly that over the counters the HBM/engine simulation produces.
+//!
+//! The absolute constants are substrate calibration (documented in
+//! DESIGN.md §Calibration): they set the scale of the numbers, while the
+//! *shape* the paper demonstrates — linearity in neuron count, per-model
+//! cost ordering, platform-comparison magnitudes — comes from the counted
+//! accesses themselves.
+
+use crate::hbm::AccessCounters;
+
+/// Calibrated energy/latency constants for the simulated substrate.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// Energy per HBM row access (nJ). HBM2 ≈ 3.9 pJ/bit -> ≈ 1 nJ per
+    /// 32-byte slot row including controller overhead; tuned to land the
+    /// small-MLP benchmark near the paper's ~1 uJ.
+    pub e_hbm_row_nj: f64,
+    /// Energy per URAM access (nJ) — on-chip, ~50x cheaper than HBM.
+    pub e_uram_nj: f64,
+    /// Energy per BRAM access (nJ).
+    pub e_bram_nj: f64,
+    /// Core clock (Hz) for converting cycles to latency.
+    pub clk_hz: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self { e_hbm_row_nj: 0.75, e_uram_nj: 0.015, e_bram_nj: 0.01, clk_hz: 700e6 }
+    }
+}
+
+/// Per-inference (or per-step) cost report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CostReport {
+    pub hbm_rows: u64,
+    pub events: u64,
+    pub cycles: u64,
+    pub energy_uj: f64,
+    pub latency_us: f64,
+}
+
+impl EnergyModel {
+    pub fn cost(&self, counters: &AccessCounters, cycles: u64) -> CostReport {
+        let hbm = counters.hbm_rows();
+        let energy_nj = hbm as f64 * self.e_hbm_row_nj
+            + counters.uram_accesses as f64 * self.e_uram_nj
+            + counters.bram_accesses as f64 * self.e_bram_nj;
+        CostReport {
+            hbm_rows: hbm,
+            events: counters.events,
+            cycles,
+            energy_uj: energy_nj / 1000.0,
+            latency_us: cycles as f64 / self.clk_hz * 1e6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_dominated_by_hbm() {
+        let m = EnergyModel::default();
+        let c = AccessCounters {
+            pointer_rows: 100,
+            synapse_rows: 900,
+            events: 5000,
+            uram_accesses: 1000,
+            bram_accesses: 100,
+        };
+        let r = m.cost(&c, 10_000);
+        // HBM: 1000 rows * 0.75 nJ = 750 nJ; on-chip: 1000*0.015 + 100*0.01 = 16 nJ
+        assert!((r.energy_uj - 0.766).abs() < 1e-9);
+        assert!(r.latency_us > 0.0);
+        assert_eq!(r.hbm_rows, 1000);
+    }
+
+    #[test]
+    fn latency_scales_with_cycles() {
+        let m = EnergyModel::default();
+        let c = AccessCounters::default();
+        let r1 = m.cost(&c, 700);
+        let r2 = m.cost(&c, 7000);
+        assert!((r2.latency_us / r1.latency_us - 10.0).abs() < 1e-9);
+        assert!((r1.latency_us - 1.0).abs() < 1e-9); // 700 cycles at 700 MHz = 1 us
+    }
+}

@@ -1,0 +1,186 @@
+//! The membrane-update compute backend: phases 1-3 (noise, spike+reset,
+//! leak) and phase 4 (synaptic accumulate).
+//!
+//! Two implementations exist:
+//! * [`RustBackend`] — native scalar loop, bit-exact with the Pallas
+//!   kernel and `ref.py` (see `util::prng`);
+//! * [`crate::runtime::XlaBackend`] — executes the AOT-compiled JAX/Pallas
+//!   artifacts via PJRT (the "FPGA bitstream" of this reproduction).
+//!
+//! Cross-backend parity is enforced by `rust/tests/parity.rs`.
+
+use crate::snn::{Network, FLAG_LIF, FLAG_NOISE};
+use crate::util::prng::{noise17, shift_noise};
+
+/// SoA per-neuron parameters, the engine-side mirror of the HBM
+/// neuron-model section.
+#[derive(Clone, Debug, Default)]
+pub struct CoreParams {
+    pub theta: Vec<i32>,
+    pub nu: Vec<i32>,
+    pub lam: Vec<i32>,
+    pub flags: Vec<u32>,
+}
+
+impl CoreParams {
+    pub fn from_network(net: &Network) -> Self {
+        let n = net.n_neurons();
+        let mut p = CoreParams {
+            theta: Vec::with_capacity(n),
+            nu: Vec::with_capacity(n),
+            lam: Vec::with_capacity(n),
+            flags: Vec::with_capacity(n),
+        };
+        for m in &net.params {
+            p.theta.push(m.theta);
+            p.nu.push(m.nu);
+            p.lam.push(m.lam);
+            p.flags.push(m.flags);
+        }
+        p
+    }
+
+    pub fn len(&self) -> usize {
+        self.theta.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.theta.is_empty()
+    }
+}
+
+/// Backend for the two compute phases of a timestep.
+pub trait UpdateBackend {
+    /// Phases 1-3 over all neurons. Updates `v` in place and writes the
+    /// 0/1 spike mask into `spikes`.
+    fn update(
+        &mut self,
+        v: &mut [i32],
+        params: &CoreParams,
+        step_seed: u32,
+        spikes: &mut [i32],
+    ) -> anyhow::Result<()>;
+
+    /// Phase 4: `v[targets[k]] += weights[k]` (wrapping int32).
+    fn accumulate(
+        &mut self,
+        v: &mut [i32],
+        targets: &[u32],
+        weights: &[i32],
+    ) -> anyhow::Result<()>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Native scalar implementation — the reference semantics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RustBackend;
+
+impl UpdateBackend for RustBackend {
+    fn update(
+        &mut self,
+        v: &mut [i32],
+        params: &CoreParams,
+        step_seed: u32,
+        spikes: &mut [i32],
+    ) -> anyhow::Result<()> {
+        debug_assert_eq!(v.len(), params.len());
+        debug_assert_eq!(spikes.len(), v.len());
+        for i in 0..v.len() {
+            let flags = params.flags[i];
+            let mut x = v[i];
+            // 1. noise
+            if flags & FLAG_NOISE != 0 {
+                x = x.wrapping_add(shift_noise(noise17(step_seed, i as u32), params.nu[i]));
+            }
+            // 2. spike + reset (strict >)
+            let s = (x > params.theta[i]) as i32;
+            if s != 0 {
+                x = 0;
+            }
+            // 3. leak / clear
+            if flags & FLAG_LIF != 0 {
+                x -= x >> params.lam[i].clamp(0, 31);
+            } else {
+                x = 0;
+            }
+            v[i] = x;
+            spikes[i] = s;
+        }
+        Ok(())
+    }
+
+    fn accumulate(
+        &mut self,
+        v: &mut [i32],
+        targets: &[u32],
+        weights: &[i32],
+    ) -> anyhow::Result<()> {
+        debug_assert_eq!(targets.len(), weights.len());
+        for (&t, &w) in targets.iter().zip(weights) {
+            let slot = &mut v[t as usize];
+            *slot = slot.wrapping_add(w);
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::NeuronModel;
+
+    fn params_of(models: &[NeuronModel]) -> CoreParams {
+        let mut p = CoreParams::default();
+        for m in models {
+            p.theta.push(m.theta);
+            p.nu.push(m.nu);
+            p.lam.push(m.lam);
+            p.flags.push(m.flags);
+        }
+        p
+    }
+
+    #[test]
+    fn strict_threshold_and_reset() {
+        let m = NeuronModel::if_neuron(100);
+        let p = params_of(&[m, m, m]);
+        let mut v = vec![100, 101, 99];
+        let mut s = vec![0; 3];
+        RustBackend.update(&mut v, &p, 1, &mut s).unwrap();
+        assert_eq!(s, vec![0, 1, 0]);
+        assert_eq!(v, vec![100, 0, 99]); // lam=63 -> clamp 31 -> v -= v>>31 = v
+    }
+
+    #[test]
+    fn ann_clears() {
+        let m = NeuronModel::ann(1000, 0, false).unwrap();
+        let p = params_of(&[m]);
+        let mut v = vec![37];
+        let mut s = vec![0];
+        RustBackend.update(&mut v, &p, 1, &mut s).unwrap();
+        assert_eq!(v, vec![0]);
+        assert_eq!(s, vec![0]);
+    }
+
+    #[test]
+    fn lif_leak_floor() {
+        let m = NeuronModel::lif(1 << 30, 0, 2, false).unwrap();
+        let p = params_of(&[m, m]);
+        let mut v = vec![1000, -1000];
+        let mut s = vec![0; 2];
+        RustBackend.update(&mut v, &p, 1, &mut s).unwrap();
+        assert_eq!(v, vec![750, -750]); // floor division both signs
+    }
+
+    #[test]
+    fn accumulate_wraps() {
+        let mut v = vec![i32::MAX, 0];
+        RustBackend.accumulate(&mut v, &[0, 1, 1], &[1, 5, -2]).unwrap();
+        assert_eq!(v, vec![i32::MIN, 3]);
+    }
+}

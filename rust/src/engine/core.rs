@@ -1,0 +1,326 @@
+//! The event-driven single-core engine: two-phase HBM spike routing
+//! (paper §4) with access and cycle accounting.
+//!
+//! Step structure (matches the hardware, Fig 8 and the dense engine
+//! bit-for-bit):
+//!
+//! 1. **membrane sweep** — phases 1-3 via the pluggable
+//!    [`UpdateBackend`] (native Rust or the AOT Pallas artifact through
+//!    PJRT). URAM read+write per neuron.
+//! 2. **phase 1 routing** — for every fired axon (BRAM spike registers)
+//!    and fired neuron, fetch its HBM pointer; pointer-row reads are
+//!    burst-deduplicated (16 pointers/row).
+//! 3. **phase 2 routing** — stream each pointer's synapse-region rows,
+//!    gathering (target, weight) events.
+//! 4. **accumulate** — scatter the gathered events into V via the backend.
+//!
+//! The engine never allocates in the hot loop after warm-up: all queues
+//! and gather buffers are reused.
+
+use crate::energy::{CostReport, EnergyModel};
+use crate::engine::backend::{CoreParams, UpdateBackend};
+use crate::hbm::{AccessCounters, HbmImage, HbmSim, Pointer, SlotStrategy};
+use crate::snn::Network;
+use crate::util::prng::mix_seed;
+
+/// Result of one engine step (borrowed views into reusable buffers).
+#[derive(Debug)]
+pub struct StepOutput<'a> {
+    /// Fired neuron ids, ascending.
+    pub fired: &'a [u32],
+    /// Fired output neurons (subset of `fired`).
+    pub output_spikes: &'a [u32],
+}
+
+/// Event-driven execution of one core.
+pub struct CoreEngine<B: UpdateBackend> {
+    pub hbm: HbmSim,
+    params: CoreParams,
+    pub v: Vec<i32>,
+    backend: B,
+    pub base_seed: u32,
+    pub step_num: u32,
+    /// Cycle counter since the last `reset_cost()`.
+    pub cycles: u64,
+    is_output: Vec<bool>,
+    // reusable buffers
+    spike_mask: Vec<i32>,
+    fired_buf: Vec<u32>,
+    fired_sorted: Vec<u32>,
+    out_buf: Vec<u32>,
+    ptr_queue: Vec<Pointer>,
+    targets: Vec<u32>,
+    weights: Vec<i32>,
+}
+
+impl<B: UpdateBackend> CoreEngine<B> {
+    pub fn new(net: &Network, strategy: SlotStrategy, backend: B) -> anyhow::Result<Self> {
+        let image = HbmImage::compile(net, strategy)?;
+        Ok(Self::from_image(net, image, backend))
+    }
+
+    pub fn from_image(net: &Network, image: HbmImage, backend: B) -> Self {
+        let n = net.n_neurons();
+        let mut is_output = vec![false; n];
+        for &o in &net.outputs {
+            is_output[o as usize] = true;
+        }
+        Self {
+            hbm: HbmSim::new(image),
+            params: CoreParams::from_network(net),
+            v: vec![0; n],
+            backend,
+            base_seed: net.base_seed,
+            step_num: 0,
+            cycles: 0,
+            is_output,
+            spike_mask: vec![0; n],
+            fired_buf: Vec::with_capacity(n),
+            fired_sorted: Vec::with_capacity(n),
+            out_buf: Vec::new(),
+            ptr_queue: Vec::new(),
+            targets: Vec::new(),
+            weights: Vec::new(),
+        }
+    }
+
+    pub fn n_neurons(&self) -> usize {
+        self.v.len()
+    }
+
+    pub fn reset(&mut self) {
+        self.v.iter_mut().for_each(|x| *x = 0);
+        self.step_num = 0;
+        self.reset_cost();
+    }
+
+    /// Clear the access/cycle counters (per-inference accounting).
+    pub fn reset_cost(&mut self) {
+        self.hbm.reset_counters();
+        self.cycles = 0;
+    }
+
+    pub fn counters(&self) -> &AccessCounters {
+        &self.hbm.counters
+    }
+
+    pub fn cost(&self, model: &EnergyModel) -> CostReport {
+        model.cost(&self.hbm.counters, self.cycles)
+    }
+
+    /// One timestep. `axon_in` = fired axon ids, ascending (the BRAM axon
+    /// spike register is scanned in order). Returns fired neurons and the
+    /// output subset.
+    ///
+    /// Equivalent to `phase_update()` + `phase_route(axon_in)`; the
+    /// multi-core cluster drives the two phases separately with a routing
+    /// barrier in between.
+    pub fn step(&mut self, axon_in: &[u32]) -> anyhow::Result<StepOutput<'_>> {
+        self.phase_update()?;
+        self.phase_route(axon_in)?;
+        Ok(StepOutput { fired: &self.fired_buf, output_spikes: &self.out_buf })
+    }
+
+    /// Membrane sweep (phases 1-3). Fired neuron ids are available via
+    /// [`Self::fired`] afterwards.
+    pub fn phase_update(&mut self) -> anyhow::Result<()> {
+        let n = self.n_neurons();
+        let ss = mix_seed(self.base_seed, self.step_num);
+        self.backend.update(&mut self.v, &self.params, ss, &mut self.spike_mask)?;
+        self.hbm.counters.uram_accesses += 2 * n as u64; // read+write per neuron
+        self.cycles += self.hbm.update_cycles();
+
+        self.fired_buf.clear();
+        for (i, &s) in self.spike_mask.iter().enumerate() {
+            if s != 0 {
+                self.fired_buf.push(i as u32);
+            }
+        }
+        Ok(())
+    }
+
+    /// Fired neurons from the last `phase_update`.
+    pub fn fired(&self) -> &[u32] {
+        &self.fired_buf
+    }
+
+    /// Routing + accumulate (phases 1, 2, 4). `axon_in` includes both
+    /// host inputs and router deliveries, ascending.
+    pub fn phase_route(&mut self, axon_in: &[u32]) -> anyhow::Result<()> {
+        debug_assert!(axon_in.windows(2).all(|w| w[0] < w[1]), "axon ids must be sorted");
+        self.hbm.counters.bram_accesses += axon_in.len() as u64 + self.fired_buf.len() as u64;
+
+        // ---- phase 1: pointer fetches
+        let p0 = self.hbm.counters.pointer_rows;
+        self.ptr_queue.clear();
+        self.hbm.fetch_axon_pointers(axon_in, &mut self.ptr_queue);
+        // neurons fetch in model-grouped pointer order for burst dedup
+        self.fired_sorted.clear();
+        self.fired_sorted.extend_from_slice(&self.fired_buf);
+        let rows = &self.hbm.image.neuron_ptr_row;
+        self.fired_sorted.sort_unstable_by_key(|&i| (rows[i as usize], i));
+        self.hbm.fetch_neuron_pointers(&self.fired_sorted, &mut self.ptr_queue);
+
+        // ---- phase 2: gather events
+        let s0 = self.hbm.counters.synapse_rows;
+        self.targets.clear();
+        self.weights.clear();
+        let (targets, weights) = (&mut self.targets, &mut self.weights);
+        for k in 0..self.ptr_queue.len() {
+            let ptr = self.ptr_queue[k];
+            self.hbm.read_region(ptr, |e| {
+                targets.push(e.target);
+                weights.push(e.weight as i32);
+            });
+        }
+        self.cycles += self
+            .hbm
+            .phase_cycles(self.hbm.counters.pointer_rows - p0, self.hbm.counters.synapse_rows - s0);
+
+        // ---- phase 4: accumulate
+        self.backend.accumulate(&mut self.v, &self.targets, &self.weights)?;
+
+        // outputs
+        self.out_buf.clear();
+        for &i in &self.fired_buf {
+            if self.is_output[i as usize] {
+                self.out_buf.push(i);
+            }
+        }
+        self.step_num += 1;
+        Ok(())
+    }
+
+    /// Output-neuron spikes from the last completed step.
+    pub fn output_spikes(&self) -> &[u32] {
+        &self.out_buf
+    }
+
+    /// Read membrane potentials (paper `read_membrane`).
+    pub fn read_membrane(&self, ids: &[u32]) -> Vec<i32> {
+        ids.iter().map(|&i| self.v[i as usize]).collect()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::backend::RustBackend;
+    use crate::engine::dense::DenseEngine;
+    use crate::snn::{NetworkBuilder, NeuronModel};
+    use crate::util::prng::Xorshift32;
+    use crate::util::ptest;
+
+    fn random_net(rng: &mut Xorshift32, n: usize, a: usize, p: f64) -> Network {
+        let models = [
+            NeuronModel::if_neuron(rng.range_i32(5, 50)),
+            NeuronModel::lif(rng.range_i32(5, 50), -6, 3, true).unwrap(),
+            NeuronModel::ann(rng.range_i32(2, 30), 0, false).unwrap(),
+        ];
+        let mut b = NetworkBuilder::new();
+        let keys: Vec<String> = (0..n).map(|i| format!("n{i}")).collect();
+        for i in 0..n {
+            let mut syns = Vec::new();
+            for t in 0..n {
+                if rng.chance(p) {
+                    syns.push((keys[t].clone(), rng.range_i32(-60, 60)));
+                }
+            }
+            let refs: Vec<(&str, i32)> = syns.iter().map(|(k, w)| (k.as_str(), *w)).collect();
+            b.add_neuron(&keys[i], models[rng.below(3) as usize], &refs).unwrap();
+        }
+        for i in 0..a {
+            let mut syns = Vec::new();
+            for t in 0..n {
+                if rng.chance(p * 2.0) {
+                    syns.push((keys[t].clone(), rng.range_i32(-60, 60)));
+                }
+            }
+            let refs: Vec<(&str, i32)> = syns.iter().map(|(k, w)| (k.as_str(), *w)).collect();
+            b.add_axon(&format!("a{i}"), &refs).unwrap();
+        }
+        for i in 0..n {
+            if rng.chance(0.3) {
+                b.add_output(&keys[i]);
+            }
+        }
+        b.build().unwrap().0.clone_with_seed(rng.next_u32())
+    }
+
+    impl Network {
+        fn clone_with_seed(mut self, seed: u32) -> Self {
+            self.base_seed = seed;
+            self
+        }
+    }
+
+    #[test]
+    fn prop_event_engine_matches_dense_engine() {
+        ptest::check("core_vs_dense_parity", 25, |rng| {
+            let n = rng.below(60) as usize + 4;
+            let a = rng.below(12) as usize + 1;
+            let net = random_net(rng, n, a, 0.12);
+            let mut dense = DenseEngine::new(&net);
+            let mut core =
+                CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap();
+            for _t in 0..15 {
+                let axons: Vec<u32> =
+                    (0..a as u32).filter(|_| rng.chance(0.4)).collect();
+                dense.step(&axons);
+                let dense_fired = dense.fired();
+                let out = core.step(&axons).map_err(|e| e.to_string())?;
+                ptest::prop_assert_eq(out.fired.to_vec(), dense_fired, "fired")?;
+                ptest::prop_assert_eq(core.v.clone(), dense.v.clone(), "membranes")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn counters_increase_with_activity() {
+        let mut rng = Xorshift32::new(11);
+        let net = random_net(&mut rng, 50, 4, 0.2);
+        let mut core = CoreEngine::new(&net, SlotStrategy::Modulo, RustBackend).unwrap();
+        core.step(&[0, 1, 2, 3]).unwrap();
+        let after_active = core.counters().hbm_rows();
+        assert!(after_active > 0);
+        assert!(core.cycles > 0);
+        // URAM swept regardless of activity
+        assert_eq!(core.counters().uram_accesses, 2 * 50);
+    }
+
+    #[test]
+    fn idle_step_costs_only_sweep() {
+        let m = NeuronModel::if_neuron(1 << 20);
+        let mut b = NetworkBuilder::new();
+        for i in 0..32 {
+            b.add_neuron(&format!("n{i}"), m, &[]).unwrap();
+        }
+        b.add_axon("a0", &[("n0", 1)]).unwrap();
+        let net = b.build().unwrap().0;
+        let mut core = CoreEngine::new(&net, SlotStrategy::Modulo, RustBackend).unwrap();
+        core.step(&[]).unwrap();
+        assert_eq!(core.counters().hbm_rows(), 0, "no spikes -> no HBM traffic");
+        assert_eq!(core.cycles, core.hbm.update_cycles());
+    }
+
+    #[test]
+    fn output_spikes_subset_of_fired() {
+        let mut rng = Xorshift32::new(3);
+        let net = random_net(&mut rng, 40, 4, 0.2);
+        let outputs = net.outputs.clone();
+        let mut core = CoreEngine::new(&net, SlotStrategy::Modulo, RustBackend).unwrap();
+        for t in 0..10u32 {
+            let axons: Vec<u32> = if t % 2 == 0 { vec![0, 2] } else { vec![] };
+            let out = core.step(&axons).unwrap();
+            for s in out.output_spikes {
+                assert!(out.fired.contains(s));
+                assert!(outputs.contains(s));
+            }
+        }
+    }
+}

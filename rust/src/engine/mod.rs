@@ -1,0 +1,18 @@
+//! Execution engines ("grey matter", paper §4).
+//!
+//! * [`backend`] — the membrane-update compute backend trait with a
+//!   native-Rust implementation; the XLA/PJRT implementation that runs the
+//!   AOT Pallas artifacts lives in [`crate::runtime`] and plugs in here.
+//! * [`dense`] — the Fig-8 dense-matrix software simulator (the CPU
+//!   baseline the paper compares throughput against, and the golden model
+//!   in parity tests).
+//! * [`core`] — the event-driven single-core engine: two-phase HBM spike
+//!   routing with access/cycle accounting.
+
+pub mod backend;
+pub mod core;
+pub mod dense;
+
+pub use backend::{CoreParams, RustBackend, UpdateBackend};
+pub use core::{CoreEngine, StepOutput};
+pub use dense::DenseEngine;

@@ -1,0 +1,166 @@
+//! Evaluation harness shared by the benches and examples: loads the
+//! trained-model manifest (`models/manifest.json`), converts `.hsl`
+//! layer graphs, evaluates them on `.hsd` test sets with the paper's
+//! readout protocols, and prints Table-2-style rows.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::convert::{convert, run_inference, BiasMode, Converted, Readout};
+use crate::energy::EnergyModel;
+use crate::engine::{CoreEngine, RustBackend};
+use crate::hbm::SlotStrategy;
+use crate::metrics::CostSeries;
+use crate::model_fmt::{hsl::read_hsl, read_hsd, LayerGraph, TestSet};
+use crate::util::json::Json;
+
+/// One entry of models/manifest.json.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub task: String,
+    pub kind: String,
+    pub readout: Readout,
+    pub input: (usize, usize, usize),
+    pub timesteps: usize,
+    pub acc_float: f64,
+    pub acc_quant: f64,
+    pub params: u64,
+}
+
+pub fn load_manifest(models_dir: &Path) -> Result<Vec<ModelEntry>> {
+    let path = models_dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path).with_context(|| {
+        format!(
+            "reading {} — run `make models` (python -m train.train_all) first",
+            path.display()
+        )
+    })?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+    let obj = match &j {
+        Json::Obj(m) => m,
+        _ => return Err(anyhow!("manifest is not an object")),
+    };
+    let mut entries = Vec::new();
+    for (name, v) in obj {
+        let f = |k: &str| v.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let s = |k: &str| v.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+        let input = v
+            .get("input")
+            .and_then(Json::int_vec)
+            .unwrap_or_else(|| vec![1, 1, 1]);
+        entries.push(ModelEntry {
+            name: name.clone(),
+            task: s("task"),
+            kind: s("kind"),
+            readout: if s("readout") == "rate" { Readout::Rate } else { Readout::Membrane },
+            input: (input[0] as usize, input[1] as usize, input[2] as usize),
+            timesteps: f("timesteps") as usize,
+            acc_float: f("acc_float"),
+            acc_quant: f("acc_quant"),
+            params: f("params") as u64,
+        });
+    }
+    // stable, readable order: by task then size
+    entries.sort_by(|a, b| (a.task.clone(), a.params).cmp(&(b.task.clone(), b.params)));
+    Ok(entries)
+}
+
+/// Default models dir: $HIAER_MODELS or <manifest dir>/models.
+pub fn models_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("HIAER_MODELS") {
+        return PathBuf::from(d);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("models")
+}
+
+/// Load + convert one model.
+pub fn load_model(models_dir: &Path, name: &str) -> Result<(LayerGraph, Converted)> {
+    let graph = read_hsl(models_dir.join(format!("{name}.hsl")))?;
+    let conv = convert(&graph, BiasMode::Threshold, 0)?;
+    Ok((graph, conv))
+}
+
+/// Result of evaluating a model on its test set.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub name: String,
+    pub accuracy: f64,
+    pub n_samples: usize,
+    pub axons: usize,
+    pub neurons: usize,
+    pub weights: usize,
+    pub energy_mean: f64,
+    pub energy_std: f64,
+    pub latency_mean: f64,
+    pub latency_std: f64,
+    pub series: CostSeries,
+}
+
+/// Evaluate `name` on its `.hsd` test set (at most `max_samples`) with
+/// the event-driven HBM engine.
+pub fn evaluate_model(
+    models_dir: &Path,
+    entry: &ModelEntry,
+    max_samples: usize,
+    strategy: SlotStrategy,
+) -> Result<EvalResult> {
+    let (graph, conv) = load_model(models_dir, &entry.name)?;
+    let ts: TestSet = read_hsd(models_dir.join(format!("{}.hsd", entry.name)))?;
+    let mut engine = CoreEngine::new(&conv.net, strategy, RustBackend)?;
+    let energy = EnergyModel::default();
+    let layers = graph.layers.len();
+
+    let mut series = CostSeries::default();
+    let mut correct = 0usize;
+    let n = ts.samples.len().min(max_samples);
+    for sample in &ts.samples[..n] {
+        let inf = run_inference(&mut engine, &conv, &sample.frames, layers, entry.readout, &energy)?;
+        if inf.prediction == sample.label as usize {
+            correct += 1;
+        }
+        series.push(&inf.cost);
+    }
+    let (em, es) = series.energy_mean_std();
+    let (lm, ls) = series.latency_mean_std();
+    Ok(EvalResult {
+        name: entry.name.clone(),
+        accuracy: correct as f64 / n.max(1) as f64,
+        n_samples: n,
+        axons: conv.net.n_axons(),
+        neurons: conv.net.n_neurons(),
+        weights: conv.net.n_synapses(),
+        energy_mean: em,
+        energy_std: es,
+        latency_mean: lm,
+        latency_std: ls,
+        series,
+    })
+}
+
+/// Print a Table-2 style row.
+pub fn print_row(entry: &ModelEntry, r: &EvalResult) {
+    println!(
+        "{:<12} {:>14} {:<12} {:>7} {:>8} {:>9}  {:>8.2}  {:>8.2}  {:>12}  {:>14}",
+        entry.name,
+        format!("({},{},{})", entry.input.0, entry.input.1, entry.input.2),
+        entry.task,
+        r.axons,
+        r.neurons,
+        r.weights,
+        entry.acc_quant * 100.0,
+        r.accuracy * 100.0,
+        format!("{:.1}±{:.1}", r.energy_mean, r.energy_std),
+        format!("{:.1}±{:.1}", r.latency_mean, r.latency_std),
+    );
+}
+
+pub fn print_header() {
+    println!(
+        "{:<12} {:>14} {:<12} {:>7} {:>8} {:>9}  {:>8}  {:>8}  {:>12}  {:>14}",
+        "Model", "Input", "Task", "Axons", "Neurons", "Weights", "SW Acc%", "HiAER%",
+        "Energy(uJ)", "Latency(us)"
+    );
+    println!("{}", "-".repeat(118));
+}

@@ -1,0 +1,503 @@
+//! The network -> HBM image compiler (Fig 7 + §4 packing rules).
+
+use std::collections::HashMap;
+
+use thiserror::Error;
+
+use super::{Pointer, SynEntry, CORE_HBM_BYTES, ROW_SLOTS, SLOT_BYTES, SYN_OUTPUT, SYN_VALID};
+use crate::snn::{Network, NeuronModel};
+
+#[derive(Debug, Error)]
+pub enum LayoutError {
+    #[error("network does not fit core HBM: needs {need} bytes > {cap}")]
+    Capacity { need: usize, cap: usize },
+    #[error("invalid network: {0}")]
+    BadNetwork(String),
+}
+
+/// Postsynaptic-neuron slot assignment strategy — the packing-density
+/// knob the paper's compiler turns. Benchmarked by the ablation bench
+/// (`hot_path --ablation`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotStrategy {
+    /// slot = local neuron id % 16 (no optimisation).
+    Modulo,
+    /// Balance total fan-in across the 16 slots (greedy, descending
+    /// fan-in) so each source's synapses spread evenly over slots,
+    /// minimising its row count.
+    BalanceFanIn,
+}
+
+/// Layout quality numbers (reported by benches and `info`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayoutStats {
+    pub synapse_rows: usize,
+    pub filled_slots: usize,
+    pub dummy_slots: usize,
+    /// filled / (rows * 16)
+    pub packing_density: f64,
+    pub total_bytes: usize,
+}
+
+/// A compiled per-core HBM image.
+#[derive(Clone, Debug)]
+pub struct HbmImage {
+    pub n_neurons: usize,
+    pub n_axons: usize,
+    /// Neuron-model directory (deduplicated), section 0.
+    pub models: Vec<NeuronModel>,
+    /// Per-neuron model index into `models`.
+    pub model_of: Vec<u16>,
+    /// Slot (0..16) of each local neuron — its membrane-lane binding.
+    pub slot_of: Vec<u8>,
+    /// Section-1 pointers by axon id.
+    pub axon_ptr: Vec<Pointer>,
+    /// Section-2 pointers by local neuron id.
+    pub neuron_ptr: Vec<Pointer>,
+    /// Pointer-row address of each axon (section-relative row).
+    pub axon_ptr_row: Vec<u32>,
+    /// Pointer-row address of each neuron. Grouped by model (Supp A.3),
+    /// so neurons sharing a model sit in adjacent pointer rows.
+    pub neuron_ptr_row: Vec<u32>,
+    /// Section 3: the synapse rows.
+    pub syn_rows: Vec<[SynEntry; ROW_SLOTS]>,
+    /// Per-row occupancy bitmask (bit s = slot s holds a valid, non-zero
+    /// synapse). §Perf: the phase-2 stream skips empty slots via
+    /// trailing_zeros instead of scanning all 16 entries — packing
+    /// density is ~0.3 on converted models, so this roughly 3x-es the
+    /// region-read inner loop. Purely an iteration index: the modelled
+    /// HBM traffic (row reads) is unchanged.
+    pub row_mask: Vec<u16>,
+    pub stats: LayoutStats,
+}
+
+impl HbmImage {
+    /// Compile a network (one core's partition) into an HBM image.
+    pub fn compile(net: &Network, strategy: SlotStrategy) -> Result<HbmImage, LayoutError> {
+        net.validate().map_err(LayoutError::BadNetwork)?;
+        let n = net.n_neurons();
+        let a = net.n_axons();
+
+        // --- model directory: dedupe params, group neurons by model
+        let mut models: Vec<NeuronModel> = Vec::new();
+        let mut model_ids: HashMap<NeuronModel, u16> = HashMap::new();
+        let mut model_of = vec![0u16; n];
+        for (i, p) in net.params.iter().enumerate() {
+            let id = *model_ids.entry(*p).or_insert_with(|| {
+                models.push(*p);
+                (models.len() - 1) as u16
+            });
+            model_of[i] = id;
+        }
+
+        // --- slot assignment
+        let slot_of = assign_slots(net, strategy);
+
+        // --- synapse section: place sources one after another.
+        // Order: axons first (Fig 7 walks axons), then neurons grouped by
+        // model (Supp A.3 groups neuron pointers by model).
+        let mut rows: Vec<[SynEntry; ROW_SLOTS]> = Vec::new();
+        let mut filled = 0usize;
+        let mut dummy = 0usize;
+
+        let mut place_source =
+            |syns: &[crate::snn::Synapse], is_output_src: bool| -> Pointer {
+                // group by slot
+                let mut per_slot: [Vec<&crate::snn::Synapse>; ROW_SLOTS] = Default::default();
+                for s in syns {
+                    per_slot[slot_of[s.target as usize] as usize].push(s);
+                }
+                let mut need = per_slot.iter().map(Vec::len).max().unwrap_or(0);
+                if syns.is_empty() && is_output_src {
+                    // Supp A.3: leaf output neurons get a row of 16
+                    // zero-weight dummy synapses to carry the flag.
+                    need = 1;
+                }
+                if need == 0 {
+                    // Leaf, non-output neuron: still gets the 16-dummy row
+                    // so "every neuron has a space in the synapse section".
+                    need = 1;
+                }
+                let start = rows.len();
+                rows.resize(start + need, [SynEntry::default(); ROW_SLOTS]);
+                for (slot, list) in per_slot.iter().enumerate() {
+                    for (k, s) in list.iter().enumerate() {
+                        rows[start + k][slot] = SynEntry {
+                            target: s.target,
+                            weight: s.weight,
+                            flags: SYN_VALID,
+                        };
+                        filled += 1;
+                    }
+                }
+                if syns.is_empty() {
+                    // fill the dummy row with zero-weight valid slots
+                    for slot in 0..ROW_SLOTS {
+                        rows[start][slot] = SynEntry { target: 0, weight: 0, flags: SYN_VALID };
+                        dummy += 1;
+                    }
+                }
+                if is_output_src {
+                    // set the output flag on the first valid entry
+                    'outer: for r in rows[start..start + need].iter_mut() {
+                        for e in r.iter_mut() {
+                            if e.is_valid() {
+                                e.flags |= SYN_OUTPUT;
+                                break 'outer;
+                            }
+                        }
+                    }
+                }
+                Pointer { start_row: start as u32, rows: need as u32 }
+            };
+
+        let is_output: Vec<bool> = {
+            let mut v = vec![false; n];
+            for &o in &net.outputs {
+                v[o as usize] = true;
+            }
+            v
+        };
+
+        let axon_ptr: Vec<Pointer> = (0..a)
+            .map(|i| place_source(&net.axon_adj[i], false))
+            .collect();
+
+        // neurons in model-grouped order
+        let mut grouped: Vec<u32> = (0..n as u32).collect();
+        grouped.sort_by_key(|&i| (model_of[i as usize], i));
+        let mut neuron_ptr = vec![Pointer::default(); n];
+        let mut neuron_ptr_row = vec![0u32; n];
+        for (pos, &i) in grouped.iter().enumerate() {
+            neuron_ptr[i as usize] =
+                place_source(&net.neuron_adj[i as usize], is_output[i as usize]);
+            neuron_ptr_row[i as usize] = (pos / ROW_SLOTS) as u32;
+        }
+        let axon_ptr_row: Vec<u32> = (0..a).map(|i| (i / ROW_SLOTS) as u32).collect();
+
+        let synapse_rows = rows.len();
+        let ptr_rows = a.div_ceil(ROW_SLOTS) + n.div_ceil(ROW_SLOTS);
+        let model_rows = models.len(); // one row per model definition
+        let total_bytes = (synapse_rows + ptr_rows + model_rows) * ROW_SLOTS * SLOT_BYTES;
+        if total_bytes > CORE_HBM_BYTES {
+            return Err(LayoutError::Capacity { need: total_bytes, cap: CORE_HBM_BYTES });
+        }
+        let stats = LayoutStats {
+            synapse_rows,
+            filled_slots: filled,
+            dummy_slots: dummy,
+            packing_density: if synapse_rows == 0 {
+                1.0
+            } else {
+                filled as f64 / (synapse_rows * ROW_SLOTS) as f64
+            },
+            total_bytes,
+        };
+
+        let row_mask: Vec<u16> = rows
+            .iter()
+            .map(|row| {
+                let mut m = 0u16;
+                for (s, e) in row.iter().enumerate() {
+                    if e.is_valid() && e.weight != 0 {
+                        m |= 1 << s;
+                    }
+                }
+                m
+            })
+            .collect();
+
+        Ok(HbmImage {
+            n_neurons: n,
+            n_axons: a,
+            models,
+            model_of,
+            slot_of,
+            axon_ptr,
+            neuron_ptr,
+            axon_ptr_row,
+            neuron_ptr_row,
+            syn_rows: rows,
+            row_mask,
+            stats,
+        })
+    }
+
+    /// Structural invariants — exercised by the property tests:
+    /// 1. regions are disjoint and in-bounds;
+    /// 2. every network synapse appears exactly once, slot-aligned;
+    /// 3. every valid entry lies inside exactly one region;
+    /// 4. output neurons carry the flag; leaf neurons have the dummy row.
+    pub fn validate(&self, net: &Network) -> Result<(), String> {
+        let nrows = self.syn_rows.len();
+        let mut owner: Vec<i64> = vec![-1; nrows];
+        let mut check_region = |ptr: &Pointer, id: i64| -> Result<(), String> {
+            let (s, e) = (ptr.start_row as usize, (ptr.start_row + ptr.rows) as usize);
+            if e > nrows {
+                return Err(format!("region of source {id} out of bounds"));
+            }
+            for r in s..e {
+                if owner[r] != -1 {
+                    return Err(format!("row {r} owned by {} and {id}", owner[r]));
+                }
+                owner[r] = id;
+            }
+            Ok(())
+        };
+        for (i, p) in self.axon_ptr.iter().enumerate() {
+            check_region(p, i as i64)?;
+        }
+        for (i, p) in self.neuron_ptr.iter().enumerate() {
+            check_region(p, (self.n_axons + i) as i64)?;
+        }
+
+        // every valid entry belongs to a region
+        for (r, row) in self.syn_rows.iter().enumerate() {
+            for (slot, e) in row.iter().enumerate() {
+                if e.is_valid() && owner[r] == -1 {
+                    return Err(format!("orphan valid entry at row {r} slot {slot}"));
+                }
+                if !e.is_valid() && e.flags != 0 {
+                    return Err(format!("flags on invalid entry at row {r} slot {slot}"));
+                }
+            }
+        }
+
+        // synapse multiset per source matches the network, slot aligned
+        let collect = |ptr: &Pointer| -> Vec<(u32, i16)> {
+            let mut v = Vec::new();
+            for r in ptr.start_row..ptr.start_row + ptr.rows {
+                for (slot, e) in self.syn_rows[r as usize].iter().enumerate() {
+                    if e.is_valid() && e.weight != 0 {
+                        if self.slot_of[e.target as usize] as usize != slot {
+                            // caught below through the error string
+                            v.push((u32::MAX, 0));
+                        } else {
+                            v.push((e.target, e.weight));
+                        }
+                    }
+                }
+            }
+            v.sort_unstable();
+            v
+        };
+        let norm = |syns: &[crate::snn::Synapse]| -> Vec<(u32, i16)> {
+            let mut v: Vec<(u32, i16)> = syns
+                .iter()
+                .filter(|s| s.weight != 0)
+                .map(|s| (s.target, s.weight))
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        for (i, p) in self.axon_ptr.iter().enumerate() {
+            if collect(p) != norm(&net.axon_adj[i]) {
+                return Err(format!("axon {i} synapse mismatch"));
+            }
+        }
+        for (i, p) in self.neuron_ptr.iter().enumerate() {
+            if collect(p) != norm(&net.neuron_adj[i]) {
+                return Err(format!("neuron {i} synapse mismatch"));
+            }
+        }
+
+        // output flags
+        let mut is_output = vec![false; self.n_neurons];
+        for &o in &net.outputs {
+            is_output[o as usize] = true;
+        }
+        for (i, p) in self.neuron_ptr.iter().enumerate() {
+            let mut has_flag = false;
+            for r in p.start_row..p.start_row + p.rows {
+                for e in &self.syn_rows[r as usize] {
+                    if e.flags & SYN_OUTPUT != 0 {
+                        has_flag = true;
+                    }
+                }
+            }
+            if has_flag != is_output[i] {
+                return Err(format!("neuron {i}: output flag {has_flag} != {}", is_output[i]));
+            }
+            if p.rows == 0 {
+                return Err(format!("neuron {i} has empty region"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Choose each neuron's slot (membrane lane).
+fn assign_slots(net: &Network, strategy: SlotStrategy) -> Vec<u8> {
+    let n = net.n_neurons();
+    match strategy {
+        SlotStrategy::Modulo => (0..n).map(|i| (i % ROW_SLOTS) as u8).collect(),
+        SlotStrategy::BalanceFanIn => {
+            // Greedy: neurons in descending fan-in order go to the slot
+            // with the least accumulated fan-in. Sources whose targets
+            // spread evenly over slots need fewer rows.
+            let fan_in = net.fan_in();
+            let mut order: Vec<u32> = (0..n as u32).collect();
+            order.sort_by_key(|&i| std::cmp::Reverse(fan_in[i as usize]));
+            let mut load = [0u64; ROW_SLOTS];
+            let mut slot_of = vec![0u8; n];
+            for &i in &order {
+                let best = (0..ROW_SLOTS).min_by_key(|&s| load[s]).unwrap();
+                slot_of[i as usize] = best as u8;
+                load[best] += fan_in[i as usize] as u64 + 1;
+            }
+            slot_of
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::{NetworkBuilder, NeuronModel};
+    use crate::util::prng::Xorshift32;
+    use crate::util::ptest;
+
+    fn fig6() -> Network {
+        let lif_ab = NeuronModel::lif(3, 0, 63, false).unwrap();
+        let lif_c = NeuronModel::lif(4, 0, 2, false).unwrap();
+        let ann_d = NeuronModel::ann(5, 0, true).unwrap();
+        let mut b = NetworkBuilder::new();
+        b.add_neuron("a", lif_ab, &[("b", 1), ("d", 2)]).unwrap();
+        b.add_neuron("b", lif_ab, &[]).unwrap();
+        b.add_neuron("c", lif_c, &[]).unwrap();
+        b.add_neuron("d", ann_d, &[("c", 1)]).unwrap();
+        b.add_axon("alpha", &[("a", 3), ("c", 2)]).unwrap();
+        b.add_axon("beta", &[("b", 3)]).unwrap();
+        b.add_output("a");
+        b.add_output("b");
+        b.build().unwrap().0
+    }
+
+    pub fn arbitrary_network(rng: &mut Xorshift32, max_n: usize) -> Network {
+        let n = rng.below(max_n as u32).max(1) as usize;
+        let a = rng.below(32).max(1) as usize;
+        let models = [
+            NeuronModel::lif(rng.range_i32(1, 100), 0, 63, false).unwrap(),
+            NeuronModel::ann(rng.range_i32(1, 50), -4, true).unwrap(),
+            NeuronModel::lif(rng.range_i32(1, 80), -8, 3, true).unwrap(),
+        ];
+        let mut b = NetworkBuilder::new();
+        let keys: Vec<String> = (0..n).map(|i| format!("n{i}")).collect();
+        for i in 0..n {
+            let deg = rng.below(20) as usize;
+            let syns: Vec<(String, i32)> = (0..deg)
+                .map(|_| (keys[rng.below(n as u32) as usize].clone(), rng.range_i32(-100, 100)))
+                .collect();
+            let refs: Vec<(&str, i32)> = syns.iter().map(|(k, w)| (k.as_str(), *w)).collect();
+            b.add_neuron(&keys[i], models[rng.below(3) as usize], &refs).unwrap();
+        }
+        for i in 0..a {
+            let deg = rng.below(12) as usize;
+            let syns: Vec<(String, i32)> = (0..deg)
+                .map(|_| (keys[rng.below(n as u32) as usize].clone(), rng.range_i32(-100, 100)))
+                .collect();
+            let refs: Vec<(&str, i32)> = syns.iter().map(|(k, w)| (k.as_str(), *w)).collect();
+            b.add_axon(&format!("a{i}"), &refs).unwrap();
+        }
+        for i in 0..n {
+            if rng.chance(0.2) {
+                b.add_output(&keys[i]);
+            }
+        }
+        b.build().unwrap().0
+    }
+
+    #[test]
+    fn fig6_layout_valid_both_strategies() {
+        let net = fig6();
+        for strat in [SlotStrategy::Modulo, SlotStrategy::BalanceFanIn] {
+            let img = HbmImage::compile(&net, strat).unwrap();
+            img.validate(&net).unwrap();
+            assert_eq!(img.n_neurons, 4);
+            assert_eq!(img.models.len(), 3);
+        }
+    }
+
+    #[test]
+    fn leaf_neurons_get_dummy_row() {
+        let net = fig6();
+        let img = HbmImage::compile(&net, SlotStrategy::Modulo).unwrap();
+        // neurons b and c have no outgoing synapses -> full dummy rows
+        for i in [1usize, 2] {
+            let p = img.neuron_ptr[i];
+            assert_eq!(p.rows, 1);
+            let row = &img.syn_rows[p.start_row as usize];
+            assert!(row.iter().all(|e| e.is_valid() && e.weight == 0));
+        }
+        assert!(img.stats.dummy_slots >= 32);
+    }
+
+    #[test]
+    fn slot_alignment_constraint() {
+        let net = fig6();
+        let img = HbmImage::compile(&net, SlotStrategy::BalanceFanIn).unwrap();
+        for p in img.axon_ptr.iter().chain(img.neuron_ptr.iter()) {
+            for r in p.start_row..p.start_row + p.rows {
+                for (slot, e) in img.syn_rows[r as usize].iter().enumerate() {
+                    if e.is_valid() && e.weight != 0 {
+                        assert_eq!(img.slot_of[e.target as usize] as usize, slot);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_layout_invariants_random_networks() {
+        ptest::check("hbm_layout_invariants", 60, |rng| {
+            let net = arbitrary_network(rng, 200);
+            for strat in [SlotStrategy::Modulo, SlotStrategy::BalanceFanIn] {
+                let img = HbmImage::compile(&net, strat)
+                    .map_err(|e| format!("compile failed: {e}"))?;
+                img.validate(&net)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn balanced_strategy_never_worse_on_heavy_fan_in() {
+        // A hub network: all sources target the same few neurons. Modulo
+        // numbering puts hot targets in few slots; balancing spreads them.
+        let m = NeuronModel::if_neuron(10);
+        let mut b = NetworkBuilder::new();
+        for i in 0..64 {
+            b.add_neuron(&format!("n{i}"), m, &[]).unwrap();
+        }
+        // rebuild with synapses: sources 0..32 each hit targets 32..36
+        let mut b2 = NetworkBuilder::new();
+        for i in 0..64u32 {
+            let syns: Vec<(String, i32)> = if i < 32 {
+                (32..36).map(|t| (format!("n{t}"), 5)).collect()
+            } else {
+                vec![]
+            };
+            let refs: Vec<(&str, i32)> = syns.iter().map(|(k, w)| (k.as_str(), *w)).collect();
+            b2.add_neuron(&format!("n{i}"), m, &refs).unwrap();
+        }
+        drop(b);
+        let net = b2.build().unwrap().0;
+        let naive = HbmImage::compile(&net, SlotStrategy::Modulo).unwrap();
+        let opt = HbmImage::compile(&net, SlotStrategy::BalanceFanIn).unwrap();
+        naive.validate(&net).unwrap();
+        opt.validate(&net).unwrap();
+        assert!(opt.stats.synapse_rows <= naive.stats.synapse_rows);
+        assert!(opt.stats.packing_density >= naive.stats.packing_density);
+    }
+
+    #[test]
+    fn capacity_error() {
+        // A network whose synapse section alone exceeds the per-core HBM
+        // budget (simulate by row math, not allocation: 256M rows needed).
+        // We can't build a billion synapses in a unit test; instead check
+        // the arithmetic boundary via a tiny fake: CORE_HBM_BYTES rows.
+        // (Real capacity handling is exercised by the partitioner tests.)
+        let need_rows = CORE_HBM_BYTES / (ROW_SLOTS * SLOT_BYTES) + 1;
+        assert!(need_rows > 1_000_000); // sanity: budget is large
+    }
+}

@@ -1,0 +1,72 @@
+//! HBM synaptic routing-table simulator (paper §4, Fig 2, Fig 7, Supp A.3).
+//!
+//! Each FPGA core owns a slice of the 8 GB on-module HBM, organised as:
+//!
+//! ```text
+//! +------------------+  section 0: neuron model definitions
+//! | model directory  |
+//! +------------------+  section 1: axon pointers   (16 pointers / row)
+//! | axon pointers    |
+//! +------------------+  section 2: neuron pointers (grouped by model)
+//! | neuron pointers  |
+//! +------------------+  section 3: synapses        (16 slots / row)
+//! | synapse rows     |
+//! +------------------+
+//! ```
+//!
+//! A row holds 16 slots; a segment spans two rows (the HBM burst unit for
+//! the paper's 16-neuron-parallel core). Each slot stores one pointer or
+//! one synapse. The *alignment constraint*: a synapse must occupy the slot
+//! number of its postsynaptic neuron (`slot == slot_of[target]`), because
+//! the 16 membrane-update lanes are bound to slot positions. Pointers
+//! store `(start_row, n_rows)` — base + length, not absolute addresses —
+//! and all synapses of one source occupy a contiguous, exclusive row range.
+//!
+//! The compiler ([`layout`]) packs the network into this structure and can
+//! renumber neurons across slots to maximise packing density (the paper's
+//! "adjusts the neuron and axon assignments"). The simulator ([`sim`])
+//! serves the two-phase spike routing with per-row access counting, which
+//! the energy/latency model consumes exactly the way the paper derives
+//! energy from FPGA-reported HBM access counts.
+
+pub mod layout;
+pub mod sim;
+
+pub use layout::{HbmImage, LayoutError, LayoutStats, SlotStrategy};
+pub use sim::{AccessCounters, HbmSim};
+
+/// Slots per HBM row (pointer or synapse entries).
+pub const ROW_SLOTS: usize = 16;
+/// Rows per segment (the two-row burst granule of Fig 2).
+pub const SEGMENT_ROWS: usize = 2;
+/// Bytes per slot (64-bit: 32b target + 16b weight + 8b flags + pad).
+pub const SLOT_BYTES: usize = 8;
+/// Per-core HBM budget: 8 GB per FPGA split over 32 cores.
+pub const CORE_HBM_BYTES: usize = 8 * (1 << 30) / 32;
+
+/// Synapse entry flags.
+pub const SYN_VALID: u8 = 1;
+/// Marks the *source* neuron of this region as an output neuron
+/// (Supp A.3: "a special flag must be set in the synapse definitions").
+pub const SYN_OUTPUT: u8 = 2;
+
+/// One synapse slot in the synapse section.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SynEntry {
+    pub target: u32,
+    pub weight: i16,
+    pub flags: u8,
+}
+
+impl SynEntry {
+    pub fn is_valid(&self) -> bool {
+        self.flags & SYN_VALID != 0
+    }
+}
+
+/// A base + length pointer into the synapse section.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Pointer {
+    pub start_row: u32,
+    pub rows: u32,
+}

@@ -1,0 +1,195 @@
+//! HBM access simulation: serves the two-phase spike routing with per-row
+//! access counting (the quantity the paper's energy model is built on) and
+//! a cycle model for the latency numbers.
+
+use super::{HbmImage, Pointer, SynEntry, ROW_SLOTS};
+
+/// Per-section HBM row-access counters plus on-chip access counters.
+/// Cleared per inference by the engine (`reset`), accumulated into
+/// [`crate::energy::InferenceReport`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AccessCounters {
+    /// Pointer-section row reads (phase 1).
+    pub pointer_rows: u64,
+    /// Synapse-section row reads (phase 2).
+    pub synapse_rows: u64,
+    /// Synapse entries actually consumed (events delivered).
+    pub events: u64,
+    /// URAM membrane-register accesses (neuron update sweeps).
+    pub uram_accesses: u64,
+    /// BRAM axon/spike-register accesses.
+    pub bram_accesses: u64,
+}
+
+impl AccessCounters {
+    pub fn hbm_rows(&self) -> u64 {
+        self.pointer_rows + self.synapse_rows
+    }
+
+    pub fn add(&mut self, other: &AccessCounters) {
+        self.pointer_rows += other.pointer_rows;
+        self.synapse_rows += other.synapse_rows;
+        self.events += other.events;
+        self.uram_accesses += other.uram_accesses;
+        self.bram_accesses += other.bram_accesses;
+    }
+}
+
+/// The HBM port of one core: wraps a compiled [`HbmImage`] with access
+/// accounting. The engine calls `fetch_axon_pointers` /
+/// `fetch_neuron_pointers` (phase 1) and `read_region` (phase 2).
+#[derive(Clone, Debug)]
+pub struct HbmSim {
+    pub image: HbmImage,
+    pub counters: AccessCounters,
+}
+
+impl HbmSim {
+    pub fn new(image: HbmImage) -> Self {
+        Self { image, counters: AccessCounters::default() }
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.counters = AccessCounters::default();
+    }
+
+    /// Phase 1 for axons: fetch pointers for the fired axon ids.
+    ///
+    /// Pointer rows hold 16 pointers each, so a batch of fired sources
+    /// whose pointers share a row costs a single row read (HBM burst) —
+    /// `fired` must be sorted ascending for the dedup to be exact, which
+    /// the engine guarantees (spike registers are scanned in order).
+    pub fn fetch_axon_pointers(&mut self, fired: &[u32], out: &mut Vec<Pointer>) {
+        let mut last_row = u32::MAX;
+        for &a in fired {
+            let row = self.image.axon_ptr_row[a as usize];
+            if row != last_row {
+                self.counters.pointer_rows += 1;
+                last_row = row;
+            }
+            out.push(self.image.axon_ptr[a as usize]);
+        }
+    }
+
+    /// Phase 1 for neurons (same row-burst dedup; `fired` sorted by the
+    /// engine in model-grouped pointer order).
+    pub fn fetch_neuron_pointers(&mut self, fired: &[u32], out: &mut Vec<Pointer>) {
+        let mut last_row = u32::MAX;
+        for &nidx in fired {
+            let row = self.image.neuron_ptr_row[nidx as usize];
+            if row != last_row {
+                self.counters.pointer_rows += 1;
+                last_row = row;
+            }
+            out.push(self.image.neuron_ptr[nidx as usize]);
+        }
+    }
+
+    /// Phase 2: stream a source's synapse region, invoking `f` per valid
+    /// entry. Counts one row access per region row.
+    ///
+    /// §Perf: iterates set bits of the row occupancy mask rather than
+    /// scanning all 16 slots (regions are ~30% dense on converted nets).
+    /// Accounting is unchanged — rows are still fetched whole.
+    #[inline]
+    pub fn read_region<F: FnMut(&SynEntry)>(&mut self, ptr: Pointer, mut f: F) {
+        let (s, e) = (ptr.start_row as usize, (ptr.start_row + ptr.rows) as usize);
+        self.counters.synapse_rows += ptr.rows as u64;
+        let masks = &self.image.row_mask[s..e];
+        for (row, &mask) in self.image.syn_rows[s..e].iter().zip(masks) {
+            let mut m = mask;
+            while m != 0 {
+                let slot = m.trailing_zeros() as usize;
+                m &= m - 1;
+                self.counters.events += 1;
+                f(&row[slot]);
+            }
+        }
+    }
+
+    /// Cycle cost of this step's routing phases under the paper's
+    /// microarchitecture: the HBM port streams one row per clock after a
+    /// fixed access setup, 16 lanes consume a row in parallel.
+    pub fn phase_cycles(&self, pointer_rows: u64, synapse_rows: u64) -> u64 {
+        // CAS-to-data overhead amortised over bursts: model as +2 cycles
+        // per row stream (segment = 2 rows).
+        pointer_rows * 2 + synapse_rows * 2
+    }
+
+    /// Membrane-update sweep cycles: N neurons over 16 parallel lanes.
+    pub fn update_cycles(&self) -> u64 {
+        (self.image.n_neurons as u64).div_ceil(ROW_SLOTS as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hbm::SlotStrategy;
+    use crate::snn::{NetworkBuilder, NeuronModel};
+
+    fn chain_net(n: usize) -> crate::snn::Network {
+        // n neurons in a chain, one axon driving neuron 0
+        let m = NeuronModel::if_neuron(0);
+        let mut b = NetworkBuilder::new();
+        for i in 0..n {
+            let next = format!("n{}", i + 1);
+            let syns: Vec<(&str, i32)> =
+                if i + 1 < n { vec![(Box::leak(next.into_boxed_str()), 1)] } else { vec![] };
+            b.add_neuron(&format!("n{i}"), m, &syns).unwrap();
+        }
+        b.add_axon("in", &[("n0", 1)]).unwrap();
+        b.add_output(&format!("n{}", n - 1));
+        b.build().unwrap().0
+    }
+
+    #[test]
+    fn pointer_row_dedup() {
+        let net = chain_net(40);
+        let img = HbmImage::compile(&net, SlotStrategy::Modulo).unwrap();
+        let mut sim = HbmSim::new(img);
+        // 20 fired neurons with consecutive ids share pointer rows (16/row)
+        let fired: Vec<u32> = (0..20).collect();
+        let mut ptrs = Vec::new();
+        sim.fetch_neuron_pointers(&fired, &mut ptrs);
+        assert_eq!(ptrs.len(), 20);
+        // ids 0..15 -> row 0, ids 16..19 -> row 1 (model-grouped order is
+        // identity here: single model)
+        assert_eq!(sim.counters.pointer_rows, 2);
+    }
+
+    #[test]
+    fn region_read_counts_rows_and_events() {
+        let net = chain_net(8);
+        let img = HbmImage::compile(&net, SlotStrategy::Modulo).unwrap();
+        let mut sim = HbmSim::new(img);
+        let ptr = sim.image.neuron_ptr[0];
+        let mut seen = Vec::new();
+        sim.read_region(ptr, |e| seen.push((e.target, e.weight)));
+        assert_eq!(seen, vec![(1, 1)]);
+        assert_eq!(sim.counters.synapse_rows, ptr.rows as u64);
+        assert_eq!(sim.counters.events, 1);
+    }
+
+    #[test]
+    fn dummy_rows_do_not_emit_events() {
+        let net = chain_net(4);
+        let img = HbmImage::compile(&net, SlotStrategy::Modulo).unwrap();
+        let mut sim = HbmSim::new(img);
+        // last neuron is a leaf: dummy row, no events (weight 0 filtered)
+        let ptr = sim.image.neuron_ptr[3];
+        let mut count = 0;
+        sim.read_region(ptr, |_| count += 1);
+        assert_eq!(count, 0);
+        assert_eq!(sim.counters.synapse_rows, 1);
+    }
+
+    #[test]
+    fn counters_accumulate_and_reset() {
+        let mut c = AccessCounters::default();
+        c.add(&AccessCounters { pointer_rows: 2, synapse_rows: 3, events: 5, ..Default::default() });
+        c.add(&AccessCounters { pointer_rows: 1, synapse_rows: 1, events: 1, ..Default::default() });
+        assert_eq!(c.hbm_rows(), 7);
+        assert_eq!(c.events, 6);
+    }
+}

@@ -1,0 +1,40 @@
+//! HiAER-Spike: a software/hardware reconfigurable platform for event-driven
+//! neuromorphic computing at scale — full-system reproduction on a simulated
+//! FPGA substrate.
+//!
+//! The crate is organised as the paper's stack:
+//!
+//! * [`snn`] — network model primitives (axons, neurons, neuron models,
+//!   synapses) mirroring the `hs_api` Python interface.
+//! * [`hbm`] — the per-core HBM synaptic routing table simulator
+//!   (adjacency-list storage, 16-slot segments, alignment-aware packing,
+//!   access counting).
+//! * [`engine`] — single-core two-phase event-driven execution engine
+//!   ("grey matter").
+//! * [`router`] — hierarchical address-event routing between cores, FPGAs
+//!   and servers ("white matter", HiAER levels: NoC / FireFly / Ethernet).
+//! * [`partition`] — network partitioning and resource allocation across
+//!   the cluster.
+//! * [`convert`] — PyTorch-style layer-graph → HiAER-Spike network
+//!   conversion (Supplementary A.2).
+//! * [`runtime`] — PJRT/XLA runtime that loads the AOT-compiled JAX/Pallas
+//!   artifacts and executes the neuron-update hot path.
+//! * [`cluster`] — multi-core / multi-FPGA / multi-server orchestration,
+//!   job queue and NSG-portal-like front end.
+//! * [`energy`] — HBM-access energy and clock-cycle latency model.
+//! * [`util`] — substrate utilities written in-repo because the build is
+//!   fully offline (PRNG, JSON, CLI parsing, property testing).
+
+pub mod cluster;
+pub mod convert;
+pub mod harness;
+pub mod energy;
+pub mod engine;
+pub mod hbm;
+pub mod metrics;
+pub mod model_fmt;
+pub mod partition;
+pub mod router;
+pub mod runtime;
+pub mod snn;
+pub mod util;

@@ -1,0 +1,274 @@
+//! `hiaer-spike` — the leader/coordinator CLI.
+//!
+//! Subcommands:
+//!   info    <net.hsn>                 network + HBM layout summary
+//!   run     <net.hsn> <stimulus.txt>  execute a network on the cluster sim
+//!   convert <model.hsl> <out.hsn>     PyTorch layer graph -> network
+//!   serve   <spool-dir>               NSG-style job daemon (poll a dir)
+//!   bench-step <net.hsn>              steps/s of the hot loop
+//!
+//! Common options: --servers/--fpgas/--cores (topology), --steps,
+//! --seed, --strategy modulo|balance, --backend rust|xla,
+//! --artifacts <dir>.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use hiaer_spike::cluster::{run_job, Job, JobQueue, JobStatus, MultiCoreEngine};
+use hiaer_spike::cluster::parse_stimulus;
+use hiaer_spike::convert::{convert, BiasMode};
+use hiaer_spike::energy::EnergyModel;
+use hiaer_spike::engine::{CoreEngine, RustBackend};
+use hiaer_spike::hbm::{HbmImage, SlotStrategy};
+use hiaer_spike::model_fmt::{hsl::read_hsl, read_hsn, write_hsn};
+use hiaer_spike::partition::{ClusterTopology, CoreCapacity};
+use hiaer_spike::runtime::{Runtime, XlaBackend};
+use hiaer_spike::util::cli::Args;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::parse_env(&["verbose", "xla", "help", "once"]).map_err(|e| anyhow!(e))?;
+    if args.flag("help") || args.positional.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    match args.positional[0].as_str() {
+        "info" => cmd_info(&args),
+        "run" => cmd_run(&args),
+        "convert" => cmd_convert(&args),
+        "serve" => cmd_serve(&args),
+        "bench-step" => cmd_bench_step(&args),
+        other => bail!("unknown subcommand {other:?} (try --help)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "hiaer-spike — event-driven neuromorphic platform (simulated substrate)\n\
+         \n\
+         USAGE: hiaer-spike <subcommand> [options]\n\
+         \n\
+         SUBCOMMANDS\n\
+           info <net.hsn>                  network + HBM layout summary\n\
+           run <net.hsn> <stimulus.txt>    execute on the cluster simulator\n\
+           convert <model.hsl> <out.hsn>   layer graph -> network (Supp A.2)\n\
+           serve <spool-dir>               job daemon: runs <id>.job files\n\
+           bench-step <net.hsn>            hot-loop steps/s\n\
+         \n\
+         OPTIONS\n\
+           --servers N --fpgas N --cores N   topology (default 1/1/1)\n\
+           --steps N                         steps for bench-step (default 1000)\n\
+           --strategy modulo|balance         HBM slot assignment (default balance)\n\
+           --bias threshold|axon             converter bias mode\n\
+           --backend rust|xla                membrane-update backend\n\
+           --artifacts DIR                   AOT artifact dir (default artifacts/)\n\
+           --workers N                       serve: parallel jobs (default 2)\n\
+           --once                            serve: single spool pass, then exit"
+    );
+}
+
+fn topology(args: &Args) -> Result<ClusterTopology> {
+    Ok(ClusterTopology {
+        servers: args.get_usize("servers", 1).map_err(|e| anyhow!(e))?,
+        fpgas_per_server: args.get_usize("fpgas", 1).map_err(|e| anyhow!(e))?,
+        cores_per_fpga: args.get_usize("cores", 1).map_err(|e| anyhow!(e))?,
+    })
+}
+
+fn strategy(args: &Args) -> Result<SlotStrategy> {
+    match args.get_or("strategy", "balance") {
+        "modulo" => Ok(SlotStrategy::Modulo),
+        "balance" => Ok(SlotStrategy::BalanceFanIn),
+        s => bail!("bad --strategy {s:?}"),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let path = args.positional.get(1).context("info: missing <net.hsn>")?;
+    let net = read_hsn(path)?;
+    let strat = strategy(args)?;
+    let image = HbmImage::compile(&net, strat)?;
+    println!("network {path}");
+    println!("  neurons:  {}", net.n_neurons());
+    println!("  axons:    {}", net.n_axons());
+    println!("  synapses: {}", net.n_synapses());
+    println!("  outputs:  {}", net.outputs.len());
+    println!("  models:   {}", image.models.len());
+    println!("hbm layout ({strat:?})");
+    println!("  synapse rows:    {}", image.stats.synapse_rows);
+    println!("  packing density: {:.3}", image.stats.packing_density);
+    println!("  dummy slots:     {}", image.stats.dummy_slots);
+    println!("  total bytes:     {}", image.stats.total_bytes);
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let net_path = args.positional.get(1).context("run: missing <net.hsn>")?;
+    let stim_path = args.positional.get(2).context("run: missing <stimulus.txt>")?;
+    let stim_text =
+        std::fs::read_to_string(stim_path).with_context(|| format!("reading {stim_path}"))?;
+    let stimulus = parse_stimulus(&stim_text)?;
+    let topo = topology(args)?;
+    let job = Job { id: 0, net_path: PathBuf::from(net_path), stimulus, topology: topo };
+    let r = run_job(&job, &EnergyModel::default());
+    match r.status {
+        JobStatus::Done => {
+            for (t, spikes) in r.spikes.iter().enumerate() {
+                if !spikes.is_empty() {
+                    let ids: Vec<String> = spikes.iter().map(|s| s.to_string()).collect();
+                    println!("t={t}: {}", ids.join(" "));
+                }
+            }
+            println!("# energy_uj={:.3} latency_us={:.3}", r.energy_uj, r.latency_us);
+            Ok(())
+        }
+        s => bail!("job failed: {s:?}"),
+    }
+}
+
+fn cmd_convert(args: &Args) -> Result<()> {
+    let hsl_path = args.positional.get(1).context("convert: missing <model.hsl>")?;
+    let out_path = args.positional.get(2).context("convert: missing <out.hsn>")?;
+    let bias = match args.get_or("bias", "threshold") {
+        "threshold" => BiasMode::Threshold,
+        "axon" => BiasMode::Axon,
+        s => bail!("bad --bias {s:?}"),
+    };
+    let seed = args.get_u32("seed", 0).map_err(|e| anyhow!(e))?;
+    let graph = read_hsl(hsl_path)?;
+    let t0 = Instant::now();
+    let conv = convert(&graph, bias, seed)?;
+    write_hsn(&conv.net, out_path)?;
+    println!(
+        "converted {} -> {} ({} neurons, {} synapses, {} input axons, T={}) in {:.2?}",
+        hsl_path,
+        out_path,
+        conv.net.n_neurons(),
+        conv.net.n_synapses(),
+        conv.n_input_axons,
+        conv.timesteps,
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+/// serve: poll <spool>/ for `<name>.job` files of the form
+///   line 1: path to .hsn
+///   rest:   stimulus lines
+/// and write `<name>.result` next to them.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let spool = args.positional.get(1).context("serve: missing <spool-dir>")?;
+    let spool = Path::new(spool);
+    std::fs::create_dir_all(spool)?;
+    let workers = args.get_usize("workers", 2).map_err(|e| anyhow!(e))?;
+    let topo = topology(args)?;
+    let queue = JobQueue::start(workers, EnergyModel::default());
+    println!("serving spool {} with {workers} workers", spool.display());
+    let mut next_id = 0u64;
+    let mut names: std::collections::HashMap<u64, String> = Default::default();
+    loop {
+        let mut submitted = false;
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(spool)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().map(|e| e == "job") == Some(true))
+            .collect();
+        entries.sort();
+        for path in entries {
+            let text = std::fs::read_to_string(&path)?;
+            let mut lines = text.lines();
+            let net_path = lines.next().context("empty job file")?.trim().to_string();
+            let stim_text: String = lines.map(|l| format!("{l}\n")).collect();
+            let stimulus = parse_stimulus(&stim_text)?;
+            let id = next_id;
+            next_id += 1;
+            names.insert(
+                id,
+                path.file_stem().unwrap_or_default().to_string_lossy().to_string(),
+            );
+            queue.submit(Job { id, net_path: PathBuf::from(net_path), stimulus, topology: topo });
+            std::fs::rename(&path, path.with_extension("taken"))?;
+            submitted = true;
+        }
+        if submitted {
+            for r in queue.drain() {
+                let name = names.get(&r.id).cloned().unwrap_or_else(|| r.id.to_string());
+                let out = spool.join(format!("{name}.result"));
+                let mut text = format!("status: {:?}\n", r.status);
+                for (t, s) in r.spikes.iter().enumerate() {
+                    let ids: Vec<String> = s.iter().map(|x| x.to_string()).collect();
+                    text.push_str(&format!("t={t}: {}\n", ids.join(" ")));
+                }
+                text.push_str(&format!(
+                    "energy_uj: {:.3}\nlatency_us: {:.3}\n",
+                    r.energy_uj, r.latency_us
+                ));
+                std::fs::write(out, text)?;
+            }
+        }
+        if args.flag("once") {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+    queue.shutdown();
+    Ok(())
+}
+
+fn cmd_bench_step(args: &Args) -> Result<()> {
+    let net_path = args.positional.get(1).context("bench-step: missing <net.hsn>")?;
+    let steps = args.get_usize("steps", 1000).map_err(|e| anyhow!(e))?;
+    let net = read_hsn(net_path)?;
+    let strat = strategy(args)?;
+    let axons: Vec<u32> = (0..net.n_axons() as u32).step_by(2).collect();
+
+    let use_xla = args.get_or("backend", "rust") == "xla" || args.flag("xla");
+    let t0 = Instant::now();
+    let (events, cycles) = if use_xla {
+        let dir = args.get_or("artifacts", "artifacts").to_string();
+        let rt = std::sync::Arc::new(Runtime::cpu(&dir)?);
+        let backend = XlaBackend::new(rt, net.n_neurons())?;
+        let mut core = CoreEngine::new(&net, strat, backend)?;
+        for _ in 0..steps {
+            core.step(&axons)?;
+        }
+        (core.counters().events, core.cycles)
+    } else {
+        let mut core = CoreEngine::new(&net, strat, RustBackend)?;
+        for _ in 0..steps {
+            core.step(&axons)?;
+        }
+        (core.counters().events, core.cycles)
+    };
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{steps} steps in {dt:.3}s = {:.0} steps/s, {:.0} synaptic events/s \
+         (backend={}, sim cycles={cycles})",
+        steps as f64 / dt,
+        events as f64 / dt,
+        if use_xla { "xla" } else { "rust" },
+    );
+    // also run the topology-aware path when topology > 1 core
+    let topo = topology(args)?;
+    if topo.n_cores() > 1 {
+        let mut mc = MultiCoreEngine::new(&net, topo, CoreCapacity::default(), strat)?;
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            mc.step(&axons)?;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "multicore ({} cores): {:.0} steps/s",
+            mc.partition.n_used_cores(),
+            steps as f64 / dt
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Run-level metrics aggregation: wall-clock throughput of the
+//! coordinator, spike/event rates, and per-inference cost series used by
+//! the benches to print the paper's mean±SD rows.
+
+use std::time::Instant;
+
+use crate::energy::CostReport;
+use crate::util::stats::mean_std;
+
+/// Aggregates per-inference cost reports into the Table-2 style summary.
+#[derive(Clone, Debug, Default)]
+pub struct CostSeries {
+    pub energy_uj: Vec<f64>,
+    pub latency_us: Vec<f64>,
+    pub hbm_rows: Vec<f64>,
+    pub events: Vec<f64>,
+}
+
+impl CostSeries {
+    pub fn push(&mut self, r: &CostReport) {
+        self.energy_uj.push(r.energy_uj);
+        self.latency_us.push(r.latency_us);
+        self.hbm_rows.push(r.hbm_rows as f64);
+        self.events.push(r.events as f64);
+    }
+
+    pub fn energy_mean_std(&self) -> (f64, f64) {
+        mean_std(&self.energy_uj)
+    }
+
+    pub fn latency_mean_std(&self) -> (f64, f64) {
+        mean_std(&self.latency_us)
+    }
+
+    pub fn len(&self) -> usize {
+        self.energy_uj.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.energy_uj.is_empty()
+    }
+}
+
+/// Wall-clock throughput meter for the coordinator hot path.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    pub items: u64,
+    pub events: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Self { start: Instant::now(), items: 0, events: 0 }
+    }
+
+    pub fn record(&mut self, items: u64, events: u64) {
+        self.items += items;
+        self.events += events;
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn items_per_s(&self) -> f64 {
+        self.items as f64 / self.elapsed_s().max(1e-12)
+    }
+
+    pub fn events_per_s(&self) -> f64 {
+        self.events as f64 / self.elapsed_s().max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_series_stats() {
+        let mut s = CostSeries::default();
+        for e in [1.0, 2.0, 3.0] {
+            s.push(&CostReport { energy_uj: e, latency_us: e * 10.0, ..Default::default() });
+        }
+        let (m, _) = s.energy_mean_std();
+        assert!((m - 2.0).abs() < 1e-12);
+        let (ml, _) = s.latency_mean_std();
+        assert!((ml - 20.0).abs() < 1e-12);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.record(10, 100);
+        t.record(5, 50);
+        assert_eq!(t.items, 15);
+        assert_eq!(t.events, 150);
+        assert!(t.items_per_s() > 0.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Loaders for `artifacts/golden/*.json` — the cross-language test
+//! vectors emitted by `python/compile/aot.py`. Checked bit-exactly by
+//! `rust/tests/golden.rs`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+fn load(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))
+}
+
+fn field<'a>(j: &'a Json, k: &str) -> Result<&'a Json> {
+    j.get(k).ok_or_else(|| anyhow!("missing field {k}"))
+}
+
+fn i32s(j: &Json, k: &str) -> Result<Vec<i32>> {
+    field(j, k)?.i32_vec().ok_or_else(|| anyhow!("field {k} not an int array"))
+}
+
+/// prng.json: pinned mix_seed / noise17 samples.
+pub struct PrngGolden {
+    /// (base_seed, step, expected)
+    pub mix_seed: Vec<(u32, u32, u32)>,
+    /// (seed, idx, expected)
+    pub noise17: Vec<(u32, u32, i32)>,
+}
+
+pub fn load_prng(path: &Path) -> Result<PrngGolden> {
+    let j = load(path)?;
+    let tri = |k: &str| -> Result<Vec<(i64, i64, i64)>> {
+        field(&j, k)?
+            .as_arr()
+            .ok_or_else(|| anyhow!("{k} not array"))?
+            .iter()
+            .map(|row| {
+                let v = row.int_vec().ok_or_else(|| anyhow!("{k} row not ints"))?;
+                Ok((v[0], v[1], v[2]))
+            })
+            .collect()
+    };
+    Ok(PrngGolden {
+        mix_seed: tri("mix_seed")?
+            .into_iter()
+            .map(|(a, b, c)| (a as u32, b as u32, c as u32))
+            .collect(),
+        noise17: tri("noise17")?
+            .into_iter()
+            .map(|(a, b, c)| (a as u32, b as u32, c as i32))
+            .collect(),
+    })
+}
+
+/// neuron_update.json: one randomized phase-1..3 update.
+pub struct NeuronUpdateGolden {
+    pub step_seed: u32,
+    pub v: Vec<i32>,
+    pub theta: Vec<i32>,
+    pub nu: Vec<i32>,
+    pub lam: Vec<i32>,
+    pub flags: Vec<i32>,
+    pub v_out: Vec<i32>,
+    pub spikes: Vec<i32>,
+}
+
+pub fn load_neuron_update(path: &Path) -> Result<NeuronUpdateGolden> {
+    let j = load(path)?;
+    Ok(NeuronUpdateGolden {
+        step_seed: field(&j, "step_seed")?.as_i64().unwrap_or(0) as u32,
+        v: i32s(&j, "v")?,
+        theta: i32s(&j, "theta")?,
+        nu: i32s(&j, "nu")?,
+        lam: i32s(&j, "lam")?,
+        flags: i32s(&j, "flags")?,
+        v_out: i32s(&j, "v_out")?,
+        spikes: i32s(&j, "spikes")?,
+    })
+}
+
+/// synapse_accum.json.
+pub struct SynapseAccumGolden {
+    pub n: usize,
+    pub v: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub weights: Vec<i32>,
+    pub v_out: Vec<i32>,
+}
+
+pub fn load_synapse_accum(path: &Path) -> Result<SynapseAccumGolden> {
+    let j = load(path)?;
+    Ok(SynapseAccumGolden {
+        n: field(&j, "n")?.as_i64().unwrap_or(0) as usize,
+        v: i32s(&j, "v")?,
+        targets: i32s(&j, "targets")?,
+        weights: i32s(&j, "weights")?,
+        v_out: i32s(&j, "v_out")?,
+    })
+}
+
+/// dense_net.json: a 12-step dense-network trace.
+pub struct DenseNetGolden {
+    pub n: usize,
+    pub a: usize,
+    pub steps: usize,
+    pub base_seed: u32,
+    pub w_neuron: Vec<Vec<i32>>,
+    pub w_axon: Vec<Vec<i32>>,
+    pub theta: Vec<i32>,
+    pub nu: Vec<i32>,
+    pub lam: Vec<i32>,
+    pub flags: Vec<i32>,
+    pub axon_seq: Vec<Vec<i32>>,
+    pub spikes: Vec<Vec<i32>>,
+    pub v: Vec<Vec<i32>>,
+}
+
+pub fn load_dense_net(path: &Path) -> Result<DenseNetGolden> {
+    let j = load(path)?;
+    let mat = |k: &str| -> Result<Vec<Vec<i32>>> {
+        field(&j, k)?
+            .as_arr()
+            .ok_or_else(|| anyhow!("{k} not array"))?
+            .iter()
+            .map(|row| row.i32_vec().ok_or_else(|| anyhow!("{k} row not ints")))
+            .collect()
+    };
+    Ok(DenseNetGolden {
+        n: field(&j, "n")?.as_i64().unwrap_or(0) as usize,
+        a: field(&j, "a")?.as_i64().unwrap_or(0) as usize,
+        steps: field(&j, "steps")?.as_i64().unwrap_or(0) as usize,
+        base_seed: field(&j, "base_seed")?.as_i64().unwrap_or(0) as u32,
+        w_neuron: mat("w_neuron")?,
+        w_axon: mat("w_axon")?,
+        theta: i32s(&j, "theta")?,
+        nu: i32s(&j, "nu")?,
+        lam: i32s(&j, "lam")?,
+        flags: i32s(&j, "flags")?,
+        axon_seq: mat("axon_seq")?,
+        spikes: mat("spikes")?,
+        v: mat("v")?,
+    })
+}

@@ -1,0 +1,292 @@
+//! `.hsl` trained layer-graph format.
+//!
+//! Written by the Python training pipeline (`python/train/export.py`)
+//! after quantization-aware training: a feed-forward stack of conv /
+//! fully-connected / max-pool layers with int16 weights and int32 biases,
+//! plus the input shape and the rate-coding timestep count. The Rust
+//! converter ([`crate::convert`]) turns this into a HiAER-Spike network
+//! following Supplementary A.2.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic     8B "HSLAY1\0\0"
+//! header    u32 version, u8 neuron_kind (0=ANN binary, 1=IF),
+//!           u32 in_c, u32 in_h, u32 in_w, u32 timesteps, u32 n_layers
+//! layer     u8 kind:
+//!   0 conv: u32 out_c, kh, kw, stride, pad; i32 theta; u8 has_bias;
+//!           i16 w[out_c][in_c][kh][kw]; (i32 bias[out_c])
+//!   1 fc:   u32 out_features; i32 theta; u8 has_bias;
+//!           i16 w[out][in]; (i32 bias[out])
+//!   2 pool: u32 k, u32 stride           (max pool, threshold-OR neurons)
+//! ```
+
+use std::fs::File;
+use std::io::BufReader;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Reader;
+
+pub const HSL_MAGIC: &[u8; 8] = b"HSLAY1\x00\x00";
+
+/// Neuron class used for every layer of the converted model (paper §6:
+/// MNIST models use ANN binary neurons; spiking CNNs use IF neurons,
+/// i.e. LIF with membrane time constant 2^63).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NeuronKind {
+    AnnBinary,
+    IntegrateFire,
+}
+
+#[derive(Clone, Debug)]
+pub enum Layer {
+    Conv {
+        out_c: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        theta: i32,
+        /// [out_c][in_c][kh][kw], row-major
+        weights: Vec<i16>,
+        bias: Option<Vec<i32>>,
+    },
+    Fc {
+        out_features: usize,
+        theta: i32,
+        /// [out][in], row-major
+        weights: Vec<i16>,
+        bias: Option<Vec<i32>>,
+    },
+    MaxPool {
+        k: usize,
+        stride: usize,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerGraph {
+    pub neuron_kind: NeuronKind,
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub timesteps: usize,
+    pub layers: Vec<Layer>,
+}
+
+impl LayerGraph {
+    /// Output (c, h, w) after each layer; `usize::MAX` height/width marks
+    /// post-flatten FC stages (c = features).
+    pub fn shapes(&self) -> Result<Vec<(usize, usize, usize)>> {
+        let mut shapes = vec![(self.in_c, self.in_h, self.in_w)];
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (c, h, w) = *shapes.last().unwrap();
+            let next = match layer {
+                Layer::Conv { out_c, kh, kw, stride, pad, weights, .. } => {
+                    if h == usize::MAX {
+                        bail!("layer {li}: conv after flatten");
+                    }
+                    if weights.len() != out_c * c * kh * kw {
+                        bail!(
+                            "layer {li}: weight count {} != {out_c}x{c}x{kh}x{kw}",
+                            weights.len()
+                        );
+                    }
+                    let oh = (h + 2 * pad).checked_sub(*kh).map(|x| x / stride + 1);
+                    let ow = (w + 2 * pad).checked_sub(*kw).map(|x| x / stride + 1);
+                    match (oh, ow) {
+                        (Some(oh), Some(ow)) if oh > 0 && ow > 0 => (*out_c, oh, ow),
+                        _ => bail!("layer {li}: kernel larger than input"),
+                    }
+                }
+                Layer::Fc { out_features, weights, .. } => {
+                    let in_features = if h == usize::MAX { c } else { c * h * w };
+                    if weights.len() != out_features * in_features {
+                        bail!(
+                            "layer {li}: weight count {} != {out_features}x{in_features}",
+                            weights.len()
+                        );
+                    }
+                    (*out_features, usize::MAX, usize::MAX)
+                }
+                Layer::MaxPool { k, stride } => {
+                    if h == usize::MAX {
+                        bail!("layer {li}: pool after flatten");
+                    }
+                    if *k > h || *k > w {
+                        bail!("layer {li}: pool window larger than input");
+                    }
+                    (c, (h - k) / stride + 1, (w - k) / stride + 1)
+                }
+            };
+            shapes.push(next);
+        }
+        Ok(shapes)
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.in_c * self.in_h * self.in_w
+    }
+}
+
+pub fn read_hsl<P: AsRef<Path>>(path: P) -> Result<LayerGraph> {
+    let f = File::open(&path)
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut r = Reader::new(BufReader::new(f));
+    r.magic(HSL_MAGIC)?;
+    let version = r.u32()?;
+    if version != 1 {
+        bail!("unsupported .hsl version {version}");
+    }
+    let neuron_kind = match r.u8()? {
+        0 => NeuronKind::AnnBinary,
+        1 => NeuronKind::IntegrateFire,
+        k => bail!("unknown neuron kind {k}"),
+    };
+    let in_c = r.u32()? as usize;
+    let in_h = r.u32()? as usize;
+    let in_w = r.u32()? as usize;
+    let timesteps = r.u32()? as usize;
+    let n_layers = r.u32()? as usize;
+
+    let mut layers = Vec::with_capacity(n_layers);
+    // track input features for weight-count reads
+    let (mut c, mut h, mut w) = (in_c, in_h, in_w);
+    for li in 0..n_layers {
+        match r.u8()? {
+            0 => {
+                let out_c = r.u32()? as usize;
+                let kh = r.u32()? as usize;
+                let kw = r.u32()? as usize;
+                let stride = r.u32()? as usize;
+                let pad = r.u32()? as usize;
+                let theta = r.i32()?;
+                let has_bias = r.u8()? != 0;
+                if stride == 0 {
+                    bail!("layer {li}: zero stride");
+                }
+                let weights = r.i16_vec(out_c * c * kh * kw)?;
+                let bias = if has_bias { Some(r.i32_vec(out_c)?) } else { None };
+                layers.push(Layer::Conv { out_c, kh, kw, stride, pad, theta, weights, bias });
+                h = (h + 2 * pad - kh) / stride + 1;
+                w = (w + 2 * pad - kw) / stride + 1;
+                c = out_c;
+            }
+            1 => {
+                let out_features = r.u32()? as usize;
+                let theta = r.i32()?;
+                let has_bias = r.u8()? != 0;
+                let in_features = if h == usize::MAX { c } else { c * h * w };
+                let weights = r.i16_vec(out_features * in_features)?;
+                let bias = if has_bias { Some(r.i32_vec(out_features)?) } else { None };
+                layers.push(Layer::Fc { out_features, theta, weights, bias });
+                c = out_features;
+                h = usize::MAX;
+                w = usize::MAX;
+            }
+            2 => {
+                let k = r.u32()? as usize;
+                let stride = r.u32()? as usize;
+                if stride == 0 || k == 0 {
+                    bail!("layer {li}: zero pool params");
+                }
+                layers.push(Layer::MaxPool { k, stride });
+                h = (h - k) / stride + 1;
+                w = (w - k) / stride + 1;
+            }
+            k => bail!("layer {li}: unknown layer kind {k}"),
+        }
+    }
+    let g = LayerGraph { neuron_kind, in_c, in_h, in_w, timesteps, layers };
+    g.shapes()?; // validate
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_fmt::Writer;
+
+    fn write_test_hsl(path: &Path) {
+        let mut w = Writer::new();
+        w.buf.extend_from_slice(HSL_MAGIC);
+        w.u32(1); // version
+        w.u8(1); // IF
+        w.u32(1); // in_c
+        w.u32(6); // in_h
+        w.u32(6); // in_w
+        w.u32(4); // timesteps
+        w.u32(3); // layers
+        // conv: 2 filters 3x3 stride 1 pad 0 -> (2,4,4)
+        w.u8(0);
+        w.u32(2);
+        w.u32(3);
+        w.u32(3);
+        w.u32(1);
+        w.u32(0);
+        w.i32(10); // theta
+        w.u8(0); // no bias
+        for i in 0..(2 * 1 * 3 * 3) {
+            w.i16(i as i16 - 9);
+        }
+        // pool 2x2 stride 2 -> (2,2,2)
+        w.u8(2);
+        w.u32(2);
+        w.u32(2);
+        // fc: 8 -> 3
+        w.u8(1);
+        w.u32(3);
+        w.i32(5);
+        w.u8(1); // bias
+        for i in 0..(3 * 8) {
+            w.i16(i as i16);
+        }
+        for i in 0..3 {
+            w.i32(i * 100);
+        }
+        std::fs::write(path, &w.buf).unwrap();
+    }
+
+    #[test]
+    fn read_and_shape_propagation() {
+        let p = std::env::temp_dir().join(format!("t_{}.hsl", std::process::id()));
+        write_test_hsl(&p);
+        let g = read_hsl(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(g.neuron_kind, NeuronKind::IntegrateFire);
+        assert_eq!(g.timesteps, 4);
+        let shapes = g.shapes().unwrap();
+        assert_eq!(shapes[0], (1, 6, 6));
+        assert_eq!(shapes[1], (2, 4, 4));
+        assert_eq!(shapes[2], (2, 2, 2));
+        assert_eq!(shapes[3], (3, usize::MAX, usize::MAX));
+        match &g.layers[2] {
+            Layer::Fc { bias: Some(b), .. } => assert_eq!(b, &vec![0, 100, 200]),
+            other => panic!("expected fc with bias, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shape_validation_errors() {
+        let g = LayerGraph {
+            neuron_kind: NeuronKind::AnnBinary,
+            in_c: 1,
+            in_h: 2,
+            in_w: 2,
+            timesteps: 1,
+            layers: vec![Layer::Conv {
+                out_c: 1,
+                kh: 5,
+                kw: 5,
+                stride: 1,
+                pad: 0,
+                theta: 0,
+                weights: vec![0; 25],
+                bias: None,
+            }],
+        };
+        assert!(g.shapes().is_err()); // kernel larger than input
+    }
+}

@@ -1,0 +1,201 @@
+//! `.hsn` flattened-network format.
+//!
+//! Layout (little-endian), mirrored by `hs_api.network.export_hsn`:
+//!
+//! ```text
+//! magic    8B  "HSNET1\0\0"
+//! header   u32 n_axons, u32 n_neurons, u32 n_outputs, u32 reserved,
+//!          i32 base_seed
+//! params   n_neurons x (i32 theta, i32 nu, i32 lam, i32 flags)
+//! neurons  per neuron: u32 count, count x (u32 target, i16 weight)
+//! axons    per axon:   u32 count, count x (u32 target, i16 weight)
+//! outputs  n_outputs x u32
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, Write as _};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Reader, Writer};
+use crate::snn::{Network, NeuronModel, Synapse};
+
+pub const HSN_MAGIC: &[u8; 8] = b"HSNET1\x00\x00";
+
+pub fn read_hsn<P: AsRef<Path>>(path: P) -> Result<Network> {
+    let f = File::open(&path)
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut r = Reader::new(BufReader::new(f));
+    r.magic(HSN_MAGIC)?;
+    let a = r.u32()? as usize;
+    let n = r.u32()? as usize;
+    let n_out = r.u32()? as usize;
+    let _reserved = r.u32()?;
+    let base_seed = r.i32()? as u32;
+
+    let mut params = Vec::with_capacity(n);
+    for _ in 0..n {
+        let theta = r.i32()?;
+        let nu = r.i32()?;
+        let lam = r.i32()?;
+        let flags = r.i32()?;
+        params.push(NeuronModel { theta, nu, lam, flags: flags as u32 });
+    }
+
+    let mut read_adj = |count: usize| -> Result<Vec<Vec<Synapse>>> {
+        let mut adj = Vec::with_capacity(count);
+        for _ in 0..count {
+            let deg = r.u32()? as usize;
+            let mut syns = Vec::with_capacity(deg);
+            for _ in 0..deg {
+                let target = r.u32()?;
+                let weight = r.i16()?;
+                if target as usize >= n {
+                    bail!("synapse target {target} out of range ({n} neurons)");
+                }
+                syns.push(Synapse { target, weight });
+            }
+            adj.push(syns);
+        }
+        Ok(adj)
+    };
+    let neuron_adj = read_adj(n)?;
+    let axon_adj = read_adj(a)?;
+
+    let mut outputs = Vec::with_capacity(n_out);
+    for _ in 0..n_out {
+        let o = r.u32()?;
+        if o as usize >= n {
+            bail!("output {o} out of range");
+        }
+        outputs.push(o);
+    }
+
+    let net = Network { params, neuron_adj, axon_adj, outputs, base_seed };
+    net.validate().map_err(|e| anyhow::anyhow!("invalid .hsn: {e}"))?;
+    Ok(net)
+}
+
+pub fn write_hsn<P: AsRef<Path>>(net: &Network, path: P) -> Result<()> {
+    let mut w = Writer::new();
+    w.buf.extend_from_slice(HSN_MAGIC);
+    w.u32(net.n_axons() as u32);
+    w.u32(net.n_neurons() as u32);
+    w.u32(net.outputs.len() as u32);
+    w.u32(0);
+    w.i32(net.base_seed as i32);
+    for p in &net.params {
+        w.i32(p.theta);
+        w.i32(p.nu);
+        w.i32(p.lam);
+        w.i32(p.flags as i32);
+    }
+    for adj in net.neuron_adj.iter().chain(net.axon_adj.iter()) {
+        w.u32(adj.len() as u32);
+        for s in adj {
+            w.u32(s.target);
+            w.i16(s.weight);
+        }
+    }
+    for &o in &net.outputs {
+        w.u32(o);
+    }
+    let mut f = File::create(&path)
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    f.write_all(&w.buf)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::NetworkBuilder;
+    use crate::util::prng::Xorshift32;
+    use crate::util::ptest;
+
+    fn temp_path(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("hiaer_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    fn sample_net(seed: u32) -> Network {
+        let mut rng = Xorshift32::new(seed);
+        let m1 = NeuronModel::if_neuron(rng.range_i32(1, 100));
+        let m2 = NeuronModel::ann(rng.range_i32(1, 50), -3, true).unwrap();
+        let mut b = NetworkBuilder::new().seed(seed);
+        let n = 20 + rng.below(40) as usize;
+        let keys: Vec<String> = (0..n).map(|i| format!("n{i}")).collect();
+        for i in 0..n {
+            let deg = rng.below(8) as usize;
+            let syns: Vec<(String, i32)> = (0..deg)
+                .map(|_| (keys[rng.below(n as u32) as usize].clone(), rng.range_i32(-99, 99)))
+                .collect();
+            let refs: Vec<(&str, i32)> = syns.iter().map(|(k, w)| (k.as_str(), *w)).collect();
+            b.add_neuron(&keys[i], if i % 2 == 0 { m1 } else { m2 }, &refs).unwrap();
+        }
+        b.add_axon("in0", &[("n0", 4), ("n1", -4)]).unwrap();
+        b.add_output("n0");
+        b.build().unwrap().0
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let net = sample_net(42);
+        let p = temp_path("roundtrip.hsn");
+        write_hsn(&net, &p).unwrap();
+        let got = read_hsn(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(got.params, net.params);
+        assert_eq!(got.neuron_adj, net.neuron_adj);
+        assert_eq!(got.axon_adj, net.axon_adj);
+        assert_eq!(got.outputs, net.outputs);
+        assert_eq!(got.base_seed, net.base_seed);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_networks() {
+        ptest::check("hsn_roundtrip", 20, |rng| {
+            let net = sample_net(rng.next_u32());
+            let p = temp_path(&format!("prop_{}.hsn", rng.next_u32()));
+            write_hsn(&net, &p).map_err(|e| e.to_string())?;
+            let got = read_hsn(&p).map_err(|e| e.to_string())?;
+            std::fs::remove_file(&p).ok();
+            ptest::prop_assert_eq(got.params, net.params, "params")?;
+            ptest::prop_assert_eq(got.neuron_adj, net.neuron_adj, "neuron_adj")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = temp_path("bad.hsn");
+        std::fs::write(&p, b"NOTMAGIC????????").unwrap();
+        assert!(read_hsn(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_out_of_range_target() {
+        let net = sample_net(1);
+        let p = temp_path("oor.hsn");
+        write_hsn(&net, &p).unwrap();
+        // corrupt a synapse target beyond n
+        let mut bytes = std::fs::read(&p).unwrap();
+        // first adjacency count is at 8 + 20 + 16n; find first nonzero count
+        let n = net.n_neurons();
+        let mut off = 28 + 16 * n;
+        loop {
+            let cnt = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+            off += 4;
+            if cnt > 0 {
+                bytes[off..off + 4].copy_from_slice(&(n as u32 + 9).to_le_bytes());
+                break;
+            }
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_hsn(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,115 @@
+//! Serialized model/network formats shared with the Python build path.
+//!
+//! * [`hsn`] — flattened networks (`.hsn`): written by
+//!   `hs_api.network.CRI_network.export_hsn` (and by Rust for
+//!   round-trips), compiled by the coordinator into HBM images.
+//! * [`hsl`] — trained layer graphs (`.hsl`): written by the Python
+//!   training pipeline (`python/train/export.py`); converted to networks
+//!   by [`crate::convert`] (Supp A.2).
+//! * [`golden`] — loaders for the `artifacts/golden/*.json` cross-language
+//!   test vectors.
+
+pub mod golden;
+pub mod hsl;
+pub mod hsn;
+
+pub use hsl::{Layer, LayerGraph, NeuronKind};
+pub use hsn::{read_hsn, write_hsn};
+
+use std::io::{self, Read};
+
+/// Little-endian primitive readers over any `Read`.
+pub(crate) struct Reader<R: Read> {
+    inner: R,
+}
+
+impl<R: Read> Reader<R> {
+    pub fn new(inner: R) -> Self {
+        Self { inner }
+    }
+
+    pub fn u8(&mut self) -> io::Result<u8> {
+        let mut b = [0u8; 1];
+        self.inner.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+
+    pub fn u32(&mut self) -> io::Result<u32> {
+        let mut b = [0u8; 4];
+        self.inner.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn i32(&mut self) -> io::Result<i32> {
+        let mut b = [0u8; 4];
+        self.inner.read_exact(&mut b)?;
+        Ok(i32::from_le_bytes(b))
+    }
+
+    pub fn i16(&mut self) -> io::Result<i16> {
+        let mut b = [0u8; 2];
+        self.inner.read_exact(&mut b)?;
+        Ok(i16::from_le_bytes(b))
+    }
+
+    pub fn magic(&mut self, expect: &[u8; 8]) -> io::Result<()> {
+        let mut b = [0u8; 8];
+        self.inner.read_exact(&mut b)?;
+        if &b != expect {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bad magic {:?}, expected {:?}", b, expect),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Bulk-read `count` i16 values.
+    pub fn i16_vec(&mut self, count: usize) -> io::Result<Vec<i16>> {
+        let mut bytes = vec![0u8; count * 2];
+        self.inner.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|c| i16::from_le_bytes([c[0], c[1]]))
+            .collect())
+    }
+
+    pub fn i32_vec(&mut self, count: usize) -> io::Result<Vec<i32>> {
+        let mut bytes = vec![0u8; count * 4];
+        self.inner.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Little-endian primitive writers.
+pub(crate) struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    #[allow(dead_code)] // used by the format tests' handwritten blobs
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i16(&mut self, v: i16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+pub mod testset;
+pub use testset::{read_hsd, Sample, TestSet};

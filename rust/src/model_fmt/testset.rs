@@ -1,0 +1,110 @@
+//! `.hsd` test-set format: labelled spike-frame samples written by
+//! `python/train/export.py::write_hsd`.
+//!
+//! ```text
+//! magic  8B "HSDATA1\0"
+//! header u32 n_samples, u32 frames_per_sample, u32 n_axons
+//! sample u8 label, then frames_per_sample x (u32 k, k x u32 axon ids)
+//! ```
+
+use std::fs::File;
+use std::io::BufReader;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Reader;
+
+pub const HSD_MAGIC: &[u8; 8] = b"HSDATA1\x00";
+
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub label: u8,
+    /// active axon ids per frame, ascending
+    pub frames: Vec<Vec<u32>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TestSet {
+    pub n_axons: usize,
+    pub frames_per_sample: usize,
+    pub samples: Vec<Sample>,
+}
+
+pub fn read_hsd<P: AsRef<Path>>(path: P) -> Result<TestSet> {
+    let f = File::open(&path)
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut r = Reader::new(BufReader::new(f));
+    r.magic(HSD_MAGIC)?;
+    let n_samples = r.u32()? as usize;
+    let frames_per_sample = r.u32()? as usize;
+    let n_axons = r.u32()? as usize;
+    let mut samples = Vec::with_capacity(n_samples);
+    for _ in 0..n_samples {
+        let label = r.u8()?;
+        let mut frames = Vec::with_capacity(frames_per_sample);
+        for _ in 0..frames_per_sample {
+            let k = r.u32()? as usize;
+            let mut ids = Vec::with_capacity(k);
+            for _ in 0..k {
+                let id = r.u32()?;
+                if id as usize >= n_axons {
+                    bail!("axon id {id} out of range ({n_axons})");
+                }
+                ids.push(id);
+            }
+            ids.sort_unstable();
+            ids.dedup();
+            frames.push(ids);
+        }
+        samples.push(Sample { label, frames });
+    }
+    Ok(TestSet { n_axons, frames_per_sample, samples })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_handwritten_blob() {
+        let mut b = Vec::new();
+        b.extend_from_slice(HSD_MAGIC);
+        b.extend_from_slice(&2u32.to_le_bytes()); // samples
+        b.extend_from_slice(&1u32.to_le_bytes()); // frames
+        b.extend_from_slice(&10u32.to_le_bytes()); // axons
+        // sample 0: label 3, frame [2, 5]
+        b.push(3);
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&5u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        // sample 1: label 7, empty frame
+        b.push(7);
+        b.extend_from_slice(&0u32.to_le_bytes());
+        let p = std::env::temp_dir().join(format!("t_{}.hsd", std::process::id()));
+        std::fs::write(&p, &b).unwrap();
+        let ts = read_hsd(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(ts.n_axons, 10);
+        assert_eq!(ts.samples.len(), 2);
+        assert_eq!(ts.samples[0].label, 3);
+        assert_eq!(ts.samples[0].frames[0], vec![2, 5]); // sorted
+        assert_eq!(ts.samples[1].frames[0], Vec::<u32>::new());
+    }
+
+    #[test]
+    fn rejects_out_of_range_axon() {
+        let mut b = Vec::new();
+        b.extend_from_slice(HSD_MAGIC);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&4u32.to_le_bytes());
+        b.push(0);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&9u32.to_le_bytes()); // >= 4
+        let p = std::env::temp_dir().join(format!("bad_{}.hsd", std::process::id()));
+        std::fs::write(&p, &b).unwrap();
+        assert!(read_hsd(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,477 @@
+//! Network partitioning and resource allocation (paper §3, ref [10]).
+//!
+//! Assigns every neuron to a core of the cluster (server / FPGA / core
+//! hierarchy), subject to per-core neuron and synapse capacity, while
+//! minimising *cut* synapses — events that must travel the slower
+//! inter-core levels of the HiAER fabric. The strategy is the classic
+//! two-phase: locality-preserving seeding (BFS order over the synaptic
+//! graph from the axon roots) + greedy chunking, then a bounded
+//! Kernighan-Lin-style refinement that migrates neurons whose gain
+//! (external minus internal degree) is positive.
+
+use crate::snn::Network;
+
+/// The physical hierarchy (paper: 5 compute servers x 8 FPGAs x 32 cores;
+/// each FPGA targets 4M neurons / 1B synapses over its cores).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClusterTopology {
+    pub servers: usize,
+    pub fpgas_per_server: usize,
+    pub cores_per_fpga: usize,
+}
+
+impl ClusterTopology {
+    /// The full HiAER-Spike deployment at SDSC.
+    pub const FULL: ClusterTopology =
+        ClusterTopology { servers: 5, fpgas_per_server: 8, cores_per_fpga: 32 };
+
+    pub fn single_core() -> Self {
+        ClusterTopology { servers: 1, fpgas_per_server: 1, cores_per_fpga: 1 }
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.servers * self.fpgas_per_server * self.cores_per_fpga
+    }
+
+    /// core id -> (server, fpga, core-within-fpga)
+    pub fn locate(&self, core: usize) -> (usize, usize, usize) {
+        let per_server = self.fpgas_per_server * self.cores_per_fpga;
+        (core / per_server, (core % per_server) / self.cores_per_fpga, core % self.cores_per_fpga)
+    }
+
+    /// Routing level between two cores: 0 same core, 1 NoC (same FPGA),
+    /// 2 FireFly (same server), 3 Ethernet.
+    pub fn level(&self, a: usize, b: usize) -> u8 {
+        if a == b {
+            return 0;
+        }
+        let (sa, fa, _) = self.locate(a);
+        let (sb, fb, _) = self.locate(b);
+        if sa == sb && fa == fb {
+            1
+        } else if sa == sb {
+            2
+        } else {
+            3
+        }
+    }
+}
+
+/// Per-core capacity limits (paper: 4M neurons / 1B synapses per FPGA
+/// over 32 cores = 128K neurons / 32M synapses per core).
+#[derive(Clone, Copy, Debug)]
+pub struct CoreCapacity {
+    pub max_neurons: usize,
+    pub max_synapses: usize,
+}
+
+impl Default for CoreCapacity {
+    fn default() -> Self {
+        Self { max_neurons: 128 * 1024, max_synapses: 32 * 1024 * 1024 }
+    }
+}
+
+/// A placement of the network onto the cluster.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// core id per neuron.
+    pub core_of: Vec<u32>,
+    /// neuron ids per core (ascending).
+    pub members: Vec<Vec<u32>>,
+    /// local index of each neuron within its core.
+    pub local_of: Vec<u32>,
+    pub topology: ClusterTopology,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CutStats {
+    pub total_synapses: usize,
+    pub cut_synapses: usize,
+    /// cut synapses by routing level 1..=3
+    pub by_level: [usize; 4],
+}
+
+impl Partition {
+    /// Partition `net` over at most `topology.n_cores()` cores.
+    pub fn compute(
+        net: &Network,
+        topology: ClusterTopology,
+        cap: CoreCapacity,
+    ) -> Result<Partition, String> {
+        let n = net.n_neurons();
+        let n_cores = topology.n_cores();
+        let syn_of: Vec<usize> = net.neuron_adj.iter().map(Vec::len).collect();
+
+        // how many cores do we actually need?
+        let total_syn: usize = syn_of.iter().sum();
+        let need = (n.div_ceil(cap.max_neurons))
+            .max(total_syn.div_ceil(cap.max_synapses.max(1)))
+            .max(1);
+        if need > n_cores {
+            return Err(format!(
+                "network needs >= {need} cores (n={n}, syn={total_syn}), topology has {n_cores}"
+            ));
+        }
+
+        // ---- phase 1: seeding. Two candidate orders — BFS from the axon
+        // roots (recovers locality when neuron ids are arbitrary) and
+        // identity (optimal when the builder already laid out the network
+        // layer-by-layer / block-by-block, as the model converter does).
+        // Keep whichever cuts fewer synapses; ref [10]'s hierarchical
+        // partitioner subsumes both.
+        let per_core = n.div_ceil(need);
+        let seed_with = |order: &[u32]| -> Result<(Vec<u32>, Vec<(usize, usize)>), String> {
+            let mut core_of = vec![0u32; n];
+            let mut counts = vec![(0usize, 0usize); n_cores];
+            let mut core = 0usize;
+            for &i in order {
+                let s = syn_of[i as usize];
+                while counts[core].0 + 1 > per_core.min(cap.max_neurons)
+                    || counts[core].1 + s > cap.max_synapses
+                {
+                    core += 1;
+                    if core >= n_cores {
+                        return Err("capacity overflow during seeding".into());
+                    }
+                }
+                core_of[i as usize] = core as u32;
+                counts[core].0 += 1;
+                counts[core].1 += s;
+            }
+            Ok((core_of, counts))
+        };
+        let cut_of = |core_of: &[u32]| -> usize {
+            let mut cut = 0usize;
+            for (i, adj) in net.neuron_adj.iter().enumerate() {
+                for s in adj {
+                    if core_of[i] != core_of[s.target as usize] {
+                        cut += 1;
+                    }
+                }
+            }
+            cut
+        };
+        let identity: Vec<u32> = (0..n as u32).collect();
+        let (id_core_of, id_counts) = seed_with(&identity)?;
+        let (bfs_core_of, bfs_counts) = seed_with(&bfs_order(net))?;
+        let (mut core_of, mut counts) = if cut_of(&id_core_of) <= cut_of(&bfs_core_of) {
+            (id_core_of, id_counts)
+        } else {
+            (bfs_core_of, bfs_counts)
+        };
+        let used_cores = counts.iter().filter(|c| c.0 > 0).count();
+
+        // ---- phase 2: bounded KL-style refinement
+        if used_cores > 1 {
+            refine(net, &mut core_of, &mut counts, cap, 2);
+        }
+
+        // ---- finalize
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); n_cores];
+        for (i, &c) in core_of.iter().enumerate() {
+            members[c as usize].push(i as u32);
+        }
+        let mut local_of = vec![0u32; n];
+        for m in &members {
+            for (li, &g) in m.iter().enumerate() {
+                local_of[g as usize] = li as u32;
+            }
+        }
+        Ok(Partition { core_of, members, local_of, topology })
+    }
+
+    pub fn n_used_cores(&self) -> usize {
+        self.members.iter().filter(|m| !m.is_empty()).count()
+    }
+
+    /// Cut statistics under the topology's routing levels.
+    pub fn cut_stats(&self, net: &Network) -> CutStats {
+        let mut s = CutStats::default();
+        for (i, adj) in net.neuron_adj.iter().enumerate() {
+            let ci = self.core_of[i] as usize;
+            for syn in adj {
+                s.total_synapses += 1;
+                let ct = self.core_of[syn.target as usize] as usize;
+                let lvl = self.topology.level(ci, ct);
+                if lvl > 0 {
+                    s.cut_synapses += 1;
+                    s.by_level[lvl as usize] += 1;
+                }
+            }
+        }
+        s
+    }
+
+    /// Invariants: every neuron on exactly one core, capacities met,
+    /// members/local consistent.
+    pub fn validate(&self, net: &Network, cap: CoreCapacity) -> Result<(), String> {
+        let n = net.n_neurons();
+        if self.core_of.len() != n {
+            return Err("core_of length mismatch".into());
+        }
+        let mut seen = vec![false; n];
+        for (c, m) in self.members.iter().enumerate() {
+            if m.len() > cap.max_neurons {
+                return Err(format!("core {c} over neuron capacity"));
+            }
+            let syn: usize = m.iter().map(|&g| net.neuron_adj[g as usize].len()).sum();
+            if syn > cap.max_synapses {
+                return Err(format!("core {c} over synapse capacity"));
+            }
+            if m.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("core {c} members not ascending"));
+            }
+            for (li, &g) in m.iter().enumerate() {
+                if seen[g as usize] {
+                    return Err(format!("neuron {g} on two cores"));
+                }
+                seen[g as usize] = true;
+                if self.core_of[g as usize] as usize != c {
+                    return Err(format!("neuron {g} core_of mismatch"));
+                }
+                if self.local_of[g as usize] as usize != li {
+                    return Err(format!("neuron {g} local_of mismatch"));
+                }
+            }
+        }
+        if seen.iter().any(|&b| !b) {
+            return Err("unassigned neuron".into());
+        }
+        Ok(())
+    }
+}
+
+/// BFS over the synaptic graph from all axon roots (then any unreached
+/// neurons in index order). Keeps synaptically-close neurons adjacent in
+/// the seeding order.
+fn bfs_order(net: &Network) -> Vec<u32> {
+    let n = net.n_neurons();
+    let mut visited = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    let mut queue = std::collections::VecDeque::new();
+    for adj in &net.axon_adj {
+        for s in adj {
+            if !visited[s.target as usize] {
+                visited[s.target as usize] = true;
+                queue.push_back(s.target);
+            }
+        }
+    }
+    let mut cursor = 0usize;
+    loop {
+        while let Some(i) = queue.pop_front() {
+            order.push(i);
+            for s in &net.neuron_adj[i as usize] {
+                if !visited[s.target as usize] {
+                    visited[s.target as usize] = true;
+                    queue.push_back(s.target);
+                }
+            }
+        }
+        while cursor < n && visited[cursor] {
+            cursor += 1;
+        }
+        if cursor == n {
+            break;
+        }
+        visited[cursor] = true;
+        queue.push_back(cursor as u32);
+    }
+    order
+}
+
+/// Greedy gain-based migration: move a neuron to the core where it has the
+/// most neighbours if that reduces cut and capacity allows. `passes`
+/// bounds the sweeps (classic KL/FM simplification).
+fn refine(
+    net: &Network,
+    core_of: &mut [u32],
+    counts: &mut [(usize, usize)],
+    cap: CoreCapacity,
+    passes: usize,
+) {
+    let n = net.n_neurons();
+    // build undirected neighbour lists (out + in)
+    let mut neigh: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (i, adj) in net.neuron_adj.iter().enumerate() {
+        for s in adj {
+            neigh[i].push(s.target);
+            neigh[s.target as usize].push(i as u32);
+        }
+    }
+    let n_cores = counts.len();
+    let mut tally: Vec<u32> = vec![0; n_cores];
+    for _ in 0..passes {
+        let mut moved = 0usize;
+        for i in 0..n {
+            if neigh[i].is_empty() {
+                continue;
+            }
+            // count neighbours per core (sparse tally with reset)
+            let mut touched: Vec<u32> = Vec::with_capacity(neigh[i].len());
+            for &t in &neigh[i] {
+                let c = core_of[t as usize];
+                if tally[c as usize] == 0 {
+                    touched.push(c);
+                }
+                tally[c as usize] += 1;
+            }
+            let cur = core_of[i] as usize;
+            let mut best = cur;
+            let mut best_cnt = tally[cur];
+            for &c in &touched {
+                let c = c as usize;
+                if tally[c] > best_cnt
+                    && counts[c].0 + 1 <= cap.max_neurons
+                    && counts[c].1 + net.neuron_adj[i].len() <= cap.max_synapses
+                {
+                    best = c;
+                    best_cnt = tally[c];
+                }
+            }
+            for &c in &touched {
+                tally[c as usize] = 0;
+            }
+            if best != cur {
+                counts[cur].0 -= 1;
+                counts[cur].1 -= net.neuron_adj[i].len();
+                counts[best].0 += 1;
+                counts[best].1 += net.neuron_adj[i].len();
+                core_of[i] = best as u32;
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::{NetworkBuilder, NeuronModel, Synapse};
+    use crate::util::prng::Xorshift32;
+    use crate::util::ptest;
+
+    fn clustered_net(rng: &mut Xorshift32, clusters: usize, per: usize) -> Network {
+        // dense inside clusters, sparse across: refinement fodder
+        let m = NeuronModel::if_neuron(10);
+        let n = clusters * per;
+        let mut b = NetworkBuilder::new();
+        let keys: Vec<String> = (0..n).map(|i| format!("n{i}")).collect();
+        for i in 0..n {
+            let cl = i / per;
+            let mut syns = Vec::new();
+            for _ in 0..6 {
+                let t = cl * per + rng.below(per as u32) as usize;
+                syns.push((keys[t].clone(), 1i32));
+            }
+            if rng.chance(0.05) {
+                syns.push((keys[rng.below(n as u32) as usize].clone(), 1));
+            }
+            let refs: Vec<(&str, i32)> = syns.iter().map(|(k, w)| (k.as_str(), *w)).collect();
+            b.add_neuron(&keys[i], m, &refs).unwrap();
+        }
+        b.add_axon("in", &[("n0", 1)]).unwrap();
+        b.build().unwrap().0
+    }
+
+    #[test]
+    fn topology_levels() {
+        let t = ClusterTopology { servers: 2, fpgas_per_server: 2, cores_per_fpga: 4 };
+        assert_eq!(t.n_cores(), 16);
+        assert_eq!(t.level(0, 0), 0);
+        assert_eq!(t.level(0, 3), 1); // same fpga
+        assert_eq!(t.level(0, 5), 2); // same server, other fpga
+        assert_eq!(t.level(0, 9), 3); // other server
+        assert_eq!(t.locate(9), (1, 0, 1));
+    }
+
+    #[test]
+    fn single_core_trivial() {
+        let mut rng = Xorshift32::new(1);
+        let net = clustered_net(&mut rng, 2, 10);
+        let p = Partition::compute(&net, ClusterTopology::single_core(), CoreCapacity::default())
+            .unwrap();
+        p.validate(&net, CoreCapacity::default()).unwrap();
+        assert_eq!(p.n_used_cores(), 1);
+        assert_eq!(p.cut_stats(&net).cut_synapses, 0);
+    }
+
+    #[test]
+    fn capacity_forces_split() {
+        let mut rng = Xorshift32::new(2);
+        let net = clustered_net(&mut rng, 4, 25);
+        let cap = CoreCapacity { max_neurons: 30, max_synapses: usize::MAX };
+        let topo = ClusterTopology { servers: 1, fpgas_per_server: 1, cores_per_fpga: 8 };
+        let p = Partition::compute(&net, topo, cap).unwrap();
+        p.validate(&net, cap).unwrap();
+        assert!(p.n_used_cores() >= 4);
+    }
+
+    #[test]
+    fn refinement_beats_random_on_clustered_graph() {
+        let mut rng = Xorshift32::new(3);
+        let net = clustered_net(&mut rng, 4, 32);
+        let cap = CoreCapacity { max_neurons: 40, max_synapses: usize::MAX };
+        let topo = ClusterTopology { servers: 1, fpgas_per_server: 2, cores_per_fpga: 2 };
+        let p = Partition::compute(&net, topo, cap).unwrap();
+        p.validate(&net, cap).unwrap();
+        let stats = p.cut_stats(&net);
+        // random assignment would cut ~75%; locality + refinement must do
+        // far better on a 4-cluster graph
+        assert!(
+            (stats.cut_synapses as f64) < 0.4 * stats.total_synapses as f64,
+            "cut {} of {}",
+            stats.cut_synapses,
+            stats.total_synapses
+        );
+    }
+
+    #[test]
+    fn impossible_capacity_errors() {
+        let mut rng = Xorshift32::new(4);
+        let net = clustered_net(&mut rng, 2, 50);
+        let cap = CoreCapacity { max_neurons: 10, max_synapses: usize::MAX };
+        let topo = ClusterTopology::single_core();
+        assert!(Partition::compute(&net, topo, cap).is_err());
+    }
+
+    #[test]
+    fn prop_partition_invariants() {
+        ptest::check("partition_invariants", 20, |rng| {
+            let clusters = 1 + rng.below(4) as usize;
+            let per = 8 + rng.below(24) as usize;
+            let net = clustered_net(rng, clusters, per);
+            let cap = CoreCapacity {
+                max_neurons: per.max(8),
+                max_synapses: usize::MAX,
+            };
+            let topo = ClusterTopology { servers: 2, fpgas_per_server: 2, cores_per_fpga: 8 };
+            let p = Partition::compute(&net, topo, cap).map_err(|e| e)?;
+            p.validate(&net, cap)?;
+            // determinism
+            let p2 = Partition::compute(&net, topo, cap).map_err(|e| e)?;
+            ptest::prop_assert_eq(p.core_of.clone(), p2.core_of.clone(), "determinism")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bfs_order_reaches_all() {
+        let m = NeuronModel::if_neuron(1);
+        let mut b = NetworkBuilder::new();
+        for i in 0..10 {
+            b.add_neuron(&format!("n{i}"), m, &[]).unwrap();
+        }
+        let mut net = b.build().unwrap().0;
+        // disconnected graph, even with a cycle
+        net.neuron_adj[3].push(Synapse { target: 4, weight: 1 });
+        net.neuron_adj[4].push(Synapse { target: 3, weight: 1 });
+        let order = bfs_order(&net);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10u32).collect::<Vec<_>>());
+    }
+}

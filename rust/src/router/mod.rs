@@ -1,0 +1,377 @@
+//! Hierarchical address-event routing — the "white matter" (paper Fig 1,
+//! refs [7, 8]).
+//!
+//! Spikes leaving a core are multicast to every core that stores synapses
+//! of the firing source. The fabric has four levels with very different
+//! costs:
+//!
+//! | level | fabric              | scope             |
+//! |-------|---------------------|-------------------|
+//! | 0     | on-core             | same core         |
+//! | 1     | NoC                 | cores on one FPGA |
+//! | 2     | FireFly (1 Tbps x4) | FPGAs in a server |
+//! | 3     | Ethernet (Arista)   | between servers   |
+//!
+//! The router maintains the multicast tables (source -> destination cores
+//! + the destination-local axon id), delivers events within the 1 ms
+//! timestep (the system is faster-than-real-time, so events always make
+//! the next membrane sweep), and accounts per-level traffic, bandwidth
+//! and latency for the scaling model.
+
+use crate::partition::{ClusterTopology, Partition};
+use crate::snn::Network;
+
+/// Per-level fabric timing/bandwidth model (cycles at the core clock).
+#[derive(Clone, Copy, Debug)]
+pub struct FabricModel {
+    /// hop latency in core-clock cycles per level (index 0 unused)
+    pub hop_latency: [u64; 4],
+    /// events per cycle a level can move (aggregate, per direction)
+    pub events_per_cycle: [f64; 4],
+}
+
+impl Default for FabricModel {
+    fn default() -> Self {
+        FabricModel {
+            hop_latency: [0, 40, 280, 1400], // NoC / FireFly / Ethernet
+            events_per_cycle: [f64::INFINITY, 8.0, 2.0, 0.5],
+        }
+    }
+}
+
+/// A routed event: deliver `local_axon` on `core`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Delivery {
+    pub core: u32,
+    pub local_axon: u32,
+}
+
+/// Multicast routing tables for a partitioned network.
+///
+/// Remote synapses are re-homed: if neuron `g` (on core A) targets
+/// neurons on core B, core B's sub-network stores those synapses under a
+/// *remote axon* and this table records (g -> B, axon id). Global input
+/// axons route the same way.
+#[derive(Clone, Debug, Default)]
+pub struct RoutingTable {
+    /// per global neuron: remote deliveries (cores other than home).
+    pub neuron_routes: Vec<Vec<Delivery>>,
+    /// per global axon: deliveries (an axon may fan out to many cores).
+    pub axon_routes: Vec<Vec<Delivery>>,
+}
+
+/// Traffic/latency accounting for one run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RouterStats {
+    /// events moved per level (level 0 = stayed on core).
+    pub events_by_level: [u64; 4],
+    /// accumulated serialization + hop cycles (critical-path estimate).
+    pub cycles: u64,
+}
+
+pub struct HiaerRouter {
+    pub topology: ClusterTopology,
+    pub fabric: FabricModel,
+    pub table: RoutingTable,
+    pub stats: RouterStats,
+    /// scratch: per-core delivery lists for the current step
+    pending: Vec<Vec<u32>>,
+}
+
+impl HiaerRouter {
+    pub fn new(topology: ClusterTopology, fabric: FabricModel, table: RoutingTable) -> Self {
+        let n_cores = topology.n_cores();
+        Self { topology, fabric, table, stats: RouterStats::default(), pending: vec![Vec::new(); n_cores] }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = RouterStats::default();
+    }
+
+    /// Route one step's spikes. `fired_by_core[c]` are global neuron ids
+    /// that fired on core c; `axon_inputs` are fired global axons.
+    /// Returns per-core sorted local-axon activation lists (the remote
+    /// inputs for each core's routing phase). Level-0 (home-core) events
+    /// are NOT produced here — the home core handles its own neurons'
+    /// synapses directly from its HBM.
+    pub fn route_step(
+        &mut self,
+        fired_by_core: &[Vec<u32>],
+        axon_inputs: &[u32],
+    ) -> &[Vec<u32>] {
+        for p in &mut self.pending {
+            p.clear();
+        }
+        let mut level_events = [0u64; 4];
+        // neuron multicast
+        for (src_core, fired) in fired_by_core.iter().enumerate() {
+            for &g in fired {
+                for d in &self.table.neuron_routes[g as usize] {
+                    let lvl = self.topology.level(src_core, d.core as usize);
+                    level_events[lvl as usize] += 1;
+                    self.pending[d.core as usize].push(d.local_axon);
+                }
+            }
+        }
+        // input axon fan-out (host -> cores over PCIe; level = NoC-ish,
+        // counted as level 1)
+        for &a in axon_inputs {
+            for d in &self.table.axon_routes[a as usize] {
+                level_events[1] += 1;
+                self.pending[d.core as usize].push(d.local_axon);
+            }
+        }
+        // latency model: serialization at the busiest level + one hop each
+        let mut cycles = 0u64;
+        for lvl in 1..4 {
+            if level_events[lvl] > 0 {
+                let ser =
+                    (level_events[lvl] as f64 / self.fabric.events_per_cycle[lvl]).ceil() as u64;
+                cycles = cycles.max(self.fabric.hop_latency[lvl] + ser);
+            }
+            self.stats.events_by_level[lvl] += level_events[lvl];
+        }
+        self.stats.cycles += cycles;
+        for p in &mut self.pending {
+            p.sort_unstable();
+            p.dedup(); // a multicast delivers once per (source, core) pair
+        }
+        &self.pending
+    }
+}
+
+/// Build per-core sub-networks + routing tables from a partition.
+///
+/// Core-local neuron indices follow `partition.members[c]` order. Remote
+/// sources become local axons appended after the core's share of global
+/// axons. Returns (sub-networks, table, per-core map global axon -> local
+/// axon id).
+pub struct SplitNetwork {
+    pub subnets: Vec<Network>,
+    pub table: RoutingTable,
+    /// local axon id of each (core, global axon) pair, u32::MAX if unused.
+    pub axon_local: Vec<Vec<u32>>,
+}
+
+pub fn split_network(net: &Network, part: &Partition) -> SplitNetwork {
+    let n_cores = part.topology.n_cores();
+    let n = net.n_neurons();
+    let a = net.n_axons();
+
+    // output sets per core
+    let mut is_output = vec![false; n];
+    for &o in &net.outputs {
+        is_output[o as usize] = true;
+    }
+
+    // per-core: sub-network builders
+    let mut subnets: Vec<Network> = (0..n_cores)
+        .map(|c| {
+            let members = &part.members[c];
+            let params = members.iter().map(|&g| net.params[g as usize]).collect();
+            Network {
+                params,
+                neuron_adj: vec![Vec::new(); members.len()],
+                axon_adj: Vec::new(),
+                outputs: members
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &g)| is_output[g as usize])
+                    .map(|(li, _)| li as u32)
+                    .collect(),
+                base_seed: net.base_seed.wrapping_add(c as u32),
+            }
+        })
+        .collect();
+
+    let mut neuron_routes: Vec<Vec<Delivery>> = vec![Vec::new(); n];
+    let mut axon_routes: Vec<Vec<Delivery>> = vec![Vec::new(); a];
+    let mut axon_local: Vec<Vec<u32>> = vec![vec![u32::MAX; a]; n_cores];
+    // remote axon id per (core, global source neuron)
+    let mut remote_axon: Vec<std::collections::HashMap<u32, u32>> =
+        vec![std::collections::HashMap::new(); n_cores];
+
+    // helper: get/create the local axon on `core` for a remote neuron or
+    // a global axon.
+    fn local_axon_for(
+        subnets: &mut [Network],
+        axon_local: &mut [Vec<u32>],
+        remote_axon: &mut [std::collections::HashMap<u32, u32>],
+        core: usize,
+        is_global_axon: bool,
+        src: u32,
+    ) -> u32 {
+        if is_global_axon {
+            if axon_local[core][src as usize] == u32::MAX {
+                let id = subnets[core].axon_adj.len() as u32;
+                subnets[core].axon_adj.push(Vec::new());
+                axon_local[core][src as usize] = id;
+            }
+            axon_local[core][src as usize]
+        } else {
+            *remote_axon[core].entry(src).or_insert_with(|| {
+                let id = subnets[core].axon_adj.len() as u32;
+                subnets[core].axon_adj.push(Vec::new());
+                id
+            })
+        }
+    }
+
+    // distribute neuron synapses
+    for g in 0..n as u32 {
+        let home = part.core_of[g as usize] as usize;
+        let gl = part.local_of[g as usize] as usize;
+        let mut touched_cores: Vec<usize> = Vec::new();
+        for syn in &net.neuron_adj[g as usize] {
+            let tc = part.core_of[syn.target as usize] as usize;
+            let tl = part.local_of[syn.target as usize];
+            let s = crate::snn::Synapse { target: tl, weight: syn.weight };
+            if tc == home {
+                subnets[home].neuron_adj[gl].push(s);
+            } else {
+                let la = local_axon_for(
+                    &mut subnets,
+                    &mut axon_local,
+                    &mut remote_axon,
+                    tc,
+                    false,
+                    g,
+                );
+                subnets[tc].axon_adj[la as usize].push(s);
+                if !touched_cores.contains(&tc) {
+                    touched_cores.push(tc);
+                }
+            }
+        }
+        for tc in touched_cores {
+            let la = remote_axon[tc][&g];
+            neuron_routes[g as usize].push(Delivery { core: tc as u32, local_axon: la });
+        }
+    }
+
+    // distribute global-axon synapses
+    for ga in 0..a as u32 {
+        let mut touched: Vec<usize> = Vec::new();
+        for syn in &net.axon_adj[ga as usize] {
+            let tc = part.core_of[syn.target as usize] as usize;
+            let tl = part.local_of[syn.target as usize];
+            let la = local_axon_for(&mut subnets, &mut axon_local, &mut remote_axon, tc, true, ga);
+            subnets[tc].axon_adj[la as usize]
+                .push(crate::snn::Synapse { target: tl, weight: syn.weight });
+            if !touched.contains(&tc) {
+                touched.push(tc);
+            }
+        }
+        for tc in touched {
+            axon_routes[ga as usize]
+                .push(Delivery { core: tc as u32, local_axon: axon_local[tc][ga as usize] });
+        }
+    }
+
+    SplitNetwork { subnets, table: RoutingTable { neuron_routes, axon_routes }, axon_local }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::CoreCapacity;
+    use crate::snn::{NetworkBuilder, NeuronModel};
+    use crate::util::prng::Xorshift32;
+    use crate::util::ptest;
+
+    fn random_net(rng: &mut Xorshift32, n: usize, a: usize) -> Network {
+        let m = NeuronModel::if_neuron(rng.range_i32(3, 20));
+        let mut b = NetworkBuilder::new();
+        let keys: Vec<String> = (0..n).map(|i| format!("n{i}")).collect();
+        for i in 0..n {
+            let deg = rng.below(6) as usize;
+            let syns: Vec<(String, i32)> = (0..deg)
+                .map(|_| (keys[rng.below(n as u32) as usize].clone(), rng.range_i32(-40, 40)))
+                .collect();
+            let refs: Vec<(&str, i32)> = syns.iter().map(|(k, w)| (k.as_str(), *w)).collect();
+            b.add_neuron(&keys[i], m, &refs).unwrap();
+        }
+        for j in 0..a {
+            let deg = 1 + rng.below(5) as usize;
+            let syns: Vec<(String, i32)> = (0..deg)
+                .map(|_| (keys[rng.below(n as u32) as usize].clone(), rng.range_i32(-40, 40)))
+                .collect();
+            let refs: Vec<(&str, i32)> = syns.iter().map(|(k, w)| (k.as_str(), *w)).collect();
+            b.add_axon(&format!("a{j}"), &refs).unwrap();
+        }
+        for i in 0..n {
+            if rng.chance(0.25) {
+                b.add_output(&keys[i]);
+            }
+        }
+        b.build().unwrap().0
+    }
+
+    #[test]
+    fn prop_split_conserves_synapses() {
+        ptest::check("split_conserves_synapses", 25, |rng| {
+            let n = 20 + rng.below(80) as usize;
+            let net = random_net(rng, n, 6);
+            let topo = ClusterTopology { servers: 2, fpgas_per_server: 2, cores_per_fpga: 2 };
+            let cap = CoreCapacity { max_neurons: n.div_ceil(3).max(4), max_synapses: usize::MAX };
+            let part = Partition::compute(&net, topo, cap).map_err(|e| e)?;
+            let split = split_network(&net, &part);
+            let total: usize = split.subnets.iter().map(|s| s.n_synapses()).sum();
+            ptest::prop_assert_eq(total, net.n_synapses(), "synapse conservation")?;
+            for (c, sub) in split.subnets.iter().enumerate() {
+                sub.validate().map_err(|e| format!("core {c}: {e}"))?;
+            }
+            // every remote route's local axon exists
+            for routes in &split.table.neuron_routes {
+                for d in routes {
+                    ptest::prop_assert(
+                        (d.local_axon as usize) < split.subnets[d.core as usize].n_axons(),
+                        "route target axon in range",
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn route_step_delivers_and_counts_levels() {
+        let mut rng = Xorshift32::new(9);
+        let net = random_net(&mut rng, 60, 4);
+        let topo = ClusterTopology { servers: 2, fpgas_per_server: 2, cores_per_fpga: 2 };
+        let cap = CoreCapacity { max_neurons: 10, max_synapses: usize::MAX };
+        let part = Partition::compute(&net, topo, cap).unwrap();
+        let split = split_network(&net, &part);
+        let mut router = HiaerRouter::new(topo, FabricModel::default(), split.table.clone());
+
+        // fire every neuron once
+        let mut fired_by_core: Vec<Vec<u32>> = vec![Vec::new(); topo.n_cores()];
+        for g in 0..net.n_neurons() as u32 {
+            fired_by_core[part.core_of[g as usize] as usize].push(g);
+        }
+        let axons: Vec<u32> = (0..net.n_axons() as u32).collect();
+        let pending = router.route_step(&fired_by_core, &axons);
+        // every axon route delivered
+        let delivered: usize = pending.iter().map(Vec::len).sum();
+        assert!(delivered > 0);
+        for (c, p) in pending.iter().enumerate() {
+            assert!(p.windows(2).all(|w| w[0] < w[1]), "core {c} deliveries sorted+deduped");
+        }
+        let s = router.stats;
+        assert!(s.events_by_level[1] + s.events_by_level[2] + s.events_by_level[3] > 0);
+        assert!(s.cycles > 0);
+    }
+
+    #[test]
+    fn no_remote_routes_on_single_core() {
+        let mut rng = Xorshift32::new(10);
+        let net = random_net(&mut rng, 30, 3);
+        let topo = ClusterTopology::single_core();
+        let part = Partition::compute(&net, topo, CoreCapacity::default()).unwrap();
+        let split = split_network(&net, &part);
+        assert!(split.table.neuron_routes.iter().all(|r| r.is_empty()));
+        // all global axons land on core 0
+        assert!(split.table.axon_routes.iter().all(|r| r.len() <= 1));
+        assert_eq!(split.subnets[0].n_synapses(), net.n_synapses());
+    }
+}

@@ -1,0 +1,155 @@
+//! PJRT/XLA runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (HLO text, see `python/compile/aot.py`) and serves them to the
+//! engines. This is the only place the `xla` crate is touched.
+//!
+//! Python never runs here: `make artifacts` produced the HLO once; this
+//! module compiles it on the PJRT CPU client at startup and executes it
+//! on the request path.
+
+mod registry;
+mod xla_backend;
+
+pub use registry::{ArtifactRegistry, NEURON_UPDATE_SIZES, SYNAPSE_ACCUM_SIZES};
+pub use xla_backend::XlaBackend;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client plus a cache of compiled executables keyed by artifact
+/// name. Compilation happens once per name (lazily); execution is
+/// thread-safe through PJRT itself — the mutex only guards the cache map.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// CPU-PJRT runtime over an artifact directory (usually `artifacts/`).
+    pub fn cpu<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir: artifact_dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<dir>/<name>.hlo.txt` (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?,
+        );
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact. All our artifacts are lowered with
+    /// `return_tuple=True`, so the single result literal is a tuple that
+    /// we decompose for the caller.
+    pub fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        self.execute_loaded(&exe, args, name)
+    }
+
+    /// Execute a pre-loaded executable (hot-path variant: no cache lock).
+    pub fn execute_loaded(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+        name: &str,
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing artifact {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+}
+
+/// Helper for int32 literals.
+pub fn lit_i32(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Helper for scalar u32 literals (the step seed).
+pub fn lit_u32_scalar(v: u32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+pub(crate) fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+pub(crate) fn have_artifacts() -> bool {
+    artifacts_dir().join("neuron_update_n1024.hlo.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_and_execute_synapse_accum() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::cpu(artifacts_dir()).unwrap();
+        let n = 1024usize;
+        let e = 4096usize;
+        let mut v = vec![0i32; n];
+        v[7] = 5;
+        let mut targets = vec![n as i32; e]; // all dropped
+        let mut weights = vec![0i32; e];
+        targets[0] = 7;
+        weights[0] = 3;
+        targets[1] = 0;
+        weights[1] = -2;
+        let out = rt
+            .execute(
+                "synapse_accum_n1024_e4096",
+                &[lit_i32(&v), lit_i32(&targets), lit_i32(&weights)],
+            )
+            .unwrap();
+        let got = out[0].to_vec::<i32>().unwrap();
+        assert_eq!(got[7], 8);
+        assert_eq!(got[0], -2);
+        assert!(got[1..7].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn executable_cache_hit() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu(artifacts_dir()).unwrap();
+        let a = rt.load("synapse_accum_n1024_e4096").unwrap();
+        let b = rt.load("synapse_accum_n1024_e4096").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,96 @@
+//! Artifact shape registry: which AOT variants exist and which to pick
+//! for a given core size / event batch. Mirrors the size lists in
+//! `python/compile/aot.py`.
+
+/// Neuron-update capacities lowered by aot.py (ascending).
+pub const NEURON_UPDATE_SIZES: &[usize] = &[1024, 4096, 16384, 65536, 131072];
+
+/// (N, E) synapse-accumulate variants lowered by aot.py.
+pub const SYNAPSE_ACCUM_SIZES: &[(usize, usize)] = &[
+    (1024, 4096),
+    (4096, 16384),
+    (16384, 16384),
+    (16384, 65536),
+    (65536, 65536),
+    (131072, 65536),
+];
+
+/// Artifact name selection for a core with `n` neurons.
+#[derive(Clone, Debug)]
+pub struct ArtifactRegistry {
+    /// padded neuron capacity
+    pub n_pad: usize,
+    pub neuron_update: String,
+    /// (event capacity, artifact name), ascending by capacity
+    pub accum: Vec<(usize, String)>,
+}
+
+impl ArtifactRegistry {
+    /// Pick the smallest lowered variant that fits `n` neurons.
+    pub fn for_core(n: usize) -> Option<ArtifactRegistry> {
+        let n_pad = *NEURON_UPDATE_SIZES.iter().find(|&&s| s >= n)?;
+        let accum: Vec<(usize, String)> = SYNAPSE_ACCUM_SIZES
+            .iter()
+            .filter(|&&(an, _)| an == n_pad)
+            .map(|&(an, ae)| (ae, format!("synapse_accum_n{an}_e{ae}")))
+            .collect();
+        if accum.is_empty() {
+            return None;
+        }
+        Some(ArtifactRegistry {
+            n_pad,
+            neuron_update: format!("neuron_update_n{n_pad}"),
+            accum,
+        })
+    }
+
+    /// Smallest accumulate variant with capacity >= `events`; falls back
+    /// to the largest (caller chunks).
+    pub fn accum_for(&self, events: usize) -> (usize, &str) {
+        for (cap, name) in &self.accum {
+            if *cap >= events {
+                return (*cap, name);
+            }
+        }
+        let (cap, name) = self.accum.last().expect("non-empty by construction");
+        (*cap, name)
+    }
+
+    pub fn max_accum_capacity(&self) -> usize {
+        self.accum.last().map(|(c, _)| *c).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_smallest_fitting() {
+        let r = ArtifactRegistry::for_core(100).unwrap();
+        assert_eq!(r.n_pad, 1024);
+        assert_eq!(r.neuron_update, "neuron_update_n1024");
+        let r = ArtifactRegistry::for_core(1024).unwrap();
+        assert_eq!(r.n_pad, 1024);
+        let r = ArtifactRegistry::for_core(1025).unwrap();
+        assert_eq!(r.n_pad, 4096);
+        let r = ArtifactRegistry::for_core(120_000).unwrap();
+        assert_eq!(r.n_pad, 131072);
+    }
+
+    #[test]
+    fn too_large_is_none() {
+        assert!(ArtifactRegistry::for_core(200_000).is_none());
+    }
+
+    #[test]
+    fn accum_selection_and_chunk_fallback() {
+        let r = ArtifactRegistry::for_core(10_000).unwrap();
+        // n_pad = 16384 has E in {16384, 65536}
+        assert_eq!(r.accum_for(100).0, 16384);
+        assert_eq!(r.accum_for(20_000).0, 65536);
+        // beyond max capacity -> largest returned, caller chunks
+        assert_eq!(r.accum_for(1_000_000).0, 65536);
+        assert_eq!(r.max_accum_capacity(), 65536);
+    }
+}

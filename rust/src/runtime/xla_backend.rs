@@ -1,0 +1,197 @@
+//! The XLA [`UpdateBackend`]: executes the AOT Pallas/JAX artifacts via
+//! PJRT — the simulated equivalent of dispatching the FPGA bitstream's
+//! membrane-update pipeline.
+//!
+//! Padding contract (see aot.py): state is padded to the artifact
+//! capacity `n_pad` with `theta = i32::MAX`, `flags = 0` (ANN,
+//! deterministic), so pad lanes never spike and hold V = 0. Accumulate
+//! events are padded with `target = n_pad`, which the scatter drops.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::{lit_i32, lit_u32_scalar, ArtifactRegistry, Runtime};
+use crate::engine::backend::{CoreParams, UpdateBackend};
+
+pub struct XlaBackend {
+    rt: Arc<Runtime>,
+    reg: ArtifactRegistry,
+    // padded parameter literals, built lazily on first update()
+    params_lit: Option<[xla::Literal; 4]>,
+    // reusable padded host buffers
+    v_pad: Vec<i32>,
+    spikes_pad: Vec<i32>,
+    tgt_pad: Vec<i32>,
+    wgt_pad: Vec<i32>,
+}
+
+impl XlaBackend {
+    /// Backend for a core of `n` neurons. Fails if no lowered variant is
+    /// large enough (the partitioner never produces such cores).
+    pub fn new(rt: Arc<Runtime>, n: usize) -> Result<Self> {
+        let reg = ArtifactRegistry::for_core(n)
+            .ok_or_else(|| anyhow!("no AOT variant fits a core of {n} neurons"))?;
+        // compile eagerly so request-path latency excludes compilation
+        rt.load(&reg.neuron_update)?;
+        for (_, name) in &reg.accum {
+            rt.load(name)?;
+        }
+        Ok(Self {
+            v_pad: vec![0; reg.n_pad],
+            spikes_pad: vec![0; reg.n_pad],
+            tgt_pad: Vec::new(),
+            wgt_pad: Vec::new(),
+            params_lit: None,
+            reg,
+            rt,
+        })
+    }
+
+    pub fn n_pad(&self) -> usize {
+        self.reg.n_pad
+    }
+
+    fn build_params(&mut self, params: &CoreParams) {
+        let n_pad = self.reg.n_pad;
+        let pad = |src: &[i32], fill: i32| -> Vec<i32> {
+            let mut v = Vec::with_capacity(n_pad);
+            v.extend_from_slice(src);
+            v.resize(n_pad, fill);
+            v
+        };
+        let theta = pad(&params.theta, i32::MAX);
+        let nu = pad(&params.nu, 0);
+        let lam = pad(&params.lam, 0);
+        let flags: Vec<i32> = params
+            .flags
+            .iter()
+            .map(|&f| f as i32)
+            .chain(std::iter::repeat(0))
+            .take(n_pad)
+            .collect();
+        self.params_lit =
+            Some([lit_i32(&theta), lit_i32(&nu), lit_i32(&lam), lit_i32(&flags)]);
+    }
+}
+
+impl UpdateBackend for XlaBackend {
+    fn update(
+        &mut self,
+        v: &mut [i32],
+        params: &CoreParams,
+        step_seed: u32,
+        spikes: &mut [i32],
+    ) -> Result<()> {
+        let n = v.len();
+        if self.params_lit.is_none() {
+            self.build_params(params);
+        }
+        self.v_pad[..n].copy_from_slice(v);
+        self.v_pad[n..].iter_mut().for_each(|x| *x = 0);
+        let [theta, nu, lam, flags] = self.params_lit.as_ref().unwrap();
+        let args = [
+            lit_i32(&self.v_pad),
+            theta.clone(),
+            nu.clone(),
+            lam.clone(),
+            flags.clone(),
+            lit_u32_scalar(step_seed),
+        ];
+        let out = self.rt.execute(&self.reg.neuron_update, &args)?;
+        out[0].copy_raw_to(&mut self.v_pad)?;
+        out[1].copy_raw_to(&mut self.spikes_pad)?;
+        v.copy_from_slice(&self.v_pad[..n]);
+        spikes.copy_from_slice(&self.spikes_pad[..n]);
+        Ok(())
+    }
+
+    fn accumulate(&mut self, v: &mut [i32], targets: &[u32], weights: &[i32]) -> Result<()> {
+        let n = v.len();
+        let n_pad = self.reg.n_pad;
+        self.v_pad[..n].copy_from_slice(v);
+        self.v_pad[n..].iter_mut().for_each(|x| *x = 0);
+
+        // chunk through the largest variant if the event batch overflows
+        let mut off = 0;
+        while off < targets.len() || off == 0 {
+            let remaining = targets.len() - off;
+            let (cap, name) = self.reg.accum_for(remaining);
+            let take = remaining.min(cap);
+            self.tgt_pad.clear();
+            self.tgt_pad
+                .extend(targets[off..off + take].iter().map(|&t| t as i32));
+            self.tgt_pad.resize(cap, n_pad as i32); // dropped by scatter
+            self.wgt_pad.clear();
+            self.wgt_pad.extend_from_slice(&weights[off..off + take]);
+            self.wgt_pad.resize(cap, 0);
+            let args = [lit_i32(&self.v_pad), lit_i32(&self.tgt_pad), lit_i32(&self.wgt_pad)];
+            let out = self.rt.execute(name, &args)?;
+            out[0].copy_raw_to(&mut self.v_pad)?;
+            off += take;
+            if targets.is_empty() {
+                break;
+            }
+        }
+        v.copy_from_slice(&self.v_pad[..n]);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::backend::RustBackend;
+    use crate::runtime::{artifacts_dir, have_artifacts};
+    use crate::util::prng::Xorshift32;
+
+    fn rand_params(rng: &mut Xorshift32, n: usize) -> (CoreParams, Vec<i32>) {
+        let mut p = CoreParams::default();
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            p.theta.push(rng.range_i32(0, 1 << 16));
+            p.nu.push(rng.range_i32(-32, 32));
+            p.lam.push(rng.range_i32(0, 64));
+            p.flags.push(rng.below(4));
+            v.push(rng.range_i32(-(1 << 20), 1 << 20));
+        }
+        (p, v)
+    }
+
+    #[test]
+    fn xla_backend_matches_rust_backend() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Arc::new(Runtime::cpu(artifacts_dir()).unwrap());
+        let mut rng = Xorshift32::new(77);
+        let n = 300; // deliberately not a multiple of the pad size
+        let (params, v0) = rand_params(&mut rng, n);
+        let mut xla_b = XlaBackend::new(rt, n).unwrap();
+        let mut rust_b = RustBackend;
+
+        let mut v1 = v0.clone();
+        let mut s1 = vec![0i32; n];
+        rust_b.update(&mut v1, &params, 0xABCD, &mut s1).unwrap();
+        let mut v2 = v0.clone();
+        let mut s2 = vec![0i32; n];
+        xla_b.update(&mut v2, &params, 0xABCD, &mut s2).unwrap();
+        assert_eq!(s1, s2, "spike masks diverge");
+        assert_eq!(v1, v2, "membranes diverge");
+
+        // accumulate parity incl. empty batch
+        let targets: Vec<u32> = (0..500).map(|_| rng.below(n as u32)).collect();
+        let weights: Vec<i32> = (0..500).map(|_| rng.range_i32(-100, 100)).collect();
+        rust_b.accumulate(&mut v1, &targets, &weights).unwrap();
+        xla_b.accumulate(&mut v2, &targets, &weights).unwrap();
+        assert_eq!(v1, v2);
+        rust_b.accumulate(&mut v1, &[], &[]).unwrap();
+        xla_b.accumulate(&mut v2, &[], &[]).unwrap();
+        assert_eq!(v1, v2);
+    }
+}

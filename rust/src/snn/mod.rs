@@ -1,0 +1,14 @@
+//! Network model primitives — the Rust-side equivalent of the `hs_api`
+//! Python interface (paper §5.2, Supplementary A.1).
+//!
+//! A network is defined by axons (external inputs), neurons (each with a
+//! neuron model and an outgoing synapse list) and an outputs list. The
+//! [`NetworkBuilder`] offers the keyed dictionary-style API of the paper;
+//! [`Network`] is the flattened index-based form every other subsystem
+//! (HBM compiler, engines, partitioner) consumes.
+
+mod neuron;
+mod network;
+
+pub use neuron::{NeuronModel, FLAG_LIF, FLAG_NOISE, LAM_MAX, NU_MAX, NU_MIN};
+pub use network::{Network, NetworkBuilder, Synapse, WEIGHT_MAX, WEIGHT_MIN};

@@ -1,0 +1,365 @@
+//! The flattened network representation and its keyed builder.
+
+use std::collections::HashMap;
+
+use thiserror::Error;
+
+use super::neuron::NeuronModel;
+
+/// Synaptic weights are 16-bit signed integers in HBM.
+pub const WEIGHT_MIN: i32 = -(1 << 15);
+pub const WEIGHT_MAX: i32 = (1 << 15) - 1;
+
+/// One synapse: postsynaptic neuron index + int16 weight.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Synapse {
+    pub target: u32,
+    pub weight: i16,
+}
+
+#[derive(Debug, Error)]
+pub enum NetError {
+    #[error("duplicate key {0:?}")]
+    DuplicateKey(String),
+    #[error("unknown neuron key {0:?}")]
+    UnknownNeuron(String),
+    #[error("unknown presynaptic key {0:?}")]
+    UnknownPre(String),
+    #[error("weight {0} outside int16 range")]
+    BadWeight(i32),
+    #[error("no synapse {0:?} -> {1:?}")]
+    NoSynapse(String, String),
+    #[error("output {0:?} is not a neuron")]
+    BadOutput(String),
+}
+
+/// Flattened, index-based network — the form consumed by the HBM
+/// compiler, the engines and the partitioner. Axons and neurons are
+/// contiguous 0-based index spaces.
+#[derive(Clone, Debug, Default)]
+pub struct Network {
+    /// Per-neuron model parameters.
+    pub params: Vec<NeuronModel>,
+    /// Outgoing synapses per neuron (pre-major adjacency).
+    pub neuron_adj: Vec<Vec<Synapse>>,
+    /// Outgoing synapses per axon.
+    pub axon_adj: Vec<Vec<Synapse>>,
+    /// Indices of monitored output neurons.
+    pub outputs: Vec<u32>,
+    /// Base RNG seed for the stochastic neuron noise.
+    pub base_seed: u32,
+}
+
+impl Network {
+    pub fn n_neurons(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn n_axons(&self) -> usize {
+        self.axon_adj.len()
+    }
+
+    pub fn n_synapses(&self) -> usize {
+        self.neuron_adj.iter().map(Vec::len).sum::<usize>()
+            + self.axon_adj.iter().map(Vec::len).sum::<usize>()
+    }
+
+    /// Total fan-in per neuron (used by the partitioner's traffic model).
+    pub fn fan_in(&self) -> Vec<u32> {
+        let mut f = vec![0u32; self.n_neurons()];
+        for adj in self.neuron_adj.iter().chain(self.axon_adj.iter()) {
+            for s in adj {
+                f[s.target as usize] += 1;
+            }
+        }
+        f
+    }
+
+    /// Structural validation: every synapse target in range, outputs valid.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n_neurons() as u32;
+        for (i, adj) in self.neuron_adj.iter().enumerate() {
+            for s in adj {
+                if s.target >= n {
+                    return Err(format!("neuron {i} synapse target {} out of range", s.target));
+                }
+            }
+        }
+        for (i, adj) in self.axon_adj.iter().enumerate() {
+            for s in adj {
+                if s.target >= n {
+                    return Err(format!("axon {i} synapse target {} out of range", s.target));
+                }
+            }
+        }
+        for &o in &self.outputs {
+            if o >= n {
+                return Err(format!("output {o} out of range"));
+            }
+        }
+        if self.neuron_adj.len() != self.params.len() {
+            return Err("params/adjacency length mismatch".into());
+        }
+        Ok(())
+    }
+}
+
+/// Keyed builder mirroring the `hs_api` dictionaries: axon/neuron keys are
+/// strings; `build()` flattens to index space (insertion order).
+#[derive(Debug, Default)]
+pub struct NetworkBuilder {
+    axon_keys: Vec<String>,
+    axon_index: HashMap<String, u32>,
+    neuron_keys: Vec<String>,
+    neuron_index: HashMap<String, u32>,
+    models: Vec<NeuronModel>,
+    // synapses recorded with string targets, resolved at build()
+    neuron_syn: Vec<Vec<(String, i32)>>,
+    axon_syn: Vec<Vec<(String, i32)>>,
+    outputs: Vec<String>,
+    base_seed: u32,
+}
+
+impl NetworkBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn seed(mut self, seed: u32) -> Self {
+        self.base_seed = seed;
+        self
+    }
+
+    pub fn add_axon(
+        &mut self,
+        key: &str,
+        synapses: &[(&str, i32)],
+    ) -> Result<(), NetError> {
+        if self.axon_index.contains_key(key) {
+            return Err(NetError::DuplicateKey(key.into()));
+        }
+        self.axon_index.insert(key.into(), self.axon_keys.len() as u32);
+        self.axon_keys.push(key.into());
+        self.axon_syn
+            .push(synapses.iter().map(|&(t, w)| (t.to_string(), w)).collect());
+        Ok(())
+    }
+
+    pub fn add_neuron(
+        &mut self,
+        key: &str,
+        model: NeuronModel,
+        synapses: &[(&str, i32)],
+    ) -> Result<(), NetError> {
+        if self.neuron_index.contains_key(key) {
+            return Err(NetError::DuplicateKey(key.into()));
+        }
+        self.neuron_index.insert(key.into(), self.neuron_keys.len() as u32);
+        self.neuron_keys.push(key.into());
+        self.models.push(model);
+        self.neuron_syn
+            .push(synapses.iter().map(|&(t, w)| (t.to_string(), w)).collect());
+        Ok(())
+    }
+
+    pub fn add_output(&mut self, key: &str) {
+        self.outputs.push(key.into());
+    }
+
+    pub fn neuron_id(&self, key: &str) -> Option<u32> {
+        self.neuron_index.get(key).copied()
+    }
+
+    pub fn axon_id(&self, key: &str) -> Option<u32> {
+        self.axon_index.get(key).copied()
+    }
+
+    fn resolve(&self, list: &[(String, i32)]) -> Result<Vec<Synapse>, NetError> {
+        list.iter()
+            .map(|(t, w)| {
+                let target = *self
+                    .neuron_index
+                    .get(t)
+                    .ok_or_else(|| NetError::UnknownNeuron(t.clone()))?;
+                if !(WEIGHT_MIN..=WEIGHT_MAX).contains(w) {
+                    return Err(NetError::BadWeight(*w));
+                }
+                Ok(Synapse { target, weight: *w as i16 })
+            })
+            .collect()
+    }
+
+    pub fn build(self) -> Result<(Network, KeyMap), NetError> {
+        let neuron_adj = self
+            .neuron_syn
+            .iter()
+            .map(|l| self.resolve(l))
+            .collect::<Result<Vec<_>, _>>()?;
+        let axon_adj = self
+            .axon_syn
+            .iter()
+            .map(|l| self.resolve(l))
+            .collect::<Result<Vec<_>, _>>()?;
+        let outputs = self
+            .outputs
+            .iter()
+            .map(|k| {
+                self.neuron_index
+                    .get(k)
+                    .copied()
+                    .ok_or_else(|| NetError::BadOutput(k.clone()))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let net = Network {
+            params: self.models,
+            neuron_adj,
+            axon_adj,
+            outputs,
+            base_seed: self.base_seed,
+        };
+        let keys = KeyMap {
+            axon_keys: self.axon_keys,
+            neuron_keys: self.neuron_keys,
+            axon_index: self.axon_index,
+            neuron_index: self.neuron_index,
+        };
+        Ok((net, keys))
+    }
+}
+
+/// Key <-> index maps retained from the builder for user-facing lookups
+/// (`read_synapse("a", "b")` etc.).
+#[derive(Clone, Debug, Default)]
+pub struct KeyMap {
+    pub axon_keys: Vec<String>,
+    pub neuron_keys: Vec<String>,
+    pub axon_index: HashMap<String, u32>,
+    pub neuron_index: HashMap<String, u32>,
+}
+
+impl KeyMap {
+    pub fn neuron(&self, key: &str) -> Option<u32> {
+        self.neuron_index.get(key).copied()
+    }
+
+    pub fn axon(&self, key: &str) -> Option<u32> {
+        self.axon_index.get(key).copied()
+    }
+}
+
+/// Mutable synapse access on the flattened network (paper API
+/// `read_synapse` / `write_synapse`).
+impl Network {
+    pub fn read_synapse(&self, pre_is_axon: bool, pre: u32, post: u32) -> Option<i16> {
+        let adj = if pre_is_axon {
+            &self.axon_adj[pre as usize]
+        } else {
+            &self.neuron_adj[pre as usize]
+        };
+        adj.iter().find(|s| s.target == post).map(|s| s.weight)
+    }
+
+    pub fn write_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> bool {
+        let adj = if pre_is_axon {
+            &mut self.axon_adj[pre as usize]
+        } else {
+            &mut self.neuron_adj[pre as usize]
+        };
+        for s in adj.iter_mut() {
+            if s.target == post {
+                s.weight = weight;
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The Fig-6 / Supplementary-A.1 example network.
+    pub fn fig6() -> (Network, KeyMap) {
+        let lif_ab = NeuronModel::lif(3, 0, 63, false).unwrap();
+        let lif_c = NeuronModel::lif(4, 0, 2, false).unwrap();
+        let ann_d = NeuronModel::ann(5, 0, true).unwrap();
+        let mut b = NetworkBuilder::new();
+        b.add_neuron("a", lif_ab, &[("b", 1), ("d", 2)]).unwrap();
+        b.add_neuron("b", lif_ab, &[]).unwrap();
+        b.add_neuron("c", lif_c, &[]).unwrap();
+        b.add_neuron("d", ann_d, &[("c", 1)]).unwrap();
+        b.add_axon("alpha", &[("a", 3), ("c", 2)]).unwrap();
+        b.add_axon("beta", &[("b", 3)]).unwrap();
+        b.add_output("a");
+        b.add_output("b");
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn fig6_structure() {
+        let (net, keys) = fig6();
+        assert_eq!(net.n_neurons(), 4);
+        assert_eq!(net.n_axons(), 2);
+        assert_eq!(net.n_synapses(), 6);
+        assert_eq!(net.outputs.len(), 2);
+        let a = keys.neuron("a").unwrap();
+        let b = keys.neuron("b").unwrap();
+        assert_eq!(net.read_synapse(false, a, b), Some(1));
+        let alpha = keys.axon("alpha").unwrap();
+        assert_eq!(net.read_synapse(true, alpha, a), Some(3));
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn write_synapse_updates() {
+        let (mut net, keys) = fig6();
+        let a = keys.neuron("a").unwrap();
+        let b = keys.neuron("b").unwrap();
+        assert!(net.write_synapse(false, a, b, 2));
+        assert_eq!(net.read_synapse(false, a, b), Some(2));
+        let c = keys.neuron("c").unwrap();
+        assert!(!net.write_synapse(false, b, c, 1)); // no such synapse
+    }
+
+    #[test]
+    fn duplicate_and_unknown_keys() {
+        let m = NeuronModel::ann(1, 0, false).unwrap();
+        let mut b = NetworkBuilder::new();
+        b.add_neuron("x", m, &[]).unwrap();
+        assert!(matches!(b.add_neuron("x", m, &[]), Err(NetError::DuplicateKey(_))));
+        let mut b2 = NetworkBuilder::new();
+        b2.add_neuron("x", m, &[("ghost", 1)]).unwrap();
+        assert!(matches!(b2.build(), Err(NetError::UnknownNeuron(_))));
+    }
+
+    #[test]
+    fn weight_range_checked() {
+        let m = NeuronModel::ann(1, 0, false).unwrap();
+        let mut b = NetworkBuilder::new();
+        b.add_neuron("x", m, &[]).unwrap();
+        b.add_axon("in", &[("x", 1 << 15)]).unwrap();
+        assert!(matches!(b.build(), Err(NetError::BadWeight(_))));
+    }
+
+    #[test]
+    fn fan_in_counts() {
+        let (net, keys) = fig6();
+        let f = net.fan_in();
+        assert_eq!(f[keys.neuron("c").unwrap() as usize], 2); // from d and alpha
+        assert_eq!(f[keys.neuron("a").unwrap() as usize], 1); // from alpha
+    }
+
+    #[test]
+    fn validate_catches_bad_target() {
+        let (mut net, _) = fig6();
+        net.neuron_adj[0].push(Synapse { target: 99, weight: 1 });
+        assert!(net.validate().is_err());
+    }
+}

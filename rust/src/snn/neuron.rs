@@ -1,0 +1,117 @@
+//! Neuron models (paper §5.1, Table 1).
+//!
+//! Two classes: LIF (theta, nu, lambda) and ANN/binary (theta, nu), each
+//! optionally stochastic (the noise update). The flag bits here are the
+//! single source of truth shared with `python/compile/kernels/ref.py` and
+//! the Pallas kernel.
+
+use thiserror::Error;
+
+/// bit0: 1 = LIF membrane update (leak), 0 = ANN (cleared every step).
+pub const FLAG_LIF: u32 = 1;
+/// bit1: 1 = stochastic (apply the 17-bit noise update each step).
+pub const FLAG_NOISE: u32 = 2;
+
+/// lambda is a 6-bit leak exponent.
+pub const LAM_MAX: i32 = 63;
+/// nu is a 6-bit *signed* noise shift.
+pub const NU_MIN: i32 = -32;
+pub const NU_MAX: i32 = 31;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum ModelError {
+    #[error("nu={0} outside 6-bit signed range [{NU_MIN}, {NU_MAX}]")]
+    BadNu(i32),
+    #[error("lam={0} outside [0, {LAM_MAX}]")]
+    BadLam(i32),
+}
+
+/// A neuron model: the per-neuron parameter tuple programmed into the
+/// neuron-model section of HBM and applied by the membrane-update kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NeuronModel {
+    pub theta: i32,
+    pub nu: i32,
+    pub lam: i32,
+    pub flags: u32,
+}
+
+impl NeuronModel {
+    /// Leaky-integrate-and-fire: `V -= V >> lam` each step.
+    /// `lam = 63` approximates an integrate-and-fire neuron.
+    pub fn lif(theta: i32, nu: i32, lam: i32, stochastic: bool) -> Result<Self, ModelError> {
+        validate_nu(nu)?;
+        if !(0..=LAM_MAX).contains(&lam) {
+            return Err(ModelError::BadLam(lam));
+        }
+        Ok(Self {
+            theta,
+            nu,
+            lam,
+            flags: FLAG_LIF | if stochastic { FLAG_NOISE } else { 0 },
+        })
+    }
+
+    /// Binary (memoryless) neuron; with `stochastic` and nu > -17 it is a
+    /// Boltzmann-like stochastic binary neuron (Table 1 note).
+    pub fn ann(theta: i32, nu: i32, stochastic: bool) -> Result<Self, ModelError> {
+        validate_nu(nu)?;
+        Ok(Self { theta, nu, lam: 0, flags: if stochastic { FLAG_NOISE } else { 0 } })
+    }
+
+    /// Deterministic integrate-and-fire (the converted-model workhorse:
+    /// the paper uses membrane time constant 2^63 ≈ no leak).
+    pub fn if_neuron(theta: i32) -> Self {
+        Self::lif(theta, 0, LAM_MAX, false).expect("static params valid")
+    }
+
+    pub fn is_lif(&self) -> bool {
+        self.flags & FLAG_LIF != 0
+    }
+
+    pub fn is_stochastic(&self) -> bool {
+        self.flags & FLAG_NOISE != 0
+    }
+}
+
+fn validate_nu(nu: i32) -> Result<(), ModelError> {
+    if !(NU_MIN..=NU_MAX).contains(&nu) {
+        return Err(ModelError::BadNu(nu));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lif_flags() {
+        let m = NeuronModel::lif(3, 0, 63, false).unwrap();
+        assert!(m.is_lif() && !m.is_stochastic());
+        let m = NeuronModel::lif(3, -4, 2, true).unwrap();
+        assert!(m.is_lif() && m.is_stochastic());
+    }
+
+    #[test]
+    fn ann_flags() {
+        let m = NeuronModel::ann(5, 0, true).unwrap();
+        assert!(!m.is_lif() && m.is_stochastic());
+        assert_eq!(m.lam, 0);
+    }
+
+    #[test]
+    fn param_validation() {
+        assert_eq!(NeuronModel::lif(1, 99, 63, false), Err(ModelError::BadNu(99)));
+        assert_eq!(NeuronModel::lif(1, 0, 64, false), Err(ModelError::BadLam(64)));
+        assert_eq!(NeuronModel::ann(1, -33, false), Err(ModelError::BadNu(-33)));
+        assert!(NeuronModel::lif(1, NU_MIN, LAM_MAX, false).is_ok());
+    }
+
+    #[test]
+    fn if_neuron_is_max_lam() {
+        let m = NeuronModel::if_neuron(100);
+        assert_eq!(m.lam, LAM_MAX);
+        assert!(m.is_lif());
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Known boolean flag names (set before parse).
+    bool_flags: Vec<&'static str>,
+}
+
+impl Args {
+    /// `bool_flags` lists options that take no value (everything else with
+    /// a `--` prefix consumes the next token as its value unless it uses
+    /// `--key=value` syntax).
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        iter: I,
+        bool_flags: &[&'static str],
+    ) -> Result<Args, String> {
+        let mut args = Args { bool_flags: bool_flags.to_vec(), ..Default::default() };
+        let mut it = iter.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if args.bool_flags.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("option --{body} expects a value"))?;
+                    args.options.insert(body.to_string(), v);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse_env(bool_flags: &[&'static str]) -> Result<Args, String> {
+        Self::parse_from(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn get_u32(&self, name: &str, default: u32) -> Result<u32, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad float {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str], flags: &[&'static str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["run", "--steps", "10", "net.hsn", "--verbose"], &["verbose"]);
+        assert_eq!(a.positional, vec!["run", "net.hsn"]);
+        assert_eq!(a.get("steps"), Some("10"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn eq_syntax() {
+        let a = parse(&["--k=v", "--n=3"], &[]);
+        assert_eq!(a.get("k"), Some("v"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse_from(vec!["--steps".to_string()], &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--x", "2.5"], &[]);
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_f64("y", 1.5).unwrap(), 1.5);
+        assert!(parse(&["--n", "zz"], &[]).get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Offline-substitution utilities.
+//!
+//! The build environment has no network access and the vendored crate
+//! mirror lacks `rand`, `serde`, `clap`, `criterion` and `proptest`, so the
+//! small pieces of those we need are implemented here (see DESIGN.md
+//! "Substitutions"). Everything is deliberately minimal and heavily tested.
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod ptest;
+pub mod stats;

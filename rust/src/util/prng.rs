@@ -1,0 +1,179 @@
+//! Deterministic PRNG primitives, bit-exact with the Python/JAX side.
+//!
+//! Three generators live here:
+//!
+//! * [`mix_seed`] / [`noise17`] — the counter-based membrane-noise hash
+//!   used by the neuron update. These MUST match
+//!   `python/compile/kernels/ref.py` (and hence the Pallas kernel and the
+//!   AOT artifacts) bit-for-bit; `artifacts/golden/prng.json` pins them.
+//! * [`Xorshift32`] — a small stream PRNG for test-data generation and the
+//!   property-test microframework (not used by the hardware model).
+
+/// 2^32 / phi, the Weyl increment used to decorrelate lanes.
+pub const PHI32: u32 = 0x9E37_79B9;
+
+#[inline]
+fn xorshift_round(mut x: u32) -> u32 {
+    x ^= x << 13;
+    x ^= x >> 17;
+    x ^= x << 5;
+    x
+}
+
+/// Per-step seed derivation: one xorshift round over `base ^ step*phi`,
+/// low bit forced to 1 to avoid the all-zero fixed point.
+///
+/// Matches `ref.mix_seed`.
+#[inline]
+pub fn mix_seed(base_seed: u32, step: u32) -> u32 {
+    xorshift_round(base_seed ^ step.wrapping_mul(PHI32)) | 1
+}
+
+/// 17-bit odd membrane noise for neuron `idx` at seed `step_seed`:
+/// double-round xorshift32 hash -> low 17 bits -> [-2^16, 2^16) -> LSB=1.
+///
+/// Matches `ref.noise17`.
+#[inline]
+pub fn noise17(step_seed: u32, idx: u32) -> i32 {
+    let mut x = step_seed ^ idx.wrapping_mul(PHI32);
+    x = xorshift_round(x);
+    x = xorshift_round(x);
+    let lo = (x & 0x1_FFFF) as i32; // [0, 2^17)
+    (lo - (1 << 16)) | 1
+}
+
+/// The nu scaling shift applied to raw noise: left shift for nu >= 0,
+/// arithmetic right shift for nu < 0; shift amounts clamp to [0, 31].
+///
+/// Matches `ref.shift_noise` (wrapping on left shift, like int32 HLO).
+#[inline]
+pub fn shift_noise(xi: i32, nu: i32) -> i32 {
+    if nu >= 0 {
+        xi.wrapping_shl(nu.min(31) as u32)
+    } else {
+        xi >> (-nu).min(31)
+    }
+}
+
+/// Small xorshift32 stream PRNG for deterministic test data.
+#[derive(Clone, Debug)]
+pub struct Xorshift32 {
+    state: u32,
+}
+
+impl Xorshift32 {
+    pub fn new(seed: u32) -> Self {
+        Self { state: if seed == 0 { 0xBAD_5EED } else { seed } }
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        self.state = xorshift_round(self.state);
+        self.state
+    }
+
+    /// Uniform in [0, bound) via rejection-free multiply-shift.
+    #[inline]
+    pub fn below(&mut self, bound: u32) -> u32 {
+        ((self.next_u32() as u64 * bound as u64) >> 32) as u32
+    }
+
+    /// Uniform in [lo, hi) (i64 domain to allow full i32 ranges).
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo < hi);
+        let span = (hi - lo) as u64;
+        let r = ((self.next_u32() as u64) << 32) | self.next_u32() as u64;
+        lo + (r % span) as i64
+    }
+
+    #[inline]
+    pub fn range_i32(&mut self, lo: i32, hi: i32) -> i32 {
+        self.range_i64(lo as i64, hi as i64) as i32
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        (self.next_u32() as f64 / u32::MAX as f64) < p
+    }
+
+    /// Random permutation of 0..n (Fisher-Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            v.swap(i, j);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noise17_is_odd_and_bounded() {
+        for idx in 0..100_000u32 {
+            let v = noise17(12345, idx);
+            assert_eq!(v & 1, 1, "noise LSB must be 1");
+            assert!((-(1 << 16)..(1 << 16)).contains(&v));
+        }
+    }
+
+    #[test]
+    fn noise17_balanced_around_zero() {
+        let sum: i64 = (0..1_000_000u32).map(|i| noise17(7, i) as i64).sum();
+        let mean = sum as f64 / 1e6;
+        assert!(mean.abs() < 100.0, "mean {mean} too far from 0");
+    }
+
+    #[test]
+    fn mix_seed_never_zero_and_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for step in 0..10_000 {
+            let s = mix_seed(1, step);
+            assert_ne!(s, 0);
+            assert!(seen.insert(s), "collision at step {step}");
+        }
+    }
+
+    #[test]
+    fn shift_noise_semantics() {
+        assert_eq!(shift_noise(3, 2), 12);
+        assert_eq!(shift_noise(-1001, -2), -251); // arithmetic shift floors
+        assert_eq!(shift_noise(5, 0), 5);
+        // clamp: shifting by 99 behaves as 31
+        assert_eq!(shift_noise(1, 99), 1i32.wrapping_shl(31));
+        assert_eq!(shift_noise(-1, -99), -1);
+    }
+
+    #[test]
+    fn xorshift_stream_basic() {
+        let mut a = Xorshift32::new(42);
+        let mut b = Xorshift32::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+        let mut c = Xorshift32::new(43);
+        assert_ne!(a.next_u32(), c.next_u32());
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Xorshift32::new(9);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Xorshift32::new(5);
+        let p = r.permutation(257);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..257u32).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,106 @@
+//! Property-test microframework (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` seeded
+//! RNGs. On failure it re-runs with the failing seed to confirm, then
+//! panics with the seed so the case can be replayed deterministically:
+//!
+//! ```ignore
+//! ptest::check("hbm_layout_roundtrip", 200, |rng| {
+//!     let net = arbitrary_network(rng);
+//!     let img = HbmImage::compile(&net)?;
+//!     prop_assert(img.validate().is_ok(), "layout invariants");
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Failures return `Err(String)` (or panic) from the closure; `prop_assert`
+//! is a convenience for readable messages. A fixed base seed keeps CI
+//! deterministic; set `PTEST_SEED` to explore a different region, or
+//! `PTEST_CASES` to scale the number of cases.
+
+use super::prng::Xorshift32;
+
+/// Assert inside a property closure with a formatted message.
+pub fn prop_assert(cond: bool, msg: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+fn base_seed() -> u32 {
+    std::env::var("PTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_0001)
+}
+
+fn case_count(requested: usize) -> usize {
+    match std::env::var("PTEST_CASES").ok().and_then(|s| s.parse::<f64>().ok()) {
+        Some(scale) => ((requested as f64) * scale).max(1.0) as usize,
+        None => requested,
+    }
+}
+
+/// Run `body` over `cases` deterministic seeds; panic with the replay seed
+/// on the first failure.
+pub fn check<F>(name: &str, cases: usize, mut body: F)
+where
+    F: FnMut(&mut Xorshift32) -> Result<(), String>,
+{
+    let base = base_seed();
+    for case in 0..case_count(cases) {
+        let seed = base.wrapping_add(case as u32).wrapping_mul(0x9E37_79B9) | 1;
+        let mut rng = Xorshift32::new(seed);
+        if let Err(msg) = body(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay: PTEST_SEED={base}, \
+                 case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_clean_property() {
+        check("add_commutes", 50, |rng| {
+            let a = rng.range_i32(-1000, 1000);
+            let b = rng.range_i32(-1000, 1000);
+            prop_assert_eq(a + b, b + a, "commutativity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails'")]
+    fn reports_failure_with_seed() {
+        check("always_fails", 10, |_rng| Err("boom".to_string()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        check("capture", 5, |rng| {
+            first.push(rng.next_u32());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("capture", 5, |rng| {
+            second.push(rng.next_u32());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

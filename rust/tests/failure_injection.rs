@@ -1,0 +1,142 @@
+//! Failure-injection and robustness tests: corrupted inputs, capacity
+//! violations, malformed files and job-level fault isolation must produce
+//! errors, never wrong results or panics.
+
+use hiaer_spike::cluster::{parse_stimulus, run_job, Job, JobQueue, JobStatus};
+use hiaer_spike::energy::EnergyModel;
+use hiaer_spike::hbm::{HbmImage, SlotStrategy};
+use hiaer_spike::model_fmt::{hsl::read_hsl, read_hsd, read_hsn, write_hsn};
+use hiaer_spike::partition::{ClusterTopology, CoreCapacity, Partition};
+use hiaer_spike::runtime::{ArtifactRegistry, Runtime};
+use hiaer_spike::snn::{Network, NeuronModel, Synapse};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("hiaer_fi_{}_{name}", std::process::id()))
+}
+
+fn tiny_net() -> Network {
+    Network {
+        params: vec![NeuronModel::if_neuron(0); 3],
+        neuron_adj: vec![vec![Synapse { target: 1, weight: 1 }], vec![], vec![]],
+        axon_adj: vec![vec![Synapse { target: 0, weight: 1 }]],
+        outputs: vec![1],
+        base_seed: 0,
+    }
+}
+
+#[test]
+fn truncated_hsn_rejected() {
+    let p = tmp("trunc.hsn");
+    write_hsn(&tiny_net(), &p).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    for cut in [4usize, 9, 20, bytes.len() - 3] {
+        std::fs::write(&p, &bytes[..cut]).unwrap();
+        assert!(read_hsn(&p).is_err(), "truncation at {cut} must fail");
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn random_garbage_files_rejected_not_panicking() {
+    let p = tmp("garbage");
+    for seed in 0..20u8 {
+        let blob: Vec<u8> = (0..200).map(|i| (i as u8).wrapping_mul(seed + 7)).collect();
+        std::fs::write(&p, &blob).unwrap();
+        assert!(read_hsn(&p).is_err());
+        assert!(read_hsl(&p).is_err());
+        assert!(read_hsd(&p).is_err());
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn invalid_network_rejected_by_hbm_compiler() {
+    let mut net = tiny_net();
+    net.neuron_adj[0].push(Synapse { target: 99, weight: 1 }); // OOB
+    assert!(HbmImage::compile(&net, SlotStrategy::Modulo).is_err());
+}
+
+#[test]
+fn partitioner_rejects_impossible_capacity() {
+    let net = tiny_net();
+    let cap = CoreCapacity { max_neurons: 1, max_synapses: usize::MAX };
+    let topo = ClusterTopology::single_core();
+    assert!(Partition::compute(&net, topo, cap).is_err());
+}
+
+#[test]
+fn job_failure_is_isolated_and_reported() {
+    let good = tmp("good.hsn");
+    write_hsn(&tiny_net(), &good).unwrap();
+    let q = JobQueue::start(2, EnergyModel::default());
+    // interleave good and bad jobs
+    for id in 0..8 {
+        q.submit(Job {
+            id,
+            net_path: if id % 2 == 0 { good.clone() } else { tmp("missing.hsn") },
+            stimulus: vec![vec![0], vec![]],
+            topology: ClusterTopology::single_core(),
+        });
+    }
+    let results = q.drain();
+    q.shutdown();
+    std::fs::remove_file(&good).ok();
+    assert_eq!(results.len(), 8);
+    for r in results {
+        if r.id % 2 == 0 {
+            assert_eq!(r.status, JobStatus::Done, "good job {} must succeed", r.id);
+        } else {
+            assert!(matches!(r.status, JobStatus::Failed(_)));
+        }
+    }
+}
+
+#[test]
+fn stimulus_parser_rejects_bad_tokens_and_handles_comments() {
+    assert!(parse_stimulus("1 2 x").is_err());
+    assert!(parse_stimulus("-4").is_err());
+    let s = parse_stimulus("# header\n3 3 1\n").unwrap();
+    assert_eq!(s, vec![vec![1, 3]]); // sorted + deduped
+}
+
+#[test]
+fn stimulus_axon_out_of_range_fails_job() {
+    let p = tmp("oorjob.hsn");
+    write_hsn(&tiny_net(), &p).unwrap();
+    let job = Job {
+        id: 0,
+        net_path: p.clone(),
+        stimulus: vec![vec![42]], // only 1 axon exists
+        topology: ClusterTopology::single_core(),
+    };
+    let r = run_job(&job, &EnergyModel::default());
+    std::fs::remove_file(&p).ok();
+    assert!(matches!(r.status, JobStatus::Failed(_)) || r.spikes.is_empty());
+}
+
+#[test]
+fn runtime_missing_artifact_is_clean_error() {
+    let dir = tmp("no_artifacts_dir");
+    std::fs::create_dir_all(&dir).unwrap();
+    let rt = Runtime::cpu(&dir).unwrap();
+    match rt.load("neuron_update_n1024") {
+        Ok(_) => panic!("loading a missing artifact must fail"),
+        Err(err) => assert!(format!("{err:#}").contains("neuron_update_n1024")),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn registry_refuses_oversized_core() {
+    assert!(ArtifactRegistry::for_core(10_000_000).is_none());
+}
+
+#[test]
+fn corrupted_hlo_text_is_clean_error() {
+    let dir = tmp("bad_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("broken.hlo.txt"), "HloModule not really hlo {{{").unwrap();
+    let rt = Runtime::cpu(&dir).unwrap();
+    assert!(rt.load("broken").is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

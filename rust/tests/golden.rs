@@ -1,0 +1,130 @@
+//! Cross-language golden tests: the vectors emitted by
+//! `python/compile/aot.py` (jnp reference semantics) must match the Rust
+//! engines bit-for-bit. This closes the python <-> rust loop without
+//! python on the request path.
+//!
+//! Skipped (with a notice) when `make artifacts` hasn't run.
+
+use std::path::{Path, PathBuf};
+
+use hiaer_spike::engine::backend::{CoreParams, RustBackend, UpdateBackend};
+use hiaer_spike::engine::DenseEngine;
+use hiaer_spike::model_fmt::golden;
+use hiaer_spike::snn::{Network, NeuronModel, Synapse};
+use hiaer_spike::util::prng;
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("golden")
+}
+
+fn skip() -> bool {
+    if !golden_dir().join("prng.json").exists() {
+        eprintln!("golden vectors missing — run `make artifacts`; skipping");
+        return true;
+    }
+    false
+}
+
+#[test]
+fn prng_matches_python() {
+    if skip() {
+        return;
+    }
+    let g = golden::load_prng(&golden_dir().join("prng.json")).unwrap();
+    assert!(!g.mix_seed.is_empty() && !g.noise17.is_empty());
+    for (base, step, want) in g.mix_seed {
+        assert_eq!(prng::mix_seed(base, step), want, "mix_seed({base}, {step})");
+    }
+    for (seed, idx, want) in g.noise17 {
+        assert_eq!(prng::noise17(seed, idx), want, "noise17({seed}, {idx})");
+    }
+}
+
+#[test]
+fn neuron_update_matches_python() {
+    if skip() {
+        return;
+    }
+    let g = golden::load_neuron_update(&golden_dir().join("neuron_update.json")).unwrap();
+    let n = g.v.len();
+    let params = CoreParams {
+        theta: g.theta.clone(),
+        nu: g.nu.clone(),
+        lam: g.lam.clone(),
+        flags: g.flags.iter().map(|&f| f as u32).collect(),
+    };
+    let mut v = g.v.clone();
+    let mut spikes = vec![0i32; n];
+    RustBackend.update(&mut v, &params, g.step_seed, &mut spikes).unwrap();
+    assert_eq!(v, g.v_out, "membrane mismatch vs jnp reference");
+    assert_eq!(spikes, g.spikes, "spike mismatch vs jnp reference");
+}
+
+#[test]
+fn synapse_accum_matches_python() {
+    if skip() {
+        return;
+    }
+    let g = golden::load_synapse_accum(&golden_dir().join("synapse_accum.json")).unwrap();
+    let mut v = g.v.clone();
+    // python pads with target == n (dropped); emulate the drop here
+    let mut targets = Vec::new();
+    let mut weights = Vec::new();
+    for (&t, &w) in g.targets.iter().zip(&g.weights) {
+        if (t as usize) < g.n {
+            targets.push(t as u32);
+            weights.push(w);
+        }
+    }
+    RustBackend.accumulate(&mut v, &targets, &weights).unwrap();
+    assert_eq!(v, g.v_out);
+}
+
+#[test]
+fn dense_net_trace_matches_python() {
+    if skip() {
+        return;
+    }
+    let g = golden::load_dense_net(&golden_dir().join("dense_net.json")).unwrap();
+    // rebuild the network from the dense matrices
+    let mut net = Network {
+        params: (0..g.n)
+            .map(|i| NeuronModel {
+                theta: g.theta[i],
+                nu: g.nu[i],
+                lam: g.lam[i],
+                flags: g.flags[i] as u32,
+            })
+            .collect(),
+        neuron_adj: vec![Vec::new(); g.n],
+        axon_adj: vec![Vec::new(); g.a],
+        outputs: vec![],
+        base_seed: g.base_seed,
+    };
+    for i in 0..g.n {
+        for j in 0..g.n {
+            if g.w_neuron[i][j] != 0 {
+                net.neuron_adj[i].push(Synapse { target: j as u32, weight: g.w_neuron[i][j] as i16 });
+            }
+        }
+    }
+    for i in 0..g.a {
+        for j in 0..g.n {
+            if g.w_axon[i][j] != 0 {
+                net.axon_adj[i].push(Synapse { target: j as u32, weight: g.w_axon[i][j] as i16 });
+            }
+        }
+    }
+    let mut e = DenseEngine::new(&net);
+    for t in 0..g.steps {
+        let axons: Vec<u32> = g.axon_seq[t]
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x != 0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        let spikes = e.step(&axons).to_vec();
+        assert_eq!(spikes, g.spikes[t], "spike trace diverged at step {t}");
+        assert_eq!(e.v, g.v[t], "membrane trace diverged at step {t}");
+    }
+}
