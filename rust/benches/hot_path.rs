@@ -1,5 +1,10 @@
 //! Hot-path performance bench + ablations (EXPERIMENTS.md §Perf):
 //!
+//! 0. **headline**: the sparse-activity config (n = 100k, avg degree 16)
+//!    run on (a) a faithful replica of the pre-refactor hot path (O(N)
+//!    scalar spike scan + split target/weight event arrays) and (b) the
+//!    CSR + bitmask engine — the speedup is written to
+//!    `BENCH_hotpath.json` at the repo root (override with BENCH_OUT);
 //! 1. event-driven core engine steps/s across network sizes (rust
 //!    backend), synaptic events/s;
 //! 2. dense software-simulator baseline (the paper's Fig-8 CPU
@@ -9,60 +14,57 @@
 //!    backend, when artifacts are present;
 //! 5. multi-core scaling of wall-clock throughput.
 //!
-//! env: HOTPATH_STEPS (default 300), HOTPATH_XLA=0 to skip PJRT.
+//! env: HOTPATH_STEPS (default 300), HOTPATH_XLA=0 to skip PJRT,
+//! BENCH_OUT to redirect the JSON record.
 
 use std::time::Instant;
 
 use hiaer_spike::cluster::MultiCoreEngine;
-use hiaer_spike::engine::{CoreEngine, DenseEngine, RustBackend};
-use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::engine::{CoreEngine, CoreParams, DenseEngine, RustBackend};
+use hiaer_spike::hbm::{HbmImage, HbmSim, Pointer, SlotStrategy};
 use hiaer_spike::partition::{ClusterTopology, CoreCapacity};
 use hiaer_spike::runtime::{Runtime, XlaBackend};
-use hiaer_spike::snn::{Network, NeuronModel, Synapse};
-use hiaer_spike::util::prng::Xorshift32;
+use hiaer_spike::snn::{EdgeList, Network, NeuronModel, FLAG_LIF, FLAG_NOISE};
+use hiaer_spike::util::prng::{mix_seed, noise17, shift_noise, Xorshift32};
 
 /// Random net: n neurons, avg degree d, theta tuned for sustained sparse
-/// activity from periodic axon drive.
-fn make_net(n: usize, d: usize, seed: u32) -> Network {
+/// activity from periodic axon drive. `hubs` adds heavy-fan-in targets
+/// (the packing-ablation stressor).
+fn make_net(n: usize, d: usize, seed: u32, hubs: bool) -> Network {
     let mut rng = Xorshift32::new(seed);
-    let m = NeuronModel::if_neuron(60);
-    let mut net = Network {
-        params: vec![m; n],
-        neuron_adj: vec![Vec::new(); n],
-        axon_adj: vec![Vec::new(); 64.min(n)],
-        outputs: (0..(n as u32).min(8)).collect(),
-        base_seed: seed,
-    };
+    let a = 64.min(n);
+    let mut edges = EdgeList::with_capacity(n, a, n * d + a * 8);
     for i in 0..n {
         for _ in 0..d {
-            net.neuron_adj[i].push(Synapse {
-                target: rng.below(n as u32),
-                weight: rng.range_i32(5, 40) as i16,
-            });
+            edges.push_neuron(i as u32, rng.below(n as u32), rng.range_i32(5, 40) as i16);
         }
     }
-    for a in 0..net.axon_adj.len() {
+    for ax in 0..a {
         for _ in 0..8 {
-            net.axon_adj[a].push(Synapse {
-                target: rng.below(n as u32),
-                weight: 80,
-            });
+            edges.push_axon(ax as u32, rng.below(n as u32), 80);
         }
     }
-    net
+    if hubs {
+        // first 16 neurons become hubs to stress slot skew
+        let mut hub_rng = Xorshift32::new(9);
+        for i in 0..n {
+            if hub_rng.chance(0.3) {
+                edges.push_neuron(i as u32, hub_rng.below(16), 10);
+            }
+        }
+    }
+    edges.into_network(
+        vec![NeuronModel::if_neuron(60); n],
+        (0..(n as u32).min(8)).collect(),
+        seed,
+    )
 }
 
 /// Clustered net: `p_local` of synapses stay within the neuron's block.
 fn make_clustered_net(n: usize, d: usize, block: usize, p_local: f64, seed: u32) -> Network {
     let mut rng = Xorshift32::new(seed);
-    let m = NeuronModel::if_neuron(60);
-    let mut net = Network {
-        params: vec![m; n],
-        neuron_adj: vec![Vec::new(); n],
-        axon_adj: vec![Vec::new(); 64.min(n)],
-        outputs: (0..(n as u32).min(8)).collect(),
-        base_seed: seed,
-    };
+    let a = 64.min(n);
+    let mut edges = EdgeList::with_capacity(n, a, n * d + a * 8);
     for i in 0..n {
         let b0 = (i / block) * block;
         for _ in 0..d {
@@ -71,15 +73,19 @@ fn make_clustered_net(n: usize, d: usize, block: usize, p_local: f64, seed: u32)
             } else {
                 rng.below(n as u32)
             };
-            net.neuron_adj[i].push(Synapse { target, weight: rng.range_i32(5, 40) as i16 });
+            edges.push_neuron(i as u32, target, rng.range_i32(5, 40) as i16);
         }
     }
-    for a in 0..net.axon_adj.len() {
+    for ax in 0..a {
         for _ in 0..8 {
-            net.axon_adj[a].push(Synapse { target: rng.below(n as u32), weight: 80 });
+            edges.push_axon(ax as u32, rng.below(n as u32), 80);
         }
     }
-    net
+    edges.into_network(
+        vec![NeuronModel::if_neuron(60); n],
+        (0..(n as u32).min(8)).collect(),
+        seed,
+    )
 }
 
 fn drive(step: usize, n_axons: usize) -> Vec<u32> {
@@ -88,6 +94,96 @@ fn drive(step: usize, n_axons: usize) -> Vec<u32> {
         (0..n_axons as u32).step_by(2).collect()
     } else {
         Vec::new()
+    }
+}
+
+/// Faithful replica of the pre-refactor per-step hot path, kept so the
+/// headline speedup is measured against the real predecessor rather than
+/// guessed: scalar membrane loop writing a per-neuron 0/1 i32 mask, a
+/// full O(N) scan to extract fired ids, and phase-2 gather into split
+/// target/weight arrays consumed by a second full pass. It shares
+/// `HbmImage`/`HbmSim`, so everything except the hot path is identical.
+struct LegacyEngine {
+    hbm: HbmSim,
+    params: CoreParams,
+    v: Vec<i32>,
+    base_seed: u32,
+    step_num: u32,
+    spike_mask: Vec<i32>,
+    fired_buf: Vec<u32>,
+    fired_sorted: Vec<u32>,
+    ptr_queue: Vec<Pointer>,
+    targets: Vec<u32>,
+    weights: Vec<i32>,
+}
+
+impl LegacyEngine {
+    fn new(net: &Network, strategy: SlotStrategy) -> Self {
+        let image = HbmImage::compile(net, strategy).unwrap();
+        let n = net.n_neurons();
+        Self {
+            hbm: HbmSim::new(image),
+            params: CoreParams::from_network(net),
+            v: vec![0; n],
+            base_seed: net.base_seed,
+            step_num: 0,
+            spike_mask: vec![0; n],
+            fired_buf: Vec::with_capacity(n),
+            fired_sorted: Vec::with_capacity(n),
+            ptr_queue: Vec::new(),
+            targets: Vec::new(),
+            weights: Vec::new(),
+        }
+    }
+
+    fn step(&mut self, axon_in: &[u32]) {
+        let ss = mix_seed(self.base_seed, self.step_num);
+        for i in 0..self.v.len() {
+            let flags = self.params.flags[i];
+            let mut x = self.v[i];
+            if flags & FLAG_NOISE != 0 {
+                x = x.wrapping_add(shift_noise(noise17(ss, i as u32), self.params.nu[i]));
+            }
+            let s = (x > self.params.theta[i]) as i32;
+            if s != 0 {
+                x = 0;
+            }
+            if flags & FLAG_LIF != 0 {
+                x -= x >> self.params.lam[i].clamp(0, 31);
+            } else {
+                x = 0;
+            }
+            self.v[i] = x;
+            self.spike_mask[i] = s;
+        }
+        self.fired_buf.clear();
+        for (i, &s) in self.spike_mask.iter().enumerate() {
+            if s != 0 {
+                self.fired_buf.push(i as u32);
+            }
+        }
+        self.ptr_queue.clear();
+        self.hbm.fetch_axon_pointers(axon_in, &mut self.ptr_queue);
+        self.fired_sorted.clear();
+        self.fired_sorted.extend_from_slice(&self.fired_buf);
+        let rows = &self.hbm.image.neuron_ptr_row;
+        self.fired_sorted.sort_unstable_by_key(|&i| (rows[i as usize], i));
+        self.hbm.fetch_neuron_pointers(&self.fired_sorted, &mut self.ptr_queue);
+        self.targets.clear();
+        self.weights.clear();
+        let (targets, weights) = (&mut self.targets, &mut self.weights);
+        for k in 0..self.ptr_queue.len() {
+            let ptr = self.ptr_queue[k];
+            self.hbm.read_region(ptr, |e| {
+                targets.push(e.target);
+                weights.push(e.weight as i32);
+            });
+        }
+        for (&t, &w) in self.targets.iter().zip(self.weights.iter()) {
+            let slot = &mut self.v[t as usize];
+            *slot = slot.wrapping_add(w);
+        }
+        self.step_num += 1;
     }
 }
 
@@ -100,11 +196,60 @@ fn main() {
 
     println!("== hot-path bench (steps = {steps}) ==\n");
 
+    // ---------- 0. headline: sparse-activity config, legacy vs CSR+bitmask
+    let (hn, hd) = (100_000usize, 16usize);
+    println!("[0] sparse-activity headline (n = {hn}, d = {hd}): pre-refactor vs CSR+bitmask");
+    let net = make_net(hn, hd, 42, false);
+    let mut legacy = LegacyEngine::new(&net, SlotStrategy::BalanceFanIn);
+    let t0 = Instant::now();
+    for s in 0..steps {
+        legacy.step(&drive(s, net.n_axons()));
+    }
+    let legacy_rate = steps as f64 / t0.elapsed().as_secs_f64();
+
+    let mut e = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap();
+    let t0 = Instant::now();
+    for s in 0..steps {
+        e.step(&drive(s, net.n_axons())).unwrap();
+    }
+    let new_rate = steps as f64 / t0.elapsed().as_secs_f64();
+    let events_per_s = e.counters().events as f64 * new_rate / steps as f64;
+    assert_eq!(legacy.v, e.v, "legacy replica and CSR engine must stay bit-exact");
+    let speedup = new_rate / legacy_rate;
+    println!("  legacy hot path : {legacy_rate:>10.0} steps/s");
+    println!("  csr + bitmask   : {new_rate:>10.0} steps/s   ({speedup:.2}x)");
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap()
+            .join("BENCH_hotpath.json")
+            .display()
+            .to_string()
+    });
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let json = format!(
+        "{{\n  \"bench\": \"hot_path sparse-activity headline\",\n  \"unix_time\": {unix_time},\n  \
+         \"config\": {{\"neurons\": {hn}, \"avg_degree\": {hd}, \"steps\": {steps}, \
+         \"strategy\": \"BalanceFanIn\"}},\n  \
+         \"legacy_steps_per_s\": {legacy_rate:.1},\n  \
+         \"csr_bitmask_steps_per_s\": {new_rate:.1},\n  \
+         \"speedup\": {speedup:.3},\n  \
+         \"events_per_s\": {events_per_s:.0}\n}}\n"
+    );
+    match std::fs::write(&out, json) {
+        Ok(()) => println!("  wrote {out}"),
+        Err(err) => eprintln!("  could not write {out}: {err}"),
+    }
+
     // ---------- 1. event-driven engine scaling
-    println!("[1] event-driven core engine (rust backend)");
+    println!("\n[1] event-driven core engine (rust backend)");
     println!("{:>8} {:>6} {:>12} {:>14} {:>12}", "neurons", "deg", "steps/s", "events/s", "rows/step");
     for &(n, d) in &[(1_000, 16), (10_000, 16), (50_000, 16), (100_000, 8)] {
-        let net = make_net(n, d, 42);
+        let net = make_net(n, d, 42, false);
         let mut e = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap();
         let t0 = Instant::now();
         for s in 0..steps {
@@ -126,7 +271,7 @@ fn main() {
     println!("\n[2] dense software simulator baseline (same nets)");
     println!("{:>8} {:>12} {:>16}", "neurons", "steps/s", "vs event-driven");
     for &(n, d) in &[(1_000, 16), (10_000, 16)] {
-        let net = make_net(n, d, 42);
+        let net = make_net(n, d, 42, false);
         let mut ev = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap();
         let t0 = Instant::now();
         for s in 0..steps {
@@ -145,15 +290,7 @@ fn main() {
 
     // ---------- 3. slot-strategy ablation
     println!("\n[3] HBM packing ablation (50k neurons, hub-heavy fan-in)");
-    let mut net = make_net(50_000, 12, 7);
-    // add hub targets to stress slot skew
-    let mut rng = Xorshift32::new(9);
-    for i in 0..net.n_neurons() {
-        if rng.chance(0.3) {
-            let hub = rng.below(16); // first 16 neurons are hubs
-            net.neuron_adj[i].push(Synapse { target: hub, weight: 10 });
-        }
-    }
+    let net = make_net(50_000, 12, 7, true);
     for strat in [SlotStrategy::Modulo, SlotStrategy::BalanceFanIn] {
         let mut e = CoreEngine::new(&net, strat, RustBackend).unwrap();
         let t0 = Instant::now();
@@ -175,7 +312,7 @@ fn main() {
         println!("\n[4] AOT Pallas artifact path (PJRT CPU) vs native backend (10k neurons)");
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if dir.join("neuron_update_n16384.hlo.txt").exists() {
-            let net = make_net(10_000, 16, 42);
+            let net = make_net(10_000, 16, 42, false);
             let xla_steps = steps.min(100);
             match Runtime::cpu(&dir).map(std::sync::Arc::new).and_then(|rt| {
                 let backend = XlaBackend::new(rt, net.n_neurons())?;

@@ -206,20 +206,20 @@ mod tests {
     fn small_net(seed: u32) -> Network {
         let mut rng = Xorshift32::new(seed);
         let n = 40;
-        let mut net = Network {
-            params: vec![NeuronModel::if_neuron(5); n],
-            neuron_adj: vec![Vec::new(); n],
-            axon_adj: vec![vec![Synapse { target: 0, weight: 10 }]],
-            outputs: vec![0, 1],
-            base_seed: seed,
-        };
-        for i in 0..n {
+        let mut neuron_adj: Vec<Vec<Synapse>> = vec![Vec::new(); n];
+        for adj in neuron_adj.iter_mut() {
             for _ in 0..4 {
-                net.neuron_adj[i]
-                    .push(Synapse { target: rng.below(n as u32), weight: rng.range_i32(1, 9) as i16 });
+                adj.push(Synapse { target: rng.below(n as u32), weight: rng.range_i32(1, 9) as i16 });
             }
         }
-        net
+        let axon_adj = vec![vec![Synapse { target: 0, weight: 10 }]];
+        Network::from_adj(
+            vec![NeuronModel::if_neuron(5); n],
+            &neuron_adj,
+            &axon_adj,
+            vec![0, 1],
+            seed,
+        )
     }
 
     #[test]

@@ -21,7 +21,7 @@
 use anyhow::{bail, Result};
 
 use crate::model_fmt::{Layer, LayerGraph, NeuronKind};
-use crate::snn::{Network, NeuronModel, Synapse, WEIGHT_MAX, WEIGHT_MIN};
+use crate::snn::{EdgeList, Network, NeuronModel, WEIGHT_MAX, WEIGHT_MIN};
 
 /// How to realise trained biases in the spiking network (Supp A.2 lists
 /// both; the threshold method is exact and free, the axon method keeps
@@ -75,9 +75,11 @@ pub fn convert(graph: &LayerGraph, bias_mode: BiasMode, base_seed: u32) -> Resul
     };
 
     let mut params: Vec<NeuronModel> = vec![neuron_model(0); total];
-    let mut neuron_adj: Vec<Vec<Synapse>> = vec![Vec::new(); total];
     let n_axons = n_inputs + usize::from(bias_mode == BiasMode::Axon);
-    let mut axon_adj: Vec<Vec<Synapse>> = vec![Vec::new(); n_axons];
+    // Sources are visited postsynaptic-first (the sliding window walks
+    // output pixels), so synapses arrive in arbitrary presynaptic order;
+    // the flat EdgeList absorbs that and counting-sorts into CSR once.
+    let mut edges = EdgeList::new(total, n_axons);
     let bias_axon = (bias_mode == BiasMode::Axon).then_some(n_inputs as u32);
 
     // Push a synapse from presynaptic element `pre` (layer -1 = axons) to
@@ -87,20 +89,22 @@ pub fn convert(graph: &LayerGraph, bias_mode: BiasMode, base_seed: u32) -> Resul
                        post: usize,
                        w: i32,
                        layer_base: &[usize],
-                       neuron_adj: &mut Vec<Vec<Synapse>>,
-                       axon_adj: &mut Vec<Vec<Synapse>>|
+                       edges: &mut EdgeList|
      -> Result<()> {
         if w == 0 {
-            return Ok(()); // pruned — adjacency lists store sparse nets
+            return Ok(()); // pruned — the CSR stores sparse nets
         }
         if !(WEIGHT_MIN..=WEIGHT_MAX).contains(&w) {
             bail!("weight {w} outside int16 after quantization");
         }
-        let syn = Synapse { target: post as u32, weight: w as i16 };
         if pre_layer < 0 {
-            axon_adj[pre_idx].push(syn);
+            edges.push_axon(pre_idx as u32, post as u32, w as i16);
         } else {
-            neuron_adj[layer_base[pre_layer as usize] + pre_idx].push(syn);
+            edges.push_neuron(
+                (layer_base[pre_layer as usize] + pre_idx) as u32,
+                post as u32,
+                w as i16,
+            );
         }
         Ok(())
     };
@@ -124,10 +128,11 @@ pub fn convert(graph: &LayerGraph, bias_mode: BiasMode, base_seed: u32) -> Resul
                             let post = base + (f * oh + oy) * ow + ox;
                             params[post] = neuron_model(th);
                             if bias_mode == BiasMode::Axon && b != 0 {
-                                axon_adj[n_inputs].push(Synapse {
-                                    target: post as u32,
-                                    weight: b.clamp(WEIGHT_MIN, WEIGHT_MAX) as i16,
-                                });
+                                edges.push_axon(
+                                    n_inputs as u32,
+                                    post as u32,
+                                    b.clamp(WEIGHT_MIN, WEIGHT_MAX) as i16,
+                                );
                             }
                             // sliding window over the input index tensor
                             for c in 0..ic {
@@ -149,8 +154,7 @@ pub fn convert(graph: &LayerGraph, bias_mode: BiasMode, base_seed: u32) -> Resul
                                             post,
                                             w,
                                             &layer_base,
-                                            &mut neuron_adj,
-                                            &mut axon_adj,
+                                            &mut edges,
                                         )?;
                                     }
                                 }
@@ -170,22 +174,15 @@ pub fn convert(graph: &LayerGraph, bias_mode: BiasMode, base_seed: u32) -> Resul
                     let post = base + o;
                     params[post] = neuron_model(th);
                     if bias_mode == BiasMode::Axon && b != 0 {
-                        axon_adj[n_inputs].push(Synapse {
-                            target: post as u32,
-                            weight: b.clamp(WEIGHT_MIN, WEIGHT_MAX) as i16,
-                        });
+                        edges.push_axon(
+                            n_inputs as u32,
+                            post as u32,
+                            b.clamp(WEIGHT_MIN, WEIGHT_MAX) as i16,
+                        );
                     }
                     for i in 0..in_features {
                         let w = weights[o * in_features + i] as i32;
-                        connect(
-                            pre_layer,
-                            i,
-                            post,
-                            w,
-                            &layer_base,
-                            &mut neuron_adj,
-                            &mut axon_adj,
-                        )?;
+                        connect(pre_layer, i, post, w, &layer_base, &mut edges)?;
                     }
                 }
             }
@@ -205,15 +202,7 @@ pub fn convert(graph: &LayerGraph, bias_mode: BiasMode, base_seed: u32) -> Resul
                                         continue;
                                     }
                                     let pre = (c * ih + y) * iw + x;
-                                    connect(
-                                        pre_layer,
-                                        pre,
-                                        post,
-                                        1,
-                                        &layer_base,
-                                        &mut neuron_adj,
-                                        &mut axon_adj,
-                                    )?;
+                                    connect(pre_layer, pre, post, 1, &layer_base, &mut edges)?;
                                 }
                             }
                         }
@@ -238,13 +227,7 @@ pub fn convert(graph: &LayerGraph, bias_mode: BiasMode, base_seed: u32) -> Resul
         _ => vec![0; out_count],
     };
 
-    let net = Network {
-        params,
-        neuron_adj,
-        axon_adj,
-        outputs: output_neurons.clone(),
-        base_seed,
-    };
+    let net = edges.into_network(params, output_neurons.clone(), base_seed);
     net.validate().map_err(|e| anyhow::anyhow!("converted network invalid: {e}"))?;
     Ok(Converted {
         net,

@@ -3,7 +3,7 @@
 //! simulator in `python/hs_api/simulator.py` and the `dense_step` HLO
 //! artifact.
 
-use crate::engine::backend::{CoreParams, RustBackend, UpdateBackend};
+use crate::engine::backend::{mask_bit, mask_words, CoreParams, RustBackend, UpdateBackend};
 use crate::snn::Network;
 use crate::util::prng::mix_seed;
 
@@ -21,6 +21,9 @@ pub struct DenseEngine {
     pub base_seed: u32,
     pub step_num: u32,
     backend: RustBackend,
+    /// packed backend output
+    spike_words: Vec<u64>,
+    /// unpacked 0/1 mask — the engine's public step contract
     spike_buf: Vec<i32>,
 }
 
@@ -29,15 +32,17 @@ impl DenseEngine {
         let n = net.n_neurons();
         let a = net.n_axons();
         let mut w_neuron = vec![0i32; n * n];
-        for (i, adj) in net.neuron_adj.iter().enumerate() {
-            for s in adj {
-                w_neuron[i * n + s.target as usize] += s.weight as i32;
+        for i in 0..n {
+            let (tg, wt) = net.neuron_syns(i);
+            for (&t, &w) in tg.iter().zip(wt) {
+                w_neuron[i * n + t as usize] += w as i32;
             }
         }
         let mut w_axon = vec![0i32; a * n];
-        for (i, adj) in net.axon_adj.iter().enumerate() {
-            for s in adj {
-                w_axon[i * n + s.target as usize] += s.weight as i32;
+        for i in 0..a {
+            let (tg, wt) = net.axon_syns(i);
+            for (&t, &w) in tg.iter().zip(wt) {
+                w_axon[i * n + t as usize] += w as i32;
             }
         }
         Self {
@@ -50,6 +55,7 @@ impl DenseEngine {
             base_seed: net.base_seed,
             step_num: 0,
             backend: RustBackend,
+            spike_words: vec![0; mask_words(n)],
             spike_buf: vec![0; n],
         }
     }
@@ -64,8 +70,11 @@ impl DenseEngine {
     pub fn step(&mut self, axon_in: &[u32]) -> &[i32] {
         let ss = mix_seed(self.base_seed, self.step_num);
         self.backend
-            .update(&mut self.v, &self.params, ss, &mut self.spike_buf)
+            .update(&mut self.v, &self.params, ss, &mut self.spike_words)
             .expect("rust backend is infallible");
+        for (i, s) in self.spike_buf.iter_mut().enumerate() {
+            *s = mask_bit(&self.spike_words, i) as i32;
+        }
 
         // phase 4: dense row accumulation for fired neurons + axons
         let n = self.n;

@@ -13,6 +13,8 @@ pub mod backend;
 pub mod core;
 pub mod dense;
 
-pub use backend::{CoreParams, RustBackend, UpdateBackend};
+pub use backend::{
+    extract_fired, mask_bit, mask_words, set_mask_bit, CoreParams, RustBackend, UpdateBackend,
+};
 pub use core::{CoreEngine, StepOutput};
 pub use dense::DenseEngine;

@@ -93,44 +93,42 @@ impl HbmImage {
         // --- slot assignment
         let slot_of = assign_slots(net, strategy);
 
-        // --- synapse section: place sources one after another.
-        // Order: axons first (Fig 7 walks axons), then neurons grouped by
-        // model (Supp A.3 groups neuron pointers by model).
+        // --- synapse section: place sources one after another, each
+        // streaming its contiguous CSR (targets, weights) slice — no
+        // per-neuron Vec chasing. Order: axons first (Fig 7 walks
+        // axons), then neurons grouped by model (Supp A.3 groups neuron
+        // pointers by model).
         let mut rows: Vec<[SynEntry; ROW_SLOTS]> = Vec::new();
         let mut filled = 0usize;
         let mut dummy = 0usize;
+        // per-slot fill depth within the current source's region (reused)
+        let mut depth = [0usize; ROW_SLOTS];
 
         let mut place_source =
-            |syns: &[crate::snn::Synapse], is_output_src: bool| -> Pointer {
-                // group by slot
-                let mut per_slot: [Vec<&crate::snn::Synapse>; ROW_SLOTS] = Default::default();
-                for s in syns {
-                    per_slot[slot_of[s.target as usize] as usize].push(s);
+            |targets: &[u32], weights: &[i16], is_output_src: bool| -> Pointer {
+                // rows needed = max synapses landing in one slot
+                depth.fill(0);
+                for &t in targets {
+                    depth[slot_of[t as usize] as usize] += 1;
                 }
-                let mut need = per_slot.iter().map(Vec::len).max().unwrap_or(0);
-                if syns.is_empty() && is_output_src {
-                    // Supp A.3: leaf output neurons get a row of 16
-                    // zero-weight dummy synapses to carry the flag.
-                    need = 1;
-                }
-                if need == 0 {
-                    // Leaf, non-output neuron: still gets the 16-dummy row
-                    // so "every neuron has a space in the synapse section".
+                let mut need = depth.iter().copied().max().unwrap_or(0);
+                if targets.is_empty() {
+                    // Leaf source (output or not): one row of 16
+                    // zero-weight dummy synapses, so "every neuron has a
+                    // space in the synapse section" (Supp A.3).
                     need = 1;
                 }
                 let start = rows.len();
                 rows.resize(start + need, [SynEntry::default(); ROW_SLOTS]);
-                for (slot, list) in per_slot.iter().enumerate() {
-                    for (k, s) in list.iter().enumerate() {
-                        rows[start + k][slot] = SynEntry {
-                            target: s.target,
-                            weight: s.weight,
-                            flags: SYN_VALID,
-                        };
-                        filled += 1;
-                    }
+                depth.fill(0);
+                for (&t, &w) in targets.iter().zip(weights) {
+                    let slot = slot_of[t as usize] as usize;
+                    rows[start + depth[slot]][slot] =
+                        SynEntry { target: t, weight: w, flags: SYN_VALID };
+                    depth[slot] += 1;
+                    filled += 1;
                 }
-                if syns.is_empty() {
+                if targets.is_empty() {
                     // fill the dummy row with zero-weight valid slots
                     for slot in 0..ROW_SLOTS {
                         rows[start][slot] = SynEntry { target: 0, weight: 0, flags: SYN_VALID };
@@ -160,7 +158,10 @@ impl HbmImage {
         };
 
         let axon_ptr: Vec<Pointer> = (0..a)
-            .map(|i| place_source(&net.axon_adj[i], false))
+            .map(|i| {
+                let (tg, wt) = net.axon_syns(i);
+                place_source(tg, wt, false)
+            })
             .collect();
 
         // neurons in model-grouped order
@@ -169,8 +170,8 @@ impl HbmImage {
         let mut neuron_ptr = vec![Pointer::default(); n];
         let mut neuron_ptr_row = vec![0u32; n];
         for (pos, &i) in grouped.iter().enumerate() {
-            neuron_ptr[i as usize] =
-                place_source(&net.neuron_adj[i as usize], is_output[i as usize]);
+            let (tg, wt) = net.neuron_syns(i as usize);
+            neuron_ptr[i as usize] = place_source(tg, wt, is_output[i as usize]);
             neuron_ptr_row[i as usize] = (pos / ROW_SLOTS) as u32;
         }
         let axon_ptr_row: Vec<u32> = (0..a).map(|i| (i / ROW_SLOTS) as u32).collect();
@@ -281,22 +282,25 @@ impl HbmImage {
             v.sort_unstable();
             v
         };
-        let norm = |syns: &[crate::snn::Synapse]| -> Vec<(u32, i16)> {
-            let mut v: Vec<(u32, i16)> = syns
+        let norm = |tg: &[u32], wt: &[i16]| -> Vec<(u32, i16)> {
+            let mut v: Vec<(u32, i16)> = tg
                 .iter()
-                .filter(|s| s.weight != 0)
-                .map(|s| (s.target, s.weight))
+                .zip(wt)
+                .filter(|(_, &w)| w != 0)
+                .map(|(&t, &w)| (t, w))
                 .collect();
             v.sort_unstable();
             v
         };
         for (i, p) in self.axon_ptr.iter().enumerate() {
-            if collect(p) != norm(&net.axon_adj[i]) {
+            let (tg, wt) = net.axon_syns(i);
+            if collect(p) != norm(tg, wt) {
                 return Err(format!("axon {i} synapse mismatch"));
             }
         }
         for (i, p) in self.neuron_ptr.iter().enumerate() {
-            if collect(p) != norm(&net.neuron_adj[i]) {
+            let (tg, wt) = net.neuron_syns(i);
+            if collect(p) != norm(tg, wt) {
                 return Err(format!("neuron {i} synapse mismatch"));
             }
         }

@@ -135,7 +135,7 @@ mod tests {
         for i in 0..n {
             let next = format!("n{}", i + 1);
             let syns: Vec<(&str, i32)> =
-                if i + 1 < n { vec![(Box::leak(next.into_boxed_str()), 1)] } else { vec![] };
+                if i + 1 < n { vec![(next.as_str(), 1)] } else { vec![] };
             b.add_neuron(&format!("n{i}"), m, &syns).unwrap();
         }
         b.add_axon("in", &[("n0", 1)]).unwrap();

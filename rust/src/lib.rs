@@ -5,10 +5,10 @@
 //! The crate is organised as the paper's stack:
 //!
 //! * [`snn`] — network model primitives (axons, neurons, neuron models,
-//!   synapses) mirroring the `hs_api` Python interface.
+//!   synapses) mirroring the `hs_api` Python interface; connectivity is
+//!   stored CSR (flat target/weight arrays + offset tables).
 //! * [`hbm`] — the per-core HBM synaptic routing table simulator
-//!   (adjacency-list storage, 16-slot segments, alignment-aware packing,
-//!   access counting).
+//!   (16-slot segments, alignment-aware packing, access counting).
 //! * [`engine`] — single-core two-phase event-driven execution engine
 //!   ("grey matter").
 //! * [`router`] — hierarchical address-event routing between cores, FPGAs

@@ -19,7 +19,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::{Reader, Writer};
-use crate::snn::{Network, NeuronModel, Synapse};
+use crate::snn::{Network, NeuronModel};
 
 pub const HSN_MAGIC: &[u8; 8] = b"HSNET1\x00\x00";
 
@@ -43,25 +43,38 @@ pub fn read_hsn<P: AsRef<Path>>(path: P) -> Result<Network> {
         params.push(NeuronModel { theta, nu, lam, flags: flags as u32 });
     }
 
-    let mut read_adj = |count: usize| -> Result<Vec<Vec<Synapse>>> {
-        let mut adj = Vec::with_capacity(count);
-        for _ in 0..count {
-            let deg = r.u32()? as usize;
-            let mut syns = Vec::with_capacity(deg);
-            for _ in 0..deg {
-                let target = r.u32()?;
-                let weight = r.i16()?;
-                if target as usize >= n {
-                    bail!("synapse target {target} out of range ({n} neurons)");
-                }
-                syns.push(Synapse { target, weight });
+    // The on-disk order (per-neuron regions, then per-axon regions, each
+    // prefixed with its count) is exactly the CSR layout — stream the
+    // synapse entries straight into the flat arrays, no nested Vecs.
+    let mut syn_targets: Vec<u32> = Vec::new();
+    let mut syn_weights: Vec<i16> = Vec::new();
+    let mut neuron_off: Vec<u32> = Vec::with_capacity(n + 1);
+    let mut axon_off: Vec<u32> = Vec::with_capacity(a + 1);
+    neuron_off.push(0);
+    if n == 0 {
+        axon_off.push(0); // empty neuron section: axon regions start at 0
+    }
+    for source in 0..n + a {
+        let deg = r.u32()? as usize;
+        for _ in 0..deg {
+            let target = r.u32()?;
+            let weight = r.i16()?;
+            if target as usize >= n {
+                bail!("synapse target {target} out of range ({n} neurons)");
             }
-            adj.push(syns);
+            syn_targets.push(target);
+            syn_weights.push(weight);
         }
-        Ok(adj)
-    };
-    let neuron_adj = read_adj(n)?;
-    let axon_adj = read_adj(a)?;
+        let end = syn_targets.len() as u32;
+        if source < n {
+            neuron_off.push(end);
+            if source + 1 == n {
+                axon_off.push(end); // axon regions start where neurons end
+            }
+        } else {
+            axon_off.push(end);
+        }
+    }
 
     let mut outputs = Vec::with_capacity(n_out);
     for _ in 0..n_out {
@@ -72,7 +85,9 @@ pub fn read_hsn<P: AsRef<Path>>(path: P) -> Result<Network> {
         outputs.push(o);
     }
 
-    let net = Network { params, neuron_adj, axon_adj, outputs, base_seed };
+    let mut net =
+        Network { params, syn_targets, syn_weights, neuron_off, axon_off, outputs, base_seed };
+    net.sort_synapses();
     net.validate().map_err(|e| anyhow::anyhow!("invalid .hsn: {e}"))?;
     Ok(net)
 }
@@ -91,11 +106,16 @@ pub fn write_hsn<P: AsRef<Path>>(net: &Network, path: P) -> Result<()> {
         w.i32(p.lam);
         w.i32(p.flags as i32);
     }
-    for adj in net.neuron_adj.iter().chain(net.axon_adj.iter()) {
-        w.u32(adj.len() as u32);
-        for s in adj {
-            w.u32(s.target);
-            w.i16(s.weight);
+    for source in 0..net.n_neurons() + net.n_axons() {
+        let (tg, wt) = if source < net.n_neurons() {
+            net.neuron_syns(source)
+        } else {
+            net.axon_syns(source - net.n_neurons())
+        };
+        w.u32(tg.len() as u32);
+        for (&t, &wgt) in tg.iter().zip(wt) {
+            w.u32(t);
+            w.i16(wgt);
         }
     }
     for &o in &net.outputs {
@@ -148,8 +168,10 @@ mod tests {
         let got = read_hsn(&p).unwrap();
         std::fs::remove_file(&p).ok();
         assert_eq!(got.params, net.params);
-        assert_eq!(got.neuron_adj, net.neuron_adj);
-        assert_eq!(got.axon_adj, net.axon_adj);
+        assert_eq!(got.syn_targets, net.syn_targets);
+        assert_eq!(got.syn_weights, net.syn_weights);
+        assert_eq!(got.neuron_off, net.neuron_off);
+        assert_eq!(got.axon_off, net.axon_off);
         assert_eq!(got.outputs, net.outputs);
         assert_eq!(got.base_seed, net.base_seed);
     }
@@ -163,7 +185,10 @@ mod tests {
             let got = read_hsn(&p).map_err(|e| e.to_string())?;
             std::fs::remove_file(&p).ok();
             ptest::prop_assert_eq(got.params, net.params, "params")?;
-            ptest::prop_assert_eq(got.neuron_adj, net.neuron_adj, "neuron_adj")?;
+            ptest::prop_assert_eq(got.syn_targets, net.syn_targets, "syn_targets")?;
+            ptest::prop_assert_eq(got.syn_weights, net.syn_weights, "syn_weights")?;
+            ptest::prop_assert_eq(got.neuron_off, net.neuron_off, "neuron_off")?;
+            ptest::prop_assert_eq(got.axon_off, net.axon_off, "axon_off")?;
             Ok(())
         });
     }

@@ -100,7 +100,7 @@ impl Partition {
     ) -> Result<Partition, String> {
         let n = net.n_neurons();
         let n_cores = topology.n_cores();
-        let syn_of: Vec<usize> = net.neuron_adj.iter().map(Vec::len).collect();
+        let syn_of: Vec<usize> = (0..n).map(|i| net.neuron_degree(i)).collect();
 
         // how many cores do we actually need?
         let total_syn: usize = syn_of.iter().sum();
@@ -142,9 +142,9 @@ impl Partition {
         };
         let cut_of = |core_of: &[u32]| -> usize {
             let mut cut = 0usize;
-            for (i, adj) in net.neuron_adj.iter().enumerate() {
-                for s in adj {
-                    if core_of[i] != core_of[s.target as usize] {
+            for i in 0..n {
+                for &t in net.neuron_targets(i) {
+                    if core_of[i] != core_of[t as usize] {
                         cut += 1;
                     }
                 }
@@ -187,11 +187,11 @@ impl Partition {
     /// Cut statistics under the topology's routing levels.
     pub fn cut_stats(&self, net: &Network) -> CutStats {
         let mut s = CutStats::default();
-        for (i, adj) in net.neuron_adj.iter().enumerate() {
+        for i in 0..net.n_neurons() {
             let ci = self.core_of[i] as usize;
-            for syn in adj {
+            for &t in net.neuron_targets(i) {
                 s.total_synapses += 1;
-                let ct = self.core_of[syn.target as usize] as usize;
+                let ct = self.core_of[t as usize] as usize;
                 let lvl = self.topology.level(ci, ct);
                 if lvl > 0 {
                     s.cut_synapses += 1;
@@ -214,7 +214,7 @@ impl Partition {
             if m.len() > cap.max_neurons {
                 return Err(format!("core {c} over neuron capacity"));
             }
-            let syn: usize = m.iter().map(|&g| net.neuron_adj[g as usize].len()).sum();
+            let syn: usize = m.iter().map(|&g| net.neuron_degree(g as usize)).sum();
             if syn > cap.max_synapses {
                 return Err(format!("core {c} over synapse capacity"));
             }
@@ -249,11 +249,11 @@ fn bfs_order(net: &Network) -> Vec<u32> {
     let mut visited = vec![false; n];
     let mut order = Vec::with_capacity(n);
     let mut queue = std::collections::VecDeque::new();
-    for adj in &net.axon_adj {
-        for s in adj {
-            if !visited[s.target as usize] {
-                visited[s.target as usize] = true;
-                queue.push_back(s.target);
+    for a in 0..net.n_axons() {
+        for &t in net.axon_targets(a) {
+            if !visited[t as usize] {
+                visited[t as usize] = true;
+                queue.push_back(t);
             }
         }
     }
@@ -261,10 +261,10 @@ fn bfs_order(net: &Network) -> Vec<u32> {
     loop {
         while let Some(i) = queue.pop_front() {
             order.push(i);
-            for s in &net.neuron_adj[i as usize] {
-                if !visited[s.target as usize] {
-                    visited[s.target as usize] = true;
-                    queue.push_back(s.target);
+            for &t in net.neuron_targets(i as usize) {
+                if !visited[t as usize] {
+                    visited[t as usize] = true;
+                    queue.push_back(t);
                 }
             }
         }
@@ -293,10 +293,10 @@ fn refine(
     let n = net.n_neurons();
     // build undirected neighbour lists (out + in)
     let mut neigh: Vec<Vec<u32>> = vec![Vec::new(); n];
-    for (i, adj) in net.neuron_adj.iter().enumerate() {
-        for s in adj {
-            neigh[i].push(s.target);
-            neigh[s.target as usize].push(i as u32);
+    for i in 0..n {
+        for &t in net.neuron_targets(i) {
+            neigh[i].push(t);
+            neigh[t as usize].push(i as u32);
         }
     }
     let n_cores = counts.len();
@@ -323,7 +323,7 @@ fn refine(
                 let c = c as usize;
                 if tally[c] > best_cnt
                     && counts[c].0 + 1 <= cap.max_neurons
-                    && counts[c].1 + net.neuron_adj[i].len() <= cap.max_synapses
+                    && counts[c].1 + net.neuron_degree(i) <= cap.max_synapses
                 {
                     best = c;
                     best_cnt = tally[c];
@@ -334,9 +334,9 @@ fn refine(
             }
             if best != cur {
                 counts[cur].0 -= 1;
-                counts[cur].1 -= net.neuron_adj[i].len();
+                counts[cur].1 -= net.neuron_degree(i);
                 counts[best].0 += 1;
-                counts[best].1 += net.neuron_adj[i].len();
+                counts[best].1 += net.neuron_degree(i);
                 core_of[i] = best as u32;
                 moved += 1;
             }
@@ -461,14 +461,11 @@ mod tests {
     #[test]
     fn bfs_order_reaches_all() {
         let m = NeuronModel::if_neuron(1);
-        let mut b = NetworkBuilder::new();
-        for i in 0..10 {
-            b.add_neuron(&format!("n{i}"), m, &[]).unwrap();
-        }
-        let mut net = b.build().unwrap().0;
-        // disconnected graph, even with a cycle
-        net.neuron_adj[3].push(Synapse { target: 4, weight: 1 });
-        net.neuron_adj[4].push(Synapse { target: 3, weight: 1 });
+        // disconnected graph, even with a cycle (3 <-> 4), no axons
+        let mut neuron_adj: Vec<Vec<Synapse>> = vec![Vec::new(); 10];
+        neuron_adj[3].push(Synapse { target: 4, weight: 1 });
+        neuron_adj[4].push(Synapse { target: 3, weight: 1 });
+        let net = Network::from_adj(vec![m; 10], &neuron_adj, &[], vec![], 0);
         let order = bfs_order(&net);
         let mut sorted = order.clone();
         sorted.sort_unstable();

@@ -153,6 +153,11 @@ pub struct SplitNetwork {
     pub axon_local: Vec<Vec<u32>>,
 }
 
+/// Two-pass CSR extraction: pass 1 walks the global CSR once to discover
+/// remote/local axons and count per-source degrees; pass 2 allocates each
+/// sub-network's flat arrays in one shot and fills them through write
+/// cursors derived from the offset tables. No per-source Vec churn — the
+/// seed's nested-Vec assembly allocated one Vec per (core, source).
 pub fn split_network(net: &Network, part: &Partition) -> SplitNetwork {
     let n_cores = part.topology.n_cores();
     let n = net.n_neurons();
@@ -164,26 +169,6 @@ pub fn split_network(net: &Network, part: &Partition) -> SplitNetwork {
         is_output[o as usize] = true;
     }
 
-    // per-core: sub-network builders
-    let mut subnets: Vec<Network> = (0..n_cores)
-        .map(|c| {
-            let members = &part.members[c];
-            let params = members.iter().map(|&g| net.params[g as usize]).collect();
-            Network {
-                params,
-                neuron_adj: vec![Vec::new(); members.len()],
-                axon_adj: Vec::new(),
-                outputs: members
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, &g)| is_output[g as usize])
-                    .map(|(li, _)| li as u32)
-                    .collect(),
-                base_seed: net.base_seed.wrapping_add(c as u32),
-            }
-        })
-        .collect();
-
     let mut neuron_routes: Vec<Vec<Delivery>> = vec![Vec::new(); n];
     let mut axon_routes: Vec<Vec<Delivery>> = vec![Vec::new(); a];
     let mut axon_local: Vec<Vec<u32>> = vec![vec![u32::MAX; a]; n_cores];
@@ -191,10 +176,15 @@ pub fn split_network(net: &Network, part: &Partition) -> SplitNetwork {
     let mut remote_axon: Vec<std::collections::HashMap<u32, u32>> =
         vec![std::collections::HashMap::new(); n_cores];
 
+    // ---- pass 1: allocate local axon ids + count per-source degrees
+    let mut neuron_deg: Vec<Vec<u32>> =
+        part.members.iter().map(|m| vec![0u32; m.len()]).collect();
+    let mut axon_deg: Vec<Vec<u32>> = vec![Vec::new(); n_cores];
+
     // helper: get/create the local axon on `core` for a remote neuron or
-    // a global axon.
+    // a global axon (the degree table doubles as the id allocator).
     fn local_axon_for(
-        subnets: &mut [Network],
+        axon_deg: &mut [Vec<u32>],
         axon_local: &mut [Vec<u32>],
         remote_axon: &mut [std::collections::HashMap<u32, u32>],
         core: usize,
@@ -203,41 +193,32 @@ pub fn split_network(net: &Network, part: &Partition) -> SplitNetwork {
     ) -> u32 {
         if is_global_axon {
             if axon_local[core][src as usize] == u32::MAX {
-                let id = subnets[core].axon_adj.len() as u32;
-                subnets[core].axon_adj.push(Vec::new());
+                let id = axon_deg[core].len() as u32;
+                axon_deg[core].push(0);
                 axon_local[core][src as usize] = id;
             }
             axon_local[core][src as usize]
         } else {
             *remote_axon[core].entry(src).or_insert_with(|| {
-                let id = subnets[core].axon_adj.len() as u32;
-                subnets[core].axon_adj.push(Vec::new());
+                let id = axon_deg[core].len() as u32;
+                axon_deg[core].push(0);
                 id
             })
         }
     }
 
-    // distribute neuron synapses
     for g in 0..n as u32 {
         let home = part.core_of[g as usize] as usize;
         let gl = part.local_of[g as usize] as usize;
         let mut touched_cores: Vec<usize> = Vec::new();
-        for syn in &net.neuron_adj[g as usize] {
-            let tc = part.core_of[syn.target as usize] as usize;
-            let tl = part.local_of[syn.target as usize];
-            let s = crate::snn::Synapse { target: tl, weight: syn.weight };
+        for &t in net.neuron_targets(g as usize) {
+            let tc = part.core_of[t as usize] as usize;
             if tc == home {
-                subnets[home].neuron_adj[gl].push(s);
+                neuron_deg[home][gl] += 1;
             } else {
-                let la = local_axon_for(
-                    &mut subnets,
-                    &mut axon_local,
-                    &mut remote_axon,
-                    tc,
-                    false,
-                    g,
-                );
-                subnets[tc].axon_adj[la as usize].push(s);
+                let la =
+                    local_axon_for(&mut axon_deg, &mut axon_local, &mut remote_axon, tc, false, g);
+                axon_deg[tc][la as usize] += 1;
                 if !touched_cores.contains(&tc) {
                     touched_cores.push(tc);
                 }
@@ -248,16 +229,13 @@ pub fn split_network(net: &Network, part: &Partition) -> SplitNetwork {
             neuron_routes[g as usize].push(Delivery { core: tc as u32, local_axon: la });
         }
     }
-
-    // distribute global-axon synapses
     for ga in 0..a as u32 {
         let mut touched: Vec<usize> = Vec::new();
-        for syn in &net.axon_adj[ga as usize] {
-            let tc = part.core_of[syn.target as usize] as usize;
-            let tl = part.local_of[syn.target as usize];
-            let la = local_axon_for(&mut subnets, &mut axon_local, &mut remote_axon, tc, true, ga);
-            subnets[tc].axon_adj[la as usize]
-                .push(crate::snn::Synapse { target: tl, weight: syn.weight });
+        for &t in net.axon_targets(ga as usize) {
+            let tc = part.core_of[t as usize] as usize;
+            let la =
+                local_axon_for(&mut axon_deg, &mut axon_local, &mut remote_axon, tc, true, ga);
+            axon_deg[tc][la as usize] += 1;
             if !touched.contains(&tc) {
                 touched.push(tc);
             }
@@ -266,6 +244,83 @@ pub fn split_network(net: &Network, part: &Partition) -> SplitNetwork {
             axon_routes[ga as usize]
                 .push(Delivery { core: tc as u32, local_axon: axon_local[tc][ga as usize] });
         }
+    }
+
+    // ---- pass 2: CSR skeletons from the degree tables, fill by cursor
+    let mut subnets: Vec<Network> = (0..n_cores)
+        .map(|c| {
+            let members = &part.members[c];
+            let params = members.iter().map(|&g| net.params[g as usize]).collect();
+            let outputs = members
+                .iter()
+                .enumerate()
+                .filter(|(_, &g)| is_output[g as usize])
+                .map(|(li, _)| li as u32)
+                .collect();
+            Network::with_degrees(
+                params,
+                &neuron_deg[c],
+                &axon_deg[c],
+                outputs,
+                net.base_seed.wrapping_add(c as u32),
+            )
+        })
+        .collect();
+
+    // write cursor per source slot (local neurons, then local axons)
+    let mut cursor: Vec<Vec<u32>> = subnets
+        .iter()
+        .map(|s| {
+            s.neuron_off[..s.n_neurons()]
+                .iter()
+                .chain(s.axon_off[..s.n_axons()].iter())
+                .copied()
+                .collect()
+        })
+        .collect();
+
+    fn put(
+        subnets: &mut [Network],
+        cursor: &mut [Vec<u32>],
+        core: usize,
+        slot: usize,
+        target: u32,
+        weight: i16,
+    ) {
+        let k = cursor[core][slot] as usize;
+        subnets[core].syn_targets[k] = target;
+        subnets[core].syn_weights[k] = weight;
+        cursor[core][slot] += 1;
+    }
+
+    for g in 0..n as u32 {
+        let home = part.core_of[g as usize] as usize;
+        let gl = part.local_of[g as usize] as usize;
+        let (tg, wt) = net.neuron_syns(g as usize);
+        for (&t, &w) in tg.iter().zip(wt) {
+            let tc = part.core_of[t as usize] as usize;
+            let tl = part.local_of[t as usize];
+            if tc == home {
+                put(&mut subnets, &mut cursor, home, gl, tl, w);
+            } else {
+                let la = remote_axon[tc][&g] as usize;
+                let slot = subnets[tc].n_neurons() + la;
+                put(&mut subnets, &mut cursor, tc, slot, tl, w);
+            }
+        }
+    }
+    for ga in 0..a as u32 {
+        let (tg, wt) = net.axon_syns(ga as usize);
+        for (&t, &w) in tg.iter().zip(wt) {
+            let tc = part.core_of[t as usize] as usize;
+            let tl = part.local_of[t as usize];
+            let la = axon_local[tc][ga as usize] as usize;
+            let slot = subnets[tc].n_neurons() + la;
+            put(&mut subnets, &mut cursor, tc, slot, tl, w);
+        }
+    }
+    for s in &mut subnets {
+        s.sort_synapses();
     }
 
     SplitNetwork { subnets, table: RoutingTable { neuron_routes, axon_routes }, axon_local }

@@ -11,8 +11,8 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use super::{lit_i32, lit_u32_scalar, ArtifactRegistry, Runtime};
-use crate::engine::backend::{CoreParams, UpdateBackend};
+use super::{lit_i32, lit_u32_scalar, xla, ArtifactRegistry, Runtime};
+use crate::engine::backend::{mask_words, set_mask_bit, CoreParams, UpdateBackend};
 
 pub struct XlaBackend {
     rt: Arc<Runtime>,
@@ -81,9 +81,10 @@ impl UpdateBackend for XlaBackend {
         v: &mut [i32],
         params: &CoreParams,
         step_seed: u32,
-        spikes: &mut [i32],
+        spikes: &mut [u64],
     ) -> Result<()> {
         let n = v.len();
+        debug_assert_eq!(spikes.len(), mask_words(n));
         if self.params_lit.is_none() {
             self.build_params(params);
         }
@@ -102,11 +103,17 @@ impl UpdateBackend for XlaBackend {
         out[0].copy_raw_to(&mut self.v_pad)?;
         out[1].copy_raw_to(&mut self.spikes_pad)?;
         v.copy_from_slice(&self.v_pad[..n]);
-        spikes.copy_from_slice(&self.spikes_pad[..n]);
+        // pack the artifact's 0/1 vector into the engine's bitmask words
+        spikes.fill(0);
+        for (i, &s) in self.spikes_pad[..n].iter().enumerate() {
+            if s != 0 {
+                set_mask_bit(spikes, i);
+            }
+        }
         Ok(())
     }
 
-    fn accumulate(&mut self, v: &mut [i32], targets: &[u32], weights: &[i32]) -> Result<()> {
+    fn accumulate(&mut self, v: &mut [i32], events: &[(u32, i32)]) -> Result<()> {
         let n = v.len();
         let n_pad = self.reg.n_pad;
         self.v_pad[..n].copy_from_slice(v);
@@ -114,22 +121,23 @@ impl UpdateBackend for XlaBackend {
 
         // chunk through the largest variant if the event batch overflows
         let mut off = 0;
-        while off < targets.len() || off == 0 {
-            let remaining = targets.len() - off;
+        while off < events.len() || off == 0 {
+            let remaining = events.len() - off;
             let (cap, name) = self.reg.accum_for(remaining);
             let take = remaining.min(cap);
             self.tgt_pad.clear();
-            self.tgt_pad
-                .extend(targets[off..off + take].iter().map(|&t| t as i32));
-            self.tgt_pad.resize(cap, n_pad as i32); // dropped by scatter
             self.wgt_pad.clear();
-            self.wgt_pad.extend_from_slice(&weights[off..off + take]);
+            for &(t, w) in &events[off..off + take] {
+                self.tgt_pad.push(t as i32);
+                self.wgt_pad.push(w);
+            }
+            self.tgt_pad.resize(cap, n_pad as i32); // dropped by scatter
             self.wgt_pad.resize(cap, 0);
             let args = [lit_i32(&self.v_pad), lit_i32(&self.tgt_pad), lit_i32(&self.wgt_pad)];
             let out = self.rt.execute(name, &args)?;
             out[0].copy_raw_to(&mut self.v_pad)?;
             off += take;
-            if targets.is_empty() {
+            if events.is_empty() {
                 break;
             }
         }
@@ -176,22 +184,22 @@ mod tests {
         let mut rust_b = RustBackend;
 
         let mut v1 = v0.clone();
-        let mut s1 = vec![0i32; n];
+        let mut s1 = vec![0u64; mask_words(n)];
         rust_b.update(&mut v1, &params, 0xABCD, &mut s1).unwrap();
         let mut v2 = v0.clone();
-        let mut s2 = vec![0i32; n];
+        let mut s2 = vec![0u64; mask_words(n)];
         xla_b.update(&mut v2, &params, 0xABCD, &mut s2).unwrap();
         assert_eq!(s1, s2, "spike masks diverge");
         assert_eq!(v1, v2, "membranes diverge");
 
         // accumulate parity incl. empty batch
-        let targets: Vec<u32> = (0..500).map(|_| rng.below(n as u32)).collect();
-        let weights: Vec<i32> = (0..500).map(|_| rng.range_i32(-100, 100)).collect();
-        rust_b.accumulate(&mut v1, &targets, &weights).unwrap();
-        xla_b.accumulate(&mut v2, &targets, &weights).unwrap();
+        let events: Vec<(u32, i32)> =
+            (0..500).map(|_| (rng.below(n as u32), rng.range_i32(-100, 100))).collect();
+        rust_b.accumulate(&mut v1, &events).unwrap();
+        xla_b.accumulate(&mut v2, &events).unwrap();
         assert_eq!(v1, v2);
-        rust_b.accumulate(&mut v1, &[], &[]).unwrap();
-        xla_b.accumulate(&mut v2, &[], &[]).unwrap();
+        rust_b.accumulate(&mut v1, &[]).unwrap();
+        xla_b.accumulate(&mut v2, &[]).unwrap();
         assert_eq!(v1, v2);
     }
 }

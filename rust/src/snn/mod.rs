@@ -5,10 +5,15 @@
 //! neuron model and an outgoing synapse list) and an outputs list. The
 //! [`NetworkBuilder`] offers the keyed dictionary-style API of the paper;
 //! [`Network`] is the flattened index-based form every other subsystem
-//! (HBM compiler, engines, partitioner) consumes.
+//! (HBM compiler, engines, partitioner) consumes. Connectivity is stored
+//! CSR (flat `syn_targets`/`syn_weights` plus offset tables — see the
+//! `network` module docs); [`EdgeList`] is the flat construction scratch
+//! for callers that discover synapses in arbitrary source order.
 
 mod neuron;
 mod network;
 
 pub use neuron::{NeuronModel, FLAG_LIF, FLAG_NOISE, LAM_MAX, NU_MAX, NU_MIN};
-pub use network::{Network, NetworkBuilder, Synapse, WEIGHT_MAX, WEIGHT_MIN};
+pub use network::{
+    EdgeList, KeyMap, NetError, Network, NetworkBuilder, Synapse, WEIGHT_MAX, WEIGHT_MIN,
+};

@@ -1,6 +1,38 @@
 //! The flattened network representation and its keyed builder.
+//!
+//! # CSR memory layout
+//!
+//! Connectivity is stored as one compressed-sparse-row (CSR) structure
+//! shared by neurons and axons — the in-memory mirror of the HBM synapse
+//! section (contiguous region per source):
+//!
+//! ```text
+//! syn_targets : [ n0 syns | n1 syns | ... | a0 syns | a1 syns | ... ]  u32
+//! syn_weights : [    parallel to syn_targets                       ]  i16
+//! neuron_off  : n_neurons + 1 offsets into the flat arrays
+//! axon_off    : n_axons + 1 offsets; axon_off[0] == neuron_off[n]
+//! ```
+//!
+//! Neuron `i`'s outgoing synapses occupy
+//! `syn_targets[neuron_off[i] .. neuron_off[i+1]]` (axons analogously,
+//! after all neuron regions). Compared to the seed's
+//! `Vec<Vec<Synapse>>` this removes one heap allocation + pointer chase
+//! per source, makes whole-network sweeps (fan-in, HBM compile,
+//! partition cuts) a single linear scan, and lets `split_network`
+//! extract sub-networks by offset arithmetic. Offsets are `u32`: a
+//! single in-memory `Network` holds < 2^32 synapses (the per-core HBM
+//! budget is 32M; cluster-scale networks are partitioned before they
+//! are materialised per core).
+//!
+//! Every per-source slice is sorted by target id
+//! ([`Network::sort_synapses`] runs at the end of every construction
+//! path), which enables the binary-search `read_synapse` /
+//! `write_synapse` and gives all builders one canonical form.
+//! Duplicate (source, target) pairs are allowed (weights accumulate at
+//! delivery); lookups resolve to one of the duplicates.
 
 use std::collections::HashMap;
+use std::ops::Range;
 
 use thiserror::Error;
 
@@ -10,7 +42,8 @@ use super::neuron::NeuronModel;
 pub const WEIGHT_MIN: i32 = -(1 << 15);
 pub const WEIGHT_MAX: i32 = (1 << 15) - 1;
 
-/// One synapse: postsynaptic neuron index + int16 weight.
+/// One synapse: postsynaptic neuron index + int16 weight. Construction
+/// currency only — the stored form is the CSR arrays.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Synapse {
     pub target: u32,
@@ -21,33 +54,49 @@ pub struct Synapse {
 pub enum NetError {
     #[error("duplicate key {0:?}")]
     DuplicateKey(String),
-    #[error("unknown neuron key {0:?}")]
-    UnknownNeuron(String),
-    #[error("unknown presynaptic key {0:?}")]
-    UnknownPre(String),
+    #[error("neuron {pre:?} synapse targets unknown neuron {target:?}")]
+    UnknownNeuronTarget { pre: String, target: String },
+    #[error("axon {pre:?} synapse targets unknown neuron {target:?}")]
+    UnknownAxonTarget { pre: String, target: String },
     #[error("weight {0} outside int16 range")]
     BadWeight(i32),
-    #[error("no synapse {0:?} -> {1:?}")]
-    NoSynapse(String, String),
     #[error("output {0:?} is not a neuron")]
     BadOutput(String),
 }
 
 /// Flattened, index-based network — the form consumed by the HBM
 /// compiler, the engines and the partitioner. Axons and neurons are
-/// contiguous 0-based index spaces.
-#[derive(Clone, Debug, Default)]
+/// contiguous 0-based index spaces; connectivity is CSR (module docs).
+#[derive(Clone, Debug)]
 pub struct Network {
     /// Per-neuron model parameters.
     pub params: Vec<NeuronModel>,
-    /// Outgoing synapses per neuron (pre-major adjacency).
-    pub neuron_adj: Vec<Vec<Synapse>>,
-    /// Outgoing synapses per axon.
-    pub axon_adj: Vec<Vec<Synapse>>,
+    /// Flat synapse targets (neuron regions, then axon regions).
+    pub syn_targets: Vec<u32>,
+    /// Flat synapse weights, parallel to `syn_targets`.
+    pub syn_weights: Vec<i16>,
+    /// Per-neuron region offsets (`n_neurons + 1` entries).
+    pub neuron_off: Vec<u32>,
+    /// Per-axon region offsets (`n_axons + 1`; first == last neuron_off).
+    pub axon_off: Vec<u32>,
     /// Indices of monitored output neurons.
     pub outputs: Vec<u32>,
     /// Base RNG seed for the stochastic neuron noise.
     pub base_seed: u32,
+}
+
+impl Default for Network {
+    fn default() -> Self {
+        Network {
+            params: Vec::new(),
+            syn_targets: Vec::new(),
+            syn_weights: Vec::new(),
+            neuron_off: vec![0],
+            axon_off: vec![0],
+            outputs: Vec::new(),
+            base_seed: 0,
+        }
+    }
 }
 
 impl Network {
@@ -56,40 +105,195 @@ impl Network {
     }
 
     pub fn n_axons(&self) -> usize {
-        self.axon_adj.len()
+        self.axon_off.len() - 1
     }
 
     pub fn n_synapses(&self) -> usize {
-        self.neuron_adj.iter().map(Vec::len).sum::<usize>()
-            + self.axon_adj.iter().map(Vec::len).sum::<usize>()
+        self.syn_targets.len()
+    }
+
+    /// Flat-array range of neuron `i`'s outgoing synapses.
+    #[inline]
+    pub fn neuron_range(&self, i: usize) -> Range<usize> {
+        self.neuron_off[i] as usize..self.neuron_off[i + 1] as usize
+    }
+
+    /// Flat-array range of axon `i`'s outgoing synapses.
+    #[inline]
+    pub fn axon_range(&self, i: usize) -> Range<usize> {
+        self.axon_off[i] as usize..self.axon_off[i + 1] as usize
+    }
+
+    /// Contiguous (targets, weights) slices of neuron `i`.
+    #[inline]
+    pub fn neuron_syns(&self, i: usize) -> (&[u32], &[i16]) {
+        let r = self.neuron_range(i);
+        (&self.syn_targets[r.clone()], &self.syn_weights[r])
+    }
+
+    /// Contiguous (targets, weights) slices of axon `i`.
+    #[inline]
+    pub fn axon_syns(&self, i: usize) -> (&[u32], &[i16]) {
+        let r = self.axon_range(i);
+        (&self.syn_targets[r.clone()], &self.syn_weights[r])
+    }
+
+    /// Target ids of neuron `i`'s outgoing synapses.
+    #[inline]
+    pub fn neuron_targets(&self, i: usize) -> &[u32] {
+        &self.syn_targets[self.neuron_range(i)]
+    }
+
+    /// Target ids of axon `i`'s outgoing synapses.
+    #[inline]
+    pub fn axon_targets(&self, i: usize) -> &[u32] {
+        &self.syn_targets[self.axon_range(i)]
+    }
+
+    /// Out-degree of neuron `i`.
+    #[inline]
+    pub fn neuron_degree(&self, i: usize) -> usize {
+        self.neuron_range(i).len()
+    }
+
+    /// Out-degree of axon `i`.
+    #[inline]
+    pub fn axon_degree(&self, i: usize) -> usize {
+        self.axon_range(i).len()
+    }
+
+    /// Allocate a CSR skeleton from per-source out-degrees (zeroed
+    /// synapse arrays). Fill `syn_targets` / `syn_weights` through the
+    /// offset tables, then call [`Self::sort_synapses`].
+    pub fn with_degrees(
+        params: Vec<NeuronModel>,
+        neuron_deg: &[u32],
+        axon_deg: &[u32],
+        outputs: Vec<u32>,
+        base_seed: u32,
+    ) -> Network {
+        debug_assert_eq!(params.len(), neuron_deg.len());
+        // u32 offsets cap one materialised Network at 2^32 synapses; a
+        // silent wrap would alias regions undetectably, so fail loudly.
+        let grow = |off: u32, d: u32| -> u32 {
+            off.checked_add(d)
+                .expect("network exceeds u32 CSR offset capacity (2^32 synapses); partition first")
+        };
+        let mut off = 0u32;
+        let mut neuron_off = Vec::with_capacity(neuron_deg.len() + 1);
+        neuron_off.push(0);
+        for &d in neuron_deg {
+            off = grow(off, d);
+            neuron_off.push(off);
+        }
+        let mut axon_off = Vec::with_capacity(axon_deg.len() + 1);
+        axon_off.push(off);
+        for &d in axon_deg {
+            off = grow(off, d);
+            axon_off.push(off);
+        }
+        Network {
+            params,
+            syn_targets: vec![0; off as usize],
+            syn_weights: vec![0; off as usize],
+            neuron_off,
+            axon_off,
+            outputs,
+            base_seed,
+        }
+    }
+
+    /// Build from per-source nested synapse lists — the reference
+    /// construction path (tests, format readers, small hand-built nets).
+    pub fn from_adj(
+        params: Vec<NeuronModel>,
+        neuron_adj: &[Vec<Synapse>],
+        axon_adj: &[Vec<Synapse>],
+        outputs: Vec<u32>,
+        base_seed: u32,
+    ) -> Network {
+        let ndeg: Vec<u32> = neuron_adj.iter().map(|l| l.len() as u32).collect();
+        let adeg: Vec<u32> = axon_adj.iter().map(|l| l.len() as u32).collect();
+        let mut net = Network::with_degrees(params, &ndeg, &adeg, outputs, base_seed);
+        let mut k = 0usize;
+        for list in neuron_adj.iter().chain(axon_adj.iter()) {
+            for s in list {
+                net.syn_targets[k] = s.target;
+                net.syn_weights[k] = s.weight;
+                k += 1;
+            }
+        }
+        net.sort_synapses();
+        net
+    }
+
+    /// Canonicalize: sort every per-source slice by target (stable, so
+    /// duplicate targets keep insertion order). Required by the
+    /// binary-search synapse lookup; every construction path ends here.
+    pub fn sort_synapses(&mut self) {
+        let n = self.n_neurons();
+        let a = self.n_axons();
+        let mut scratch: Vec<(u32, i16)> = Vec::new();
+        for s in 0..n + a {
+            let r = if s < n { self.neuron_range(s) } else { self.axon_range(s - n) };
+            if r.len() < 2 {
+                continue;
+            }
+            if self.syn_targets[r.clone()].windows(2).all(|w| w[0] <= w[1]) {
+                continue;
+            }
+            scratch.clear();
+            scratch.extend(
+                self.syn_targets[r.clone()]
+                    .iter()
+                    .copied()
+                    .zip(self.syn_weights[r.clone()].iter().copied()),
+            );
+            scratch.sort_by_key(|&(t, _)| t);
+            for (k, &(t, w)) in scratch.iter().enumerate() {
+                self.syn_targets[r.start + k] = t;
+                self.syn_weights[r.start + k] = w;
+            }
+        }
     }
 
     /// Total fan-in per neuron (used by the partitioner's traffic model).
+    /// One linear pass over the flat target array.
     pub fn fan_in(&self) -> Vec<u32> {
         let mut f = vec![0u32; self.n_neurons()];
-        for adj in self.neuron_adj.iter().chain(self.axon_adj.iter()) {
-            for s in adj {
-                f[s.target as usize] += 1;
-            }
+        for &t in &self.syn_targets {
+            f[t as usize] += 1;
         }
         f
     }
 
-    /// Structural validation: every synapse target in range, outputs valid.
+    /// Structural validation: offsets consistent, every synapse target in
+    /// range, outputs valid.
     pub fn validate(&self) -> Result<(), String> {
         let n = self.n_neurons() as u32;
-        for (i, adj) in self.neuron_adj.iter().enumerate() {
-            for s in adj {
-                if s.target >= n {
-                    return Err(format!("neuron {i} synapse target {} out of range", s.target));
-                }
-            }
+        if self.neuron_off.len() != self.params.len() + 1 {
+            return Err("params/neuron_off length mismatch".into());
         }
-        for (i, adj) in self.axon_adj.iter().enumerate() {
-            for s in adj {
-                if s.target >= n {
-                    return Err(format!("axon {i} synapse target {} out of range", s.target));
-                }
+        if self.neuron_off[0] != 0 {
+            return Err("neuron_off must start at 0".into());
+        }
+        if self.axon_off.is_empty() || self.axon_off[0] != *self.neuron_off.last().unwrap() {
+            return Err("axon_off must continue neuron_off".into());
+        }
+        if self.syn_targets.len() != self.syn_weights.len() {
+            return Err("syn_targets/syn_weights length mismatch".into());
+        }
+        if *self.axon_off.last().unwrap() as usize != self.syn_targets.len() {
+            return Err("offset tables do not cover the synapse arrays".into());
+        }
+        if self.neuron_off.windows(2).any(|w| w[0] > w[1])
+            || self.axon_off.windows(2).any(|w| w[0] > w[1])
+        {
+            return Err("offsets not monotonic".into());
+        }
+        for (k, &t) in self.syn_targets.iter().enumerate() {
+            if t >= n {
+                return Err(format!("synapse {k} target {t} out of range"));
             }
         }
         for &o in &self.outputs {
@@ -97,10 +301,78 @@ impl Network {
                 return Err(format!("output {o} out of range"));
             }
         }
-        if self.neuron_adj.len() != self.params.len() {
-            return Err("params/adjacency length mismatch".into());
-        }
         Ok(())
+    }
+}
+
+/// Flat edge-list construction scratch: O(1) pushes in any source order
+/// (the converter visits sources non-sequentially), one counting sort
+/// into CSR at the end. No per-source heap allocations.
+#[derive(Clone, Debug)]
+pub struct EdgeList {
+    n_neurons: usize,
+    n_axons: usize,
+    /// (source slot, target, weight); neurons occupy slots `0..n`,
+    /// axons `n..n+a`.
+    edges: Vec<(u32, u32, i16)>,
+}
+
+impl EdgeList {
+    pub fn new(n_neurons: usize, n_axons: usize) -> Self {
+        EdgeList { n_neurons, n_axons, edges: Vec::new() }
+    }
+
+    pub fn with_capacity(n_neurons: usize, n_axons: usize, cap: usize) -> Self {
+        EdgeList { n_neurons, n_axons, edges: Vec::with_capacity(cap) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    #[inline]
+    pub fn push_neuron(&mut self, pre: u32, target: u32, weight: i16) {
+        debug_assert!((pre as usize) < self.n_neurons);
+        self.edges.push((pre, target, weight));
+    }
+
+    #[inline]
+    pub fn push_axon(&mut self, pre: u32, target: u32, weight: i16) {
+        debug_assert!((pre as usize) < self.n_axons);
+        self.edges.push((self.n_neurons as u32 + pre, target, weight));
+    }
+
+    /// Counting-sort the edges into a CSR [`Network`] (stable within a
+    /// source, then canonically sorted by target).
+    pub fn into_network(
+        self,
+        params: Vec<NeuronModel>,
+        outputs: Vec<u32>,
+        base_seed: u32,
+    ) -> Network {
+        let (n, a) = (self.n_neurons, self.n_axons);
+        debug_assert_eq!(params.len(), n);
+        let mut deg = vec![0u32; n + a];
+        for &(s, _, _) in &self.edges {
+            deg[s as usize] += 1;
+        }
+        let mut net = Network::with_degrees(params, &deg[..n], &deg[n..], outputs, base_seed);
+        // scatter with per-source cursors (reuse `deg` as the cursor table)
+        for (s, cur) in deg.iter_mut().enumerate() {
+            *cur = if s < n { net.neuron_off[s] } else { net.axon_off[s - n] };
+        }
+        for &(s, t, w) in &self.edges {
+            let k = deg[s as usize] as usize;
+            net.syn_targets[k] = t;
+            net.syn_weights[k] = w;
+            deg[s as usize] += 1;
+        }
+        net.sort_synapses();
+        net
     }
 }
 
@@ -174,13 +446,24 @@ impl NetworkBuilder {
         self.axon_index.get(key).copied()
     }
 
-    fn resolve(&self, list: &[(String, i32)]) -> Result<Vec<Synapse>, NetError> {
+    /// Resolve one source's synapse list. Errors name the presynaptic
+    /// source and its kind, so a bad target in a 10M-synapse build is
+    /// traceable to the exact axon/neuron that referenced it.
+    fn resolve(
+        &self,
+        pre_key: &str,
+        pre_is_axon: bool,
+        list: &[(String, i32)],
+    ) -> Result<Vec<Synapse>, NetError> {
         list.iter()
             .map(|(t, w)| {
-                let target = *self
-                    .neuron_index
-                    .get(t)
-                    .ok_or_else(|| NetError::UnknownNeuron(t.clone()))?;
+                let target = *self.neuron_index.get(t).ok_or_else(|| {
+                    if pre_is_axon {
+                        NetError::UnknownAxonTarget { pre: pre_key.into(), target: t.clone() }
+                    } else {
+                        NetError::UnknownNeuronTarget { pre: pre_key.into(), target: t.clone() }
+                    }
+                })?;
                 if !(WEIGHT_MIN..=WEIGHT_MAX).contains(w) {
                     return Err(NetError::BadWeight(*w));
                 }
@@ -193,12 +476,14 @@ impl NetworkBuilder {
         let neuron_adj = self
             .neuron_syn
             .iter()
-            .map(|l| self.resolve(l))
+            .enumerate()
+            .map(|(i, l)| self.resolve(&self.neuron_keys[i], false, l))
             .collect::<Result<Vec<_>, _>>()?;
         let axon_adj = self
             .axon_syn
             .iter()
-            .map(|l| self.resolve(l))
+            .enumerate()
+            .map(|(i, l)| self.resolve(&self.axon_keys[i], true, l))
             .collect::<Result<Vec<_>, _>>()?;
         let outputs = self
             .outputs
@@ -210,13 +495,8 @@ impl NetworkBuilder {
                     .ok_or_else(|| NetError::BadOutput(k.clone()))
             })
             .collect::<Result<Vec<_>, _>>()?;
-        let net = Network {
-            params: self.models,
-            neuron_adj,
-            axon_adj,
-            outputs,
-            base_seed: self.base_seed,
-        };
+        let net =
+            Network::from_adj(self.models, &neuron_adj, &axon_adj, outputs, self.base_seed);
         let keys = KeyMap {
             axon_keys: self.axon_keys,
             neuron_keys: self.neuron_keys,
@@ -248,15 +528,25 @@ impl KeyMap {
 }
 
 /// Mutable synapse access on the flattened network (paper API
-/// `read_synapse` / `write_synapse`).
+/// `read_synapse` / `write_synapse`). Binary search over the per-source
+/// CSR slice (sorted by target at build time): O(log deg) instead of the
+/// seed's linear scan.
 impl Network {
-    pub fn read_synapse(&self, pre_is_axon: bool, pre: u32, post: u32) -> Option<i16> {
-        let adj = if pre_is_axon {
-            &self.axon_adj[pre as usize]
+    fn find_synapse(&self, pre_is_axon: bool, pre: u32, post: u32) -> Option<usize> {
+        let r = if pre_is_axon {
+            self.axon_range(pre as usize)
         } else {
-            &self.neuron_adj[pre as usize]
+            self.neuron_range(pre as usize)
         };
-        adj.iter().find(|s| s.target == post).map(|s| s.weight)
+        self.syn_targets[r.clone()]
+            .binary_search(&post)
+            .ok()
+            .map(|k| r.start + k)
+    }
+
+    pub fn read_synapse(&self, pre_is_axon: bool, pre: u32, post: u32) -> Option<i16> {
+        self.find_synapse(pre_is_axon, pre, post)
+            .map(|k| self.syn_weights[k])
     }
 
     pub fn write_synapse(
@@ -266,24 +556,21 @@ impl Network {
         post: u32,
         weight: i16,
     ) -> bool {
-        let adj = if pre_is_axon {
-            &mut self.axon_adj[pre as usize]
-        } else {
-            &mut self.neuron_adj[pre as usize]
-        };
-        for s in adj.iter_mut() {
-            if s.target == post {
-                s.weight = weight;
-                return true;
+        match self.find_synapse(pre_is_axon, pre, post) {
+            Some(k) => {
+                self.syn_weights[k] = weight;
+                true
             }
+            None => false,
         }
-        false
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prng::Xorshift32;
+    use crate::util::ptest;
 
     /// The Fig-6 / Supplementary-A.1 example network.
     pub fn fig6() -> (Network, KeyMap) {
@@ -318,6 +605,23 @@ mod tests {
     }
 
     #[test]
+    fn csr_offsets_and_slices() {
+        let (net, keys) = fig6();
+        // neuron a has 2 synapses, b and c none, d one; axons 2 + 1
+        assert_eq!(net.neuron_off, vec![0, 2, 2, 2, 3]);
+        assert_eq!(net.axon_off, vec![3, 5, 6]);
+        let a = keys.neuron("a").unwrap() as usize;
+        let (tg, wt) = net.neuron_syns(a);
+        assert_eq!(tg, &[1, 3]); // sorted by target: b(1), d(3)
+        assert_eq!(wt, &[1, 2]);
+        let (tg, wt) = net.axon_syns(keys.axon("alpha").unwrap() as usize);
+        assert_eq!(tg, &[0, 2]);
+        assert_eq!(wt, &[3, 2]);
+        assert_eq!(net.neuron_degree(a), 2);
+        assert_eq!(net.axon_degree(1), 1);
+    }
+
+    #[test]
     fn write_synapse_updates() {
         let (mut net, keys) = fig6();
         let a = keys.neuron("a").unwrap();
@@ -329,6 +633,76 @@ mod tests {
     }
 
     #[test]
+    fn synapse_lookup_hit_and_miss_both_source_kinds() {
+        let m = NeuronModel::if_neuron(5);
+        let keys: Vec<String> = (0..20).map(|i| format!("n{i}")).collect();
+        // neuron 0 -> {3, 7, 11}, axon -> {2, 7, 19}
+        let mut b = NetworkBuilder::new();
+        for (i, k) in keys.iter().enumerate() {
+            let syns: Vec<(&str, i32)> = if i == 0 {
+                vec![("n3", 30), ("n7", 70), ("n11", 110)]
+            } else {
+                vec![]
+            };
+            b.add_neuron(k, m, &syns).unwrap();
+        }
+        b.add_axon("ax", &[("n2", 2), ("n7", 7), ("n19", 19)]).unwrap();
+        let (mut net, _) = b.build().unwrap();
+        // neuron-source hits
+        assert_eq!(net.read_synapse(false, 0, 3), Some(30));
+        assert_eq!(net.read_synapse(false, 0, 7), Some(70));
+        assert_eq!(net.read_synapse(false, 0, 11), Some(110));
+        // neuron-source misses (below, between, above the slice)
+        assert_eq!(net.read_synapse(false, 0, 2), None);
+        assert_eq!(net.read_synapse(false, 0, 8), None);
+        assert_eq!(net.read_synapse(false, 0, 12), None);
+        assert_eq!(net.read_synapse(false, 5, 3), None); // empty source
+        // axon-source hits + misses
+        assert_eq!(net.read_synapse(true, 0, 7), Some(7));
+        assert_eq!(net.read_synapse(true, 0, 19), Some(19));
+        assert_eq!(net.read_synapse(true, 0, 0), None);
+        assert_eq!(net.read_synapse(true, 0, 18), None);
+        // write through both kinds
+        assert!(net.write_synapse(true, 0, 2, -9));
+        assert_eq!(net.read_synapse(true, 0, 2), Some(-9));
+        assert!(!net.write_synapse(true, 0, 4, 1));
+    }
+
+    #[test]
+    fn prop_lookup_matches_linear_scan() {
+        ptest::check("synapse_lookup_vs_linear", 30, |rng| {
+            let n = 4 + rng.below(40) as usize;
+            let m = NeuronModel::if_neuron(1);
+            let mut b = NetworkBuilder::new();
+            let keys: Vec<String> = (0..n).map(|i| format!("n{i}")).collect();
+            for key in &keys {
+                let deg = rng.below(12) as usize;
+                let syns: Vec<(String, i32)> = (0..deg)
+                    .map(|_| (keys[rng.below(n as u32) as usize].clone(), rng.range_i32(-99, 99)))
+                    .collect();
+                let refs: Vec<(&str, i32)> =
+                    syns.iter().map(|(k, w)| (k.as_str(), *w)).collect();
+                b.add_neuron(key, m, &refs).unwrap();
+            }
+            let (net, _) = b.build().unwrap();
+            for pre in 0..n as u32 {
+                for post in 0..n as u32 {
+                    let (tg, wt) = net.neuron_syns(pre as usize);
+                    let linear =
+                        tg.iter().position(|&t| t == post).map(|k| wt[k]);
+                    let got = net.read_synapse(false, pre, post);
+                    ptest::prop_assert_eq(
+                        got.is_some(),
+                        linear.is_some(),
+                        &format!("hit/miss {pre}->{post}"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn duplicate_and_unknown_keys() {
         let m = NeuronModel::ann(1, 0, false).unwrap();
         let mut b = NetworkBuilder::new();
@@ -336,7 +710,23 @@ mod tests {
         assert!(matches!(b.add_neuron("x", m, &[]), Err(NetError::DuplicateKey(_))));
         let mut b2 = NetworkBuilder::new();
         b2.add_neuron("x", m, &[("ghost", 1)]).unwrap();
-        assert!(matches!(b2.build(), Err(NetError::UnknownNeuron(_))));
+        match b2.build() {
+            Err(NetError::UnknownNeuronTarget { pre, target }) => {
+                assert_eq!(pre, "x");
+                assert_eq!(target, "ghost");
+            }
+            other => panic!("expected UnknownNeuronTarget, got {other:?}"),
+        }
+        let mut b3 = NetworkBuilder::new();
+        b3.add_neuron("x", m, &[]).unwrap();
+        b3.add_axon("in", &[("ghost", 1)]).unwrap();
+        match b3.build() {
+            Err(NetError::UnknownAxonTarget { pre, target }) => {
+                assert_eq!(pre, "in");
+                assert_eq!(target, "ghost");
+            }
+            other => panic!("expected UnknownAxonTarget, got {other:?}"),
+        }
     }
 
     #[test]
@@ -359,7 +749,134 @@ mod tests {
     #[test]
     fn validate_catches_bad_target() {
         let (mut net, _) = fig6();
-        net.neuron_adj[0].push(Synapse { target: 99, weight: 1 });
+        net.syn_targets[0] = 99;
         assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_broken_offsets() {
+        let (mut net, _) = fig6();
+        net.neuron_off[1] = 5; // > neuron_off[4] region end, non-monotonic later
+        assert!(net.validate().is_err());
+    }
+
+    /// Satellite: CSR build from `NetworkBuilder` round-trips against a
+    /// reference nested-Vec construction — same `n_synapses`, `fan_in`,
+    /// and per-source slices.
+    #[test]
+    fn prop_csr_build_matches_reference_nested_vec() {
+        ptest::check("csr_vs_nested_reference", 40, |rng| {
+            let n = 1 + rng.below(60) as usize;
+            let a = rng.below(8) as usize;
+            let models = [
+                NeuronModel::if_neuron(rng.range_i32(1, 50)),
+                NeuronModel::ann(rng.range_i32(1, 30), 0, false).unwrap(),
+            ];
+            // one spec, two construction paths
+            let keys: Vec<String> = (0..n).map(|i| format!("n{i}")).collect();
+            let mut b = NetworkBuilder::new().seed(rng.next_u32());
+            let mut params = Vec::new();
+            let mut neuron_adj: Vec<Vec<Synapse>> = Vec::new();
+            let mut axon_adj: Vec<Vec<Synapse>> = Vec::new();
+            for i in 0..n {
+                let m = models[rng.below(2) as usize];
+                let deg = rng.below(10) as usize;
+                let syns: Vec<(u32, i32)> = (0..deg)
+                    .map(|_| (rng.below(n as u32), rng.range_i32(-80, 80)))
+                    .collect();
+                let named: Vec<(String, i32)> =
+                    syns.iter().map(|&(t, w)| (keys[t as usize].clone(), w)).collect();
+                let refs: Vec<(&str, i32)> =
+                    named.iter().map(|(k, w)| (k.as_str(), *w)).collect();
+                b.add_neuron(&keys[i], m, &refs).unwrap();
+                params.push(m);
+                neuron_adj.push(
+                    syns.iter()
+                        .map(|&(t, w)| Synapse { target: t, weight: w as i16 })
+                        .collect(),
+                );
+            }
+            for j in 0..a {
+                let deg = rng.below(6) as usize;
+                let syns: Vec<(u32, i32)> = (0..deg)
+                    .map(|_| (rng.below(n as u32), rng.range_i32(-80, 80)))
+                    .collect();
+                let named: Vec<(String, i32)> =
+                    syns.iter().map(|&(t, w)| (keys[t as usize].clone(), w)).collect();
+                let refs: Vec<(&str, i32)> =
+                    named.iter().map(|(k, w)| (k.as_str(), *w)).collect();
+                b.add_axon(&format!("a{j}"), &refs).unwrap();
+                axon_adj.push(
+                    syns.iter()
+                        .map(|&(t, w)| Synapse { target: t, weight: w as i16 })
+                        .collect(),
+                );
+            }
+            let (built, _) = b.build().unwrap();
+            let reference =
+                Network::from_adj(params, &neuron_adj, &axon_adj, vec![], built.base_seed);
+
+            ptest::prop_assert_eq(built.n_synapses(), reference.n_synapses(), "n_synapses")?;
+            ptest::prop_assert_eq(built.fan_in(), reference.fan_in(), "fan_in")?;
+            ptest::prop_assert_eq(
+                built.neuron_off.clone(),
+                reference.neuron_off.clone(),
+                "neuron_off",
+            )?;
+            ptest::prop_assert_eq(
+                built.axon_off.clone(),
+                reference.axon_off.clone(),
+                "axon_off",
+            )?;
+            for i in 0..n {
+                ptest::prop_assert_eq(
+                    built.neuron_syns(i),
+                    reference.neuron_syns(i),
+                    &format!("neuron {i} slice"),
+                )?;
+            }
+            for j in 0..a {
+                ptest::prop_assert_eq(
+                    built.axon_syns(j),
+                    reference.axon_syns(j),
+                    &format!("axon {j} slice"),
+                )?;
+            }
+            built.validate()?;
+            reference.validate()?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn edge_list_matches_from_adj() {
+        let mut rng = Xorshift32::new(77);
+        let n = 30usize;
+        let a = 3usize;
+        let m = NeuronModel::if_neuron(9);
+        let mut neuron_adj: Vec<Vec<Synapse>> = vec![Vec::new(); n];
+        let mut axon_adj: Vec<Vec<Synapse>> = vec![Vec::new(); a];
+        let mut edges = EdgeList::new(n, a);
+        // interleave pushes in scrambled source order
+        for _ in 0..200 {
+            let pre = rng.below(n as u32);
+            let t = rng.below(n as u32);
+            let w = rng.range_i32(-50, 50) as i16;
+            neuron_adj[pre as usize].push(Synapse { target: t, weight: w });
+            edges.push_neuron(pre, t, w);
+        }
+        for _ in 0..20 {
+            let pre = rng.below(a as u32);
+            let t = rng.below(n as u32);
+            let w = rng.range_i32(-50, 50) as i16;
+            axon_adj[pre as usize].push(Synapse { target: t, weight: w });
+            edges.push_axon(pre, t, w);
+        }
+        let x = Network::from_adj(vec![m; n], &neuron_adj, &axon_adj, vec![0], 5);
+        let y = edges.into_network(vec![m; n], vec![0], 5);
+        assert_eq!(x.syn_targets, y.syn_targets);
+        assert_eq!(x.syn_weights, y.syn_weights);
+        assert_eq!(x.neuron_off, y.neuron_off);
+        assert_eq!(x.axon_off, y.axon_off);
     }
 }

@@ -15,13 +15,13 @@ fn tmp(name: &str) -> std::path::PathBuf {
 }
 
 fn tiny_net() -> Network {
-    Network {
-        params: vec![NeuronModel::if_neuron(0); 3],
-        neuron_adj: vec![vec![Synapse { target: 1, weight: 1 }], vec![], vec![]],
-        axon_adj: vec![vec![Synapse { target: 0, weight: 1 }]],
-        outputs: vec![1],
-        base_seed: 0,
-    }
+    Network::from_adj(
+        vec![NeuronModel::if_neuron(0); 3],
+        &[vec![Synapse { target: 1, weight: 1 }], vec![], vec![]],
+        &[vec![Synapse { target: 0, weight: 1 }]],
+        vec![1],
+        0,
+    )
 }
 
 #[test]
@@ -52,7 +52,7 @@ fn random_garbage_files_rejected_not_panicking() {
 #[test]
 fn invalid_network_rejected_by_hbm_compiler() {
     let mut net = tiny_net();
-    net.neuron_adj[0].push(Synapse { target: 99, weight: 1 }); // OOB
+    net.syn_targets[0] = 99; // OOB target in the CSR array
     assert!(HbmImage::compile(&net, SlotStrategy::Modulo).is_err());
 }
 

@@ -7,7 +7,7 @@
 
 use std::path::{Path, PathBuf};
 
-use hiaer_spike::engine::backend::{CoreParams, RustBackend, UpdateBackend};
+use hiaer_spike::engine::backend::{mask_bit, mask_words, CoreParams, RustBackend, UpdateBackend};
 use hiaer_spike::engine::DenseEngine;
 use hiaer_spike::model_fmt::golden;
 use hiaer_spike::snn::{Network, NeuronModel, Synapse};
@@ -54,9 +54,11 @@ fn neuron_update_matches_python() {
         flags: g.flags.iter().map(|&f| f as u32).collect(),
     };
     let mut v = g.v.clone();
-    let mut spikes = vec![0i32; n];
-    RustBackend.update(&mut v, &params, g.step_seed, &mut spikes).unwrap();
+    let mut words = vec![0u64; mask_words(n)];
+    RustBackend.update(&mut v, &params, g.step_seed, &mut words).unwrap();
     assert_eq!(v, g.v_out, "membrane mismatch vs jnp reference");
+    // unpack the bitmask to the reference's 0/1 vector
+    let spikes: Vec<i32> = (0..n).map(|i| mask_bit(&words, i) as i32).collect();
     assert_eq!(spikes, g.spikes, "spike mismatch vs jnp reference");
 }
 
@@ -68,15 +70,13 @@ fn synapse_accum_matches_python() {
     let g = golden::load_synapse_accum(&golden_dir().join("synapse_accum.json")).unwrap();
     let mut v = g.v.clone();
     // python pads with target == n (dropped); emulate the drop here
-    let mut targets = Vec::new();
-    let mut weights = Vec::new();
+    let mut events: Vec<(u32, i32)> = Vec::new();
     for (&t, &w) in g.targets.iter().zip(&g.weights) {
         if (t as usize) < g.n {
-            targets.push(t as u32);
-            weights.push(w);
+            events.push((t as u32, w));
         }
     }
-    RustBackend.accumulate(&mut v, &targets, &weights).unwrap();
+    RustBackend.accumulate(&mut v, &events).unwrap();
     assert_eq!(v, g.v_out);
 }
 
@@ -87,34 +87,32 @@ fn dense_net_trace_matches_python() {
     }
     let g = golden::load_dense_net(&golden_dir().join("dense_net.json")).unwrap();
     // rebuild the network from the dense matrices
-    let mut net = Network {
-        params: (0..g.n)
-            .map(|i| NeuronModel {
-                theta: g.theta[i],
-                nu: g.nu[i],
-                lam: g.lam[i],
-                flags: g.flags[i] as u32,
+    let params: Vec<NeuronModel> = (0..g.n)
+        .map(|i| NeuronModel {
+            theta: g.theta[i],
+            nu: g.nu[i],
+            lam: g.lam[i],
+            flags: g.flags[i] as u32,
+        })
+        .collect();
+    let sparsify = |rows: &[Vec<i32>]| -> Vec<Vec<Synapse>> {
+        rows.iter()
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .filter(|(_, &w)| w != 0)
+                    .map(|(j, &w)| Synapse { target: j as u32, weight: w as i16 })
+                    .collect()
             })
-            .collect(),
-        neuron_adj: vec![Vec::new(); g.n],
-        axon_adj: vec![Vec::new(); g.a],
-        outputs: vec![],
-        base_seed: g.base_seed,
+            .collect()
     };
-    for i in 0..g.n {
-        for j in 0..g.n {
-            if g.w_neuron[i][j] != 0 {
-                net.neuron_adj[i].push(Synapse { target: j as u32, weight: g.w_neuron[i][j] as i16 });
-            }
-        }
-    }
-    for i in 0..g.a {
-        for j in 0..g.n {
-            if g.w_axon[i][j] != 0 {
-                net.axon_adj[i].push(Synapse { target: j as u32, weight: g.w_axon[i][j] as i16 });
-            }
-        }
-    }
+    let net = Network::from_adj(
+        params,
+        &sparsify(&g.w_neuron),
+        &sparsify(&g.w_axon),
+        vec![],
+        g.base_seed,
+    );
     let mut e = DenseEngine::new(&net);
     for t in 0..g.steps {
         let axons: Vec<u32> = g.axon_seq[t]

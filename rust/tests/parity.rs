@@ -23,31 +23,29 @@ fn random_net(rng: &mut Xorshift32, n: usize, a: usize) -> Network {
         NeuronModel::lif(rng.range_i32(5, 60), -5, 4, true).unwrap(),
         NeuronModel::ann(rng.range_i32(2, 40), -8, true).unwrap(),
     ];
-    let mut net = Network {
-        params: (0..n).map(|_| models[rng.below(3) as usize]).collect(),
-        neuron_adj: vec![Vec::new(); n],
-        axon_adj: vec![Vec::new(); a],
-        outputs: (0..n as u32).filter(|_| rng.chance(0.2)).collect(),
-        base_seed: rng.next_u32(),
-    };
-    for i in 0..n {
+    let params: Vec<NeuronModel> = (0..n).map(|_| models[rng.below(3) as usize]).collect();
+    let outputs: Vec<u32> = (0..n as u32).filter(|_| rng.chance(0.2)).collect();
+    let base_seed = rng.next_u32();
+    let mut neuron_adj: Vec<Vec<Synapse>> = vec![Vec::new(); n];
+    for adj in neuron_adj.iter_mut() {
         let deg = rng.below(10) as usize;
         for _ in 0..deg {
-            net.neuron_adj[i].push(Synapse {
+            adj.push(Synapse {
                 target: rng.below(n as u32),
                 weight: rng.range_i32(-60, 60) as i16,
             });
         }
     }
-    for i in 0..a {
+    let mut axon_adj: Vec<Vec<Synapse>> = vec![Vec::new(); a];
+    for adj in axon_adj.iter_mut() {
         for _ in 0..1 + rng.below(6) as usize {
-            net.axon_adj[i].push(Synapse {
+            adj.push(Synapse {
                 target: rng.below(n as u32),
                 weight: rng.range_i32(-60, 80) as i16,
             });
         }
     }
-    net
+    Network::from_adj(params, &neuron_adj, &axon_adj, outputs, base_seed)
 }
 
 #[test]
@@ -91,27 +89,27 @@ fn xla_engine_handles_large_event_batches() {
     // variant capacity forces the chunking path
     let rt = Arc::new(Runtime::cpu(artifacts()).unwrap());
     let n = 900usize;
-    let mut net = Network {
-        params: vec![NeuronModel::if_neuron(1); n],
-        neuron_adj: vec![Vec::new(); n],
-        axon_adj: vec![Vec::new(); 1],
-        outputs: vec![0],
-        base_seed: 5,
-    };
     // axon hits everyone; every neuron hits 20 targets -> ~18k events when
     // all fire (> 4096 capacity of the n1024 accum variant)
-    for t in 0..n as u32 {
-        net.axon_adj[0].push(Synapse { target: t, weight: 10 });
-    }
+    let axon_adj: Vec<Vec<Synapse>> =
+        vec![(0..n as u32).map(|t| Synapse { target: t, weight: 10 }).collect()];
     let mut rng = Xorshift32::new(3);
-    for i in 0..n {
+    let mut neuron_adj: Vec<Vec<Synapse>> = vec![Vec::new(); n];
+    for adj in neuron_adj.iter_mut() {
         for _ in 0..20 {
-            net.neuron_adj[i].push(Synapse {
+            adj.push(Synapse {
                 target: rng.below(n as u32),
                 weight: rng.range_i32(-5, 8) as i16,
             });
         }
     }
+    let net = Network::from_adj(
+        vec![NeuronModel::if_neuron(1); n],
+        &neuron_adj,
+        &axon_adj,
+        vec![0],
+        5,
+    );
     let mut dense = DenseEngine::new(&net);
     let backend = XlaBackend::new(rt, n).unwrap();
     let mut xla_core = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, backend).unwrap();
