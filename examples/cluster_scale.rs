@@ -80,8 +80,8 @@ fn main() -> Result<()> {
             let cost = mc.cost(&energy);
             tot_energy += cost.energy_uj;
             tot_latency += cost.latency_us;
-            for l in 0..4 {
-                level_events[l] += cost.router.events_by_level[l];
+            for (tot, ev) in level_events.iter_mut().zip(cost.router.events_by_level) {
+                *tot += ev;
             }
         }
         let n = baseline.len() as f64;

@@ -3,8 +3,10 @@
 //! 0. **headline**: the sparse-activity config (n = 100k, avg degree 16)
 //!    run on (a) a faithful replica of the pre-refactor hot path (O(N)
 //!    scalar spike scan + split target/weight event arrays) and (b) the
-//!    CSR + bitmask engine — the speedup is written to
-//!    `BENCH_hotpath.json` at the repo root (override with BENCH_OUT);
+//!    CSR + bitmask engine, plus the membrane-sweep rate alone (branch-
+//!    free kernel, scalar and chunk-parallel via `CorePool`) — one record
+//!    per run is **appended** to the `BENCH_hotpath.json` trajectory at
+//!    the repo root (override with BENCH_OUT, label with BENCH_PR);
 //! 1. event-driven core engine steps/s across network sizes (rust
 //!    backend), synaptic events/s;
 //! 2. dense software-simulator baseline (the paper's Fig-8 CPU
@@ -19,12 +21,13 @@
 
 use std::time::Instant;
 
-use hiaer_spike::cluster::MultiCoreEngine;
-use hiaer_spike::engine::{CoreEngine, CoreParams, DenseEngine, RustBackend};
+use hiaer_spike::cluster::{CorePool, MultiCoreEngine};
+use hiaer_spike::engine::{mask_words, CoreEngine, CoreParams, DenseEngine, RustBackend, UpdateBackend};
 use hiaer_spike::hbm::{HbmImage, HbmSim, Pointer, SlotStrategy};
 use hiaer_spike::partition::{ClusterTopology, CoreCapacity};
 use hiaer_spike::runtime::{Runtime, XlaBackend};
 use hiaer_spike::snn::{EdgeList, Network, NeuronModel, FLAG_LIF, FLAG_NOISE};
+use hiaer_spike::util::json::{obj, Json};
 use hiaer_spike::util::prng::{mix_seed, noise17, shift_noise, Xorshift32};
 
 /// Random net: n neurons, avg degree d, theta tuned for sustained sparse
@@ -219,6 +222,33 @@ fn main() {
     println!("  legacy hot path : {legacy_rate:>10.0} steps/s");
     println!("  csr + bitmask   : {new_rate:>10.0} steps/s   ({speedup:.2}x)");
 
+    // membrane-sweep rate alone (phases 1-3, branch-free kernel) on the
+    // same n=100k params: single-threaded, then chunk-parallel across the
+    // CorePool workers
+    let params = CoreParams::from_network(&net);
+    let mut sweep_v = vec![0i32; hn];
+    let mut sweep_words = vec![0u64; mask_words(hn)];
+    let t0 = Instant::now();
+    for s in 0..steps {
+        RustBackend
+            .update(&mut sweep_v, &params, mix_seed(42, s as u32), &mut sweep_words)
+            .unwrap();
+    }
+    let sweep_rate = steps as f64 / t0.elapsed().as_secs_f64();
+    let mut pool =
+        CorePool::new(vec![CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap()]);
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        pool.phase_update().unwrap();
+    }
+    let sweep_chunked_rate = steps as f64 / t0.elapsed().as_secs_f64();
+    drop(pool);
+    println!(
+        "  membrane sweep  : {sweep_rate:>10.0} sweeps/s scalar, {sweep_chunked_rate:>10.0} chunk-parallel ({:.2}x)",
+        sweep_chunked_rate / sweep_rate
+    );
+
+    // ---- append one record to the perf trajectory (one entry per PR)
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .parent()
@@ -231,17 +261,46 @@ fn main() {
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
-    let json = format!(
-        "{{\n  \"bench\": \"hot_path sparse-activity headline\",\n  \"unix_time\": {unix_time},\n  \
-         \"config\": {{\"neurons\": {hn}, \"avg_degree\": {hd}, \"steps\": {steps}, \
-         \"strategy\": \"BalanceFanIn\"}},\n  \
-         \"legacy_steps_per_s\": {legacy_rate:.1},\n  \
-         \"csr_bitmask_steps_per_s\": {new_rate:.1},\n  \
-         \"speedup\": {speedup:.3},\n  \
-         \"events_per_s\": {events_per_s:.0}\n}}\n"
-    );
-    match std::fs::write(&out, json) {
-        Ok(()) => println!("  wrote {out}"),
+    let pr = std::env::var("BENCH_PR").unwrap_or_else(|_| "dev".to_string());
+    let mut records: Vec<Json> = std::fs::read_to_string(&out)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|doc| doc.get("records").and_then(|r| r.as_arr().map(|a| a.to_vec())))
+        .unwrap_or_default();
+    records.push(obj(vec![
+        ("pr", Json::Str(pr)),
+        ("unix_time", Json::Int(unix_time as i64)),
+        (
+            "config",
+            obj(vec![
+                ("neurons", Json::Int(hn as i64)),
+                ("avg_degree", Json::Int(hd as i64)),
+                ("steps", Json::Int(steps as i64)),
+                ("strategy", Json::Str("BalanceFanIn".into())),
+            ]),
+        ),
+        ("legacy_steps_per_s", Json::Num(legacy_rate)),
+        ("csr_bitmask_steps_per_s", Json::Num(new_rate)),
+        ("speedup", Json::Num(speedup)),
+        ("events_per_s", Json::Num(events_per_s)),
+        ("sweep_steps_per_s", Json::Num(sweep_rate)),
+        ("sweep_chunked_steps_per_s", Json::Num(sweep_chunked_rate)),
+    ]));
+    let n_records = records.len();
+    let doc = obj(vec![
+        ("bench", Json::Str("hot_path sparse-activity trajectory".into())),
+        (
+            "note",
+            Json::Str(
+                "appended per PR by `cargo bench --bench hot_path` section [0]; \
+                 CI diffs the last two records"
+                    .into(),
+            ),
+        ),
+        ("records", Json::Arr(records)),
+    ]);
+    match std::fs::write(&out, doc.to_string() + "\n") {
+        Ok(()) => println!("  appended record {n_records} to {out}"),
         Err(err) => eprintln!("  could not write {out}: {err}"),
     }
 

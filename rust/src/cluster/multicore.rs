@@ -3,7 +3,9 @@
 //!
 //! Timestep protocol (all cores advance one 1 ms tick together):
 //!
-//! 1. every core runs its membrane sweep (parallel, no shared state);
+//! 1. every core runs its membrane sweep — chunk-parallel across the
+//!    whole worker pool (word-aligned chunks, see `cluster::pool`), so
+//!    even a lone oversized core saturates the machine;
 //! 2. fired global neuron ids + host axon inputs go through the
 //!    [`HiaerRouter`] multicast (the barrier);
 //! 3. every core routes (host inputs ∪ remote deliveries, as local axons)

@@ -1,22 +1,65 @@
-//! Persistent core-worker pool.
+//! Persistent worker pool with a chunk-parallel membrane sweep.
 //!
 //! §Perf: the first multi-core implementation spawned two `thread::scope`
 //! generations per timestep (one per phase); at 300 steps x 16 cores that
 //! is ~10k thread spawns/s and wall-clock throughput *decreased* with
-//! core count. This pool pins one OS thread per simulated core for the
-//! engine's lifetime and drives phases with a lightweight
-//! generation-counter barrier (Mutex+Condvar, no busy wait).
+//! core count. This pool pins persistent OS threads for the engine's
+//! lifetime and drives phases with a lightweight generation-counter
+//! barrier (Mutex+Condvar, no busy wait).
 //!
-//! Safety model: the pool owns the `CoreEngine`s. `run_phase` hands each
-//! worker a raw pointer to its own engine plus a shared borrow of the
-//! phase input; workers never touch another worker's engine, and the
-//! caller blocks until all workers finish the phase, so no aliasing
-//! outlives the call.
+//! # Chunk-barrier protocol
+//!
+//! The pool's Update-phase work unit is a **chunk** — a word-aligned
+//! slice of one core's membrane sweep (64-neuron multiples, so every
+//! chunk owns whole `spike_words` and chunks never share a word). When
+//! every core's backend is chunkable (`UpdateBackend::chunkable`, i.e.
+//! its `update` is exactly the pure `sweep_chunk` reference kernel), the
+//! pool carves all cores into chunks once at construction and, each
+//! Update generation:
+//!
+//! 1. the driver refreshes one `SweepView` per core (raw `v` /
+//!    `spike_words` / params pointers plus this step's noise seed) and
+//!    resets the shared chunk cursor;
+//! 2. every worker — not just the one pinned to a core — pulls chunks
+//!    from the cursor (an atomic fetch-add) until the list is drained, so
+//!    one big core's sweep spreads across all idle workers;
+//! 3. the driver, woken by the generation barrier, runs each engine's
+//!    `finish_update` epilogue (counters, fired-id extraction, noise-seed
+//!    advance) serially.
+//!
+//! Because membrane noise is the counter-based per-index
+//! `noise17(step_seed, i)` hash, chunked execution is bit-identical to
+//! the single-threaded sweep regardless of chunk order or interleaving.
+//! Non-chunkable backends fall back to the original one-worker-per-core
+//! `phase_update`. The Route phase is always per-core (HBM routing
+//! mutates engine-wide state).
+//!
+//! With chunking enabled the pool may spawn more workers than cores
+//! (up to `available_parallelism`, bounded by the chunk count) so a
+//! single-core engine still sweeps in parallel; the extra workers idle
+//! through Route generations.
+//!
+//! Safety model: the pool owns the `CoreEngine`s (boxed, stable
+//! addresses). In the Route phase each worker holds a raw pointer to its
+//! own engine only; in the chunked Update phase workers form disjoint
+//! word-aligned sub-slices of `v`/`spike_words`, so no two threads alias.
+//! The driver blocks until the generation barrier clears, so no borrow
+//! outlives the phase. A panicking worker is caught (`catch_unwind`),
+//! reported as a phase error, and the worker survives for the next
+//! generation — the barrier can never hang on a dead thread.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError, RwLock};
 
-use crate::engine::{CoreEngine, RustBackend};
+use crate::engine::backend::sweep_chunk;
+use crate::engine::core::SweepView;
+use crate::engine::{mask_words, CoreEngine, RustBackend, UpdateBackend};
+
+/// Default chunk granularity: 64 spike words = 4096 neurons. Small enough
+/// that a 100k-neuron core splits into ~25 chunks for load balance, large
+/// enough that the per-chunk dispatch cost stays invisible.
+const DEFAULT_CHUNK_WORDS: usize = 64;
 
 /// Which phase the workers should run this generation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -26,7 +69,23 @@ enum Phase {
     Exit,
 }
 
-struct Shared {
+/// One word-aligned slice of one core's membrane sweep.
+#[derive(Clone, Copy, Debug)]
+struct ChunkTask {
+    core: usize,
+    word_lo: usize,
+    word_hi: usize,
+}
+
+/// Chunked-sweep state: static chunk geometry plus per-generation views.
+struct SweepState {
+    /// refreshed by the driver before every Update generation
+    views: Vec<SweepView>,
+    /// fixed at construction; empty => per-core fallback Update
+    chunks: Vec<ChunkTask>,
+}
+
+struct Shared<B: UpdateBackend> {
     state: Mutex<State>,
     start_cv: Condvar,
     done_cv: Condvar,
@@ -36,13 +95,18 @@ struct Shared {
     inputs: Mutex<Vec<Vec<u32>>>,
     /// engines, one slot per core. Workers take a raw pointer to their
     /// slot; the driver only touches engines between phases.
-    engines: Mutex<Vec<*mut CoreEngine<RustBackend>>>,
+    engines: Mutex<Vec<*mut CoreEngine<B>>>,
+    /// chunk-parallel sweep state (see module docs).
+    sweep: RwLock<SweepState>,
+    /// shared chunk cursor for the Update phase.
+    next_chunk: AtomicUsize,
 }
 
-// Raw pointers to engines are only dereferenced by their owning worker
-// while the driver is blocked in run_phase.
-unsafe impl Send for Shared {}
-unsafe impl Sync for Shared {}
+// Raw pointers to engines/sweep views are only dereferenced under the
+// protocol in the module docs (own engine in Route, disjoint word ranges
+// in Update) while the driver is blocked in run_phase.
+unsafe impl<B: UpdateBackend + Send> Send for Shared<B> {}
+unsafe impl<B: UpdateBackend + Send> Sync for Shared<B> {}
 
 struct State {
     generation: u64,
@@ -50,21 +114,68 @@ struct State {
     errors: Vec<String>,
 }
 
-pub struct CorePool {
-    shared: Arc<Shared>,
-    workers: Vec<std::thread::JoinHandle<()>>,
-    /// boxed engines; stable addresses for the worker pointers
-    cores: Vec<Box<CoreEngine<RustBackend>>>,
-    n: usize,
+/// Recover the guard even if a panicking worker poisoned the lock — the
+/// panic is already surfaced as a phase error, and state behind these
+/// locks stays structurally valid (worst case: a half-swept core that the
+/// errored phase reports anyway).
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
-impl CorePool {
-    pub fn new(mut cores_in: Vec<CoreEngine<RustBackend>>) -> Self {
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+pub struct CorePool<B: UpdateBackend = RustBackend> {
+    shared: Arc<Shared<B>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// boxed engines; stable addresses for the worker pointers
+    cores: Vec<Box<CoreEngine<B>>>,
+    n: usize,
+    n_workers: usize,
+    /// chunk-parallel Update enabled (all backends chunkable, >= 1 chunk)
+    chunked: bool,
+}
+
+impl<B: UpdateBackend + Send + 'static> CorePool<B> {
+    pub fn new(cores_in: Vec<CoreEngine<B>>) -> Self {
+        Self::with_chunk_words(cores_in, DEFAULT_CHUNK_WORDS)
+    }
+
+    /// Build the pool with an explicit sweep-chunk granularity (in 64-bit
+    /// spike words, i.e. 64-neuron units). Exposed for tests and perf
+    /// experiments; `new` uses [`DEFAULT_CHUNK_WORDS`].
+    pub fn with_chunk_words(mut cores_in: Vec<CoreEngine<B>>, chunk_words: usize) -> Self {
+        let chunk_words = chunk_words.max(1);
         let n = cores_in.len();
-        let mut cores: Vec<Box<CoreEngine<RustBackend>>> =
-            cores_in.drain(..).map(Box::new).collect();
-        let ptrs: Vec<*mut CoreEngine<RustBackend>> =
+        let mut cores: Vec<Box<CoreEngine<B>>> = cores_in.drain(..).map(Box::new).collect();
+        let ptrs: Vec<*mut CoreEngine<B>> =
             cores.iter_mut().map(|b| &mut **b as *mut _).collect();
+
+        let mut chunks = Vec::new();
+        if cores.iter().all(|c| c.backend_chunkable()) {
+            for (c, core) in cores.iter().enumerate() {
+                let words = mask_words(core.n_neurons());
+                let mut w = 0;
+                while w < words {
+                    let hi = (w + chunk_words).min(words);
+                    chunks.push(ChunkTask { core: c, word_lo: w, word_hi: hi });
+                    w = hi;
+                }
+            }
+        }
+        let chunked = !chunks.is_empty();
+        // At least one worker per core (the Route phase is per-core);
+        // with chunking, enough extra workers to eat the chunk list.
+        let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let n_workers = if chunked { n.max(avail.min(chunks.len())) } else { n };
+
         let shared = Arc::new(Shared {
             state: Mutex::new(State { generation: 0, phase: Phase::Update, errors: Vec::new() }),
             start_cv: Condvar::new(),
@@ -72,8 +183,10 @@ impl CorePool {
             pending: AtomicUsize::new(0),
             inputs: Mutex::new(vec![Vec::new(); n]),
             engines: Mutex::new(ptrs),
+            sweep: RwLock::new(SweepState { views: Vec::new(), chunks }),
+            next_chunk: AtomicUsize::new(0),
         });
-        let workers = (0..n)
+        let workers = (0..n_workers)
             .map(|i| {
                 let shared = shared.clone();
                 std::thread::Builder::new()
@@ -82,9 +195,11 @@ impl CorePool {
                     .expect("spawn core worker")
             })
             .collect();
-        Self { shared, workers, cores, n }
+        Self { shared, workers, cores, n, n_workers, chunked }
     }
+}
 
+impl<B: UpdateBackend> CorePool<B> {
     pub fn len(&self) -> usize {
         self.n
     }
@@ -95,23 +210,23 @@ impl CorePool {
     }
 
     /// Immutable access between phases.
-    pub fn core(&self, i: usize) -> &CoreEngine<RustBackend> {
+    pub fn core(&self, i: usize) -> &CoreEngine<B> {
         &self.cores[i]
     }
 
     /// Mutable access between phases (reset, counters).
-    pub fn core_mut(&mut self, i: usize) -> &mut CoreEngine<RustBackend> {
+    pub fn core_mut(&mut self, i: usize) -> &mut CoreEngine<B> {
         &mut self.cores[i]
     }
 
     fn run_phase(&self, phase: Phase) -> anyhow::Result<()> {
-        let mut st = self.shared.state.lock().unwrap();
-        self.shared.pending.store(self.n, Ordering::SeqCst);
+        let mut st = plock(&self.shared.state);
+        self.shared.pending.store(self.n_workers, Ordering::SeqCst);
         st.phase = phase;
         st.generation += 1;
         self.shared.start_cv.notify_all();
         while self.shared.pending.load(Ordering::SeqCst) != 0 {
-            st = self.shared.done_cv.wait(st).unwrap();
+            st = self.shared.done_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         if !st.errors.is_empty() {
             let msg = st.errors.join("; ");
@@ -121,17 +236,52 @@ impl CorePool {
         Ok(())
     }
 
-    /// Phase A: membrane sweep on every core.
-    pub fn phase_update(&self) -> anyhow::Result<()> {
-        self.run_phase(Phase::Update)
+    /// Phase A: membrane sweep on every core — chunk-parallel across all
+    /// workers when the backend allows it (see module docs).
+    pub fn phase_update(&mut self) -> anyhow::Result<()> {
+        if !self.chunked {
+            return self.run_phase(Phase::Update);
+        }
+        {
+            let mut sweep =
+                self.shared.sweep.write().unwrap_or_else(PoisonError::into_inner);
+            sweep.views.clear();
+            for core in self.cores.iter_mut() {
+                sweep.views.push(core.sweep_view());
+            }
+        }
+        self.shared.next_chunk.store(0, Ordering::SeqCst);
+        let result = self.run_phase(Phase::Update);
+        // Epilogue per core: counters, fired extraction, seed advance —
+        // run it even when a worker errored, so cores whose chunks all
+        // completed end the generation fully consistent (same as the
+        // per-core fallback, where a non-failing core's phase_update runs
+        // to completion). A failed core's membranes may be half-swept;
+        // the propagated error marks the whole step invalid.
+        for core in self.cores.iter_mut() {
+            core.finish_update();
+        }
+        result
     }
 
     /// Phase B: routing + accumulate, with per-core axon inputs.
+    /// `inputs.len()` must equal the core count; every input slot is
+    /// cleared up front so a malformed call can never replay the previous
+    /// step's deliveries into tail cores.
     pub fn phase_route(&self, inputs: &[Vec<u32>]) -> anyhow::Result<()> {
         {
-            let mut slot = self.shared.inputs.lock().unwrap();
-            for (dst, src) in slot.iter_mut().zip(inputs) {
+            let mut slot = plock(&self.shared.inputs);
+            for dst in slot.iter_mut() {
                 dst.clear();
+            }
+            if inputs.len() != self.n {
+                anyhow::bail!(
+                    "phase_route: {} input vecs for {} cores (one per core required)",
+                    inputs.len(),
+                    self.n
+                );
+            }
+            for (dst, src) in slot.iter_mut().zip(inputs) {
                 dst.extend_from_slice(src);
             }
         }
@@ -139,7 +289,7 @@ impl CorePool {
     }
 }
 
-impl Drop for CorePool {
+impl<B: UpdateBackend> Drop for CorePool<B> {
     fn drop(&mut self) {
         let _ = self.run_phase(Phase::Exit);
         for w in self.workers.drain(..) {
@@ -148,49 +298,103 @@ impl Drop for CorePool {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>, idx: usize) {
-    let engine: *mut CoreEngine<RustBackend> = shared.engines.lock().unwrap()[idx];
+/// Run the branch-free kernel over one chunk of a core's sweep.
+///
+/// SAFETY: caller must guarantee this word range of this view is owned
+/// exclusively by the current thread for the duration of the call, and
+/// that the view's pointers are live (engine boxed, driver blocked).
+unsafe fn run_chunk(view: &SweepView, word_lo: usize, word_hi: usize) {
+    let lo = word_lo * 64;
+    let hi = (word_hi * 64).min(view.n);
+    if lo >= hi {
+        return;
+    }
+    let v = std::slice::from_raw_parts_mut(view.v.add(lo), hi - lo);
+    let spikes = std::slice::from_raw_parts_mut(view.spikes.add(word_lo), word_hi - word_lo);
+    let params = &*view.params;
+    sweep_chunk(v, params.slice(lo, hi), view.step_seed, spikes, lo as u32);
+}
+
+fn worker_loop<B: UpdateBackend>(shared: Arc<Shared<B>>, idx: usize) {
+    // Workers beyond the core count (chunk helpers) have no engine.
+    let engine: *mut CoreEngine<B> =
+        plock(&shared.engines).get(idx).copied().unwrap_or(std::ptr::null_mut());
     let mut seen_gen = 0u64;
     let mut axon_buf: Vec<u32> = Vec::new();
     loop {
         let phase = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = plock(&shared.state);
             while st.generation == seen_gen {
-                st = shared.start_cv.wait(st).unwrap();
+                st = shared.start_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
             }
             seen_gen = st.generation;
             st.phase
         };
         if phase == Phase::Exit {
-            shared.pending.fetch_sub(1, Ordering::SeqCst);
-            shared.done_cv.notify_all();
+            // Same lost-wakeup guard as below: take the state mutex before
+            // notifying so the notify can't land in the driver's window
+            // between its `pending` load and `done_cv.wait`.
+            if shared.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+                let _guard = plock(&shared.state);
+                shared.done_cv.notify_all();
+            }
             return;
         }
-        // SAFETY: this worker is the only one holding engine `idx`, and
-        // the driver is blocked until `pending` reaches zero.
-        let result = unsafe {
-            let e = &mut *engine;
+        // Panic guard: a worker must always reach the pending decrement,
+        // or the driver (and Drop) would wait on done_cv forever.
+        let work = catch_unwind(AssertUnwindSafe(|| -> anyhow::Result<()> {
             match phase {
-                Phase::Update => e.phase_update(),
+                Phase::Update => {
+                    let sweep =
+                        shared.sweep.read().unwrap_or_else(PoisonError::into_inner);
+                    if sweep.chunks.is_empty() {
+                        if engine.is_null() {
+                            return Ok(());
+                        }
+                        // SAFETY: this worker is the only one holding
+                        // engine `idx`, and the driver is blocked until
+                        // `pending` reaches zero.
+                        unsafe { (*engine).phase_update() }
+                    } else {
+                        loop {
+                            let k = shared.next_chunk.fetch_add(1, Ordering::SeqCst);
+                            let Some(t) = sweep.chunks.get(k) else { break };
+                            let view = sweep.views[t.core];
+                            // SAFETY: the cursor hands each chunk to
+                            // exactly one worker; chunks cover disjoint
+                            // word-aligned ranges (module docs).
+                            unsafe { run_chunk(&view, t.word_lo, t.word_hi) };
+                        }
+                        Ok(())
+                    }
+                }
                 Phase::Route => {
+                    if engine.is_null() {
+                        return Ok(());
+                    }
                     // copy this core's inputs out and RELEASE the lock —
                     // holding it across phase_route would serialise the
                     // whole phase across workers (§Perf iteration 2).
                     axon_buf.clear();
                     {
-                        let inputs = shared.inputs.lock().unwrap();
+                        let inputs = plock(&shared.inputs);
                         axon_buf.extend_from_slice(&inputs[idx]);
                     }
-                    e.phase_route(&axon_buf)
+                    // SAFETY: as above — exclusive engine, blocked driver.
+                    unsafe { (*engine).phase_route(&axon_buf) }
                 }
                 Phase::Exit => unreachable!(),
             }
-        };
-        if let Err(err) = result {
-            shared.state.lock().unwrap().errors.push(format!("core {idx}: {err:#}"));
+        }));
+        match work {
+            Ok(Ok(())) => {}
+            Ok(Err(err)) => plock(&shared.state).errors.push(format!("core {idx}: {err:#}")),
+            Err(payload) => plock(&shared.state)
+                .errors
+                .push(format!("worker {idx} panicked: {}", panic_message(&*payload))),
         }
         if shared.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
-            let _guard = shared.state.lock().unwrap();
+            let _guard = plock(&shared.state);
             shared.done_cv.notify_all();
         }
     }
@@ -252,6 +456,115 @@ mod tests {
         assert!(pool.core(0).v.iter().all(|&x| x == 0));
     }
 
+    /// One core's sweep split across many single-word chunks must stay
+    /// bit-exact with the unchunked engine — including noise, which is
+    /// per-index and therefore chunking-invariant.
+    #[test]
+    fn chunked_sweep_matches_direct_engine_with_noise() {
+        let mut net = small_net(0xC0FFEE);
+        for p in &mut net.params {
+            *p = NeuronModel::lif(40, -2, 4, true).unwrap(); // stochastic
+        }
+        let mut direct = CoreEngine::new(&net, SlotStrategy::Modulo, RustBackend).unwrap();
+        let pooled = vec![CoreEngine::new(&net, SlotStrategy::Modulo, RustBackend).unwrap()];
+        let mut pool = CorePool::with_chunk_words(pooled, 1); // force max chunking
+        for step in 0..25 {
+            let inputs = if step % 2 == 0 { vec![0u32] } else { vec![] };
+            direct.phase_update().unwrap();
+            direct.phase_route(&inputs).unwrap();
+            pool.phase_update().unwrap();
+            pool.phase_route(std::slice::from_ref(&inputs)).unwrap();
+            assert_eq!(pool.core(0).fired(), direct.fired(), "fired step {step}");
+            assert_eq!(pool.core(0).v, direct.v, "membranes step {step}");
+        }
+    }
+
+    /// Satellite regression: a short `inputs` slice used to leave the
+    /// previous step's deliveries in the tail cores' slots and replay
+    /// them. Now every slot is cleared first and the arity mismatch is an
+    /// error, never a silent replay.
+    #[test]
+    fn short_input_slice_errors_and_never_replays() {
+        let nets: Vec<Network> = (0..2).map(small_net).collect();
+        let mut direct: Vec<CoreEngine<RustBackend>> = nets
+            .iter()
+            .map(|n| CoreEngine::new(n, SlotStrategy::Modulo, RustBackend).unwrap())
+            .collect();
+        let pooled: Vec<CoreEngine<RustBackend>> = nets
+            .iter()
+            .map(|n| CoreEngine::new(n, SlotStrategy::Modulo, RustBackend).unwrap())
+            .collect();
+        let mut pool = CorePool::new(pooled);
+
+        // step 1: both cores receive axon 0
+        let full = vec![vec![0u32], vec![0u32]];
+        pool.phase_update().unwrap();
+        pool.phase_route(&full).unwrap();
+        for (c, e) in direct.iter_mut().enumerate() {
+            e.phase_update().unwrap();
+            e.phase_route(&full[c]).unwrap();
+        }
+
+        // step 2: caller passes too few input vecs -> hard error
+        pool.phase_update().unwrap();
+        let err = pool.phase_route(&[vec![0u32]]).unwrap_err().to_string();
+        assert!(err.contains("1 input vecs for 2 cores"), "{err}");
+
+        // completing the step with correct arity and EMPTY inputs must
+        // behave as empty — core 1 must not see step 1's [0] again
+        pool.phase_route(&[vec![], vec![]]).unwrap();
+        for e in direct.iter_mut() {
+            e.phase_update().unwrap();
+            e.phase_route(&[]).unwrap();
+        }
+        for c in 0..2 {
+            assert_eq!(pool.core(c).v, direct[c].v, "stale inputs replayed into core {c}");
+        }
+    }
+
+    /// Satellite regression: a panicking worker used to leave `pending`
+    /// stuck and hang the driver (and `Drop`) on `done_cv` forever. The
+    /// guard converts the panic into a phase error and keeps the worker
+    /// alive for later generations.
+    #[test]
+    fn worker_panic_reports_error_and_pool_still_shuts_down() {
+        #[derive(Clone, Copy, Debug)]
+        struct PanickingBackend;
+        impl UpdateBackend for PanickingBackend {
+            fn update(
+                &mut self,
+                _v: &mut [i32],
+                _params: &crate::engine::CoreParams,
+                _step_seed: u32,
+                _spikes: &mut [u64],
+            ) -> anyhow::Result<()> {
+                panic!("injected backend panic");
+            }
+            fn accumulate(&mut self, _v: &mut [i32], _e: &[(u32, i32)]) -> anyhow::Result<()> {
+                Ok(())
+            }
+            fn name(&self) -> &'static str {
+                "panicking"
+            }
+        }
+
+        let nets: Vec<Network> = (0..2).map(small_net).collect();
+        let engines: Vec<CoreEngine<PanickingBackend>> = nets
+            .iter()
+            .map(|n| CoreEngine::new(n, SlotStrategy::Modulo, PanickingBackend).unwrap())
+            .collect();
+        let mut pool = CorePool::new(engines);
+        let err = pool.phase_update().unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+        assert!(err.contains("injected backend panic"), "{err}");
+        // the pool survives: routing still runs, and a second failing
+        // update still reports instead of hanging
+        pool.phase_route(&[vec![], vec![]]).unwrap();
+        let err = pool.phase_update().unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+        drop(pool); // must not hang
+    }
+
     #[test]
     fn pool_shuts_down_cleanly() {
         let nets: Vec<Network> = (0..2).map(small_net).collect();
@@ -259,7 +572,7 @@ mod tests {
             .iter()
             .map(|n| CoreEngine::new(n, SlotStrategy::Modulo, RustBackend).unwrap())
             .collect();
-        let pool = CorePool::new(engines);
+        let mut pool = CorePool::new(engines);
         pool.phase_update().unwrap();
         drop(pool); // must not hang
     }

@@ -2,10 +2,30 @@
 //! leak) and phase 4 (synaptic accumulate).
 //!
 //! Two implementations exist:
-//! * [`RustBackend`] — native scalar loop, bit-exact with the Pallas
-//!   kernel and `ref.py` (see `util::prng`);
+//! * [`RustBackend`] — drives the branch-free [`sweep_chunk`] kernel,
+//!   bit-exact with the Pallas kernel and `ref.py` (see `util::prng`);
 //! * [`crate::runtime::XlaBackend`] — executes the AOT-compiled JAX/Pallas
 //!   artifacts via PJRT (the "FPGA bitstream" of this reproduction).
+//!
+//! # The branch-free kernel contract
+//!
+//! [`sweep_chunk`] is the phases 1-3 inner kernel. It operates on one
+//! **word-aligned chunk** — a contiguous `(v, params, spike_words)` range
+//! starting at a 64-neuron multiple, so each chunk owns whole `u64` spike
+//! words and never shares a word with a neighbour. The per-neuron
+//! `FLAG_NOISE`/`FLAG_LIF` branches of the original scalar loop are
+//! replaced by unconditional mask arithmetic (spike reset and leak/clear
+//! select via all-ones/all-zero masks) plus one per-word flag summary
+//! that hoists the noise hash out of words with no stochastic lane — a
+//! straight-line SoA body the autovectorizer can chew on. Because
+//! membrane noise is the counter-based `noise17(step_seed, global_index)`
+//! hash (no sequential PRNG state), splitting a sweep into chunks in any
+//! order produces bit-identical results to one full scalar pass; the
+//! `prop_chunked_sweep_matches_scalar_reference` property test pins this
+//! against a literal transcription of the pre-rewrite branchy loop.
+//! `cluster::CorePool` exploits the same property to run one core's sweep
+//! chunk-parallel across worker threads (backends opt in via
+//! [`UpdateBackend::chunkable`]).
 //!
 //! Spike output is a packed `u64` bitmask (bit `i` = neuron `i` fired),
 //! matching the hardware's BRAM spike registers; fired ids are decoded
@@ -85,6 +105,91 @@ impl CoreParams {
     pub fn is_empty(&self) -> bool {
         self.theta.is_empty()
     }
+
+    /// Borrow the SoA columns for neurons `[lo, hi)` (a chunk view).
+    pub fn slice(&self, lo: usize, hi: usize) -> ParamSlice<'_> {
+        ParamSlice {
+            theta: &self.theta[lo..hi],
+            nu: &self.nu[lo..hi],
+            lam: &self.lam[lo..hi],
+            flags: &self.flags[lo..hi],
+        }
+    }
+}
+
+/// Borrowed SoA parameter columns for one sweep chunk.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamSlice<'a> {
+    pub theta: &'a [i32],
+    pub nu: &'a [i32],
+    pub lam: &'a [i32],
+    pub flags: &'a [u32],
+}
+
+/// Phases 2-3 for one lane, branch-free: spike+reset selects through an
+/// all-ones/all-zero mask instead of a branch, and the leak-vs-clear
+/// choice is the same shift arithmetic masked by `FLAG_LIF` (non-LIF
+/// lanes fall through to zero). `x - (x >> s)` cannot overflow: the
+/// shifted value has the same sign as `x` and no larger magnitude.
+#[inline(always)]
+fn fire_reset_leak(x: i32, theta: i32, lam: i32, flags: u32) -> (i32, u32) {
+    let fired = (x > theta) as u32;
+    // fired -> mask 0 (reset), quiet -> mask all-ones (keep)
+    let x = x & (fired as i32).wrapping_sub(1);
+    let leaked = x - (x >> lam.clamp(0, 31));
+    let lif_mask = (((flags & FLAG_LIF) != 0) as i32).wrapping_neg();
+    (leaked & lif_mask, fired)
+}
+
+/// Branch-free membrane kernel (phases 1-3) over one word-aligned chunk.
+///
+/// `v`, `p`, and `spikes` cover the same neurons; `first_neuron` is the
+/// core-global index of `v[0]` and MUST be a multiple of 64 so the chunk
+/// owns whole spike words. Every word of `spikes` is fully assigned
+/// (stale bits cleared, bits past `v.len()` never set). Noise is the
+/// per-index `noise17(step_seed, first_neuron + i)` counter hash, so any
+/// chunking of a sweep is bit-exact with one full pass.
+pub fn sweep_chunk(
+    v: &mut [i32],
+    p: ParamSlice<'_>,
+    step_seed: u32,
+    spikes: &mut [u64],
+    first_neuron: u32,
+) {
+    let n = v.len();
+    debug_assert_eq!(p.theta.len(), n);
+    debug_assert_eq!(p.nu.len(), n);
+    debug_assert_eq!(p.lam.len(), n);
+    debug_assert_eq!(p.flags.len(), n);
+    debug_assert_eq!(spikes.len(), mask_words(n));
+    debug_assert_eq!(first_neuron % 64, 0, "chunks must start on a word boundary");
+    for (w, word_out) in spikes.iter_mut().enumerate() {
+        let base = w * 64;
+        let valid = 64.min(n - base);
+        let mut word = 0u64;
+        // per-word flag summary: hoist the noise hash out of words with
+        // no stochastic lane (the common case for deterministic nets)
+        let any_noise = p.flags[base..base + valid].iter().any(|f| f & FLAG_NOISE != 0);
+        if any_noise {
+            for lane in 0..valid {
+                let i = base + lane;
+                let noise_mask = (((p.flags[i] & FLAG_NOISE) != 0) as i32).wrapping_neg();
+                let xi = shift_noise(noise17(step_seed, first_neuron + i as u32), p.nu[i]);
+                let x = v[i].wrapping_add(xi & noise_mask);
+                let (x, fired) = fire_reset_leak(x, p.theta[i], p.lam[i], p.flags[i]);
+                v[i] = x;
+                word |= (fired as u64) << lane;
+            }
+        } else {
+            for lane in 0..valid {
+                let i = base + lane;
+                let (x, fired) = fire_reset_leak(v[i], p.theta[i], p.lam[i], p.flags[i]);
+                v[i] = x;
+                word |= (fired as u64) << lane;
+            }
+        }
+        *word_out = word;
+    }
 }
 
 /// Backend for the two compute phases of a timestep.
@@ -104,10 +209,20 @@ pub trait UpdateBackend {
     /// interleaved `(target, weight)` event.
     fn accumulate(&mut self, v: &mut [i32], events: &[(u32, i32)]) -> anyhow::Result<()>;
 
+    /// True when `update` is exactly the pure [`sweep_chunk`] reference
+    /// kernel, so a driver (`cluster::CorePool`) may run the sweep
+    /// word-chunk-parallel across threads instead of calling `update`.
+    /// Backends with their own state or execution path (e.g. PJRT) must
+    /// leave this false.
+    fn chunkable(&self) -> bool {
+        false
+    }
+
     fn name(&self) -> &'static str;
 }
 
-/// Native scalar implementation — the reference semantics.
+/// Native implementation — the reference semantics, executed through the
+/// branch-free [`sweep_chunk`] kernel as one full-range chunk.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RustBackend;
 
@@ -121,27 +236,8 @@ impl UpdateBackend for RustBackend {
     ) -> anyhow::Result<()> {
         debug_assert_eq!(v.len(), params.len());
         debug_assert_eq!(spikes.len(), mask_words(v.len()));
-        spikes.fill(0);
-        for i in 0..v.len() {
-            let flags = params.flags[i];
-            let mut x = v[i];
-            // 1. noise
-            if flags & FLAG_NOISE != 0 {
-                x = x.wrapping_add(shift_noise(noise17(step_seed, i as u32), params.nu[i]));
-            }
-            // 2. spike + reset (strict >)
-            if x > params.theta[i] {
-                x = 0;
-                set_mask_bit(spikes, i);
-            }
-            // 3. leak / clear
-            if flags & FLAG_LIF != 0 {
-                x -= x >> params.lam[i].clamp(0, 31);
-            } else {
-                x = 0;
-            }
-            v[i] = x;
-        }
+        let n = v.len();
+        sweep_chunk(v, params.slice(0, n), step_seed, spikes, 0);
         Ok(())
     }
 
@@ -151,6 +247,10 @@ impl UpdateBackend for RustBackend {
             *slot = slot.wrapping_add(w);
         }
         Ok(())
+    }
+
+    fn chunkable(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {
@@ -163,6 +263,101 @@ mod tests {
     use super::*;
     use crate::snn::NeuronModel;
     use crate::util::prng::Xorshift32;
+    use crate::util::ptest;
+
+    /// Literal transcription of the pre-rewrite branchy scalar loop — the
+    /// reference the branch-free kernel must stay bit-exact with.
+    fn scalar_reference(v: &mut [i32], p: &CoreParams, step_seed: u32, spikes: &mut [u64]) {
+        spikes.fill(0);
+        for i in 0..v.len() {
+            let flags = p.flags[i];
+            let mut x = v[i];
+            if flags & FLAG_NOISE != 0 {
+                x = x.wrapping_add(shift_noise(noise17(step_seed, i as u32), p.nu[i]));
+            }
+            if x > p.theta[i] {
+                x = 0;
+                set_mask_bit(spikes, i);
+            }
+            if flags & FLAG_LIF != 0 {
+                x -= x >> p.lam[i].clamp(0, 31);
+            } else {
+                x = 0;
+            }
+            v[i] = x;
+        }
+    }
+
+    /// Tentpole property: the branch-free kernel, run whole or split into
+    /// arbitrary word-aligned chunks, matches the branchy scalar loop
+    /// bit-for-bit — membranes and spike words — across random mixes of
+    /// IF/LIF/ANN lanes with and without noise, extreme membrane values,
+    /// and ragged tail words.
+    #[test]
+    fn prop_chunked_sweep_matches_scalar_reference() {
+        ptest::check("chunked_vs_scalar_sweep", 60, |rng| {
+            let n = 1 + rng.below(300) as usize;
+            let mut p = CoreParams::default();
+            for _ in 0..n {
+                p.theta.push(rng.range_i32(-1000, 1000));
+                p.nu.push(rng.range_i32(-10, 10));
+                p.lam.push(rng.range_i32(0, 40)); // > 31 exercises the clamp
+                p.flags.push(match rng.below(4) {
+                    0 => 0,
+                    1 => FLAG_LIF,
+                    2 => FLAG_NOISE,
+                    _ => FLAG_LIF | FLAG_NOISE,
+                });
+            }
+            let step_seed = rng.next_u32();
+            let v0: Vec<i32> = (0..n)
+                .map(|k| match k % 7 {
+                    0 => i32::MAX - rng.range_i32(0, 3),
+                    1 => i32::MIN + rng.range_i32(0, 3),
+                    _ => rng.range_i32(-100_000, 100_000),
+                })
+                .collect();
+            let words = mask_words(n);
+
+            let mut v_ref = v0.clone();
+            let mut s_ref = vec![u64::MAX; words]; // dirty buffers everywhere
+            scalar_reference(&mut v_ref, &p, step_seed, &mut s_ref);
+
+            let mut v_full = v0.clone();
+            let mut s_full = vec![u64::MAX; words];
+            RustBackend.update(&mut v_full, &p, step_seed, &mut s_full).unwrap();
+            ptest::prop_assert_eq(v_full, v_ref.clone(), "full kernel membranes")?;
+            ptest::prop_assert_eq(s_full, s_ref.clone(), "full kernel spike words")?;
+
+            // random word-aligned chunking, applied out of order
+            let mut v_chunk = v0;
+            let mut s_chunk = vec![u64::MAX; words];
+            let mut ranges = Vec::new();
+            let mut w = 0;
+            while w < words {
+                let hi = (w + 1 + rng.below(words as u32) as usize).min(words);
+                ranges.push((w, hi));
+                w = hi;
+            }
+            if rng.chance(0.5) {
+                ranges.reverse();
+            }
+            for &(lo_w, hi_w) in &ranges {
+                let lo = lo_w * 64;
+                let hi = (hi_w * 64).min(n);
+                sweep_chunk(
+                    &mut v_chunk[lo..hi],
+                    p.slice(lo, hi),
+                    step_seed,
+                    &mut s_chunk[lo_w..hi_w],
+                    lo as u32,
+                );
+            }
+            ptest::prop_assert_eq(v_chunk, v_ref, "chunked membranes")?;
+            ptest::prop_assert_eq(s_chunk, s_ref, "chunked spike words")?;
+            Ok(())
+        });
+    }
 
     fn params_of(models: &[NeuronModel]) -> CoreParams {
         let mut p = CoreParams::default();

@@ -31,6 +31,20 @@ use crate::hbm::{AccessCounters, HbmImage, HbmSim, Pointer, SlotStrategy};
 use crate::snn::Network;
 use crate::util::prng::mix_seed;
 
+/// Raw pointers into one engine's sweep state, handed to `CorePool`
+/// workers for the chunk-parallel membrane sweep. Valid only while the
+/// engine stays boxed (stable address) and the pool driver is blocked in
+/// its Update phase; chunks address disjoint word-aligned ranges, so
+/// workers never alias.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct SweepView {
+    pub v: *mut i32,
+    pub spikes: *mut u64,
+    pub params: *const CoreParams,
+    pub n: usize,
+    pub step_seed: u32,
+}
+
 /// Result of one engine step (borrowed views into reusable buffers).
 #[derive(Debug)]
 pub struct StepOutput<'a> {
@@ -129,15 +143,52 @@ impl<B: UpdateBackend> CoreEngine<B> {
 
     /// Membrane sweep (phases 1-3). Fired neuron ids are available via
     /// [`Self::fired`] afterwards.
+    ///
+    /// The noise seed advances **here** (not in `phase_route`): each sweep
+    /// consumes `mix_seed(base_seed, step_num)` and bumps `step_num`, so
+    /// repeated standalone sweeps draw fresh noise while `step()` — sweep
+    /// then route — sees the exact same seed schedule as before.
     pub fn phase_update(&mut self) -> anyhow::Result<()> {
-        let n = self.n_neurons();
-        let ss = mix_seed(self.base_seed, self.step_num);
+        let ss = self.sweep_seed();
         self.backend.update(&mut self.v, &self.params, ss, &mut self.spike_words)?;
+        self.finish_update();
+        Ok(())
+    }
+
+    /// Seed the next membrane sweep will consume.
+    pub(crate) fn sweep_seed(&self) -> u32 {
+        mix_seed(self.base_seed, self.step_num)
+    }
+
+    /// True when the backend's `update` is the pure chunkable reference
+    /// kernel (see `UpdateBackend::chunkable`).
+    pub(crate) fn backend_chunkable(&self) -> bool {
+        self.backend.chunkable()
+    }
+
+    /// Raw sweep state for the pool's chunk-parallel Update phase. The
+    /// caller must run the full sweep over these pointers and then call
+    /// [`Self::finish_update`] — together the two are equivalent to
+    /// [`Self::phase_update`].
+    pub(crate) fn sweep_view(&mut self) -> SweepView {
+        SweepView {
+            v: self.v.as_mut_ptr(),
+            spikes: self.spike_words.as_mut_ptr(),
+            params: &self.params,
+            n: self.v.len(),
+            step_seed: self.sweep_seed(),
+        }
+    }
+
+    /// Sweep epilogue: access/cycle accounting, fired-id extraction, and
+    /// the noise-seed advance. Kept in one place so the engine's own
+    /// `phase_update` and the pool's chunked sweep stay bit-identical.
+    pub(crate) fn finish_update(&mut self) {
+        let n = self.n_neurons();
         self.hbm.counters.uram_accesses += 2 * n as u64; // read+write per neuron
         self.cycles += self.hbm.update_cycles();
-
         extract_fired(&self.spike_words, &mut self.fired_buf);
-        Ok(())
+        self.step_num = self.step_num.wrapping_add(1);
     }
 
     /// Fired neurons from the last `phase_update`.
@@ -184,7 +235,6 @@ impl<B: UpdateBackend> CoreEngine<B> {
                 self.out_buf.push(i);
             }
         }
-        self.step_num += 1;
         Ok(())
     }
 
@@ -303,6 +353,47 @@ mod tests {
         core.step(&[]).unwrap();
         assert_eq!(core.counters().hbm_rows(), 0, "no spikes -> no HBM traffic");
         assert_eq!(core.cycles, core.hbm.update_cycles());
+    }
+
+    /// Satellite regression: standalone `phase_update` calls used to
+    /// replay the same noise seed because `step_num` only advanced in
+    /// `phase_route`. The seed now advances with the sweep; `step()` keeps
+    /// the exact same seed schedule.
+    #[test]
+    fn standalone_phase_update_draws_fresh_noise() {
+        use crate::util::prng::{mix_seed, noise17, shift_noise};
+        let k = 10usize;
+        let m = NeuronModel::lif(i32::MAX, 0, 63, true).unwrap(); // never fires, ~no leak
+        let mut b = NetworkBuilder::new().seed(77);
+        for i in 0..k {
+            b.add_neuron(&format!("n{i}"), m, &[]).unwrap();
+        }
+        let net = b.build().unwrap().0;
+
+        let mut e = CoreEngine::new(&net, SlotStrategy::Modulo, RustBackend).unwrap();
+        e.phase_update().unwrap();
+        let v1 = e.v.clone();
+        e.phase_update().unwrap();
+        let v2 = e.v.clone();
+
+        // expected trajectory: sweep t draws noise17(mix_seed(seed, t), i)
+        let leak = |x: i32| x - (x >> 31); // lam 63 clamps to 31
+        let noisy = |x: i32, t: u32, i: usize| {
+            leak(x.wrapping_add(shift_noise(noise17(mix_seed(77, t), i as u32), 0)))
+        };
+        let want1: Vec<i32> = (0..k).map(|i| noisy(0, 0, i)).collect();
+        let want2: Vec<i32> = (0..k).map(|i| noisy(want1[i], 1, i)).collect();
+        assert_eq!(v1, want1, "first standalone sweep");
+        assert_eq!(v2, want2, "second standalone sweep must use the NEXT seed");
+        // the pre-fix behaviour (seed 0 replayed) must no longer occur
+        let replay: Vec<i32> = (0..k).map(|i| noisy(want1[i], 0, i)).collect();
+        assert_ne!(v2, replay, "noise seed was replayed across standalone sweeps");
+
+        // step() keeps the identical seed schedule (bit-exact contract)
+        let mut es = CoreEngine::new(&net, SlotStrategy::Modulo, RustBackend).unwrap();
+        es.step(&[]).unwrap();
+        es.step(&[]).unwrap();
+        assert_eq!(es.v, v2, "step() seed schedule changed");
     }
 
     #[test]

@@ -14,7 +14,8 @@ pub mod core;
 pub mod dense;
 
 pub use backend::{
-    extract_fired, mask_bit, mask_words, set_mask_bit, CoreParams, RustBackend, UpdateBackend,
+    extract_fired, mask_bit, mask_words, set_mask_bit, sweep_chunk, CoreParams, ParamSlice,
+    RustBackend, UpdateBackend,
 };
 pub use core::{CoreEngine, StepOutput};
 pub use dense::DenseEngine;

@@ -1,0 +1,97 @@
+//! Chunk-parallel sweep invariants through the public API: a `CorePool`
+//! forced into maximal chunking (one spike word per chunk) must stay
+//! bit-exact with the unchunked single-core engine AND the dense golden
+//! model — fired ids, output spikes, and membranes — including stochastic
+//! neurons, whose per-index counter noise makes chunking order-invariant.
+
+use hiaer_spike::cluster::CorePool;
+use hiaer_spike::engine::{CoreEngine, DenseEngine, RustBackend};
+use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::snn::{Network, NeuronModel, Synapse};
+use hiaer_spike::util::prng::Xorshift32;
+
+/// Random net sized to span several spike words with a ragged tail.
+fn noisy_net(n: usize, seed: u32) -> Network {
+    let mut rng = Xorshift32::new(seed);
+    let models = [
+        NeuronModel::if_neuron(30),
+        NeuronModel::lif(25, -3, 3, true).unwrap(),
+        NeuronModel::ann(18, -6, true).unwrap(),
+    ];
+    let params: Vec<NeuronModel> = (0..n).map(|_| models[rng.below(3) as usize]).collect();
+    let mut neuron_adj: Vec<Vec<Synapse>> = vec![Vec::new(); n];
+    for adj in neuron_adj.iter_mut() {
+        for _ in 0..6 {
+            adj.push(Synapse { target: rng.below(n as u32), weight: rng.range_i32(-20, 40) as i16 });
+        }
+    }
+    let axon_adj: Vec<Vec<Synapse>> = (0..4)
+        .map(|_| {
+            (0..12)
+                .map(|_| Synapse { target: rng.below(n as u32), weight: 25 })
+                .collect()
+        })
+        .collect();
+    let outputs: Vec<u32> = (0..n as u32).filter(|_| rng.chance(0.25)).collect();
+    Network::from_adj(params, &neuron_adj, &axon_adj, outputs, seed)
+}
+
+#[test]
+fn max_chunked_pool_matches_engine_and_dense() {
+    let n = 777; // 13 spike words, ragged tail
+    let net = noisy_net(n, 0x51EE7);
+    let mut dense = DenseEngine::new(&net);
+    let mut direct = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap();
+    let pooled = vec![CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap()];
+    let mut pool = CorePool::with_chunk_words(pooled, 1);
+
+    let mut rng = Xorshift32::new(9);
+    for step in 0..30 {
+        let axons: Vec<u32> = (0..4u32).filter(|_| rng.chance(0.5)).collect();
+        dense.step(&axons);
+        let out = direct.step(&axons).unwrap();
+        assert_eq!(out.fired.to_vec(), dense.fired(), "direct vs dense, step {step}");
+
+        pool.phase_update().unwrap();
+        pool.phase_route(std::slice::from_ref(&axons)).unwrap();
+        assert_eq!(pool.core(0).fired(), direct.fired(), "fired, step {step}");
+        assert_eq!(
+            pool.core(0).output_spikes(),
+            direct.output_spikes(),
+            "output spikes, step {step}"
+        );
+        assert_eq!(pool.core(0).v, dense.v, "membranes, step {step}");
+    }
+}
+
+/// Moderate chunking (several words per chunk, several chunks per core)
+/// across a multi-core pool, driven for many steps.
+#[test]
+fn multi_core_chunked_pool_matches_direct() {
+    let nets: Vec<Network> = (0..3).map(|i| noisy_net(200 + 70 * i, 0xA0 + i as u32)).collect();
+    let mut direct: Vec<CoreEngine<RustBackend>> = nets
+        .iter()
+        .map(|n| CoreEngine::new(n, SlotStrategy::Modulo, RustBackend).unwrap())
+        .collect();
+    let pooled: Vec<CoreEngine<RustBackend>> = nets
+        .iter()
+        .map(|n| CoreEngine::new(n, SlotStrategy::Modulo, RustBackend).unwrap())
+        .collect();
+    let mut pool = CorePool::with_chunk_words(pooled, 2);
+
+    for step in 0..20u32 {
+        let inputs: Vec<Vec<u32>> = (0..3)
+            .map(|c| if (step as usize + c) % 2 == 0 { vec![0, 2] } else { vec![1] })
+            .collect();
+        for (c, e) in direct.iter_mut().enumerate() {
+            e.phase_update().unwrap();
+            e.phase_route(&inputs[c]).unwrap();
+        }
+        pool.phase_update().unwrap();
+        pool.phase_route(&inputs).unwrap();
+        for c in 0..3 {
+            assert_eq!(pool.core(c).fired(), direct[c].fired(), "core {c} step {step}");
+            assert_eq!(pool.core(c).v, direct[c].v, "core {c} membranes step {step}");
+        }
+    }
+}
