@@ -4,17 +4,18 @@
 //! bit-exactly (same-tick HiAER delivery), and report cut synapses,
 //! per-level router traffic and the latency/energy behaviour.
 //!
+//! Both the single-core baseline and every cluster slice are built
+//! through the same `SimConfig` facade — only the topology differs.
+//!
 //!     make models
 //!     cargo run --release --example cluster_scale [-- --samples 10]
 
 use anyhow::Result;
-use hiaer_spike::cluster::MultiCoreEngine;
 use hiaer_spike::energy::EnergyModel;
-use hiaer_spike::engine::{CoreEngine, RustBackend};
 use hiaer_spike::harness::{self, models_dir};
-use hiaer_spike::hbm::SlotStrategy;
 use hiaer_spike::model_fmt::read_hsd;
-use hiaer_spike::partition::{ClusterTopology, CoreCapacity};
+use hiaer_spike::partition::CoreCapacity;
+use hiaer_spike::sim::{SimConfig, Simulator};
 use hiaer_spike::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -24,7 +25,7 @@ fn main() -> Result<()> {
     let name = args.get_or("model", "dvs_c16c24");
     let (graph, conv) = harness::load_model(&dir, name)?;
     let ts = read_hsd(dir.join(format!("{name}.hsd")))?;
-    let net = &conv.net;
+    let net = conv.net.clone();
     println!(
         "model {name}: {} neurons, {} synapses, {} axons\n",
         net.n_neurons(),
@@ -33,7 +34,7 @@ fn main() -> Result<()> {
     );
 
     // single-core baseline trace (output spikes per step per sample)
-    let mut single = CoreEngine::new(net, SlotStrategy::BalanceFanIn, RustBackend)?;
+    let mut single = SimConfig::new(net.clone()).build()?;
     let steps = graph.timesteps + graph.layers.len();
     let mut baseline: Vec<Vec<Vec<u32>>> = Vec::new();
     for s in &ts.samples[..samples.min(ts.samples.len())] {
@@ -56,14 +57,22 @@ fn main() -> Result<()> {
     for (servers, fpgas, cores) in
         [(1, 1, 1), (1, 1, 2), (1, 1, 8), (1, 2, 8), (2, 4, 8), (5, 8, 32)]
     {
-        let topo = ClusterTopology { servers, fpgas_per_server: fpgas, cores_per_fpga: cores };
+        let n_cores = servers * fpgas * cores;
         // shrink per-core capacity so the partitioner actually spreads
         let cap = CoreCapacity {
-            max_neurons: net.n_neurons().div_ceil(topo.n_cores()).max(64),
+            max_neurons: net.n_neurons().div_ceil(n_cores).max(64),
             max_synapses: usize::MAX,
         };
-        let mut mc = MultiCoreEngine::new(net, topo, cap, SlotStrategy::BalanceFanIn)?;
-        let cut = mc.partition.cut_stats(net);
+        let mut mc = SimConfig::new(net.clone())
+            .topology(servers, fpgas, cores)
+            .capacity(cap)
+            .build()?;
+        // a 1-core topology builds the plain single-core engine: no
+        // placement, nothing cut
+        let (cut_synapses, used) = match mc.placement() {
+            Some(p) => (p.cut_stats(&net).cut_synapses, p.n_used_cores()),
+            None => (0, 1),
+        };
         let mut parity = true;
         let (mut tot_energy, mut tot_latency) = (0.0f64, 0.0f64);
         let mut level_events = [0u64; 4];
@@ -73,23 +82,25 @@ fn main() -> Result<()> {
                 let empty = Vec::new();
                 let frame = s.frames.get(t).unwrap_or(&empty);
                 let out = mc.step(frame)?;
-                if out != baseline[si][t] {
+                if out.output_spikes != &baseline[si][t][..] {
                     parity = false;
                 }
             }
             let cost = mc.cost(&energy);
             tot_energy += cost.energy_uj;
             tot_latency += cost.latency_us;
-            for (tot, ev) in level_events.iter_mut().zip(cost.router.events_by_level) {
-                *tot += ev;
+            if let Some(router) = cost.router {
+                for (tot, ev) in level_events.iter_mut().zip(router.events_by_level) {
+                    *tot += ev;
+                }
             }
         }
         let n = baseline.len() as f64;
         println!(
             "{:>6} {:>6} {:>10} {:>9} {:>9} {:>9} {:>11.1} {:>11.1} {:>8}",
-            topo.n_cores(),
-            mc.partition.n_used_cores(),
-            cut.cut_synapses,
+            n_cores,
+            used,
+            cut_synapses,
             level_events[1],
             level_events[2],
             level_events[3],

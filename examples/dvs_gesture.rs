@@ -8,8 +8,8 @@
 
 use anyhow::Result;
 use hiaer_spike::harness::{self, models_dir};
-use hiaer_spike::hbm::SlotStrategy;
 use hiaer_spike::model_fmt::read_hsd;
+use hiaer_spike::sim::SimOptions;
 use hiaer_spike::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -51,8 +51,9 @@ fn main() -> Result<()> {
     // ---- family evaluation
     println!("\n== DVS gesture spiking-CNN family ==\n");
     harness::print_header();
+    let opts = SimOptions::from_args(&args)?;
     for e in &gestures {
-        let r = harness::evaluate_model(&dir, e, samples, SlotStrategy::BalanceFanIn)?;
+        let r = harness::evaluate_model(&dir, e, samples, &opts)?;
         harness::print_row(e, &r);
     }
     println!("\nlarger models: higher accuracy at higher energy/latency per gesture (paper Fig 5)");

@@ -13,10 +13,9 @@
 use anyhow::Result;
 use hiaer_spike::convert::{run_inference, Readout};
 use hiaer_spike::energy::EnergyModel;
-use hiaer_spike::engine::{CoreEngine, RustBackend};
 use hiaer_spike::harness::{self, models_dir};
-use hiaer_spike::hbm::SlotStrategy;
 use hiaer_spike::metrics::CostSeries;
+use hiaer_spike::sim::SimConfig;
 use hiaer_spike::util::cli::Args;
 use hiaer_spike::util::prng::Xorshift32;
 
@@ -187,7 +186,7 @@ fn main() -> Result<()> {
     let max_frames = args.get_usize("max-frames", 3000).map_err(anyhow::Error::msg)?;
     let dir = models_dir();
     let (graph, conv) = harness::load_model(&dir, "pong_dqn")?;
-    let mut engine = CoreEngine::new(&conv.net, SlotStrategy::BalanceFanIn, RustBackend)?;
+    let mut engine = SimConfig::new(conv.net.clone()).build()?;
     let energy = EnergyModel::default();
     let layers = graph.layers.len();
     let t = graph.timesteps;
@@ -208,7 +207,8 @@ fn main() -> Result<()> {
             // rate-coded decision: present the DVS observation T times
             let obs = env.dvs_axons();
             let frames: Vec<Vec<u32>> = (0..t).map(|_| obs.clone()).collect();
-            let inf = run_inference(&mut engine, &conv, &frames, layers, Readout::Rate, &energy)?;
+            let inf =
+                run_inference(&mut *engine, &conv, &frames, layers, Readout::Rate, &energy)?;
             costs.push(&inf.cost);
             env.step(inf.prediction);
             frames_played += 1;

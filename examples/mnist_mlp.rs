@@ -13,7 +13,7 @@
 
 use anyhow::Result;
 use hiaer_spike::harness::{self, models_dir};
-use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::sim::SimOptions;
 use hiaer_spike::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -21,12 +21,13 @@ fn main() -> Result<()> {
     let samples = args.get_usize("samples", 500).map_err(anyhow::Error::msg)?;
     let dir = models_dir();
     let entries = harness::load_manifest(&dir)?;
+    let opts = SimOptions::from_args(&args)?;
 
     println!("== MNIST end-to-end (event-driven HBM engine, single core) ==\n");
     harness::print_header();
     let mut all_parity = true;
     for e in entries.iter().filter(|e| e.task == "mnist") {
-        let r = harness::evaluate_model(&dir, e, samples, SlotStrategy::BalanceFanIn)?;
+        let r = harness::evaluate_model(&dir, e, samples, &opts)?;
         harness::print_row(e, &r);
         let parity = (r.accuracy - e.acc_quant).abs() < 1e-9;
         all_parity &= parity;

@@ -1,15 +1,15 @@
 //! Quickstart: build and run the paper's Supplementary-A.1 example
 //! network (Fig 6) through the full platform path — keyed builder ->
-//! flattened network -> HBM image -> event-driven core engine — and poke
-//! the hs_api-style interaction surface (step / read_membrane /
+//! flattened network -> `SimConfig` -> event-driven simulator session —
+//! and poke the hs_api-style interaction surface (step / read_membrane /
 //! read_synapse / write_synapse).
 //!
 //!     cargo run --release --example quickstart
 
 use anyhow::Result;
 use hiaer_spike::energy::EnergyModel;
-use hiaer_spike::engine::{CoreEngine, RustBackend};
 use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::sim::{Backend, SimConfig, Simulator};
 use hiaer_spike::snn::{NetworkBuilder, NeuronModel};
 
 fn main() -> Result<()> {
@@ -37,11 +37,15 @@ fn main() -> Result<()> {
     println!("synapse a->b weight = {w}, bumping by 1");
     net.write_synapse(false, a, bn, w + 1);
 
-    // --- compile to the HBM routing table + run on the core engine
-    let mut core = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend)?;
+    // --- build the session and inspect its HBM routing-table layout
+    let mut core = SimConfig::new(net)
+        .strategy(SlotStrategy::BalanceFanIn)
+        .backend(Backend::Rust)
+        .build()?;
+    let stats = core.hbm_stats().expect("event-driven session has an HBM image");
     println!(
         "HBM image: {} synapse rows, packing density {:.2}",
-        core.hbm.image.stats.synapse_rows, core.hbm.image.stats.packing_density
+        stats.synapse_rows, stats.packing_density
     );
 
     let alpha = keys.axon("alpha").unwrap();
@@ -54,6 +58,7 @@ fn main() -> Result<()> {
             .iter()
             .map(|&i| keys.neuron_keys[i as usize].as_str())
             .collect();
+        drop(out);
         let pots = core.read_membrane(&[a, bn]);
         println!("t={t}: outputs fired {fired:?}, V(a)={}, V(b)={}", pots[0], pots[1]);
     }

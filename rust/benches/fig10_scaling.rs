@@ -10,11 +10,12 @@
 //! family ordering of per-neuron cost.
 
 use hiaer_spike::harness::{self, models_dir};
-use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::sim::SimOptions;
 use hiaer_spike::util::stats::linear_fit;
 
 fn main() {
     let dir = models_dir();
+    let opts = SimOptions::default();
     let entries = match harness::load_manifest(&dir) {
         Ok(e) => e,
         Err(e) => {
@@ -41,7 +42,7 @@ fn main() {
         let mut members: Vec<_> = entries.iter().filter(|e| pred(&e.name)).collect();
         members.sort_by_key(|e| e.params);
         for e in members {
-            match harness::evaluate_model(&dir, e, 100, SlotStrategy::BalanceFanIn) {
+            match harness::evaluate_model(&dir, e, 100, &opts) {
                 Ok(r) => {
                     println!(
                         "  {:<12} {:>9} {:>13.2} {:>13.2}",

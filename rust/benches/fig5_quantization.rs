@@ -4,10 +4,11 @@
 //! match exactly; float-vs-quantized shows the quantization cost.
 
 use hiaer_spike::harness::{self, models_dir};
-use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::sim::SimOptions;
 
 fn main() {
     let dir = models_dir();
+    let opts = SimOptions::default();
     let entries = match harness::load_manifest(&dir) {
         Ok(e) => e,
         Err(e) => {
@@ -26,7 +27,7 @@ fn main() {
     println!("{}", "-".repeat(68));
     let mut series = Vec::new();
     for e in &gest {
-        match harness::evaluate_model(&dir, e, usize::MAX, SlotStrategy::BalanceFanIn) {
+        match harness::evaluate_model(&dir, e, usize::MAX, &opts) {
             Ok(r) => {
                 println!(
                     "{:<12} {:>9} {:>9} {:>11.2} {:>11.2} {:>10.2}",

@@ -4,9 +4,11 @@
 //!    run on (a) a faithful replica of the pre-refactor hot path (O(N)
 //!    scalar spike scan + split target/weight event arrays) and (b) the
 //!    CSR + bitmask engine, plus the membrane-sweep rate alone (branch-
-//!    free kernel, scalar and chunk-parallel via `CorePool`) — one record
+//!    free kernel, scalar and chunk-parallel via `Backend::Pool`) — one record
 //!    per run is **appended** to the `BENCH_hotpath.json` trajectory at
-//!    the repo root (override with BENCH_OUT, label with BENCH_PR);
+//!    the repo root (override with BENCH_OUT, label with BENCH_PR); the
+//!    chunk-parallel sweep rate is measured as idle `Backend::Pool`
+//!    facade steps (sweep + empty route) since PR 3;
 //! 1. event-driven core engine steps/s across network sizes (rust
 //!    backend), synaptic events/s;
 //! 2. dense software-simulator baseline (the paper's Fig-8 CPU
@@ -21,14 +23,24 @@
 
 use std::time::Instant;
 
-use hiaer_spike::cluster::{CorePool, MultiCoreEngine};
-use hiaer_spike::engine::{mask_words, CoreEngine, CoreParams, DenseEngine, RustBackend, UpdateBackend};
+use hiaer_spike::energy::EnergyModel;
+use hiaer_spike::engine::{mask_words, CoreParams, RustBackend, UpdateBackend};
 use hiaer_spike::hbm::{HbmImage, HbmSim, Pointer, SlotStrategy};
-use hiaer_spike::partition::{ClusterTopology, CoreCapacity};
-use hiaer_spike::runtime::{Runtime, XlaBackend};
+use hiaer_spike::partition::CoreCapacity;
+use hiaer_spike::sim::{Backend, SimConfig, Simulator};
 use hiaer_spike::snn::{EdgeList, Network, NeuronModel, FLAG_LIF, FLAG_NOISE};
 use hiaer_spike::util::json::{obj, Json};
 use hiaer_spike::util::prng::{mix_seed, noise17, shift_noise, Xorshift32};
+
+/// Drive an engine `steps` ticks under the standard burst stimulus and
+/// return steps/s (the bench's common inner loop over the facade).
+fn rate(sim: &mut dyn Simulator, steps: usize, n_axons: usize) -> f64 {
+    let t0 = Instant::now();
+    for s in 0..steps {
+        sim.step(&drive(s, n_axons)).unwrap();
+    }
+    steps as f64 / t0.elapsed().as_secs_f64()
+}
 
 /// Random net: n neurons, avg degree d, theta tuned for sustained sparse
 /// activity from periodic axon drive. `hubs` adds heavy-fan-in targets
@@ -210,21 +222,22 @@ fn main() {
     }
     let legacy_rate = steps as f64 / t0.elapsed().as_secs_f64();
 
-    let mut e = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap();
-    let t0 = Instant::now();
-    for s in 0..steps {
-        e.step(&drive(s, net.n_axons())).unwrap();
-    }
-    let new_rate = steps as f64 / t0.elapsed().as_secs_f64();
-    let events_per_s = e.counters().events as f64 * new_rate / steps as f64;
-    assert_eq!(legacy.v, e.v, "legacy replica and CSR engine must stay bit-exact");
+    let mut e = SimConfig::new(net.clone()).backend(Backend::Rust).build().unwrap();
+    let new_rate = rate(&mut *e, steps, net.n_axons());
+    let events_per_s = e.cost(&EnergyModel::default()).events as f64 * new_rate / steps as f64;
+    let all_ids: Vec<u32> = (0..hn as u32).collect();
+    assert_eq!(
+        legacy.v,
+        e.read_membrane(&all_ids),
+        "legacy replica and CSR engine must stay bit-exact"
+    );
     let speedup = new_rate / legacy_rate;
     println!("  legacy hot path : {legacy_rate:>10.0} steps/s");
     println!("  csr + bitmask   : {new_rate:>10.0} steps/s   ({speedup:.2}x)");
 
     // membrane-sweep rate alone (phases 1-3, branch-free kernel) on the
     // same n=100k params: single-threaded, then chunk-parallel across the
-    // CorePool workers
+    // pool-backend workers
     let params = CoreParams::from_network(&net);
     let mut sweep_v = vec![0i32; hn];
     let mut sweep_words = vec![0u64; mask_words(hn)];
@@ -235,11 +248,12 @@ fn main() {
             .unwrap();
     }
     let sweep_rate = steps as f64 / t0.elapsed().as_secs_f64();
-    let mut pool =
-        CorePool::new(vec![CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap()]);
+    let mut pool = SimConfig::new(net.clone()).backend(Backend::Pool).build().unwrap();
     let t0 = Instant::now();
     for _ in 0..steps {
-        pool.phase_update().unwrap();
+        // idle tick: nothing fires in this net without drive, so a pool
+        // step is the chunk-parallel sweep plus an empty route phase
+        pool.step(&[]).unwrap();
     }
     let sweep_chunked_rate = steps as f64 / t0.elapsed().as_secs_f64();
     drop(pool);
@@ -285,6 +299,10 @@ fn main() {
         ("events_per_s", Json::Num(events_per_s)),
         ("sweep_steps_per_s", Json::Num(sweep_rate)),
         ("sweep_chunked_steps_per_s", Json::Num(sweep_chunked_rate)),
+        // semantics marker: since PR 3 the chunk-parallel number is an
+        // idle facade step (sweep + empty route), not phase_update alone
+        // — a cross-PR-3 diff of this key is not apples-to-apples
+        ("sweep_chunked_measure", Json::Str("idle-pool-step".into())),
     ]));
     let n_records = records.len();
     let doc = obj(vec![
@@ -309,20 +327,16 @@ fn main() {
     println!("{:>8} {:>6} {:>12} {:>14} {:>12}", "neurons", "deg", "steps/s", "events/s", "rows/step");
     for &(n, d) in &[(1_000, 16), (10_000, 16), (50_000, 16), (100_000, 8)] {
         let net = make_net(n, d, 42, false);
-        let mut e = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap();
-        let t0 = Instant::now();
-        for s in 0..steps {
-            e.step(&drive(s, net.n_axons())).unwrap();
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        let c = e.counters();
+        let mut e = SimConfig::new(net.clone()).backend(Backend::Rust).build().unwrap();
+        let steps_per_s = rate(&mut *e, steps, net.n_axons());
+        let c = e.cost(&EnergyModel::default());
         println!(
             "{:>8} {:>6} {:>12.0} {:>14.0} {:>12.1}",
             n,
             d,
-            steps as f64 / dt,
-            c.events as f64 / dt,
-            c.hbm_rows() as f64 / steps as f64
+            steps_per_s,
+            c.events as f64 * steps_per_s / steps as f64,
+            c.hbm_rows as f64 / steps as f64
         );
     }
 
@@ -331,19 +345,10 @@ fn main() {
     println!("{:>8} {:>12} {:>16}", "neurons", "steps/s", "vs event-driven");
     for &(n, d) in &[(1_000, 16), (10_000, 16)] {
         let net = make_net(n, d, 42, false);
-        let mut ev = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap();
-        let t0 = Instant::now();
-        for s in 0..steps {
-            ev.step(&drive(s, net.n_axons())).unwrap();
-        }
-        let ev_rate = steps as f64 / t0.elapsed().as_secs_f64();
-        let mut de = DenseEngine::new(&net);
-        let t0 = Instant::now();
-        let dense_steps = steps.min(100);
-        for s in 0..dense_steps {
-            de.step(&drive(s, net.n_axons()));
-        }
-        let de_rate = dense_steps as f64 / t0.elapsed().as_secs_f64();
+        let mut ev = SimConfig::new(net.clone()).backend(Backend::Rust).build().unwrap();
+        let ev_rate = rate(&mut *ev, steps, net.n_axons());
+        let mut de = SimConfig::new(net.clone()).backend(Backend::Dense).build().unwrap();
+        let de_rate = rate(&mut *de, steps.min(100), net.n_axons());
         println!("{:>8} {:>12.0} {:>15.1}x", n, de_rate, ev_rate / de_rate);
     }
 
@@ -351,18 +356,14 @@ fn main() {
     println!("\n[3] HBM packing ablation (50k neurons, hub-heavy fan-in)");
     let net = make_net(50_000, 12, 7, true);
     for strat in [SlotStrategy::Modulo, SlotStrategy::BalanceFanIn] {
-        let mut e = CoreEngine::new(&net, strat, RustBackend).unwrap();
-        let t0 = Instant::now();
-        for s in 0..steps {
-            e.step(&drive(s, net.n_axons())).unwrap();
-        }
-        let dt = t0.elapsed().as_secs_f64();
+        let mut e = SimConfig::new(net.clone()).strategy(strat).build().unwrap();
+        let steps_per_s = rate(&mut *e, steps, net.n_axons());
         println!(
             "  {:?}: density {:.3}, rows/step {:.1}, steps/s {:.0}",
             strat,
-            e.hbm.image.stats.packing_density,
-            e.counters().hbm_rows() as f64 / steps as f64,
-            steps as f64 / dt
+            e.hbm_stats().expect("hbm image").packing_density,
+            e.cost(&EnergyModel::default()).hbm_rows as f64 / steps as f64,
+            steps_per_s
         );
     }
 
@@ -373,29 +374,18 @@ fn main() {
         if dir.join("neuron_update_n16384.hlo.txt").exists() {
             let net = make_net(10_000, 16, 42, false);
             let xla_steps = steps.min(100);
-            match Runtime::cpu(&dir).map(std::sync::Arc::new).and_then(|rt| {
-                let backend = XlaBackend::new(rt, net.n_neurons())?;
-                CoreEngine::new(&net, SlotStrategy::BalanceFanIn, backend)
-            }) {
+            match SimConfig::new(net.clone())
+                .backend(Backend::Xla)
+                .artifacts(&dir)
+                .build()
+            {
                 Ok(mut e) => {
-                    let t0 = Instant::now();
-                    for s in 0..xla_steps {
-                        e.step(&drive(s, net.n_axons())).unwrap();
-                    }
-                    let dt = t0.elapsed().as_secs_f64();
-                    println!("  xla backend:  {:.0} steps/s", xla_steps as f64 / dt);
+                    println!("  xla backend:  {:.0} steps/s", rate(&mut *e, xla_steps, net.n_axons()));
                 }
                 Err(e) => println!("  xla backend unavailable: {e:#}"),
             }
-            let mut e = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap();
-            let t0 = Instant::now();
-            for s in 0..steps {
-                e.step(&drive(s, net.n_axons())).unwrap();
-            }
-            println!(
-                "  rust backend: {:.0} steps/s",
-                steps as f64 / t0.elapsed().as_secs_f64()
-            );
+            let mut e = SimConfig::new(net.clone()).backend(Backend::Rust).build().unwrap();
+            println!("  rust backend: {:.0} steps/s", rate(&mut *e, steps, net.n_axons()));
         } else {
             println!("  (skipped: run `make artifacts` first)");
         }
@@ -409,19 +399,14 @@ fn main() {
     println!("\n[5] multi-core wall-clock scaling (100k neurons, clustered: 95% local)");
     let net = make_clustered_net(100_000, 8, 6_250, 0.95, 11);
     for cores in [1usize, 2, 4, 8, 16] {
-        let topo = ClusterTopology { servers: 1, fpgas_per_server: 1, cores_per_fpga: cores };
         let cap = CoreCapacity {
             max_neurons: net.n_neurons().div_ceil(cores),
             max_synapses: usize::MAX,
         };
-        match MultiCoreEngine::new(&net, topo, cap, SlotStrategy::BalanceFanIn) {
+        match SimConfig::new(net.clone()).topology(1, 1, cores).capacity(cap).build() {
             Ok(mut mc) => {
-                let t0 = Instant::now();
-                for s in 0..steps.min(100) {
-                    mc.step(&drive(s, net.n_axons())).unwrap();
-                }
-                let dt = t0.elapsed().as_secs_f64();
-                println!("  {cores:>2} cores: {:>8.0} steps/s", steps.min(100) as f64 / dt);
+                let r = rate(&mut *mc, steps.min(100), net.n_axons());
+                println!("  {cores:>2} cores: {r:>8.0} steps/s");
             }
             Err(e) => println!("  {cores:>2} cores: {e:#}"),
         }

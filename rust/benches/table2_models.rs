@@ -14,10 +14,11 @@
 use std::time::Instant;
 
 use hiaer_spike::harness::{self, models_dir};
-use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::sim::SimOptions;
 
 fn main() {
     let dir = models_dir();
+    let opts = SimOptions::default();
     let entries = match harness::load_manifest(&dir) {
         Ok(e) => e,
         Err(e) => {
@@ -40,7 +41,7 @@ fn main() {
         if e.task == "pong" {
             continue; // Table-2 Pong row = mean score; see `cargo run --example dvs_pong`
         }
-        match harness::evaluate_model(&dir, e, samples, SlotStrategy::BalanceFanIn) {
+        match harness::evaluate_model(&dir, e, samples, &opts) {
             Ok(r) => {
                 harness::print_row(e, &r);
                 total_inferences += r.n_samples;

@@ -6,7 +6,7 @@
 //! constants, not measurements of this substrate.
 
 use hiaer_spike::harness::{self, models_dir};
-use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::sim::SimOptions;
 
 struct PlatformRow {
     system: &'static str,
@@ -18,6 +18,7 @@ struct PlatformRow {
 
 fn main() {
     let dir = models_dir();
+    let opts = SimOptions::default();
     let entries = match harness::load_manifest(&dir) {
         Ok(e) => e,
         Err(e) => {
@@ -33,7 +34,7 @@ fn main() {
     let samples = usize::MAX;
     let mut results = Vec::new();
     for e in &mnist {
-        match harness::evaluate_model(&dir, e, samples, SlotStrategy::BalanceFanIn) {
+        match harness::evaluate_model(&dir, e, samples, &opts) {
             Ok(r) => results.push((e, r)),
             Err(err) => eprintln!("{}: {err:#}", e.name),
         }

@@ -4,10 +4,11 @@
 //! paper cites ([17], [18], [19]).
 
 use hiaer_spike::harness::{self, models_dir};
-use hiaer_spike::hbm::SlotStrategy;
+use hiaer_spike::sim::SimOptions;
 
 fn main() {
     let dir = models_dir();
+    let opts = SimOptions::default();
     let entries = match harness::load_manifest(&dir) {
         Ok(e) => e,
         Err(e) => {
@@ -22,7 +23,7 @@ fn main() {
     }
     let mut results = Vec::new();
     for e in &gest {
-        match harness::evaluate_model(&dir, e, usize::MAX, SlotStrategy::BalanceFanIn) {
+        match harness::evaluate_model(&dir, e, usize::MAX, &opts) {
             Ok(r) => results.push((e, r)),
             Err(err) => eprintln!("{}: {err:#}", e.name),
         }

@@ -13,10 +13,8 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::{Context, Result};
 
 use crate::energy::EnergyModel;
-use crate::hbm::SlotStrategy;
 use crate::model_fmt::read_hsn;
-use crate::cluster::multicore::MultiCoreEngine;
-use crate::partition::{ClusterTopology, CoreCapacity};
+use crate::sim::{SimOptions, Simulator};
 
 #[derive(Clone, Debug)]
 pub struct Job {
@@ -24,7 +22,8 @@ pub struct Job {
     pub net_path: PathBuf,
     /// per-step axon activations (ascending ids per step)
     pub stimulus: Vec<Vec<u32>>,
-    pub topology: ClusterTopology,
+    /// deployment choices (topology, backend, strategy, seed)
+    pub options: SimOptions,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -68,22 +67,13 @@ pub fn parse_stimulus(text: &str) -> Result<Vec<Vec<u32>>> {
     Ok(steps)
 }
 
-/// Execute one job synchronously.
+/// Execute one job synchronously through the [`Simulator`] facade.
 pub fn run_job(job: &Job, energy: &EnergyModel) -> JobResult {
     let inner = || -> Result<(Vec<Vec<u32>>, f64, f64)> {
         let net = read_hsn(&job.net_path)?;
-        let mut engine = MultiCoreEngine::new(
-            &net,
-            job.topology,
-            CoreCapacity::default(),
-            SlotStrategy::BalanceFanIn,
-        )?;
-        let mut spikes = Vec::with_capacity(job.stimulus.len());
-        for axons in &job.stimulus {
-            spikes.push(engine.step(axons)?.to_vec());
-        }
-        let cost = engine.cost(energy);
-        Ok((spikes, cost.energy_uj, cost.latency_us))
+        let mut sim = job.options.clone().into_config(net).build()?;
+        let rec = sim.run(&job.stimulus, energy)?;
+        Ok((rec.spikes, rec.cost.energy_uj, rec.cost.latency_us))
     };
     match inner() {
         Ok((spikes, e, l)) => JobResult {
@@ -226,7 +216,7 @@ mod tests {
             // axon fires at t0: x gets +1 (integrated at end of t0),
             // x spikes during t1 (1 > 0), y integrates, y spikes at t2
             stimulus: vec![vec![0], vec![], vec![]],
-            topology: ClusterTopology::single_core(),
+            options: SimOptions::default(),
         };
         let r = run_job(&job, &EnergyModel::default());
         std::fs::remove_file(&p).ok();
@@ -244,7 +234,7 @@ mod tests {
                 id,
                 net_path: if id == 3 { PathBuf::from("/nonexistent.hsn") } else { p.clone() },
                 stimulus: vec![vec![0], vec![]],
-                topology: ClusterTopology::single_core(),
+                options: SimOptions::default(),
             });
         }
         let results = q.drain();

@@ -48,6 +48,8 @@ pub struct MultiCoreEngine {
     /// scratch: per-core fired global ids / merged axon inputs
     fired_by_core: Vec<Vec<u32>>,
     merged_axons: Vec<Vec<u32>>,
+    /// all fired global ids this step, ascending (facade `fired()`)
+    fired_global: Vec<u32>,
     out_global: Vec<u32>,
     /// wall-clock accumulators [update, gather+route, accumulate] —
     /// exposed for the perf harness.
@@ -55,11 +57,16 @@ pub struct MultiCoreEngine {
 }
 
 impl MultiCoreEngine {
-    pub fn new(
+    /// Crate-private: external callers construct clusters through
+    /// [`crate::sim::SimConfig`] with a multi-core topology.
+    /// `chunk_words` overrides the worker pool's sweep-chunk granularity
+    /// (`None` = engine default).
+    pub(crate) fn new(
         net: &Network,
         topology: ClusterTopology,
         cap: CoreCapacity,
         strategy: SlotStrategy,
+        chunk_words: Option<usize>,
     ) -> Result<Self> {
         let partition =
             Partition::compute(net, topology, cap).map_err(anyhow::Error::msg)?;
@@ -72,11 +79,15 @@ impl MultiCoreEngine {
         let n_cores = cores.len();
         Ok(Self {
             global_of: partition.members.clone(),
-            pool: CorePool::new(cores),
+            pool: match chunk_words {
+                Some(w) => CorePool::with_chunk_words(cores, w),
+                None => CorePool::new(cores),
+            },
             partition,
             router,
             fired_by_core: vec![Vec::new(); n_cores],
             merged_axons: vec![Vec::new(); n_cores],
+            fired_global: Vec::new(),
             out_global: Vec::new(),
             phase_wall: [std::time::Duration::ZERO; 3],
         })
@@ -91,6 +102,8 @@ impl MultiCoreEngine {
             self.pool.core_mut(c).reset();
         }
         self.router.reset_stats();
+        self.fired_global.clear();
+        self.out_global.clear();
     }
 
     pub fn reset_cost(&mut self) {
@@ -130,6 +143,11 @@ impl MultiCoreEngine {
             buf.clear();
             buf.extend(self.pool.core(c).fired().iter().map(|&l| g[l as usize]));
         }
+        self.fired_global.clear();
+        for buf in &self.fired_by_core {
+            self.fired_global.extend_from_slice(buf);
+        }
+        self.fired_global.sort_unstable();
 
         // ---- barrier: HiAER multicast
         let pending = self.router.route_step(&self.fired_by_core, axon_inputs);
@@ -188,6 +206,83 @@ impl MultiCoreEngine {
             hbm_rows: rows,
             router: self.router.stats,
         }
+    }
+}
+
+// ---- facade adapter -------------------------------------------------------
+
+use crate::sim::{CostSummary, SimError, Simulator, StepResult};
+
+/// The partitioned cluster as a [`Simulator`] session: selected by the
+/// facade when [`crate::sim::Backend::Rust`] meets a multi-core
+/// topology. All ids at this surface are global; fired ids are merged
+/// and sorted across cores each step.
+impl Simulator for MultiCoreEngine {
+    fn step(&mut self, axon_in: &[u32]) -> Result<StepResult<'_>, SimError> {
+        // uniform facade contract: bad stimulus is SimError::Stimulus on
+        // every backend (the inherent step's own range bail! would reach
+        // callers as SimError::Engine)
+        crate::sim::check_axons(axon_in, self.router.table.axon_routes.len())?;
+        MultiCoreEngine::step(self, axon_in)?;
+        Ok(StepResult { fired: &self.fired_global, output_spikes: &self.out_global })
+    }
+
+    fn fired(&self) -> &[u32] {
+        &self.fired_global
+    }
+
+    fn output_spikes(&self) -> &[u32] {
+        &self.out_global
+    }
+
+    fn reset(&mut self) {
+        MultiCoreEngine::reset(self);
+    }
+
+    fn reset_cost(&mut self) {
+        MultiCoreEngine::reset_cost(self);
+    }
+
+    fn read_membrane(&self, ids: &[u32]) -> Vec<i32> {
+        MultiCoreEngine::read_membrane(self, ids)
+    }
+
+    fn cost(&self, model: &EnergyModel) -> CostSummary {
+        let c = MultiCoreEngine::cost(self, model);
+        let mut events = 0u64;
+        let mut max_cycles = 0u64;
+        for i in 0..self.pool.len() {
+            events += self.pool.core(i).counters().events;
+            max_cycles = max_cycles.max(self.pool.core(i).cycles);
+        }
+        CostSummary {
+            energy_uj: c.energy_uj,
+            latency_us: c.latency_us,
+            hbm_rows: c.hbm_rows,
+            events,
+            cycles: max_cycles + self.router.stats.cycles,
+            router: Some(c.router),
+        }
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn n_neurons(&self) -> usize {
+        self.partition.core_of.len()
+    }
+
+    fn n_axons(&self) -> usize {
+        self.router.table.axon_routes.len()
+    }
+
+    fn n_cores(&self) -> usize {
+        self.pool.len()
+    }
+
+    fn placement(&self) -> Option<&Partition> {
+        Some(&self.partition)
     }
 }
 
@@ -253,7 +348,7 @@ mod tests {
                 max_neurons: (n / 3).max(4),
                 max_synapses: usize::MAX,
             };
-            let mut cluster = MultiCoreEngine::new(&net, topo, cap, SlotStrategy::Modulo)
+            let mut cluster = MultiCoreEngine::new(&net, topo, cap, SlotStrategy::Modulo, None)
                 .map_err(|e| e.to_string())?;
             // per-core base seeds differ but deterministic nets ignore them
             let mut dense = DenseEngine::new(&net);
@@ -286,7 +381,8 @@ mod tests {
         let net = deterministic_net(&mut rng, 80, 6);
         let topo = ClusterTopology { servers: 1, fpgas_per_server: 2, cores_per_fpga: 2 };
         let cap = CoreCapacity { max_neurons: 25, max_synapses: usize::MAX };
-        let mut cluster = MultiCoreEngine::new(&net, topo, cap, SlotStrategy::Modulo).unwrap();
+        let mut cluster =
+            MultiCoreEngine::new(&net, topo, cap, SlotStrategy::Modulo, None).unwrap();
         let axons: Vec<u32> = (0..net.n_axons() as u32).collect();
         for _ in 0..5 {
             cluster.step(&axons).unwrap();

@@ -144,14 +144,18 @@ pub struct CorePool<B: UpdateBackend = RustBackend> {
 }
 
 impl<B: UpdateBackend + Send + 'static> CorePool<B> {
-    pub fn new(cores_in: Vec<CoreEngine<B>>) -> Self {
+    /// Crate-private: external callers reach the pool through
+    /// [`crate::sim::SimConfig`] with [`crate::sim::Backend::Pool`] (or
+    /// implicitly through the multi-core cluster engine).
+    pub(crate) fn new(cores_in: Vec<CoreEngine<B>>) -> Self {
         Self::with_chunk_words(cores_in, DEFAULT_CHUNK_WORDS)
     }
 
     /// Build the pool with an explicit sweep-chunk granularity (in 64-bit
-    /// spike words, i.e. 64-neuron units). Exposed for tests and perf
-    /// experiments; `new` uses [`DEFAULT_CHUNK_WORDS`].
-    pub fn with_chunk_words(mut cores_in: Vec<CoreEngine<B>>, chunk_words: usize) -> Self {
+    /// spike words, i.e. 64-neuron units). Exposed crate-internally for
+    /// tests and perf experiments (`SimConfig::chunk_words` is the public
+    /// knob); `new` uses [`DEFAULT_CHUNK_WORDS`].
+    pub(crate) fn with_chunk_words(mut cores_in: Vec<CoreEngine<B>>, chunk_words: usize) -> Self {
         let chunk_words = chunk_words.max(1);
         let n = cores_in.len();
         let mut cores: Vec<Box<CoreEngine<B>>> = cores_in.drain(..).map(Box::new).collect();
@@ -286,6 +290,91 @@ impl<B: UpdateBackend> CorePool<B> {
             }
         }
         self.run_phase(Phase::Route)
+    }
+}
+
+// ---- facade adapter -------------------------------------------------------
+
+use crate::energy::EnergyModel;
+use crate::hbm::SlotStrategy;
+use crate::sim::{CostSummary, SimError, Simulator, StepResult};
+use crate::snn::Network;
+
+/// [`Simulator`] session running one core chunk-parallel across the
+/// whole worker pool ([`crate::sim::Backend::Pool`]): the membrane
+/// sweep of a single (possibly huge) core spreads over up to
+/// `available_parallelism` workers, while routing stays on one engine.
+pub struct PoolSim {
+    pool: CorePool<RustBackend>,
+    /// reusable one-slot input buffer for `phase_route`
+    inputs: Vec<Vec<u32>>,
+    n_axons: usize,
+}
+
+impl PoolSim {
+    pub(crate) fn new(
+        net: &Network,
+        strategy: SlotStrategy,
+        chunk_words: Option<usize>,
+    ) -> anyhow::Result<Self> {
+        let engine = CoreEngine::new(net, strategy, RustBackend)?;
+        let pool = match chunk_words {
+            Some(w) => CorePool::with_chunk_words(vec![engine], w),
+            None => CorePool::new(vec![engine]),
+        };
+        Ok(Self { pool, inputs: vec![Vec::new()], n_axons: net.n_axons() })
+    }
+}
+
+impl Simulator for PoolSim {
+    fn step(&mut self, axon_in: &[u32]) -> Result<StepResult<'_>, SimError> {
+        crate::sim::check_axons(axon_in, self.n_axons)?;
+        self.inputs[0].clear();
+        self.inputs[0].extend_from_slice(axon_in);
+        self.pool.phase_update()?;
+        self.pool.phase_route(&self.inputs)?;
+        let core = self.pool.core(0);
+        Ok(StepResult { fired: core.fired(), output_spikes: core.output_spikes() })
+    }
+
+    fn fired(&self) -> &[u32] {
+        self.pool.core(0).fired()
+    }
+
+    fn output_spikes(&self) -> &[u32] {
+        self.pool.core(0).output_spikes()
+    }
+
+    fn reset(&mut self) {
+        self.pool.core_mut(0).reset();
+    }
+
+    fn reset_cost(&mut self) {
+        self.pool.core_mut(0).reset_cost();
+    }
+
+    fn read_membrane(&self, ids: &[u32]) -> Vec<i32> {
+        self.pool.core(0).read_membrane(ids)
+    }
+
+    fn cost(&self, model: &EnergyModel) -> CostSummary {
+        self.pool.core(0).cost(model).into()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pool"
+    }
+
+    fn n_neurons(&self) -> usize {
+        self.pool.core(0).n_neurons()
+    }
+
+    fn n_axons(&self) -> usize {
+        self.n_axons
+    }
+
+    fn hbm_stats(&self) -> Option<crate::hbm::LayoutStats> {
+        Some(self.pool.core(0).hbm.image.stats)
     }
 }
 

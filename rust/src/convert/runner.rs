@@ -11,12 +11,9 @@
 //! Energy/latency are per inference (counters reset before each sample),
 //! exactly the paper's Table-2 accounting.
 
-use anyhow::Result;
-
 use super::Converted;
-use crate::energy::{CostReport, EnergyModel};
-use crate::engine::backend::UpdateBackend;
-use crate::engine::CoreEngine;
+use crate::energy::EnergyModel;
+use crate::sim::{CostSummary, SimError, Simulator};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Readout {
@@ -28,21 +25,23 @@ pub enum Readout {
 #[derive(Clone, Debug)]
 pub struct Inference {
     pub prediction: usize,
-    pub cost: CostReport,
+    pub cost: CostSummary,
     /// per-output spike counts (Rate) or membrane (Membrane)
     pub scores: Vec<i64>,
 }
 
-/// Run one sample. `frames[t]` = active input-axon ids presented at step
-/// t (ascending). `layers` = pipeline depth of the converted graph.
-pub fn run_inference<B: UpdateBackend>(
-    engine: &mut CoreEngine<B>,
+/// Run one sample on any [`Simulator`] session (the engine is reset and
+/// reused — build it once per model, not per sample). `frames[t]` =
+/// active input-axon ids presented at step t (ascending). `layers` =
+/// pipeline depth of the converted graph.
+pub fn run_inference<S: Simulator + ?Sized>(
+    engine: &mut S,
     conv: &Converted,
     frames: &[Vec<u32>],
     layers: usize,
     readout: Readout,
     energy: &EnergyModel,
-) -> Result<Inference> {
+) -> Result<Inference, SimError> {
     engine.reset();
     let t_frames = frames.len();
     let total_steps = match readout {
@@ -96,7 +95,7 @@ pub fn run_inference<B: UpdateBackend>(
 mod tests {
     use super::*;
     use crate::convert::{convert, BiasMode};
-    use crate::engine::RustBackend;
+    use crate::engine::{CoreEngine, RustBackend};
     use crate::hbm::SlotStrategy;
     use crate::model_fmt::{Layer, LayerGraph, NeuronKind};
 

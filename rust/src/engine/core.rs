@@ -75,12 +75,14 @@ pub struct CoreEngine<B: UpdateBackend> {
 }
 
 impl<B: UpdateBackend> CoreEngine<B> {
-    pub fn new(net: &Network, strategy: SlotStrategy, backend: B) -> anyhow::Result<Self> {
+    /// Crate-private: external callers construct engines through
+    /// [`crate::sim::SimConfig`] (the facade is the public contract).
+    pub(crate) fn new(net: &Network, strategy: SlotStrategy, backend: B) -> anyhow::Result<Self> {
         let image = HbmImage::compile(net, strategy)?;
         Ok(Self::from_image(net, image, backend))
     }
 
-    pub fn from_image(net: &Network, image: HbmImage, backend: B) -> Self {
+    pub(crate) fn from_image(net: &Network, image: HbmImage, backend: B) -> Self {
         let n = net.n_neurons();
         let mut is_output = vec![false; n];
         for &o in &net.outputs {
@@ -111,6 +113,11 @@ impl<B: UpdateBackend> CoreEngine<B> {
     pub fn reset(&mut self) {
         self.v.iter_mut().for_each(|x| *x = 0);
         self.step_num = 0;
+        // clear last-step spike views too: after reset, fired() /
+        // output_spikes() report the (empty) initial state on every
+        // backend (facade contract)
+        self.fired_buf.clear();
+        self.out_buf.clear();
         self.reset_cost();
     }
 
@@ -250,6 +257,61 @@ impl<B: UpdateBackend> CoreEngine<B> {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+}
+
+// ---- facade adapter -------------------------------------------------------
+
+use crate::sim::{CostSummary, SimError, Simulator, StepResult};
+
+/// The event-driven core as a [`Simulator`] session (backends `rust`
+/// and `xla` of the facade). Inherent methods keep precedence for
+/// in-crate callers; external code only sees the trait surface.
+impl<B: UpdateBackend> Simulator for CoreEngine<B> {
+    fn step(&mut self, axon_in: &[u32]) -> Result<StepResult<'_>, SimError> {
+        crate::sim::check_axons(axon_in, self.hbm.image.axon_ptr_row.len())?;
+        CoreEngine::step(self, axon_in)?;
+        Ok(StepResult { fired: &self.fired_buf, output_spikes: &self.out_buf })
+    }
+
+    fn fired(&self) -> &[u32] {
+        &self.fired_buf
+    }
+
+    fn output_spikes(&self) -> &[u32] {
+        &self.out_buf
+    }
+
+    fn reset(&mut self) {
+        CoreEngine::reset(self);
+    }
+
+    fn reset_cost(&mut self) {
+        CoreEngine::reset_cost(self);
+    }
+
+    fn read_membrane(&self, ids: &[u32]) -> Vec<i32> {
+        CoreEngine::read_membrane(self, ids)
+    }
+
+    fn cost(&self, model: &EnergyModel) -> CostSummary {
+        CoreEngine::cost(self, model).into()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    fn n_neurons(&self) -> usize {
+        self.v.len()
+    }
+
+    fn n_axons(&self) -> usize {
+        self.hbm.image.axon_ptr_row.len()
+    }
+
+    fn hbm_stats(&self) -> Option<crate::hbm::LayoutStats> {
+        Some(self.hbm.image.stats)
     }
 }
 

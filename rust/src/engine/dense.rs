@@ -28,7 +28,9 @@ pub struct DenseEngine {
 }
 
 impl DenseEngine {
-    pub fn new(net: &Network) -> Self {
+    /// Crate-private: external callers construct engines through
+    /// [`crate::sim::SimConfig`] with [`crate::sim::Backend::Dense`].
+    pub(crate) fn new(net: &Network) -> Self {
         let n = net.n_neurons();
         let a = net.n_axons();
         let mut w_neuron = vec![0i32; n * n];
@@ -104,6 +106,94 @@ impl DenseEngine {
             .filter(|(_, &s)| s != 0)
             .map(|(i, _)| i as u32)
             .collect()
+    }
+}
+
+// ---- facade adapter -------------------------------------------------------
+
+use crate::energy::EnergyModel;
+use crate::sim::{CostSummary, SimError, Simulator, StepResult};
+
+/// [`Simulator`] session over the dense engine ([`crate::sim::Backend::Dense`]).
+/// Adds the fired-id / output-subset bookkeeping the facade contract
+/// requires; reports zero hardware cost (it is the software baseline).
+pub struct DenseSim {
+    engine: DenseEngine,
+    is_output: Vec<bool>,
+    n_axons: usize,
+    fired_buf: Vec<u32>,
+    out_buf: Vec<u32>,
+}
+
+impl DenseSim {
+    pub(crate) fn new(net: &Network) -> Self {
+        let mut is_output = vec![false; net.n_neurons()];
+        for &o in &net.outputs {
+            is_output[o as usize] = true;
+        }
+        Self {
+            engine: DenseEngine::new(net),
+            is_output,
+            n_axons: net.n_axons(),
+            fired_buf: Vec::new(),
+            out_buf: Vec::new(),
+        }
+    }
+}
+
+impl Simulator for DenseSim {
+    fn step(&mut self, axon_in: &[u32]) -> Result<StepResult<'_>, SimError> {
+        crate::sim::check_axons(axon_in, self.n_axons)?;
+        self.engine.step(axon_in);
+        self.fired_buf.clear();
+        self.out_buf.clear();
+        for (i, &s) in self.engine.spike_buf.iter().enumerate() {
+            if s != 0 {
+                self.fired_buf.push(i as u32);
+                if self.is_output[i] {
+                    self.out_buf.push(i as u32);
+                }
+            }
+        }
+        Ok(StepResult { fired: &self.fired_buf, output_spikes: &self.out_buf })
+    }
+
+    fn fired(&self) -> &[u32] {
+        &self.fired_buf
+    }
+
+    fn output_spikes(&self) -> &[u32] {
+        &self.out_buf
+    }
+
+    fn reset(&mut self) {
+        self.engine.reset();
+        self.fired_buf.clear();
+        self.out_buf.clear();
+    }
+
+    fn reset_cost(&mut self) {
+        // the software baseline counts no hardware accesses
+    }
+
+    fn read_membrane(&self, ids: &[u32]) -> Vec<i32> {
+        ids.iter().map(|&i| self.engine.v[i as usize]).collect()
+    }
+
+    fn cost(&self, _model: &EnergyModel) -> CostSummary {
+        CostSummary::default()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn n_neurons(&self) -> usize {
+        self.engine.n
+    }
+
+    fn n_axons(&self) -> usize {
+        self.n_axons
     }
 }
 

@@ -18,4 +18,4 @@ pub use backend::{
     RustBackend, UpdateBackend,
 };
 pub use core::{CoreEngine, StepOutput};
-pub use dense::DenseEngine;
+pub use dense::{DenseEngine, DenseSim};

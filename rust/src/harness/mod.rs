@@ -9,10 +9,9 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::convert::{convert, run_inference, BiasMode, Converted, Readout};
 use crate::energy::EnergyModel;
-use crate::engine::{CoreEngine, RustBackend};
-use crate::hbm::SlotStrategy;
 use crate::metrics::CostSeries;
 use crate::model_fmt::{hsl::read_hsl, read_hsd, LayerGraph, TestSet};
+use crate::sim::SimOptions;
 use crate::util::json::Json;
 
 /// One entry of models/manifest.json.
@@ -98,17 +97,19 @@ pub struct EvalResult {
     pub series: CostSeries,
 }
 
-/// Evaluate `name` on its `.hsd` test set (at most `max_samples`) with
-/// the event-driven HBM engine.
+/// Evaluate `name` on its `.hsd` test set (at most `max_samples`). The
+/// deployment (backend, topology, HBM strategy) comes from `opts`; one
+/// [`crate::sim::Simulator`] session is built per model and reused
+/// (reset between) across every sample.
 pub fn evaluate_model(
     models_dir: &Path,
     entry: &ModelEntry,
     max_samples: usize,
-    strategy: SlotStrategy,
+    opts: &SimOptions,
 ) -> Result<EvalResult> {
     let (graph, conv) = load_model(models_dir, &entry.name)?;
     let ts: TestSet = read_hsd(models_dir.join(format!("{}.hsd", entry.name)))?;
-    let mut engine = CoreEngine::new(&conv.net, strategy, RustBackend)?;
+    let mut engine = opts.clone().into_config(conv.net.clone()).build()?;
     let energy = EnergyModel::default();
     let layers = graph.layers.len();
 
@@ -116,7 +117,8 @@ pub fn evaluate_model(
     let mut correct = 0usize;
     let n = ts.samples.len().min(max_samples);
     for sample in &ts.samples[..n] {
-        let inf = run_inference(&mut engine, &conv, &sample.frames, layers, entry.readout, &energy)?;
+        let inf =
+            run_inference(&mut *engine, &conv, &sample.frames, layers, entry.readout, &energy)?;
         if inf.prediction == sample.label as usize {
             correct += 1;
         }

@@ -2,25 +2,39 @@
 //! neuromorphic computing at scale — full-system reproduction on a simulated
 //! FPGA substrate.
 //!
+//! **Start at [`sim`]** — the hardware-agnostic facade. A network is
+//! executed by building a [`sim::SimConfig`] (topology, HBM strategy,
+//! backend, seed) and driving the boxed [`sim::Simulator`] it returns;
+//! every engine below is reached through it and their constructors are
+//! crate-private.
+//!
 //! The crate is organised as the paper's stack:
 //!
+//! * [`sim`] — the unified `Simulator` session API: one backend-neutral
+//!   `step`/`run`/`run_many` surface over dense / event-driven / pooled /
+//!   clustered / XLA execution (paper §5's "interface agnostic to
+//!   hardware-level detail").
 //! * [`snn`] — network model primitives (axons, neurons, neuron models,
 //!   synapses) mirroring the `hs_api` Python interface; connectivity is
 //!   stored CSR (flat target/weight arrays + offset tables).
 //! * [`hbm`] — the per-core HBM synaptic routing table simulator
 //!   (16-slot segments, alignment-aware packing, access counting).
-//! * [`engine`] — single-core two-phase event-driven execution engine
-//!   ("grey matter").
+//! * [`engine`] — single-core execution engines ("grey matter"): the
+//!   two-phase event-driven core and the dense-matrix golden model,
+//!   plus the pluggable membrane-update backend kernels.
 //! * [`router`] — hierarchical address-event routing between cores, FPGAs
 //!   and servers ("white matter", HiAER levels: NoC / FireFly / Ethernet).
 //! * [`partition`] — network partitioning and resource allocation across
 //!   the cluster.
 //! * [`convert`] — PyTorch-style layer-graph → HiAER-Spike network
-//!   conversion (Supplementary A.2).
+//!   conversion (Supplementary A.2) and the inference runner.
 //! * [`runtime`] — PJRT/XLA runtime that loads the AOT-compiled JAX/Pallas
-//!   artifacts and executes the neuron-update hot path.
+//!   artifacts (behind the `pjrt` cargo feature; default builds compile
+//!   an offline stub).
 //! * [`cluster`] — multi-core / multi-FPGA / multi-server orchestration,
-//!   job queue and NSG-portal-like front end.
+//!   the persistent worker pool, job queue and NSG-portal-like front end.
+//! * [`harness`] — trained-model manifest loading and Table-2 style
+//!   evaluation on top of the facade.
 //! * [`energy`] — HBM-access energy and clock-cycle latency model.
 //! * [`util`] — substrate utilities written in-repo because the build is
 //!   fully offline (PRNG, JSON, CLI parsing, property testing).
@@ -36,5 +50,6 @@ pub mod model_fmt;
 pub mod partition;
 pub mod router;
 pub mod runtime;
+pub mod sim;
 pub mod snn;
 pub mod util;

@@ -7,24 +7,23 @@
 //!   serve   <spool-dir>               NSG-style job daemon (poll a dir)
 //!   bench-step <net.hsn>              steps/s of the hot loop
 //!
-//! Common options: --servers/--fpgas/--cores (topology), --steps,
-//! --seed, --strategy modulo|balance, --backend rust|xla,
-//! --artifacts <dir>.
+//! Every execution path goes through the unified `sim` facade: the
+//! shared deployment flags (--servers/--fpgas/--cores, --strategy,
+//! --backend, --seed, --artifacts) are parsed once by
+//! `SimOptions::from_args` and become a `SimConfig`.
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use hiaer_spike::cluster::{run_job, Job, JobQueue, JobStatus, MultiCoreEngine};
+use hiaer_spike::cluster::{run_job, Job, JobQueue, JobStatus};
 use hiaer_spike::cluster::parse_stimulus;
 use hiaer_spike::convert::{convert, BiasMode};
 use hiaer_spike::energy::EnergyModel;
-use hiaer_spike::engine::{CoreEngine, RustBackend};
-use hiaer_spike::hbm::{HbmImage, SlotStrategy};
+use hiaer_spike::hbm::HbmImage;
 use hiaer_spike::model_fmt::{hsl::read_hsl, read_hsn, write_hsn};
-use hiaer_spike::partition::{ClusterTopology, CoreCapacity};
-use hiaer_spike::runtime::{Runtime, XlaBackend};
+use hiaer_spike::sim::{Backend, SimConfig, SimOptions, Simulator};
 use hiaer_spike::util::cli::Args;
 
 fn main() {
@@ -63,46 +62,34 @@ fn print_help() {
            serve <spool-dir>               job daemon: runs <id>.job files\n\
            bench-step <net.hsn>            hot-loop steps/s\n\
          \n\
-         OPTIONS\n\
+         OPTIONS (shared deployment flags — any execution subcommand)\n\
            --servers N --fpgas N --cores N   topology (default 1/1/1)\n\
-           --steps N                         steps for bench-step (default 1000)\n\
            --strategy modulo|balance         HBM slot assignment (default balance)\n\
-           --bias threshold|axon             converter bias mode\n\
-           --backend rust|xla                membrane-update backend\n\
+           --backend dense|rust|pool|xla     execution backend (default rust;\n\
+                                             xla needs --features pjrt)\n\
+           --seed N                          override the network noise seed\n\
            --artifacts DIR                   AOT artifact dir (default artifacts/)\n\
+         \n\
+         OPTIONS (subcommand-specific)\n\
+           --steps N                         steps for bench-step (default 1000)\n\
+           --bias threshold|axon             converter bias mode\n\
            --workers N                       serve: parallel jobs (default 2)\n\
            --once                            serve: single spool pass, then exit"
     );
 }
 
-fn topology(args: &Args) -> Result<ClusterTopology> {
-    Ok(ClusterTopology {
-        servers: args.get_usize("servers", 1).map_err(|e| anyhow!(e))?,
-        fpgas_per_server: args.get_usize("fpgas", 1).map_err(|e| anyhow!(e))?,
-        cores_per_fpga: args.get_usize("cores", 1).map_err(|e| anyhow!(e))?,
-    })
-}
-
-fn strategy(args: &Args) -> Result<SlotStrategy> {
-    match args.get_or("strategy", "balance") {
-        "modulo" => Ok(SlotStrategy::Modulo),
-        "balance" => Ok(SlotStrategy::BalanceFanIn),
-        s => bail!("bad --strategy {s:?}"),
-    }
-}
-
 fn cmd_info(args: &Args) -> Result<()> {
     let path = args.positional.get(1).context("info: missing <net.hsn>")?;
     let net = read_hsn(path)?;
-    let strat = strategy(args)?;
-    let image = HbmImage::compile(&net, strat)?;
+    let opts = SimOptions::from_args(args)?;
+    let image = HbmImage::compile(&net, opts.strategy)?;
     println!("network {path}");
     println!("  neurons:  {}", net.n_neurons());
     println!("  axons:    {}", net.n_axons());
     println!("  synapses: {}", net.n_synapses());
     println!("  outputs:  {}", net.outputs.len());
     println!("  models:   {}", image.models.len());
-    println!("hbm layout ({strat:?})");
+    println!("hbm layout ({:?})", opts.strategy);
     println!("  synapse rows:    {}", image.stats.synapse_rows);
     println!("  packing density: {:.3}", image.stats.packing_density);
     println!("  dummy slots:     {}", image.stats.dummy_slots);
@@ -116,8 +103,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let stim_text =
         std::fs::read_to_string(stim_path).with_context(|| format!("reading {stim_path}"))?;
     let stimulus = parse_stimulus(&stim_text)?;
-    let topo = topology(args)?;
-    let job = Job { id: 0, net_path: PathBuf::from(net_path), stimulus, topology: topo };
+    let options = SimOptions::from_args(args)?;
+    let job = Job { id: 0, net_path: PathBuf::from(net_path), stimulus, options };
     let r = run_job(&job, &EnergyModel::default());
     match r.status {
         JobStatus::Done => {
@@ -140,7 +127,7 @@ fn cmd_convert(args: &Args) -> Result<()> {
     let bias = match args.get_or("bias", "threshold") {
         "threshold" => BiasMode::Threshold,
         "axon" => BiasMode::Axon,
-        s => bail!("bad --bias {s:?}"),
+        s => bail!("bad --bias {s:?} (options: threshold, axon)"),
     };
     let seed = args.get_u32("seed", 0).map_err(|e| anyhow!(e))?;
     let graph = read_hsl(hsl_path)?;
@@ -169,7 +156,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let spool = Path::new(spool);
     std::fs::create_dir_all(spool)?;
     let workers = args.get_usize("workers", 2).map_err(|e| anyhow!(e))?;
-    let topo = topology(args)?;
+    let options = SimOptions::from_args(args)?;
     let queue = JobQueue::start(workers, EnergyModel::default());
     println!("serving spool {} with {workers} workers", spool.display());
     let mut next_id = 0u64;
@@ -193,7 +180,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 id,
                 path.file_stem().unwrap_or_default().to_string_lossy().to_string(),
             );
-            queue.submit(Job { id, net_path: PathBuf::from(net_path), stimulus, topology: topo });
+            queue.submit(Job {
+                id,
+                net_path: PathBuf::from(net_path),
+                stimulus,
+                options: options.clone(),
+            });
             std::fs::rename(&path, path.with_extension("taken"))?;
             submitted = true;
         }
@@ -226,49 +218,40 @@ fn cmd_bench_step(args: &Args) -> Result<()> {
     let net_path = args.positional.get(1).context("bench-step: missing <net.hsn>")?;
     let steps = args.get_usize("steps", 1000).map_err(|e| anyhow!(e))?;
     let net = read_hsn(net_path)?;
-    let strat = strategy(args)?;
+    let opts = SimOptions::from_args(args)?;
     let axons: Vec<u32> = (0..net.n_axons() as u32).step_by(2).collect();
 
-    let use_xla = args.get_or("backend", "rust") == "xla" || args.flag("xla");
+    // primary engine: the selected backend on a single core
+    let mut single = opts.clone();
+    single.topology = hiaer_spike::partition::ClusterTopology::single_core();
+    let mut sim = single.into_config(net.clone()).build()?;
     let t0 = Instant::now();
-    let (events, cycles) = if use_xla {
-        let dir = args.get_or("artifacts", "artifacts").to_string();
-        let rt = std::sync::Arc::new(Runtime::cpu(&dir)?);
-        let backend = XlaBackend::new(rt, net.n_neurons())?;
-        let mut core = CoreEngine::new(&net, strat, backend)?;
-        for _ in 0..steps {
-            core.step(&axons)?;
-        }
-        (core.counters().events, core.cycles)
-    } else {
-        let mut core = CoreEngine::new(&net, strat, RustBackend)?;
-        for _ in 0..steps {
-            core.step(&axons)?;
-        }
-        (core.counters().events, core.cycles)
-    };
+    for _ in 0..steps {
+        sim.step(&axons)?;
+    }
     let dt = t0.elapsed().as_secs_f64();
+    let cost = sim.cost(&EnergyModel::default());
     println!(
         "{steps} steps in {dt:.3}s = {:.0} steps/s, {:.0} synaptic events/s \
-         (backend={}, sim cycles={cycles})",
+         (backend={}, sim cycles={})",
         steps as f64 / dt,
-        events as f64 / dt,
-        if use_xla { "xla" } else { "rust" },
+        cost.events as f64 / dt,
+        sim.backend_name(),
+        cost.cycles,
     );
-    // also run the topology-aware path when topology > 1 core
-    let topo = topology(args)?;
-    if topo.n_cores() > 1 {
-        let mut mc = MultiCoreEngine::new(&net, topo, CoreCapacity::default(), strat)?;
+
+    // topology-aware path when the requested topology has > 1 core
+    if opts.topology.n_cores() > 1 {
+        let mut cluster_opts = opts;
+        cluster_opts.backend = Backend::Rust;
+        let mut mc = SimConfig { net, opts: cluster_opts }.build()?;
         let t0 = Instant::now();
         for _ in 0..steps {
             mc.step(&axons)?;
         }
         let dt = t0.elapsed().as_secs_f64();
-        println!(
-            "multicore ({} cores): {:.0} steps/s",
-            mc.partition.n_used_cores(),
-            steps as f64 / dt
-        );
+        let used = mc.placement().map(|p| p.n_used_cores()).unwrap_or(mc.n_cores());
+        println!("multicore ({used} cores): {:.0} steps/s", steps as f64 / dt);
     }
     Ok(())
 }

@@ -4,10 +4,10 @@
 
 use std::time::Instant;
 
-use crate::energy::CostReport;
+use crate::sim::CostSummary;
 use crate::util::stats::mean_std;
 
-/// Aggregates per-inference cost reports into the Table-2 style summary.
+/// Aggregates per-inference cost summaries into the Table-2 style summary.
 #[derive(Clone, Debug, Default)]
 pub struct CostSeries {
     pub energy_uj: Vec<f64>,
@@ -17,7 +17,7 @@ pub struct CostSeries {
 }
 
 impl CostSeries {
-    pub fn push(&mut self, r: &CostReport) {
+    pub fn push(&mut self, r: &CostSummary) {
         self.energy_uj.push(r.energy_uj);
         self.latency_us.push(r.latency_us);
         self.hbm_rows.push(r.hbm_rows as f64);
@@ -86,7 +86,7 @@ mod tests {
     fn cost_series_stats() {
         let mut s = CostSeries::default();
         for e in [1.0, 2.0, 3.0] {
-            s.push(&CostReport { energy_uj: e, latency_us: e * 10.0, ..Default::default() });
+            s.push(&CostSummary { energy_uj: e, latency_us: e * 10.0, ..Default::default() });
         }
         let (m, _) = s.energy_mean_std();
         assert!((m - 2.0).abs() < 1e-12);

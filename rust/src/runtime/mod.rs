@@ -6,11 +6,18 @@
 //! module compiles it on the PJRT CPU client at startup and executes it
 //! on the request path.
 //!
-//! Offline builds link the in-tree [`xla`] stub instead of the real
-//! PJRT bindings: the same API surface, but artifact loading reports a
-//! clean error. All artifact-dependent paths (parity tests, the XLA
-//! bench section) probe for `artifacts/` first and skip, so the stub
-//! never changes behavior of a default checkout.
+//! # The `pjrt` cargo feature
+//!
+//! Default builds compile only the in-tree [`xla`] offline stub: the
+//! same API surface, but artifact loading reports a clean error, and
+//! `SimConfig::backend(Backend::Xla)` fails fast with
+//! `SimError::BackendUnavailable` (see [`pjrt_enabled`]). Building with
+//! `--features pjrt` declares that the real PJRT bindings are linked in
+//! place of the stub (swap the `xla` module for the vendored bindings
+//! crate here — a one-line change); the facade then constructs the XLA
+//! backend and any remaining failure is a real artifact/linker error.
+//! Artifact-dependent tests and benches probe for `artifacts/` first
+//! and skip, so the stub never changes behavior of a default checkout.
 
 mod registry;
 pub mod xla;
@@ -18,6 +25,15 @@ mod xla_backend;
 
 pub use registry::{ArtifactRegistry, NEURON_UPDATE_SIZES, SYNAPSE_ACCUM_SIZES};
 pub use xla_backend::XlaBackend;
+
+/// True when this binary was built with the `pjrt` cargo feature, i.e.
+/// the XLA/PJRT execution path is meant to be live. The facade
+/// (`sim::Backend::Xla`) refuses to construct the backend when this is
+/// false, so default builds fail fast instead of erroring deep inside
+/// artifact loading.
+pub fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
+}
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

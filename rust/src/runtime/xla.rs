@@ -27,9 +27,16 @@ impl std::error::Error for Error {}
 pub type Result<T> = std::result::Result<T, Error>;
 
 fn unavailable<T>(what: &str) -> Result<T> {
+    let hint = if cfg!(feature = "pjrt") {
+        "the `pjrt` feature is enabled but the real libxla bindings are not \
+         vendored into this offline build — swap this stub for the bindings \
+         crate in runtime/mod.rs"
+    } else {
+        "rebuild with `--features pjrt` and the vendored `xla` bindings to \
+         execute AOT artifacts"
+    };
     Err(Error(format!(
-        "{what}: XLA/PJRT support is not built into this binary (offline stub); \
-         link the real `xla` bindings to execute AOT artifacts"
+        "{what}: XLA/PJRT support is not built into this binary (offline stub); {hint}"
     )))
 }
 

@@ -29,7 +29,9 @@ pub struct XlaBackend {
 impl XlaBackend {
     /// Backend for a core of `n` neurons. Fails if no lowered variant is
     /// large enough (the partitioner never produces such cores).
-    pub fn new(rt: Arc<Runtime>, n: usize) -> Result<Self> {
+    /// Crate-private: external callers select this path through
+    /// [`crate::sim::SimConfig`] with [`crate::sim::Backend::Xla`].
+    pub(crate) fn new(rt: Arc<Runtime>, n: usize) -> Result<Self> {
         let reg = ArtifactRegistry::for_core(n)
             .ok_or_else(|| anyhow!("no AOT variant fits a core of {n} neurons"))?;
         // compile eagerly so request-path latency excludes compilation

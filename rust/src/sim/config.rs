@@ -1,0 +1,316 @@
+//! [`SimConfig`]: the one place where a network plus deployment choices
+//! become a running [`Simulator`]. Owns backend selection, partitioning
+//! parameters, HBM slot strategy, seeding and the CLI flag parsing every
+//! subcommand shares ([`SimOptions::from_args`]).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::cluster::{MultiCoreEngine, PoolSim};
+use crate::engine::{CoreEngine, DenseSim, RustBackend};
+use crate::hbm::SlotStrategy;
+use crate::partition::{ClusterTopology, CoreCapacity};
+use crate::runtime::{pjrt_enabled, Runtime, XlaBackend};
+use crate::sim::{SimError, Simulator};
+use crate::snn::Network;
+use crate::util::cli::Args;
+
+/// Which execution engine a [`SimConfig`] instantiates. See the module
+/// docs of [`crate::sim`] for a selection guide.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Dense-matrix software simulator (the Fig-8 CPU baseline and
+    /// golden model). Single-core only; reports zero hardware cost.
+    Dense,
+    /// Event-driven HBM core with the native Rust membrane backend.
+    /// With a multi-core topology this becomes the partitioned,
+    /// HiAER-routed cluster engine.
+    Rust,
+    /// Chunk-parallel `CorePool` execution of one core: the membrane
+    /// sweep spreads across all worker threads. Single-core topologies
+    /// only (clusters already pool internally).
+    Pool,
+    /// AOT-compiled JAX/Pallas artifacts through PJRT. Requires the
+    /// `pjrt` cargo feature (and vendored bindings + artifacts);
+    /// otherwise [`SimConfig::build`] returns
+    /// [`SimError::BackendUnavailable`].
+    Xla,
+}
+
+impl Backend {
+    pub const ALL: [Backend; 4] = [Backend::Dense, Backend::Rust, Backend::Pool, Backend::Xla];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Dense => "dense",
+            Backend::Rust => "rust",
+            Backend::Pool => "pool",
+            Backend::Xla => "xla",
+        }
+    }
+
+    /// Parse a CLI value; unknown values list the options instead of
+    /// silently defaulting.
+    pub fn parse(s: &str) -> Result<Backend, SimError> {
+        match s {
+            "dense" => Ok(Backend::Dense),
+            "rust" => Ok(Backend::Rust),
+            "pool" => Ok(Backend::Pool),
+            "xla" => Ok(Backend::Xla),
+            other => Err(SimError::Config(format!(
+                "unknown --backend {other:?} (options: dense, rust, pool, xla)"
+            ))),
+        }
+    }
+
+    /// Whether this build can instantiate the backend at all.
+    pub fn available(self) -> bool {
+        match self {
+            Backend::Xla => pjrt_enabled(),
+            _ => true,
+        }
+    }
+}
+
+/// Parse a `--strategy` value; unknown values list the options.
+pub(crate) fn parse_strategy(s: &str) -> Result<SlotStrategy, SimError> {
+    match s {
+        "modulo" => Ok(SlotStrategy::Modulo),
+        "balance" => Ok(SlotStrategy::BalanceFanIn),
+        other => Err(SimError::Config(format!(
+            "unknown --strategy {other:?} (options: modulo, balance)"
+        ))),
+    }
+}
+
+/// Network-independent deployment options — everything a [`SimConfig`]
+/// holds except the network itself. Jobs and daemons carry this and
+/// attach a network per run ([`SimOptions::into_config`]).
+#[derive(Clone, Debug)]
+pub struct SimOptions {
+    pub topology: ClusterTopology,
+    pub capacity: CoreCapacity,
+    pub strategy: SlotStrategy,
+    pub backend: Backend,
+    /// Override of the network's noise base seed.
+    pub seed: Option<u32>,
+    /// AOT artifact directory for [`Backend::Xla`].
+    pub artifacts: PathBuf,
+    /// Sweep chunk granularity in 64-bit spike words for the pooled
+    /// backends (`None` = engine default).
+    pub chunk_words: Option<usize>,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            topology: ClusterTopology::single_core(),
+            capacity: CoreCapacity::default(),
+            strategy: SlotStrategy::BalanceFanIn,
+            backend: Backend::Rust,
+            seed: None,
+            artifacts: PathBuf::from("artifacts"),
+            chunk_words: None,
+        }
+    }
+}
+
+impl SimOptions {
+    /// The shared CLI surface: `--servers/--fpgas/--cores` (topology),
+    /// `--strategy modulo|balance`, `--backend dense|rust|pool|xla`
+    /// (plus the legacy `--xla` flag), `--seed N`, `--artifacts DIR`.
+    /// Unknown `--backend`/`--strategy` values are listed-options
+    /// errors, never silent defaults.
+    pub fn from_args(args: &Args) -> Result<SimOptions, SimError> {
+        let topology = ClusterTopology {
+            servers: args.get_usize("servers", 1).map_err(SimError::Config)?,
+            fpgas_per_server: args.get_usize("fpgas", 1).map_err(SimError::Config)?,
+            cores_per_fpga: args.get_usize("cores", 1).map_err(SimError::Config)?,
+        };
+        let strategy = parse_strategy(args.get_or("strategy", "balance"))?;
+        let mut backend = Backend::parse(args.get_or("backend", "rust"))?;
+        if args.flag("xla") {
+            backend = Backend::Xla;
+        }
+        let seed = match args.get("seed") {
+            None => None,
+            Some(_) => Some(args.get_u32("seed", 0).map_err(SimError::Config)?),
+        };
+        Ok(SimOptions {
+            topology,
+            strategy,
+            backend,
+            seed,
+            artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
+            ..SimOptions::default()
+        })
+    }
+
+    /// Attach a network, yielding a buildable [`SimConfig`].
+    pub fn into_config(self, net: Network) -> SimConfig {
+        SimConfig { net, opts: self }
+    }
+}
+
+/// Builder for a [`Simulator`] session. See [`crate::sim`] module docs
+/// for the lifecycle.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub net: Network,
+    pub opts: SimOptions,
+}
+
+impl SimConfig {
+    pub fn new(net: Network) -> Self {
+        SimOptions::default().into_config(net)
+    }
+
+    /// Build a config straight from parsed CLI args (the deduplicated
+    /// topology/strategy/backend/seed flag surface).
+    pub fn from_args(net: Network, args: &Args) -> Result<Self, SimError> {
+        Ok(SimOptions::from_args(args)?.into_config(net))
+    }
+
+    /// Cluster topology (servers × FPGAs/server × cores/FPGA).
+    pub fn topology(mut self, servers: usize, fpgas: usize, cores: usize) -> Self {
+        self.opts.topology =
+            ClusterTopology { servers, fpgas_per_server: fpgas, cores_per_fpga: cores };
+        self
+    }
+
+    /// Per-core capacity bound for the partitioner.
+    pub fn capacity(mut self, cap: CoreCapacity) -> Self {
+        self.opts.capacity = cap;
+        self
+    }
+
+    /// HBM slot-assignment strategy.
+    pub fn strategy(mut self, strategy: SlotStrategy) -> Self {
+        self.opts.strategy = strategy;
+        self
+    }
+
+    /// Execution backend.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.opts.backend = backend;
+        self
+    }
+
+    /// Override the network's noise base seed.
+    pub fn seed(mut self, seed: u32) -> Self {
+        self.opts.seed = Some(seed);
+        self
+    }
+
+    /// AOT artifact directory for [`Backend::Xla`].
+    pub fn artifacts<P: Into<PathBuf>>(mut self, dir: P) -> Self {
+        self.opts.artifacts = dir.into();
+        self
+    }
+
+    /// Sweep chunk granularity (64-bit spike words) for the pooled
+    /// backends — exposed for tests and perf experiments.
+    pub fn chunk_words(mut self, words: usize) -> Self {
+        self.opts.chunk_words = Some(words);
+        self
+    }
+
+    /// Compile and spin up the session: applies the seed override,
+    /// partitions the network (multi-core), builds HBM images and
+    /// starts worker pools. The returned box is the only public
+    /// execution handle.
+    pub fn build(self) -> Result<Box<dyn Simulator>, SimError> {
+        let SimConfig { mut net, opts } = self;
+        if let Some(seed) = opts.seed {
+            net.base_seed = seed;
+        }
+        let n_cores = opts.topology.n_cores();
+        if n_cores == 0 {
+            return Err(SimError::Config("topology has zero cores".into()));
+        }
+        if n_cores > 1 && opts.backend != Backend::Rust {
+            return Err(SimError::Config(format!(
+                "backend `{}` is single-core; multi-core topologies ({n_cores} cores) \
+                 require backend `rust` (the partitioned cluster engine)",
+                opts.backend.name()
+            )));
+        }
+        match opts.backend {
+            Backend::Dense => Ok(Box::new(DenseSim::new(&net))),
+            Backend::Rust if n_cores > 1 => {
+                let engine = MultiCoreEngine::new(
+                    &net,
+                    opts.topology,
+                    opts.capacity,
+                    opts.strategy,
+                    opts.chunk_words,
+                )?;
+                Ok(Box::new(engine))
+            }
+            Backend::Rust => {
+                Ok(Box::new(CoreEngine::new(&net, opts.strategy, RustBackend)?))
+            }
+            Backend::Pool => {
+                Ok(Box::new(PoolSim::new(&net, opts.strategy, opts.chunk_words)?))
+            }
+            Backend::Xla => {
+                if !pjrt_enabled() {
+                    return Err(SimError::BackendUnavailable {
+                        backend: "xla",
+                        reason: "this binary was built without the `pjrt` cargo feature; \
+                                 rebuild with `--features pjrt` (plus vendored libxla \
+                                 bindings and `make artifacts`) to execute the AOT \
+                                 Pallas artifact path"
+                            .into(),
+                    });
+                }
+                let rt = Arc::new(Runtime::cpu(&opts.artifacts)?);
+                let backend = XlaBackend::new(rt, net.n_neurons())?;
+                Ok(Box::new(CoreEngine::new(&net, opts.strategy, backend)?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string()), &["xla"]).unwrap()
+    }
+
+    #[test]
+    fn from_args_parses_shared_flags() {
+        let a = args(&[
+            "--servers", "2", "--fpgas", "3", "--cores", "4", "--strategy", "modulo",
+            "--backend", "pool", "--seed", "7",
+        ]);
+        let o = SimOptions::from_args(&a).unwrap();
+        assert_eq!(o.topology.n_cores(), 24);
+        assert_eq!(o.strategy, SlotStrategy::Modulo);
+        assert_eq!(o.backend, Backend::Pool);
+        assert_eq!(o.seed, Some(7));
+    }
+
+    #[test]
+    fn unknown_backend_lists_options() {
+        let err = SimOptions::from_args(&args(&["--backend", "gpu"])).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("gpu") && msg.contains("dense, rust, pool, xla"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_strategy_lists_options() {
+        let err = SimOptions::from_args(&args(&["--strategy", "zigzag"])).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("zigzag") && msg.contains("modulo, balance"), "{msg}");
+    }
+
+    #[test]
+    fn legacy_xla_flag_selects_xla() {
+        let o = SimOptions::from_args(&args(&["--xla"])).unwrap();
+        assert_eq!(o.backend, Backend::Xla);
+    }
+}

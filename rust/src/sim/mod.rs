@@ -1,0 +1,248 @@
+//! The unified simulation facade — the paper's "programming interface
+//! agnostic to hardware-level detail" (§5).
+//!
+//! Every way of executing a spiking network in this crate — the dense
+//! software baseline, the event-driven HBM core, the chunk-parallel
+//! worker pool, the partitioned multi-core cluster and the AOT-Pallas
+//! XLA path — is reached through one pair of types:
+//!
+//! * [`SimConfig`] — a builder that owns the network plus every
+//!   deployment decision (topology, per-core capacity, HBM slot
+//!   strategy, compute backend, noise seed, artifact directory, sweep
+//!   chunk granularity). [`SimConfig::build`] performs partitioning, HBM
+//!   image compilation and worker-pool spin-up, and returns a boxed
+//!   [`Simulator`].
+//! * [`Simulator`] — the backend-neutral session: [`Simulator::step`]
+//!   advances one 1 ms tick, [`Simulator::run`] drives a whole stimulus
+//!   schedule into a [`RunRecord`], [`Simulator::run_many`] reuses the
+//!   same engine (pool workers kept warm, buffers retained) across a
+//!   batch of samples with a reset in between.
+//!
+//! # Config lifecycle
+//!
+//! ```text
+//! SimConfig::new(net)                 // or SimConfig::from_args(net, &args)
+//!     .topology(servers, fpgas, cores)
+//!     .strategy(SlotStrategy::BalanceFanIn)
+//!     .backend(Backend::Rust)
+//!     .seed(42)
+//!     .build()?                       // -> Box<dyn Simulator>
+//! ```
+//!
+//! `build` consumes the config: the network moves into the engine, the
+//! chosen backend decides which engine is instantiated (see
+//! [`Backend`]), and all engine-specific constructors stay `pub(crate)`
+//! — the facade is the only public way to execute a network.
+//!
+//! # Trait contract
+//!
+//! * `step(axon_in)` takes **ascending, in-range** global axon ids;
+//!   out-of-range ids are a [`SimError::Stimulus`] error, never a panic.
+//! * Spike trains are **bit-identical across backends** on the same
+//!   network and seed (single-core backends; a multi-core cluster
+//!   matches on deterministic networks — per-core noise seeds differ).
+//!   `rust/tests/sim_facade.rs` pins this matrix.
+//! * Cost counters accumulate monotonically until [`Simulator::reset`] /
+//!   [`Simulator::reset_cost`]; [`Simulator::run`] reports per-run cost
+//!   (it clears the counters first), mirroring the paper's
+//!   per-inference accounting.
+//!
+//! # Which backend to pick
+//!
+//! | backend          | engine                       | when                                        |
+//! |------------------|------------------------------|---------------------------------------------|
+//! | [`Backend::Dense`] | dense-matrix software sim  | golden model, tiny nets, debugging          |
+//! | [`Backend::Rust`]  | event-driven HBM core      | default; becomes the cluster at >1 core     |
+//! | [`Backend::Pool`]  | chunk-parallel `CorePool`  | one big core, sweep spread over all workers |
+//! | [`Backend::Xla`]   | AOT Pallas artifacts, PJRT | needs the `pjrt` cargo feature + artifacts  |
+
+mod config;
+
+pub use config::{Backend, SimConfig, SimOptions};
+
+use crate::energy::{CostReport, EnergyModel};
+use crate::hbm::LayoutStats;
+use crate::partition::Partition;
+use crate::router::RouterStats;
+
+/// Errors surfaced by the facade (configuration and execution).
+#[derive(Debug, thiserror::Error)]
+pub enum SimError {
+    /// The requested backend cannot run in this build/environment.
+    #[error("backend `{backend}` is unavailable: {reason}")]
+    BackendUnavailable { backend: &'static str, reason: String },
+    /// The configuration itself is inconsistent (bad flag value,
+    /// unsupported topology for the chosen backend, ...).
+    #[error("invalid simulator configuration: {0}")]
+    Config(String),
+    /// Malformed stimulus handed to a running simulator.
+    #[error("bad stimulus: {0}")]
+    Stimulus(String),
+    /// An engine-level failure (HBM compilation, worker pool, PJRT ...).
+    #[error(transparent)]
+    Engine(#[from] anyhow::Error),
+}
+
+/// Shared stimulus validation: every backend rejects out-of-range axon
+/// ids with the same [`SimError::Stimulus`] error (the facade contract —
+/// one place, so backends cannot diverge).
+pub(crate) fn check_axons(axon_in: &[u32], n_axons: usize) -> Result<(), SimError> {
+    match axon_in.iter().find(|&&a| a as usize >= n_axons) {
+        Some(&bad) => Err(SimError::Stimulus(format!(
+            "axon id {bad} out of range ({n_axons} axons)"
+        ))),
+        None => Ok(()),
+    }
+}
+
+/// Result of one [`Simulator::step`]: borrowed views into the
+/// simulator's reusable buffers (copy out what you need to keep).
+#[derive(Debug)]
+pub struct StepResult<'a> {
+    /// Fired neuron ids this step, ascending (global ids).
+    pub fired: &'a [u32],
+    /// Fired output neurons (subset of `fired`), ascending.
+    pub output_spikes: &'a [u32],
+}
+
+/// Backend-neutral cost summary — the union of the single-core
+/// [`CostReport`] and the cluster cost (which adds router statistics).
+#[derive(Clone, Debug, Default)]
+pub struct CostSummary {
+    pub energy_uj: f64,
+    pub latency_us: f64,
+    /// HBM row accesses (pointer + synapse rows).
+    pub hbm_rows: u64,
+    /// Synaptic events routed.
+    pub events: u64,
+    /// Simulated clock cycles (slowest core + fabric for a cluster).
+    pub cycles: u64,
+    /// HiAER fabric statistics; `None` for single-core backends.
+    pub router: Option<RouterStats>,
+}
+
+impl From<CostReport> for CostSummary {
+    fn from(r: CostReport) -> Self {
+        CostSummary {
+            energy_uj: r.energy_uj,
+            latency_us: r.latency_us,
+            hbm_rows: r.hbm_rows,
+            events: r.events,
+            cycles: r.cycles,
+            router: None,
+        }
+    }
+}
+
+/// Record of one [`Simulator::run`] over a stimulus schedule.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecord {
+    /// Steps executed (== stimulus length).
+    pub steps: usize,
+    /// Output-neuron spikes per step (global ids, ascending).
+    pub spikes: Vec<Vec<u32>>,
+    /// Total fired neurons across the run (activity measure).
+    pub fired_total: u64,
+    /// Aggregated cost of the run (counters cleared at run start).
+    pub cost: CostSummary,
+}
+
+/// A live, hardware-agnostic simulation session over one network.
+///
+/// Obtained from [`SimConfig::build`]; see the module docs for the
+/// contract. All implementations keep their hot-path buffers warm
+/// between steps and across [`Simulator::reset`], so one session can be
+/// reused for many samples ([`Simulator::run_many`]).
+pub trait Simulator {
+    /// Advance one timestep. `axon_in` lists fired global axon ids,
+    /// ascending; ids out of range are a [`SimError::Stimulus`] error.
+    fn step(&mut self, axon_in: &[u32]) -> Result<StepResult<'_>, SimError>;
+
+    /// Fired neurons from the last completed step (ascending).
+    fn fired(&self) -> &[u32];
+
+    /// Fired output neurons from the last completed step (ascending).
+    fn output_spikes(&self) -> &[u32];
+
+    /// Restore membranes/step counter to the initial state and clear
+    /// cost counters. Keeps buffers and worker pools warm.
+    fn reset(&mut self);
+
+    /// Clear the access/cycle counters only (per-inference accounting).
+    fn reset_cost(&mut self);
+
+    /// Read membrane potentials for the given (global) neuron ids.
+    fn read_membrane(&self, ids: &[u32]) -> Vec<i32>;
+
+    /// Aggregate cost since the last reset, under the given model.
+    fn cost(&self, model: &EnergyModel) -> CostSummary;
+
+    /// Short backend identifier ("dense", "rust", "pool", "xla",
+    /// "cluster").
+    fn backend_name(&self) -> &'static str;
+
+    /// Total neurons simulated (global).
+    fn n_neurons(&self) -> usize;
+
+    /// Global axons accepted by [`Simulator::step`].
+    fn n_axons(&self) -> usize;
+
+    /// Execution cores behind this session (1 for single-core backends).
+    fn n_cores(&self) -> usize {
+        1
+    }
+
+    /// Neuron-to-core placement, when the backend partitions the
+    /// network (`None` for single-core backends).
+    fn placement(&self) -> Option<&Partition> {
+        None
+    }
+
+    /// HBM routing-table layout statistics of the compiled image
+    /// (`None` for the dense software baseline, which has no HBM, and
+    /// for clusters, which hold one image per core). Saves callers a
+    /// second `HbmImage::compile` when they only want the stats.
+    fn hbm_stats(&self) -> Option<LayoutStats> {
+        None
+    }
+
+    /// Drive a whole stimulus schedule (`stimulus[t]` = axon ids fired
+    /// at step `t`). Clears cost counters first, so the returned
+    /// [`RunRecord`] carries per-run cost — the paper's per-inference
+    /// accounting. Does NOT reset membranes; call [`Simulator::reset`]
+    /// (or use [`Simulator::run_many`]) for independent samples.
+    fn run(&mut self, stimulus: &[Vec<u32>], energy: &EnergyModel) -> Result<RunRecord, SimError> {
+        self.reset_cost();
+        let mut spikes = Vec::with_capacity(stimulus.len());
+        let mut fired_total = 0u64;
+        for axons in stimulus {
+            let out = self.step(axons)?;
+            fired_total += out.fired.len() as u64;
+            spikes.push(out.output_spikes.to_vec());
+        }
+        Ok(RunRecord {
+            steps: stimulus.len(),
+            spikes,
+            fired_total,
+            cost: self.cost(energy),
+        })
+    }
+
+    /// Batched execution: run every sample through **this same engine**
+    /// with a full reset in between — pool workers stay warm and no
+    /// per-sample engine construction happens. Returns one
+    /// [`RunRecord`] per sample.
+    fn run_many(
+        &mut self,
+        samples: &[Vec<Vec<u32>>],
+        energy: &EnergyModel,
+    ) -> Result<Vec<RunRecord>, SimError> {
+        samples
+            .iter()
+            .map(|s| {
+                self.reset();
+                self.run(s, energy)
+            })
+            .collect()
+    }
+}

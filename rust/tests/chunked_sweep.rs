@@ -1,13 +1,14 @@
-//! Chunk-parallel sweep invariants through the public API: a `CorePool`
-//! forced into maximal chunking (one spike word per chunk) must stay
-//! bit-exact with the unchunked single-core engine AND the dense golden
-//! model — fired ids, output spikes, and membranes — including stochastic
-//! neurons, whose per-index counter noise makes chunking order-invariant.
+//! Chunk-parallel sweep invariants through the public facade: a
+//! `Backend::Pool` session forced into maximal chunking (one spike word
+//! per chunk via `SimConfig::chunk_words`) must stay bit-exact with the
+//! unchunked event-driven engine AND the dense golden model — fired
+//! ids, output spikes, and membranes — including stochastic neurons,
+//! whose per-index counter noise makes chunking order-invariant. The
+//! same granularity knob reaches the cluster engine's internal pool.
 
-use hiaer_spike::cluster::CorePool;
-use hiaer_spike::engine::{CoreEngine, DenseEngine, RustBackend};
-use hiaer_spike::hbm::SlotStrategy;
-use hiaer_spike::snn::{Network, NeuronModel, Synapse};
+use hiaer_spike::partition::CoreCapacity;
+use hiaer_spike::sim::{Backend, SimConfig, Simulator};
+use hiaer_spike::snn::{Network, NeuronModel, Synapse, FLAG_NOISE};
 use hiaer_spike::util::prng::Xorshift32;
 
 /// Random net sized to span several spike words with a ragged tail.
@@ -40,58 +41,69 @@ fn noisy_net(n: usize, seed: u32) -> Network {
 fn max_chunked_pool_matches_engine_and_dense() {
     let n = 777; // 13 spike words, ragged tail
     let net = noisy_net(n, 0x51EE7);
-    let mut dense = DenseEngine::new(&net);
-    let mut direct = CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap();
-    let pooled = vec![CoreEngine::new(&net, SlotStrategy::BalanceFanIn, RustBackend).unwrap()];
-    let mut pool = CorePool::with_chunk_words(pooled, 1);
+    let mut dense = SimConfig::new(net.clone()).backend(Backend::Dense).build().unwrap();
+    let mut direct = SimConfig::new(net.clone()).backend(Backend::Rust).build().unwrap();
+    let mut pool = SimConfig::new(net.clone())
+        .backend(Backend::Pool)
+        .chunk_words(1) // force maximal chunking
+        .build()
+        .unwrap();
 
+    let all_ids: Vec<u32> = (0..n as u32).collect();
     let mut rng = Xorshift32::new(9);
     for step in 0..30 {
         let axons: Vec<u32> = (0..4u32).filter(|_| rng.chance(0.5)).collect();
-        dense.step(&axons);
-        let out = direct.step(&axons).unwrap();
-        assert_eq!(out.fired.to_vec(), dense.fired(), "direct vs dense, step {step}");
+        let dense_fired = dense.step(&axons).unwrap().fired.to_vec();
+        let direct_out = direct.step(&axons).unwrap();
+        assert_eq!(direct_out.fired, &dense_fired[..], "direct vs dense, step {step}");
+        drop(direct_out);
 
-        pool.phase_update().unwrap();
-        pool.phase_route(std::slice::from_ref(&axons)).unwrap();
-        assert_eq!(pool.core(0).fired(), direct.fired(), "fired, step {step}");
+        let out = pool.step(&axons).unwrap();
+        assert_eq!(out.fired, direct.fired(), "fired, step {step}");
+        assert_eq!(out.output_spikes, direct.output_spikes(), "output spikes, step {step}");
+        drop(out);
         assert_eq!(
-            pool.core(0).output_spikes(),
-            direct.output_spikes(),
-            "output spikes, step {step}"
+            pool.read_membrane(&all_ids),
+            dense.read_membrane(&all_ids),
+            "membranes, step {step}"
         );
-        assert_eq!(pool.core(0).v, dense.v, "membranes, step {step}");
     }
 }
 
-/// Moderate chunking (several words per chunk, several chunks per core)
-/// across a multi-core pool, driven for many steps.
+/// Moderate chunking: the cluster engine's internal pool at two words
+/// per chunk must match the same cluster at default granularity and the
+/// dense model (deterministic net — per-core seeds differ from the
+/// single-core seed, so noise is stripped for the cross-engine check).
 #[test]
-fn multi_core_chunked_pool_matches_direct() {
-    let nets: Vec<Network> = (0..3).map(|i| noisy_net(200 + 70 * i, 0xA0 + i as u32)).collect();
-    let mut direct: Vec<CoreEngine<RustBackend>> = nets
-        .iter()
-        .map(|n| CoreEngine::new(n, SlotStrategy::Modulo, RustBackend).unwrap())
-        .collect();
-    let pooled: Vec<CoreEngine<RustBackend>> = nets
-        .iter()
-        .map(|n| CoreEngine::new(n, SlotStrategy::Modulo, RustBackend).unwrap())
-        .collect();
-    let mut pool = CorePool::with_chunk_words(pooled, 2);
+fn cluster_chunk_granularity_is_invariant() {
+    let n = 410;
+    let mut net = noisy_net(n, 0xA0);
+    for p in &mut net.params {
+        p.flags &= !FLAG_NOISE;
+    }
+    let cap = CoreCapacity { max_neurons: n.div_ceil(3), max_synapses: usize::MAX };
+    let mut dense = SimConfig::new(net.clone()).backend(Backend::Dense).build().unwrap();
+    let mut fine = SimConfig::new(net.clone())
+        .topology(1, 1, 3)
+        .capacity(cap)
+        .chunk_words(2)
+        .build()
+        .unwrap();
+    let mut coarse =
+        SimConfig::new(net.clone()).topology(1, 1, 3).capacity(cap).build().unwrap();
 
+    let all_ids: Vec<u32> = (0..n as u32).collect();
     for step in 0..20u32 {
-        let inputs: Vec<Vec<u32>> = (0..3)
-            .map(|c| if (step as usize + c) % 2 == 0 { vec![0, 2] } else { vec![1] })
-            .collect();
-        for (c, e) in direct.iter_mut().enumerate() {
-            e.phase_update().unwrap();
-            e.phase_route(&inputs[c]).unwrap();
-        }
-        pool.phase_update().unwrap();
-        pool.phase_route(&inputs).unwrap();
-        for c in 0..3 {
-            assert_eq!(pool.core(c).fired(), direct[c].fired(), "core {c} step {step}");
-            assert_eq!(pool.core(c).v, direct[c].v, "core {c} membranes step {step}");
-        }
+        let axons: Vec<u32> = if step % 2 == 0 { vec![0, 2] } else { vec![1] };
+        let dense_fired = dense.step(&axons).unwrap().fired.to_vec();
+        let f = fine.step(&axons).unwrap().fired.to_vec();
+        let c = coarse.step(&axons).unwrap().fired.to_vec();
+        assert_eq!(f, dense_fired, "fine-chunked cluster vs dense, step {step}");
+        assert_eq!(c, dense_fired, "default-chunked cluster vs dense, step {step}");
+        assert_eq!(
+            fine.read_membrane(&all_ids),
+            dense.read_membrane(&all_ids),
+            "membranes, step {step}"
+        );
     }
 }

@@ -8,6 +8,7 @@ use hiaer_spike::hbm::{HbmImage, SlotStrategy};
 use hiaer_spike::model_fmt::{hsl::read_hsl, read_hsd, read_hsn, write_hsn};
 use hiaer_spike::partition::{ClusterTopology, CoreCapacity, Partition};
 use hiaer_spike::runtime::{ArtifactRegistry, Runtime};
+use hiaer_spike::sim::SimOptions;
 use hiaer_spike::snn::{Network, NeuronModel, Synapse};
 
 fn tmp(name: &str) -> std::path::PathBuf {
@@ -75,7 +76,7 @@ fn job_failure_is_isolated_and_reported() {
             id,
             net_path: if id % 2 == 0 { good.clone() } else { tmp("missing.hsn") },
             stimulus: vec![vec![0], vec![]],
-            topology: ClusterTopology::single_core(),
+            options: SimOptions::default(),
         });
     }
     let results = q.drain();
@@ -107,7 +108,7 @@ fn stimulus_axon_out_of_range_fails_job() {
         id: 0,
         net_path: p.clone(),
         stimulus: vec![vec![42]], // only 1 axon exists
-        topology: ClusterTopology::single_core(),
+        options: SimOptions::default(),
     };
     let r = run_job(&job, &EnergyModel::default());
     std::fs::remove_file(&p).ok();

@@ -8,8 +8,8 @@
 use std::path::{Path, PathBuf};
 
 use hiaer_spike::engine::backend::{mask_bit, mask_words, CoreParams, RustBackend, UpdateBackend};
-use hiaer_spike::engine::DenseEngine;
 use hiaer_spike::model_fmt::golden;
+use hiaer_spike::sim::{Backend, SimConfig, Simulator};
 use hiaer_spike::snn::{Network, NeuronModel, Synapse};
 use hiaer_spike::util::prng;
 
@@ -113,7 +113,8 @@ fn dense_net_trace_matches_python() {
         vec![],
         g.base_seed,
     );
-    let mut e = DenseEngine::new(&net);
+    let mut e = SimConfig::new(net).backend(Backend::Dense).build().unwrap();
+    let all_ids: Vec<u32> = (0..g.n as u32).collect();
     for t in 0..g.steps {
         let axons: Vec<u32> = g.axon_seq[t]
             .iter()
@@ -121,8 +122,13 @@ fn dense_net_trace_matches_python() {
             .filter(|(_, &x)| x != 0)
             .map(|(i, _)| i as u32)
             .collect();
-        let spikes = e.step(&axons).to_vec();
+        let fired = e.step(&axons).unwrap().fired.to_vec();
+        // unpack fired ids to the reference's per-neuron 0/1 vector
+        let mut spikes = vec![0i32; g.n];
+        for &f in &fired {
+            spikes[f as usize] = 1;
+        }
         assert_eq!(spikes, g.spikes[t], "spike trace diverged at step {t}");
-        assert_eq!(e.v, g.v[t], "membrane trace diverged at step {t}");
+        assert_eq!(e.read_membrane(&all_ids), g.v[t], "membrane trace diverged at step {t}");
     }
 }

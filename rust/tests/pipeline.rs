@@ -1,15 +1,15 @@
 //! Full-pipeline integration: a synthetic .hsl layer graph written from
-//! Rust goes through the converter, HBM compiler, single-core engine,
-//! multi-core cluster, .hsn round-trip and the job queue — and every path
+//! Rust goes through the converter, the `SimConfig` facade (single-core
+//! and clustered), .hsn round-trip and the job queue — and every path
 //! agrees. No trained models or artifacts required.
 
-use hiaer_spike::cluster::{parse_stimulus, run_job, Job, JobStatus, MultiCoreEngine};
+use hiaer_spike::cluster::{parse_stimulus, run_job, Job, JobStatus};
 use hiaer_spike::convert::{convert, reference_forward_binary, run_inference, BiasMode, Readout};
 use hiaer_spike::energy::EnergyModel;
-use hiaer_spike::engine::{CoreEngine, RustBackend};
 use hiaer_spike::hbm::{HbmImage, SlotStrategy};
 use hiaer_spike::model_fmt::{read_hsn, write_hsn, Layer, LayerGraph, NeuronKind};
-use hiaer_spike::partition::{ClusterTopology, CoreCapacity};
+use hiaer_spike::partition::CoreCapacity;
+use hiaer_spike::sim::{SimConfig, SimOptions, Simulator};
 use hiaer_spike::util::prng::Xorshift32;
 
 fn little_cnn(rng: &mut Xorshift32, kind: NeuronKind, timesteps: usize) -> LayerGraph {
@@ -62,10 +62,12 @@ fn binary_model_end_to_end_matches_reference() {
             .map(|(i, _)| i as u32)
             .collect()];
 
-        let mut engine =
-            CoreEngine::new(&conv.net, SlotStrategy::BalanceFanIn, RustBackend).unwrap();
+        let mut engine = SimConfig::new(conv.net.clone())
+            .strategy(SlotStrategy::BalanceFanIn)
+            .build()
+            .unwrap();
         let inf = run_inference(
-            &mut engine,
+            &mut *engine,
             &conv,
             &frames,
             graph.layers.len(),
@@ -112,7 +114,7 @@ fn hsn_roundtrip_preserves_inference() {
     let frames: Vec<Vec<u32>> =
         (0..4).map(|_| (0..64u32).filter(|_| rng.chance(0.3)).collect()).collect();
     let run = |net: &hiaer_spike::snn::Network| -> Vec<Vec<u32>> {
-        let mut e = CoreEngine::new(net, SlotStrategy::Modulo, RustBackend).unwrap();
+        let mut e = SimConfig::new(net.clone()).strategy(SlotStrategy::Modulo).build().unwrap();
         let mut out = Vec::new();
         for t in 0..frames.len() + 2 {
             let empty = Vec::new();
@@ -129,7 +131,7 @@ fn hsn_roundtrip_preserves_inference() {
         id: 0,
         net_path: p.clone(),
         stimulus: parse_stimulus(stim).unwrap(),
-        topology: ClusterTopology::single_core(),
+        options: SimOptions::default(),
     };
     let r = run_job(&job, &EnergyModel::default());
     std::fs::remove_file(&p).ok();
@@ -146,7 +148,8 @@ fn multicore_matches_single_core_on_converted_model() {
         (0..3).map(|_| (0..64u32).filter(|_| rng.chance(0.4)).collect()).collect();
     let steps = frames.len() + graph.layers.len();
 
-    let mut single = CoreEngine::new(&conv.net, SlotStrategy::Modulo, RustBackend).unwrap();
+    let mut single =
+        SimConfig::new(conv.net.clone()).strategy(SlotStrategy::Modulo).build().unwrap();
     let mut single_out = Vec::new();
     for t in 0..steps {
         let empty = Vec::new();
@@ -154,16 +157,20 @@ fn multicore_matches_single_core_on_converted_model() {
         single_out.push(single.step(f).unwrap().output_spikes.to_vec());
     }
 
-    let topo = ClusterTopology { servers: 1, fpgas_per_server: 2, cores_per_fpga: 2 };
     let cap = CoreCapacity {
         max_neurons: conv.net.n_neurons().div_ceil(3),
         max_synapses: usize::MAX,
     };
-    let mut mc = MultiCoreEngine::new(&conv.net, topo, cap, SlotStrategy::Modulo).unwrap();
+    let mut mc = SimConfig::new(conv.net.clone())
+        .topology(1, 2, 2)
+        .capacity(cap)
+        .strategy(SlotStrategy::Modulo)
+        .build()
+        .unwrap();
     for t in 0..steps {
         let empty = Vec::new();
         let f = frames.get(t).unwrap_or(&empty);
         let got = mc.step(f).unwrap();
-        assert_eq!(got, &single_out[t][..], "step {t}");
+        assert_eq!(got.output_spikes, &single_out[t][..], "step {t}");
     }
 }
