@@ -1,0 +1,60 @@
+//! Session-protocol walkthrough: build the Fig-6 network, write it to
+//! `.hsn`, and drive the `serve-session` wire format **in-process**
+//! through `sim::session::Session` — every request/response pair is
+//! printed, so this doubles as living documentation of the protocol the
+//! Python `hs_api` `backend="rust"` client speaks over a subprocess.
+//!
+//! Run: `cargo run --release --example session_roundtrip`
+
+use hiaer_spike::model_fmt::write_hsn;
+use hiaer_spike::sim::session::Session;
+use hiaer_spike::sim::SimOptions;
+use hiaer_spike::snn::{NetworkBuilder, NeuronModel};
+
+fn main() -> anyhow::Result<()> {
+    // the Supplementary-A.1 example network (hs_api's fig6_network)
+    let lif = NeuronModel::lif(3, 0, 63, false)?;
+    let lif_c = NeuronModel::lif(4, 0, 2, false)?;
+    let ann_d = NeuronModel::ann(5, 0, true)?;
+    let mut b = NetworkBuilder::new().seed(7);
+    b.add_neuron("a", lif, &[("b", 1), ("d", 2)])?;
+    b.add_neuron("b", lif, &[])?;
+    b.add_neuron("c", lif_c, &[])?;
+    b.add_neuron("d", ann_d, &[("c", 1)])?;
+    b.add_axon("alpha", &[("a", 3), ("c", 2)])?;
+    b.add_axon("beta", &[("b", 3)])?;
+    b.add_output("a");
+    b.add_output("b");
+    let (net, _keys) = b.build()?;
+
+    let mut path = std::env::temp_dir();
+    path.push(format!("session_roundtrip_{}.hsn", std::process::id()));
+    write_hsn(&net, &path)?;
+
+    let mut session = Session::new(SimOptions::default());
+    println!("<- {}", session.hello());
+
+    let requests = [
+        format!("{{\"op\":\"configure\",\"net\":\"{}\"}}", path.display()),
+        // alpha+beta for two ticks, then let the charge propagate
+        r#"{"op":"step","axons":[0,1]}"#.to_string(),
+        r#"{"op":"step_many","batch":[[0,1],[],[]]}"#.to_string(),
+        r#"{"op":"read_membrane","ids":[0,1,2,3]}"#.to_string(),
+        r#"{"op":"cost"}"#.to_string(),
+        // a structured error: axon 9 does not exist (session survives)
+        r#"{"op":"step","axons":[9]}"#.to_string(),
+        r#"{"op":"reset"}"#.to_string(),
+        r#"{"op":"shutdown"}"#.to_string(),
+    ];
+    for req in &requests {
+        let (resp, done) = session.handle_line(req);
+        println!("-> {req}");
+        println!("<- {resp}");
+        if done {
+            break;
+        }
+    }
+
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

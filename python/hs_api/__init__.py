@@ -1,11 +1,29 @@
 """hs_api — the HiAER-Spike user-facing Python network API (paper §5).
 
-Build/author-time only: this package is used to define networks, simulate
-them on the local machine (the Fig-8 numpy simulator), and export them to
-the `.hsn` network format that the Rust coordinator compiles into the HBM
-synaptic routing table. It is never on the accelerated request path.
+Networks are *defined* once with :class:`CRI_network` and *executed* on
+a per-session backend: the local Fig-8 numpy simulator
+(``backend="local"``, the default) or any engine behind the Rust
+``Simulator`` facade via the JSON-lines session protocol
+(``backend="rust"`` — spawns ``hiaer-spike serve-session``). The
+`.hsn` export remains the hand-off format the Rust coordinator compiles
+into the HBM synaptic routing table. See README.md in this package for
+the local-vs-rust walkthrough.
 """
 
-from .neuron_models import ANN_neuron, LIF_neuron  # noqa: F401
+from .backend import (  # noqa: F401
+    LocalBackend,
+    RustSessionBackend,
+    SimBackend,
+    make_backend,
+)
+from .exceptions import (  # noqa: F401
+    HsBackendUnavailable,
+    HsError,
+    HsProtocolError,
+    HsSessionError,
+    HsStimulusError,
+)
 from .network import CRI_network  # noqa: F401
+from .neuron_models import ANN_neuron, LIF_neuron  # noqa: F401
+from .session import SessionClient, SubprocessTransport, find_server_binary  # noqa: F401
 from .simulator import NumpySimulator  # noqa: F401

@@ -1,0 +1,286 @@
+"""Pluggable execution backends for :class:`hs_api.network.CRI_network`.
+
+A backend is a *session*: it is configured once with a network and then
+drives every execution-facing call (``step`` / ``step_many`` /
+``read_membrane`` / ``reset`` / ``cost``). The network object owns keys,
+validation and key<->index mapping; backends only ever see global
+integer ids, which is exactly the Rust ``Simulator`` facade contract —
+so one network definition runs unchanged on either side of the language
+boundary:
+
+* :class:`LocalBackend` — the in-process numpy simulator (Fig 8), the
+  default and the golden model.
+* :class:`RustSessionBackend` — exports the network as ``.hsn``,
+  launches ``hiaer-spike serve-session`` and speaks the line-delimited
+  JSON protocol (``rust/src/sim/session.rs``) to any engine the Rust
+  facade can build (event-driven core, chunk-parallel pool, cluster,
+  XLA).
+
+Both return **sorted global output-neuron ids** from ``step`` and are
+bit-identical on the same network and seed (pinned by the golden
+transcript in ``testdata/`` and ``python/tests/test_golden_hsn.py``).
+"""
+
+from __future__ import annotations
+
+import abc
+import os
+import tempfile
+
+import numpy as np
+
+from .exceptions import HsBackendUnavailable, HsSessionError, HsStimulusError
+from .session import SessionClient, SubprocessTransport, find_server_binary
+from .simulator import NumpySimulator
+
+
+def _check_ids(ids, n: int, kind: str) -> None:
+    """Shared range check: both backends raise the same
+    :class:`HsStimulusError` (code ``stimulus``) for the same bad input
+    — no numpy wraparound, no bare IndexError, no wire-level
+    ``malformed_request`` divergence."""
+    for i in ids:
+        if not (0 <= int(i) < n):
+            raise HsStimulusError(
+                f"{kind} id {int(i)} out of range ({n} {kind}s)", code="stimulus"
+            )
+
+
+class SimBackend(abc.ABC):
+    """One execution session behind a ``CRI_network``."""
+
+    #: short identifier ("local", "rust", ...)
+    name: str = "?"
+
+    @abc.abstractmethod
+    def configure(self, network) -> None:
+        """Bind this backend to a built ``CRI_network`` (called once by
+        the network's constructor; may also be re-invoked to reload
+        after structural edits)."""
+
+    @abc.abstractmethod
+    def step(self, axon_ids: list[int]) -> list[int]:
+        """Advance one tick with the given fired global axon ids; return
+        the fired output-neuron ids, ascending."""
+
+    def step_many(self, batch: list[list[int]]) -> list[list[int]]:
+        """Advance one tick per batch entry; default is a step loop —
+        session backends override to use one protocol round trip."""
+        return [self.step(row) for row in batch]
+
+    @abc.abstractmethod
+    def read_membrane(self, ids: list[int]) -> list[int]:
+        """Membrane potentials for global neuron ids."""
+
+    @abc.abstractmethod
+    def reset(self) -> None:
+        """Restore membranes/step counter to the initial state."""
+
+    @abc.abstractmethod
+    def write_synapse(self, pre_is_axon: bool, pre: int, post: int,
+                      old_weight: int, new_weight: int) -> None:
+        """Propagate a synapse-weight edit into the running session."""
+
+    def cost(self) -> dict | None:
+        """Hardware cost counters since the last reset; ``None`` when the
+        backend does not model hardware cost."""
+        return None
+
+    def close(self) -> None:
+        """Release session resources (subprocesses, temp files)."""
+
+
+class LocalBackend(SimBackend):
+    """The Fig-8 numpy software simulator, densified in-process.
+
+    Exposes the underlying :class:`NumpySimulator` as ``.sim`` (tests
+    and notebooks poke at ``sim.v`` / ``sim.w_axon`` directly)."""
+
+    name = "local"
+
+    def __init__(self):
+        self.sim: NumpySimulator | None = None
+        self._out_sorted: np.ndarray | None = None
+
+    def configure(self, network) -> None:
+        n, a = network.n_neurons, network.n_axons
+        w_neuron = np.zeros((n, n), np.int32)
+        for i, syns in enumerate(network.neuron_syns):
+            for j, w in syns:
+                w_neuron[i, j] += w
+        w_axon = np.zeros((a, n), np.int32)
+        for i, syns in enumerate(network.axon_syns):
+            for j, w in syns:
+                w_axon[i, j] += w
+        self.sim = NumpySimulator(
+            w_axon, w_neuron, network.theta, network.nu, network.lam,
+            network.flags, network.base_seed,
+        )
+        self._out_sorted = np.unique(network.out_idx)
+
+    def step(self, axon_ids: list[int]) -> list[int]:
+        n_axons = self.sim.w_axon.shape[0]
+        _check_ids(axon_ids, n_axons, "axon")
+        axon_in = np.zeros(n_axons, np.int32)
+        for a in axon_ids:
+            axon_in[int(a)] = 1
+        spikes = self.sim.step(axon_in)
+        fired = self._out_sorted[spikes[self._out_sorted] != 0]
+        return [int(i) for i in fired]
+
+    def step_many(self, batch: list[list[int]]) -> list[list[int]]:
+        # mirror Simulator::step_many's atomic contract: validate the
+        # whole batch before any step executes
+        n_axons = self.sim.w_axon.shape[0]
+        for row in batch:
+            _check_ids(row, n_axons, "axon")
+        return [self.step(row) for row in batch]
+
+    def read_membrane(self, ids: list[int]) -> list[int]:
+        _check_ids(ids, len(self.sim.v), "neuron")
+        return [int(self.sim.v[i]) for i in ids]
+
+    def reset(self) -> None:
+        self.sim.reset()
+
+    def write_synapse(self, pre_is_axon, pre, post, old_weight, new_weight):
+        m = self.sim.w_axon if pre_is_axon else self.sim.w_neuron
+        m[pre, post] += np.int32(new_weight - old_weight)
+
+
+class RustSessionBackend(SimBackend):
+    """Session over the Rust ``Simulator`` facade via the JSON-lines
+    protocol: the network is exported to a temporary ``.hsn``, a
+    ``hiaer-spike serve-session`` subprocess is launched, and every call
+    becomes one request/response round trip (``step_many`` batches a
+    whole schedule into a single trip).
+
+    ``server_args`` forwards deployment flags to the server — e.g.
+    ``["--backend", "pool"]`` or ``["--cores", "4"]`` — so the same
+    Python network definition reaches every Rust engine. Note that the
+    network's ``base_seed`` is always sent with ``configure`` and takes
+    precedence over a ``--seed`` server flag: the seed belongs to the
+    network definition, which is what keeps ``local`` and ``rust``
+    sessions bit-identical. ``binary`` overrides discovery (default:
+    ``$HS_BIN``, workspace target dirs, ``$PATH``); a missing binary
+    raises :class:`~hs_api.exceptions.HsBackendUnavailable`.
+
+    Weight edits (``write_synapse``) re-export and re-``configure`` the
+    live session — the hardware-reload semantics: membranes reset.
+    """
+
+    name = "rust"
+
+    def __init__(self, binary: str | None = None,
+                 server_args: list[str] | None = None):
+        self._binary = binary
+        self._server_args = list(server_args or [])
+        self._client: SessionClient | None = None
+        self._hsn_path: str | None = None
+        self._network = None
+
+    def _launch(self) -> SessionClient:
+        binary = self._binary or find_server_binary()
+        if binary is None:
+            raise HsBackendUnavailable(
+                "no `hiaer-spike` binary found (build with `cargo build "
+                "--release` or point $HS_BIN at it)",
+                code="backend_unavailable",
+            )
+        transport = SubprocessTransport(binary, self._server_args)
+        try:
+            return SessionClient(transport)
+        except Exception:
+            transport.close()  # bad/failed greeting: don't orphan the child
+            raise
+
+    def configure(self, network) -> None:
+        self._network = network
+        try:
+            # launch first: a missing binary must fail fast without
+            # leaving an exported temp .hsn behind
+            if self._client is None:
+                self._client = self._launch()
+            if self._hsn_path is None:
+                fd, self._hsn_path = tempfile.mkstemp(suffix=".hsn", prefix="hs_api_")
+                os.close(fd)
+            network.export_hsn(self._hsn_path)
+            self._client.configure(self._hsn_path, seed=network.base_seed)
+        except Exception:
+            # a failed configure escapes CRI_network.__init__, so no one
+            # holds this backend to close() it later — clean up the
+            # subprocess and temp file here instead of leaking them
+            self.close()
+            raise
+
+    def _client_or_raise(self) -> SessionClient:
+        if self._client is None:
+            raise HsSessionError(
+                "session closed (a failed configure or close() tore it "
+                "down); build a new CRI_network to start another",
+                code="no_session",
+            )
+        return self._client
+
+    # stimulus rows go over the wire as-is: the server canonicalises
+    # (sort + dedup) once per row — the documented protocol contract
+
+    def step(self, axon_ids: list[int]) -> list[int]:
+        client = self._client_or_raise()
+        _check_ids(axon_ids, self._network.n_axons, "axon")
+        return client.step(axon_ids)
+
+    def step_many(self, batch: list[list[int]]) -> list[list[int]]:
+        # whole-batch range check before any chunk is sent: schedules
+        # longer than the server's per-request cap are split by the
+        # client, so without this a bad row in a later chunk would
+        # execute earlier chunks — diverging from the local backend's
+        # atomic validation
+        client = self._client_or_raise()
+        for row in batch:
+            _check_ids(row, self._network.n_axons, "axon")
+        return client.step_many(batch)
+
+    def read_membrane(self, ids: list[int]) -> list[int]:
+        client = self._client_or_raise()
+        _check_ids(ids, self._network.n_neurons, "neuron")
+        return client.read_membrane(ids)
+
+    def reset(self) -> None:
+        self._client_or_raise().reset()
+
+    def cost(self) -> dict | None:
+        return self._client_or_raise().cost()
+
+    def write_synapse(self, pre_is_axon, pre, post, old_weight, new_weight):
+        # weights live in the server's compiled HBM image: re-export and
+        # reconfigure the live session (replaces the simulator; membranes
+        # reset, matching a hardware routing-table reload). A closed
+        # session raises like every other op — no silent resurrection.
+        self._client_or_raise()
+        self.configure(self._network)
+
+    def close(self) -> None:
+        if self._client is not None:
+            self._client.close()
+            self._client = None
+        if self._hsn_path is not None:
+            try:
+                os.unlink(self._hsn_path)
+            except OSError:
+                pass
+            self._hsn_path = None
+
+
+def make_backend(spec) -> SimBackend:
+    """Resolve a ``backend=`` argument: ``"local"``, ``"rust"``, or an
+    already-constructed :class:`SimBackend` (passed through)."""
+    if isinstance(spec, SimBackend):
+        return spec
+    if spec == "local":
+        return LocalBackend()
+    if spec == "rust":
+        return RustSessionBackend()
+    raise ValueError(
+        f"unknown backend {spec!r} (options: 'local', 'rust', or a SimBackend instance)"
+    )

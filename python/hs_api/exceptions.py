@@ -1,0 +1,58 @@
+"""Typed hs_api exceptions, keyed by the session protocol's stable error
+codes (rust/src/sim/session.rs — the wire contract).
+
+Every exception carries ``.code``: the machine-readable protocol code
+that produced it (``None`` for purely client-side failures). Backends
+raise these instead of bare ``RuntimeError`` so callers can distinguish
+"your stimulus was bad" from "the engine is missing" programmatically.
+"""
+
+from __future__ import annotations
+
+
+class HsError(Exception):
+    """Base class for every hs_api error."""
+
+    def __init__(self, message: str, code: str | None = None):
+        super().__init__(message)
+        self.code = code
+
+
+class HsBackendUnavailable(HsError):
+    """The requested backend cannot run here (server binary missing,
+    build lacks a feature, subprocess died on launch)."""
+
+
+class HsStimulusError(HsError):
+    """Malformed runtime input: out-of-range axon or neuron id."""
+
+
+class HsProtocolError(HsError):
+    """The wire itself broke: unparseable line, unknown op, oversized
+    batch, protocol-version mismatch, or the server closed the stream."""
+
+
+class HsSessionError(HsError):
+    """Session-level failure: no configured simulator, bad network file,
+    or an engine error inside the server."""
+
+
+# protocol code -> exception class (codes are defined in
+# rust/src/sim/session.rs; unknown codes map to HsSessionError so a
+# newer server never crashes an older client with a KeyError)
+_CODE_MAP = {
+    "stimulus": HsStimulusError,
+    "backend_unavailable": HsBackendUnavailable,
+    "malformed_request": HsProtocolError,
+    "unknown_op": HsProtocolError,
+    "oversized_batch": HsProtocolError,
+    "no_session": HsSessionError,
+    "config": HsSessionError,
+    "engine": HsSessionError,
+}
+
+
+def error_from_code(code: str, message: str) -> HsError:
+    """Build the typed exception for a server-reported error code."""
+    cls = _CODE_MAP.get(code, HsSessionError)
+    return cls(message, code=code)

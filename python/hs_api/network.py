@@ -6,10 +6,27 @@ Networks are defined by three data structures:
 * ``neurons`` — dict: neuron key -> (list of outgoing synapses, neuron model)
 * ``outputs`` — list of neuron keys whose spiking is monitored
 
-`step(inputs)` runs one timestep on the local numpy simulator (Fig 8).
-`export_hsn(path)` serialises the flattened network to the binary `.hsn`
-format that the Rust coordinator compiles into the HBM routing table
-(rust/src/model_fmt/hsn.rs mirrors the reader).
+Execution is delegated to a pluggable **backend session**
+(:mod:`hs_api.backend`), selected per network instance:
+
+    net = CRI_network(axons, neurons, outputs)                  # local numpy
+    net = CRI_network(axons, neurons, outputs, backend="rust")  # Rust engine
+
+``backend="local"`` is the in-process Fig-8 numpy simulator;
+``backend="rust"`` exports the network as ``.hsn`` and drives a
+``hiaer-spike serve-session`` subprocess over the JSON-lines session
+protocol — same ``step`` results, bit-for-bit, with zero other code
+changes. A constructed :class:`~hs_api.backend.SimBackend` instance is
+also accepted (e.g. ``RustSessionBackend(server_args=["--backend",
+"pool"])`` to reach the other Rust engines).
+
+`step(inputs)` runs one timestep; `step_many(schedule)` runs a whole
+stimulus schedule in one backend round trip. `export_hsn(path)`
+serialises the flattened network to the binary `.hsn` format that the
+Rust coordinator compiles into the HBM routing table
+(rust/src/model_fmt/hsn.rs mirrors the reader; synapses are written in
+canonical target-sorted order so both languages produce identical
+bytes).
 """
 
 from __future__ import annotations
@@ -18,8 +35,8 @@ import struct
 
 import numpy as np
 
+from .backend import make_backend
 from .neuron_models import ANN_neuron, LIF_neuron
-from .simulator import NumpySimulator
 
 HSN_MAGIC = b"HSNET1\x00\x00"
 WEIGHT_MIN, WEIGHT_MAX = -(2**15), 2**15 - 1  # int16 synapses
@@ -28,7 +45,8 @@ WEIGHT_MIN, WEIGHT_MAX = -(2**15), 2**15 - 1  # int16 synapses
 class CRI_network:
     """A HiAER-Spike network with the hs_api interaction surface."""
 
-    def __init__(self, axons: dict, neurons: dict, outputs: list, base_seed: int = 0):
+    def __init__(self, axons: dict, neurons: dict, outputs: list,
+                 base_seed: int = 0, backend="local"):
         self.axon_keys = list(axons.keys())
         self.neuron_keys = list(neurons.keys())
         self.axon_index = {k: i for i, k in enumerate(self.axon_keys)}
@@ -38,29 +56,31 @@ class CRI_network:
         if len(self.neuron_index) != len(self.neuron_keys):
             raise ValueError("duplicate neuron keys")
 
-        n, a = len(self.neuron_keys), len(self.axon_keys)
+        n = len(self.neuron_keys)
         self.outputs = list(outputs)
         for k in self.outputs:
             if k not in self.neuron_index:
                 raise ValueError(f"output {k!r} is not a neuron")
+        self.base_seed = int(base_seed)
 
         # per-neuron model parameter arrays
-        theta = np.zeros(n, np.int32)
-        nu = np.zeros(n, np.int32)
-        lam = np.zeros(n, np.int32)
-        flags = np.zeros(n, np.int32)
+        self.theta = np.zeros(n, np.int32)
+        self.nu = np.zeros(n, np.int32)
+        self.lam = np.zeros(n, np.int32)
+        self.flags = np.zeros(n, np.int32)
         self.models = []
         for i, k in enumerate(self.neuron_keys):
             syns, model = neurons[k]
             if not isinstance(model, (LIF_neuron, ANN_neuron)):
                 raise TypeError(f"neuron {k!r}: bad model {model!r}")
-            theta[i] = model.theta
-            nu[i] = model.nu
-            lam[i] = model.lam
-            flags[i] = model.flags
+            self.theta[i] = model.theta
+            self.nu[i] = model.nu
+            self.lam[i] = model.lam
+            self.flags[i] = model.flags
             self.models.append(model)
 
-        # adjacency (kept sparse for export, densified for simulation)
+        # sparse adjacency: the canonical network definition (backends
+        # densify or export as needed)
         self.neuron_syns: list[list[tuple[int, int]]] = []
         for k in self.neuron_keys:
             syns, _ = neurons[k]
@@ -69,17 +89,12 @@ class CRI_network:
         for k in self.axon_keys:
             self.axon_syns.append([self._syn(k, s) for s in axons[k]])
 
-        w_neuron = np.zeros((n, n), np.int32)
-        for i, syns in enumerate(self.neuron_syns):
-            for j, w in syns:
-                w_neuron[i, j] += w
-        w_axon = np.zeros((a, n), np.int32)
-        for i, syns in enumerate(self.axon_syns):
-            for j, w in syns:
-                w_axon[i, j] += w
+        self.out_idx = np.array(
+            [self.neuron_index[k] for k in self.outputs], np.int64
+        )
 
-        self.sim = NumpySimulator(w_axon, w_neuron, theta, nu, lam, flags, base_seed)
-        self._out_idx = np.array([self.neuron_index[k] for k in self.outputs], np.int64)
+        self._backend = make_backend(backend)
+        self._backend.configure(self)
 
     def _syn(self, src, s):
         post, w = s
@@ -90,6 +105,27 @@ class CRI_network:
             raise ValueError(f"synapse {src!r}->{post!r}: weight {w} outside int16")
         return (self.neuron_index[post], w)
 
+    # ------------------------------------------------------------ accessors
+
+    @property
+    def n_neurons(self) -> int:
+        return len(self.neuron_keys)
+
+    @property
+    def n_axons(self) -> int:
+        return len(self.axon_keys)
+
+    @property
+    def backend(self):
+        """The live execution backend session."""
+        return self._backend
+
+    @property
+    def sim(self):
+        """The in-process :class:`NumpySimulator` when running on the
+        local backend (``None`` on session backends)."""
+        return getattr(self._backend, "sim", None)
+
     # ------------------------------------------------------------------ API
 
     def step(self, inputs: list, membranePotential: bool = False):
@@ -98,18 +134,52 @@ class CRI_network:
         Returns the list of output-neuron keys that spiked (and, when
         membranePotential=True, the list of (key, V) for every neuron).
         """
-        axon_in = np.zeros(len(self.axon_keys), np.int32)
-        for k in inputs:
-            axon_in[self.axon_index[k]] = 1
-        spikes = self.sim.step(axon_in)
-        fired = [k for k in self.outputs if spikes[self.neuron_index[k]]]
+        fired_idx = self._backend.step([self.axon_index[k] for k in inputs])
+        fired = self._fired_keys(fired_idx)
         if membranePotential:
-            pots = [(k, int(self.sim.v[i])) for i, k in enumerate(self.neuron_keys)]
-            return fired, pots
+            return fired, self._all_potentials()
         return fired
 
+    def step_many(self, schedule: list, membranePotential: bool = False):
+        """Run one timestep per entry of `schedule` (each entry a list of
+        axon keys) in a **single backend round trip** — on the Rust
+        session backend the whole stimulus batch crosses the wire once.
+
+        Returns one fired-output-keys list per step (and, when
+        membranePotential=True, the final (key, V) list)."""
+        batch = [[self.axon_index[k] for k in row] for row in schedule]
+        fired = [self._fired_keys(idx) for idx in self._backend.step_many(batch)]
+        if membranePotential:
+            return fired, self._all_potentials()
+        return fired
+
+    def _fired_keys(self, fired_idx):
+        fired_set = set(fired_idx)
+        return [k for k in self.outputs if self.neuron_index[k] in fired_set]
+
+    def _all_potentials(self):
+        v = self._backend.read_membrane(list(range(self.n_neurons)))
+        return list(zip(self.neuron_keys, (int(x) for x in v)))
+
     def reset(self):
-        self.sim.reset()
+        self._backend.reset()
+
+    def cost(self):
+        """Hardware cost counters since the last reset (session backends;
+        ``None`` on the local software simulator)."""
+        return self._backend.cost()
+
+    def close(self):
+        """Tear down the backend session (subprocess, temp files).
+        Idempotent; also available via ``with CRI_network(...) as net:``."""
+        self._backend.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     def read_synapse(self, pre, post) -> int:
         syns = self._syns_of(pre)
@@ -120,23 +190,33 @@ class CRI_network:
         raise KeyError(f"no synapse {pre!r} -> {post!r}")
 
     def write_synapse(self, pre, post, weight: int) -> None:
+        """Update one synapse weight in the definition **and** the live
+        backend session. On the local backend the dense matrices are
+        patched in place; the Rust session backend re-exports and
+        reconfigures (a hardware routing-table reload — membranes reset).
+        """
         if not (WEIGHT_MIN <= int(weight) <= WEIGHT_MAX):
             raise ValueError(f"weight {weight} outside int16")
         syns = self._syns_of(pre)
         j = self.neuron_index[post]
         for i, (t, w) in enumerate(syns):
             if t == j:
-                delta = int(weight) - w
                 syns[i] = (t, int(weight))
-                if pre in self.neuron_index:
-                    self.sim.w_neuron[self.neuron_index[pre], j] += delta
-                else:
-                    self.sim.w_axon[self.axon_index[pre], j] += delta
+                pre_is_axon = pre not in self.neuron_index
+                pre_idx = self.axon_index[pre] if pre_is_axon else self.neuron_index[pre]
+                try:
+                    self._backend.write_synapse(pre_is_axon, pre_idx, j, w, int(weight))
+                except Exception:
+                    # keep definition and live session in lockstep: a
+                    # failed propagation must not leave read_synapse
+                    # reporting a weight the session never loaded
+                    syns[i] = (t, w)
+                    raise
                 return
         raise KeyError(f"no synapse {pre!r} -> {post!r}")
 
     def read_membrane(self, *keys) -> list[int]:
-        return [int(self.sim.v[self.neuron_index[k]]) for k in keys]
+        return self._backend.read_membrane([self.neuron_index[k] for k in keys])
 
     def _syns_of(self, pre):
         if pre in self.neuron_index:
@@ -148,17 +228,22 @@ class CRI_network:
     # --------------------------------------------------------------- export
 
     def export_hsn(self, path: str, base_seed: int | None = None) -> None:
-        """Write the flattened network in the binary .hsn format."""
-        n, a = len(self.neuron_keys), len(self.axon_keys)
+        """Write the flattened network in the binary .hsn format.
+
+        Per-source synapse lists are written in canonical target-sorted
+        order (stable, duplicates keep insertion order) — the same form
+        `rust/src/snn` normalises to, so export -> Rust load -> Rust
+        write reproduces identical bytes (pinned by the golden blob in
+        testdata/)."""
+        n, a = self.n_neurons, self.n_axons
         out = bytearray()
         out += HSN_MAGIC
         out += struct.pack(
             "<IIIIi", a, n, len(self.outputs), 0,
-            int(base_seed if base_seed is not None else self.sim.base_seed),
+            int(base_seed if base_seed is not None else self.base_seed),
         )
-        sim = self.sim
         params = np.stack(
-            [sim.theta, sim.nu, sim.lam, sim.flags], axis=1
+            [self.theta, self.nu, self.lam, self.flags], axis=1
         ).astype("<i4")
         out += params.tobytes()
 
@@ -167,7 +252,8 @@ class CRI_network:
             for syns in adj:
                 buf += struct.pack("<I", len(syns))
                 if syns:
-                    arr = np.array(syns, np.int64)
+                    ordered = sorted(syns, key=lambda s: s[0])
+                    arr = np.array(ordered, np.int64)
                     rec = np.zeros(len(syns), dtype=[("t", "<u4"), ("w", "<i2")])
                     rec["t"] = arr[:, 0]
                     rec["w"] = arr[:, 1]
@@ -176,6 +262,6 @@ class CRI_network:
 
         out += pack_adj(self.neuron_syns)
         out += pack_adj(self.axon_syns)
-        out += np.asarray(self._out_idx, "<u4").tobytes()
+        out += np.asarray(self.out_idx, "<u4").tobytes()
         with open(path, "wb") as f:
             f.write(bytes(out))

@@ -1,0 +1,207 @@
+"""JSON-lines session protocol client — the Python half of the wire
+format defined in ``rust/src/sim/session.rs``.
+
+One JSON object per line in each direction; the server answers every
+request with exactly one response line, in order, and emits a ``hello``
+greeting (protocol version + backend) before the first request. Failed
+requests carry ``ok: false`` plus a stable ``code`` which
+:func:`hs_api.exceptions.error_from_code` maps to a typed exception.
+
+The transport is pluggable: :class:`SubprocessTransport` speaks to a
+spawned ``hiaer-spike serve-session`` process; tests inject fakes with
+the same three methods (``send_line`` / ``recv_line`` / ``close``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+
+from .exceptions import HsBackendUnavailable, HsProtocolError, error_from_code
+
+PROTOCOL_VERSION = 1
+
+#: Server-side cap on steps per `step_many` request
+#: (rust/src/sim/session.rs MAX_BATCH_STEPS); the client transparently
+#: splits longer schedules into compliant requests.
+MAX_BATCH_STEPS = 65_536
+
+#: Environment variable overriding server-binary discovery.
+HS_BIN_ENV = "HS_BIN"
+
+
+def find_server_binary() -> str | None:
+    """Locate the ``hiaer-spike`` binary: ``$HS_BIN``, the workspace
+    target dirs (release then debug), then ``$PATH``. Returns ``None``
+    when nothing is found (callers decide whether that is fatal)."""
+    env = os.environ.get(HS_BIN_ENV)
+    if env:
+        return env if os.path.isfile(env) else None
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    candidates = [
+        os.path.join(repo, "rust", "target", "release", "hiaer-spike"),
+        os.path.join(repo, "rust", "target", "debug", "hiaer-spike"),
+        os.path.join(repo, "target", "release", "hiaer-spike"),
+        os.path.join(repo, "target", "debug", "hiaer-spike"),
+    ]
+    for c in candidates:
+        if os.path.isfile(c) and os.access(c, os.X_OK):
+            return c
+    return shutil.which("hiaer-spike")
+
+
+class SubprocessTransport:
+    """Line transport over a spawned ``hiaer-spike serve-session``
+    subprocess (stdin/stdout pipes, line-buffered text mode)."""
+
+    def __init__(self, binary: str, extra_args: list[str] | None = None):
+        argv = [binary, "serve-session", *(extra_args or [])]
+        try:
+            self.proc = subprocess.Popen(
+                argv,
+                stdin=subprocess.PIPE,
+                stdout=subprocess.PIPE,
+                stderr=subprocess.PIPE,
+                text=True,
+                bufsize=1,
+            )
+        except OSError as e:
+            raise HsBackendUnavailable(
+                f"could not launch {argv[0]!r}: {e}", code="backend_unavailable"
+            ) from e
+
+    def send_line(self, line: str) -> None:
+        try:
+            self.proc.stdin.write(line + "\n")
+            self.proc.stdin.flush()
+        except (BrokenPipeError, ValueError) as e:
+            raise HsProtocolError(f"server pipe closed: {e}", code="closed") from e
+
+    def recv_line(self) -> str:
+        line = self.proc.stdout.readline()
+        if not line:
+            # include the server's dying words (e.g. a listed-options
+            # flag error) instead of an opaque "closed"
+            detail = ""
+            try:
+                err = self.proc.stderr.read() if self.proc.stderr else ""
+                if err.strip():
+                    detail = f" (server stderr: {err.strip()[-500:]})"
+            except (OSError, ValueError):
+                pass
+            raise HsProtocolError(
+                f"server closed the connection{detail}", code="closed"
+            )
+        return line.rstrip("\n")
+
+    def close(self) -> None:
+        for pipe in (self.proc.stdin, self.proc.stdout, self.proc.stderr):
+            try:
+                if pipe and not pipe.closed:
+                    pipe.close()
+            except OSError:
+                pass
+        try:
+            self.proc.wait(timeout=5)
+        except subprocess.TimeoutExpired:
+            self.proc.kill()
+            self.proc.wait()
+
+
+class SessionClient:
+    """Synchronous request/response client for one protocol session.
+
+    ``transport`` needs ``send_line`` / ``recv_line`` / ``close``. On
+    construction the client consumes the server's ``hello`` greeting and
+    checks the protocol version (disable with ``expect_hello=False`` for
+    transports that do not greet)."""
+
+    def __init__(self, transport, expect_hello: bool = True):
+        self.transport = transport
+        self.server_backend: str | None = None
+        if expect_hello:
+            hello = self._recv()
+            if hello.get("op") != "hello" or not hello.get("ok"):
+                raise HsProtocolError(f"expected hello greeting, got {hello!r}")
+            if hello.get("protocol") != PROTOCOL_VERSION:
+                raise HsProtocolError(
+                    f"protocol version mismatch: server speaks "
+                    f"{hello.get('protocol')!r}, client speaks {PROTOCOL_VERSION}"
+                )
+            self.server_backend = hello.get("backend")
+
+    # ------------------------------------------------------------- plumbing
+
+    def _recv(self) -> dict:
+        line = self.transport.recv_line()
+        try:
+            resp = json.loads(line)
+        except ValueError as e:
+            raise HsProtocolError(f"unparseable server line {line!r}: {e}") from e
+        if not isinstance(resp, dict):
+            raise HsProtocolError(f"server line is not an object: {line!r}")
+        return resp
+
+    def request(self, op: str, **fields) -> dict:
+        """Send one request, block for its response; raise the typed
+        exception for ``ok: false`` responses."""
+        payload = {"op": op, **fields}
+        self.transport.send_line(json.dumps(payload, separators=(",", ":")))
+        resp = self._recv()
+        if not resp.get("ok"):
+            raise error_from_code(
+                resp.get("code", "engine"), resp.get("error", f"{op} failed: {resp!r}")
+            )
+        return resp
+
+    # ------------------------------------------------------------------ ops
+
+    def configure(self, net_path: str, seed: int | None = None) -> dict:
+        fields = {"net": net_path}
+        if seed is not None:
+            fields["seed"] = int(seed)
+        return self.request("configure", **fields)
+
+    def step(self, axons: list[int]) -> list[int]:
+        """One tick; returns fired output-neuron ids (ascending)."""
+        return self.request("step", axons=[int(a) for a in axons])["spikes"]
+
+    def step_many(self, batch: list[list[int]]) -> list[list[int]]:
+        """A whole stimulus batch in one round trip (split transparently
+        into <= MAX_BATCH_STEPS-step requests for longer schedules, so
+        schedules that run locally run over the wire too); returns the
+        per-step output-spike lists. Each request is validated atomically
+        server-side; with multiple chunks, earlier chunks may have
+        executed when a later chunk's stimulus is rejected."""
+        rows = [[int(a) for a in row] for row in batch]
+        spikes: list[list[int]] = []
+        for i in range(0, len(rows), MAX_BATCH_STEPS):
+            spikes.extend(
+                self.request("step_many", batch=rows[i:i + MAX_BATCH_STEPS])["spikes"]
+            )
+        return spikes
+
+    def read_membrane(self, ids: list[int]) -> list[int]:
+        return self.request("read_membrane", ids=[int(i) for i in ids])["v"]
+
+    def reset(self) -> None:
+        self.request("reset")
+
+    def cost(self) -> dict:
+        """Aggregate cost counters since the last reset (energy_uj,
+        latency_us, hbm_rows, events, cycles, backend)."""
+        resp = self.request("cost")
+        return {k: v for k, v in resp.items() if k not in ("ok", "op")}
+
+    def shutdown(self) -> None:
+        self.request("shutdown")
+
+    def close(self) -> None:
+        """Best-effort shutdown + transport teardown (idempotent)."""
+        try:
+            self.shutdown()
+        except HsProtocolError:
+            pass  # pipe already gone
+        self.transport.close()

@@ -1,4 +1,6 @@
-"""Fig-8 numpy software simulator — bit-exact with compile.kernels.ref.
+"""Fig-8 numpy software simulator — bit-exact with compile.kernels.ref
+and with the Rust engines (the `hs_api.backend.LocalBackend` wraps this;
+the cross-language golden transcript in testdata/ pins the parity).
 
 Sparse weight matrices are stored as CSR-ish (indices per row) but the
 update itself follows the exact phase order of the hardware:

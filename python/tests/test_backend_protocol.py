@@ -1,0 +1,344 @@
+"""Session-protocol client + backend-pluggability tests against fake
+transports/backends — no Rust subprocess required. The wire format is
+rust/src/sim/session.rs; these tests pin the client half: greeting
+checks, request marshalling (one line per request, one line per
+*batch*), and the stable-code -> typed-exception mapping."""
+
+import json
+
+import pytest
+
+from hs_api import (
+    CRI_network,
+    HsBackendUnavailable,
+    HsProtocolError,
+    HsSessionError,
+    HsStimulusError,
+    LIF_neuron,
+    SessionClient,
+)
+from hs_api.backend import SimBackend, make_backend, LocalBackend, RustSessionBackend
+from hs_api.exceptions import error_from_code
+
+
+HELLO = {"ok": True, "op": "hello", "protocol": 1, "backend": "rust"}
+
+
+class FakeTransport:
+    """Scripted transport: canned response lines, recorded sends."""
+
+    def __init__(self, responses, hello=True):
+        self.responses = ([json.dumps(HELLO)] if hello else []) + list(responses)
+        self.sent = []
+        self.closed = False
+
+    def send_line(self, line):
+        self.sent.append(line)
+
+    def recv_line(self):
+        if not self.responses:
+            raise HsProtocolError("server closed the connection", code="closed")
+        return self.responses.pop(0)
+
+    def close(self):
+        self.closed = True
+
+
+def client_with(*responses):
+    return SessionClient(FakeTransport([json.dumps(r) for r in responses]))
+
+
+# ------------------------------------------------------------ hello / framing
+
+
+def test_hello_is_consumed_and_version_checked():
+    t = FakeTransport([])
+    c = SessionClient(t)
+    assert c.server_backend == "rust"
+    assert t.sent == []  # greeting is read, nothing sent
+
+
+def test_protocol_version_mismatch_raises():
+    bad = dict(HELLO, protocol=99)
+    with pytest.raises(HsProtocolError, match="version mismatch"):
+        SessionClient(FakeTransport([json.dumps(bad)], hello=False))
+
+
+def test_missing_hello_raises():
+    with pytest.raises(HsProtocolError, match="hello"):
+        SessionClient(FakeTransport([json.dumps({"ok": True, "op": "step"})], hello=False))
+
+
+def test_unparseable_server_line_raises_protocol_error():
+    t = FakeTransport(["{nope"])
+    c = SessionClient(t)
+    with pytest.raises(HsProtocolError, match="unparseable"):
+        c.reset()
+
+
+def test_closed_stream_raises_protocol_error():
+    c = SessionClient(FakeTransport([]))
+    with pytest.raises(HsProtocolError) as ei:
+        c.step([0])
+    assert ei.value.code == "closed"
+
+
+# ------------------------------------------------------- request marshalling
+
+
+def test_step_sends_one_line_and_returns_spikes():
+    c = client_with({"ok": True, "op": "step", "spikes": [1, 3], "fired": 4})
+    assert c.step([0, 2]) == [1, 3]
+    sent = json.loads(c.transport.sent[-1])
+    assert sent == {"op": "step", "axons": [0, 2]}
+
+
+def test_step_many_sends_single_line_per_batch():
+    c = client_with({"ok": True, "op": "step_many", "spikes": [[], [1], [0, 1]],
+                     "fired_total": 5})
+    batch = [[0], [], [0, 1]]
+    assert c.step_many(batch) == [[], [1], [0, 1]]
+    assert len(c.transport.sent) == 1, "a batch must cross the wire as ONE line"
+    sent = json.loads(c.transport.sent[0])
+    assert sent == {"op": "step_many", "batch": batch}
+
+
+def test_configure_and_cost_round_trip():
+    c = client_with(
+        {"ok": True, "op": "configure", "protocol": 1, "backend": "rust",
+         "neurons": 4, "axons": 2, "outputs": 2},
+        {"ok": True, "op": "cost", "energy_uj": 1.5, "latency_us": 0.25,
+         "hbm_rows": 7, "events": 9, "cycles": 410, "backend": "rust"},
+    )
+    conf = c.configure("/tmp/net.hsn", seed=7)
+    assert conf["neurons"] == 4
+    assert json.loads(c.transport.sent[0]) == {
+        "op": "configure", "net": "/tmp/net.hsn", "seed": 7}
+    cost = c.cost()
+    assert cost == {"energy_uj": 1.5, "latency_us": 0.25, "hbm_rows": 7,
+                    "events": 9, "cycles": 410, "backend": "rust"}
+
+
+# ----------------------------------------------- stable codes -> exceptions
+
+
+@pytest.mark.parametrize(
+    "code,exc",
+    [
+        ("stimulus", HsStimulusError),
+        ("backend_unavailable", HsBackendUnavailable),
+        ("malformed_request", HsProtocolError),
+        ("unknown_op", HsProtocolError),
+        ("oversized_batch", HsProtocolError),
+        ("no_session", HsSessionError),
+        ("config", HsSessionError),
+        ("engine", HsSessionError),
+    ],
+)
+def test_error_codes_map_to_typed_exceptions(code, exc):
+    c = client_with({"ok": False, "code": code, "error": f"boom ({code})"})
+    with pytest.raises(exc) as ei:
+        c.step([0])
+    assert ei.value.code == code
+    assert code in str(ei.value)
+
+
+def test_unknown_future_code_degrades_to_session_error():
+    err = error_from_code("quantum_flux", "novel failure")
+    assert isinstance(err, HsSessionError)
+    assert err.code == "quantum_flux"
+
+
+def test_error_recovery_session_stays_usable():
+    c = client_with(
+        {"ok": False, "code": "stimulus", "error": "axon id 9 out of range"},
+        {"ok": True, "op": "step", "spikes": [0], "fired": 1},
+    )
+    with pytest.raises(HsStimulusError):
+        c.step([9])
+    assert c.step([0]) == [0]  # next request proceeds over the same session
+
+
+# --------------------------------------------------- CRI_network + backends
+
+
+def fig6(backend="local"):
+    lif_ab = LIF_neuron(theta=3, nu=0, lam=63)
+    axons = {"alpha": [("a", 3)], "beta": [("b", 3)]}
+    neurons = {"a": ([("b", 1)], lif_ab), "b": ([], lif_ab)}
+    return CRI_network(axons, neurons, outputs=["b", "a"], base_seed=0,
+                       backend=backend)
+
+
+class RecordingBackend(SimBackend):
+    """Minimal fake backend: records calls, spikes everything asked."""
+
+    name = "recording"
+
+    def __init__(self, fired):
+        self.fired = fired
+        self.calls = []
+
+    def configure(self, network):
+        self.calls.append(("configure", network.n_neurons, network.n_axons))
+
+    def step(self, axon_ids):
+        self.calls.append(("step", list(axon_ids)))
+        return list(self.fired)
+
+    def read_membrane(self, ids):
+        self.calls.append(("read_membrane", list(ids)))
+        return [0] * len(ids)
+
+    def reset(self):
+        self.calls.append(("reset",))
+
+    def write_synapse(self, *a):
+        self.calls.append(("write_synapse", *a))
+
+
+def test_network_maps_keys_to_global_ids_and_back():
+    b = RecordingBackend(fired=[0, 1])
+    net = fig6(backend=b)
+    assert b.calls[0] == ("configure", 2, 2)
+    fired = net.step(["beta", "alpha"])
+    # axon keys map to indices in construction order; fired ids map back
+    # to keys in OUTPUTS-LIST order (the paper API's step contract)
+    assert b.calls[-1] == ("step", [1, 0])
+    assert fired == ["b", "a"]
+
+
+def test_network_step_unknown_axon_key_raises_keyerror():
+    net = fig6()
+    with pytest.raises(KeyError):
+        net.step(["gamma"])
+
+
+def test_make_backend_resolution():
+    assert isinstance(make_backend("local"), LocalBackend)
+    assert isinstance(make_backend("rust"), RustSessionBackend)
+    b = LocalBackend()
+    assert make_backend(b) is b
+    with pytest.raises(ValueError, match="unknown backend"):
+        make_backend("fpga9000")
+
+
+def test_local_backend_parity_step_vs_step_many_and_reset():
+    a, b = fig6(), fig6()
+    sched = [["alpha", "beta"], ["alpha"], [], ["beta"], []]
+    want = [a.step(row) for row in sched]
+    assert b.step_many(sched) == want
+    assert b.read_membrane("a", "b") == a.read_membrane("a", "b")
+    b.reset()
+    assert b.read_membrane("a", "b") == [0, 0]
+    assert b.step_many(sched) == want, "post-reset replay is deterministic"
+
+
+def test_local_backend_rejects_out_of_range_ids():
+    net = fig6()
+    with pytest.raises(HsStimulusError):
+        net.backend.step([-1])  # no silent numpy wraparound
+    with pytest.raises(HsStimulusError):
+        net.backend.step([2])
+    with pytest.raises(HsStimulusError):
+        net.backend.read_membrane([-1])  # same class as the rust backend
+    with pytest.raises(HsStimulusError):
+        net.backend.read_membrane([9])
+    # batch validation is atomic: a bad row mid-batch executes nothing
+    v0 = net.backend.read_membrane([0, 1])
+    with pytest.raises(HsStimulusError):
+        net.backend.step_many([[0], [5], [1]])
+    assert net.backend.read_membrane([0, 1]) == v0
+
+
+def test_step_many_client_chunks_oversized_schedules(monkeypatch):
+    import hs_api.session as session_mod
+
+    monkeypatch.setattr(session_mod, "MAX_BATCH_STEPS", 2)
+    c = client_with(
+        {"ok": True, "op": "step_many", "spikes": [[0], [1]], "fired_total": 2},
+        {"ok": True, "op": "step_many", "spikes": [[0, 1]], "fired_total": 2},
+    )
+    got = c.step_many([[0], [], [0, 1]])
+    assert got == [[0], [1], [0, 1]], "chunk results concatenate in order"
+    sent = [json.loads(s) for s in c.transport.sent]
+    assert [len(s["batch"]) for s in sent] == [2, 1], "split at the server cap"
+
+
+def test_write_synapse_rolls_back_on_backend_failure():
+    class ExplodingBackend(RecordingBackend):
+        def write_synapse(self, *a):
+            raise RuntimeError("session died")
+
+    net = fig6(backend=ExplodingBackend(fired=[]))
+    before = net.read_synapse("alpha", "a")
+    with pytest.raises(RuntimeError):
+        net.write_synapse("alpha", "a", before + 1)
+    assert net.read_synapse("alpha", "a") == before, (
+        "definition must not diverge from the live session"
+    )
+
+
+def test_rust_backend_without_binary_is_unavailable(monkeypatch):
+    import hs_api.backend as backend_mod
+
+    monkeypatch.setattr(backend_mod, "find_server_binary", lambda: None)
+    monkeypatch.delenv("HS_BIN", raising=False)
+    with pytest.raises(HsBackendUnavailable):
+        fig6(backend="rust")
+
+
+def test_rust_backend_failed_configure_cleans_up(monkeypatch):
+    """A configure that fails inside CRI_network.__init__ must not leak
+    the session or the exported temp .hsn (nobody holds the backend to
+    close() it afterwards)."""
+    import os
+
+    class FakeClient:
+        def __init__(self):
+            self.closed = False
+
+        def configure(self, *a, **k):
+            raise HsSessionError("backend `xla` is unavailable", code="backend_unavailable")
+
+        def close(self):
+            self.closed = True
+
+    fake = FakeClient()
+    b = RustSessionBackend()
+    monkeypatch.setattr(b, "_launch", lambda: fake)
+    with pytest.raises(HsSessionError):
+        fig6(backend=b)
+    assert fake.closed, "session client must be closed on failed configure"
+    assert b._hsn_path is None or not os.path.exists(b._hsn_path), "temp .hsn leaked"
+    # later calls on the torn-down backend raise a typed error, not
+    # AttributeError on a None client
+    with pytest.raises(HsSessionError, match="session closed"):
+        b.step([0])
+    with pytest.raises(HsSessionError, match="session closed"):
+        b.cost()
+
+
+def test_rust_backend_step_many_validates_batch_before_sending(monkeypatch):
+    """Atomicity parity with the local backend: a bad row anywhere in the
+    schedule is rejected before ANY chunk crosses the wire."""
+
+    class NoSendClient:
+        def step_many(self, batch):
+            raise AssertionError("batch must not be sent")
+
+    b = RustSessionBackend()
+    b._client = NoSendClient()
+    b._network = fig6()  # n_axons == 2
+    with pytest.raises(HsStimulusError):
+        b.step_many([[0], [5], [1]])
+    with pytest.raises(HsStimulusError):
+        b.step_many([[-1]])
+    # single-step path raises the same class (not a wire-level
+    # malformed_request), and a closed session never resurrects on
+    # write_synapse
+    with pytest.raises(HsStimulusError):
+        b.step([-1])
+    b._client = None
+    with pytest.raises(HsSessionError, match="session closed"):
+        b.write_synapse(True, 0, 0, 3, 4)

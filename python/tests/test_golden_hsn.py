@@ -1,0 +1,98 @@
+"""Cross-language HSN parity, Python half (Rust half:
+rust/tests/hsn_golden.rs):
+
+* `export_hsn` reproduces the committed golden byte blob exactly;
+* the local numpy backend replays the committed spike/membrane
+  transcript bit-exactly (so the two language halves pin each other
+  through the shared files in testdata/);
+* `step_many` equals the equivalent `step` loop on the local backend.
+"""
+
+import json
+import os
+
+import pytest
+
+TESTDATA = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..", "testdata")
+
+
+def load_transcript():
+    with open(os.path.join(TESTDATA, "fig6_golden_transcript.json")) as f:
+        return json.load(f)
+
+
+def golden_network(backend="local"):
+    import tools.gen_golden_hsn as gen  # the committed generator is the spec
+
+    return gen.fig6_network(backend=backend)
+
+
+def test_export_hsn_reproduces_golden_bytes(tmp_path):
+    with open(os.path.join(TESTDATA, "fig6_golden.hsn"), "rb") as f:
+        want = f.read()
+    net = golden_network()
+    p = tmp_path / "fig6.hsn"
+    net.export_hsn(str(p))
+    got = p.read_bytes()
+    assert got == want, (
+        "export_hsn bytes diverged from testdata/fig6_golden.hsn — if the "
+        "format changed deliberately, regenerate with "
+        "python3 python/tools/gen_golden_hsn.py and update the Rust side"
+    )
+
+
+def test_local_backend_replays_golden_transcript():
+    t = load_transcript()
+    net = golden_network()
+    assert net.n_neurons == t["n_neurons"] and net.n_axons == t["n_axons"]
+    all_ids = list(range(net.n_neurons))
+    for step, axon_ids in enumerate(t["stimulus"]):
+        fired = net.backend.step(axon_ids)
+        assert fired == t["output_spikes"][step], f"step {step}: output spikes"
+        assert net.backend.read_membrane(all_ids) == t["membranes"][step], (
+            f"step {step}: membranes"
+        )
+
+
+def test_step_many_matches_step_loop_locally():
+    t = load_transcript()
+    looped = golden_network()
+    batched = golden_network()
+    want = [looped.backend.step(row) for row in t["stimulus"]]
+    got = batched.backend.step_many(t["stimulus"])
+    assert got == want
+    all_ids = list(range(looped.n_neurons))
+    assert batched.backend.read_membrane(all_ids) == looped.backend.read_membrane(all_ids)
+
+    # and through the key-mapping layer
+    key_sched = [["alpha", "beta"], ["beta"], [], []]
+    a = golden_network()
+    b = golden_network()
+    assert a.step_many(key_sched) == [b.step(row) for row in key_sched]
+
+
+def test_generator_is_in_sync_with_testdata(tmp_path):
+    """Running the committed generator must be a no-op against testdata
+    (guards against editing one side and forgetting the other)."""
+    import tools.gen_golden_hsn as gen
+
+    net = gen.fig6_network()
+    sched = gen.stimulus_schedule(net.n_axons)
+    t = load_transcript()
+    assert sched == t["stimulus"], "generator stimulus drifted from committed transcript"
+    assert gen.BASE_SEED == t["base_seed"]
+
+
+@pytest.mark.skipif(
+    __import__("hs_api").find_server_binary() is None,
+    reason="no hiaer-spike binary in this environment",
+)
+def test_rust_backend_replays_golden_transcript():
+    """Full cross-language loop when a server binary is available: the
+    Rust session backend replays the numpy-generated transcript."""
+    t = load_transcript()
+    with golden_network(backend="rust") as net:
+        got = net.backend.step_many(t["stimulus"])
+        assert got == t["output_spikes"]
+        all_ids = list(range(net.n_neurons))
+        assert net.backend.read_membrane(all_ids) == t["membranes"][-1]

@@ -1,5 +1,8 @@
 """hs_api user-API tests: the Fig-6 example network, simulator parity with
-the jnp oracle, synapse read/write, and .hsn export round-trip structure."""
+the jnp oracle, synapse read/write, and .hsn export round-trip structure.
+The v2 (backend-pluggable) surface — backend sessions, step_many, typed
+protocol errors — is covered in test_backend_protocol.py and
+test_golden_hsn.py; this file pins the classic key-level API."""
 
 import struct
 
@@ -102,6 +105,47 @@ def test_weight_range_validation():
         LIF_neuron(theta=1, nu=99)
     with pytest.raises(ValueError):
         LIF_neuron(theta=1, lam=64)
+
+
+def test_v2_surface_on_local_backend():
+    """The v2 session surface exists and is coherent on the default
+    local backend: named backend, step_many == step loop, no hardware
+    cost, idempotent close / context manager."""
+    with fig6_network() as net:
+        assert net.backend.name == "local"
+        assert net.sim is not None  # notebooks poke at the numpy sim
+        ref = fig6_network()
+        sched = [["alpha", "beta"], ["alpha", "beta"], [], []]
+        assert net.step_many(sched) == [ref.step(row) for row in sched]
+        assert net.cost() is None
+        net.close()  # idempotent
+
+
+def test_hsn_export_canonical_target_sorted(tmp_path):
+    """Per-source synapse order in the .hsn is canonical (sorted by
+    target) regardless of definition order — the property that makes
+    Python and Rust writes byte-identical."""
+    lif = LIF_neuron(theta=9)
+    # 'x' lists targets in DESCENDING index order on purpose
+    neurons = {
+        "a": ([], lif),
+        "b": ([], lif),
+        "x": ([("b", 5), ("a", 4)], lif),
+    }
+    net = CRI_network({"in": [("x", 1)]}, neurons, outputs=["x"])
+    p = tmp_path / "sorted.hsn"
+    net.export_hsn(str(p))
+    blob = p.read_bytes()
+    n = 3
+    # first adjacency region: neuron 'a' (count 0), 'b' (count 0), then
+    # 'x' with 2 records — targets must come out ascending (a=0, b=1)
+    off = 8 + 20 + 16 * n
+    counts_and_x = struct.unpack_from("<III", blob, off)
+    assert counts_and_x == (0, 0, 2)
+    t0, w0 = struct.unpack_from("<Ih", blob, off + 12)
+    t1, w1 = struct.unpack_from("<Ih", blob, off + 12 + 6)
+    assert (t0, w0) == (0, 4), "lower target first after canonicalisation"
+    assert (t1, w1) == (1, 5)
 
 
 def test_hsn_export_header(tmp_path):

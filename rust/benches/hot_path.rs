@@ -262,6 +262,32 @@ fn main() {
         sweep_chunked_rate / sweep_rate
     );
 
+    // batched stimulus marshalling: one `step_many(batch)` call vs the
+    // per-step `step` loop on the same n=100k net (fresh engines; the
+    // session protocol and `run` ride on step_many)
+    let batch: Vec<Vec<u32>> = (0..steps).map(|s| drive(s, net.n_axons())).collect();
+    let mut loop_sim = SimConfig::new(net.clone()).backend(Backend::Rust).build().unwrap();
+    let t0 = Instant::now();
+    for axons in &batch {
+        loop_sim.step(axons).unwrap();
+    }
+    let step_loop_rate = steps as f64 / t0.elapsed().as_secs_f64();
+    let mut many_sim = SimConfig::new(net.clone()).backend(Backend::Rust).build().unwrap();
+    let t0 = Instant::now();
+    let br = many_sim.step_many(&batch).unwrap();
+    let stepmany_rate = steps as f64 / t0.elapsed().as_secs_f64();
+    assert_eq!(
+        loop_sim.read_membrane(&all_ids),
+        many_sim.read_membrane(&all_ids),
+        "step_many must stay bit-exact with the step loop"
+    );
+    let stepmany_speedup = stepmany_rate / step_loop_rate;
+    println!(
+        "  step_many batch : {step_loop_rate:>10.0} steps/s per-step loop, \
+         {stepmany_rate:>10.0} batched ({stepmany_speedup:.2}x, {} fired)",
+        br.fired_total
+    );
+
     // ---- append one record to the perf trajectory (one entry per PR)
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -299,6 +325,9 @@ fn main() {
         ("events_per_s", Json::Num(events_per_s)),
         ("sweep_steps_per_s", Json::Num(sweep_rate)),
         ("sweep_chunked_steps_per_s", Json::Num(sweep_chunked_rate)),
+        ("step_loop_steps_per_s", Json::Num(step_loop_rate)),
+        ("stepmany_steps_per_s", Json::Num(stepmany_rate)),
+        ("stepmany_speedup", Json::Num(stepmany_speedup)),
         // semantics marker: since PR 3 the chunk-parallel number is an
         // idle facade step (sweep + empty route), not phase_update alone
         // — a cross-PR-3 diff of this key is not apples-to-apples

@@ -262,7 +262,7 @@ impl<B: UpdateBackend> CoreEngine<B> {
 
 // ---- facade adapter -------------------------------------------------------
 
-use crate::sim::{CostSummary, SimError, Simulator, StepResult};
+use crate::sim::{BatchResult, CostSummary, SimError, Simulator, StepResult};
 
 /// The event-driven core as a [`Simulator`] session (backends `rust`
 /// and `xla` of the facade). Inherent methods keep precedence for
@@ -272,6 +272,23 @@ impl<B: UpdateBackend> Simulator for CoreEngine<B> {
         crate::sim::check_axons(axon_in, self.hbm.image.axon_ptr_row.len())?;
         CoreEngine::step(self, axon_in)?;
         Ok(StepResult { fired: &self.fired_buf, output_spikes: &self.out_buf })
+    }
+
+    /// Batched override: one stimulus marshal (range validation) for the
+    /// whole batch, then the inherent per-step loop with the per-step
+    /// re-check skipped. Bit-identical to the default `step` loop.
+    fn step_many(&mut self, batch: &[Vec<u32>]) -> Result<BatchResult, SimError> {
+        let n_axons = self.hbm.image.axon_ptr_row.len();
+        for axons in batch {
+            crate::sim::check_axons(axons, n_axons)?;
+        }
+        let mut result = BatchResult { spikes: Vec::with_capacity(batch.len()), fired_total: 0 };
+        for axons in batch {
+            let out = CoreEngine::step(self, axons)?;
+            result.fired_total += out.fired.len() as u64;
+            result.spikes.push(out.output_spikes.to_vec());
+        }
+        Ok(result)
     }
 
     fn fired(&self) -> &[u32] {

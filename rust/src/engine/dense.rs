@@ -142,6 +142,9 @@ impl DenseSim {
 }
 
 impl Simulator for DenseSim {
+    // no step_many override: the software baseline keeps the default
+    // trait body (whole-batch validation, per-step loop) — only the hot
+    // event-driven engine amortises the per-step re-check
     fn step(&mut self, axon_in: &[u32]) -> Result<StepResult<'_>, SimError> {
         crate::sim::check_axons(axon_in, self.n_axons)?;
         self.engine.step(axon_in);

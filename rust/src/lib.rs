@@ -11,9 +11,12 @@
 //! The crate is organised as the paper's stack:
 //!
 //! * [`sim`] — the unified `Simulator` session API: one backend-neutral
-//!   `step`/`run`/`run_many` surface over dense / event-driven / pooled /
-//!   clustered / XLA execution (paper §5's "interface agnostic to
-//!   hardware-level detail").
+//!   `step`/`step_many`/`run`/`run_many` surface over dense /
+//!   event-driven / pooled / clustered / XLA execution (paper §5's
+//!   "interface agnostic to hardware-level detail"), plus
+//!   [`sim::session`], the line-delimited JSON protocol that the Python
+//!   `hs_api` front end (`backend="rust"`) speaks to it via
+//!   `hiaer-spike serve-session`.
 //! * [`snn`] — network model primitives (axons, neurons, neuron models,
 //!   synapses) mirroring the `hs_api` Python interface; connectivity is
 //!   stored CSR (flat target/weight arrays + offset tables).

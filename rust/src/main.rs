@@ -5,6 +5,7 @@
 //!   run     <net.hsn> <stimulus.txt>  execute a network on the cluster sim
 //!   convert <model.hsl> <out.hsn>     PyTorch layer graph -> network
 //!   serve   <spool-dir>               NSG-style job daemon (poll a dir)
+//!   serve-session                     JSON-lines session protocol on stdio
 //!   bench-step <net.hsn>              steps/s of the hot loop
 //!
 //! Every execution path goes through the unified `sim` facade: the
@@ -44,6 +45,7 @@ fn real_main() -> Result<()> {
         "run" => cmd_run(&args),
         "convert" => cmd_convert(&args),
         "serve" => cmd_serve(&args),
+        "serve-session" => cmd_serve_session(&args),
         "bench-step" => cmd_bench_step(&args),
         other => bail!("unknown subcommand {other:?} (try --help)"),
     }
@@ -60,6 +62,11 @@ fn print_help() {
            run <net.hsn> <stimulus.txt>    execute on the cluster simulator\n\
            convert <model.hsl> <out.hsn>   layer graph -> network (Supp A.2)\n\
            serve <spool-dir>               job daemon: runs <id>.job files\n\
+           serve-session                   JSON-lines session protocol on\n\
+                                           stdin/stdout (the hs_api\n\
+                                           backend=\"rust\" transport; see\n\
+                                           sim::session docs for the wire\n\
+                                           format)\n\
            bench-step <net.hsn>            hot-loop steps/s\n\
          \n\
          OPTIONS (shared deployment flags — any execution subcommand)\n\
@@ -211,6 +218,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         std::thread::sleep(std::time::Duration::from_millis(200));
     }
     queue.shutdown();
+    Ok(())
+}
+
+/// serve-session: drive one `Simulator` session over the line-delimited
+/// JSON protocol on stdin/stdout. Deployment flags (`--backend`,
+/// topology, `--strategy`, `--seed`, ...) fix the session's options; the
+/// client's `configure` request supplies the network. See
+/// `hiaer_spike::sim::session` for the wire format.
+fn cmd_serve_session(args: &Args) -> Result<()> {
+    let opts = SimOptions::from_args(args)?;
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    hiaer_spike::sim::session::serve(opts, stdin.lock(), &mut stdout.lock())?;
     Ok(())
 }
 

@@ -11,6 +11,13 @@
 //! axons    per axon:   u32 count, count x (u32 target, i16 weight)
 //! outputs  n_outputs x u32
 //! ```
+//!
+//! Both writers emit each per-source region in **canonical
+//! target-sorted order** (`Network::sort_synapses` here, the sorted
+//! `pack_adj` in `hs_api.network.export_hsn`), so the same network
+//! produces identical bytes from either language —
+//! `testdata/fig6_golden.hsn` pins this cross-language
+//! (`rust/tests/hsn_golden.rs` / `python/tests/test_golden_hsn.py`).
 
 use std::fs::File;
 use std::io::{BufReader, Write as _};

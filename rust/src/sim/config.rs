@@ -120,7 +120,10 @@ impl SimOptions {
     /// `--strategy modulo|balance`, `--backend dense|rust|pool|xla`
     /// (plus the legacy `--xla` flag), `--seed N`, `--artifacts DIR`.
     /// Unknown `--backend`/`--strategy` values are listed-options
-    /// errors, never silent defaults.
+    /// errors, never silent defaults. Used by every execution
+    /// subcommand, `serve-session` included — the protocol's
+    /// `configure` op supplies the network, these flags fix the
+    /// deployment.
     pub fn from_args(args: &Args) -> Result<SimOptions, SimError> {
         let topology = ClusterTopology {
             servers: args.get_usize("servers", 1).map_err(SimError::Config)?,

@@ -13,10 +13,16 @@
 //!   image compilation and worker-pool spin-up, and returns a boxed
 //!   [`Simulator`].
 //! * [`Simulator`] — the backend-neutral session: [`Simulator::step`]
-//!   advances one 1 ms tick, [`Simulator::run`] drives a whole stimulus
-//!   schedule into a [`RunRecord`], [`Simulator::run_many`] reuses the
-//!   same engine (pool workers kept warm, buffers retained) across a
-//!   batch of samples with a reset in between.
+//!   advances one 1 ms tick, [`Simulator::step_many`] advances a whole
+//!   stimulus batch with one up-front marshalling pass,
+//!   [`Simulator::run`] drives a schedule into a [`RunRecord`],
+//!   [`Simulator::run_many`] reuses the same engine (pool workers kept
+//!   warm, buffers retained) across a batch of samples with a reset in
+//!   between.
+//!
+//! Out-of-process callers (the `hs_api` Python front end, the portal)
+//! reach the same trait through the line-delimited JSON protocol in
+//! [`session`] (`hiaer-spike serve-session`).
 //!
 //! # Config lifecycle
 //!
@@ -57,6 +63,7 @@
 //! | [`Backend::Xla`]   | AOT Pallas artifacts, PJRT | needs the `pjrt` cargo feature + artifacts  |
 
 mod config;
+pub mod session;
 
 pub use config::{Backend, SimConfig, SimOptions};
 
@@ -134,6 +141,15 @@ impl From<CostReport> for CostSummary {
     }
 }
 
+/// Owned result of one [`Simulator::step_many`] batch.
+#[derive(Clone, Debug, Default)]
+pub struct BatchResult {
+    /// Output-neuron spikes per step (global ids, ascending).
+    pub spikes: Vec<Vec<u32>>,
+    /// Total fired neurons across the batch (activity measure).
+    pub fired_total: u64,
+}
+
 /// Record of one [`Simulator::run`] over a stimulus schedule.
 #[derive(Clone, Debug, Default)]
 pub struct RunRecord {
@@ -206,24 +222,45 @@ pub trait Simulator {
         None
     }
 
+    /// Batched stepping: advance one step per `batch` entry and collect
+    /// the per-step output spikes into an owned [`BatchResult`].
+    ///
+    /// The whole stimulus batch is validated **up-front in one
+    /// marshalling pass** — a [`SimError::Stimulus`] error is returned
+    /// before any step executes, leaving membranes, counters and the
+    /// last-step [`Simulator::fired`] views untouched. (Engine-level
+    /// failures mid-batch may still leave a prefix executed.) On `Ok`,
+    /// the result is bit-identical to the equivalent [`Simulator::step`]
+    /// loop on every backend; engines may override this to amortise
+    /// per-step stimulus marshalling, never to change semantics.
+    fn step_many(&mut self, batch: &[Vec<u32>]) -> Result<BatchResult, SimError> {
+        let n_axons = self.n_axons();
+        for axons in batch {
+            check_axons(axons, n_axons)?;
+        }
+        let mut result = BatchResult { spikes: Vec::with_capacity(batch.len()), fired_total: 0 };
+        for axons in batch {
+            let out = self.step(axons)?;
+            result.fired_total += out.fired.len() as u64;
+            result.spikes.push(out.output_spikes.to_vec());
+        }
+        Ok(result)
+    }
+
     /// Drive a whole stimulus schedule (`stimulus[t]` = axon ids fired
     /// at step `t`). Clears cost counters first, so the returned
     /// [`RunRecord`] carries per-run cost — the paper's per-inference
     /// accounting. Does NOT reset membranes; call [`Simulator::reset`]
     /// (or use [`Simulator::run_many`]) for independent samples.
+    /// Executes through [`Simulator::step_many`], so the whole schedule
+    /// is marshalled once.
     fn run(&mut self, stimulus: &[Vec<u32>], energy: &EnergyModel) -> Result<RunRecord, SimError> {
         self.reset_cost();
-        let mut spikes = Vec::with_capacity(stimulus.len());
-        let mut fired_total = 0u64;
-        for axons in stimulus {
-            let out = self.step(axons)?;
-            fired_total += out.fired.len() as u64;
-            spikes.push(out.output_spikes.to_vec());
-        }
+        let batch = self.step_many(stimulus)?;
         Ok(RunRecord {
             steps: stimulus.len(),
-            spikes,
-            fired_total,
+            spikes: batch.spikes,
+            fired_total: batch.fired_total,
             cost: self.cost(energy),
         })
     }

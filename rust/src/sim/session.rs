@@ -1,0 +1,758 @@
+//! Line-delimited JSON session protocol over a [`Simulator`] — the wire
+//! format behind `hiaer-spike serve-session` and the Python
+//! `hs_api` `backend="rust"` front end (paper §5.2: one network
+//! definition, hardware-agnostic execution).
+//!
+//! # Framing
+//!
+//! One JSON object per line in each direction; the server answers every
+//! request line with exactly one response line, in order, and flushes
+//! after each. On startup the server emits a greeting line before any
+//! request is read:
+//!
+//! ```text
+//! {"backend":"rust","ok":true,"op":"hello","protocol":1}
+//! ```
+//!
+//! Successful responses carry `"ok": true` plus the echoed `"op"`;
+//! failures carry `"ok": false`, a **stable machine-readable `"code"`**
+//! (see [Error codes](#error-codes)) and a human-readable `"error"`.
+//! A failed request never tears the session down: the simulator state is
+//! untouched (stimulus batches are validated before any step executes)
+//! and the next line is processed normally.
+//!
+//! # Ops (one request/response example each)
+//!
+//! `configure` — load a `.hsn` network and (re)build the simulator from
+//! the session's deployment options; an existing simulator is replaced:
+//!
+//! ```text
+//! -> {"op":"configure","net":"mnist.hsn","seed":7}
+//! <- {"axons":64,"backend":"rust","neurons":100000,"ok":true,"op":"configure","outputs":10,"protocol":1}
+//! ```
+//!
+//! `step` — advance one tick; `axons` lists fired global axon ids (the
+//! server sorts + dedups). `spikes` are fired output-neuron ids
+//! (ascending global ids), `fired` counts all fired neurons:
+//!
+//! ```text
+//! -> {"op":"step","axons":[0,3]}
+//! <- {"fired":2,"ok":true,"op":"step","spikes":[1]}
+//! ```
+//!
+//! `step_many` — advance one tick per `batch` entry in a single
+//! request/response round trip (the batched-stimulus amortisation of
+//! [`Simulator::step_many`]); at most [`MAX_BATCH_STEPS`] steps:
+//!
+//! ```text
+//! -> {"op":"step_many","batch":[[0],[],[1]]}
+//! <- {"fired_total":5,"ok":true,"op":"step_many","spikes":[[],[1],[0,1]]}
+//! ```
+//!
+//! `read_membrane` — membrane potentials for global neuron ids:
+//!
+//! ```text
+//! -> {"op":"read_membrane","ids":[0,1,2]}
+//! <- {"ok":true,"op":"read_membrane","v":[3,-1,0]}
+//! ```
+//!
+//! `reset` — restore membranes/step counter and clear cost counters:
+//!
+//! ```text
+//! -> {"op":"reset"}
+//! <- {"ok":true,"op":"reset"}
+//! ```
+//!
+//! `cost` — aggregate cost counters since the last reset, under the
+//! default energy model:
+//!
+//! ```text
+//! -> {"op":"cost"}
+//! <- {"backend":"rust","cycles":410,"energy_uj":1.2,"events":96,"hbm_rows":14,"latency_us":0.4,"ok":true,"op":"cost"}
+//! ```
+//!
+//! `shutdown` — acknowledge, drop the simulator and end the serve loop.
+//! The codec itself stays usable: a later `configure` on the same
+//! [`Session`] starts a fresh simulator (mid-session shutdown is
+//! recoverable for embedding callers):
+//!
+//! ```text
+//! -> {"op":"shutdown"}
+//! <- {"ok":true,"op":"shutdown"}
+//! ```
+//!
+//! # Error codes
+//!
+//! | code                  | meaning                                            |
+//! |-----------------------|----------------------------------------------------|
+//! | `malformed_request`   | line is not JSON / missing or mistyped fields      |
+//! | `unknown_op`          | `op` is not one of the seven ops                   |
+//! | `no_session`          | execution op before a successful `configure`       |
+//! | `oversized_batch`     | `step_many` batch exceeds [`MAX_BATCH_STEPS`]      |
+//! | `backend_unavailable` | [`SimError::BackendUnavailable`] (e.g. no pjrt)    |
+//! | `config`              | bad network file / [`SimError::Config`]            |
+//! | `stimulus`            | out-of-range axon or neuron id                     |
+//! | `engine`              | engine-level failure ([`SimError::Engine`])        |
+//!
+//! The Python client maps these to typed exceptions
+//! (`hs_api.exceptions`: `stimulus` → `HsStimulusError`,
+//! `backend_unavailable` → `HsBackendUnavailable`, ...). Codes are part
+//! of the wire contract — add new ones, never rename existing ones.
+
+use std::io::{BufRead, Write};
+
+use crate::energy::EnergyModel;
+use crate::model_fmt::read_hsn;
+use crate::sim::{SimError, SimOptions, Simulator};
+use crate::util::json::{arr_i64, obj, Json};
+
+/// Protocol revision announced in the `hello` greeting and `configure`
+/// responses. Bump only on a breaking wire change.
+pub const PROTOCOL_VERSION: i64 = 1;
+
+/// Hard cap on `step_many` batch length: bounds per-request memory and
+/// keeps one request from wedging the session for minutes. Oversized
+/// batches are rejected with `oversized_batch` before any step runs.
+pub const MAX_BATCH_STEPS: usize = 65_536;
+
+pub const CODE_MALFORMED: &str = "malformed_request";
+pub const CODE_UNKNOWN_OP: &str = "unknown_op";
+pub const CODE_NO_SESSION: &str = "no_session";
+pub const CODE_OVERSIZED_BATCH: &str = "oversized_batch";
+pub const CODE_BACKEND_UNAVAILABLE: &str = "backend_unavailable";
+pub const CODE_CONFIG: &str = "config";
+pub const CODE_STIMULUS: &str = "stimulus";
+pub const CODE_ENGINE: &str = "engine";
+
+/// Stable protocol error code for a facade error. Every [`SimError`]
+/// variant maps to exactly one code (the wire contract the Python
+/// exception types are built on).
+pub fn error_code(e: &SimError) -> &'static str {
+    match e {
+        SimError::BackendUnavailable { .. } => CODE_BACKEND_UNAVAILABLE,
+        SimError::Config(_) => CODE_CONFIG,
+        SimError::Stimulus(_) => CODE_STIMULUS,
+        SimError::Engine(_) => CODE_ENGINE,
+    }
+}
+
+/// One parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Configure { net: String, seed: Option<u32> },
+    Step { axons: Vec<u32> },
+    StepMany { batch: Vec<Vec<u32>> },
+    ReadMembrane { ids: Vec<u32> },
+    Reset,
+    Cost,
+    Shutdown,
+}
+
+/// Protocol-level parse/validation failure: stable code + message.
+#[derive(Clone, Debug)]
+pub struct ProtoError {
+    pub code: &'static str,
+    pub message: String,
+}
+
+fn perr(code: &'static str, message: impl Into<String>) -> ProtoError {
+    ProtoError { code, message: message.into() }
+}
+
+fn id_value(v: &Json, key: &str) -> Result<u32, ProtoError> {
+    match v.as_i64() {
+        Some(x) if (0..=u32::MAX as i64).contains(&x) => Ok(x as u32),
+        _ => Err(perr(CODE_MALFORMED, format!("`{key}` entries must be u32 ids"))),
+    }
+}
+
+fn ids_field(j: &Json, key: &str, op: &str) -> Result<Vec<u32>, ProtoError> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| perr(CODE_MALFORMED, format!("{op}: missing array field `{key}`")))?;
+    arr.iter().map(|v| id_value(v, key)).collect()
+}
+
+/// Parse one request line. Protocol-level failures (not JSON, bad
+/// shape, unknown op, oversized batch) come back as a [`ProtoError`]
+/// with the stable code; they never depend on session state.
+pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
+    let j = Json::parse(line).map_err(|e| perr(CODE_MALFORMED, format!("bad JSON: {e}")))?;
+    let op = j
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| perr(CODE_MALFORMED, "missing string field `op`"))?;
+    match op {
+        "configure" => {
+            let net = j
+                .get("net")
+                .and_then(Json::as_str)
+                .ok_or_else(|| perr(CODE_MALFORMED, "configure: missing string field `net`"))?
+                .to_string();
+            let seed = match j.get("seed") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(id_value(v, "seed")?),
+            };
+            Ok(Request::Configure { net, seed })
+        }
+        "step" => Ok(Request::Step { axons: ids_field(&j, "axons", "step")? }),
+        "step_many" => {
+            let rows = j.get("batch").and_then(Json::as_arr).ok_or_else(|| {
+                perr(CODE_MALFORMED, "step_many: missing array field `batch`")
+            })?;
+            if rows.len() > MAX_BATCH_STEPS {
+                return Err(perr(
+                    CODE_OVERSIZED_BATCH,
+                    format!(
+                        "batch of {} steps exceeds the {MAX_BATCH_STEPS}-step limit; split it",
+                        rows.len()
+                    ),
+                ));
+            }
+            let batch = rows
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .ok_or_else(|| {
+                            perr(CODE_MALFORMED, "step_many: `batch` entries must be id arrays")
+                        })?
+                        .iter()
+                        .map(|v| id_value(v, "batch"))
+                        .collect()
+                })
+                .collect::<Result<Vec<Vec<u32>>, ProtoError>>()?;
+            Ok(Request::StepMany { batch })
+        }
+        "read_membrane" => Ok(Request::ReadMembrane { ids: ids_field(&j, "ids", "read_membrane")? }),
+        "reset" => Ok(Request::Reset),
+        "cost" => Ok(Request::Cost),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(perr(
+            CODE_UNKNOWN_OP,
+            format!(
+                "unknown op {other:?} (options: configure, step, step_many, read_membrane, \
+                 reset, cost, shutdown)"
+            ),
+        )),
+    }
+}
+
+fn ok_response(op: &str, mut fields: Vec<(&str, Json)>) -> String {
+    let mut all = vec![("ok", Json::Bool(true)), ("op", Json::Str(op.to_string()))];
+    all.append(&mut fields);
+    obj(all).to_string()
+}
+
+fn err_response(code: &str, message: &str) -> String {
+    obj(vec![
+        ("ok", Json::Bool(false)),
+        ("code", Json::Str(code.to_string())),
+        ("error", Json::Str(message.to_string())),
+    ])
+    .to_string()
+}
+
+fn spikes_json(spikes: &[u32]) -> Json {
+    arr_i64(spikes.iter().map(|&s| s as i64))
+}
+
+/// Sort + dedup a stimulus row: the engines require ascending unique
+/// axon ids; the protocol accepts any order (client marshalling stays
+/// trivial, the server canonicalises once per row).
+fn marshal_axons(ids: &[u32]) -> Vec<u32> {
+    let mut v = ids.to_vec();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// A protocol session: deployment options fixed at construction (from
+/// the `serve-session` CLI flags), simulator built/replaced by
+/// `configure`. Drives any [`Simulator`] the facade can build.
+pub struct Session {
+    opts: SimOptions,
+    energy: EnergyModel,
+    sim: Option<Box<dyn Simulator>>,
+}
+
+impl Session {
+    pub fn new(opts: SimOptions) -> Self {
+        Session { opts, energy: EnergyModel::default(), sim: None }
+    }
+
+    /// The greeting line emitted before any request is read.
+    pub fn hello(&self) -> String {
+        ok_response(
+            "hello",
+            vec![
+                ("protocol", Json::Int(PROTOCOL_VERSION)),
+                ("backend", Json::Str(self.opts.backend.name().to_string())),
+            ],
+        )
+    }
+
+    /// Whether a `configure` has succeeded (and no shutdown followed).
+    pub fn is_configured(&self) -> bool {
+        self.sim.is_some()
+    }
+
+    /// Handle one raw request line. Returns the response line plus a
+    /// `done` flag that is `true` only after a clean `shutdown`. Errors
+    /// — protocol-level or simulator-level — always leave the session
+    /// in a recoverable state (`done` stays `false`, simulator state
+    /// untouched by invalid stimuli).
+    pub fn handle_line(&mut self, line: &str) -> (String, bool) {
+        match parse_request(line) {
+            Err(e) => (err_response(e.code, &e.message), false),
+            Ok(req) => self.handle(req),
+        }
+    }
+
+    fn sim_or_err(&mut self) -> Result<&mut dyn Simulator, String> {
+        self.sim
+            .as_deref_mut()
+            .ok_or_else(|| err_response(CODE_NO_SESSION, "no simulator: send `configure` first"))
+    }
+
+    fn handle(&mut self, req: Request) -> (String, bool) {
+        match req {
+            Request::Configure { net, seed } => (self.configure(&net, seed), false),
+            Request::Step { axons } => {
+                let sim = match self.sim_or_err() {
+                    Ok(s) => s,
+                    Err(resp) => return (resp, false),
+                };
+                let axons = marshal_axons(&axons);
+                match sim.step(&axons) {
+                    Ok(out) => {
+                        let fired = out.fired.len() as i64;
+                        let spikes = spikes_json(out.output_spikes);
+                        (
+                            ok_response(
+                                "step",
+                                vec![("spikes", spikes), ("fired", Json::Int(fired))],
+                            ),
+                            false,
+                        )
+                    }
+                    Err(e) => (err_response(error_code(&e), &e.to_string()), false),
+                }
+            }
+            Request::StepMany { batch } => {
+                let sim = match self.sim_or_err() {
+                    Ok(s) => s,
+                    Err(resp) => return (resp, false),
+                };
+                // one marshalling pass for the whole batch (the protocol
+                // mirror of Simulator::step_many's up-front validation)
+                let batch: Vec<Vec<u32>> = batch.iter().map(|row| marshal_axons(row)).collect();
+                match sim.step_many(&batch) {
+                    Ok(r) => {
+                        let spikes = Json::Arr(r.spikes.iter().map(|s| spikes_json(s)).collect());
+                        (
+                            ok_response(
+                                "step_many",
+                                vec![
+                                    ("spikes", spikes),
+                                    ("fired_total", Json::Int(r.fired_total as i64)),
+                                ],
+                            ),
+                            false,
+                        )
+                    }
+                    Err(e) => (err_response(error_code(&e), &e.to_string()), false),
+                }
+            }
+            Request::ReadMembrane { ids } => {
+                let sim = match self.sim_or_err() {
+                    Ok(s) => s,
+                    Err(resp) => return (resp, false),
+                };
+                let n = sim.n_neurons();
+                if let Some(&bad) = ids.iter().find(|&&i| i as usize >= n) {
+                    return (
+                        err_response(
+                            CODE_STIMULUS,
+                            &format!("neuron id {bad} out of range ({n} neurons)"),
+                        ),
+                        false,
+                    );
+                }
+                let v = sim.read_membrane(&ids);
+                (
+                    ok_response(
+                        "read_membrane",
+                        vec![("v", arr_i64(v.iter().map(|&x| x as i64)))],
+                    ),
+                    false,
+                )
+            }
+            Request::Reset => {
+                let sim = match self.sim_or_err() {
+                    Ok(s) => s,
+                    Err(resp) => return (resp, false),
+                };
+                sim.reset();
+                (ok_response("reset", vec![]), false)
+            }
+            Request::Cost => {
+                let energy = self.energy;
+                let sim = match self.sim_or_err() {
+                    Ok(s) => s,
+                    Err(resp) => return (resp, false),
+                };
+                let c = sim.cost(&energy);
+                (
+                    ok_response(
+                        "cost",
+                        vec![
+                            ("energy_uj", Json::Num(c.energy_uj)),
+                            ("latency_us", Json::Num(c.latency_us)),
+                            ("hbm_rows", Json::Int(c.hbm_rows as i64)),
+                            ("events", Json::Int(c.events as i64)),
+                            ("cycles", Json::Int(c.cycles as i64)),
+                            ("backend", Json::Str(sim.backend_name().to_string())),
+                        ],
+                    ),
+                    false,
+                )
+            }
+            Request::Shutdown => {
+                self.sim = None;
+                (ok_response("shutdown", vec![]), true)
+            }
+        }
+    }
+
+    fn configure(&mut self, net_path: &str, seed: Option<u32>) -> String {
+        let net = match read_hsn(net_path) {
+            Ok(n) => n,
+            Err(e) => return err_response(CODE_CONFIG, &format!("loading {net_path}: {e:#}")),
+        };
+        let n_outputs = net.outputs.len();
+        let mut opts = self.opts.clone();
+        if seed.is_some() {
+            opts.seed = seed;
+        }
+        match opts.into_config(net).build() {
+            Ok(sim) => {
+                let resp = ok_response(
+                    "configure",
+                    vec![
+                        ("protocol", Json::Int(PROTOCOL_VERSION)),
+                        ("backend", Json::Str(sim.backend_name().to_string())),
+                        ("neurons", Json::Int(sim.n_neurons() as i64)),
+                        ("axons", Json::Int(sim.n_axons() as i64)),
+                        ("outputs", Json::Int(n_outputs as i64)),
+                    ],
+                );
+                self.sim = Some(sim);
+                resp
+            }
+            Err(e) => err_response(error_code(&e), &e.to_string()),
+        }
+    }
+}
+
+/// The `serve-session` loop: greeting line, then one response line per
+/// request line until `shutdown` or EOF. Flushes after every line (the
+/// client blocks on each response). Blank lines are ignored.
+pub fn serve<R: BufRead, W: Write>(
+    opts: SimOptions,
+    input: R,
+    out: &mut W,
+) -> std::io::Result<()> {
+    let mut session = Session::new(opts);
+    writeln!(out, "{}", session.hello())?;
+    out.flush()?;
+    for line in input.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, done) = session.handle_line(&line);
+        writeln!(out, "{resp}")?;
+        out.flush()?;
+        if done {
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_fmt::write_hsn;
+    use crate::snn::{NetworkBuilder, NeuronModel};
+
+    fn fig6_path(tag: &str) -> std::path::PathBuf {
+        let lif = NeuronModel::lif(3, 0, 63, false).unwrap();
+        let lif_c = NeuronModel::lif(4, 0, 2, false).unwrap();
+        let ann_d = NeuronModel::ann(5, 0, true).unwrap();
+        let mut b = NetworkBuilder::new().seed(7);
+        b.add_neuron("a", lif, &[("b", 1), ("d", 2)]).unwrap();
+        b.add_neuron("b", lif, &[]).unwrap();
+        b.add_neuron("c", lif_c, &[]).unwrap();
+        b.add_neuron("d", ann_d, &[("c", 1)]).unwrap();
+        b.add_axon("alpha", &[("a", 3), ("c", 2)]).unwrap();
+        b.add_axon("beta", &[("b", 3)]).unwrap();
+        b.add_output("a");
+        b.add_output("b");
+        let (net, _) = b.build().unwrap();
+        let mut p = std::env::temp_dir();
+        p.push(format!("hiaer_session_{}_{tag}.hsn", std::process::id()));
+        write_hsn(&net, &p).unwrap();
+        p
+    }
+
+    fn parsed(resp: &str) -> Json {
+        Json::parse(resp).unwrap_or_else(|e| panic!("unparseable response {resp:?}: {e}"))
+    }
+
+    fn assert_err(resp: &str, code: &str) {
+        let j = parsed(resp);
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{resp}");
+        assert_eq!(j.get("code").and_then(Json::as_str), Some(code), "{resp}");
+        assert!(j.get("error").and_then(Json::as_str).is_some(), "{resp}");
+    }
+
+    fn configured_session(path: &std::path::Path) -> Session {
+        let mut s = Session::new(SimOptions::default());
+        let (resp, done) =
+            s.handle_line(&format!("{{\"op\":\"configure\",\"net\":\"{}\"}}", path.display()));
+        assert!(!done);
+        let j = parsed(&resp);
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(j.get("neurons").and_then(Json::as_i64), Some(4));
+        assert_eq!(j.get("axons").and_then(Json::as_i64), Some(2));
+        assert_eq!(j.get("outputs").and_then(Json::as_i64), Some(2));
+        s
+    }
+
+    #[test]
+    fn hello_announces_protocol_and_backend() {
+        let s = Session::new(SimOptions::default());
+        let j = parsed(&s.hello());
+        assert_eq!(j.get("op").and_then(Json::as_str), Some("hello"));
+        assert_eq!(j.get("protocol").and_then(Json::as_i64), Some(PROTOCOL_VERSION));
+        assert_eq!(j.get("backend").and_then(Json::as_str), Some("rust"));
+    }
+
+    #[test]
+    fn step_and_step_many_match_direct_facade() {
+        let p = fig6_path("parity");
+        let mut s = configured_session(&p);
+
+        // direct facade reference
+        let net = read_hsn(&p).unwrap();
+        let mut reference = crate::sim::SimConfig::new(net).build().unwrap();
+        let stimulus: Vec<Vec<u32>> = vec![vec![0, 1], vec![0], vec![], vec![1], vec![]];
+
+        for axons in &stimulus {
+            let want = {
+                let r = reference.step(axons).unwrap();
+                (r.output_spikes.to_vec(), r.fired.len() as i64)
+            };
+            let req = obj(vec![
+                ("op", Json::Str("step".into())),
+                ("axons", arr_i64(axons.iter().map(|&a| a as i64))),
+            ]);
+            let (resp, done) = s.handle_line(&req.to_string());
+            assert!(!done);
+            let j = parsed(&resp);
+            assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{resp}");
+            let got: Vec<u32> = j
+                .get("spikes")
+                .and_then(Json::int_vec)
+                .unwrap()
+                .into_iter()
+                .map(|x| x as u32)
+                .collect();
+            assert_eq!(got, want.0);
+            assert_eq!(j.get("fired").and_then(Json::as_i64), Some(want.1));
+        }
+
+        // step_many over a fresh pair must equal the per-step trace
+        let mut s2 = configured_session(&p);
+        let net = read_hsn(&p).unwrap();
+        let mut ref2 = crate::sim::SimConfig::new(net).build().unwrap();
+        let want = ref2.step_many(&stimulus).unwrap();
+        let rows = Json::Arr(
+            stimulus.iter().map(|r| arr_i64(r.iter().map(|&a| a as i64))).collect(),
+        );
+        let req = obj(vec![("op", Json::Str("step_many".into())), ("batch", rows)]);
+        let (resp, _) = s2.handle_line(&req.to_string());
+        let j = parsed(&resp);
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let got: Vec<Vec<u32>> = j
+            .get("spikes")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|r| r.int_vec().unwrap().into_iter().map(|x| x as u32).collect())
+            .collect();
+        assert_eq!(got, want.spikes);
+        assert_eq!(
+            j.get("fired_total").and_then(Json::as_i64),
+            Some(want.fired_total as i64)
+        );
+
+        // membranes agree too
+        let ids: Vec<u32> = (0..4).collect();
+        let want_v = ref2.read_membrane(&ids);
+        let (resp, _) = s2.handle_line(r#"{"op":"read_membrane","ids":[0,1,2,3]}"#);
+        let j = parsed(&resp);
+        assert_eq!(j.get("v").and_then(Json::i32_vec), Some(want_v));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn malformed_json_line_is_structured_and_recoverable() {
+        let p = fig6_path("malformed");
+        let mut s = configured_session(&p);
+        let (resp, done) = s.handle_line("{not json!");
+        assert!(!done);
+        assert_err(&resp, CODE_MALFORMED);
+        // wrong field type is also malformed_request
+        let (resp, _) = s.handle_line(r#"{"op":"step","axons":"zero"}"#);
+        assert_err(&resp, CODE_MALFORMED);
+        let (resp, _) = s.handle_line(r#"{"op":"step","axons":[-1]}"#);
+        assert_err(&resp, CODE_MALFORMED);
+        // session still serves valid requests
+        let (resp, _) = s.handle_line(r#"{"op":"step","axons":[0]}"#);
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn unknown_op_lists_options() {
+        let mut s = Session::new(SimOptions::default());
+        let (resp, done) = s.handle_line(r#"{"op":"teleport"}"#);
+        assert!(!done);
+        assert_err(&resp, CODE_UNKNOWN_OP);
+        assert!(parsed(&resp).get("error").and_then(Json::as_str).unwrap().contains("step_many"));
+    }
+
+    #[test]
+    fn oversized_batch_rejected_without_stepping() {
+        let p = fig6_path("oversized");
+        let mut s = configured_session(&p);
+        // build an over-limit batch of empty rows
+        let mut req = String::from(r#"{"op":"step_many","batch":["#);
+        for i in 0..=MAX_BATCH_STEPS {
+            if i > 0 {
+                req.push(',');
+            }
+            req.push_str("[]");
+        }
+        req.push_str("]}");
+        let (resp, done) = s.handle_line(&req);
+        assert!(!done);
+        assert_err(&resp, CODE_OVERSIZED_BATCH);
+        // no steps ran: membranes still at the initial state
+        let (resp, _) = s.handle_line(r#"{"op":"read_membrane","ids":[0,1,2,3]}"#);
+        assert_eq!(parsed(&resp).get("v").and_then(Json::i32_vec), Some(vec![0, 0, 0, 0]));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn execution_ops_before_configure_are_no_session() {
+        let mut s = Session::new(SimOptions::default());
+        for req in [
+            r#"{"op":"step","axons":[]}"#,
+            r#"{"op":"step_many","batch":[[]]}"#,
+            r#"{"op":"read_membrane","ids":[0]}"#,
+            r#"{"op":"reset"}"#,
+            r#"{"op":"cost"}"#,
+        ] {
+            let (resp, done) = s.handle_line(req);
+            assert!(!done);
+            assert_err(&resp, CODE_NO_SESSION);
+        }
+    }
+
+    #[test]
+    fn bad_stimulus_is_stimulus_code_and_state_untouched() {
+        let p = fig6_path("stim");
+        let mut s = configured_session(&p);
+        let (resp, _) = s.handle_line(r#"{"op":"step","axons":[9]}"#);
+        assert_err(&resp, CODE_STIMULUS);
+        // batch with a bad row mid-way: atomic, nothing executed
+        let (resp, _) = s.handle_line(r#"{"op":"step_many","batch":[[0],[7],[1]]}"#);
+        assert_err(&resp, CODE_STIMULUS);
+        let (resp, _) = s.handle_line(r#"{"op":"read_membrane","ids":[0,1,2,3]}"#);
+        assert_eq!(parsed(&resp).get("v").and_then(Json::i32_vec), Some(vec![0, 0, 0, 0]));
+        // out-of-range membrane id reports stimulus too
+        let (resp, _) = s.handle_line(r#"{"op":"read_membrane","ids":[99]}"#);
+        assert_err(&resp, CODE_STIMULUS);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn unsorted_duplicate_axons_are_marshalled_server_side() {
+        let p = fig6_path("marshal");
+        let mut s = configured_session(&p);
+        let mut t = configured_session(&p);
+        let (resp_a, _) = s.handle_line(r#"{"op":"step","axons":[1,0,1,0]}"#);
+        let (resp_b, _) = t.handle_line(r#"{"op":"step","axons":[0,1]}"#);
+        assert_eq!(resp_a, resp_b);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn configure_missing_file_is_config_error() {
+        let mut s = Session::new(SimOptions::default());
+        let (resp, done) = s.handle_line(r#"{"op":"configure","net":"/nonexistent/x.hsn"}"#);
+        assert!(!done);
+        assert_err(&resp, CODE_CONFIG);
+        assert!(!s.is_configured());
+    }
+
+    #[test]
+    fn shutdown_mid_session_recoverable_by_reconfigure() {
+        let p = fig6_path("shutdown");
+        let mut s = configured_session(&p);
+        s.handle_line(r#"{"op":"step","axons":[0]}"#);
+        let (resp, done) = s.handle_line(r#"{"op":"shutdown"}"#);
+        assert!(done, "shutdown ends the serve loop");
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)));
+        assert!(!s.is_configured(), "simulator dropped on shutdown");
+        // the codec object itself is recoverable: configure starts fresh
+        let (resp, done) =
+            s.handle_line(&format!("{{\"op\":\"configure\",\"net\":\"{}\"}}", p.display()));
+        assert!(!done);
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let (resp, _) = s.handle_line(r#"{"op":"read_membrane","ids":[0]}"#);
+        assert_eq!(parsed(&resp).get("v").and_then(Json::i32_vec), Some(vec![0]));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn serve_loop_end_to_end_over_buffers() {
+        let p = fig6_path("serve");
+        let input = format!(
+            "{{\"op\":\"configure\",\"net\":\"{}\"}}\n\
+             {{\"op\":\"step\",\"axons\":[0,1]}}\n\
+             \n\
+             {{\"op\":\"cost\"}}\n\
+             {{\"op\":\"shutdown\"}}\n\
+             {{\"op\":\"step\",\"axons\":[]}}\n",
+            p.display()
+        );
+        let mut out = Vec::new();
+        serve(SimOptions::default(), input.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // hello + configure + step + cost + shutdown; the post-shutdown
+        // step is never answered (loop ended), blank line skipped
+        assert_eq!(lines.len(), 5, "{text}");
+        assert_eq!(parsed(lines[0]).get("op").and_then(Json::as_str), Some("hello"));
+        for l in &lines {
+            assert_eq!(parsed(l).get("ok"), Some(&Json::Bool(true)), "{l}");
+        }
+        assert_eq!(parsed(lines[4]).get("op").and_then(Json::as_str), Some("shutdown"));
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,229 @@
+//! End-to-end session-protocol test: spawn the real `hiaer-spike`
+//! binary (`CARGO_BIN_EXE_hiaer-spike`), pipe canned JSON request lines
+//! through `serve-session`, and check the response stream against a
+//! direct in-process facade run. This is the transport the Python
+//! `hs_api` `backend="rust"` client speaks.
+
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Child, Command, Stdio};
+
+use hiaer_spike::model_fmt::write_hsn;
+use hiaer_spike::sim::{SimConfig, Simulator};
+use hiaer_spike::snn::{Network, NetworkBuilder, NeuronModel};
+use hiaer_spike::util::json::Json;
+
+fn fig6_net() -> Network {
+    let lif = NeuronModel::lif(3, 0, 63, false).unwrap();
+    let lif_c = NeuronModel::lif(4, 0, 2, false).unwrap();
+    let ann_d = NeuronModel::ann(5, 0, true).unwrap();
+    let mut b = NetworkBuilder::new().seed(7);
+    b.add_neuron("a", lif, &[("b", 1), ("d", 2)]).unwrap();
+    b.add_neuron("b", lif, &[]).unwrap();
+    b.add_neuron("c", lif_c, &[]).unwrap();
+    b.add_neuron("d", ann_d, &[("c", 1)]).unwrap();
+    b.add_axon("alpha", &[("a", 3), ("c", 2)]).unwrap();
+    b.add_axon("beta", &[("b", 3)]).unwrap();
+    b.add_output("a");
+    b.add_output("b");
+    b.build().unwrap().0
+}
+
+struct Server {
+    child: Child,
+    out: BufReader<std::process::ChildStdout>,
+}
+
+impl Server {
+    fn spawn(extra: &[&str]) -> Server {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_hiaer-spike"));
+        cmd.arg("serve-session").args(extra).stdin(Stdio::piped()).stdout(Stdio::piped());
+        let mut child = cmd.spawn().expect("spawning hiaer-spike serve-session");
+        let out = BufReader::new(child.stdout.take().unwrap());
+        Server { child, out }
+    }
+
+    fn request(&mut self, line: &str) -> Json {
+        let stdin = self.child.stdin.as_mut().unwrap();
+        writeln!(stdin, "{line}").unwrap();
+        stdin.flush().unwrap();
+        self.read_line()
+    }
+
+    fn read_line(&mut self) -> Json {
+        let mut line = String::new();
+        self.out.read_line(&mut line).expect("reading server response");
+        assert!(!line.is_empty(), "server closed the stream unexpectedly");
+        Json::parse(line.trim_end()).unwrap_or_else(|e| panic!("bad response {line:?}: {e}"))
+    }
+
+    fn finish(mut self) {
+        drop(self.child.stdin.take());
+        let status = self.child.wait().expect("waiting for server exit");
+        assert!(status.success(), "serve-session exited with {status:?}");
+    }
+}
+
+fn temp_hsn(tag: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("hiaer_proto_{}_{tag}.hsn", std::process::id()));
+    p
+}
+
+fn ok(j: &Json) -> bool {
+    j.get("ok") == Some(&Json::Bool(true))
+}
+
+#[test]
+fn canned_request_stream_matches_direct_facade() {
+    let net = fig6_net();
+    let p = temp_hsn("stream");
+    write_hsn(&net, &p).unwrap();
+
+    let mut server = Server::spawn(&[]);
+    let hello = server.read_line();
+    assert_eq!(hello.get("op").and_then(Json::as_str), Some("hello"));
+    assert_eq!(hello.get("protocol").and_then(Json::as_i64), Some(1));
+
+    let conf =
+        server.request(&format!("{{\"op\":\"configure\",\"net\":\"{}\"}}", p.display()));
+    assert!(ok(&conf), "{conf:?}");
+    assert_eq!(conf.get("neurons").and_then(Json::as_i64), Some(4));
+    assert_eq!(conf.get("backend").and_then(Json::as_str), Some("rust"));
+
+    // reference: same network driven directly through the facade
+    let mut reference = SimConfig::new(net).build().unwrap();
+    let stimulus: Vec<Vec<u32>> = vec![vec![0, 1], vec![0, 1], vec![], vec![1], vec![]];
+
+    // per-step ops
+    for axons in &stimulus[..2] {
+        let ids: Vec<String> = axons.iter().map(|a| a.to_string()).collect();
+        let resp = server.request(&format!("{{\"op\":\"step\",\"axons\":[{}]}}", ids.join(",")));
+        assert!(ok(&resp), "{resp:?}");
+        let want = reference.step(axons).unwrap();
+        let want_spikes: Vec<i64> = want.output_spikes.iter().map(|&s| s as i64).collect();
+        assert_eq!(resp.get("spikes").and_then(Json::int_vec), Some(want_spikes));
+        assert_eq!(
+            resp.get("fired").and_then(Json::as_i64),
+            Some(want.fired.len() as i64)
+        );
+    }
+
+    // batched remainder in one round trip
+    let rows: Vec<String> = stimulus[2..]
+        .iter()
+        .map(|r| {
+            let ids: Vec<String> = r.iter().map(|a| a.to_string()).collect();
+            format!("[{}]", ids.join(","))
+        })
+        .collect();
+    let resp =
+        server.request(&format!("{{\"op\":\"step_many\",\"batch\":[{}]}}", rows.join(",")));
+    assert!(ok(&resp), "{resp:?}");
+    let want = reference.step_many(&stimulus[2..]).unwrap();
+    let got: Vec<Vec<i64>> = resp
+        .get("spikes")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|r| r.int_vec().unwrap())
+        .collect();
+    let want_spikes: Vec<Vec<i64>> = want
+        .spikes
+        .iter()
+        .map(|r| r.iter().map(|&s| s as i64).collect())
+        .collect();
+    assert_eq!(got, want_spikes);
+
+    // membranes bit-identical after the same schedule
+    let resp = server.request(r#"{"op":"read_membrane","ids":[0,1,2,3]}"#);
+    let want_v = reference.read_membrane(&[0, 1, 2, 3]);
+    assert_eq!(resp.get("v").and_then(Json::i32_vec), Some(want_v));
+
+    // cost counters flow through
+    let resp = server.request(r#"{"op":"cost"}"#);
+    assert!(ok(&resp), "{resp:?}");
+    assert!(resp.get("cycles").and_then(Json::as_i64).unwrap() > 0);
+
+    // structured errors leave the server serving
+    let resp = server.request("definitely not json");
+    assert_eq!(resp.get("code").and_then(Json::as_str), Some("malformed_request"));
+    let resp = server.request(r#"{"op":"warp"}"#);
+    assert_eq!(resp.get("code").and_then(Json::as_str), Some("unknown_op"));
+    let resp = server.request(r#"{"op":"step","axons":[5]}"#);
+    assert_eq!(resp.get("code").and_then(Json::as_str), Some("stimulus"));
+
+    // reset + replay stays deterministic
+    let resp = server.request(r#"{"op":"reset"}"#);
+    assert!(ok(&resp), "{resp:?}");
+    reference.reset();
+    let resp = server.request(r#"{"op":"step","axons":[0,1]}"#);
+    let want = reference.step(&[0, 1]).unwrap();
+    let want_spikes: Vec<i64> = want.output_spikes.iter().map(|&s| s as i64).collect();
+    assert_eq!(resp.get("spikes").and_then(Json::int_vec), Some(want_spikes));
+
+    let resp = server.request(r#"{"op":"shutdown"}"#);
+    assert!(ok(&resp), "{resp:?}");
+    server.finish();
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn deployment_flags_reach_the_session() {
+    let net = fig6_net();
+    let p = temp_hsn("flags");
+    write_hsn(&net, &p).unwrap();
+
+    // --backend dense + --seed override: hello and configure reflect both
+    let mut server = Server::spawn(&["--backend", "dense", "--seed", "123"]);
+    let hello = server.read_line();
+    assert_eq!(hello.get("backend").and_then(Json::as_str), Some("dense"));
+    let conf =
+        server.request(&format!("{{\"op\":\"configure\",\"net\":\"{}\"}}", p.display()));
+    assert!(ok(&conf), "{conf:?}");
+    assert_eq!(conf.get("backend").and_then(Json::as_str), Some("dense"));
+
+    // dense must match a rust-backend reference with the same seed
+    // override (cross-backend determinism through the wire)
+    let mut net2 = fig6_net();
+    net2.base_seed = 123;
+    let mut reference = SimConfig::new(net2).build().unwrap();
+    let batch: Vec<Vec<u32>> = (0..6).map(|t| if t % 2 == 0 { vec![0, 1] } else { vec![] }).collect();
+    let want = reference.step_many(&batch).unwrap();
+    let rows: Vec<String> = batch
+        .iter()
+        .map(|r| {
+            let ids: Vec<String> = r.iter().map(|a| a.to_string()).collect();
+            format!("[{}]", ids.join(","))
+        })
+        .collect();
+    let resp =
+        server.request(&format!("{{\"op\":\"step_many\",\"batch\":[{}]}}", rows.join(",")));
+    assert!(ok(&resp), "{resp:?}");
+    let got: Vec<Vec<i64>> = resp
+        .get("spikes")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|r| r.int_vec().unwrap())
+        .collect();
+    let want_spikes: Vec<Vec<i64>> = want
+        .spikes
+        .iter()
+        .map(|r| r.iter().map(|&s| s as i64).collect())
+        .collect();
+    assert_eq!(got, want_spikes, "dense-over-wire vs rust-in-process");
+
+    let resp = server.request(r#"{"op":"shutdown"}"#);
+    assert!(ok(&resp), "{resp:?}");
+    server.finish();
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn eof_without_shutdown_exits_cleanly() {
+    // read the greeting, then just close stdin: the loop must end
+    let mut server = Server::spawn(&[]);
+    let hello = server.read_line();
+    assert_eq!(hello.get("op").and_then(Json::as_str), Some("hello"));
+    server.finish();
+}

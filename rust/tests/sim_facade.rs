@@ -166,6 +166,69 @@ fn cluster_backend_matches_dense_reference() {
     }
 }
 
+/// `step_many(batch)` must be bit-identical to the equivalent `step`
+/// loop on every backend (the batched-stimulus contract the session
+/// protocol and `run` are built on), and a stimulus error anywhere in
+/// the batch must be atomic: detected up-front, nothing executed.
+#[test]
+fn step_many_matches_step_loop_on_every_backend() {
+    let mut rng = Xorshift32::new(0xBA7C4);
+    let net = random_net(&mut rng, 110, 6);
+    let batch: Vec<Vec<u32>> = (0..10)
+        .map(|_| (0..net.n_axons() as u32).filter(|_| rng.chance(0.4)).collect())
+        .collect();
+    let all_ids: Vec<u32> = (0..net.n_neurons() as u32).collect();
+    for (name, mut batched) in single_core_sessions(&net) {
+        // the per-step reference session of the same backend
+        let (_, mut looped) = single_core_sessions(&net)
+            .into_iter()
+            .find(|(n, _)| *n == name)
+            .unwrap();
+        let r = batched.step_many(&batch).unwrap();
+        assert_eq!(r.spikes.len(), batch.len(), "{name}: one spike row per step");
+        let mut fired_total = 0u64;
+        for (t, axons) in batch.iter().enumerate() {
+            let want = looped.step(axons).unwrap();
+            fired_total += want.fired.len() as u64;
+            assert_eq!(r.spikes[t], want.output_spikes, "{name} t {t}: spikes");
+        }
+        assert_eq!(r.fired_total, fired_total, "{name}: fired_total");
+        assert_eq!(
+            batched.read_membrane(&all_ids),
+            looped.read_membrane(&all_ids),
+            "{name}: membranes after batch"
+        );
+
+        // atomic validation: a bad row mid-batch executes nothing
+        let v_before = batched.read_membrane(&all_ids);
+        let fired_before = batched.fired().to_vec();
+        let bad = vec![vec![0], vec![net.n_axons() as u32 + 5], vec![1]];
+        let err = batched.step_many(&bad).unwrap_err();
+        assert!(matches!(err, SimError::Stimulus(_)), "{name}: {err}");
+        assert_eq!(batched.read_membrane(&all_ids), v_before, "{name}: membranes touched");
+        assert_eq!(batched.fired(), &fired_before[..], "{name}: fired view touched");
+    }
+
+    // the cluster backend honours the same contract (deterministic net:
+    // per-core noise seeds legitimately differ)
+    let mut det = random_net(&mut rng, 80, 5);
+    for p in &mut det.params {
+        p.flags &= !FLAG_NOISE;
+    }
+    let cap = hiaer_spike::partition::CoreCapacity { max_neurons: 30, max_synapses: usize::MAX };
+    let mut batched =
+        SimConfig::new(det.clone()).topology(1, 1, 3).capacity(cap).build().unwrap();
+    let mut looped = SimConfig::new(det.clone()).topology(1, 1, 3).capacity(cap).build().unwrap();
+    let batch: Vec<Vec<u32>> = (0..8)
+        .map(|_| (0..det.n_axons() as u32).filter(|_| rng.chance(0.5)).collect())
+        .collect();
+    let r = batched.step_many(&batch).unwrap();
+    for (t, axons) in batch.iter().enumerate() {
+        let want = looped.step(axons).unwrap();
+        assert_eq!(r.spikes[t], want.output_spikes, "cluster t {t}");
+    }
+}
+
 /// `run_many` reuses one warm engine; results must equal running each
 /// sample on a freshly built session.
 #[test]
