@@ -172,9 +172,14 @@ class RustSessionBackend(SimBackend):
     name = "rust"
 
     def __init__(self, binary: str | None = None,
-                 server_args: list[str] | None = None):
+                 server_args: list[str] | None = None,
+                 workers: int | None = None):
         self._binary = binary
         self._server_args = list(server_args or [])
+        #: worker-thread count for the pooled Rust backends, sent with
+        #: every ``configure`` (None = server default). Spike trains are
+        #: worker-count-invariant; this only tunes throughput.
+        self._workers = workers
         self._client: SessionClient | None = None
         self._hsn_path: str | None = None
         self._network = None
@@ -205,7 +210,8 @@ class RustSessionBackend(SimBackend):
                 fd, self._hsn_path = tempfile.mkstemp(suffix=".hsn", prefix="hs_api_")
                 os.close(fd)
             network.export_hsn(self._hsn_path)
-            self._client.configure(self._hsn_path, seed=network.base_seed)
+            self._client.configure(self._hsn_path, seed=network.base_seed,
+                                   workers=self._workers)
         except Exception:
             # a failed configure escapes CRI_network.__init__, so no one
             # holds this backend to close() it later — clean up the

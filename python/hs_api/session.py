@@ -158,10 +158,17 @@ class SessionClient:
 
     # ------------------------------------------------------------------ ops
 
-    def configure(self, net_path: str, seed: int | None = None) -> dict:
+    def configure(self, net_path: str, seed: int | None = None,
+                  workers: int | None = None) -> dict:
+        """Build/replace the server-side simulator. ``workers`` sets the
+        worker-thread count of the pooled Rust backends (>= 1; the
+        server rejects 0 with a ``config`` error). Spike trains are
+        worker-count-invariant — this only tunes throughput."""
         fields = {"net": net_path}
         if seed is not None:
             fields["seed"] = int(seed)
+        if workers is not None:
+            fields["workers"] = int(workers)
         return self.request("configure", **fields)
 
     def step(self, axons: list[int]) -> list[int]:

@@ -119,6 +119,24 @@ def test_configure_and_cost_round_trip():
                     "events": 9, "cycles": 410, "backend": "rust"}
 
 
+def test_configure_workers_field_is_optional_and_forwarded():
+    ok = {"ok": True, "op": "configure", "protocol": 1, "backend": "rust",
+          "neurons": 4, "axons": 2, "outputs": 2}
+    c = client_with(ok)
+    c.configure("/tmp/net.hsn", workers=4)
+    assert json.loads(c.transport.sent[0]) == {
+        "op": "configure", "net": "/tmp/net.hsn", "workers": 4}
+    # omitted -> not on the wire (server default applies)
+    c2 = client_with(ok)
+    c2.configure("/tmp/net.hsn")
+    assert "workers" not in json.loads(c2.transport.sent[0])
+    # the server rejects workers=0 with the stable `config` code
+    c3 = client_with({"ok": False, "code": "config",
+                      "error": "workers must be >= 1"})
+    with pytest.raises(HsSessionError, match=">= 1"):
+        c3.configure("/tmp/net.hsn", workers=0)
+
+
 # ----------------------------------------------- stable codes -> exceptions
 
 

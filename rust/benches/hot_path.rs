@@ -288,6 +288,33 @@ fn main() {
         br.fired_total
     );
 
+    // route phase: per-core (serial gather on the one engine) vs
+    // chunk-parallel gather spread over the pool workers, same driven
+    // stimulus so phase B dominates; bit-exactness asserted
+    use hiaer_spike::sim::RouteGranularity;
+    let mut route_serial = SimConfig::new(net.clone())
+        .backend(Backend::Pool)
+        .route_granularity(RouteGranularity::Core)
+        .build()
+        .unwrap();
+    let route_core_rate = rate(&mut *route_serial, steps, net.n_axons());
+    let mut route_par = SimConfig::new(net.clone())
+        .backend(Backend::Pool)
+        .route_granularity(RouteGranularity::Chunk)
+        .build()
+        .unwrap();
+    let route_chunk_rate = rate(&mut *route_par, steps, net.n_axons());
+    assert_eq!(
+        route_serial.read_membrane(&all_ids),
+        route_par.read_membrane(&all_ids),
+        "chunk-parallel route must stay bit-exact with per-core routing"
+    );
+    let route_speedup = route_chunk_rate / route_core_rate;
+    println!(
+        "  route phase     : {route_core_rate:>10.0} steps/s per-core, \
+         {route_chunk_rate:>10.0} chunk-parallel ({route_speedup:.2}x)"
+    );
+
     // ---- append one record to the perf trajectory (one entry per PR)
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -328,6 +355,10 @@ fn main() {
         ("step_loop_steps_per_s", Json::Num(step_loop_rate)),
         ("stepmany_steps_per_s", Json::Num(stepmany_rate)),
         ("stepmany_speedup", Json::Num(stepmany_speedup)),
+        // driven pool steps: per-core routing vs chunk-parallel gather
+        ("route_core_steps_per_s", Json::Num(route_core_rate)),
+        ("route_chunk_steps_per_s", Json::Num(route_chunk_rate)),
+        ("route_speedup", Json::Num(route_speedup)),
         // semantics marker: since PR 3 the chunk-parallel number is an
         // idle facade step (sweep + empty route), not phase_update alone
         // — a cross-PR-3 diff of this key is not apples-to-apples

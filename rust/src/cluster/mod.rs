@@ -7,4 +7,4 @@ mod multicore;
 
 pub use jobs::{parse_stimulus, run_job, Job, JobQueue, JobResult, JobStatus};
 pub use multicore::{ClusterCost, MultiCoreEngine};
-pub use pool::{CorePool, PoolSim};
+pub use pool::{CorePool, PoolOptions, PoolSim, RouteGranularity};

@@ -9,7 +9,10 @@
 //! 2. fired global neuron ids + host axon inputs go through the
 //!    [`HiaerRouter`] multicast (the barrier);
 //! 3. every core routes (host inputs ∪ remote deliveries, as local axons)
-//!    through its HBM and accumulates (parallel).
+//!    through its HBM and accumulates — the gather is chunk-parallel
+//!    across the whole pool with a deterministic per-chunk merge, so a
+//!    routing hotspot on one core spreads over every worker (see
+//!    `cluster::pool`'s ordering contract).
 //!
 //! Because remote events are delivered within the same tick (the fabric
 //! is faster than the 1 ms timestep), a multi-core run is bit-identical
@@ -18,7 +21,7 @@
 
 use anyhow::Result;
 
-use crate::cluster::pool::CorePool;
+use crate::cluster::pool::{CorePool, PoolOptions};
 use crate::energy::{CostReport, EnergyModel};
 use crate::engine::{CoreEngine, RustBackend};
 use crate::hbm::SlotStrategy;
@@ -51,22 +54,26 @@ pub struct MultiCoreEngine {
     /// all fired global ids this step, ascending (facade `fired()`)
     fired_global: Vec<u32>,
     out_global: Vec<u32>,
-    /// wall-clock accumulators [update, gather+route, accumulate] —
-    /// exposed for the perf harness.
-    pub phase_wall: [std::time::Duration; 3],
+    /// wall-clock accumulators per sub-phase: `[membrane sweep, HiAER
+    /// multicast barrier, route prepare+gather, route merge/accumulate]`
+    /// — exposed for the perf harness. The route split mirrors the
+    /// pool's `route_wall` (per-core-granularity routing bills entirely
+    /// to the gather slot).
+    pub phase_wall: [std::time::Duration; 4],
 }
 
 impl MultiCoreEngine {
     /// Crate-private: external callers construct clusters through
-    /// [`crate::sim::SimConfig`] with a multi-core topology.
-    /// `chunk_words` overrides the worker pool's sweep-chunk granularity
-    /// (`None` = engine default).
+    /// [`crate::sim::SimConfig`] with a multi-core topology. `pool_opts`
+    /// carries the worker pool's knobs (sweep chunk words, route
+    /// granularity, worker count; defaults via
+    /// [`PoolOptions::default`]).
     pub(crate) fn new(
         net: &Network,
         topology: ClusterTopology,
         cap: CoreCapacity,
         strategy: SlotStrategy,
-        chunk_words: Option<usize>,
+        pool_opts: PoolOptions,
     ) -> Result<Self> {
         let partition =
             Partition::compute(net, topology, cap).map_err(anyhow::Error::msg)?;
@@ -79,17 +86,14 @@ impl MultiCoreEngine {
         let n_cores = cores.len();
         Ok(Self {
             global_of: partition.members.clone(),
-            pool: match chunk_words {
-                Some(w) => CorePool::with_chunk_words(cores, w),
-                None => CorePool::new(cores),
-            },
+            pool: CorePool::with_options(cores, pool_opts),
             partition,
             router,
             fired_by_core: vec![Vec::new(); n_cores],
             merged_axons: vec![Vec::new(); n_cores],
             fired_global: Vec::new(),
             out_global: Vec::new(),
-            phase_wall: [std::time::Duration::ZERO; 3],
+            phase_wall: [std::time::Duration::ZERO; 4],
         })
     }
 
@@ -160,11 +164,15 @@ impl MultiCoreEngine {
         }
 
         let t2 = std::time::Instant::now();
-        // ---- phase B: parallel routing + accumulate (persistent workers)
+        // ---- phase B: chunk-parallel gather + per-core accumulate
+        // (persistent workers; see cluster::pool's ordering contract)
+        let rw0 = self.pool.route_wall;
         self.pool.phase_route(&self.merged_axons)?;
+        let rw1 = self.pool.route_wall;
         self.phase_wall[0] += t1 - t0;
         self.phase_wall[1] += t2 - t1;
-        self.phase_wall[2] += t2.elapsed();
+        self.phase_wall[2] += rw1[0] - rw0[0];
+        self.phase_wall[3] += rw1[1] - rw0[1];
 
         // collect global output spikes
         self.out_global.clear();
@@ -348,8 +356,9 @@ mod tests {
                 max_neurons: (n / 3).max(4),
                 max_synapses: usize::MAX,
             };
-            let mut cluster = MultiCoreEngine::new(&net, topo, cap, SlotStrategy::Modulo, None)
-                .map_err(|e| e.to_string())?;
+            let mut cluster =
+                MultiCoreEngine::new(&net, topo, cap, SlotStrategy::Modulo, PoolOptions::default())
+                    .map_err(|e| e.to_string())?;
             // per-core base seeds differ but deterministic nets ignore them
             let mut dense = DenseEngine::new(&net);
             let mut is_output = vec![false; n];
@@ -382,7 +391,8 @@ mod tests {
         let topo = ClusterTopology { servers: 1, fpgas_per_server: 2, cores_per_fpga: 2 };
         let cap = CoreCapacity { max_neurons: 25, max_synapses: usize::MAX };
         let mut cluster =
-            MultiCoreEngine::new(&net, topo, cap, SlotStrategy::Modulo, None).unwrap();
+            MultiCoreEngine::new(&net, topo, cap, SlotStrategy::Modulo, PoolOptions::default())
+                .unwrap();
         let axons: Vec<u32> = (0..net.n_axons() as u32).collect();
         for _ in 0..5 {
             cluster.step(&axons).unwrap();

@@ -31,19 +31,52 @@
 //! `noise17(step_seed, i)` hash, chunked execution is bit-identical to
 //! the single-threaded sweep regardless of chunk order or interleaving.
 //! Non-chunkable backends fall back to the original one-worker-per-core
-//! `phase_update`. The Route phase is always per-core (HBM routing
-//! mutates engine-wide state).
+//! `phase_update`.
+//!
+//! # Chunk-parallel Route phase and the merge ordering contract
+//!
+//! With [`RouteGranularity::Chunk`] (the default, chunkable backends
+//! only) the Route phase mirrors the sweep's split — but because HBM
+//! routing is order-sensitive where the sweep is not, it runs as **two
+//! generations** around a driver-side prologue:
+//!
+//! 1. the driver runs each engine's `route_prepare` serially — phase-1
+//!    pointer fetches (row-burst dedup walks the fired list in order)
+//!    and chunk geometry: every core's pointer queue is cut into
+//!    fixed-size pointer chunks, one gather buffer per chunk — then
+//!    publishes one `RouteView` per core plus the flattened
+//!    `(core, chunk)` task list and resets the shared cursor;
+//! 2. **RouteGather**: every worker pulls `(core, chunk)` tasks off the
+//!    cursor — so one core's gather (or a single-core net's) spreads
+//!    across all workers — and streams that chunk's pointers through
+//!    `UpdateBackend::gather` into the chunk's own buffer. Chunks only
+//!    read the image/backend and write disjoint buffers: no aliasing,
+//!    and no ordering requirement *during* the gather;
+//! 3. **RouteAccum**: each core's own worker runs `route_finish` — the
+//!    accounting plus the merge that restores determinism: buffers are
+//!    accumulated in **ascending chunk index order**, which
+//!    concatenates to exactly the serial gather stream. Wrapping (or
+//!    any future saturating) accumulate arithmetic therefore sees the
+//!    same event order for every worker count and chunk size, keeping
+//!    all golden transcripts bit-identical to the serial
+//!    `phase_route` (`rust/tests/chunked_route.rs` pins this).
+//!
+//! [`RouteGranularity::Core`] (or a non-chunkable backend) falls back to
+//! the original one-worker-per-core Route generation.
 //!
 //! With chunking enabled the pool may spawn more workers than cores
-//! (up to `available_parallelism`, bounded by the chunk count) so a
-//! single-core engine still sweeps in parallel; the extra workers idle
-//! through Route generations.
+//! (explicit [`PoolOptions::workers`], else `available_parallelism`
+//! bounded by the sweep chunk count) so a single-core engine still
+//! sweeps and gathers in parallel; the extra workers idle through
+//! per-core generations.
 //!
 //! Safety model: the pool owns the `CoreEngine`s (boxed, stable
-//! addresses). In the Route phase each worker holds a raw pointer to its
+//! addresses). In per-core phases each worker holds a raw pointer to its
 //! own engine only; in the chunked Update phase workers form disjoint
-//! word-aligned sub-slices of `v`/`spike_words`, so no two threads alias.
-//! The driver blocks until the generation barrier clears, so no borrow
+//! word-aligned sub-slices of `v`/`spike_words`; in RouteGather they
+//! write disjoint gather-buffer slots and only read the image/backend
+//! (hence the `B: Sync` spawn bound), so no two threads ever alias. The
+//! driver blocks until the generation barrier clears, so no borrow
 //! outlives the phase. A panicking worker is caught (`catch_unwind`),
 //! reported as a phase error, and the worker survives for the next
 //! generation — the barrier can never hang on a dead thread.
@@ -51,9 +84,10 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError, RwLock};
+use std::time::{Duration, Instant};
 
 use crate::engine::backend::sweep_chunk;
-use crate::engine::core::SweepView;
+use crate::engine::core::{gather_chunk, RouteView, SweepView};
 use crate::engine::{mask_words, CoreEngine, RustBackend, UpdateBackend};
 
 /// Default chunk granularity: 64 spike words = 4096 neurons. Small enough
@@ -61,11 +95,48 @@ use crate::engine::{mask_words, CoreEngine, RustBackend, UpdateBackend};
 /// enough that the per-chunk dispatch cost stays invisible.
 const DEFAULT_CHUNK_WORDS: usize = 64;
 
+/// Default Route-phase granularity: 32 pointers per gather chunk. A
+/// pointer expands to its whole synapse region (often several rows), so
+/// chunks this size already amortise the cursor fetch-add while a burst
+/// of a few thousand fired sources still fans out across every worker.
+const DEFAULT_ROUTE_CHUNK_PTRS: usize = 32;
+
+/// Route-phase work-unit granularity (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RouteGranularity {
+    /// One worker routes one whole core (the pre-chunking behaviour;
+    /// also the fallback for non-chunkable backends).
+    Core,
+    /// The gather spreads over all workers in pointer chunks pulled off
+    /// the shared cursor; the per-core merge/accumulate epilogue keeps
+    /// the event order bit-identical to `Core`.
+    #[default]
+    Chunk,
+}
+
+/// Construction-time knobs for a [`CorePool`] (the facade surface is
+/// [`crate::sim::SimConfig`]; `None` fields take the engine defaults).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolOptions {
+    /// Sweep chunk granularity in 64-bit spike words.
+    pub chunk_words: Option<usize>,
+    /// Route work-unit granularity.
+    pub route: RouteGranularity,
+    /// Route gather granularity in pointers per chunk.
+    pub route_chunk_ptrs: Option<usize>,
+    /// Exact worker-thread count (>= 1; the pool still spawns at least
+    /// one worker per core for the per-core phases). `None` = size to
+    /// `available_parallelism`, bounded by the sweep chunk count.
+    pub workers: Option<usize>,
+}
+
 /// Which phase the workers should run this generation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Phase {
     Update,
     Route,
+    RouteGather,
+    RouteAccum,
     Exit,
 }
 
@@ -85,6 +156,20 @@ struct SweepState {
     chunks: Vec<ChunkTask>,
 }
 
+/// One pointer chunk of one core's route gather.
+#[derive(Clone, Copy, Debug)]
+struct RouteChunk {
+    core: usize,
+    chunk: usize,
+}
+
+/// Chunked-route state, rebuilt by the driver before every RouteGather
+/// generation (chunk counts depend on this step's fired sources).
+struct RouteState<B> {
+    views: Vec<RouteView<B>>,
+    chunks: Vec<RouteChunk>,
+}
+
 struct Shared<B: UpdateBackend> {
     state: Mutex<State>,
     start_cv: Condvar,
@@ -98,15 +183,20 @@ struct Shared<B: UpdateBackend> {
     engines: Mutex<Vec<*mut CoreEngine<B>>>,
     /// chunk-parallel sweep state (see module docs).
     sweep: RwLock<SweepState>,
-    /// shared chunk cursor for the Update phase.
+    /// chunk-parallel route state (see module docs).
+    route: RwLock<RouteState<B>>,
+    /// shared chunk cursor for the Update and RouteGather phases
+    /// (generations never overlap, so one cursor serves both).
     next_chunk: AtomicUsize,
 }
 
-// Raw pointers to engines/sweep views are only dereferenced under the
-// protocol in the module docs (own engine in Route, disjoint word ranges
-// in Update) while the driver is blocked in run_phase.
-unsafe impl<B: UpdateBackend + Send> Send for Shared<B> {}
-unsafe impl<B: UpdateBackend + Send> Sync for Shared<B> {}
+// Raw pointers to engines/sweep/route views are only dereferenced under
+// the protocol in the module docs (own engine in per-core phases,
+// disjoint word ranges in Update, disjoint gather buffers + shared
+// `&B`/`&HbmImage` reads in RouteGather — hence `B: Sync`) while the
+// driver is blocked in run_phase.
+unsafe impl<B: UpdateBackend + Send + Sync> Send for Shared<B> {}
+unsafe impl<B: UpdateBackend + Send + Sync> Sync for Shared<B> {}
 
 struct State {
     generation: u64,
@@ -141,29 +231,48 @@ pub struct CorePool<B: UpdateBackend = RustBackend> {
     n_workers: usize,
     /// chunk-parallel Update enabled (all backends chunkable, >= 1 chunk)
     chunked: bool,
+    /// chunk-parallel Route enabled (all backends chunkable + granularity)
+    route_chunked: bool,
+    /// pointers per route gather chunk
+    route_chunk_ptrs: usize,
+    /// cumulative wall-clock of the Route sub-phases since construction:
+    /// `[prepare + gather, merge/accumulate]` (per-core fallback Route
+    /// bills entirely to slot 0). Exposed for the perf harness.
+    pub route_wall: [Duration; 2],
 }
 
-impl<B: UpdateBackend + Send + 'static> CorePool<B> {
+impl<B: UpdateBackend + Send + Sync + 'static> CorePool<B> {
     /// Crate-private: external callers reach the pool through
     /// [`crate::sim::SimConfig`] with [`crate::sim::Backend::Pool`] (or
     /// implicitly through the multi-core cluster engine).
     pub(crate) fn new(cores_in: Vec<CoreEngine<B>>) -> Self {
-        Self::with_chunk_words(cores_in, DEFAULT_CHUNK_WORDS)
+        Self::with_options(cores_in, PoolOptions::default())
     }
 
     /// Build the pool with an explicit sweep-chunk granularity (in 64-bit
     /// spike words, i.e. 64-neuron units). Exposed crate-internally for
     /// tests and perf experiments (`SimConfig::chunk_words` is the public
     /// knob); `new` uses [`DEFAULT_CHUNK_WORDS`].
-    pub(crate) fn with_chunk_words(mut cores_in: Vec<CoreEngine<B>>, chunk_words: usize) -> Self {
-        let chunk_words = chunk_words.max(1);
+    pub(crate) fn with_chunk_words(cores_in: Vec<CoreEngine<B>>, chunk_words: usize) -> Self {
+        Self::with_options(
+            cores_in,
+            PoolOptions { chunk_words: Some(chunk_words), ..PoolOptions::default() },
+        )
+    }
+
+    /// Build the pool from explicit [`PoolOptions`] (the facade maps
+    /// `SimConfig`'s chunk_words / route granularity / workers knobs
+    /// here).
+    pub(crate) fn with_options(mut cores_in: Vec<CoreEngine<B>>, opts: PoolOptions) -> Self {
+        let chunk_words = opts.chunk_words.unwrap_or(DEFAULT_CHUNK_WORDS).max(1);
         let n = cores_in.len();
         let mut cores: Vec<Box<CoreEngine<B>>> = cores_in.drain(..).map(Box::new).collect();
         let ptrs: Vec<*mut CoreEngine<B>> =
             cores.iter_mut().map(|b| &mut **b as *mut _).collect();
 
+        let chunkable = cores.iter().all(|c| c.backend_chunkable());
         let mut chunks = Vec::new();
-        if cores.iter().all(|c| c.backend_chunkable()) {
+        if chunkable {
             for (c, core) in cores.iter().enumerate() {
                 let words = mask_words(core.n_neurons());
                 let mut w = 0;
@@ -175,10 +284,18 @@ impl<B: UpdateBackend + Send + 'static> CorePool<B> {
             }
         }
         let chunked = !chunks.is_empty();
-        // At least one worker per core (the Route phase is per-core);
-        // with chunking, enough extra workers to eat the chunk list.
+        let route_chunked = chunkable && opts.route == RouteGranularity::Chunk;
+        let route_chunk_ptrs = opts.route_chunk_ptrs.unwrap_or(DEFAULT_ROUTE_CHUNK_PTRS).max(1);
+        // At least one worker per core (per-core phases need an owner);
+        // beyond that, either the explicit count or enough workers to
+        // eat the sweep chunk list. Oversubscription (workers > chunks)
+        // is allowed — extra workers find the cursor drained and idle.
         let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-        let n_workers = if chunked { n.max(avail.min(chunks.len())) } else { n };
+        let extra = opts
+            .workers
+            .unwrap_or(if chunked { avail.min(chunks.len()) } else { 1 })
+            .max(1);
+        let n_workers = if n == 0 { 0 } else { n.max(extra) };
 
         let shared = Arc::new(Shared {
             state: Mutex::new(State { generation: 0, phase: Phase::Update, errors: Vec::new() }),
@@ -188,6 +305,7 @@ impl<B: UpdateBackend + Send + 'static> CorePool<B> {
             inputs: Mutex::new(vec![Vec::new(); n]),
             engines: Mutex::new(ptrs),
             sweep: RwLock::new(SweepState { views: Vec::new(), chunks }),
+            route: RwLock::new(RouteState { views: Vec::new(), chunks: Vec::new() }),
             next_chunk: AtomicUsize::new(0),
         });
         let workers = (0..n_workers)
@@ -199,7 +317,37 @@ impl<B: UpdateBackend + Send + 'static> CorePool<B> {
                     .expect("spawn core worker")
             })
             .collect();
-        Self { shared, workers, cores, n, n_workers, chunked }
+        Self {
+            shared,
+            workers,
+            cores,
+            n,
+            n_workers,
+            chunked,
+            route_chunked,
+            route_chunk_ptrs,
+            route_wall: [Duration::ZERO; 2],
+        }
+    }
+
+    /// Test-support constructor for the failure-injection integration
+    /// suite: one engine per network over an arbitrary (usually
+    /// fault-injecting) backend. Hidden — not a stable API; real callers
+    /// go through [`crate::sim::SimConfig`].
+    #[doc(hidden)]
+    pub fn with_backend_for_tests(
+        nets: &[Network],
+        backend: B,
+        opts: PoolOptions,
+    ) -> anyhow::Result<Self>
+    where
+        B: Clone,
+    {
+        let mut engines = Vec::with_capacity(nets.len());
+        for net in nets {
+            engines.push(CoreEngine::new(net, SlotStrategy::Modulo, backend.clone())?);
+        }
+        Ok(Self::with_options(engines, opts))
     }
 }
 
@@ -272,7 +420,14 @@ impl<B: UpdateBackend> CorePool<B> {
     /// `inputs.len()` must equal the core count; every input slot is
     /// cleared up front so a malformed call can never replay the previous
     /// step's deliveries into tail cores.
-    pub fn phase_route(&self, inputs: &[Vec<u32>]) -> anyhow::Result<()> {
+    ///
+    /// With [`RouteGranularity::Chunk`] this runs the three-stage
+    /// pipeline of the module docs (serial prepare, chunk-parallel
+    /// RouteGather, per-core RouteAccum); otherwise one Route generation
+    /// with one worker per core. Either way the result is bit-identical
+    /// to calling each engine's `phase_route` serially.
+    pub fn phase_route(&mut self, inputs: &[Vec<u32>]) -> anyhow::Result<()> {
+        let t0 = Instant::now();
         {
             let mut slot = plock(&self.shared.inputs);
             for dst in slot.iter_mut() {
@@ -289,7 +444,38 @@ impl<B: UpdateBackend> CorePool<B> {
                 dst.extend_from_slice(src);
             }
         }
-        self.run_phase(Phase::Route)
+        if !self.route_chunked {
+            let result = self.run_phase(Phase::Route);
+            self.route_wall[0] += t0.elapsed();
+            return result;
+        }
+        // Driver-side prologue: serial phase-1 per core (burst dedup is
+        // order-dependent), then publish views + the flat task list.
+        {
+            let mut route = self.shared.route.write().unwrap_or_else(PoisonError::into_inner);
+            route.views.clear();
+            route.chunks.clear();
+            let slot = plock(&self.shared.inputs);
+            for (c, core) in self.cores.iter_mut().enumerate() {
+                core.route_prepare(&slot[c], self.route_chunk_ptrs);
+                let view = core.route_view();
+                for k in 0..view.n_chunks {
+                    route.chunks.push(RouteChunk { core: c, chunk: k });
+                }
+                route.views.push(view);
+            }
+        }
+        self.shared.next_chunk.store(0, Ordering::SeqCst);
+        let gather = self.run_phase(Phase::RouteGather);
+        self.route_wall[0] += t0.elapsed();
+        let t1 = Instant::now();
+        // Merge/accumulate epilogue per core — run it even when a gather
+        // worker errored, so every engine leaves the step structurally
+        // consistent (counters, outputs); the propagated error marks the
+        // whole step invalid, mirroring phase_update's epilogue policy.
+        let accum = self.run_phase(Phase::RouteAccum);
+        self.route_wall[1] += t1.elapsed();
+        gather.and(accum)
     }
 }
 
@@ -301,9 +487,11 @@ use crate::sim::{CostSummary, SimError, Simulator, StepResult};
 use crate::snn::Network;
 
 /// [`Simulator`] session running one core chunk-parallel across the
-/// whole worker pool ([`crate::sim::Backend::Pool`]): the membrane
-/// sweep of a single (possibly huge) core spreads over up to
-/// `available_parallelism` workers, while routing stays on one engine.
+/// whole worker pool ([`crate::sim::Backend::Pool`]): both the membrane
+/// sweep and the route gather of a single (possibly huge) core spread
+/// over all workers (explicit [`PoolOptions::workers`], else up to
+/// `available_parallelism`); only phase-1 pointer fetches and the
+/// ordered merge/accumulate stay serial.
 pub struct PoolSim {
     pool: CorePool<RustBackend>,
     /// reusable one-slot input buffer for `phase_route`
@@ -315,13 +503,10 @@ impl PoolSim {
     pub(crate) fn new(
         net: &Network,
         strategy: SlotStrategy,
-        chunk_words: Option<usize>,
+        opts: PoolOptions,
     ) -> anyhow::Result<Self> {
         let engine = CoreEngine::new(net, strategy, RustBackend)?;
-        let pool = match chunk_words {
-            Some(w) => CorePool::with_chunk_words(vec![engine], w),
-            None => CorePool::new(vec![engine]),
-        };
+        let pool = CorePool::with_options(vec![engine], opts);
         Ok(Self { pool, inputs: vec![Vec::new()], n_axons: net.n_axons() })
     }
 }
@@ -404,6 +589,22 @@ unsafe fn run_chunk(view: &SweepView, word_lo: usize, word_hi: usize) {
     sweep_chunk(v, params.slice(lo, hi), view.step_seed, spikes, lo as u32);
 }
 
+/// Gather one pointer chunk of a prepared route view into the chunk's
+/// own buffer (RouteGather work unit).
+///
+/// SAFETY: caller must guarantee chunk `chunk` of this view is owned
+/// exclusively by the current thread for the duration of the call
+/// (cursor protocol), the view's pointers are live (engine boxed,
+/// driver blocked between `route_prepare` and `route_finish`), and `B`
+/// is `Sync` (the backend reference is shared across workers).
+unsafe fn run_route_chunk<B: UpdateBackend>(view: &RouteView<B>, chunk: usize) {
+    let queue = std::slice::from_raw_parts(view.ptrs, view.n_ptrs);
+    let buf = &mut *view.bufs.add(chunk);
+    // the one shared chunk implementation (engine::core::gather_chunk):
+    // serial and pooled routing cannot diverge on boundary math
+    gather_chunk(&*view.image, &*view.backend, queue, chunk, view.chunk_ptrs, buf);
+}
+
 fn worker_loop<B: UpdateBackend>(shared: Arc<Shared<B>>, idx: usize) {
     // Workers beyond the core count (chunk helpers) have no engine.
     let engine: *mut CoreEngine<B> =
@@ -471,6 +672,27 @@ fn worker_loop<B: UpdateBackend>(shared: Arc<Shared<B>>, idx: usize) {
                     }
                     // SAFETY: as above — exclusive engine, blocked driver.
                     unsafe { (*engine).phase_route(&axon_buf) }
+                }
+                Phase::RouteGather => {
+                    let route =
+                        shared.route.read().unwrap_or_else(PoisonError::into_inner);
+                    loop {
+                        let k = shared.next_chunk.fetch_add(1, Ordering::SeqCst);
+                        let Some(t) = route.chunks.get(k) else { break };
+                        // SAFETY: the cursor hands each (core, chunk) to
+                        // exactly one worker; chunks write disjoint
+                        // gather buffers and only read the image/backend
+                        // (module docs).
+                        unsafe { run_route_chunk(&route.views[t.core], t.chunk) };
+                    }
+                    Ok(())
+                }
+                Phase::RouteAccum => {
+                    if engine.is_null() {
+                        return Ok(());
+                    }
+                    // SAFETY: as above — exclusive engine, blocked driver.
+                    unsafe { (*engine).route_finish() }
                 }
                 Phase::Exit => unreachable!(),
             }
@@ -565,6 +787,80 @@ mod tests {
             pool.phase_route(std::slice::from_ref(&inputs)).unwrap();
             assert_eq!(pool.core(0).fired(), direct.fired(), "fired step {step}");
             assert_eq!(pool.core(0).v, direct.v, "membranes step {step}");
+        }
+    }
+
+    /// Tentpole invariant, unit-level: the chunk-parallel Route phase —
+    /// every granularity from one pointer per chunk upward, with and
+    /// without oversubscribed workers — must stay bit-exact with direct
+    /// serial engines, including HBM access counters and cycles (the
+    /// merge epilogue reconstructs the same totals the serial path
+    /// counts inline).
+    #[test]
+    fn chunked_route_matches_direct_engines_at_every_granularity() {
+        for (route_chunk, workers) in [(1, 1), (1, 8), (2, 3), (7, 2), (64, 8)] {
+            let nets: Vec<Network> = (0..3).map(|i| small_net(0xBEE + i)).collect();
+            let mut direct: Vec<CoreEngine<RustBackend>> = nets
+                .iter()
+                .map(|n| CoreEngine::new(n, SlotStrategy::Modulo, RustBackend).unwrap())
+                .collect();
+            let pooled: Vec<CoreEngine<RustBackend>> = nets
+                .iter()
+                .map(|n| CoreEngine::new(n, SlotStrategy::Modulo, RustBackend).unwrap())
+                .collect();
+            let mut pool = CorePool::with_options(
+                pooled,
+                PoolOptions {
+                    route_chunk_ptrs: Some(route_chunk),
+                    workers: Some(workers),
+                    ..PoolOptions::default()
+                },
+            );
+            for step in 0..15 {
+                let inputs: Vec<Vec<u32>> =
+                    (0..3).map(|c| if (step + c) % 2 == 0 { vec![0u32] } else { vec![] }).collect();
+                for (c, e) in direct.iter_mut().enumerate() {
+                    e.phase_update().unwrap();
+                    e.phase_route(&inputs[c]).unwrap();
+                }
+                pool.phase_update().unwrap();
+                pool.phase_route(&inputs).unwrap();
+                for c in 0..3 {
+                    let tag = format!("k={route_chunk} w={workers} core {c} step {step}");
+                    assert_eq!(pool.core(c).v, direct[c].v, "membranes {tag}");
+                    assert_eq!(pool.core(c).fired(), direct[c].fired(), "fired {tag}");
+                    assert_eq!(
+                        pool.core(c).counters(),
+                        direct[c].counters(),
+                        "access counters {tag}"
+                    );
+                    assert_eq!(pool.core(c).cycles, direct[c].cycles, "cycles {tag}");
+                }
+            }
+        }
+    }
+
+    /// Core-granularity routing (the pre-chunking work unit) must stay
+    /// available and bit-identical to the chunked default.
+    #[test]
+    fn route_granularity_core_matches_chunk() {
+        let net = small_net(0xD0);
+        let build = |route| {
+            CorePool::with_options(
+                vec![CoreEngine::new(&net, SlotStrategy::Modulo, RustBackend).unwrap()],
+                PoolOptions { route, workers: Some(4), ..PoolOptions::default() },
+            )
+        };
+        let mut per_core = build(RouteGranularity::Core);
+        let mut chunked = build(RouteGranularity::Chunk);
+        for step in 0..12 {
+            let inputs = vec![if step % 3 == 0 { vec![0u32] } else { vec![] }];
+            per_core.phase_update().unwrap();
+            per_core.phase_route(&inputs).unwrap();
+            chunked.phase_update().unwrap();
+            chunked.phase_route(&inputs).unwrap();
+            assert_eq!(per_core.core(0).v, chunked.core(0).v, "step {step}");
+            assert_eq!(per_core.core(0).counters(), chunked.core(0).counters(), "step {step}");
         }
     }
 

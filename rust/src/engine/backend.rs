@@ -30,11 +30,27 @@
 //! Spike output is a packed `u64` bitmask (bit `i` = neuron `i` fired),
 //! matching the hardware's BRAM spike registers; fired ids are decoded
 //! word-at-a-time with [`extract_fired`] instead of an O(N) scalar scan.
-//! Phase-4 events arrive as one interleaved `(target, weight)` buffer so
+//! Phase-4 events arrive as interleaved `(target, weight)` buffers so
 //! the gather writes and the accumulate read stream the same cache lines.
 //!
-//! Cross-backend parity is enforced by `rust/tests/parity.rs`.
+//! # The route-phase contract (gather + ordered accumulate)
+//!
+//! Phase 2 is [`UpdateBackend::gather`]: stream one HBM pointer's
+//! synapse region into an event buffer. It takes `&self` and must be
+//! pure with respect to backend state — `cluster::CorePool` calls it
+//! concurrently from many worker threads, one **pointer chunk** per
+//! worker, each writing its own buffer. Phase 4 is
+//! [`UpdateBackend::accumulate_bufs`]: consume the per-chunk buffers
+//! **in ascending chunk order**, which concatenates to exactly the
+//! serial gather stream — so wrapping (or any future saturating)
+//! accumulate arithmetic sees the same event order regardless of how
+//! many workers gathered, and every golden transcript stays
+//! bit-identical. `rust/tests/chunked_route.rs` pins this against the
+//! serial `phase_route` reference.
+//!
+//! Cross-backend parity is enforced by `rust/tests/sim_facade.rs`.
 
+use crate::hbm::{HbmImage, Pointer};
 use crate::snn::{Network, FLAG_LIF, FLAG_NOISE};
 use crate::util::prng::{noise17, shift_noise};
 
@@ -209,11 +225,37 @@ pub trait UpdateBackend {
     /// interleaved `(target, weight)` event.
     fn accumulate(&mut self, v: &mut [i32], events: &[(u32, i32)]) -> anyhow::Result<()>;
 
+    /// Phase 2: stream one HBM pointer's synapse region, appending an
+    /// interleaved `(target, weight)` event per valid slot to `out` in
+    /// row/slot order. Must be pure w.r.t. backend state (`&self`):
+    /// `cluster::CorePool` runs it chunk-parallel across worker threads
+    /// during the Route phase, several threads gathering different
+    /// pointer chunks of the same core concurrently. Access accounting
+    /// is the engine's job (per-chunk totals are reconstructed in the
+    /// merge epilogue), not the gather's.
+    fn gather(&self, image: &HbmImage, ptr: Pointer, out: &mut Vec<(u32, i32)>) {
+        image.scan_region(ptr, |e| out.push((e.target, e.weight as i32)));
+    }
+
+    /// Phase 4 over an **ordered list** of per-chunk event buffers: the
+    /// chunk-parallel route gather fills `bufs[0..]` in pointer-queue
+    /// order, and consuming them in ascending index order is
+    /// bit-identical to accumulating the one serial gather stream. The
+    /// default forwards each buffer to [`UpdateBackend::accumulate`];
+    /// overrides must preserve the buffer order.
+    fn accumulate_bufs(&mut self, v: &mut [i32], bufs: &[Vec<(u32, i32)>]) -> anyhow::Result<()> {
+        for b in bufs {
+            self.accumulate(v, b)?;
+        }
+        Ok(())
+    }
+
     /// True when `update` is exactly the pure [`sweep_chunk`] reference
     /// kernel, so a driver (`cluster::CorePool`) may run the sweep
-    /// word-chunk-parallel across threads instead of calling `update`.
-    /// Backends with their own state or execution path (e.g. PJRT) must
-    /// leave this false.
+    /// word-chunk-parallel across threads instead of calling `update`
+    /// (and the route gather pointer-chunk-parallel through
+    /// [`UpdateBackend::gather`]). Backends with their own state or
+    /// execution path (e.g. PJRT) must leave this false.
     fn chunkable(&self) -> bool {
         false
     }

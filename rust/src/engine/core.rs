@@ -16,11 +16,42 @@
 //!    and fired neuron, fetch its HBM pointer; pointer-row reads are
 //!    burst-deduplicated (16 pointers/row).
 //! 3. **phase 2 routing** — stream each pointer's synapse-region rows,
-//!    gathering events into one interleaved `(target, weight)` buffer.
-//! 4. **accumulate** — the backend consumes the interleaved buffer
+//!    gathering events into interleaved `(target, weight)` buffers.
+//! 4. **accumulate** — the backend consumes the gathered buffers
 //!    directly (fused with the gather's write order: one stream through
 //!    the event cache lines instead of the seed's parallel
 //!    targets/weights arrays and second full pass).
+//!
+//! # Route-phase split and the chunk-merge ordering contract
+//!
+//! Like the membrane sweep (`sweep_view`/`finish_update`), the route
+//! phase is split three ways so `cluster::CorePool` can run its hot
+//! middle chunk-parallel:
+//!
+//! * `route_prepare` — serial phase-1: BRAM accounting and
+//!   pointer fetches (the row-burst dedup walks the fired list in order,
+//!   so this stays on one thread), plus chunk geometry: the pointer
+//!   queue is cut into fixed-size chunks, one gather buffer per chunk.
+//! * the **gather** — each chunk `c` streams pointers
+//!   `[c*K, (c+1)*K)` of the queue through [`UpdateBackend::gather`]
+//!   into its own buffer `gather_bufs[c]` (the crate-internal
+//!   `gather_chunk`, driven directly by the serial path and through a
+//!   raw-pointer `RouteView` by the pool workers). Chunks only read the
+//!   HBM image and write their own buffer, so any number of workers may
+//!   run them in any order.
+//! * `route_finish` — the merge/accumulate epilogue:
+//!   row/event accounting reconstructed from the queue and buffer
+//!   lengths (bit-identical totals to the serial counting), then the
+//!   buffers are consumed **in ascending chunk index order** — which
+//!   concatenates to exactly the serial gather stream, so the
+//!   accumulate (wrapping adds today, any order-sensitive arithmetic
+//!   tomorrow) and every golden transcript stay bit-identical to
+//!   [`CoreEngine::phase_route`] run serially.
+//!
+//! `phase_route` itself is `route_prepare` (one whole-queue chunk) + a
+//! serial gather + `route_finish`, so the serial and chunk-parallel
+//! paths share one implementation; `rust/tests/chunked_route.rs` pins
+//! the equivalence across chunk sizes and worker counts.
 //!
 //! The engine never allocates in the hot loop after warm-up: all queues
 //! and gather buffers are reused.
@@ -43,6 +74,25 @@ pub(crate) struct SweepView {
     pub params: *const CoreParams,
     pub n: usize,
     pub step_seed: u32,
+}
+
+/// Raw pointers into one engine's prepared route state, handed to
+/// `CorePool` workers for the chunk-parallel gather. Valid only between
+/// [`CoreEngine::route_prepare`] and [`CoreEngine::route_finish`] while
+/// the engine stays boxed and the pool driver is blocked in its
+/// RouteGather phase. Chunk `c` reads pointers
+/// `[c*chunk_ptrs, (c+1)*chunk_ptrs).min(n_ptrs)` of the queue and owns
+/// buffer slot `c` exclusively; the image and backend are only read.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct RouteView<B> {
+    pub image: *const HbmImage,
+    pub backend: *const B,
+    pub ptrs: *const Pointer,
+    pub n_ptrs: usize,
+    /// base of the engine's `gather_bufs`; slot `c` belongs to chunk `c`
+    pub bufs: *mut Vec<(u32, i32)>,
+    pub n_chunks: usize,
+    pub chunk_ptrs: usize,
 }
 
 /// Result of one engine step (borrowed views into reusable buffers).
@@ -71,7 +121,15 @@ pub struct CoreEngine<B: UpdateBackend> {
     fired_sorted: Vec<u32>,
     out_buf: Vec<u32>,
     ptr_queue: Vec<Pointer>,
-    events: Vec<(u32, i32)>,
+    /// per-chunk phase-2 event buffers; `route_chunks` of them are live
+    /// between `route_prepare` and `route_finish` (see module docs)
+    gather_bufs: Vec<Vec<(u32, i32)>>,
+    /// chunk geometry of the current route phase (set by `route_prepare`)
+    route_chunks: usize,
+    route_chunk_ptrs: usize,
+    /// phase-1 pointer-row delta of the current route phase (for the
+    /// cycle accounting in `route_finish`)
+    route_ptr_rows: u64,
 }
 
 impl<B: UpdateBackend> CoreEngine<B> {
@@ -102,7 +160,10 @@ impl<B: UpdateBackend> CoreEngine<B> {
             fired_sorted: Vec::with_capacity(n),
             out_buf: Vec::new(),
             ptr_queue: Vec::new(),
-            events: Vec::new(),
+            gather_bufs: Vec::new(),
+            route_chunks: 0,
+            route_chunk_ptrs: usize::MAX,
+            route_ptr_rows: 0,
         }
     }
 
@@ -205,7 +266,31 @@ impl<B: UpdateBackend> CoreEngine<B> {
 
     /// Routing + accumulate (phases 1, 2, 4). `axon_in` includes both
     /// host inputs and router deliveries, ascending.
+    ///
+    /// Implemented as `route_prepare` (one whole-queue chunk) + a serial
+    /// gather + `route_finish`, the exact pipeline `CorePool` drives
+    /// chunk-parallel — one code path, so serial and pooled execution
+    /// cannot diverge (see the module docs' ordering contract).
     pub fn phase_route(&mut self, axon_in: &[u32]) -> anyhow::Result<()> {
+        self.route_prepare(axon_in, usize::MAX);
+        // serial gather over the (single) chunk via the one shared
+        // chunk implementation; field-split borrows — image and backend
+        // are read, each buffer written once
+        let image = &self.hbm.image;
+        let backend = &self.backend;
+        let k = self.route_chunk_ptrs;
+        for (c, buf) in self.gather_bufs[..self.route_chunks].iter_mut().enumerate() {
+            gather_chunk(image, backend, &self.ptr_queue, c, k, buf);
+        }
+        self.route_finish()
+    }
+
+    /// Route-phase prologue: BRAM accounting, serial phase-1 pointer
+    /// fetches (row-burst dedup is order-dependent), and chunk geometry
+    /// — the pointer queue is cut into `chunk_ptrs`-pointer chunks with
+    /// one gather buffer each. Followed by the gather (serial here,
+    /// chunk-parallel in `CorePool`) and [`Self::route_finish`].
+    pub(crate) fn route_prepare(&mut self, axon_in: &[u32], chunk_ptrs: usize) {
         debug_assert!(axon_in.windows(2).all(|w| w[0] < w[1]), "axon ids must be sorted");
         self.hbm.counters.bram_accesses += axon_in.len() as u64 + self.fired_buf.len() as u64;
 
@@ -219,21 +304,46 @@ impl<B: UpdateBackend> CoreEngine<B> {
         let rows = &self.hbm.image.neuron_ptr_row;
         self.fired_sorted.sort_unstable_by_key(|&i| (rows[i as usize], i));
         self.hbm.fetch_neuron_pointers(&self.fired_sorted, &mut self.ptr_queue);
+        self.route_ptr_rows = self.hbm.counters.pointer_rows - p0;
 
-        // ---- phase 2: gather events (one interleaved buffer)
-        let s0 = self.hbm.counters.synapse_rows;
-        self.events.clear();
-        let events = &mut self.events;
-        for k in 0..self.ptr_queue.len() {
-            let ptr = self.ptr_queue[k];
-            self.hbm.read_region(ptr, |e| events.push((e.target, e.weight as i32)));
+        // ---- chunk geometry: one gather buffer per pointer chunk
+        self.route_chunk_ptrs = chunk_ptrs.max(1);
+        self.route_chunks = self.ptr_queue.len().div_ceil(self.route_chunk_ptrs);
+        if self.gather_bufs.len() < self.route_chunks {
+            self.gather_bufs.resize_with(self.route_chunks, Vec::new);
         }
-        self.cycles += self
-            .hbm
-            .phase_cycles(self.hbm.counters.pointer_rows - p0, self.hbm.counters.synapse_rows - s0);
+    }
 
-        // ---- phase 4: fused accumulate over the gathered stream
-        self.backend.accumulate(&mut self.v, &self.events)?;
+    /// Raw route state for the pool's chunk-parallel gather; call
+    /// between [`Self::route_prepare`] and [`Self::route_finish`].
+    /// Workers drive each chunk through the same [`gather_chunk`] the
+    /// serial path uses.
+    pub(crate) fn route_view(&mut self) -> RouteView<B> {
+        RouteView {
+            image: &self.hbm.image,
+            backend: &self.backend,
+            ptrs: self.ptr_queue.as_ptr(),
+            n_ptrs: self.ptr_queue.len(),
+            bufs: self.gather_bufs.as_mut_ptr(),
+            n_chunks: self.route_chunks,
+            chunk_ptrs: self.route_chunk_ptrs,
+        }
+    }
+
+    /// Route-phase epilogue: access/cycle accounting (reconstructed from
+    /// the pointer queue and buffer lengths — bit-identical totals to
+    /// the serial per-region counting), the ordered merge/accumulate of
+    /// the per-chunk buffers (ascending chunk index == serial event
+    /// order), and the output-spike scan.
+    pub(crate) fn route_finish(&mut self) -> anyhow::Result<()> {
+        let rows: u64 = self.ptr_queue.iter().map(|p| p.rows as u64).sum();
+        self.hbm.counters.synapse_rows += rows;
+        let bufs = &self.gather_bufs[..self.route_chunks];
+        self.hbm.counters.events += bufs.iter().map(|b| b.len() as u64).sum::<u64>();
+        self.cycles += self.hbm.phase_cycles(self.route_ptr_rows, rows);
+
+        // ---- phase 4: fused accumulate over the ordered buffer list
+        self.backend.accumulate_bufs(&mut self.v, bufs)?;
 
         // outputs
         self.out_buf.clear();
@@ -249,7 +359,31 @@ impl<B: UpdateBackend> CoreEngine<B> {
     pub fn output_spikes(&self) -> &[u32] {
         &self.out_buf
     }
+}
 
+/// Gather one pointer chunk of a prepared route queue into the chunk's
+/// buffer: clear it, then stream pointers `[c*K, (c+1)*K).min(len)`
+/// through [`UpdateBackend::gather`]. This is **the** single chunk
+/// implementation — the serial [`CoreEngine::phase_route`] and the
+/// pool's `run_route_chunk` both call it, so chunk boundary math and
+/// the clear policy cannot diverge between serial and pooled routing.
+pub(crate) fn gather_chunk<B: UpdateBackend>(
+    image: &HbmImage,
+    backend: &B,
+    queue: &[Pointer],
+    chunk: usize,
+    chunk_ptrs: usize,
+    buf: &mut Vec<(u32, i32)>,
+) {
+    buf.clear();
+    let lo = chunk.saturating_mul(chunk_ptrs).min(queue.len());
+    let hi = lo.saturating_add(chunk_ptrs).min(queue.len());
+    for &ptr in &queue[lo..hi] {
+        backend.gather(image, ptr, buf);
+    }
+}
+
+impl<B: UpdateBackend> CoreEngine<B> {
     /// Read membrane potentials (paper `read_membrane`).
     pub fn read_membrane(&self, ids: &[u32]) -> Vec<i32> {
         ids.iter().map(|&i| self.v[i as usize]).collect()

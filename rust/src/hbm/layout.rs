@@ -72,6 +72,26 @@ pub struct HbmImage {
 }
 
 impl HbmImage {
+    /// Stream the valid entries of one synapse region in row/slot order,
+    /// without access accounting — the counting wrapper for the serial
+    /// engine is [`crate::hbm::HbmSim::read_region`]; the chunk-parallel
+    /// route gather calls this from many worker threads (`&self`) and
+    /// reconstructs per-region row/event totals in the merge epilogue
+    /// (rows = `ptr.rows`, events = entries emitted).
+    #[inline]
+    pub fn scan_region<F: FnMut(&SynEntry)>(&self, ptr: Pointer, mut f: F) {
+        let (s, e) = (ptr.start_row as usize, (ptr.start_row + ptr.rows) as usize);
+        let masks = &self.row_mask[s..e];
+        for (row, &mask) in self.syn_rows[s..e].iter().zip(masks) {
+            let mut m = mask;
+            while m != 0 {
+                let slot = m.trailing_zeros() as usize;
+                m &= m - 1;
+                f(&row[slot]);
+            }
+        }
+    }
+
     /// Compile a network (one core's partition) into an HBM image.
     pub fn compile(net: &Network, strategy: SlotStrategy) -> Result<HbmImage, LayoutError> {
         net.validate().map_err(LayoutError::BadNetwork)?;

@@ -88,23 +88,19 @@ impl HbmSim {
     /// Phase 2: stream a source's synapse region, invoking `f` per valid
     /// entry. Counts one row access per region row.
     ///
-    /// §Perf: iterates set bits of the row occupancy mask rather than
-    /// scanning all 16 slots (regions are ~30% dense on converted nets).
-    /// Accounting is unchanged — rows are still fetched whole.
+    /// §Perf: [`HbmImage::scan_region`] iterates set bits of the row
+    /// occupancy mask rather than scanning all 16 slots (regions are
+    /// ~30% dense on converted nets). Accounting is unchanged — rows are
+    /// still fetched whole. The chunk-parallel route gather uses the
+    /// counter-free `scan_region` directly and accounts per chunk.
     #[inline]
     pub fn read_region<F: FnMut(&SynEntry)>(&mut self, ptr: Pointer, mut f: F) {
-        let (s, e) = (ptr.start_row as usize, (ptr.start_row + ptr.rows) as usize);
         self.counters.synapse_rows += ptr.rows as u64;
-        let masks = &self.image.row_mask[s..e];
-        for (row, &mask) in self.image.syn_rows[s..e].iter().zip(masks) {
-            let mut m = mask;
-            while m != 0 {
-                let slot = m.trailing_zeros() as usize;
-                m &= m - 1;
-                self.counters.events += 1;
-                f(&row[slot]);
-            }
-        }
+        let events = &mut self.counters.events;
+        self.image.scan_region(ptr, |e| {
+            *events += 1;
+            f(e);
+        });
     }
 
     /// Cycle cost of this step's routing phases under the paper's

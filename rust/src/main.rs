@@ -75,12 +75,18 @@ fn print_help() {
            --backend dense|rust|pool|xla     execution backend (default rust;\n\
                                              xla needs --features pjrt)\n\
            --seed N                          override the network noise seed\n\
+           --workers N                       worker threads for the pooled\n\
+                                             backends (>= 1; default: available\n\
+                                             parallelism; bit-exactness is\n\
+                                             worker-count-invariant)\n\
+           --route core|chunk                route-phase granularity (default\n\
+                                             chunk: gather spread over workers)\n\
            --artifacts DIR                   AOT artifact dir (default artifacts/)\n\
          \n\
          OPTIONS (subcommand-specific)\n\
            --steps N                         steps for bench-step (default 1000)\n\
            --bias threshold|axon             converter bias mode\n\
-           --workers N                       serve: parallel jobs (default 2)\n\
+           --jobs N                          serve: parallel jobs (default 2)\n\
            --once                            serve: single spool pass, then exit"
     );
 }
@@ -162,10 +168,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let spool = args.positional.get(1).context("serve: missing <spool-dir>")?;
     let spool = Path::new(spool);
     std::fs::create_dir_all(spool)?;
-    let workers = args.get_usize("workers", 2).map_err(|e| anyhow!(e))?;
+    // `--jobs` sizes the job queue; `--workers` (a shared deployment
+    // flag) sizes each job's simulator worker pool. Flag-rename guard:
+    // `serve --workers` used to mean job slots — warn instead of
+    // silently dropping an old deployment to the 2-job default.
+    if args.get("workers").is_some() && args.get("jobs").is_none() {
+        eprintln!(
+            "warning: `--workers` now sets each job's simulator worker pool \
+             (shared deployment flag); serve's parallel job slots are `--jobs N` \
+             (currently defaulting to 2)"
+        );
+    }
+    let jobs = args.get_usize("jobs", 2).map_err(|e| anyhow!(e))?;
     let options = SimOptions::from_args(args)?;
-    let queue = JobQueue::start(workers, EnergyModel::default());
-    println!("serving spool {} with {workers} workers", spool.display());
+    let queue = JobQueue::start(jobs, EnergyModel::default());
+    println!("serving spool {} with {jobs} job workers", spool.display());
     let mut next_id = 0u64;
     let mut names: std::collections::HashMap<u64, String> = Default::default();
     loop {

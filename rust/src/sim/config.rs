@@ -6,7 +6,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::cluster::{MultiCoreEngine, PoolSim};
+use crate::cluster::{MultiCoreEngine, PoolOptions, PoolSim, RouteGranularity};
 use crate::engine::{CoreEngine, DenseSim, RustBackend};
 use crate::hbm::SlotStrategy;
 use crate::partition::{ClusterTopology, CoreCapacity};
@@ -83,6 +83,17 @@ pub(crate) fn parse_strategy(s: &str) -> Result<SlotStrategy, SimError> {
     }
 }
 
+/// Parse a `--route` value; unknown values list the options.
+pub(crate) fn parse_route(s: &str) -> Result<RouteGranularity, SimError> {
+    match s {
+        "core" => Ok(RouteGranularity::Core),
+        "chunk" => Ok(RouteGranularity::Chunk),
+        other => Err(SimError::Config(format!(
+            "unknown --route {other:?} (options: core, chunk)"
+        ))),
+    }
+}
+
 /// Network-independent deployment options — everything a [`SimConfig`]
 /// holds except the network itself. Jobs and daemons carry this and
 /// attach a network per run ([`SimOptions::into_config`]).
@@ -99,6 +110,17 @@ pub struct SimOptions {
     /// Sweep chunk granularity in 64-bit spike words for the pooled
     /// backends (`None` = engine default).
     pub chunk_words: Option<usize>,
+    /// Route-phase work-unit granularity for the pooled backends
+    /// (chunk-parallel gather by default; `core` = one worker per core).
+    pub route: RouteGranularity,
+    /// Route gather granularity in pointers per chunk (`None` = engine
+    /// default).
+    pub route_chunk_ptrs: Option<usize>,
+    /// Worker-thread count for the pooled backends (`None` = size to
+    /// `available_parallelism`). Must be >= 1; explicit so throughput
+    /// and parity tests control parallelism instead of inheriting the
+    /// host's. No-op for the serial single-core backends.
+    pub workers: Option<usize>,
 }
 
 impl Default for SimOptions {
@@ -111,6 +133,9 @@ impl Default for SimOptions {
             seed: None,
             artifacts: PathBuf::from("artifacts"),
             chunk_words: None,
+            route: RouteGranularity::default(),
+            route_chunk_ptrs: None,
+            workers: None,
         }
     }
 }
@@ -118,12 +143,13 @@ impl Default for SimOptions {
 impl SimOptions {
     /// The shared CLI surface: `--servers/--fpgas/--cores` (topology),
     /// `--strategy modulo|balance`, `--backend dense|rust|pool|xla`
-    /// (plus the legacy `--xla` flag), `--seed N`, `--artifacts DIR`.
-    /// Unknown `--backend`/`--strategy` values are listed-options
-    /// errors, never silent defaults. Used by every execution
-    /// subcommand, `serve-session` included — the protocol's
-    /// `configure` op supplies the network, these flags fix the
-    /// deployment.
+    /// (plus the legacy `--xla` flag), `--seed N`, `--workers N`,
+    /// `--route core|chunk`, `--artifacts DIR`. Unknown
+    /// `--backend`/`--strategy`/`--route` values (and `--workers 0`)
+    /// are listed-options errors, never silent defaults. Used by every
+    /// execution subcommand, `serve-session` included — the protocol's
+    /// `configure` op supplies the network (and may override
+    /// `workers`), these flags fix the deployment.
     pub fn from_args(args: &Args) -> Result<SimOptions, SimError> {
         let topology = ClusterTopology {
             servers: args.get_usize("servers", 1).map_err(SimError::Config)?,
@@ -139,14 +165,38 @@ impl SimOptions {
             None => None,
             Some(_) => Some(args.get_u32("seed", 0).map_err(SimError::Config)?),
         };
+        let route = parse_route(args.get_or("route", "chunk"))?;
+        let workers = match args.get("workers") {
+            None => None,
+            Some(_) => Some(args.get_usize("workers", 0).map_err(SimError::Config)?),
+        };
+        if workers == Some(0) {
+            return Err(SimError::Config(
+                "--workers must be >= 1 (worker threads for the pooled backends; \
+                 omit the flag to size to available parallelism)"
+                    .into(),
+            ));
+        }
         Ok(SimOptions {
             topology,
             strategy,
             backend,
             seed,
             artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
+            route,
+            workers,
             ..SimOptions::default()
         })
+    }
+
+    /// The worker-pool slice of these options (for the pooled engines).
+    pub(crate) fn pool_options(&self) -> PoolOptions {
+        PoolOptions {
+            chunk_words: self.chunk_words,
+            route: self.route,
+            route_chunk_ptrs: self.route_chunk_ptrs,
+            workers: self.workers,
+        }
     }
 
     /// Attach a network, yielding a buildable [`SimConfig`].
@@ -218,6 +268,32 @@ impl SimConfig {
         self
     }
 
+    /// Route-phase work-unit granularity for the pooled backends:
+    /// chunk-parallel gather ([`RouteGranularity::Chunk`], the default)
+    /// or one worker per core ([`RouteGranularity::Core`]). Both are
+    /// bit-identical; the knob exists for parity tests and perf
+    /// ablations.
+    pub fn route_granularity(mut self, route: RouteGranularity) -> Self {
+        self.opts.route = route;
+        self
+    }
+
+    /// Route gather granularity (pointers per chunk) for the pooled
+    /// backends — exposed for tests and perf experiments.
+    pub fn route_chunk_ptrs(mut self, ptrs: usize) -> Self {
+        self.opts.route_chunk_ptrs = Some(ptrs);
+        self
+    }
+
+    /// Explicit worker-thread count for the pooled backends (must be
+    /// >= 1; [`SimConfig::build`] rejects 0). Makes parallelism a tested
+    /// input instead of an `available_parallelism` accident; the pool
+    /// still keeps one worker per core for per-core phases.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.opts.workers = Some(workers);
+        self
+    }
+
     /// Compile and spin up the session: applies the seed override,
     /// partitions the network (multi-core), builds HBM images and
     /// starts worker pools. The returned box is the only public
@@ -226,6 +302,11 @@ impl SimConfig {
         let SimConfig { mut net, opts } = self;
         if let Some(seed) = opts.seed {
             net.base_seed = seed;
+        }
+        if opts.workers == Some(0) {
+            return Err(SimError::Config(
+                "workers must be >= 1 (omit to size to available parallelism)".into(),
+            ));
         }
         let n_cores = opts.topology.n_cores();
         if n_cores == 0 {
@@ -246,7 +327,7 @@ impl SimConfig {
                     opts.topology,
                     opts.capacity,
                     opts.strategy,
-                    opts.chunk_words,
+                    opts.pool_options(),
                 )?;
                 Ok(Box::new(engine))
             }
@@ -254,7 +335,7 @@ impl SimConfig {
                 Ok(Box::new(CoreEngine::new(&net, opts.strategy, RustBackend)?))
             }
             Backend::Pool => {
-                Ok(Box::new(PoolSim::new(&net, opts.strategy, opts.chunk_words)?))
+                Ok(Box::new(PoolSim::new(&net, opts.strategy, opts.pool_options())?))
             }
             Backend::Xla => {
                 if !pjrt_enabled() {
@@ -315,5 +396,34 @@ mod tests {
     fn legacy_xla_flag_selects_xla() {
         let o = SimOptions::from_args(&args(&["--xla"])).unwrap();
         assert_eq!(o.backend, Backend::Xla);
+    }
+
+    #[test]
+    fn workers_flag_is_explicit_and_zero_is_an_error() {
+        let o = SimOptions::from_args(&args(&["--workers", "3"])).unwrap();
+        assert_eq!(o.workers, Some(3));
+        assert_eq!(SimOptions::from_args(&args(&[])).unwrap().workers, None);
+        let err = SimOptions::from_args(&args(&["--workers", "0"])).unwrap_err();
+        assert!(err.to_string().contains(">= 1"), "{err}");
+        // the builder path rejects 0 at build time too
+        let net = crate::snn::Network::from_adj(
+            vec![crate::snn::NeuronModel::if_neuron(1); 2],
+            &[vec![], vec![]],
+            &[vec![crate::snn::Synapse { target: 0, weight: 1 }]],
+            vec![0],
+            0,
+        );
+        let err = SimConfig::new(net).backend(Backend::Pool).workers(0).build();
+        assert!(matches!(err, Err(SimError::Config(_))));
+    }
+
+    #[test]
+    fn unknown_route_granularity_lists_options() {
+        let err = SimOptions::from_args(&args(&["--route", "warp"])).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("warp") && msg.contains("core, chunk"), "{msg}");
+        let o = SimOptions::from_args(&args(&["--route", "core"])).unwrap();
+        assert_eq!(o.route, RouteGranularity::Core);
+        assert_eq!(SimOptions::from_args(&args(&[])).unwrap().route, RouteGranularity::Chunk);
     }
 }

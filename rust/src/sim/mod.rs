@@ -9,9 +9,12 @@
 //! * [`SimConfig`] — a builder that owns the network plus every
 //!   deployment decision (topology, per-core capacity, HBM slot
 //!   strategy, compute backend, noise seed, artifact directory, sweep
-//!   chunk granularity). [`SimConfig::build`] performs partitioning, HBM
-//!   image compilation and worker-pool spin-up, and returns a boxed
-//!   [`Simulator`].
+//!   chunk granularity, route granularity, worker count).
+//!   [`SimConfig::build`] performs partitioning, HBM image compilation
+//!   and worker-pool spin-up, and returns a boxed [`Simulator`]. All
+//!   parallelism knobs are bit-exactness-preserving: the same network
+//!   and seed produce identical spike trains for every `workers` /
+//!   `chunk_words` / `route_granularity` setting.
 //! * [`Simulator`] — the backend-neutral session: [`Simulator::step`]
 //!   advances one 1 ms tick, [`Simulator::step_many`] advances a whole
 //!   stimulus batch with one up-front marshalling pass,
@@ -66,6 +69,7 @@ mod config;
 pub mod session;
 
 pub use config::{Backend, SimConfig, SimOptions};
+pub use crate::cluster::RouteGranularity;
 
 use crate::energy::{CostReport, EnergyModel};
 use crate::hbm::LayoutStats;

@@ -24,10 +24,14 @@
 //! # Ops (one request/response example each)
 //!
 //! `configure` — load a `.hsn` network and (re)build the simulator from
-//! the session's deployment options; an existing simulator is replaced:
+//! the session's deployment options; an existing simulator is replaced.
+//! Optional fields override the CLI options: `seed` (noise base seed)
+//! and `workers` (worker-thread count for the pooled backends, >= 1 —
+//! bit-exactness is worker-count-invariant, so this only tunes
+//! throughput):
 //!
 //! ```text
-//! -> {"op":"configure","net":"mnist.hsn","seed":7}
+//! -> {"op":"configure","net":"mnist.hsn","seed":7,"workers":4}
 //! <- {"axons":64,"backend":"rust","neurons":100000,"ok":true,"op":"configure","outputs":10,"protocol":1}
 //! ```
 //!
@@ -139,7 +143,7 @@ pub fn error_code(e: &SimError) -> &'static str {
 /// One parsed request line.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
-    Configure { net: String, seed: Option<u32> },
+    Configure { net: String, seed: Option<u32>, workers: Option<usize> },
     Step { axons: Vec<u32> },
     StepMany { batch: Vec<Vec<u32>> },
     ReadMembrane { ids: Vec<u32> },
@@ -194,7 +198,11 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                 None | Some(Json::Null) => None,
                 Some(v) => Some(id_value(v, "seed")?),
             };
-            Ok(Request::Configure { net, seed })
+            let workers = match j.get("workers") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(id_value(v, "workers")? as usize),
+            };
+            Ok(Request::Configure { net, seed, workers })
         }
         "step" => Ok(Request::Step { axons: ids_field(&j, "axons", "step")? }),
         "step_many" => {
@@ -317,7 +325,9 @@ impl Session {
 
     fn handle(&mut self, req: Request) -> (String, bool) {
         match req {
-            Request::Configure { net, seed } => (self.configure(&net, seed), false),
+            Request::Configure { net, seed, workers } => {
+                (self.configure(&net, seed, workers), false)
+            }
             Request::Step { axons } => {
                 let sim = match self.sim_or_err() {
                     Ok(s) => s,
@@ -425,7 +435,7 @@ impl Session {
         }
     }
 
-    fn configure(&mut self, net_path: &str, seed: Option<u32>) -> String {
+    fn configure(&mut self, net_path: &str, seed: Option<u32>, workers: Option<usize>) -> String {
         let net = match read_hsn(net_path) {
             Ok(n) => n,
             Err(e) => return err_response(CODE_CONFIG, &format!("loading {net_path}: {e:#}")),
@@ -434,6 +444,11 @@ impl Session {
         let mut opts = self.opts.clone();
         if seed.is_some() {
             opts.seed = seed;
+        }
+        if workers.is_some() {
+            // workers: 0 flows into SimConfig::build, which rejects it
+            // with a `config` error (one validation point, not two)
+            opts.workers = workers;
         }
         match opts.into_config(net).build() {
             Ok(sim) => {
@@ -698,6 +713,47 @@ mod tests {
         let (resp_a, _) = s.handle_line(r#"{"op":"step","axons":[1,0,1,0]}"#);
         let (resp_b, _) = t.handle_line(r#"{"op":"step","axons":[0,1]}"#);
         assert_eq!(resp_a, resp_b);
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Satellite: the `configure` op threads an explicit worker count
+    /// into the deployment options — parsed as an optional u32 field,
+    /// `0` rejected by the facade as a `config` error, execution
+    /// bit-identical to the CLI-default worker count.
+    #[test]
+    fn configure_workers_field_parses_and_zero_is_config_error() {
+        assert_eq!(
+            parse_request(r#"{"op":"configure","net":"x.hsn","workers":4}"#).unwrap(),
+            Request::Configure { net: "x.hsn".into(), seed: None, workers: Some(4) }
+        );
+        assert_eq!(
+            parse_request(r#"{"op":"configure","net":"x.hsn"}"#).unwrap(),
+            Request::Configure { net: "x.hsn".into(), seed: None, workers: None }
+        );
+        // mistyped workers is a malformed request, not a silent default
+        let e = parse_request(r#"{"op":"configure","net":"x.hsn","workers":"two"}"#).unwrap_err();
+        assert_eq!(e.code, CODE_MALFORMED);
+
+        let p = fig6_path("workers");
+        let opts = SimOptions { backend: crate::sim::Backend::Pool, ..Default::default() };
+        let mut s = Session::new(opts);
+        let (resp, _) = s.handle_line(&format!(
+            "{{\"op\":\"configure\",\"net\":\"{}\",\"workers\":0}}",
+            p.display()
+        ));
+        assert_err(&resp, CODE_CONFIG);
+        assert!(!s.is_configured());
+        // a valid worker count configures and steps bit-identically to
+        // the default
+        let (resp, _) = s.handle_line(&format!(
+            "{{\"op\":\"configure\",\"net\":\"{}\",\"workers\":3}}",
+            p.display()
+        ));
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let mut d = configured_session(&p);
+        let (a, _) = s.handle_line(r#"{"op":"step","axons":[0,1]}"#);
+        let (b, _) = d.handle_line(r#"{"op":"step","axons":[0,1]}"#);
+        assert_eq!(a, b, "explicit workers changed the spike train");
         std::fs::remove_file(&p).ok();
     }
 

@@ -1,0 +1,180 @@
+//! Route-parity property suite — the route-phase twin of
+//! `prop_chunked_sweep_matches_scalar_reference`: the chunk-parallel
+//! Route phase (gather spread over pool workers in pointer chunks,
+//! merged in chunk order before the accumulate) must be **bit-exact**
+//! with the serial `phase_route` reference for every chunk size and
+//! worker count, including oversubscribed pools — membranes, fired ids,
+//! output spikes AND the reconstructed HBM access/event accounting.
+//!
+//! Everything runs through the public facade: `Backend::Rust` is the
+//! serial reference (one engine, serial `phase_route`), `Backend::Pool`
+//! with `workers(n)` / `route_chunk_ptrs(k)` / `route_granularity` is
+//! the system under test.
+
+use hiaer_spike::energy::EnergyModel;
+use hiaer_spike::sim::{Backend, RouteGranularity, SimConfig, Simulator};
+use hiaer_spike::snn::{Network, NeuronModel, Synapse};
+use hiaer_spike::util::prng::Xorshift32;
+use hiaer_spike::util::ptest;
+
+/// Random CSR net with all three neuron models, stochastic lanes
+/// included (noise is per-index counter hash, so the single-core pool
+/// shares the serial engine's seed schedule bit-for-bit).
+fn random_net(rng: &mut Xorshift32, n: usize, a: usize) -> Network {
+    let models = [
+        NeuronModel::if_neuron(rng.range_i32(5, 60)),
+        NeuronModel::lif(rng.range_i32(5, 60), -5, 4, true).unwrap(),
+        NeuronModel::ann(rng.range_i32(2, 40), -8, true).unwrap(),
+    ];
+    let params: Vec<NeuronModel> = (0..n).map(|_| models[rng.below(3) as usize]).collect();
+    let outputs: Vec<u32> = (0..n as u32).filter(|_| rng.chance(0.25)).collect();
+    let base_seed = rng.next_u32();
+    let mut neuron_adj: Vec<Vec<Synapse>> = vec![Vec::new(); n];
+    for adj in neuron_adj.iter_mut() {
+        for _ in 0..rng.below(9) as usize {
+            adj.push(Synapse { target: rng.below(n as u32), weight: rng.range_i32(-60, 60) as i16 });
+        }
+    }
+    let mut axon_adj: Vec<Vec<Synapse>> = vec![Vec::new(); a];
+    for adj in axon_adj.iter_mut() {
+        for _ in 0..1 + rng.below(6) as usize {
+            adj.push(Synapse { target: rng.below(n as u32), weight: rng.range_i32(-60, 80) as i16 });
+        }
+    }
+    Network::from_adj(params, &neuron_adj, &axon_adj, outputs, base_seed)
+}
+
+/// Drive `sut` and `reference` in lockstep and assert bit-exact spike
+/// trains, membranes, and cost counters every step.
+fn assert_lockstep(
+    tag: &str,
+    reference: &mut dyn Simulator,
+    sut: &mut dyn Simulator,
+    steps: usize,
+    rng: &mut Xorshift32,
+) -> Result<(), String> {
+    let n = reference.n_neurons();
+    let a = reference.n_axons();
+    let all_ids: Vec<u32> = (0..n as u32).collect();
+    let energy = EnergyModel::default();
+    for t in 0..steps {
+        let axons: Vec<u32> = (0..a as u32).filter(|_| rng.chance(0.4)).collect();
+        let (want_fired, want_out) = {
+            let r = reference.step(&axons).map_err(|e| e.to_string())?;
+            (r.fired.to_vec(), r.output_spikes.to_vec())
+        };
+        let got = sut.step(&axons).map_err(|e| e.to_string())?;
+        ptest::prop_assert_eq(got.fired.to_vec(), want_fired, &format!("{tag} t{t} fired"))?;
+        ptest::prop_assert_eq(
+            got.output_spikes.to_vec(),
+            want_out,
+            &format!("{tag} t{t} outputs"),
+        )?;
+        drop(got);
+        ptest::prop_assert_eq(
+            sut.read_membrane(&all_ids),
+            reference.read_membrane(&all_ids),
+            &format!("{tag} t{t} membranes"),
+        )?;
+        let (rc, sc) = (reference.cost(&energy), sut.cost(&energy));
+        ptest::prop_assert_eq(sc.events, rc.events, &format!("{tag} t{t} events"))?;
+        ptest::prop_assert_eq(sc.hbm_rows, rc.hbm_rows, &format!("{tag} t{t} hbm rows"))?;
+        ptest::prop_assert_eq(sc.cycles, rc.cycles, &format!("{tag} t{t} cycles"))?;
+    }
+    Ok(())
+}
+
+/// THE route-parity property: random CSR nets x chunk sizes x worker
+/// counts (1..=8, including pools oversubscribed far beyond the chunk
+/// count) — the chunk-parallel route is bit-identical to the serial
+/// `phase_route` reference.
+#[test]
+fn prop_chunked_route_matches_serial() {
+    ptest::check("chunked_route_vs_serial", 18, |rng| {
+        let n = 30 + rng.below(260) as usize;
+        let a = 2 + rng.below(8) as usize;
+        let net = random_net(rng, n, a);
+        let chunk = [1usize, 2, 5, 16, 64][rng.below(5) as usize];
+        let workers = 1 + rng.below(8) as usize; // 1..=8
+        let mut reference =
+            SimConfig::new(net.clone()).backend(Backend::Rust).build().map_err(|e| e.to_string())?;
+        let mut pool = SimConfig::new(net)
+            .backend(Backend::Pool)
+            .workers(workers)
+            .route_chunk_ptrs(chunk)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let tag = format!("k={chunk} w={workers}");
+        assert_lockstep(&tag, &mut *reference, &mut *pool, 10, rng)
+    });
+}
+
+/// Exhaustive corner grid on one fixed net: every worker count 1..=8
+/// (the net's pointer queues are tiny, so most of these pools are
+/// oversubscribed), maximal chunking (one pointer per chunk), and both
+/// routing granularities.
+#[test]
+fn route_worker_grid_and_both_granularities_match_serial() {
+    let mut seed_rng = Xorshift32::new(0x0507);
+    let net = random_net(&mut seed_rng, 150, 5);
+    for workers in 1..=8usize {
+        for route in [RouteGranularity::Core, RouteGranularity::Chunk] {
+            let mut reference =
+                SimConfig::new(net.clone()).backend(Backend::Rust).build().unwrap();
+            let mut pool = SimConfig::new(net.clone())
+                .backend(Backend::Pool)
+                .workers(workers)
+                .route_granularity(route)
+                .route_chunk_ptrs(1) // maximal split
+                .build()
+                .unwrap();
+            let mut rng = Xorshift32::new(0xFEED);
+            assert_lockstep(
+                &format!("grid w={workers} {route:?}"),
+                &mut *reference,
+                &mut *pool,
+                12,
+                &mut rng,
+            )
+            .unwrap();
+        }
+    }
+}
+
+/// A dense burst net (every axon hits many targets, every neuron fans
+/// out) exercises multi-row regions and many chunks per step; the merge
+/// order must still reproduce the serial event stream exactly.
+#[test]
+fn dense_burst_routing_is_chunk_invariant() {
+    let n = 300usize;
+    let mut rng = Xorshift32::new(0xB00);
+    let mut neuron_adj: Vec<Vec<Synapse>> = vec![Vec::new(); n];
+    for adj in neuron_adj.iter_mut() {
+        for _ in 0..24 {
+            adj.push(Synapse { target: rng.below(n as u32), weight: rng.range_i32(-8, 12) as i16 });
+        }
+    }
+    let axon_adj: Vec<Vec<Synapse>> = (0..3)
+        .map(|_| (0..n as u32).map(|t| Synapse { target: t, weight: 9 }).collect())
+        .collect();
+    let net = Network::from_adj(
+        vec![NeuronModel::if_neuron(25); n],
+        &neuron_adj,
+        &axon_adj,
+        (0..n as u32).step_by(7).collect(),
+        0xC0DE,
+    );
+    for chunk in [1usize, 3, 37] {
+        let mut reference =
+            SimConfig::new(net.clone()).backend(Backend::Rust).build().unwrap();
+        let mut pool = SimConfig::new(net.clone())
+            .backend(Backend::Pool)
+            .workers(6)
+            .route_chunk_ptrs(chunk)
+            .build()
+            .unwrap();
+        let mut rng = Xorshift32::new(7);
+        assert_lockstep(&format!("burst k={chunk}"), &mut *reference, &mut *pool, 8, &mut rng)
+            .unwrap();
+    }
+}

@@ -2,9 +2,10 @@
 //! violations, malformed files and job-level fault isolation must produce
 //! errors, never wrong results or panics.
 
-use hiaer_spike::cluster::{parse_stimulus, run_job, Job, JobQueue, JobStatus};
+use hiaer_spike::cluster::{parse_stimulus, run_job, CorePool, Job, JobQueue, JobStatus, PoolOptions};
 use hiaer_spike::energy::EnergyModel;
-use hiaer_spike::hbm::{HbmImage, SlotStrategy};
+use hiaer_spike::engine::{sweep_chunk, CoreParams, UpdateBackend};
+use hiaer_spike::hbm::{HbmImage, Pointer, SlotStrategy};
 use hiaer_spike::model_fmt::{hsl::read_hsl, read_hsd, read_hsn, write_hsn};
 use hiaer_spike::partition::{ClusterTopology, CoreCapacity, Partition};
 use hiaer_spike::runtime::{ArtifactRegistry, Runtime};
@@ -113,6 +114,92 @@ fn stimulus_axon_out_of_range_fails_job() {
     let r = run_job(&job, &EnergyModel::default());
     std::fs::remove_file(&p).ok();
     assert!(matches!(r.status, JobStatus::Failed(_)) || r.spikes.is_empty());
+}
+
+/// A backend whose membrane sweep is the honest pure reference kernel
+/// (so the pool takes the chunk-parallel paths) but whose route phase
+/// is booby-trapped: `gather` or `accumulate` panics on demand.
+#[derive(Clone, Copy, Debug)]
+struct RoutePanicBackend {
+    panic_in_gather: bool,
+    panic_in_accumulate: bool,
+}
+
+impl UpdateBackend for RoutePanicBackend {
+    fn update(
+        &mut self,
+        v: &mut [i32],
+        params: &CoreParams,
+        step_seed: u32,
+        spikes: &mut [u64],
+    ) -> anyhow::Result<()> {
+        let n = v.len();
+        sweep_chunk(v, params.slice(0, n), step_seed, spikes, 0);
+        Ok(())
+    }
+
+    fn gather(&self, image: &HbmImage, ptr: Pointer, out: &mut Vec<(u32, i32)>) {
+        if self.panic_in_gather {
+            panic!("injected gather panic");
+        }
+        image.scan_region(ptr, |e| out.push((e.target, e.weight as i32)));
+    }
+
+    fn accumulate(&mut self, _v: &mut [i32], _events: &[(u32, i32)]) -> anyhow::Result<()> {
+        if self.panic_in_accumulate {
+            panic!("injected accumulate panic");
+        }
+        Ok(())
+    }
+
+    fn chunkable(&self) -> bool {
+        true // update IS the pure sweep_chunk reference kernel
+    }
+
+    fn name(&self) -> &'static str {
+        "route-panic"
+    }
+}
+
+/// Drive a two-core pool of `RoutePanicBackend`s through one poisoned
+/// step and assert the PR-2 panic guarantee now extends to the
+/// chunk-parallel Route phase: the phase error is surfaced (not a
+/// hang), the pool stays usable for a following quiet step, and `Drop`
+/// terminates cleanly.
+fn route_panic_scenario(backend: RoutePanicBackend, expect: &str) {
+    let nets: Vec<Network> = (0..2).map(|_| tiny_net()).collect();
+    let mut pool = CorePool::with_backend_for_tests(&nets, backend, PoolOptions::default())
+        .expect("pool construction");
+    pool.phase_update().unwrap();
+    // axon 0 fires into both cores -> at least one gather chunk each ->
+    // the injected panic trips inside the parallel route machinery
+    let err = pool
+        .phase_route(&[vec![0u32], vec![0u32]])
+        .expect_err("injected panic must surface as a phase error")
+        .to_string();
+    assert!(err.contains("panicked"), "{err}");
+    assert!(err.contains(expect), "{err}");
+    // the pool survives: a quiet step (no fired sources -> no gather
+    // chunks, empty accumulate input) completes normally
+    pool.phase_update().unwrap();
+    pool.phase_route(&[vec![], vec![]]).unwrap();
+    drop(pool); // must not hang on a dead worker
+}
+
+#[test]
+fn route_gather_panic_is_surfaced_and_pool_survives() {
+    route_panic_scenario(
+        RoutePanicBackend { panic_in_gather: true, panic_in_accumulate: false },
+        "injected gather panic",
+    );
+}
+
+#[test]
+fn route_accumulate_panic_is_surfaced_and_pool_survives() {
+    route_panic_scenario(
+        RoutePanicBackend { panic_in_gather: false, panic_in_accumulate: true },
+        "injected accumulate panic",
+    );
 }
 
 #[test]

@@ -13,7 +13,9 @@
 use std::path::Path;
 
 use hiaer_spike::energy::EnergyModel;
-use hiaer_spike::sim::{Backend, SimConfig, SimError, SimOptions, Simulator};
+use hiaer_spike::sim::{
+    Backend, RouteGranularity, RunRecord, SimConfig, SimError, SimOptions, Simulator,
+};
 use hiaer_spike::snn::{Network, NeuronModel, Synapse, FLAG_NOISE};
 use hiaer_spike::util::cli::Args;
 use hiaer_spike::util::prng::Xorshift32;
@@ -253,6 +255,87 @@ fn run_many_reuses_engine_and_matches_fresh_builds() {
             assert_eq!(rec.spikes, want.spikes, "{backend:?} warm vs fresh spikes");
             assert_eq!(rec.fired_total, want.fired_total, "{backend:?} fired_total");
             assert_eq!(rec.cost.hbm_rows, want.cost.hbm_rows, "{backend:?} per-run cost");
+        }
+    }
+}
+
+fn assert_records_identical(tag: &str, a: &RunRecord, b: &RunRecord) {
+    assert_eq!(a.steps, b.steps, "{tag}: steps");
+    assert_eq!(a.spikes, b.spikes, "{tag}: per-step spikes");
+    assert_eq!(a.fired_total, b.fired_total, "{tag}: fired_total");
+    assert_eq!(a.cost.events, b.cost.events, "{tag}: cost events");
+    assert_eq!(a.cost.hbm_rows, b.cost.hbm_rows, "{tag}: cost hbm_rows");
+    assert_eq!(a.cost.cycles, b.cost.cycles, "{tag}: cost cycles");
+    assert_eq!(a.cost.energy_uj, b.cost.energy_uj, "{tag}: cost energy");
+    assert_eq!(a.cost.latency_us, b.cost.latency_us, "{tag}: cost latency");
+}
+
+/// Satellite: worker count is a pure throughput knob — the same
+/// `SimConfig` run with 1, 2, and N workers, under both routing
+/// granularities, produces identical `RunRecord`s including the
+/// `CostSummary` event counts. Covers the single-core pool and the
+/// partitioned cluster (whose internal pool takes the same knobs).
+#[test]
+fn worker_count_and_route_granularity_leave_run_records_invariant() {
+    let mut rng = Xorshift32::new(0x1277);
+    let net = random_net(&mut rng, 140, 6);
+    let energy = EnergyModel::default();
+    let stimulus: Vec<Vec<u32>> = (0..10)
+        .map(|_| (0..net.n_axons() as u32).filter(|_| rng.chance(0.4)).collect())
+        .collect();
+
+    // pool backend: reference = 1 worker, core-granularity routing
+    let reference = {
+        let mut sim = SimConfig::new(net.clone())
+            .backend(Backend::Pool)
+            .workers(1)
+            .route_granularity(RouteGranularity::Core)
+            .build()
+            .unwrap();
+        sim.run(&stimulus, &energy).unwrap()
+    };
+    assert!(reference.fired_total > 0, "test net too quiet to prove anything");
+    for workers in [1usize, 2, 6] {
+        for route in [RouteGranularity::Core, RouteGranularity::Chunk] {
+            let mut sim = SimConfig::new(net.clone())
+                .backend(Backend::Pool)
+                .workers(workers)
+                .route_granularity(route)
+                .build()
+                .unwrap();
+            let rec = sim.run(&stimulus, &energy).unwrap();
+            assert_records_identical(&format!("pool w={workers} {route:?}"), &rec, &reference);
+        }
+    }
+
+    // cluster: same invariance on its internal pool (cluster-vs-cluster,
+    // so per-core noise seeds are identical across the comparison)
+    let cap = hiaer_spike::partition::CoreCapacity { max_neurons: 50, max_synapses: usize::MAX };
+    let cluster_ref = {
+        let mut sim = SimConfig::new(net.clone())
+            .topology(1, 1, 3)
+            .capacity(cap)
+            .workers(1)
+            .route_granularity(RouteGranularity::Core)
+            .build()
+            .unwrap();
+        sim.run(&stimulus, &energy).unwrap()
+    };
+    for workers in [2usize, 5] {
+        for route in [RouteGranularity::Core, RouteGranularity::Chunk] {
+            let mut sim = SimConfig::new(net.clone())
+                .topology(1, 1, 3)
+                .capacity(cap)
+                .workers(workers)
+                .route_granularity(route)
+                .build()
+                .unwrap();
+            let rec = sim.run(&stimulus, &energy).unwrap();
+            assert_records_identical(
+                &format!("cluster w={workers} {route:?}"),
+                &rec,
+                &cluster_ref,
+            );
         }
     }
 }
