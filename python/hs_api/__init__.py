@@ -20,10 +20,17 @@ from .exceptions import (  # noqa: F401
     HsBackendUnavailable,
     HsError,
     HsProtocolError,
+    HsQuotaError,
+    HsServerBusy,
     HsSessionError,
     HsStimulusError,
 )
 from .network import CRI_network  # noqa: F401
 from .neuron_models import ANN_neuron, LIF_neuron  # noqa: F401
-from .session import SessionClient, SubprocessTransport, find_server_binary  # noqa: F401
+from .session import (  # noqa: F401
+    SessionClient,
+    SubprocessTransport,
+    TcpTransport,
+    find_server_binary,
+)
 from .simulator import NumpySimulator  # noqa: F401

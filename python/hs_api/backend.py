@@ -30,7 +30,7 @@ import tempfile
 import numpy as np
 
 from .exceptions import HsBackendUnavailable, HsSessionError, HsStimulusError
-from .session import SessionClient, SubprocessTransport, find_server_binary
+from .session import SessionClient, SubprocessTransport, TcpTransport, find_server_binary
 from .simulator import NumpySimulator
 
 
@@ -165,6 +165,13 @@ class RustSessionBackend(SimBackend):
     ``$HS_BIN``, workspace target dirs, ``$PATH``); a missing binary
     raises :class:`~hs_api.exceptions.HsBackendUnavailable`.
 
+    ``address="host:port"`` connects to a shared ``hiaer-spike serve
+    --listen`` server over TCP instead of spawning a subprocess — same
+    wire format, but quotas/deadlines/eviction apply (see the
+    shared-server section of this package's README). A server at
+    capacity raises :class:`~hs_api.exceptions.HsServerBusy` from the
+    first call.
+
     Weight edits (``write_synapse``) re-export and re-``configure`` the
     live session — the hardware-reload semantics: membranes reset.
     """
@@ -173,7 +180,13 @@ class RustSessionBackend(SimBackend):
 
     def __init__(self, binary: str | None = None,
                  server_args: list[str] | None = None,
-                 workers: int | None = None):
+                 workers: int | None = None,
+                 address: str | None = None):
+        #: ``"host:port"`` of a shared ``hiaer-spike serve --listen``
+        #: server. When set, the backend connects over TCP instead of
+        #: spawning a subprocess (``binary``/``server_args`` are ignored
+        #: — deployment flags belong to whoever runs the server).
+        self._address = address
         self._binary = binary
         self._server_args = list(server_args or [])
         #: worker-thread count for the pooled Rust backends, sent with
@@ -185,6 +198,13 @@ class RustSessionBackend(SimBackend):
         self._network = None
 
     def _launch(self) -> SessionClient:
+        if self._address is not None:
+            transport = TcpTransport(self._address)
+            try:
+                return SessionClient(transport)
+            except Exception:
+                transport.close()  # busy/refused greeting: free the socket
+                raise
         binary = self._binary or find_server_binary()
         if binary is None:
             raise HsBackendUnavailable(

@@ -34,7 +34,20 @@ class HsProtocolError(HsError):
 
 class HsSessionError(HsError):
     """Session-level failure: no configured simulator, bad network file,
-    or an engine error inside the server."""
+    an engine error inside the server, or an eviction (``evicted``)."""
+
+
+class HsServerBusy(HsError):
+    """The shared server cannot take the work right now — admission
+    rejected the connection (``server_busy``) or the per-request compute
+    deadline expired while queued (``deadline``). Retryable: back off
+    and try again (or another instance)."""
+
+
+class HsQuotaError(HsError):
+    """A per-session quota rejected the request (``quota``): network
+    larger than ``max_neurons``, or a ``step_many`` batch longer than
+    ``max_batch``. Not retryable as-is — shrink the request."""
 
 
 # protocol code -> exception class (codes are defined in
@@ -49,6 +62,10 @@ _CODE_MAP = {
     "no_session": HsSessionError,
     "config": HsSessionError,
     "engine": HsSessionError,
+    "quota": HsQuotaError,
+    "server_busy": HsServerBusy,
+    "deadline": HsServerBusy,
+    "evicted": HsSessionError,
 }
 
 

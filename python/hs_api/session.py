@@ -8,8 +8,10 @@ requests carry ``ok: false`` plus a stable ``code`` which
 :func:`hs_api.exceptions.error_from_code` maps to a typed exception.
 
 The transport is pluggable: :class:`SubprocessTransport` speaks to a
-spawned ``hiaer-spike serve-session`` process; tests inject fakes with
-the same three methods (``send_line`` / ``recv_line`` / ``close``).
+spawned ``hiaer-spike serve-session`` process; :class:`TcpTransport`
+connects to a shared ``hiaer-spike serve --listen`` server; tests
+inject fakes with the same three methods (``send_line`` / ``recv_line``
+/ ``close``).
 """
 
 from __future__ import annotations
@@ -17,7 +19,9 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import socket
 import subprocess
+import time
 
 from .exceptions import HsBackendUnavailable, HsProtocolError, error_from_code
 
@@ -110,6 +114,90 @@ class SubprocessTransport:
             self.proc.wait()
 
 
+def _parse_address(address: str | tuple) -> tuple[str, int]:
+    """``"host:port"`` (or a ready ``(host, port)`` tuple) -> tuple.
+    IPv6 literals use the usual bracket form ``[::1]:9000``."""
+    if isinstance(address, tuple):
+        host, port = address
+        return str(host), int(port)
+    host, sep, port = address.rpartition(":")
+    if not sep or not port.isdigit():
+        raise ValueError(
+            f"bad server address {address!r} (expected 'host:port', e.g. '127.0.0.1:9000')"
+        )
+    return host.strip("[]"), int(port)
+
+
+class TcpTransport:
+    """Line transport to a shared ``hiaer-spike serve --listen`` server.
+
+    Connecting retries with exponential backoff (the server may still be
+    binding when a fleet comes up); exhausting the retries raises
+    :class:`~hs_api.exceptions.HsBackendUnavailable`. After connecting
+    it is the same strict one-line-per-request/response wire as the
+    subprocess transport — the server greets with ``hello`` (or one
+    ``server_busy`` line when it cannot admit the session).
+    """
+
+    def __init__(self, address: str | tuple, connect_retries: int = 5,
+                 retry_backoff_s: float = 0.1, timeout_s: float | None = None):
+        host, port = _parse_address(address)
+        self._sock = None
+        last_err: OSError | None = None
+        for attempt in range(max(1, int(connect_retries))):
+            if attempt:
+                time.sleep(retry_backoff_s * (2 ** (attempt - 1)))
+            try:
+                self._sock = socket.create_connection((host, port), timeout=10.0)
+                break
+            except OSError as e:
+                last_err = e
+        if self._sock is None:
+            raise HsBackendUnavailable(
+                f"could not connect to hiaer-spike server at {host}:{port} "
+                f"after {max(1, int(connect_retries))} attempt(s): {last_err}",
+                code="backend_unavailable",
+            )
+        self._sock.settimeout(timeout_s)  # None = block indefinitely
+        self._rfile = self._sock.makefile("r", encoding="utf-8", newline="\n")
+        self._wfile = self._sock.makefile("w", encoding="utf-8", newline="\n")
+
+    def send_line(self, line: str) -> None:
+        try:
+            self._wfile.write(line + "\n")
+            self._wfile.flush()
+        except (OSError, ValueError) as e:
+            raise HsProtocolError(f"server connection closed: {e}", code="closed") from e
+
+    def recv_line(self) -> str:
+        try:
+            line = self._rfile.readline()
+        except socket.timeout as e:
+            raise HsProtocolError(
+                "timed out waiting for a server response line", code="closed"
+            ) from e
+        except (OSError, ValueError) as e:
+            raise HsProtocolError(f"server connection closed: {e}", code="closed") from e
+        if not line:
+            raise HsProtocolError("server closed the connection", code="closed")
+        return line.rstrip("\n")
+
+    def close(self) -> None:
+        for f in (self._wfile, self._rfile):
+            try:
+                f.close()
+            except OSError:
+                pass
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass  # peer already gone
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
 class SessionClient:
     """Synchronous request/response client for one protocol session.
 
@@ -123,6 +211,12 @@ class SessionClient:
         self.server_backend: str | None = None
         if expect_hello:
             hello = self._recv()
+            if not hello.get("ok") and hello.get("code"):
+                # a shared server may answer one typed error line instead
+                # of hello (e.g. server_busy while at capacity/draining)
+                raise error_from_code(
+                    hello["code"], hello.get("error", f"server refused session: {hello!r}")
+                )
             if hello.get("op") != "hello" or not hello.get("ok"):
                 raise HsProtocolError(f"expected hello greeting, got {hello!r}")
             if hello.get("protocol") != PROTOCOL_VERSION:
@@ -202,6 +296,20 @@ class SessionClient:
         resp = self.request("cost")
         return {k: v for k, v in resp.items() if k not in ("ok", "op")}
 
+    def health(self) -> dict:
+        """Server liveness/occupancy snapshot. Against a shared server
+        this reports active sessions, queue depth and the draining flag;
+        a stdio session answers for itself (protocol + configured)."""
+        resp = self.request("health")
+        return {k: v for k, v in resp.items() if k not in ("ok", "op")}
+
+    def metrics(self) -> dict:
+        """Lifetime counters: requests/errors/steps for a stdio session;
+        a shared server adds sessions, evictions by cause, queue depth
+        and per-phase step rates."""
+        resp = self.request("metrics")
+        return {k: v for k, v in resp.items() if k not in ("ok", "op")}
+
     def shutdown(self) -> None:
         self.request("shutdown")
 
@@ -212,3 +320,9 @@ class SessionClient:
         except HsProtocolError:
             pass  # pipe already gone
         self.transport.close()
+
+    def __enter__(self) -> "SessionClient":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

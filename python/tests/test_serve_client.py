@@ -1,0 +1,260 @@
+"""Client-side tests for the shared-server (TCP) path: the new stable
+error codes (``quota`` / ``server_busy`` / ``deadline`` / ``evicted``),
+``health``/``metrics`` marshalling, typed rejection when the server
+answers ``server_busy`` instead of ``hello``, TcpTransport's bounded
+connect retry, and the context-manager close contract.
+
+Wire-level behaviour (eviction, fair queueing, drain) lives in
+``rust/tests/serve_tcp.rs``; here we pin the Python half against fakes
+plus a tiny in-thread scripted TCP server — no Rust binary required."""
+
+import json
+import socket
+import threading
+
+import pytest
+
+from hs_api import (
+    HsBackendUnavailable,
+    HsProtocolError,
+    HsQuotaError,
+    HsServerBusy,
+    HsSessionError,
+    SessionClient,
+    TcpTransport,
+)
+from hs_api.backend import RustSessionBackend
+from hs_api.session import _parse_address
+
+HELLO = {"ok": True, "op": "hello", "protocol": 1, "backend": "rust"}
+
+
+class FakeTransport:
+    """Scripted transport: canned response lines, recorded sends."""
+
+    def __init__(self, responses, hello=True):
+        self.responses = ([json.dumps(HELLO)] if hello else []) + list(responses)
+        self.sent = []
+        self.closed = False
+
+    def send_line(self, line):
+        self.sent.append(line)
+
+    def recv_line(self):
+        if not self.responses:
+            raise HsProtocolError("server closed the connection", code="closed")
+        return self.responses.pop(0)
+
+    def close(self):
+        self.closed = True
+
+
+def client_with(*responses):
+    return SessionClient(FakeTransport([json.dumps(r) for r in responses]))
+
+
+# ------------------------------------------------- new codes -> exceptions
+
+
+@pytest.mark.parametrize(
+    "code,exc",
+    [
+        ("quota", HsQuotaError),
+        ("server_busy", HsServerBusy),
+        ("deadline", HsServerBusy),
+        ("evicted", HsSessionError),
+    ],
+)
+def test_serving_tier_codes_map_to_typed_exceptions(code, exc):
+    c = client_with({"ok": False, "code": code, "error": f"boom ({code})"})
+    with pytest.raises(exc) as ei:
+        c.step([0])
+    assert ei.value.code == code
+    assert code in str(ei.value)
+
+
+def test_server_busy_instead_of_hello_raises_typed_error():
+    busy = {"ok": False, "code": "server_busy",
+            "error": "server at max_sessions capacity; retry later"}
+    with pytest.raises(HsServerBusy) as ei:
+        SessionClient(FakeTransport([json.dumps(busy)], hello=False))
+    assert ei.value.code == "server_busy"
+    assert "capacity" in str(ei.value)
+
+
+# -------------------------------------------------------- health / metrics
+
+
+def test_health_marshalling_strips_envelope():
+    c = client_with({"ok": True, "op": "health", "sessions": 2, "max_sessions": 32,
+                     "queue_depth": 0, "draining": False, "uptime_ms": 1234})
+    h = c.health()
+    assert h == {"sessions": 2, "max_sessions": 32, "queue_depth": 0,
+                 "draining": False, "uptime_ms": 1234}
+    assert json.loads(c.transport.sent[0]) == {"op": "health"}
+
+
+def test_metrics_marshalling_strips_envelope():
+    c = client_with({"ok": True, "op": "metrics", "requests_total": 9,
+                     "errors_total": 1, "steps_total": 40, "evicted_panic": 0,
+                     "steps_per_s": 123.5})
+    m = c.metrics()
+    assert m["steps_total"] == 40
+    assert m["steps_per_s"] == 123.5
+    assert "ok" not in m and "op" not in m
+    assert json.loads(c.transport.sent[0]) == {"op": "metrics"}
+
+
+# ------------------------------------------------------- context manager
+
+
+def test_context_manager_always_closes_and_tries_shutdown():
+    t = FakeTransport([json.dumps({"ok": True, "op": "shutdown"})])
+    with SessionClient(t) as c:
+        assert c.server_backend == "rust"
+    assert t.closed
+    assert json.loads(t.sent[-1]) == {"op": "shutdown"}
+
+
+def test_context_manager_close_survives_dead_server():
+    class DeadSendTransport(FakeTransport):
+        def send_line(self, line):
+            raise HsProtocolError("server pipe closed", code="closed")
+
+    t = DeadSendTransport([])
+    with SessionClient(t):
+        pass  # close() must swallow the failed best-effort shutdown
+    assert t.closed
+
+
+# ------------------------------------------------------------ TcpTransport
+
+
+def test_parse_address_forms():
+    assert _parse_address("127.0.0.1:9000") == ("127.0.0.1", 9000)
+    assert _parse_address("[::1]:9000") == ("::1", 9000)
+    assert _parse_address(("10.0.0.2", 7777)) == ("10.0.0.2", 7777)
+    with pytest.raises(ValueError, match="host:port"):
+        _parse_address("no-port-here")
+    with pytest.raises(ValueError, match="host:port"):
+        _parse_address("host:notaport")
+
+
+def test_tcp_connect_retries_are_bounded_and_typed(monkeypatch):
+    attempts = []
+
+    def refused(addr, timeout=None):
+        attempts.append(addr)
+        raise ConnectionRefusedError("nobody listening")
+
+    monkeypatch.setattr(socket, "create_connection", refused)
+    with pytest.raises(HsBackendUnavailable) as ei:
+        TcpTransport("127.0.0.1:1", connect_retries=3, retry_backoff_s=0.001)
+    assert len(attempts) == 3
+    assert "after 3 attempt(s)" in str(ei.value)
+    assert ei.value.code == "backend_unavailable"
+
+
+class LineServer(threading.Thread):
+    """One-connection scripted JSON-lines server on an ephemeral port:
+    greets with hello, answers each op with a canned response, records
+    everything it saw."""
+
+    def __init__(self):
+        super().__init__(daemon=True)
+        self.sock = socket.socket()
+        self.sock.bind(("127.0.0.1", 0))
+        self.sock.listen(1)
+        self.addr = "127.0.0.1:%d" % self.sock.getsockname()[1]
+        self.seen = []
+
+    def run(self):
+        conn, _ = self.sock.accept()
+        f = conn.makefile("rw", encoding="utf-8", newline="\n")
+        f.write(json.dumps(HELLO) + "\n")
+        f.flush()
+        for line in f:
+            req = json.loads(line)
+            self.seen.append(req)
+            op = req.get("op")
+            if op == "step":
+                resp = {"ok": True, "op": "step", "spikes": [1], "fired": 1}
+            elif op == "health":
+                resp = {"ok": True, "op": "health", "sessions": 1,
+                        "queue_depth": 0, "draining": False}
+            else:
+                resp = {"ok": True, "op": op}
+            f.write(json.dumps(resp) + "\n")
+            f.flush()
+            if op == "shutdown":
+                break
+        conn.close()
+        self.sock.close()
+
+
+def test_tcp_transport_speaks_the_protocol_end_to_end():
+    server = LineServer()
+    server.start()
+    with SessionClient(TcpTransport(server.addr, timeout_s=10.0)) as c:
+        assert c.server_backend == "rust"
+        assert c.step([0]) == [1]
+        assert c.health()["draining"] is False
+    server.join(timeout=10)
+    assert not server.is_alive(), "server thread must see the shutdown and exit"
+    ops = [r["op"] for r in server.seen]
+    assert ops == ["step", "health", "shutdown"], (
+        "context-manager exit sends a best-effort shutdown"
+    )
+
+
+def test_tcp_transport_retry_then_success(monkeypatch):
+    server = LineServer()
+    server.start()
+    real = socket.create_connection
+    attempts = []
+
+    def flaky(addr, timeout=None):
+        attempts.append(addr)
+        if len(attempts) < 3:
+            raise ConnectionRefusedError("still booting")
+        return real(addr, timeout=timeout)
+
+    monkeypatch.setattr(socket, "create_connection", flaky)
+    with SessionClient(
+        TcpTransport(server.addr, connect_retries=5, retry_backoff_s=0.001,
+                     timeout_s=10.0)
+    ) as c:
+        assert c.step([0]) == [1]
+    assert len(attempts) == 3, "connect succeeds on the first good attempt"
+    server.join(timeout=10)
+
+
+# ------------------------------------------------------- backend address=
+
+
+def test_rust_backend_address_uses_tcp_transport(monkeypatch):
+    import hs_api.backend as backend_mod
+
+    made = []
+
+    def fake_tcp(address):
+        made.append(address)
+        return FakeTransport([])
+
+    monkeypatch.setattr(backend_mod, "TcpTransport", fake_tcp)
+    b = RustSessionBackend(address="10.1.2.3:9000")
+    client = b._launch()
+    assert isinstance(client, SessionClient)
+    assert made == ["10.1.2.3:9000"]
+
+
+def test_rust_backend_address_busy_greeting_closes_socket(monkeypatch):
+    import hs_api.backend as backend_mod
+
+    busy = {"ok": False, "code": "server_busy", "error": "draining"}
+    t = FakeTransport([json.dumps(busy)], hello=False)
+    monkeypatch.setattr(backend_mod, "TcpTransport", lambda address: t)
+    b = RustSessionBackend(address="10.1.2.3:9000")
+    with pytest.raises(HsServerBusy):
+        b._launch()
+    assert t.closed, "a refused greeting must not leak the socket"

@@ -8,7 +8,9 @@
 //!    per run is **appended** to the `BENCH_hotpath.json` trajectory at
 //!    the repo root (override with BENCH_OUT, label with BENCH_PR); the
 //!    chunk-parallel sweep rate is measured as idle `Backend::Pool`
-//!    facade steps (sweep + empty route) since PR 3;
+//!    facade steps (sweep + empty route) since PR 3; since PR 6 the
+//!    record also carries the shared-server serving tier's aggregate
+//!    steps/s over 1 and 4 concurrent TCP sessions;
 //! 1. event-driven core engine steps/s across network sizes (rust
 //!    backend), synaptic events/s;
 //! 2. dense software-simulator baseline (the paper's Fig-8 CPU
@@ -315,6 +317,83 @@ fn main() {
          {route_chunk_rate:>10.0} chunk-parallel ({route_speedup:.2}x)"
     );
 
+    // shared-server serving tier: aggregate steps/s over real TCP
+    // sessions against an in-process `serve_tcp` (PR 6). Each client
+    // configures its own simulator from the same .hsn and drives one
+    // step_many batch — protocol marshalling, admission-gate queueing
+    // and the per-connection threads are all on the measured path. A
+    // smaller net than the headline keeps per-session setup sane while
+    // the update sweep still dominates a step.
+    let (sn, sd_deg) = (20_000usize, 16usize);
+    let serve_net = make_net(sn, sd_deg, 42, false);
+    let serve_axons = serve_net.n_axons();
+    let hsn = std::env::temp_dir().join(format!("hotpath_serve_{}.hsn", std::process::id()));
+    hiaer_spike::model_fmt::write_hsn(&serve_net, &hsn).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let server = {
+        let sd = shutdown.clone();
+        std::thread::spawn(move || {
+            hiaer_spike::sim::serve::serve_tcp(
+                listener,
+                hiaer_spike::sim::SimOptions::default(),
+                hiaer_spike::sim::serve::ServeLimits::default(),
+                sd,
+            )
+        })
+    };
+    let bench_serve = |sessions: usize| -> f64 {
+        use std::io::{BufRead, Write};
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..sessions)
+            .map(|_| {
+                let hsn = hsn.clone();
+                std::thread::spawn(move || {
+                    let stream = std::net::TcpStream::connect(addr).unwrap();
+                    stream.set_nodelay(true).unwrap();
+                    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+                    let mut w = stream;
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap(); // hello
+                    writeln!(w, r#"{{"op":"configure","net":"{}","seed":7}}"#, hsn.display())
+                        .unwrap();
+                    line.clear();
+                    reader.read_line(&mut line).unwrap();
+                    assert!(line.contains(r#""ok":true"#), "configure failed: {line}");
+                    let rows: Vec<String> = (0..steps)
+                        .map(|s| {
+                            let row: Vec<String> =
+                                drive(s, serve_axons).iter().map(u32::to_string).collect();
+                            format!("[{}]", row.join(","))
+                        })
+                        .collect();
+                    writeln!(w, r#"{{"op":"step_many","batch":[{}]}}"#, rows.join(",")).unwrap();
+                    line.clear();
+                    reader.read_line(&mut line).unwrap();
+                    assert!(line.contains(r#""ok":true"#), "step_many failed: {line}");
+                    writeln!(w, r#"{{"op":"shutdown"}}"#).unwrap();
+                    line.clear();
+                    let _ = reader.read_line(&mut line);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        (sessions * steps) as f64 / t0.elapsed().as_secs_f64()
+    };
+    let serve1_rate = bench_serve(1);
+    let serve4_rate = bench_serve(4);
+    shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
+    server.join().unwrap().unwrap();
+    let _ = std::fs::remove_file(&hsn);
+    let serve_scaleup = serve4_rate / serve1_rate;
+    println!(
+        "  serve tier      : {serve1_rate:>10.0} steps/s 1 session, \
+         {serve4_rate:>10.0} aggregate over 4 sessions ({serve_scaleup:.2}x, n = {sn})"
+    );
+
     // ---- append one record to the perf trajectory (one entry per PR)
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -363,6 +442,11 @@ fn main() {
         // idle facade step (sweep + empty route), not phase_update alone
         // — a cross-PR-3 diff of this key is not apples-to-apples
         ("sweep_chunked_measure", Json::Str("idle-pool-step".into())),
+        // serving tier: aggregate steps/s over concurrent TCP sessions
+        // (n = 20k net, each session its own simulator + step_many batch)
+        ("serve_sessions1_steps_per_s", Json::Num(serve1_rate)),
+        ("serve_sessions4_steps_per_s", Json::Num(serve4_rate)),
+        ("serve_scaleup", Json::Num(serve_scaleup)),
     ]));
     let n_records = records.len();
     let doc = obj(vec![

@@ -6,9 +6,10 @@
 //! global axon ids to activate that step; blank line = no input. Results
 //! report per-step output spikes and the energy/latency cost.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 use std::path::PathBuf;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -94,6 +95,13 @@ pub fn run_job(job: &Job, energy: &EnergyModel) -> JobResult {
 }
 
 /// A bounded multi-worker job queue (the head-node scheduler).
+///
+/// Signalling uses **two** condvars: `work_cv` is only ever waited on by
+/// idle workers (notified per submitted job), `done_cv` only by
+/// [`JobQueue::drain`]/[`JobQueue::shutdown`] (notified per completed
+/// job). A single shared condvar could hand a submit wakeup to a blocked
+/// `drain` instead of an idle worker — the classic lost-wakeup that
+/// leaves a queued job unserved until some unrelated notification.
 pub struct JobQueue {
     inner: Arc<QueueInner>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -101,14 +109,20 @@ pub struct JobQueue {
 
 struct QueueInner {
     state: Mutex<QueueState>,
-    cv: Condvar,
+    /// Workers wait here for new jobs.
+    work_cv: Condvar,
+    /// `drain`/`shutdown` wait here for completions.
+    done_cv: Condvar,
     energy: EnergyModel,
 }
 
 #[derive(Default)]
 struct QueueState {
-    queue: VecDeque<Job>,
-    results: Vec<JobResult>,
+    /// Pending jobs tagged with their submission sequence number.
+    queue: VecDeque<(u64, Job)>,
+    /// Completed jobs tagged with their submission sequence number.
+    results: Vec<(u64, JobResult)>,
+    next_seq: u64,
     shutdown: bool,
     in_flight: usize,
 }
@@ -117,7 +131,8 @@ impl JobQueue {
     pub fn start(workers: usize, energy: EnergyModel) -> Self {
         let inner = Arc::new(QueueInner {
             state: Mutex::new(QueueState::default()),
-            cv: Condvar::new(),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
             energy,
         });
         let handles = (0..workers.max(1))
@@ -131,53 +146,171 @@ impl JobQueue {
 
     pub fn submit(&self, job: Job) {
         let mut st = self.inner.state.lock().unwrap();
-        st.queue.push_back(job);
-        self.inner.cv.notify_one();
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.queue.push_back((seq, job));
+        self.inner.work_cv.notify_one();
     }
 
-    /// Block until all submitted jobs finish; returns results sorted by id.
+    /// Block until all submitted jobs finish; returns results in
+    /// **submission order** (not sorted by caller-chosen job id).
     pub fn drain(&self) -> Vec<JobResult> {
         let mut st = self.inner.state.lock().unwrap();
         while !st.queue.is_empty() || st.in_flight > 0 {
-            st = self.inner.cv.wait(st).unwrap();
+            st = self.inner.done_cv.wait(st).unwrap();
         }
-        let mut out = std::mem::take(&mut st.results);
-        out.sort_by_key(|r| r.id);
-        out
+        take_results(&mut st)
     }
 
-    pub fn shutdown(mut self) {
+    /// Stop promptly: jobs still queued are **discarded**, in-flight
+    /// jobs finish, workers exit. Returns every completed result not yet
+    /// collected by [`JobQueue::drain`], in submission order — results
+    /// raced with worker completion are never lost.
+    pub fn shutdown(mut self) -> Vec<JobResult> {
         {
             let mut st = self.inner.state.lock().unwrap();
             st.shutdown = true;
-            self.inner.cv.notify_all();
+            st.queue.clear();
+            self.inner.work_cv.notify_all();
+            self.inner.done_cv.notify_all();
         }
         for h in self.workers.drain(..) {
             h.join().ok();
         }
+        let mut st = self.inner.state.lock().unwrap();
+        take_results(&mut st)
     }
+}
+
+fn take_results(st: &mut QueueState) -> Vec<JobResult> {
+    let mut tagged = std::mem::take(&mut st.results);
+    tagged.sort_by_key(|(seq, _)| *seq);
+    tagged.into_iter().map(|(_, r)| r).collect()
 }
 
 fn worker_loop(inner: Arc<QueueInner>) {
     loop {
-        let job = {
+        let (seq, job) = {
             let mut st = inner.state.lock().unwrap();
             loop {
-                if let Some(j) = st.queue.pop_front() {
-                    st.in_flight += 1;
-                    break j;
-                }
+                // shutdown first: queued-but-unstarted jobs are
+                // discarded, never silently executed post-shutdown
                 if st.shutdown {
                     return;
                 }
-                st = inner.cv.wait(st).unwrap();
+                if let Some(tagged) = st.queue.pop_front() {
+                    st.in_flight += 1;
+                    break tagged;
+                }
+                st = inner.work_cv.wait(st).unwrap();
             }
         };
         let result = run_job(&job, &inner.energy);
         let mut st = inner.state.lock().unwrap();
-        st.results.push(result);
+        st.results.push((seq, result));
         st.in_flight -= 1;
-        inner.cv.notify_all();
+        inner.done_cv.notify_all();
+    }
+}
+
+fn lock_gate(gate: &AdmissionGate) -> MutexGuard<'_, GateState> {
+    gate.state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// FIFO fair-queueing admission gate: at most `permits` holders at once,
+/// waiters admitted strictly in arrival order, each wait bounded by a
+/// caller-supplied deadline. This is the scheduling layer the serving
+/// tier (`sim::serve`) puts in front of simulator work so one greedy
+/// session cannot starve the others, grown out of this module's
+/// head-node job queue.
+///
+/// Unlike a plain semaphore, a timed-out waiter leaves a tombstone
+/// (its ticket) that the admission scan skips, so an abandoned head of
+/// the queue can never block the sessions behind it.
+pub struct AdmissionGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct GateState {
+    permits: usize,
+    active: usize,
+    /// Next ticket to hand out (arrival order).
+    next_ticket: u64,
+    /// Lowest ticket not yet admitted or skipped.
+    admitted: u64,
+    /// Tickets whose waiter gave up before being admitted.
+    abandoned: BTreeSet<u64>,
+}
+
+impl AdmissionGate {
+    pub fn new(permits: usize) -> Self {
+        AdmissionGate {
+            state: Mutex::new(GateState { permits: permits.max(1), ..Default::default() }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Permits currently held.
+    pub fn active(&self) -> usize {
+        lock_gate(self).active
+    }
+
+    /// Waiters queued behind the gate right now (excludes holders and
+    /// abandoned tickets).
+    pub fn queue_depth(&self) -> usize {
+        let st = lock_gate(self);
+        (st.next_ticket - st.admitted) as usize - st.abandoned.len()
+    }
+
+    /// Wait (FIFO) for a permit for at most `deadline`. `None` means the
+    /// deadline passed first; the caller's queue slot is relinquished so
+    /// later arrivals are not blocked behind a ghost.
+    pub fn acquire(&self, deadline: Duration) -> Option<GatePermit<'_>> {
+        let t0 = Instant::now();
+        let mut st = lock_gate(self);
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        loop {
+            // skip tombstones so an abandoned head never wedges the queue
+            while st.abandoned.remove(&st.admitted) {
+                st.admitted += 1;
+            }
+            if st.admitted == ticket && st.active < st.permits {
+                st.admitted += 1;
+                st.active += 1;
+                // with >1 permits the next ticket may be admissible too
+                self.cv.notify_all();
+                return Some(GatePermit { gate: self });
+            }
+            let elapsed = t0.elapsed();
+            if elapsed >= deadline {
+                st.abandoned.insert(ticket);
+                self.cv.notify_all();
+                return None;
+            }
+            let (g, _) = self
+                .cv
+                .wait_timeout(st, deadline - elapsed)
+                .unwrap_or_else(PoisonError::into_inner);
+            st = g;
+        }
+    }
+}
+
+/// RAII permit from [`AdmissionGate::acquire`]; releasing (dropping)
+/// wakes the next waiter in FIFO order. Dropping during a panic unwind
+/// still releases — a crashed holder cannot leak capacity.
+pub struct GatePermit<'a> {
+    gate: &'a AdmissionGate,
+}
+
+impl Drop for GatePermit<'_> {
+    fn drop(&mut self) {
+        let mut st = lock_gate(self.gate);
+        st.active = st.active.saturating_sub(1);
+        self.gate.cv.notify_all();
     }
 }
 
@@ -248,5 +381,162 @@ mod tests {
                 assert_eq!(r.status, JobStatus::Done);
             }
         }
+    }
+
+    /// Regression (PR 6): results come back in submission order, not
+    /// sorted by the caller-chosen job id.
+    #[test]
+    fn drain_returns_results_in_submission_order() {
+        let p = tiny_net_path("order");
+        let q = JobQueue::start(3, EnergyModel::default());
+        for id in [5u64, 3, 9, 3] {
+            q.submit(Job {
+                id,
+                net_path: p.clone(),
+                stimulus: vec![vec![0], vec![]],
+                options: SimOptions::default(),
+            });
+        }
+        let results = q.drain();
+        q.shutdown();
+        std::fs::remove_file(&p).ok();
+        let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![5, 3, 9, 3], "submission order, duplicates preserved");
+    }
+
+    /// Regression (PR 6): `shutdown` with jobs still queued must (a) not
+    /// run the whole backlog, (b) return — not lose — the results that
+    /// raced with worker completion, in submission order.
+    #[test]
+    fn shutdown_with_queued_jobs_discards_backlog_and_keeps_results() {
+        let p = tiny_net_path("shutqueue");
+        let q = JobQueue::start(1, EnergyModel::default());
+        let backlog = 64u64;
+        for id in 0..backlog {
+            q.submit(Job {
+                id,
+                net_path: p.clone(),
+                // enough steps that one worker cannot clear 64 jobs in
+                // the microseconds before shutdown grabs the lock
+                stimulus: vec![vec![0]; 512],
+                options: SimOptions::default(),
+            });
+        }
+        let results = q.shutdown();
+        std::fs::remove_file(&p).ok();
+        assert!(
+            (results.len() as u64) < backlog,
+            "shutdown ran the whole {backlog}-job backlog ({} results)",
+            results.len()
+        );
+        // whatever did complete is reported once each, in submission order
+        let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        let want: Vec<u64> = (0..results.len() as u64).collect();
+        assert_eq!(ids, want, "completed prefix must be in submission order");
+        for r in &results {
+            assert_eq!(r.status, JobStatus::Done, "job {}: {:?}", r.id, r.status);
+        }
+    }
+
+    /// Stress the two-condvar signalling: concurrent submitters racing a
+    /// draining collector must never hang (watchdogged) or lose results.
+    #[test]
+    fn concurrent_submit_drain_never_hangs_or_loses_results() {
+        let p = tiny_net_path("stress");
+        let path = p.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let q = Arc::new(JobQueue::start(3, EnergyModel::default()));
+            let mut handles = Vec::new();
+            for t in 0..4u64 {
+                let q = q.clone();
+                let path = path.clone();
+                handles.push(std::thread::spawn(move || {
+                    for i in 0..25u64 {
+                        q.submit(Job {
+                            id: t * 100 + i,
+                            net_path: path.clone(),
+                            stimulus: vec![vec![0], vec![]],
+                            options: SimOptions::default(),
+                        });
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            let results = q.drain();
+            let leftovers = Arc::try_unwrap(q).ok().expect("sole owner").shutdown();
+            tx.send((results.len(), leftovers.len())).ok();
+        });
+        let (drained, leftovers) = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("job queue hung under concurrent submit/drain");
+        std::fs::remove_file(&p).ok();
+        assert_eq!(drained + leftovers, 100, "lost {} results", 100 - drained - leftovers);
+    }
+
+    #[test]
+    fn admission_gate_is_fifo_and_respects_permits() {
+        let gate = Arc::new(AdmissionGate::new(1));
+        let held = gate.acquire(Duration::from_secs(5)).expect("free gate");
+        assert_eq!(gate.active(), 1);
+
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut handles = Vec::new();
+        for label in ["first", "second"] {
+            let gate = gate.clone();
+            let tx = tx.clone();
+            // queue deterministically: wait until the previous waiter is
+            // visibly queued before spawning the next
+            handles.push(std::thread::spawn(move || {
+                let permit = gate.acquire(Duration::from_secs(30)).expect("admitted");
+                tx.send(label).unwrap();
+                drop(permit);
+            }));
+            let want_depth = if label == "first" { 1 } else { 2 };
+            while gate.queue_depth() < want_depth {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        drop(held); // admit the queue head
+        let a = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let b = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!((a, b), ("first", "second"), "admission must be FIFO");
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(gate.active(), 0);
+        assert_eq!(gate.queue_depth(), 0);
+    }
+
+    #[test]
+    fn admission_gate_timeout_leaves_no_ghost_in_the_queue() {
+        let gate = Arc::new(AdmissionGate::new(1));
+        let held = gate.acquire(Duration::from_secs(5)).expect("free gate");
+
+        // a waiter that gives up quickly...
+        let g2 = gate.clone();
+        let quitter =
+            std::thread::spawn(move || g2.acquire(Duration::from_millis(30)).is_none());
+        while gate.queue_depth() < 1 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // ...then a patient waiter queued *behind* the quitter
+        let g3 = gate.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let patient = std::thread::spawn(move || {
+            let got = g3.acquire(Duration::from_secs(30)).is_some();
+            tx.send(got).unwrap();
+        });
+        assert!(quitter.join().unwrap(), "quitter must time out while the gate is held");
+        drop(held);
+        // the abandoned head ticket must not block the patient waiter
+        assert!(
+            rx.recv_timeout(Duration::from_secs(30)).unwrap(),
+            "waiter behind an abandoned ticket was never admitted"
+        );
+        patient.join().unwrap();
+        assert_eq!(gate.queue_depth(), 0);
     }
 }

@@ -5,6 +5,8 @@ mod jobs;
 mod pool;
 mod multicore;
 
-pub use jobs::{parse_stimulus, run_job, Job, JobQueue, JobResult, JobStatus};
+pub use jobs::{
+    parse_stimulus, run_job, AdmissionGate, GatePermit, Job, JobQueue, JobResult, JobStatus,
+};
 pub use multicore::{ClusterCost, MultiCoreEngine};
 pub use pool::{CorePool, PoolOptions, PoolSim, RouteGranularity};

@@ -5,6 +5,7 @@
 //!   run     <net.hsn> <stimulus.txt>  execute a network on the cluster sim
 //!   convert <model.hsl> <out.hsn>     PyTorch layer graph -> network
 //!   serve   <spool-dir>               NSG-style job daemon (poll a dir)
+//!   serve   --listen <addr>           shared multi-session TCP server
 //!   serve-session                     JSON-lines session protocol on stdio
 //!   bench-step <net.hsn>              steps/s of the hot loop
 //!
@@ -62,6 +63,12 @@ fn print_help() {
            run <net.hsn> <stimulus.txt>    execute on the cluster simulator\n\
            convert <model.hsl> <out.hsn>   layer graph -> network (Supp A.2)\n\
            serve <spool-dir>               job daemon: runs <id>.job files\n\
+           serve --listen <host:port>      shared TCP server: many concurrent\n\
+                                           JSON-lines sessions with admission\n\
+                                           control, quotas, deadlines, panic\n\
+                                           isolation and graceful SIGTERM\n\
+                                           drain (port 0 = ephemeral; the\n\
+                                           bound address is printed first)\n\
            serve-session                   JSON-lines session protocol on\n\
                                            stdin/stdout (the hs_api\n\
                                            backend=\"rust\" transport; see\n\
@@ -87,7 +94,20 @@ fn print_help() {
            --steps N                         steps for bench-step (default 1000)\n\
            --bias threshold|axon             converter bias mode\n\
            --jobs N                          serve: parallel jobs (default 2)\n\
-           --once                            serve: single spool pass, then exit"
+           --once                            serve: single spool pass, then exit\n\
+         \n\
+         OPTIONS (serve --listen — serving-tier limits)\n\
+           --max-sessions N                  concurrent sessions (default 32)\n\
+           --concurrency N                   shared compute permits (default:\n\
+                                             available parallelism)\n\
+           --max-neurons N                   per-session net-size quota\n\
+           --max-batch N                     per-session step_many quota\n\
+           --max-line-bytes N                request-line byte cap (default 8 MiB)\n\
+           --request-timeout-ms N            compute-permit deadline (default 30s)\n\
+           --idle-timeout-ms N               idle-session eviction TTL (default 5m)\n\
+           --max-errors N                    protocol-error flood eviction\n\
+                                             threshold (default 64)\n\
+           --drain-grace-ms N                drain patience on SIGTERM (default 30s)"
     );
 }
 
@@ -160,11 +180,35 @@ fn cmd_convert(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// serve: poll <spool>/ for `<name>.job` files of the form
-///   line 1: path to .hsn
-///   rest:   stimulus lines
-/// and write `<name>.result` next to them.
+/// serve: two modes sharing the deployment flags.
+///
+/// `serve --listen <host:port>` — the shared multi-session TCP server
+/// (`sim::serve`): many concurrent JSON-lines sessions with admission
+/// control, per-session quotas, request deadlines, panic isolation,
+/// idle eviction and graceful drain on SIGTERM/SIGINT. The bound
+/// address is printed on stdout first (so `--listen 127.0.0.1:0` works
+/// for scripted/ephemeral deployments).
+///
+/// `serve <spool-dir>` — the NSG-style spool daemon: poll for
+/// `<name>.job` files (line 1: path to .hsn; rest: stimulus lines) and
+/// write `<name>.result` next to them.
 fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(addr) = args.get("listen") {
+        let opts = SimOptions::from_args(args)?;
+        let limits = hiaer_spike::sim::serve::ServeLimits::from_args(args).map_err(|e| anyhow!(e))?;
+        let listener = std::net::TcpListener::bind(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        println!("listening on {}", listener.local_addr()?);
+        // line-buffered stdout under a pipe: flush so smoke scripts
+        // waiting for the address line don't deadlock
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        hiaer_spike::sim::serve::install_drain_signal_handler();
+        let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        hiaer_spike::sim::serve::serve_tcp(listener, opts, limits, shutdown)?;
+        println!("drained; all sessions closed");
+        return Ok(());
+    }
     let spool = args.positional.get(1).context("serve: missing <spool-dir>")?;
     let spool = Path::new(spool);
     std::fs::create_dir_all(spool)?;
@@ -234,7 +278,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         std::thread::sleep(std::time::Duration::from_millis(200));
     }
-    queue.shutdown();
+    // every pass drains before looping, so no results can be pending here
+    let _ = queue.shutdown();
     Ok(())
 }
 

@@ -66,6 +66,7 @@
 //! | [`Backend::Xla`]   | AOT Pallas artifacts, PJRT | needs the `pjrt` cargo feature + artifacts  |
 
 mod config;
+pub mod serve;
 pub mod session;
 
 pub use config::{Backend, SimConfig, SimOptions};

@@ -1,0 +1,640 @@
+//! `hiaer-spike serve --listen <addr>` — the resilient multi-session
+//! serving tier (paper §5: the platform is "made easily available over
+//! a web portal"; this is the process behind that portal).
+//!
+//! One TCP connection is one protocol session: the server speaks exactly
+//! the line-delimited JSON wire format of [`crate::sim::session`]
+//! (greeting, then one response line per request line), so the Python
+//! `SessionClient` works unchanged over its TCP transport. What this
+//! module adds on top of the codec is everything a *shared* service
+//! needs to survive hostile or unlucky clients:
+//!
+//! * **Admission control** — at most `max_sessions` concurrent
+//!   connections; a connection over that answers one
+//!   `{"ok":false,"code":"server_busy",...}` line instead of `hello`
+//!   and is closed. The same line is sent while draining.
+//! * **Fair scheduling with deadlines** — simulator work is gated
+//!   through a FIFO [`AdmissionGate`] of `concurrency` permits
+//!   (grown out of `cluster/jobs.rs`): a session that cannot get a
+//!   permit within `request_timeout_ms` gets a `deadline` error and the
+//!   session survives; one greedy session cannot starve the rest,
+//!   because admission is strictly arrival-ordered.
+//! * **Quotas** — `max_neurons` / `max_batch` become the session's
+//!   [`SessionLimits`] (code `quota`); the read side caps request lines
+//!   at `max_line_bytes` (answered `malformed_request`, bytes past the
+//!   cap never buffered). In-flight requests per session are capped at
+//!   1 structurally: the protocol is strict request/response.
+//! * **Fault isolation** — each request runs under
+//!   [`catch_unwind`]; a panicking simulator evicts *that* session
+//!   (best-effort `engine` error naming the panic, then `evicted`
+//!   notice, then close) while every other session keeps running.
+//!   A flood of `max_errors` consecutive protocol errors (malformed /
+//!   oversized lines) also evicts.
+//! * **Idle TTL** — sessions silent for `idle_timeout_ms` are evicted
+//!   (best-effort `evicted` notice) so abandoned connections cannot
+//!   pin server capacity.
+//! * **Graceful drain** — on SIGTERM/SIGINT (see
+//!   [`install_drain_signal_handler`]) or when the shutdown flag is
+//!   set: stop accepting, let every session finish its in-flight
+//!   request, send each an `evicted` notice, then return once all
+//!   connections closed (bounded by `drain_grace_ms`).
+//! * **Observability** — `health` and `metrics` are answered by the
+//!   *server* (the per-session codec never sees them): `health` reports
+//!   active sessions, queue depth and the draining flag; `metrics` adds
+//!   lifetime totals (sessions, evictions by cause, requests, errors,
+//!   steps) and step rates split by phase — time spent queued for a
+//!   permit vs. executing.
+//!
+//! # Eviction semantics on the wire
+//!
+//! An evicted session receives (best-effort — the peer may already be
+//! gone) one final error line and then EOF. The `code` tells the client
+//! what happened: `evicted` (idle TTL, error flood, drain) or `engine`
+//! followed by `evicted` (panic isolation). Clients should treat EOF
+//! after an `evicted` line as a clean, non-retryable session end;
+//! `server_busy`/`deadline` are retryable.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cluster::AdmissionGate;
+use crate::sim::session::{
+    err_response, is_error_response, parse_request, CappedLineReader, LineRead, Request, Session,
+    SessionLimits, CODE_DEADLINE, CODE_ENGINE, CODE_EVICTED, CODE_MALFORMED, CODE_SERVER_BUSY,
+};
+use crate::sim::SimOptions;
+use crate::util::cli::Args;
+use crate::util::json::{obj, Json};
+
+/// Serving-tier limits and timeouts; every knob has a `serve` CLI flag
+/// (see [`ServeLimits::from_args`]).
+#[derive(Clone, Debug)]
+pub struct ServeLimits {
+    /// Concurrent sessions admitted; further connections get
+    /// `server_busy` (`--max-sessions`).
+    pub max_sessions: usize,
+    /// Simulator-work permits shared by all sessions — the width of the
+    /// compute pool behind the admission gate (`--concurrency`).
+    pub concurrency: usize,
+    /// Per-session cap on loadable network size (`--max-neurons`).
+    pub max_neurons: usize,
+    /// Per-session `step_many` cap (`--max-batch`).
+    pub max_batch_steps: usize,
+    /// Read-side request-line byte cap (`--max-line-bytes`).
+    pub max_line_bytes: usize,
+    /// Max wait for a compute permit before `deadline`
+    /// (`--request-timeout-ms`).
+    pub request_timeout_ms: u64,
+    /// Idle eviction TTL (`--idle-timeout-ms`).
+    pub idle_timeout_ms: u64,
+    /// Consecutive protocol errors before a flooding session is evicted
+    /// (`--max-errors`).
+    pub max_errors: u32,
+    /// Drain patience: how long to wait for open sessions to finish
+    /// in-flight work after shutdown is requested (`--drain-grace-ms`).
+    pub drain_grace_ms: u64,
+}
+
+impl Default for ServeLimits {
+    fn default() -> Self {
+        ServeLimits {
+            max_sessions: 32,
+            concurrency: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            max_neurons: usize::MAX,
+            max_batch_steps: usize::MAX,
+            max_line_bytes: 8 << 20,
+            request_timeout_ms: 30_000,
+            idle_timeout_ms: 300_000,
+            max_errors: 64,
+            drain_grace_ms: 30_000,
+        }
+    }
+}
+
+impl ServeLimits {
+    pub fn from_args(args: &Args) -> Result<Self, String> {
+        let d = ServeLimits::default();
+        Ok(ServeLimits {
+            max_sessions: args.get_usize("max-sessions", d.max_sessions)?,
+            concurrency: args.get_usize("concurrency", d.concurrency)?.max(1),
+            max_neurons: args.get_usize("max-neurons", d.max_neurons)?,
+            max_batch_steps: args.get_usize("max-batch", d.max_batch_steps)?,
+            max_line_bytes: args.get_usize("max-line-bytes", d.max_line_bytes)?,
+            request_timeout_ms: args.get_usize("request-timeout-ms", d.request_timeout_ms as usize)?
+                as u64,
+            idle_timeout_ms: args.get_usize("idle-timeout-ms", d.idle_timeout_ms as usize)? as u64,
+            max_errors: args.get_u32("max-errors", d.max_errors)?.max(1),
+            drain_grace_ms: args.get_usize("drain-grace-ms", d.drain_grace_ms as usize)? as u64,
+        })
+    }
+
+    fn session_limits(&self) -> SessionLimits {
+        SessionLimits { max_neurons: self.max_neurons, max_batch_steps: self.max_batch_steps }
+    }
+}
+
+/// Lifetime counters behind the `metrics` op. All relaxed atomics — the
+/// counters are monotonic telemetry, not synchronization.
+#[derive(Default)]
+struct Counters {
+    sessions_total: AtomicU64,
+    sessions_rejected: AtomicU64,
+    evicted_idle: AtomicU64,
+    evicted_panic: AtomicU64,
+    evicted_flood: AtomicU64,
+    evicted_drain: AtomicU64,
+    disconnects: AtomicU64,
+    requests_total: AtomicU64,
+    errors_total: AtomicU64,
+    steps_total: AtomicU64,
+    /// Wall time spent waiting for admission-gate permits (µs).
+    queue_wait_us: AtomicU64,
+    /// Wall time spent executing simulator work under a permit (µs).
+    execute_us: AtomicU64,
+}
+
+impl Counters {
+    fn bump(c: &AtomicU64) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+    fn add(c: &AtomicU64, n: u64) {
+        c.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// State shared by the acceptor and every connection thread.
+struct Shared {
+    limits: ServeLimits,
+    opts: SimOptions,
+    gate: AdmissionGate,
+    draining: AtomicBool,
+    active: AtomicUsize,
+    /// Guards `active` transitions for the drain wait (the atomic is
+    /// read lock-free on the hot path; the mutex exists only so drain
+    /// can condvar-wait for it to reach zero).
+    drain_lock: Mutex<()>,
+    drain_cv: Condvar,
+    counters: Counters,
+    started: Instant,
+}
+
+impl Shared {
+    fn health_response(&self) -> String {
+        ok_obj(
+            "health",
+            vec![
+                ("sessions", Json::Int(self.active.load(Ordering::Relaxed) as i64)),
+                ("max_sessions", Json::Int(self.limits.max_sessions as i64)),
+                ("queue_depth", Json::Int(self.gate.queue_depth() as i64)),
+                ("draining", Json::Bool(self.draining.load(Ordering::Relaxed))),
+                ("uptime_ms", Json::Int(self.started.elapsed().as_millis() as i64)),
+            ],
+        )
+    }
+
+    fn metrics_response(&self) -> String {
+        let c = &self.counters;
+        let steps = c.steps_total.load(Ordering::Relaxed);
+        let exec_us = c.execute_us.load(Ordering::Relaxed);
+        // executing-phase step rate: what the compute pool sustains
+        // while actually running (queue wait reported separately)
+        let steps_per_s =
+            if exec_us > 0 { steps as f64 / (exec_us as f64 / 1e6) } else { 0.0 };
+        ok_obj(
+            "metrics",
+            vec![
+                ("sessions", Json::Int(self.active.load(Ordering::Relaxed) as i64)),
+                ("sessions_total", Json::Int(c.sessions_total.load(Ordering::Relaxed) as i64)),
+                (
+                    "sessions_rejected",
+                    Json::Int(c.sessions_rejected.load(Ordering::Relaxed) as i64),
+                ),
+                ("evicted_idle", Json::Int(c.evicted_idle.load(Ordering::Relaxed) as i64)),
+                ("evicted_panic", Json::Int(c.evicted_panic.load(Ordering::Relaxed) as i64)),
+                ("evicted_flood", Json::Int(c.evicted_flood.load(Ordering::Relaxed) as i64)),
+                ("evicted_drain", Json::Int(c.evicted_drain.load(Ordering::Relaxed) as i64)),
+                ("disconnects", Json::Int(c.disconnects.load(Ordering::Relaxed) as i64)),
+                ("requests_total", Json::Int(c.requests_total.load(Ordering::Relaxed) as i64)),
+                ("errors_total", Json::Int(c.errors_total.load(Ordering::Relaxed) as i64)),
+                ("steps_total", Json::Int(steps as i64)),
+                ("queue_depth", Json::Int(self.gate.queue_depth() as i64)),
+                ("concurrency", Json::Int(self.limits.concurrency as i64)),
+                (
+                    "queue_wait_us",
+                    Json::Int(c.queue_wait_us.load(Ordering::Relaxed) as i64),
+                ),
+                ("execute_us", Json::Int(exec_us as i64)),
+                ("steps_per_s", Json::Num(steps_per_s)),
+            ],
+        )
+    }
+}
+
+fn ok_obj(op: &str, mut fields: Vec<(&str, Json)>) -> String {
+    let mut all = vec![("ok", Json::Bool(true)), ("op", Json::Str(op.to_string()))];
+    all.append(&mut fields);
+    obj(all).to_string()
+}
+
+/// Builds each connection's [`Session`]. The production factory is
+/// [`Session::with_limits`]; fault-injection tests substitute sessions
+/// whose simulators panic or stall.
+#[doc(hidden)]
+pub type SessionFactory = Arc<dyn Fn(SimOptions, SessionLimits) -> Session + Send + Sync>;
+
+/// Run the serving tier on an already-bound listener until `shutdown`
+/// becomes true (or a signal installed by
+/// [`install_drain_signal_handler`] arrives), then drain gracefully.
+/// Returns once every session has closed (or `drain_grace_ms` elapsed).
+/// The listener is polled, so a shutdown request is observed within
+/// ~50 ms without any traffic.
+pub fn serve_tcp(
+    listener: TcpListener,
+    opts: SimOptions,
+    limits: ServeLimits,
+    shutdown: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    serve_tcp_with_factory(listener, opts, limits, shutdown, Arc::new(Session::with_limits))
+}
+
+/// [`serve_tcp`] with a session-factory seam for fault-injection tests.
+#[doc(hidden)]
+pub fn serve_tcp_with_factory(
+    listener: TcpListener,
+    opts: SimOptions,
+    limits: ServeLimits,
+    shutdown: Arc<AtomicBool>,
+    factory: SessionFactory,
+) -> std::io::Result<()> {
+    listener.set_nonblocking(true)?;
+    let shared = Arc::new(Shared {
+        gate: AdmissionGate::new(limits.concurrency),
+        limits,
+        opts,
+        draining: AtomicBool::new(false),
+        active: AtomicUsize::new(0),
+        drain_lock: Mutex::new(()),
+        drain_cv: Condvar::new(),
+        counters: Counters::default(),
+        started: Instant::now(),
+    });
+
+    let mut conn_threads = Vec::new();
+    while !shutdown.load(Ordering::Relaxed) && !DRAIN_FLAG.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // admission: draining or at capacity -> one busy line
+                let admitted = !shared.draining.load(Ordering::Relaxed)
+                    && shared.active.load(Ordering::Relaxed) < shared.limits.max_sessions;
+                if !admitted {
+                    Counters::bump(&shared.counters.sessions_rejected);
+                    reject_busy(stream, shared.draining.load(Ordering::Relaxed));
+                    continue;
+                }
+                shared.active.fetch_add(1, Ordering::Relaxed);
+                Counters::bump(&shared.counters.sessions_total);
+                let shared = Arc::clone(&shared);
+                let factory = Arc::clone(&factory);
+                conn_threads.push(std::thread::spawn(move || {
+                    // the decrement lives in a drop guard so even a
+                    // panic escaping the connection machinery (it
+                    // shouldn't — requests run under catch_unwind)
+                    // cannot leak a session slot or wedge the drain
+                    let _slot = ActiveSlot(&shared);
+                    // the Session (and its Box<dyn Simulator>) lives
+                    // entirely on this thread; only Shared crosses
+                    handle_connection(stream, &shared, &factory);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => {
+                // transient accept failure (EMFILE, ...): back off, keep
+                // serving existing sessions rather than dying
+                eprintln!("serve: accept error (backing off): {e}");
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        }
+        // opportunistically reap finished connection threads
+        conn_threads.retain(|h| !h.is_finished());
+    }
+
+    // drain: stop accepting (loop exited), tell sessions to wrap up,
+    // wait for them to finish their in-flight request and close
+    shared.draining.store(true, Ordering::Relaxed);
+    drop(listener);
+    let grace = Duration::from_millis(shared.limits.drain_grace_ms);
+    let deadline = Instant::now() + grace;
+    let mut guard = shared.drain_lock.lock().unwrap_or_else(|e| e.into_inner());
+    while shared.active.load(Ordering::Relaxed) > 0 {
+        let now = Instant::now();
+        if now >= deadline {
+            eprintln!(
+                "serve: drain grace expired with {} session(s) still open",
+                shared.active.load(Ordering::Relaxed)
+            );
+            break;
+        }
+        let (g, _) = shared
+            .drain_cv
+            .wait_timeout(guard, deadline - now)
+            .unwrap_or_else(|e| e.into_inner());
+        guard = g;
+    }
+    drop(guard);
+    for h in conn_threads {
+        if h.is_finished() {
+            h.join().ok();
+        }
+    }
+    Ok(())
+}
+
+/// Releases one session slot on drop (normal return *and* unwind) and
+/// wakes a drain waiting for the session count to reach zero.
+struct ActiveSlot<'a>(&'a Shared);
+
+impl Drop for ActiveSlot<'_> {
+    fn drop(&mut self) {
+        let _g = self.0.drain_lock.lock().unwrap_or_else(|e| e.into_inner());
+        self.0.active.fetch_sub(1, Ordering::Relaxed);
+        self.0.drain_cv.notify_all();
+    }
+}
+
+/// Best-effort `server_busy` rejection line in place of `hello`.
+fn reject_busy(stream: TcpStream, draining: bool) {
+    let why = if draining {
+        "server is draining; retry against another instance"
+    } else {
+        "server at max_sessions capacity; retry later"
+    };
+    let mut w = BufWriter::new(stream);
+    let _ = writeln!(w, "{}", err_response(CODE_SERVER_BUSY, why));
+    let _ = w.flush();
+}
+
+/// Why a connection's serve loop ended (drives counters + the final
+/// best-effort notice line).
+enum Exit {
+    /// Peer closed / I/O error / clean `shutdown` op: nothing to send.
+    Closed,
+    /// Evicted with already-formatted final notice line(s) — panic
+    /// eviction sends `engine` then `evicted`, the rest one `evicted`.
+    Evicted { counter: &'static str, notices: Vec<String> },
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared, factory: &SessionFactory) {
+    stream.set_nodelay(true).ok();
+    // short read timeout = the poll tick for idle TTL + drain checks;
+    // CappedLineReader keeps partial-line state across ticks
+    stream.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut writer = BufWriter::new(write_half);
+    let mut reader = BufReader::new(stream);
+
+    let mut session = factory(shared.opts.clone(), shared.limits.session_limits());
+    if send_line(&mut writer, &session.hello()).is_err() {
+        Counters::bump(&shared.counters.disconnects);
+        return;
+    }
+
+    let exit = connection_loop(&mut reader, &mut writer, &mut session, shared);
+    match exit {
+        Exit::Closed => Counters::bump(&shared.counters.disconnects),
+        Exit::Evicted { counter, notices } => {
+            let c = &shared.counters;
+            Counters::bump(match counter {
+                "idle" => &c.evicted_idle,
+                "panic" => &c.evicted_panic,
+                "flood" => &c.evicted_flood,
+                _ => &c.evicted_drain,
+            });
+            for notice in &notices {
+                let _ = send_line(&mut writer, notice); // peer may be gone
+            }
+        }
+    }
+}
+
+fn send_line<W: Write>(w: &mut W, line: &str) -> std::io::Result<()> {
+    writeln!(w, "{line}")?;
+    w.flush()
+}
+
+fn connection_loop(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+    session: &mut Session,
+    shared: &Shared,
+) -> Exit {
+    let mut lines = CappedLineReader::new(shared.limits.max_line_bytes);
+    let idle_ttl = Duration::from_millis(shared.limits.idle_timeout_ms);
+    let mut last_activity = Instant::now();
+    let mut consecutive_errors: u32 = 0;
+
+    loop {
+        if shared.draining.load(Ordering::Relaxed) {
+            return Exit::Evicted {
+                counter: "drain",
+                notices: vec![err_response(CODE_EVICTED, "server draining; session closed")],
+            };
+        }
+        let read = match lines.read_line(reader) {
+            // no complete line yet (read timeout tick, or a byte-drip
+            // client hit the reader's per-call budget): this is NOT
+            // activity — check the idle TTL, then poll again
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if last_activity.elapsed() >= idle_ttl {
+                    return Exit::Evicted {
+                        counter: "idle",
+                        notices: vec![err_response(
+                            CODE_EVICTED,
+                            &format!(
+                                "session idle past the {} ms TTL",
+                                shared.limits.idle_timeout_ms
+                            ),
+                        )],
+                    };
+                }
+                continue;
+            }
+            Ok(LineRead::Pending) => {
+                if last_activity.elapsed() >= idle_ttl {
+                    return Exit::Evicted {
+                        counter: "idle",
+                        notices: vec![err_response(
+                            CODE_EVICTED,
+                            &format!(
+                                "no complete request line within the {} ms TTL",
+                                shared.limits.idle_timeout_ms
+                            ),
+                        )],
+                    };
+                }
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            // hard I/O error or EOF (incl. a dropped partial line):
+            // the client is gone — close without executing anything
+            Err(_) | Ok(LineRead::Eof) => return Exit::Closed,
+            Ok(r) => r,
+        };
+        last_activity = Instant::now();
+
+        let (resp, done) = match read {
+            LineRead::Eof | LineRead::Pending => unreachable!("handled above"),
+            LineRead::TooLong => (
+                err_response(
+                    CODE_MALFORMED,
+                    &format!("request line exceeds {} bytes", shared.limits.max_line_bytes),
+                ),
+                false,
+            ),
+            LineRead::Line(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match parse_request(&line) {
+                    Err(e) => (err_response(e.code, &e.message), false),
+                    // health/metrics answered server-side, without a
+                    // compute permit: probes must work under full load
+                    Ok(Request::Health) => (shared.health_response(), false),
+                    Ok(Request::Metrics) => (shared.metrics_response(), false),
+                    Ok(req) => match execute(session, req, shared) {
+                        Ok(pair) => pair,
+                        Err(exit) => return exit,
+                    },
+                }
+            }
+        };
+
+        Counters::bump(&shared.counters.requests_total);
+        if is_error_response(&resp) {
+            Counters::bump(&shared.counters.errors_total);
+            consecutive_errors += 1;
+            if consecutive_errors >= shared.limits.max_errors {
+                let _ = send_line(writer, &resp);
+                return Exit::Evicted {
+                    counter: "flood",
+                    notices: vec![err_response(
+                        CODE_EVICTED,
+                        &format!(
+                            "{consecutive_errors} consecutive protocol errors; session evicted"
+                        ),
+                    )],
+                };
+            }
+        } else {
+            consecutive_errors = 0;
+        }
+        if send_line(writer, &resp).is_err() {
+            return Exit::Closed;
+        }
+        if done {
+            return Exit::Closed;
+        }
+    }
+}
+
+/// Run one parsed request through the session under a compute permit,
+/// with panic isolation. `Err` means the session must end (panic
+/// eviction); the deadline case stays `Ok` — the session survives a
+/// timed-out wait.
+fn execute(
+    session: &mut Session,
+    req: Request,
+    shared: &Shared,
+) -> Result<(String, bool), Exit> {
+    let wait0 = Instant::now();
+    let permit = shared
+        .gate
+        .acquire(Duration::from_millis(shared.limits.request_timeout_ms));
+    Counters::add(&shared.counters.queue_wait_us, wait0.elapsed().as_micros() as u64);
+    let Some(permit) = permit else {
+        return Ok((
+            err_response(
+                CODE_DEADLINE,
+                &format!(
+                    "no compute capacity within {} ms (queue depth {})",
+                    shared.limits.request_timeout_ms,
+                    shared.gate.queue_depth()
+                ),
+            ),
+            false,
+        ));
+    };
+
+    let steps = req.steps_requested() as u64;
+    let exec0 = Instant::now();
+    let outcome = catch_unwind(AssertUnwindSafe(|| session.handle_request(req)));
+    Counters::add(&shared.counters.execute_us, exec0.elapsed().as_micros() as u64);
+    drop(permit);
+
+    match outcome {
+        Ok((resp, done)) => {
+            if !is_error_response(&resp) {
+                Counters::add(&shared.counters.steps_total, steps);
+            }
+            Ok((resp, done))
+        }
+        Err(panic) => {
+            let what = panic_message(&panic);
+            Err(Exit::Evicted {
+                counter: "panic",
+                notices: vec![
+                    err_response(CODE_ENGINE, &format!("session panicked: {what}")),
+                    err_response(CODE_EVICTED, "session evicted after engine panic"),
+                ],
+            })
+        }
+    }
+}
+
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Process-wide drain request, flipped by the signal handler. Every
+/// [`serve_tcp`] accept loop honors it in addition to its own `shutdown`
+/// flag, so the handler needs no per-server plumbing.
+static DRAIN_FLAG: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn drain_on_signal(_signum: i32) {
+    // async-signal-safe: a single atomic store
+    DRAIN_FLAG.store(true, Ordering::Relaxed);
+}
+
+/// Install SIGTERM/SIGINT handlers that request a graceful drain of
+/// every running [`serve_tcp`] loop in this process. Uses raw
+/// `signal(2)` so no extra dependency is needed; on non-Unix targets
+/// this is a no-op (Ctrl-C kills the process as usual).
+pub fn install_drain_signal_handler() {
+    #[cfg(unix)]
+    {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        unsafe {
+            signal(SIGTERM, drain_on_signal);
+            signal(SIGINT, drain_on_signal);
+        }
+    }
+}

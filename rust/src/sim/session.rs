@@ -75,6 +75,26 @@
 //! <- {"backend":"rust","cycles":410,"energy_uj":1.2,"events":96,"hbm_rows":14,"latency_us":0.4,"ok":true,"op":"cost"}
 //! ```
 //!
+//! `health` — liveness probe, answered even before `configure`. Over
+//! stdio it reports the single session; the shared TCP server
+//! ([`crate::sim::serve`]) intercepts it and reports server-wide state
+//! (active sessions, queue depth, draining flag):
+//!
+//! ```text
+//! -> {"op":"health"}
+//! <- {"configured":true,"ok":true,"op":"health","protocol":1}
+//! ```
+//!
+//! `metrics` — counters since the session started: requests served,
+//! error responses, simulation steps executed. The TCP server again
+//! intercepts this op and adds server-wide totals (sessions, evictions,
+//! queue depth, step rates — see [`crate::sim::serve`]):
+//!
+//! ```text
+//! -> {"op":"metrics"}
+//! <- {"errors":0,"ok":true,"op":"metrics","requests":5,"steps":12}
+//! ```
+//!
 //! `shutdown` — acknowledge, drop the simulator and end the serve loop.
 //! The codec itself stays usable: a later `configure` on the same
 //! [`Session`] starts a fresh simulator (mid-session shutdown is
@@ -89,19 +109,43 @@
 //!
 //! | code                  | meaning                                            |
 //! |-----------------------|----------------------------------------------------|
-//! | `malformed_request`   | line is not JSON / missing or mistyped fields      |
-//! | `unknown_op`          | `op` is not one of the seven ops                   |
+//! | `malformed_request`   | line is not JSON / missing or mistyped fields /    |
+//! |                       | line longer than the transport's byte cap          |
+//! | `unknown_op`          | `op` is not one of the nine ops                    |
 //! | `no_session`          | execution op before a successful `configure`       |
 //! | `oversized_batch`     | `step_many` batch exceeds [`MAX_BATCH_STEPS`]      |
+//! | `quota`               | a per-session quota ([`SessionLimits`]) exceeded:  |
+//! |                       | net too large, batch over the session's step cap   |
+//! | `server_busy`         | shared server at capacity / draining; reconnect    |
+//! |                       | later (emitted instead of `hello`, then closed)    |
+//! | `deadline`            | request waited too long for shared-server capacity |
+//! | `evicted`             | session removed: idle TTL, error flood, panic or   |
+//! |                       | server drain (best-effort notice, then close)      |
 //! | `backend_unavailable` | [`SimError::BackendUnavailable`] (e.g. no pjrt)    |
 //! | `config`              | bad network file / [`SimError::Config`]            |
 //! | `stimulus`            | out-of-range axon or neuron id                     |
-//! | `engine`              | engine-level failure ([`SimError::Engine`])        |
+//! | `engine`              | engine-level failure ([`SimError::Engine`]) or a   |
+//! |                       | panic caught by the shared server's isolation      |
 //!
 //! The Python client maps these to typed exceptions
 //! (`hs_api.exceptions`: `stimulus` → `HsStimulusError`,
-//! `backend_unavailable` → `HsBackendUnavailable`, ...). Codes are part
-//! of the wire contract — add new ones, never rename existing ones.
+//! `backend_unavailable` → `HsBackendUnavailable`, `quota` →
+//! `HsQuotaError`, `server_busy`/`deadline` → `HsServerBusy`, ...).
+//! Codes are part of the wire contract — add new ones, never rename
+//! existing ones.
+//!
+//! # Quotas, deadlines, eviction
+//!
+//! A [`Session`] can carry [`SessionLimits`] (a shared server sets them
+//! from its CLI flags): `max_neurons` bounds the network a `configure`
+//! may load, `max_batch_steps` tightens the global
+//! [`MAX_BATCH_STEPS`] cap per session. Both violations answer `quota`
+//! and leave the session alive. Deadlines (`deadline`) and eviction
+//! (`evicted`) only exist on the shared server — the stdio transport
+//! has one client and no contention; see [`crate::sim::serve`] for
+//! those semantics. Per-request concurrency quota is structural: the
+//! protocol is strictly request/response per connection, so a session
+//! can never have more than one request in flight.
 
 use std::io::{BufRead, Write};
 
@@ -127,6 +171,23 @@ pub const CODE_BACKEND_UNAVAILABLE: &str = "backend_unavailable";
 pub const CODE_CONFIG: &str = "config";
 pub const CODE_STIMULUS: &str = "stimulus";
 pub const CODE_ENGINE: &str = "engine";
+/// A per-session quota ([`SessionLimits`]) was exceeded.
+pub const CODE_QUOTA: &str = "quota";
+/// Shared server at capacity or draining; sent instead of `hello`.
+pub const CODE_SERVER_BUSY: &str = "server_busy";
+/// Request waited past its deadline for shared-server capacity.
+pub const CODE_DEADLINE: &str = "deadline";
+/// Session removed by the shared server (idle TTL, error flood, panic,
+/// drain); best-effort notice before the connection closes.
+pub const CODE_EVICTED: &str = "evicted";
+
+/// Byte cap on one request line over the stdio transport. Lines longer
+/// than this are answered with `malformed_request` — and crucially are
+/// *consumed without buffering*, so an oversized line cannot OOM the
+/// server. Generous because a max-size `step_many` batch is a legitimate
+/// multi-megabyte line; the TCP server defaults tighter (per-connection
+/// memory is multiplied by the session count).
+pub const MAX_LINE_BYTES_STDIO: usize = 64 << 20;
 
 /// Stable protocol error code for a facade error. Every [`SimError`]
 /// variant maps to exactly one code (the wire contract the Python
@@ -149,7 +210,21 @@ pub enum Request {
     ReadMembrane { ids: Vec<u32> },
     Reset,
     Cost,
+    Health,
+    Metrics,
     Shutdown,
+}
+
+impl Request {
+    /// Simulation steps this request would execute if it succeeds (what
+    /// per-session step quotas and server step-rate metrics count).
+    pub fn steps_requested(&self) -> usize {
+        match self {
+            Request::Step { .. } => 1,
+            Request::StepMany { batch } => batch.len(),
+            _ => 0,
+        }
+    }
 }
 
 /// Protocol-level parse/validation failure: stable code + message.
@@ -235,12 +310,14 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
         "read_membrane" => Ok(Request::ReadMembrane { ids: ids_field(&j, "ids", "read_membrane")? }),
         "reset" => Ok(Request::Reset),
         "cost" => Ok(Request::Cost),
+        "health" => Ok(Request::Health),
+        "metrics" => Ok(Request::Metrics),
         "shutdown" => Ok(Request::Shutdown),
         other => Err(perr(
             CODE_UNKNOWN_OP,
             format!(
                 "unknown op {other:?} (options: configure, step, step_many, read_membrane, \
-                 reset, cost, shutdown)"
+                 reset, cost, health, metrics, shutdown)"
             ),
         )),
     }
@@ -252,13 +329,20 @@ fn ok_response(op: &str, mut fields: Vec<(&str, Json)>) -> String {
     obj(all).to_string()
 }
 
-fn err_response(code: &str, message: &str) -> String {
+pub(crate) fn err_response(code: &str, message: &str) -> String {
     obj(vec![
         ("ok", Json::Bool(false)),
         ("code", Json::Str(code.to_string())),
         ("error", Json::Str(message.to_string())),
     ])
     .to_string()
+}
+
+/// Whether a serialized response line is an error. Error responses are
+/// built by [`err_response`] and — keys being BTreeMap-sorted — always
+/// serialize as `{"code":...`; no success op emits a `code` field.
+pub(crate) fn is_error_response(resp: &str) -> bool {
+    resp.starts_with("{\"code\"")
 }
 
 fn spikes_json(spikes: &[u32]) -> Json {
@@ -275,18 +359,83 @@ fn marshal_axons(ids: &[u32]) -> Vec<u32> {
     v
 }
 
+/// Per-session quotas, enforced inside the codec so every transport
+/// (stdio, TCP) rejects identically with the stable `quota` code.
+/// `usize::MAX` (the default) means "no session-specific bound" — the
+/// global [`MAX_BATCH_STEPS`] protocol cap still applies.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionLimits {
+    /// Largest network (neuron count) a `configure` may load.
+    pub max_neurons: usize,
+    /// Per-request `step_many` cap, tightened below [`MAX_BATCH_STEPS`].
+    pub max_batch_steps: usize,
+}
+
+impl Default for SessionLimits {
+    fn default() -> Self {
+        SessionLimits { max_neurons: usize::MAX, max_batch_steps: usize::MAX }
+    }
+}
+
+/// Counters a session accumulates over its lifetime (the `metrics` op).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionStats {
+    /// Requests handled (including ones answered with an error).
+    pub requests: u64,
+    /// Error responses produced.
+    pub errors: u64,
+    /// Simulation steps executed successfully.
+    pub steps: u64,
+}
+
+/// Test seam: builds the simulator `configure` installs. Production code
+/// always goes through [`SimConfig::build`](crate::sim::SimConfig);
+/// fault-injection tests substitute panicking/slow simulators here.
+#[doc(hidden)]
+pub type SimFactory =
+    Box<dyn FnMut(crate::snn::Network, SimOptions) -> Result<Box<dyn Simulator>, SimError> + Send>;
+
 /// A protocol session: deployment options fixed at construction (from
 /// the `serve-session` CLI flags), simulator built/replaced by
 /// `configure`. Drives any [`Simulator`] the facade can build.
 pub struct Session {
     opts: SimOptions,
+    limits: SessionLimits,
     energy: EnergyModel,
     sim: Option<Box<dyn Simulator>>,
+    stats: SessionStats,
+    sim_factory: Option<SimFactory>,
 }
 
 impl Session {
     pub fn new(opts: SimOptions) -> Self {
-        Session { opts, energy: EnergyModel::default(), sim: None }
+        Self::with_limits(opts, SessionLimits::default())
+    }
+
+    /// A session with per-session quotas (the shared server's path).
+    pub fn with_limits(opts: SimOptions, limits: SessionLimits) -> Self {
+        Session {
+            opts,
+            limits,
+            energy: EnergyModel::default(),
+            sim: None,
+            stats: SessionStats::default(),
+            sim_factory: None,
+        }
+    }
+
+    /// Test seam: replace the facade build with a custom simulator
+    /// factory (panic injection, artificial slowness). Quota checks
+    /// still run against whatever the factory returns.
+    #[doc(hidden)]
+    pub fn set_sim_factory_for_tests(&mut self, f: SimFactory) {
+        self.sim_factory = Some(f);
+    }
+
+    /// Lifetime counters (served by the `metrics` op; the shared server
+    /// aggregates them across sessions).
+    pub fn stats(&self) -> SessionStats {
+        self.stats
     }
 
     /// The greeting line emitted before any request is read.
@@ -312,8 +461,12 @@ impl Session {
     /// untouched by invalid stimuli).
     pub fn handle_line(&mut self, line: &str) -> (String, bool) {
         match parse_request(line) {
-            Err(e) => (err_response(e.code, &e.message), false),
-            Ok(req) => self.handle(req),
+            Err(e) => {
+                self.stats.requests += 1;
+                self.stats.errors += 1;
+                (err_response(e.code, &e.message), false)
+            }
+            Ok(req) => self.handle_request(req),
         }
     }
 
@@ -323,7 +476,22 @@ impl Session {
             .ok_or_else(|| err_response(CODE_NO_SESSION, "no simulator: send `configure` first"))
     }
 
-    fn handle(&mut self, req: Request) -> (String, bool) {
+    /// Handle one already-parsed request (what [`Session::handle_line`]
+    /// dispatches to, and what the shared server calls after doing its
+    /// own parse so it can intercept `health`/`metrics` server-side).
+    pub fn handle_request(&mut self, req: Request) -> (String, bool) {
+        let steps = req.steps_requested() as u64;
+        let (resp, done) = self.dispatch(req);
+        self.stats.requests += 1;
+        if is_error_response(&resp) {
+            self.stats.errors += 1;
+        } else {
+            self.stats.steps += steps;
+        }
+        (resp, done)
+    }
+
+    fn dispatch(&mut self, req: Request) -> (String, bool) {
         match req {
             Request::Configure { net, seed, workers } => {
                 (self.configure(&net, seed, workers), false)
@@ -350,6 +518,19 @@ impl Session {
                 }
             }
             Request::StepMany { batch } => {
+                if batch.len() > self.limits.max_batch_steps {
+                    return (
+                        err_response(
+                            CODE_QUOTA,
+                            &format!(
+                                "batch of {} steps exceeds this session's {}-step quota",
+                                batch.len(),
+                                self.limits.max_batch_steps
+                            ),
+                        ),
+                        false,
+                    );
+                }
                 let sim = match self.sim_or_err() {
                     Ok(s) => s,
                     Err(resp) => return (resp, false),
@@ -428,6 +609,27 @@ impl Session {
                     false,
                 )
             }
+            Request::Health => (
+                ok_response(
+                    "health",
+                    vec![
+                        ("protocol", Json::Int(PROTOCOL_VERSION)),
+                        ("configured", Json::Bool(self.sim.is_some())),
+                    ],
+                ),
+                false,
+            ),
+            Request::Metrics => (
+                ok_response(
+                    "metrics",
+                    vec![
+                        ("requests", Json::Int(self.stats.requests as i64)),
+                        ("errors", Json::Int(self.stats.errors as i64)),
+                        ("steps", Json::Int(self.stats.steps as i64)),
+                    ],
+                ),
+                false,
+            ),
             Request::Shutdown => {
                 self.sim = None;
                 (ok_response("shutdown", vec![]), true)
@@ -440,6 +642,18 @@ impl Session {
             Ok(n) => n,
             Err(e) => return err_response(CODE_CONFIG, &format!("loading {net_path}: {e:#}")),
         };
+        if net.n_neurons() > self.limits.max_neurons {
+            // checked before the (expensive) HBM compile: an over-quota
+            // net must not cost the server the work of building it
+            return err_response(
+                CODE_QUOTA,
+                &format!(
+                    "network has {} neurons, over this session's {}-neuron quota",
+                    net.n_neurons(),
+                    self.limits.max_neurons
+                ),
+            );
+        }
         let n_outputs = net.outputs.len();
         let mut opts = self.opts.clone();
         if seed.is_some() {
@@ -450,7 +664,11 @@ impl Session {
             // with a `config` error (one validation point, not two)
             opts.workers = workers;
         }
-        match opts.into_config(net).build() {
+        let built = match self.sim_factory.as_mut() {
+            Some(factory) => factory(net, opts),
+            None => opts.into_config(net).build(),
+        };
+        match built {
             Ok(sim) => {
                 let resp = ok_response(
                     "configure",
@@ -470,26 +688,142 @@ impl Session {
     }
 }
 
+/// One read outcome from [`CappedLineReader`].
+#[derive(Debug)]
+pub(crate) enum LineRead {
+    /// A complete line (newline stripped, trailing `\r` dropped).
+    Line(String),
+    /// The line exceeded the byte cap. Its bytes were consumed and
+    /// *discarded* as they streamed in — answer `malformed_request` and
+    /// keep serving; memory use stayed bounded throughout.
+    TooLong,
+    /// Clean end of input (EOF with no buffered partial line, or a
+    /// partial line with no terminating newline — a disconnect mid-line
+    /// is not a request).
+    Eof,
+    /// The per-call time budget elapsed mid-line (anti-slow-loris: a
+    /// client dripping bytes cannot pin the caller inside `read_line`,
+    /// which would starve its idle-TTL and drain checks). State is kept;
+    /// call again to resume. Crucially this is *not* activity — only a
+    /// completed line resets a session's idle clock.
+    Pending,
+}
+
+/// Line reader with a hard byte cap — the protocol's anti-OOM /
+/// anti-slow-loris guard. Unlike `BufRead::lines`, (a) a line longer
+/// than `cap` never accumulates in memory (bytes past the cap are
+/// drained and dropped until the newline), and (b) state survives
+/// `WouldBlock`/`TimedOut` errors from a read-timeout transport, so the
+/// TCP server can poll for idleness mid-line without losing the prefix.
+pub(crate) struct CappedLineReader {
+    buf: Vec<u8>,
+    overflow: bool,
+    cap: usize,
+}
+
+impl CappedLineReader {
+    pub(crate) fn new(cap: usize) -> Self {
+        CappedLineReader { buf: Vec::new(), overflow: false, cap }
+    }
+
+    pub(crate) fn read_line<R: BufRead>(&mut self, r: &mut R) -> std::io::Result<LineRead> {
+        let call_start = std::time::Instant::now();
+        loop {
+            if call_start.elapsed() > std::time::Duration::from_millis(150) {
+                return Ok(LineRead::Pending);
+            }
+            let chunk = match r.fill_buf() {
+                Ok(c) => c,
+                // timeouts/interrupts propagate with the partial line
+                // intact; the caller retries and we resume mid-line
+                Err(e) => return Err(e),
+            };
+            if chunk.is_empty() {
+                // EOF: a buffered partial line is a disconnect, not a
+                // request — drop it (see serve_tcp: partial-line
+                // disconnects must not execute anything)
+                self.buf.clear();
+                return Ok(if std::mem::take(&mut self.overflow) {
+                    LineRead::TooLong
+                } else {
+                    LineRead::Eof
+                });
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    let too_long =
+                        std::mem::take(&mut self.overflow) || self.buf.len() + i > self.cap;
+                    if !too_long {
+                        self.buf.extend_from_slice(&chunk[..i]);
+                    }
+                    r.consume(i + 1);
+                    if too_long {
+                        self.buf.clear();
+                        return Ok(LineRead::TooLong);
+                    }
+                    if self.buf.last() == Some(&b'\r') {
+                        self.buf.pop();
+                    }
+                    let line = String::from_utf8_lossy(&self.buf).into_owned();
+                    self.buf.clear();
+                    return Ok(LineRead::Line(line));
+                }
+                None => {
+                    let n = chunk.len();
+                    if !self.overflow {
+                        if self.buf.len() + n > self.cap {
+                            self.overflow = true;
+                            self.buf = Vec::new(); // release, don't retain capacity
+                        } else {
+                            self.buf.extend_from_slice(chunk);
+                        }
+                    }
+                    r.consume(n);
+                }
+            }
+        }
+    }
+}
+
 /// The `serve-session` loop: greeting line, then one response line per
 /// request line until `shutdown` or EOF. Flushes after every line (the
 /// client blocks on each response). Blank lines are ignored.
+///
+/// Robustness contract (PR 6): request lines longer than
+/// [`MAX_LINE_BYTES_STDIO`] are answered with `malformed_request`
+/// without ever being buffered whole, and I/O errors on either side end
+/// the loop cleanly (`Ok`) — a vanished client is the normal end of a
+/// session, not a process error.
 pub fn serve<R: BufRead, W: Write>(
     opts: SimOptions,
-    input: R,
+    mut input: R,
     out: &mut W,
 ) -> std::io::Result<()> {
     let mut session = Session::new(opts);
-    writeln!(out, "{}", session.hello())?;
-    out.flush()?;
-    for line in input.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let (resp, done) = session.handle_line(&line);
-        writeln!(out, "{resp}")?;
-        out.flush()?;
-        if done {
+    if writeln!(out, "{}", session.hello()).and_then(|_| out.flush()).is_err() {
+        return Ok(());
+    }
+    let mut reader = CappedLineReader::new(MAX_LINE_BYTES_STDIO);
+    loop {
+        let (resp, done) = match reader.read_line(&mut input) {
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Ok(LineRead::Pending) => continue,
+            Err(_) | Ok(LineRead::Eof) => break,
+            Ok(LineRead::TooLong) => (
+                err_response(
+                    CODE_MALFORMED,
+                    &format!("request line exceeds {MAX_LINE_BYTES_STDIO} bytes"),
+                ),
+                false,
+            ),
+            Ok(LineRead::Line(line)) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                session.handle_line(&line)
+            }
+        };
+        if writeln!(out, "{resp}").and_then(|_| out.flush()).is_err() || done {
             break;
         }
     }
@@ -782,6 +1116,132 @@ mod tests {
         assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
         let (resp, _) = s.handle_line(r#"{"op":"read_membrane","ids":[0]}"#);
         assert_eq!(parsed(&resp).get("v").and_then(Json::i32_vec), Some(vec![0]));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn health_and_metrics_ops_work_pre_and_post_configure() {
+        let p = fig6_path("health");
+        let mut s = Session::new(SimOptions::default());
+        // health answers before configure (liveness probing must not
+        // require a loaded network)
+        let (resp, done) = s.handle_line(r#"{"op":"health"}"#);
+        assert!(!done);
+        let j = parsed(&resp);
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(j.get("configured"), Some(&Json::Bool(false)));
+
+        let mut s = configured_session(&p);
+        let (resp, _) = s.handle_line(r#"{"op":"health"}"#);
+        assert_eq!(parsed(&resp).get("configured"), Some(&Json::Bool(true)));
+        s.handle_line(r#"{"op":"step","axons":[0]}"#);
+        s.handle_line(r#"{"op":"step_many","batch":[[0],[1]]}"#);
+        s.handle_line("{garbage");
+        let (resp, _) = s.handle_line(r#"{"op":"metrics"}"#);
+        let j = parsed(&resp);
+        // configure + health + step + step_many + garbage + this = 6
+        assert_eq!(j.get("requests").and_then(Json::as_i64), Some(6), "{resp}");
+        assert_eq!(j.get("errors").and_then(Json::as_i64), Some(1), "{resp}");
+        assert_eq!(j.get("steps").and_then(Json::as_i64), Some(3), "{resp}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn session_quotas_reject_with_quota_code_and_session_survives() {
+        let p = fig6_path("quota");
+        // net-size quota: the fig6 net has 4 neurons
+        let mut s = Session::new(SimOptions::default());
+        let limits = SessionLimits { max_neurons: 3, max_batch_steps: 2 };
+        let mut q = Session::with_limits(SimOptions::default(), limits);
+        let conf = format!("{{\"op\":\"configure\",\"net\":\"{}\"}}", p.display());
+        let (resp, done) = q.handle_line(&conf);
+        assert!(!done);
+        assert_err(&resp, CODE_QUOTA);
+        assert!(!q.is_configured());
+
+        // batch quota: allowed size passes, over-quota answers `quota`
+        // and executes nothing; the global cap still reports
+        // `oversized_batch` (distinct codes, distinct remedies)
+        let limits = SessionLimits { max_neurons: 100, max_batch_steps: 2 };
+        let mut q = Session::with_limits(SimOptions::default(), limits);
+        let (resp, _) = q.handle_line(&conf);
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let (resp, _) = q.handle_line(r#"{"op":"step_many","batch":[[0],[1],[0]]}"#);
+        assert_err(&resp, CODE_QUOTA);
+        let (resp, _) = q.handle_line(r#"{"op":"read_membrane","ids":[0,1,2,3]}"#);
+        assert_eq!(parsed(&resp).get("v").and_then(Json::i32_vec), Some(vec![0, 0, 0, 0]));
+        let (resp, _) = q.handle_line(r#"{"op":"step_many","batch":[[0],[1]]}"#);
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+
+        // an unlimited session accepts the same batch the quota refused
+        let (resp, _) = s.handle_line(&conf);
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let (resp, _) = s.handle_line(r#"{"op":"step_many","batch":[[0],[1],[0]]}"#);
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn capped_reader_handles_short_long_and_crlf_lines() {
+        let mut r = CappedLineReader::new(8);
+        let mut input: &[u8] = b"short\r\nwaaaaaaaaay too long\nok\npartial";
+        match r.read_line(&mut input).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "short"),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(r.read_line(&mut input).unwrap(), LineRead::TooLong));
+        match r.read_line(&mut input).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "ok"),
+            other => panic!("{other:?}"),
+        }
+        // a partial line at EOF is a disconnect, not a request
+        assert!(matches!(r.read_line(&mut input).unwrap(), LineRead::Eof));
+    }
+
+    #[test]
+    fn capped_reader_drains_oversized_line_without_buffering_it() {
+        // 1 MiB line against a 1 KiB cap: the reader must report
+        // TooLong while never holding more than ~cap bytes
+        let cap = 1024;
+        let mut r = CappedLineReader::new(cap);
+        let big = vec![b'x'; 1 << 20];
+        let mut input: Vec<u8> = big;
+        input.push(b'\n');
+        input.extend_from_slice(b"{\"op\":\"health\"}\n");
+        let mut cursor = std::io::BufReader::with_capacity(512, &input[..]);
+        assert!(matches!(r.read_line(&mut cursor).unwrap(), LineRead::TooLong));
+        assert!(r.buf.capacity() <= 2 * cap + 512, "buffered {} bytes", r.buf.capacity());
+        match r.read_line(&mut cursor).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "{\"op\":\"health\"}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// Satellite (PR 6): the stdio loop answers an oversized line with
+    /// `malformed_request` and keeps serving the same stream.
+    #[test]
+    fn serve_loop_survives_oversized_line() {
+        let p = fig6_path("oversized_line");
+        let mut input = format!("{{\"op\":\"configure\",\"net\":\"{}\"}}\n", p.display());
+        input.push_str(&"x".repeat(MAX_LINE_BYTES_STDIO + 1));
+        input.push('\n');
+        input.push_str("{\"op\":\"step\",\"axons\":[0]}\n{\"op\":\"shutdown\"}\n");
+        let mut out = Vec::new();
+        serve(SimOptions::default(), input.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5, "{text}");
+        assert_eq!(parsed(lines[0]).get("op").and_then(Json::as_str), Some("hello"));
+        assert_eq!(parsed(lines[1]).get("ok"), Some(&Json::Bool(true)), "{}", lines[1]);
+        assert_eq!(
+            parsed(lines[2]).get("code").and_then(Json::as_str),
+            Some(CODE_MALFORMED),
+            "{}",
+            lines[2]
+        );
+        // ...and the step after the flood still executed normally
+        assert_eq!(parsed(lines[3]).get("op").and_then(Json::as_str), Some("step"));
+        assert_eq!(parsed(lines[4]).get("op").and_then(Json::as_str), Some("shutdown"));
         std::fs::remove_file(&p).ok();
     }
 

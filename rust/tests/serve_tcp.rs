@@ -1,0 +1,756 @@
+//! Fault-injection and concurrency tests for the TCP serving tier
+//! (`sim::serve`): many concurrent sessions must stay bit-identical to
+//! serial runs, and every hostile-client scenario — killed mid-batch,
+//! partial-line disconnect, malformed/oversized floods, panicking
+//! simulators, idle squatters — must evict (at most) the offending
+//! session while the server keeps serving everyone else.
+//!
+//! The server runs in-process on an ephemeral 127.0.0.1 port;
+//! fault-injecting simulators are installed through the layered test
+//! seams (`serve_tcp_with_factory` -> `set_sim_factory_for_tests`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use hiaer_spike::cluster::{CorePool, PoolOptions};
+use hiaer_spike::energy::EnergyModel;
+use hiaer_spike::engine::{sweep_chunk, CoreParams, UpdateBackend};
+use hiaer_spike::hbm::{HbmImage, Pointer};
+use hiaer_spike::model_fmt::write_hsn;
+use hiaer_spike::sim::serve::{serve_tcp_with_factory, ServeLimits, SessionFactory};
+use hiaer_spike::sim::session::Session;
+use hiaer_spike::sim::{CostSummary, SimConfig, SimError, SimOptions, Simulator, StepResult};
+use hiaer_spike::snn::{Network, NetworkBuilder, NeuronModel, Synapse};
+use hiaer_spike::util::json::Json;
+
+// ---------------------------------------------------------------- nets
+
+fn fig6_net() -> Network {
+    let lif = NeuronModel::lif(3, 0, 63, false).unwrap();
+    let lif_c = NeuronModel::lif(4, 0, 2, false).unwrap();
+    let ann_d = NeuronModel::ann(5, 0, true).unwrap();
+    let mut b = NetworkBuilder::new().seed(7);
+    b.add_neuron("a", lif, &[("b", 1), ("d", 2)]).unwrap();
+    b.add_neuron("b", lif, &[]).unwrap();
+    b.add_neuron("c", lif_c, &[]).unwrap();
+    b.add_neuron("d", ann_d, &[("c", 1)]).unwrap();
+    b.add_axon("alpha", &[("a", 3), ("c", 2)]).unwrap();
+    b.add_axon("beta", &[("b", 3)]).unwrap();
+    b.add_output("a");
+    b.add_output("b");
+    b.build().unwrap().0
+}
+
+fn tiny_net() -> Network {
+    Network::from_adj(
+        vec![NeuronModel::if_neuron(0); 3],
+        &[vec![Synapse { target: 1, weight: 1 }], vec![], vec![]],
+        &[vec![Synapse { target: 0, weight: 1 }]],
+        vec![1],
+        0,
+    )
+}
+
+fn temp_hsn(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("hiaer_serve_{}_{tag}.hsn", std::process::id()))
+}
+
+// ------------------------------------------------------------- harness
+
+struct TestServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: thread::JoinHandle<std::io::Result<()>>,
+}
+
+fn start_server_with_factory(limits: ServeLimits, factory: SessionFactory) -> TestServer {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let sd = Arc::clone(&shutdown);
+    let handle = thread::spawn(move || {
+        serve_tcp_with_factory(listener, SimOptions::default(), limits, sd, factory)
+    });
+    TestServer { addr, shutdown, handle }
+}
+
+fn start_server(limits: ServeLimits) -> TestServer {
+    start_server_with_factory(limits, Arc::new(Session::with_limits))
+}
+
+impl TestServer {
+    fn stop(self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.handle.join().expect("server thread").expect("serve_tcp");
+    }
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connecting to test server");
+        // a hang becomes a loud failure instead of a stuck test binary
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    /// Next response line, or `None` on EOF (server closed the session).
+    fn read_json(&mut self) -> Option<Json> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("reading server response");
+        if n == 0 {
+            return None;
+        }
+        Some(Json::parse(line.trim_end()).unwrap_or_else(|e| panic!("bad response {line:?}: {e}")))
+    }
+
+    fn hello(&mut self) {
+        let j = self.read_json().expect("hello greeting");
+        assert_eq!(j.get("op").and_then(Json::as_str), Some("hello"), "{j:?}");
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.stream, "{line}").unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    fn request(&mut self, line: &str) -> Json {
+        self.send(line);
+        self.read_json().expect("response line")
+    }
+}
+
+fn ok(j: &Json) -> bool {
+    j.get("ok") == Some(&Json::Bool(true))
+}
+
+fn code(j: &Json) -> Option<&str> {
+    j.get("code").and_then(Json::as_str)
+}
+
+fn configure_line(p: &std::path::Path) -> String {
+    format!("{{\"op\":\"configure\",\"net\":\"{}\"}}", p.display())
+}
+
+fn step_line(axons: &[u32]) -> String {
+    let ids: Vec<String> = axons.iter().map(|a| a.to_string()).collect();
+    format!("{{\"op\":\"step\",\"axons\":[{}]}}", ids.join(","))
+}
+
+fn step_many_line(batch: &[Vec<u32>]) -> String {
+    let rows: Vec<String> = batch
+        .iter()
+        .map(|r| {
+            let ids: Vec<String> = r.iter().map(|a| a.to_string()).collect();
+            format!("[{}]", ids.join(","))
+        })
+        .collect();
+    format!("{{\"op\":\"step_many\",\"batch\":[{}]}}", rows.join(","))
+}
+
+/// Poll `metrics` until `key` reaches `at_least` (counters race with the
+/// evicted session's connection thread winding down).
+fn wait_for_metric(c: &mut Client, key: &str, at_least: i64) -> i64 {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = c.request("{\"op\":\"metrics\"}");
+        let got = m.get(key).and_then(Json::as_i64).unwrap_or(-1);
+        if got >= at_least {
+            return got;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "metric {key} stuck at {got}, wanted >= {at_least}: {m:?}"
+        );
+        thread::sleep(Duration::from_millis(50));
+    }
+}
+
+// ---------------------------------------------------- injected engines
+
+/// Hand-rolled no-op engine that panics when the trigger axon fires —
+/// drives the catch_unwind eviction path end to end.
+#[derive(Default)]
+struct PanicSim {
+    fired: Vec<u32>,
+}
+
+const PANIC_AXON: u32 = 7;
+
+impl Simulator for PanicSim {
+    fn step(&mut self, axon_in: &[u32]) -> Result<StepResult<'_>, SimError> {
+        if axon_in.contains(&PANIC_AXON) {
+            panic!("injected simulator panic");
+        }
+        Ok(StepResult { fired: &self.fired, output_spikes: &self.fired })
+    }
+    fn fired(&self) -> &[u32] {
+        &self.fired
+    }
+    fn output_spikes(&self) -> &[u32] {
+        &self.fired
+    }
+    fn reset(&mut self) {}
+    fn reset_cost(&mut self) {}
+    fn read_membrane(&self, ids: &[u32]) -> Vec<i32> {
+        vec![0; ids.len()]
+    }
+    fn cost(&self, _model: &EnergyModel) -> CostSummary {
+        CostSummary::default()
+    }
+    fn backend_name(&self) -> &'static str {
+        "panic-test"
+    }
+    fn n_neurons(&self) -> usize {
+        4
+    }
+    fn n_axons(&self) -> usize {
+        8
+    }
+}
+
+/// Engine whose every step stalls — saturates the shared compute pool so
+/// a second session's permit wait times out (`deadline`).
+struct SlowSim {
+    delay: Duration,
+    fired: Vec<u32>,
+}
+
+impl Simulator for SlowSim {
+    fn step(&mut self, _axon_in: &[u32]) -> Result<StepResult<'_>, SimError> {
+        thread::sleep(self.delay);
+        Ok(StepResult { fired: &self.fired, output_spikes: &self.fired })
+    }
+    fn fired(&self) -> &[u32] {
+        &self.fired
+    }
+    fn output_spikes(&self) -> &[u32] {
+        &self.fired
+    }
+    fn reset(&mut self) {}
+    fn reset_cost(&mut self) {}
+    fn read_membrane(&self, ids: &[u32]) -> Vec<i32> {
+        vec![0; ids.len()]
+    }
+    fn cost(&self, _model: &EnergyModel) -> CostSummary {
+        CostSummary::default()
+    }
+    fn backend_name(&self) -> &'static str {
+        "slow-test"
+    }
+    fn n_neurons(&self) -> usize {
+        1
+    }
+    fn n_axons(&self) -> usize {
+        4
+    }
+}
+
+/// The honest pure sweep kernel with a booby-trapped route `gather` —
+/// the same shape as the pool failure-injection suite. The pool catches
+/// the worker panic and surfaces a phase *error*, so through the session
+/// this must come back as an `engine` error WITHOUT eviction.
+#[derive(Clone, Copy)]
+struct GatherPanicBackend;
+
+impl UpdateBackend for GatherPanicBackend {
+    fn update(
+        &mut self,
+        v: &mut [i32],
+        params: &CoreParams,
+        step_seed: u32,
+        spikes: &mut [u64],
+    ) -> anyhow::Result<()> {
+        let n = v.len();
+        sweep_chunk(v, params.slice(0, n), step_seed, spikes, 0);
+        Ok(())
+    }
+    fn gather(&self, _image: &HbmImage, _ptr: Pointer, _out: &mut Vec<(u32, i32)>) {
+        panic!("injected gather panic");
+    }
+    fn accumulate(&mut self, _v: &mut [i32], _events: &[(u32, i32)]) -> anyhow::Result<()> {
+        Ok(())
+    }
+    fn chunkable(&self) -> bool {
+        true
+    }
+    fn name(&self) -> &'static str {
+        "gather-panic"
+    }
+}
+
+/// Adapter driving a `CorePool<GatherPanicBackend>` (built through the
+/// existing `with_backend_for_tests` hook) behind the `Simulator` trait,
+/// mirroring `PoolSim`'s update-then-route step.
+struct PoolBackedSim {
+    pool: CorePool<GatherPanicBackend>,
+    inputs: Vec<Vec<u32>>,
+    n_axons: usize,
+    n_neurons: usize,
+}
+
+impl Simulator for PoolBackedSim {
+    fn step(&mut self, axon_in: &[u32]) -> Result<StepResult<'_>, SimError> {
+        self.inputs[0].clear();
+        self.inputs[0].extend_from_slice(axon_in);
+        self.pool.phase_update().map_err(SimError::Engine)?;
+        self.pool.phase_route(&self.inputs).map_err(SimError::Engine)?;
+        let core = self.pool.core(0);
+        Ok(StepResult { fired: core.fired(), output_spikes: core.output_spikes() })
+    }
+    fn fired(&self) -> &[u32] {
+        self.pool.core(0).fired()
+    }
+    fn output_spikes(&self) -> &[u32] {
+        self.pool.core(0).output_spikes()
+    }
+    fn reset(&mut self) {
+        self.pool.core_mut(0).reset();
+    }
+    fn reset_cost(&mut self) {
+        self.pool.core_mut(0).reset_cost();
+    }
+    fn read_membrane(&self, ids: &[u32]) -> Vec<i32> {
+        self.pool.core(0).read_membrane(ids)
+    }
+    fn cost(&self, model: &EnergyModel) -> CostSummary {
+        self.pool.core(0).cost(model).into()
+    }
+    fn backend_name(&self) -> &'static str {
+        "pool-panic-test"
+    }
+    fn n_neurons(&self) -> usize {
+        self.n_neurons
+    }
+    fn n_axons(&self) -> usize {
+        self.n_axons
+    }
+}
+
+/// Session factory whose `configure` installs `build()`'s result.
+fn sim_factory(
+    build: impl Fn() -> Box<dyn Simulator> + Send + Sync + Clone + 'static,
+) -> SessionFactory {
+    Arc::new(move |opts, limits| {
+        let mut s = Session::with_limits(opts, limits);
+        let build = build.clone();
+        s.set_sim_factory_for_tests(Box::new(move |_net, _opts| Ok(build())));
+        s
+    })
+}
+
+// --------------------------------------------------------------- tests
+
+/// N concurrent sessions, each with its own stimulus schedule: every
+/// response stream must be bit-identical to a serial facade run of the
+/// same schedule — sessions share the compute pool but never state.
+#[test]
+fn concurrent_sessions_match_serial_runs() {
+    let net_path = temp_hsn("parity");
+    write_hsn(&fig6_net(), &net_path).unwrap();
+    let server = start_server(ServeLimits::default());
+    let addr = server.addr;
+
+    let mut clients = Vec::new();
+    for i in 0..4u32 {
+        let p = net_path.clone();
+        clients.push(thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            c.hello();
+            let conf = c.request(&configure_line(&p));
+            assert!(ok(&conf), "{conf:?}");
+
+            let stimulus: Vec<Vec<u32>> = (0..8u32)
+                .map(|t| if (t + i) % 3 == 0 { vec![0, 1] } else { vec![(t + i) % 2] })
+                .collect();
+            let mut reference = SimConfig::new(fig6_net()).build().unwrap();
+
+            for axons in &stimulus[..3] {
+                let resp = c.request(&step_line(axons));
+                assert!(ok(&resp), "{resp:?}");
+                let want = reference.step(axons).unwrap();
+                let want: Vec<i64> = want.output_spikes.iter().map(|&s| s as i64).collect();
+                assert_eq!(resp.get("spikes").and_then(Json::int_vec), Some(want));
+            }
+
+            let resp = c.request(&step_many_line(&stimulus[3..]));
+            assert!(ok(&resp), "{resp:?}");
+            let want = reference.step_many(&stimulus[3..]).unwrap();
+            let got: Vec<Vec<i64>> = resp
+                .get("spikes")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .map(|r| r.int_vec().unwrap())
+                .collect();
+            let want_rows: Vec<Vec<i64>> =
+                want.spikes.iter().map(|r| r.iter().map(|&s| s as i64).collect()).collect();
+            assert_eq!(got, want_rows);
+
+            let resp = c.request("{\"op\":\"read_membrane\",\"ids\":[0,1,2,3]}");
+            let want_v: Vec<i64> =
+                reference.read_membrane(&[0, 1, 2, 3]).iter().map(|&x| x as i64).collect();
+            assert_eq!(resp.get("v").and_then(Json::int_vec), Some(want_v), "{resp:?}");
+
+            let bye = c.request("{\"op\":\"shutdown\"}");
+            assert!(ok(&bye), "{bye:?}");
+        }));
+    }
+    for h in clients {
+        h.join().unwrap();
+    }
+    server.stop();
+    std::fs::remove_file(&net_path).ok();
+}
+
+/// A client killed mid-batch (request sent, socket dropped before the
+/// response) must not disturb the session next door.
+#[test]
+fn killed_client_mid_batch_leaves_server_serving() {
+    let net_path = temp_hsn("killed");
+    write_hsn(&fig6_net(), &net_path).unwrap();
+    let server = start_server(ServeLimits::default());
+
+    let mut survivor = Client::connect(server.addr);
+    survivor.hello();
+    assert!(ok(&survivor.request(&configure_line(&net_path))));
+
+    {
+        let mut victim = Client::connect(server.addr);
+        victim.hello();
+        assert!(ok(&victim.request(&configure_line(&net_path))));
+        let batch: Vec<Vec<u32>> = vec![vec![0, 1]; 50];
+        victim.send(&step_many_line(&batch));
+        // dropped here: socket closes with the batch still executing
+    }
+
+    assert!(ok(&survivor.request(&step_line(&[0, 1]))));
+    wait_for_metric(&mut survivor, "disconnects", 1);
+    assert!(ok(&survivor.request(&step_line(&[1]))));
+    drop(survivor);
+    server.stop();
+    std::fs::remove_file(&net_path).ok();
+}
+
+/// A connection dying in the middle of a request line (no newline ever
+/// arrives) is a clean disconnect: nothing executes, nobody else notices.
+#[test]
+fn partial_line_disconnect_is_a_clean_close() {
+    let net_path = temp_hsn("partial");
+    write_hsn(&fig6_net(), &net_path).unwrap();
+    let server = start_server(ServeLimits::default());
+
+    let mut survivor = Client::connect(server.addr);
+    survivor.hello();
+    assert!(ok(&survivor.request(&configure_line(&net_path))));
+
+    {
+        let mut half = Client::connect(server.addr);
+        half.hello();
+        half.stream.write_all(b"{\"op\":\"ste").unwrap();
+        half.stream.flush().unwrap();
+        // dropped: the partial line must be discarded, not executed
+    }
+
+    wait_for_metric(&mut survivor, "disconnects", 1);
+    let m = survivor.request("{\"op\":\"metrics\"}");
+    assert_eq!(m.get("steps_total").and_then(Json::as_i64), Some(0), "{m:?}");
+    assert!(ok(&survivor.request(&step_line(&[0]))));
+    drop(survivor);
+    server.stop();
+    std::fs::remove_file(&net_path).ok();
+}
+
+/// Oversized + malformed floods answer `malformed_request` with the
+/// offending bytes never buffered, and `max_errors` consecutive protocol
+/// errors evict the flooding session — only that session.
+#[test]
+fn error_flood_evicts_only_the_flooding_session() {
+    let net_path = temp_hsn("flood");
+    write_hsn(&fig6_net(), &net_path).unwrap();
+    let limits = ServeLimits { max_errors: 3, max_line_bytes: 128, ..ServeLimits::default() };
+    let server = start_server(limits);
+
+    let mut survivor = Client::connect(server.addr);
+    survivor.hello();
+    assert!(ok(&survivor.request(&configure_line(&net_path))));
+
+    let mut flooder = Client::connect(server.addr);
+    flooder.hello();
+    let r1 = flooder.request("this is not json");
+    assert_eq!(code(&r1), Some("malformed_request"), "{r1:?}");
+    let oversized = "x".repeat(512); // > max_line_bytes, valid UTF-8
+    let r2 = flooder.request(&oversized);
+    assert_eq!(code(&r2), Some("malformed_request"), "{r2:?}");
+    // third consecutive error trips the flood eviction
+    let r3 = flooder.request("{\"op\":\"nope\"}");
+    assert_eq!(code(&r3), Some("unknown_op"), "{r3:?}");
+    let notice = flooder.read_json().expect("eviction notice");
+    assert_eq!(code(&notice), Some("evicted"), "{notice:?}");
+    assert_eq!(flooder.read_json(), None, "EOF after eviction");
+
+    wait_for_metric(&mut survivor, "evicted_flood", 1);
+    assert!(ok(&survivor.request(&step_line(&[0, 1]))));
+    drop(survivor);
+    server.stop();
+    std::fs::remove_file(&net_path).ok();
+}
+
+/// A simulator panic is caught per-request: the panicking session gets
+/// an `engine` error plus an `evicted` notice and is closed; concurrent
+/// sessions (and the server) keep running.
+#[test]
+fn simulator_panic_evicts_session_and_peers_survive() {
+    let net_path = temp_hsn("panic");
+    write_hsn(&fig6_net(), &net_path).unwrap();
+    let factory = sim_factory(|| Box::new(PanicSim::default()));
+    let server = start_server_with_factory(ServeLimits::default(), factory);
+
+    let mut survivor = Client::connect(server.addr);
+    survivor.hello();
+    assert!(ok(&survivor.request(&configure_line(&net_path))));
+    assert!(ok(&survivor.request(&step_line(&[0]))));
+
+    let mut victim = Client::connect(server.addr);
+    victim.hello();
+    assert!(ok(&victim.request(&configure_line(&net_path))));
+    victim.send(&step_line(&[PANIC_AXON]));
+    let engine = victim.read_json().expect("engine error line");
+    assert_eq!(code(&engine), Some("engine"), "{engine:?}");
+    let msg = engine.get("error").and_then(Json::as_str).unwrap_or("");
+    assert!(msg.contains("panicked"), "{engine:?}");
+    let notice = victim.read_json().expect("eviction notice");
+    assert_eq!(code(&notice), Some("evicted"), "{notice:?}");
+    assert_eq!(victim.read_json(), None, "EOF after panic eviction");
+
+    wait_for_metric(&mut survivor, "evicted_panic", 1);
+    assert!(ok(&survivor.request(&step_line(&[0]))));
+    drop(survivor);
+    server.stop();
+    std::fs::remove_file(&net_path).ok();
+}
+
+/// A panic *inside the worker pool* (injected through the existing
+/// `with_backend_for_tests` hook) is already caught by the pool and
+/// surfaces as a phase error — through the server that is an `engine`
+/// error response and the session survives, un-evicted.
+#[test]
+fn pool_backend_panic_is_engine_error_without_eviction() {
+    let net_path = temp_hsn("poolpanic");
+    write_hsn(&tiny_net(), &net_path).unwrap();
+    let factory = sim_factory(|| {
+        let net = tiny_net();
+        let (n_axons, n_neurons) = (net.n_axons(), net.n_neurons());
+        let pool = CorePool::with_backend_for_tests(
+            std::slice::from_ref(&net),
+            GatherPanicBackend,
+            PoolOptions::default(),
+        )
+        .expect("pool construction");
+        Box::new(PoolBackedSim { pool, inputs: vec![Vec::new()], n_axons, n_neurons })
+    });
+    let server = start_server_with_factory(ServeLimits::default(), factory);
+
+    let mut c = Client::connect(server.addr);
+    c.hello();
+    assert!(ok(&c.request(&configure_line(&net_path))));
+    // quiet step: no fired sources -> no gather chunks -> no panic
+    assert!(ok(&c.request(&step_line(&[]))));
+    // axon 0 fires -> gather chunk -> injected worker panic -> pool
+    // surfaces a phase error -> engine response, session kept
+    let resp = c.request(&step_line(&[0]));
+    assert_eq!(code(&resp), Some("engine"), "{resp:?}");
+    let msg = resp.get("error").and_then(Json::as_str).unwrap_or("");
+    assert!(msg.contains("panicked"), "{resp:?}");
+    // the session (and its pool) survives for a following quiet step
+    assert!(ok(&c.request(&step_line(&[]))));
+    let m = c.request("{\"op\":\"metrics\"}");
+    assert_eq!(m.get("evicted_panic").and_then(Json::as_i64), Some(0), "{m:?}");
+    drop(c);
+    server.stop();
+    std::fs::remove_file(&net_path).ok();
+}
+
+/// Over `max_sessions`, a connection gets one `server_busy` line instead
+/// of `hello`; a slot freed by a closing session is reusable.
+#[test]
+fn admission_rejects_over_capacity_with_server_busy() {
+    let limits = ServeLimits { max_sessions: 1, ..ServeLimits::default() };
+    let server = start_server(limits);
+
+    let first = {
+        let mut c = Client::connect(server.addr);
+        c.hello();
+        c
+    };
+
+    let mut rejected = Client::connect(server.addr);
+    let busy = rejected.read_json().expect("server_busy line");
+    assert_eq!(code(&busy), Some("server_busy"), "{busy:?}");
+    assert_eq!(rejected.read_json(), None, "EOF after rejection");
+
+    drop(first); // frees the one slot (server side notices the EOF)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut retry = Client::connect(server.addr);
+        match retry.read_json() {
+            Some(j) if j.get("op").and_then(Json::as_str) == Some("hello") => break,
+            Some(j) => assert_eq!(code(&j), Some("server_busy"), "{j:?}"),
+            None => {}
+        }
+        assert!(Instant::now() < deadline, "slot never freed for a new session");
+        thread::sleep(Duration::from_millis(50));
+    }
+    server.stop();
+}
+
+/// Session quotas reject with the stable `quota` code and leave the
+/// session usable: an over-quota net, then a within-quota net, then an
+/// over-quota batch, then a within-quota batch.
+#[test]
+fn session_quotas_answer_quota_and_session_survives() {
+    let big = temp_hsn("quota_big");
+    write_hsn(&fig6_net(), &big).unwrap(); // 4 neurons
+    let small = temp_hsn("quota_small");
+    write_hsn(&tiny_net(), &small).unwrap(); // 3 neurons
+    let limits = ServeLimits { max_neurons: 3, max_batch_steps: 2, ..ServeLimits::default() };
+    let server = start_server(limits);
+
+    let mut c = Client::connect(server.addr);
+    c.hello();
+    let r = c.request(&configure_line(&big));
+    assert_eq!(code(&r), Some("quota"), "{r:?}");
+    assert!(ok(&c.request(&configure_line(&small))));
+    let r = c.request(&step_many_line(&[vec![], vec![], vec![]]));
+    assert_eq!(code(&r), Some("quota"), "{r:?}");
+    assert!(ok(&c.request(&step_many_line(&[vec![0], vec![]]))));
+    assert!(ok(&c.request(&step_line(&[0]))));
+    drop(c);
+    server.stop();
+    std::fs::remove_file(&big).ok();
+    std::fs::remove_file(&small).ok();
+}
+
+/// Sessions silent past the idle TTL are evicted with a notice, so
+/// abandoned connections cannot pin server capacity.
+#[test]
+fn idle_sessions_are_evicted_after_ttl() {
+    let limits = ServeLimits { idle_timeout_ms: 200, ..ServeLimits::default() };
+    let server = start_server(limits);
+
+    let mut c = Client::connect(server.addr);
+    c.hello();
+    let t0 = Instant::now();
+    let notice = c.read_json().expect("idle eviction notice");
+    assert_eq!(code(&notice), Some("evicted"), "{notice:?}");
+    assert_eq!(c.read_json(), None, "EOF after idle eviction");
+    assert!(t0.elapsed() >= Duration::from_millis(150), "evicted too eagerly");
+    server.stop();
+}
+
+/// `health` and `metrics` are served without a compute permit and report
+/// live occupancy / lifetime counters.
+#[test]
+fn health_and_metrics_report_server_state() {
+    let net_path = temp_hsn("health");
+    write_hsn(&fig6_net(), &net_path).unwrap();
+    let limits = ServeLimits { max_sessions: 5, ..ServeLimits::default() };
+    let server = start_server(limits);
+
+    let mut c = Client::connect(server.addr);
+    c.hello();
+    let h = c.request("{\"op\":\"health\"}");
+    assert!(ok(&h), "{h:?}");
+    assert_eq!(h.get("sessions").and_then(Json::as_i64), Some(1));
+    assert_eq!(h.get("max_sessions").and_then(Json::as_i64), Some(5));
+    assert_eq!(h.get("draining"), Some(&Json::Bool(false)));
+
+    assert!(ok(&c.request(&configure_line(&net_path))));
+    assert!(ok(&c.request(&step_many_line(&[vec![0], vec![1], vec![]]))));
+    let m = c.request("{\"op\":\"metrics\"}");
+    assert!(ok(&m), "{m:?}");
+    assert_eq!(m.get("steps_total").and_then(Json::as_i64), Some(3), "{m:?}");
+    assert_eq!(m.get("sessions_total").and_then(Json::as_i64), Some(1));
+    // the snapshot is taken before the metrics request itself is
+    // counted: health + configure + step_many have been recorded
+    assert!(m.get("requests_total").and_then(Json::as_i64).unwrap_or(0) >= 3, "{m:?}");
+    assert!(m.get("execute_us").and_then(Json::as_i64).unwrap_or(-1) >= 0, "{m:?}");
+    drop(c);
+    server.stop();
+    std::fs::remove_file(&net_path).ok();
+}
+
+/// With the compute pool saturated by a slow session, a second session's
+/// permit wait times out with a retryable `deadline` error — and the
+/// waiting session survives to issue more requests.
+#[test]
+fn saturated_pool_times_out_with_deadline() {
+    let net_path = temp_hsn("deadline");
+    write_hsn(&fig6_net(), &net_path).unwrap();
+    let factory = sim_factory(|| {
+        Box::new(SlowSim { delay: Duration::from_millis(250), fired: Vec::new() })
+    });
+    let limits =
+        ServeLimits { concurrency: 1, request_timeout_ms: 50, ..ServeLimits::default() };
+    let server = start_server_with_factory(limits, factory);
+
+    let mut hog = Client::connect(server.addr);
+    hog.hello();
+    assert!(ok(&hog.request(&configure_line(&net_path))));
+    let mut waiter = Client::connect(server.addr);
+    waiter.hello();
+    assert!(ok(&waiter.request(&configure_line(&net_path))));
+
+    // 4 steps x 250 ms: the hog holds the one permit for ~1 s
+    hog.send(&step_many_line(&[vec![], vec![], vec![], vec![]]));
+    thread::sleep(Duration::from_millis(150)); // hog surely holds it now
+    let r = waiter.request(&step_line(&[]));
+    assert_eq!(code(&r), Some("deadline"), "{r:?}");
+    // the timed-out session survives; the hog's batch completes
+    let done = hog.read_json().expect("hog batch response");
+    assert!(ok(&done), "{done:?}");
+    assert!(ok(&waiter.request(&step_line(&[]))));
+    drop(hog);
+    drop(waiter);
+    server.stop();
+    std::fs::remove_file(&net_path).ok();
+}
+
+/// Graceful drain: in-flight work finishes and its response is
+/// delivered, then every session gets an `evicted` notice and EOF, and
+/// `serve_tcp` returns.
+#[test]
+fn graceful_drain_finishes_in_flight_and_notifies() {
+    let net_path = temp_hsn("drain");
+    write_hsn(&fig6_net(), &net_path).unwrap();
+    let server = start_server(ServeLimits::default());
+
+    let mut c = Client::connect(server.addr);
+    c.hello();
+    assert!(ok(&c.request(&configure_line(&net_path))));
+
+    // put a batch in flight, then request the drain
+    let batch: Vec<Vec<u32>> = vec![vec![0, 1]; 200];
+    c.send(&step_many_line(&batch));
+    server.shutdown.store(true, Ordering::Relaxed);
+
+    // the in-flight batch's response arrives before the drain notice
+    let resp = c.read_json().expect("in-flight response");
+    assert!(ok(&resp), "{resp:?}");
+    assert_eq!(resp.get("spikes").and_then(Json::as_arr).map(|v| v.len()), Some(200), "{resp:?}");
+    let notice = c.read_json().expect("drain notice");
+    assert_eq!(code(&notice), Some("evicted"), "{notice:?}");
+    assert_eq!(c.read_json(), None, "EOF after drain");
+
+    server.handle.join().expect("server thread").expect("serve_tcp drain");
+    std::fs::remove_file(&net_path).ok();
+}

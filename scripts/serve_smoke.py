@@ -1,0 +1,173 @@
+#!/usr/bin/env python3
+"""End-to-end smoke for the shared serving tier (`hiaer-spike serve`).
+
+Drives the *release binary* the way an operator would — not reachable
+through `cargo test`:
+
+1. start `hiaer-spike serve --listen 127.0.0.1:0` (ephemeral port) with
+   tight limits and parse the announced address from stdout;
+2. run 4 concurrent TCP clients (configure + step_many) — one of them
+   disconnects mid-batch without reading its response;
+3. check the server still answers `health` (not draining, 0 queue);
+4. send SIGTERM and require a clean drain: exit code 0 and the
+   "drained" line on stdout.
+
+Stdlib only; every phase is timeout-bounded so a wedged server fails
+the run instead of hanging CI. Exit code 0 = pass.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def find_binary(explicit: str | None) -> str:
+    if explicit:
+        return explicit
+    env = os.environ.get("HS_BIN")
+    if env:
+        return env
+    for rel in ("rust/target/release/hiaer-spike", "target/release/hiaer-spike",
+                "rust/target/debug/hiaer-spike", "target/debug/hiaer-spike"):
+        cand = os.path.join(REPO, rel)
+        if os.path.isfile(cand) and os.access(cand, os.X_OK):
+            return cand
+    sys.exit("serve_smoke: no hiaer-spike binary (build with `cargo build "
+             "--release`, or pass --binary / set $HS_BIN)")
+
+
+class Client:
+    """Minimal line-protocol client over one TCP connection."""
+
+    def __init__(self, addr: tuple[str, int], timeout: float):
+        self.sock = socket.create_connection(addr, timeout=timeout)
+        self.sock.settimeout(timeout)
+        self.rfile = self.sock.makefile("r", encoding="utf-8", newline="\n")
+        self.wfile = self.sock.makefile("w", encoding="utf-8", newline="\n")
+        hello = self.recv()
+        assert hello.get("op") == "hello" and hello.get("ok"), f"bad greeting: {hello}"
+
+    def send(self, req: dict) -> None:
+        self.wfile.write(json.dumps(req, separators=(",", ":")) + "\n")
+        self.wfile.flush()
+
+    def recv(self) -> dict:
+        line = self.rfile.readline()
+        assert line, "server closed the connection unexpectedly"
+        return json.loads(line)
+
+    def request(self, req: dict) -> dict:
+        self.send(req)
+        resp = self.recv()
+        assert resp.get("ok"), f"{req.get('op')} failed: {resp}"
+        return resp
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+def client_task(i: int, addr: tuple[str, int], net: str, timeout: float,
+                errors: list[str]) -> None:
+    try:
+        c = Client(addr, timeout)
+        c.request({"op": "configure", "net": net, "seed": 7})
+        if i == 0:
+            # the rude client: fire a long batch and vanish mid-flight
+            c.send({"op": "step_many", "batch": [[0, 1] if s % 3 == 0 else []
+                                                 for s in range(200)]})
+            c.close()
+            return
+        resp = c.request({"op": "step_many",
+                          "batch": [[0, 1] if s % 2 == 0 else [] for s in range(50)]})
+        assert len(resp["spikes"]) == 50, f"client {i}: want 50 rows, got {len(resp['spikes'])}"
+        c.request({"op": "shutdown"})
+        c.close()
+    except Exception as e:  # noqa: BLE001 — collected and failed centrally
+        errors.append(f"client {i}: {type(e).__name__}: {e}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--binary", help="hiaer-spike binary (default: discover)")
+    ap.add_argument("--net", default=os.path.join(REPO, "testdata", "fig6_golden.hsn"))
+    ap.add_argument("--timeout", type=float, default=60.0,
+                    help="hard wall-clock bound for the whole smoke (s)")
+    args = ap.parse_args()
+    binary = find_binary(args.binary)
+    assert os.path.isfile(args.net), f"missing net fixture: {args.net}"
+
+    proc = subprocess.Popen(
+        [binary, "serve", "--listen", "127.0.0.1:0",
+         "--max-sessions", "8", "--concurrency", "2",
+         "--request-timeout-ms", "10000", "--drain-grace-ms", "10000"],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+    )
+    # hard bound: a wedged server gets killed and the smoke fails
+    watchdog = threading.Timer(args.timeout, proc.kill)
+    watchdog.daemon = True
+    watchdog.start()
+    try:
+        line = proc.stdout.readline()
+        assert line.startswith("listening on "), f"unexpected first line: {line!r}"
+        host, _, port = line.strip().rpartition(" ")[2].rpartition(":")
+        addr = (host, int(port))
+        print(f"serve_smoke: server up at {addr[0]}:{addr[1]}")
+
+        per_client_timeout = max(5.0, args.timeout / 4)
+        errors: list[str] = []
+        threads = [threading.Thread(target=client_task,
+                                    args=(i, addr, args.net, per_client_timeout, errors))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=per_client_timeout)
+            assert not t.is_alive(), "client thread wedged"
+        assert not errors, "client failures:\n  " + "\n  ".join(errors)
+        print("serve_smoke: 4 concurrent clients done (1 disconnected mid-batch)")
+
+        # the rude disconnect must not have hurt the server
+        c = Client(addr, per_client_timeout)
+        health = c.request({"op": "health"})
+        assert health.get("draining") is False, f"server draining early: {health}"
+        metrics = c.request({"op": "metrics"})
+        assert metrics.get("disconnects", 0) >= 1, f"mid-batch disconnect not seen: {metrics}"
+        assert metrics.get("steps_total", 0) >= 150, f"too few steps executed: {metrics}"
+        c.request({"op": "shutdown"})
+        c.close()
+        print(f"serve_smoke: healthy after the fault "
+              f"(steps_total={metrics.get('steps_total')}, "
+              f"disconnects={metrics.get('disconnects')})")
+
+        proc.send_signal(signal.SIGTERM)
+        out, err = proc.communicate(timeout=args.timeout)
+        assert proc.returncode == 0, (
+            f"server exited {proc.returncode} on SIGTERM\nstdout: {out}\nstderr: {err}")
+        assert "drained" in out, f"no drain confirmation on stdout: {out!r}"
+        print("serve_smoke: SIGTERM -> clean drain, exit 0. PASS")
+        return 0
+    except AssertionError as e:
+        print(f"serve_smoke: FAIL: {e}", file=sys.stderr)
+        return 1
+    finally:
+        watchdog.cancel()
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
