@@ -23,10 +23,12 @@ also accepted (e.g. ``RustSessionBackend(server_args=["--backend",
 `step(inputs)` runs one timestep; `step_many(schedule)` runs a whole
 stimulus schedule in one backend round trip. `export_hsn(path)`
 serialises the flattened network to the binary `.hsn` format that the
-Rust coordinator compiles into the HBM routing table
-(rust/src/model_fmt/hsn.rs mirrors the reader; synapses are written in
-canonical target-sorted order so both languages produce identical
-bytes).
+Rust coordinator compiles into the HBM routing table — by default the
+v2 sectioned layout the Rust side mmaps and loads zero-copy
+(``version=1`` keeps the legacy streamed format).
+rust/src/model_fmt/hsn.rs mirrors the readers and is the format spec;
+synapses are written in canonical target-sorted order so both languages
+produce identical bytes.
 """
 
 from __future__ import annotations
@@ -39,6 +41,7 @@ from .backend import make_backend
 from .neuron_models import ANN_neuron, LIF_neuron
 
 HSN_MAGIC = b"HSNET1\x00\x00"
+HSN_MAGIC_V2 = b"HSNET2\x00\x00"
 WEIGHT_MIN, WEIGHT_MAX = -(2**15), 2**15 - 1  # int16 synapses
 
 
@@ -227,25 +230,87 @@ class CRI_network:
 
     # --------------------------------------------------------------- export
 
-    def export_hsn(self, path: str, base_seed: int | None = None) -> None:
+    def export_hsn(self, path: str, base_seed: int | None = None,
+                   version: int = 2) -> None:
         """Write the flattened network in the binary .hsn format.
 
-        Per-source synapse lists are written in canonical target-sorted
-        order (stable, duplicates keep insertion order) — the same form
+        ``version=2`` (the default) emits the sectioned, 8-byte-aligned
+        mmap-able layout the Rust side loads zero-copy
+        (rust/src/model_fmt/hsn.rs module docs are the spec);
+        ``version=1`` emits the legacy streamed format. Per-source
+        synapse lists are written in canonical target-sorted order
+        (stable, duplicates keep insertion order) — the same form
         `rust/src/snn` normalises to, so export -> Rust load -> Rust
-        write reproduces identical bytes (pinned by the golden blob in
+        write reproduces identical bytes (pinned by the golden blobs in
         testdata/)."""
+        seed = int(base_seed if base_seed is not None else self.base_seed)
+        if version == 2:
+            blob = self._hsn_v2_bytes(seed)
+        elif version == 1:
+            blob = self._hsn_v1_bytes(seed)
+        else:
+            raise ValueError(f"unknown .hsn version {version!r} (options: 1, 2)")
+        with open(path, "wb") as f:
+            f.write(blob)
+
+    def _params_i4(self) -> np.ndarray:
+        return np.stack(
+            [self.theta, self.nu, self.lam, self.flags], axis=1
+        ).astype("<i4")
+
+    def _flat_csr(self):
+        """Flatten the adjacency into canonical CSR arrays: per-source
+        regions target-sorted (stable), neuron regions first, then axon
+        regions continuing the same offset sequence."""
+        targets: list[int] = []
+        weights: list[int] = []
+        neuron_off = [0]
+        for syns in self.neuron_syns:
+            for t, w in sorted(syns, key=lambda s: s[0]):
+                targets.append(t)
+                weights.append(w)
+            neuron_off.append(len(targets))
+        axon_off = [len(targets)]
+        for syns in self.axon_syns:
+            for t, w in sorted(syns, key=lambda s: s[0]):
+                targets.append(t)
+                weights.append(w)
+            axon_off.append(len(targets))
+        return neuron_off, axon_off, targets, weights
+
+    def _hsn_v2_bytes(self, seed: int) -> bytes:
+        neuron_off, axon_off, targets, weights = self._flat_csr()
+        sections = [
+            (1, 0, self._params_i4().tobytes()),                   # PARAMS
+            (2, 0, np.asarray(neuron_off, "<u4").tobytes()),       # NEURON_OFF
+            (3, 0, np.asarray(axon_off, "<u4").tobytes()),         # AXON_OFF
+            (4, 0, np.asarray(targets, "<u4").tobytes()),          # SYN_TARGETS
+            (5, 0, np.asarray(weights, "<i2").tobytes()),          # SYN_WEIGHTS
+            (6, 0, np.asarray(self.out_idx, "<u4").tobytes()),     # OUTPUTS
+        ]
+        out = bytearray()
+        out += HSN_MAGIC_V2
+        out += struct.pack(
+            "<IIIIiI", self.n_axons, self.n_neurons, len(self.outputs),
+            len(sections), seed, 0,
+        )
+        # TOC: offsets assigned section-by-section with 8-byte alignment
+        off = len(out) + 24 * len(sections)
+        for sid, aux, payload in sections:
+            off = (off + 7) & ~7
+            out += struct.pack("<IIQQ", sid, aux, off, len(payload))
+            off += len(payload)
+        for _, _, payload in sections:
+            out += b"\x00" * (-len(out) % 8)
+            out += payload
+        return bytes(out)
+
+    def _hsn_v1_bytes(self, seed: int) -> bytes:
         n, a = self.n_neurons, self.n_axons
         out = bytearray()
         out += HSN_MAGIC
-        out += struct.pack(
-            "<IIIIi", a, n, len(self.outputs), 0,
-            int(base_seed if base_seed is not None else self.base_seed),
-        )
-        params = np.stack(
-            [self.theta, self.nu, self.lam, self.flags], axis=1
-        ).astype("<i4")
-        out += params.tobytes()
+        out += struct.pack("<IIIIi", a, n, len(self.outputs), 0, seed)
+        out += self._params_i4().tobytes()
 
         def pack_adj(adj):
             buf = bytearray()
@@ -263,5 +328,4 @@ class CRI_network:
         out += pack_adj(self.neuron_syns)
         out += pack_adj(self.axon_syns)
         out += np.asarray(self.out_idx, "<u4").tobytes()
-        with open(path, "wb") as f:
-            f.write(bytes(out))
+        return bytes(out)

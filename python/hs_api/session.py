@@ -257,7 +257,12 @@ class SessionClient:
         """Build/replace the server-side simulator. ``workers`` sets the
         worker-thread count of the pooled Rust backends (>= 1; the
         server rejects 0 with a ``config`` error). Spike trains are
-        worker-count-invariant — this only tunes throughput."""
+        worker-count-invariant — this only tunes throughput.
+
+        The response dict includes the server's cold-start breakdown:
+        ``load_ms`` (network load — mmap + validate for ``.hsn`` v2,
+        full parse for v1), ``compile_ms`` (partition + HBM compile)
+        and ``net_bytes`` (on-disk file size)."""
         fields = {"net": net_path}
         if seed is not None:
             fields["seed"] = int(seed)

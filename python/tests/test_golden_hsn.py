@@ -32,11 +32,28 @@ def test_export_hsn_reproduces_golden_bytes(tmp_path):
         want = f.read()
     net = golden_network()
     p = tmp_path / "fig6.hsn"
-    net.export_hsn(str(p))
+    net.export_hsn(str(p), version=1)
     got = p.read_bytes()
     assert got == want, (
         "export_hsn bytes diverged from testdata/fig6_golden.hsn — if the "
         "format changed deliberately, regenerate with "
+        "python3 python/tools/gen_golden_hsn.py and update the Rust side"
+    )
+
+
+def test_export_hsn_v2_reproduces_golden_bytes(tmp_path):
+    """The default (v2) export is byte-pinned cross-language too: the
+    Rust side asserts `hsn_v2_bytes` reproduces the same blob."""
+    with open(os.path.join(TESTDATA, "fig6_golden_v2.hsn"), "rb") as f:
+        want = f.read()
+    net = golden_network()
+    p = tmp_path / "fig6_v2.hsn"
+    net.export_hsn(str(p))  # version=2 is the default
+    got = p.read_bytes()
+    assert got[:8] == b"HSNET2\x00\x00"
+    assert got == want, (
+        "export_hsn v2 bytes diverged from testdata/fig6_golden_v2.hsn — "
+        "if the format changed deliberately, regenerate with "
         "python3 python/tools/gen_golden_hsn.py and update the Rust side"
     )
 

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from compile.kernels import ref
 from hs_api import ANN_neuron, CRI_network, LIF_neuron
-from hs_api.network import HSN_MAGIC
+from hs_api.network import HSN_MAGIC, HSN_MAGIC_V2
 from hs_api import simulator as hs_sim
 
 
@@ -134,7 +134,7 @@ def test_hsn_export_canonical_target_sorted(tmp_path):
     }
     net = CRI_network({"in": [("x", 1)]}, neurons, outputs=["x"])
     p = tmp_path / "sorted.hsn"
-    net.export_hsn(str(p))
+    net.export_hsn(str(p), version=1)
     blob = p.read_bytes()
     n = 3
     # first adjacency region: neuron 'a' (count 0), 'b' (count 0), then
@@ -151,7 +151,7 @@ def test_hsn_export_canonical_target_sorted(tmp_path):
 def test_hsn_export_header(tmp_path):
     net = fig6_network(base_seed=7)
     p = tmp_path / "fig6.hsn"
-    net.export_hsn(str(p))
+    net.export_hsn(str(p), version=1)
     blob = p.read_bytes()
     assert blob[:8] == HSN_MAGIC
     a, n, o, reserved, seed = struct.unpack_from("<IIIIi", blob, 8)
@@ -163,3 +163,38 @@ def test_hsn_export_header(tmp_path):
     assert params[names.index("a"), 0] == 3  # theta
     assert params[names.index("c"), 2] == 2  # lam
     assert params[names.index("d"), 3] == 2  # ANN stochastic -> FLAG_NOISE
+
+
+def test_hsn_export_v2_default_layout(tmp_path):
+    """The default export is the v2 sectioned layout: magic + header +
+    TOC whose sections are 8-byte aligned, ascending and exactly sized
+    (rust/src/model_fmt/hsn.rs is the spec)."""
+    net = fig6_network(base_seed=7)
+    p = tmp_path / "fig6_v2.hsn"
+    net.export_hsn(str(p))
+    blob = p.read_bytes()
+    assert blob[:8] == HSN_MAGIC_V2
+    a, n, o, n_sections, seed, reserved = struct.unpack_from("<IIIIiI", blob, 8)
+    assert (a, n, o, seed, reserved) == (2, 4, 2, 7, 0)
+    assert n_sections == 6
+    entries = [struct.unpack_from("<IIQQ", blob, 32 + 24 * k)
+               for k in range(n_sections)]
+    assert [e[0] for e in entries] == [1, 2, 3, 4, 5, 6]
+    prev_end = 32 + 24 * n_sections
+    for sid, aux, off, length in entries:
+        assert off % 8 == 0
+        assert off >= prev_end
+        assert off + length <= len(blob)
+        prev_end = off + length
+    assert prev_end == len(blob)
+    # exact section sizes from the header counts
+    e = sum(len(s) for s in net.neuron_syns) + sum(len(s) for s in net.axon_syns)
+    assert [ent[3] for ent in entries] == [
+        16 * n, 4 * (n + 1), 4 * (a + 1), 4 * e, 2 * e, 4 * o,
+    ]
+    # params section reinterprets directly
+    params_off = entries[0][2]
+    params = np.frombuffer(blob, "<i4", count=4 * n, offset=params_off).reshape(n, 4)
+    names = net.neuron_keys
+    assert params[names.index("a"), 0] == 3  # theta
+    assert params[names.index("c"), 2] == 2  # lam

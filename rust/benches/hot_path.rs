@@ -10,7 +10,10 @@
 //!    chunk-parallel sweep rate is measured as idle `Backend::Pool`
 //!    facade steps (sweep + empty route) since PR 3; since PR 6 the
 //!    record also carries the shared-server serving tier's aggregate
-//!    steps/s over 1 and 4 concurrent TCP sessions;
+//!    steps/s over 1 and 4 concurrent TCP sessions; since PR 7 it also
+//!    carries the cold-start breakdown (v1 parse vs zero-copy v2 mmap
+//!    load, compile-from-view time, process peak RSS) and asserts the
+//!    mmap load beats the parse;
 //! 1. event-driven core engine steps/s across network sizes (rust
 //!    backend), synaptic events/s;
 //! 2. dense software-simulator baseline (the paper's Fig-8 CPU
@@ -28,6 +31,7 @@ use std::time::Instant;
 use hiaer_spike::energy::EnergyModel;
 use hiaer_spike::engine::{mask_words, CoreParams, RustBackend, UpdateBackend};
 use hiaer_spike::hbm::{HbmImage, HbmSim, Pointer, SlotStrategy};
+use hiaer_spike::model_fmt::{open_netfile, read_hsn, write_hsn, write_hsn_v1};
 use hiaer_spike::partition::CoreCapacity;
 use hiaer_spike::sim::{Backend, SimConfig, Simulator};
 use hiaer_spike::snn::{EdgeList, Network, NeuronModel, FLAG_LIF, FLAG_NOISE};
@@ -42,6 +46,32 @@ fn rate(sim: &mut dyn Simulator, steps: usize, n_axons: usize) -> f64 {
         sim.step(&drive(s, n_axons)).unwrap();
     }
     steps as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Process-lifetime peak resident set (VmHWM) in MB from
+/// `/proc/self/status`; 0.0 where procfs is unavailable.
+fn peak_rss_mb() -> f64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|kb| kb.parse::<f64>().ok())
+        })
+        .map(|kb| kb / 1024.0)
+        .unwrap_or(0.0)
+}
+
+/// Best-of-3 wall time for `f`, in milliseconds.
+fn best_of_3_ms(f: &mut dyn FnMut()) -> f64 {
+    (0..3)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .fold(f64::INFINITY, f64::min)
 }
 
 /// Random net: n neurons, avg degree d, theta tuned for sustained sparse
@@ -328,7 +358,7 @@ fn main() {
     let serve_net = make_net(sn, sd_deg, 42, false);
     let serve_axons = serve_net.n_axons();
     let hsn = std::env::temp_dir().join(format!("hotpath_serve_{}.hsn", std::process::id()));
-    hiaer_spike::model_fmt::write_hsn(&serve_net, &hsn).unwrap();
+    write_hsn(&serve_net, &hsn).unwrap();
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -394,6 +424,40 @@ fn main() {
          {serve4_rate:>10.0} aggregate over 4 sessions ({serve_scaleup:.2}x, n = {sn})"
     );
 
+    // cold start: serving the same headline net from disk — the v1
+    // per-synapse parse into an owned CSR vs the v2 mmap + validate
+    // (`NetFile`, zero-copy), then the compile phase from the mapped
+    // view. VmHWM is the process-lifetime peak RSS, recorded so the
+    // trajectory shows the memory trend as load paths change.
+    let cold_v1 = std::env::temp_dir().join(format!("hotpath_cold_v1_{}.hsn", std::process::id()));
+    let cold_v2 = std::env::temp_dir().join(format!("hotpath_cold_v2_{}.hsn", std::process::id()));
+    write_hsn_v1(&net, &cold_v1).unwrap();
+    write_hsn(&net, &cold_v2).unwrap();
+    let cold_net_bytes = std::fs::metadata(&cold_v2).unwrap().len();
+    let mut sink = 0usize; // keeps the timed loads observable
+    let cold_v1_load_ms = best_of_3_ms(&mut || sink += read_hsn(&cold_v1).unwrap().n_synapses());
+    let cold_v2_load_ms =
+        best_of_3_ms(&mut || sink += open_netfile(&cold_v2).unwrap().view().syn_targets.len());
+    let mapped = open_netfile(&cold_v2).unwrap();
+    let cold_compile_ms = best_of_3_ms(&mut || {
+        let e = SimConfig::new(mapped.clone()).backend(Backend::Rust).build().unwrap();
+        sink += e.backend_name().len();
+    });
+    assert!(sink > 0);
+    assert!(
+        cold_v2_load_ms < cold_v1_load_ms,
+        "v2 mmap load ({cold_v2_load_ms:.2} ms) must beat the v1 parse ({cold_v1_load_ms:.2} ms)"
+    );
+    std::fs::remove_file(&cold_v1).ok();
+    std::fs::remove_file(&cold_v2).ok();
+    let cold_speedup = cold_v1_load_ms / cold_v2_load_ms;
+    let rss_mb = peak_rss_mb();
+    println!(
+        "  cold start      : {cold_v1_load_ms:>10.2} ms v1 parse, \
+         {cold_v2_load_ms:>10.3} ms v2 mmap ({cold_speedup:.0}x), \
+         compile {cold_compile_ms:.1} ms, peak RSS {rss_mb:.0} MB"
+    );
+
     // ---- append one record to the perf trajectory (one entry per PR)
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -447,6 +511,15 @@ fn main() {
         ("serve_sessions1_steps_per_s", Json::Num(serve1_rate)),
         ("serve_sessions4_steps_per_s", Json::Num(serve4_rate)),
         ("serve_scaleup", Json::Num(serve_scaleup)),
+        // cold start on the headline net: v1 per-synapse parse vs the
+        // zero-copy v2 mmap+validate, compile from the mapped view,
+        // and the process peak RSS (VmHWM, MB) at measurement time
+        ("coldstart_net_bytes", Json::Int(cold_net_bytes as i64)),
+        ("coldstart_v1_load_ms", Json::Num(cold_v1_load_ms)),
+        ("coldstart_v2_load_ms", Json::Num(cold_v2_load_ms)),
+        ("coldstart_load_speedup", Json::Num(cold_speedup)),
+        ("coldstart_compile_ms", Json::Num(cold_compile_ms)),
+        ("peak_rss_mb", Json::Num(rss_mb)),
     ]));
     let n_records = records.len();
     let doc = obj(vec![

@@ -27,7 +27,7 @@ use crate::engine::{CoreEngine, RustBackend};
 use crate::hbm::SlotStrategy;
 use crate::partition::{ClusterTopology, CoreCapacity, Partition};
 use crate::router::{split_network, FabricModel, HiaerRouter, RouterStats};
-use crate::snn::Network;
+use crate::snn::NetView;
 
 /// Whole-cluster cost of a run: the slowest core bounds the latency (all
 /// cores run in lockstep), energies add.
@@ -68,13 +68,16 @@ impl MultiCoreEngine {
     /// carries the worker pool's knobs (sweep chunk words, route
     /// granularity, worker count; defaults via
     /// [`PoolOptions::default`]).
-    pub(crate) fn new(
-        net: &Network,
+    pub(crate) fn new<'a>(
+        net: impl Into<NetView<'a>>,
         topology: ClusterTopology,
         cap: CoreCapacity,
         strategy: SlotStrategy,
         pool_opts: PoolOptions,
     ) -> Result<Self> {
+        // convert once; the Copy view threads through partition + split so
+        // an mmap-backed global net is never copied to the heap here
+        let net: NetView<'_> = net.into();
         let partition =
             Partition::compute(net, topology, cap).map_err(anyhow::Error::msg)?;
         let split = split_network(net, &partition);
@@ -298,7 +301,7 @@ impl Simulator for MultiCoreEngine {
 mod tests {
     use super::*;
     use crate::engine::DenseEngine;
-    use crate::snn::{NetworkBuilder, NeuronModel};
+    use crate::snn::{Network, NetworkBuilder, NeuronModel};
     use crate::util::prng::Xorshift32;
     use crate::util::ptest;
 

@@ -484,7 +484,7 @@ impl<B: UpdateBackend> CorePool<B> {
 use crate::energy::EnergyModel;
 use crate::hbm::SlotStrategy;
 use crate::sim::{CostSummary, SimError, Simulator, StepResult};
-use crate::snn::Network;
+use crate::snn::{NetView, Network};
 
 /// [`Simulator`] session running one core chunk-parallel across the
 /// whole worker pool ([`crate::sim::Backend::Pool`]): both the membrane
@@ -500,11 +500,12 @@ pub struct PoolSim {
 }
 
 impl PoolSim {
-    pub(crate) fn new(
-        net: &Network,
+    pub(crate) fn new<'a>(
+        net: impl Into<NetView<'a>>,
         strategy: SlotStrategy,
         opts: PoolOptions,
     ) -> anyhow::Result<Self> {
+        let net: NetView<'_> = net.into();
         let engine = CoreEngine::new(net, strategy, RustBackend)?;
         let pool = CorePool::with_options(vec![engine], opts);
         Ok(Self { pool, inputs: vec![Vec::new()], n_axons: net.n_axons() })

@@ -51,7 +51,7 @@
 //! Cross-backend parity is enforced by `rust/tests/sim_facade.rs`.
 
 use crate::hbm::{HbmImage, Pointer};
-use crate::snn::{Network, FLAG_LIF, FLAG_NOISE};
+use crate::snn::{NetView, FLAG_LIF, FLAG_NOISE};
 use crate::util::prng::{noise17, shift_noise};
 
 /// Number of `u64` bitmask words covering `n` neurons.
@@ -97,7 +97,8 @@ pub struct CoreParams {
 }
 
 impl CoreParams {
-    pub fn from_network(net: &Network) -> Self {
+    pub fn from_network<'a>(net: impl Into<NetView<'a>>) -> Self {
+        let net: NetView<'_> = net.into();
         let n = net.n_neurons();
         let mut p = CoreParams {
             theta: Vec::with_capacity(n),
@@ -105,7 +106,7 @@ impl CoreParams {
             lam: Vec::with_capacity(n),
             flags: Vec::with_capacity(n),
         };
-        for m in &net.params {
+        for m in net.params {
             p.theta.push(m.theta);
             p.nu.push(m.nu);
             p.lam.push(m.lam);

@@ -59,7 +59,7 @@
 use crate::energy::{CostReport, EnergyModel};
 use crate::engine::backend::{extract_fired, mask_words, CoreParams, UpdateBackend};
 use crate::hbm::{AccessCounters, HbmImage, HbmSim, Pointer, SlotStrategy};
-use crate::snn::Network;
+use crate::snn::NetView;
 use crate::util::prng::mix_seed;
 
 /// Raw pointers into one engine's sweep state, handed to `CorePool`
@@ -135,15 +135,23 @@ pub struct CoreEngine<B: UpdateBackend> {
 impl<B: UpdateBackend> CoreEngine<B> {
     /// Crate-private: external callers construct engines through
     /// [`crate::sim::SimConfig`] (the facade is the public contract).
-    pub(crate) fn new(net: &Network, strategy: SlotStrategy, backend: B) -> anyhow::Result<Self> {
+    /// Generic over the borrowed-CSR view, so an mmap-backed `.hsn` v2
+    /// compiles straight from the mapping.
+    pub(crate) fn new<'a>(
+        net: impl Into<NetView<'a>>,
+        strategy: SlotStrategy,
+        backend: B,
+    ) -> anyhow::Result<Self> {
+        let net: NetView<'_> = net.into();
         let image = HbmImage::compile(net, strategy)?;
         Ok(Self::from_image(net, image, backend))
     }
 
-    pub(crate) fn from_image(net: &Network, image: HbmImage, backend: B) -> Self {
+    pub(crate) fn from_image<'a>(net: impl Into<NetView<'a>>, image: HbmImage, backend: B) -> Self {
+        let net: NetView<'_> = net.into();
         let n = net.n_neurons();
         let mut is_output = vec![false; n];
-        for &o in &net.outputs {
+        for &o in net.outputs {
             is_output[o as usize] = true;
         }
         Self {
@@ -471,7 +479,7 @@ mod tests {
     use super::*;
     use crate::engine::backend::RustBackend;
     use crate::engine::dense::DenseEngine;
-    use crate::snn::{NetworkBuilder, NeuronModel};
+    use crate::snn::{Network, NetworkBuilder, NeuronModel};
     use crate::util::prng::Xorshift32;
     use crate::util::ptest;
 

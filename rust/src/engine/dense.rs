@@ -4,7 +4,7 @@
 //! artifact.
 
 use crate::engine::backend::{mask_bit, mask_words, CoreParams, RustBackend, UpdateBackend};
-use crate::snn::Network;
+use crate::snn::NetView;
 use crate::util::prng::mix_seed;
 
 /// One core's network as dense int32 weight matrices.
@@ -30,7 +30,8 @@ pub struct DenseEngine {
 impl DenseEngine {
     /// Crate-private: external callers construct engines through
     /// [`crate::sim::SimConfig`] with [`crate::sim::Backend::Dense`].
-    pub(crate) fn new(net: &Network) -> Self {
+    pub(crate) fn new<'a>(net: impl Into<NetView<'a>>) -> Self {
+        let net: NetView<'_> = net.into();
         let n = net.n_neurons();
         let a = net.n_axons();
         let mut w_neuron = vec![0i32; n * n];
@@ -126,9 +127,10 @@ pub struct DenseSim {
 }
 
 impl DenseSim {
-    pub(crate) fn new(net: &Network) -> Self {
+    pub(crate) fn new<'a>(net: impl Into<NetView<'a>>) -> Self {
+        let net: NetView<'_> = net.into();
         let mut is_output = vec![false; net.n_neurons()];
-        for &o in &net.outputs {
+        for &o in net.outputs {
             is_output[o as usize] = true;
         }
         Self {
@@ -203,7 +205,7 @@ impl Simulator for DenseSim {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::snn::{NetworkBuilder, NeuronModel};
+    use crate::snn::{Network, NetworkBuilder, NeuronModel};
 
     fn fig6() -> Network {
         let lif_ab = NeuronModel::lif(3, 0, 63, false).unwrap();

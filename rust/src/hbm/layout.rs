@@ -5,7 +5,7 @@ use std::collections::HashMap;
 use thiserror::Error;
 
 use super::{Pointer, SynEntry, CORE_HBM_BYTES, ROW_SLOTS, SLOT_BYTES, SYN_OUTPUT, SYN_VALID};
-use crate::snn::{Network, NeuronModel};
+use crate::snn::{NetView, NeuronModel};
 
 #[derive(Debug, Error)]
 pub enum LayoutError {
@@ -93,7 +93,15 @@ impl HbmImage {
     }
 
     /// Compile a network (one core's partition) into an HBM image.
-    pub fn compile(net: &Network, strategy: SlotStrategy) -> Result<HbmImage, LayoutError> {
+    ///
+    /// Generic over the borrowed-CSR view: pass `&Network` or an
+    /// mmap-backed [`crate::model_fmt::NetFile`] view — compilation
+    /// reads the CSR slices in place either way.
+    pub fn compile<'a>(
+        net: impl Into<NetView<'a>>,
+        strategy: SlotStrategy,
+    ) -> Result<HbmImage, LayoutError> {
+        let net: NetView<'_> = net.into();
         net.validate().map_err(LayoutError::BadNetwork)?;
         let n = net.n_neurons();
         let a = net.n_axons();
@@ -171,7 +179,7 @@ impl HbmImage {
 
         let is_output: Vec<bool> = {
             let mut v = vec![false; n];
-            for &o in &net.outputs {
+            for &o in net.outputs {
                 v[o as usize] = true;
             }
             v
@@ -249,7 +257,8 @@ impl HbmImage {
     /// 2. every network synapse appears exactly once, slot-aligned;
     /// 3. every valid entry lies inside exactly one region;
     /// 4. output neurons carry the flag; leaf neurons have the dummy row.
-    pub fn validate(&self, net: &Network) -> Result<(), String> {
+    pub fn validate<'a>(&self, net: impl Into<NetView<'a>>) -> Result<(), String> {
+        let net: NetView<'_> = net.into();
         let nrows = self.syn_rows.len();
         let mut owner: Vec<i64> = vec![-1; nrows];
         let mut check_region = |ptr: &Pointer, id: i64| -> Result<(), String> {
@@ -327,7 +336,7 @@ impl HbmImage {
 
         // output flags
         let mut is_output = vec![false; self.n_neurons];
-        for &o in &net.outputs {
+        for &o in net.outputs {
             is_output[o as usize] = true;
         }
         for (i, p) in self.neuron_ptr.iter().enumerate() {
@@ -351,7 +360,7 @@ impl HbmImage {
 }
 
 /// Choose each neuron's slot (membrane lane).
-fn assign_slots(net: &Network, strategy: SlotStrategy) -> Vec<u8> {
+fn assign_slots(net: NetView<'_>, strategy: SlotStrategy) -> Vec<u8> {
     let n = net.n_neurons();
     match strategy {
         SlotStrategy::Modulo => (0..n).map(|i| (i % ROW_SLOTS) as u8).collect(),

@@ -25,7 +25,7 @@ use hiaer_spike::convert::{convert, BiasMode};
 use hiaer_spike::energy::EnergyModel;
 use hiaer_spike::hbm::HbmImage;
 use hiaer_spike::model_fmt::{hsl::read_hsl, read_hsn, write_hsn};
-use hiaer_spike::sim::{Backend, SimConfig, SimOptions, Simulator};
+use hiaer_spike::sim::{Backend, SimOptions, Simulator};
 use hiaer_spike::util::cli::Args;
 
 fn main() {
@@ -326,7 +326,7 @@ fn cmd_bench_step(args: &Args) -> Result<()> {
     if opts.topology.n_cores() > 1 {
         let mut cluster_opts = opts;
         cluster_opts.backend = Backend::Rust;
-        let mut mc = SimConfig { net, opts: cluster_opts }.build()?;
+        let mut mc = cluster_opts.into_config(net).build()?;
         let t0 = Instant::now();
         for _ in 0..steps {
             mc.step(&axons)?;

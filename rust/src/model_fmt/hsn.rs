@@ -1,6 +1,67 @@
-//! `.hsn` flattened-network format.
+//! `.hsn` flattened-network format: v1 (streamed, count-prefixed) and
+//! v2 (sectioned, mmap-able, zero-copy).
 //!
-//! Layout (little-endian), mirrored by `hs_api.network.export_hsn`:
+//! Both versions are little-endian and mirrored byte-for-byte by
+//! `hs_api.network.export_hsn`; `testdata/fig6_golden.hsn` (v1) and
+//! `testdata/fig6_golden_v2.hsn` pin the cross-language contract
+//! (`rust/tests/hsn_golden.rs` / `python/tests/test_golden_hsn.py`).
+//!
+//! # v2 on-disk layout (`HSNET2`) — the default write format
+//!
+//! A 32-byte header, a table of contents, then the CSR arrays stored
+//! contiguously in file order. Loading is `mmap` + bounds/alignment
+//! validation + reinterpret: zero per-synapse parsing, and a shard can
+//! map only the byte range its offset-table slice covers
+//! (see [`crate::model_fmt::NetFile`]).
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic "HSNET2\0\0"
+//! 8       4     u32 n_axons
+//! 12      4     u32 n_neurons
+//! 16      4     u32 n_outputs
+//! 20      4     u32 n_sections
+//! 24      4     i32 base_seed
+//! 28      4     u32 reserved (0)
+//! 32      24*k  table of contents: k = n_sections entries
+//! ...           section payloads, each starting at the next 8-byte
+//!               boundary (zero padding between), in TOC order
+//! ```
+//!
+//! Each TOC entry is 24 bytes: `u32 id, u32 aux, u64 offset, u64 len`
+//! (`offset` absolute from the file start, `len` exact payload bytes,
+//! `aux` section-specific — 0 unless noted). Entries are listed in
+//! ascending file order; every `offset` is a multiple of 8; payloads
+//! never overlap. Unknown section ids are skipped by readers (forward
+//! compatibility); the canonical writer emits ids in ascending order:
+//!
+//! | id | section     | payload                                        |
+//! |----|-------------|------------------------------------------------|
+//! | 1  | PARAMS      | n_neurons x (i32 theta, i32 nu, i32 lam, u32 flags) — `[NeuronModel]` verbatim |
+//! | 2  | NEURON_OFF  | (n_neurons + 1) x u32 CSR offsets              |
+//! | 3  | AXON_OFF    | (n_axons + 1) x u32 CSR offsets                |
+//! | 4  | SYN_TARGETS | E x u32 flat synapse targets                   |
+//! | 5  | SYN_WEIGHTS | E x i16 flat synapse weights                   |
+//! | 6  | OUTPUTS     | n_outputs x u32 monitored neuron ids           |
+//! | 7  | QWEIGHTS    | f32 scale, then E x i8 quantized codes; `aux` = bits (2..=8). Replaces SYN_WEIGHTS. |
+//!
+//! `E` (the synapse count) is `SYN_TARGETS.len / 4` and must equal the
+//! last `AXON_OFF` entry. Exactly one of SYN_WEIGHTS / QWEIGHTS is
+//! present. Per-source regions must already be in canonical
+//! target-sorted order — v2 readers **validate** sortedness and reject
+//! unsorted files ([`HsnError::Unsorted`]) instead of re-sorting.
+//!
+//! ## Quantized weights (QWEIGHTS)
+//!
+//! Weights quantized to `bits`-bit signed codes with one global scale
+//! (the dynamic-alpha scheme of `python/train/qat.py`):
+//! `scale = max|w| / (2^(bits-1) - 1)` (1.0 for an all-zero net),
+//! `code = round(w / scale)`, stored as one i8 each. Readers
+//! reconstruct `w = clamp(round(code * scale))` into an owned i16
+//! buffer (offsets/targets stay zero-copy). Lossy by design — the
+//! fig5 accuracy-vs-bits sweep measures the cost.
+//!
+//! # v1 layout (`HSNET1`) — legacy, still read
 //!
 //! ```text
 //! magic    8B  "HSNET1\0\0"
@@ -12,25 +73,76 @@
 //! outputs  n_outputs x u32
 //! ```
 //!
-//! Both writers emit each per-source region in **canonical
-//! target-sorted order** (`Network::sort_synapses` here, the sorted
-//! `pack_adj` in `hs_api.network.export_hsn`), so the same network
-//! produces identical bytes from either language —
-//! `testdata/fig6_golden.hsn` pins this cross-language
-//! (`rust/tests/hsn_golden.rs` / `python/tests/test_golden_hsn.py`).
+//! v1 requires a full streaming parse into freshly allocated CSR
+//! arrays. Writers of either version emit canonical target-sorted
+//! per-source regions; the v1 reader validates sortedness and falls
+//! back to re-sorting only for legacy files that predate the canonical
+//! contract.
 
 use std::fs::File;
 use std::io::{BufReader, Write as _};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
+use thiserror::Error;
 
 use super::{Reader, Writer};
-use crate::snn::{Network, NeuronModel};
+use crate::snn::{NetView, Network, NeuronModel};
 
 pub const HSN_MAGIC: &[u8; 8] = b"HSNET1\x00\x00";
+pub const HSN_MAGIC_V2: &[u8; 8] = b"HSNET2\x00\x00";
 
-pub fn read_hsn<P: AsRef<Path>>(path: P) -> Result<Network> {
+/// v2 section ids (see the module docs' section table).
+pub mod sec {
+    pub const PARAMS: u32 = 1;
+    pub const NEURON_OFF: u32 = 2;
+    pub const AXON_OFF: u32 = 3;
+    pub const SYN_TARGETS: u32 = 4;
+    pub const SYN_WEIGHTS: u32 = 5;
+    pub const OUTPUTS: u32 = 6;
+    pub const QWEIGHTS: u32 = 7;
+}
+
+/// Header + TOC sizes (bytes).
+pub(crate) const V2_HEADER_BYTES: usize = 32;
+pub(crate) const V2_TOC_ENTRY_BYTES: usize = 24;
+/// TOC sanity cap — far above any defined section count, low enough
+/// that a corrupt header cannot demand a huge TOC read.
+const V2_MAX_SECTIONS: u32 = 64;
+
+/// Typed `.hsn` v2 validation errors. Every malformed input maps to one
+/// of these — never a panic or an out-of-bounds reinterpret.
+#[derive(Debug, Error)]
+pub enum HsnError {
+    #[error("I/O error on .hsn file: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad .hsn magic {found:?} (expected HSNET1/HSNET2)")]
+    BadMagic { found: [u8; 8] },
+    #[error(".hsn truncated: need {need} bytes, file has {have}")]
+    Truncated { need: u64, have: u64 },
+    #[error("malformed .hsn header: {0}")]
+    BadHeader(String),
+    #[error("section {id}: offset {offset} not 8-byte aligned")]
+    Misaligned { id: u32, offset: u64 },
+    #[error("section {id} at offset {offset} overlaps the previous section or is out of TOC order")]
+    Overlap { id: u32, offset: u64 },
+    #[error("duplicate section id {0}")]
+    DuplicateSection(u32),
+    #[error("missing required section id {0}")]
+    MissingSection(u32),
+    #[error("section {id}: length {got} bytes, expected {expect}")]
+    BadSectionLen { id: u32, expect: u64, got: u64 },
+    #[error("bad quantized-weight encoding: {0}")]
+    BadQuant(String),
+    #[error("invalid network structure: {0}")]
+    Invalid(String),
+    #[error("per-source synapse regions not target-sorted (v2 requires canonical order)")]
+    Unsorted,
+}
+
+// ---- v1 ------------------------------------------------------------------
+
+fn read_hsn_v1<P: AsRef<Path>>(path: P) -> Result<Network> {
     let f = File::open(&path)
         .with_context(|| format!("opening {}", path.as_ref().display()))?;
     let mut r = Reader::new(BufReader::new(f));
@@ -94,12 +206,21 @@ pub fn read_hsn<P: AsRef<Path>>(path: P) -> Result<Network> {
 
     let mut net =
         Network { params, syn_targets, syn_weights, neuron_off, axon_off, outputs, base_seed };
-    net.sort_synapses();
+    // Writers emit canonical target-sorted regions; validate instead of
+    // unconditionally re-sorting (O(E) scan vs O(E log E) sort on every
+    // cold start). The sort survives only as the legacy fallback for
+    // pre-canonical v1 files.
+    if !net.view().is_sorted() {
+        net.sort_synapses();
+    }
     net.validate().map_err(|e| anyhow::anyhow!("invalid .hsn: {e}"))?;
     Ok(net)
 }
 
-pub fn write_hsn<P: AsRef<Path>>(net: &Network, path: P) -> Result<()> {
+/// Write `net` in the **v1** format (legacy interchange; see module
+/// docs). New code should prefer [`write_hsn`] (v2).
+pub fn write_hsn_v1<'a, P: AsRef<Path>>(net: impl Into<NetView<'a>>, path: P) -> Result<()> {
+    let net: NetView<'_> = net.into();
     let mut w = Writer::new();
     w.buf.extend_from_slice(HSN_MAGIC);
     w.u32(net.n_axons() as u32);
@@ -107,7 +228,7 @@ pub fn write_hsn<P: AsRef<Path>>(net: &Network, path: P) -> Result<()> {
     w.u32(net.outputs.len() as u32);
     w.u32(0);
     w.i32(net.base_seed as i32);
-    for p in &net.params {
+    for p in net.params {
         w.i32(p.theta);
         w.i32(p.nu);
         w.i32(p.lam);
@@ -125,7 +246,7 @@ pub fn write_hsn<P: AsRef<Path>>(net: &Network, path: P) -> Result<()> {
             w.i16(wgt);
         }
     }
-    for &o in &net.outputs {
+    for &o in net.outputs {
         w.u32(o);
     }
     let mut f = File::create(&path)
@@ -134,20 +255,379 @@ pub fn write_hsn<P: AsRef<Path>>(net: &Network, path: P) -> Result<()> {
     Ok(())
 }
 
+// ---- v2 writer -----------------------------------------------------------
+
+fn align8(off: usize) -> usize {
+    off.next_multiple_of(8)
+}
+
+/// Serialize a network to the canonical v2 byte image (see module docs;
+/// identical to `hs_api.network.export_hsn(version=2)`).
+pub fn hsn_v2_bytes<'a>(net: impl Into<NetView<'a>>) -> Vec<u8> {
+    v2_bytes_with_weights(net.into(), None)
+}
+
+/// v2 bytes with the weights quantized to `bits`-bit codes (QWEIGHTS
+/// section, lossy — module docs). `bits` must be in `2..=8`.
+pub fn hsn_v2_bytes_quantized<'a>(
+    net: impl Into<NetView<'a>>,
+    bits: u32,
+) -> Result<Vec<u8>, HsnError> {
+    if !(2..=8).contains(&bits) {
+        return Err(HsnError::BadQuant(format!("bits {bits} outside 2..=8")));
+    }
+    let net: NetView<'_> = net.into();
+    let (scale, codes) = quantize_weights(net.syn_weights, bits);
+    Ok(v2_bytes_with_weights(net, Some((bits, scale, codes))))
+}
+
+/// One global scale + per-synapse signed codes for `bits`-bit storage.
+pub(crate) fn quantize_weights(weights: &[i16], bits: u32) -> (f32, Vec<i8>) {
+    let qmax = (1i32 << (bits - 1)) - 1;
+    let wmax = weights.iter().map(|&w| (w as i32).abs()).max().unwrap_or(0);
+    let scale = if wmax == 0 { 1.0f32 } else { wmax as f32 / qmax as f32 };
+    let codes = weights
+        .iter()
+        .map(|&w| (w as f32 / scale).round().clamp(-(qmax as f32), qmax as f32) as i8)
+        .collect();
+    (scale, codes)
+}
+
+/// Reconstruct i16 weights from quantized codes (reader side).
+pub(crate) fn dequantize_weights(codes: &[i8], scale: f32) -> Vec<i16> {
+    codes
+        .iter()
+        .map(|&q| (q as f32 * scale).round().clamp(i16::MIN as f32, i16::MAX as f32) as i16)
+        .collect()
+}
+
+fn v2_bytes_with_weights(net: NetView<'_>, quant: Option<(u32, f32, Vec<i8>)>) -> Vec<u8> {
+    // payloads in canonical (ascending-id) order
+    let mut params_bytes = Vec::with_capacity(net.params.len() * 16);
+    for p in net.params {
+        params_bytes.extend_from_slice(&p.theta.to_le_bytes());
+        params_bytes.extend_from_slice(&p.nu.to_le_bytes());
+        params_bytes.extend_from_slice(&p.lam.to_le_bytes());
+        params_bytes.extend_from_slice(&p.flags.to_le_bytes());
+    }
+    let u32_bytes = |v: &[u32]| -> Vec<u8> { v.iter().flat_map(|x| x.to_le_bytes()).collect() };
+    let (weights_id, weights_aux, weights_bytes) = match &quant {
+        None => {
+            let b: Vec<u8> = net.syn_weights.iter().flat_map(|w| w.to_le_bytes()).collect();
+            (sec::SYN_WEIGHTS, 0u32, b)
+        }
+        Some((bits, scale, codes)) => {
+            let mut b = Vec::with_capacity(4 + codes.len());
+            b.extend_from_slice(&scale.to_le_bytes());
+            b.extend(codes.iter().map(|&c| c as u8));
+            (sec::QWEIGHTS, *bits, b)
+        }
+    };
+    let sections: [(u32, u32, Vec<u8>); 6] = [
+        (sec::PARAMS, 0, params_bytes),
+        (sec::NEURON_OFF, 0, u32_bytes(net.neuron_off)),
+        (sec::AXON_OFF, 0, u32_bytes(net.axon_off)),
+        (sec::SYN_TARGETS, 0, u32_bytes(net.syn_targets)),
+        (weights_id, weights_aux, weights_bytes),
+        (sec::OUTPUTS, 0, u32_bytes(net.outputs)),
+    ];
+
+    let mut out = Vec::new();
+    out.extend_from_slice(HSN_MAGIC_V2);
+    out.extend_from_slice(&(net.n_axons() as u32).to_le_bytes());
+    out.extend_from_slice(&(net.n_neurons() as u32).to_le_bytes());
+    out.extend_from_slice(&(net.outputs.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(net.base_seed as i32).to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    debug_assert_eq!(out.len(), V2_HEADER_BYTES);
+
+    // TOC: offsets assigned section-by-section with 8-byte alignment
+    let mut off = V2_HEADER_BYTES + sections.len() * V2_TOC_ENTRY_BYTES;
+    for (id, aux, payload) in &sections {
+        off = align8(off);
+        out.extend_from_slice(&id.to_le_bytes());
+        out.extend_from_slice(&aux.to_le_bytes());
+        out.extend_from_slice(&(off as u64).to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        off += payload.len();
+    }
+    for (_, _, payload) in &sections {
+        out.resize(align8(out.len()), 0); // zero padding to the 8B boundary
+        out.extend_from_slice(payload);
+    }
+    out
+}
+
+// ---- v2 layout parsing (shared by read_hsn and NetFile) ------------------
+
+/// One resolved section: byte range into the file image.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct SecRange {
+    pub off: usize,
+    pub len: usize,
+}
+
+/// How the weights are stored on disk.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum WeightsSec {
+    /// SYN_WEIGHTS: plain i16 array (zero-copy eligible).
+    Plain(SecRange),
+    /// QWEIGHTS: codes byte range (after the leading f32 scale).
+    Quant { bits: u32, scale: f32, codes: SecRange },
+}
+
+/// Fully validated v2 file layout: header counts + resolved, size- and
+/// alignment-checked section ranges. Produced by [`parse_v2`]; the
+/// structural CSR checks (offset monotonicity, target ranges,
+/// sortedness) run afterwards on the reinterpreted arrays.
+#[derive(Clone, Debug)]
+pub(crate) struct V2Layout {
+    pub n_axons: usize,
+    pub n_neurons: usize,
+    pub n_outputs: usize,
+    pub n_syn: usize,
+    pub base_seed: u32,
+    pub params: SecRange,
+    pub neuron_off: SecRange,
+    pub axon_off: SecRange,
+    pub syn_targets: SecRange,
+    pub weights: WeightsSec,
+    pub outputs: SecRange,
+}
+
+fn need(bytes: &[u8], upto: usize) -> Result<(), HsnError> {
+    if bytes.len() < upto {
+        return Err(HsnError::Truncated { need: upto as u64, have: bytes.len() as u64 });
+    }
+    Ok(())
+}
+
+fn le_u32(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap())
+}
+
+fn le_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap())
+}
+
+/// Parse + validate the v2 header and TOC of a complete file image.
+/// Guarantees on success: every returned range is in-bounds, 8-byte
+/// aligned at its start, non-overlapping, and its length matches the
+/// header counts exactly — so reinterpreting the ranges as typed arrays
+/// is safe (no OOB, no misalignment).
+pub(crate) fn parse_v2(bytes: &[u8]) -> Result<V2Layout, HsnError> {
+    need(bytes, V2_HEADER_BYTES)?;
+    if &bytes[..8] != HSN_MAGIC_V2 {
+        return Err(HsnError::BadMagic { found: bytes[..8].try_into().unwrap() });
+    }
+    let n_axons = le_u32(bytes, 8) as usize;
+    let n_neurons = le_u32(bytes, 12) as usize;
+    let n_outputs = le_u32(bytes, 16) as usize;
+    let n_sections = le_u32(bytes, 20);
+    let base_seed = le_u32(bytes, 24); // i32 on disk, stored as the bit pattern
+    if n_sections == 0 || n_sections > V2_MAX_SECTIONS {
+        return Err(HsnError::BadHeader(format!(
+            "n_sections {n_sections} outside 1..={V2_MAX_SECTIONS}"
+        )));
+    }
+    let toc_end = V2_HEADER_BYTES + n_sections as usize * V2_TOC_ENTRY_BYTES;
+    need(bytes, toc_end)?;
+
+    // walk the TOC: ascending file order, aligned, in-bounds, no overlap
+    let mut found: Vec<(u32, u32, SecRange)> = Vec::with_capacity(n_sections as usize);
+    let mut prev_end = toc_end as u64;
+    for k in 0..n_sections as usize {
+        let e = V2_HEADER_BYTES + k * V2_TOC_ENTRY_BYTES;
+        let id = le_u32(bytes, e);
+        let aux = le_u32(bytes, e + 4);
+        let off = le_u64(bytes, e + 8);
+        let len = le_u64(bytes, e + 16);
+        if off % 8 != 0 {
+            return Err(HsnError::Misaligned { id, offset: off });
+        }
+        if off < prev_end {
+            return Err(HsnError::Overlap { id, offset: off });
+        }
+        let end = off.checked_add(len).ok_or(HsnError::Overlap { id, offset: off })?;
+        if end > bytes.len() as u64 {
+            return Err(HsnError::Truncated { need: end, have: bytes.len() as u64 });
+        }
+        prev_end = end;
+        if found.iter().any(|&(fid, _, _)| fid == id) {
+            return Err(HsnError::DuplicateSection(id));
+        }
+        found.push((id, aux, SecRange { off: off as usize, len: len as usize }));
+    }
+    let get = |id: u32| found.iter().find(|&&(fid, _, _)| fid == id).map(|&(_, aux, r)| (aux, r));
+    let require = |id: u32| get(id).ok_or(HsnError::MissingSection(id));
+    let sized = |id: u32, r: SecRange, expect: usize| -> Result<SecRange, HsnError> {
+        if r.len != expect {
+            return Err(HsnError::BadSectionLen {
+                id,
+                expect: expect as u64,
+                got: r.len as u64,
+            });
+        }
+        Ok(r)
+    };
+
+    let (_, params) = require(sec::PARAMS)?;
+    let params = sized(sec::PARAMS, params, n_neurons * 16)?;
+    let (_, neuron_off) = require(sec::NEURON_OFF)?;
+    let neuron_off = sized(sec::NEURON_OFF, neuron_off, (n_neurons + 1) * 4)?;
+    let (_, axon_off) = require(sec::AXON_OFF)?;
+    let axon_off = sized(sec::AXON_OFF, axon_off, (n_axons + 1) * 4)?;
+    let (_, syn_targets) = require(sec::SYN_TARGETS)?;
+    if syn_targets.len % 4 != 0 {
+        return Err(HsnError::BadSectionLen {
+            id: sec::SYN_TARGETS,
+            expect: (syn_targets.len / 4 * 4) as u64,
+            got: syn_targets.len as u64,
+        });
+    }
+    let n_syn = syn_targets.len / 4;
+    if n_syn > u32::MAX as usize {
+        return Err(HsnError::BadHeader(format!("{n_syn} synapses exceed u32 offsets")));
+    }
+    let (_, outputs) = require(sec::OUTPUTS)?;
+    let outputs = sized(sec::OUTPUTS, outputs, n_outputs * 4)?;
+
+    let weights = match (get(sec::SYN_WEIGHTS), get(sec::QWEIGHTS)) {
+        (Some(_), Some(_)) => return Err(HsnError::DuplicateSection(sec::QWEIGHTS)),
+        (None, None) => return Err(HsnError::MissingSection(sec::SYN_WEIGHTS)),
+        (Some((_, r)), None) => WeightsSec::Plain(sized(sec::SYN_WEIGHTS, r, n_syn * 2)?),
+        (None, Some((bits, r))) => {
+            if !(2..=8).contains(&bits) {
+                return Err(HsnError::BadQuant(format!("bits {bits} outside 2..=8")));
+            }
+            let r = sized(sec::QWEIGHTS, r, 4 + n_syn)?;
+            let scale = f32::from_le_bytes(bytes[r.off..r.off + 4].try_into().unwrap());
+            if !scale.is_finite() || scale <= 0.0 {
+                return Err(HsnError::BadQuant(format!("scale {scale} not finite positive")));
+            }
+            WeightsSec::Quant { bits, scale, codes: SecRange { off: r.off + 4, len: n_syn } }
+        }
+    };
+
+    Ok(V2Layout {
+        n_axons,
+        n_neurons,
+        n_outputs,
+        n_syn,
+        base_seed,
+        params,
+        neuron_off,
+        axon_off,
+        syn_targets,
+        weights,
+        outputs,
+    })
+}
+
+/// Structural CSR validation shared by both v2 load paths (mmap view and
+/// owned decode): [`NetView::validate`] plus the sortedness contract.
+pub(crate) fn validate_v2_view(view: &NetView<'_>) -> Result<(), HsnError> {
+    view.validate().map_err(HsnError::Invalid)?;
+    if !view.is_sorted() {
+        return Err(HsnError::Unsorted);
+    }
+    Ok(())
+}
+
+/// Decode a v2 image into an owned [`Network`] (endian-safe byte copy —
+/// the explicitly-heap path; [`crate::model_fmt::NetFile`] is the
+/// zero-copy one).
+pub(crate) fn v2_decode_network(bytes: &[u8]) -> Result<Network, HsnError> {
+    let lay = parse_v2(bytes)?;
+    let u32s = |r: SecRange| -> Vec<u32> {
+        bytes[r.off..r.off + r.len]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    };
+    let params: Vec<NeuronModel> = bytes[lay.params.off..lay.params.off + lay.params.len]
+        .chunks_exact(16)
+        .map(|c| NeuronModel {
+            theta: i32::from_le_bytes(c[0..4].try_into().unwrap()),
+            nu: i32::from_le_bytes(c[4..8].try_into().unwrap()),
+            lam: i32::from_le_bytes(c[8..12].try_into().unwrap()),
+            flags: u32::from_le_bytes(c[12..16].try_into().unwrap()),
+        })
+        .collect();
+    let syn_weights = match lay.weights {
+        WeightsSec::Plain(r) => bytes[r.off..r.off + r.len]
+            .chunks_exact(2)
+            .map(|c| i16::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+        WeightsSec::Quant { scale, codes, .. } => {
+            let q: Vec<i8> = bytes[codes.off..codes.off + codes.len]
+                .iter()
+                .map(|&b| b as i8)
+                .collect();
+            dequantize_weights(&q, scale)
+        }
+    };
+    let net = Network {
+        params,
+        syn_targets: u32s(lay.syn_targets),
+        syn_weights,
+        neuron_off: u32s(lay.neuron_off),
+        axon_off: u32s(lay.axon_off),
+        outputs: u32s(lay.outputs),
+        base_seed: lay.base_seed,
+    };
+    validate_v2_view(&net.view())?;
+    Ok(net)
+}
+
+// ---- public entry points -------------------------------------------------
+
+/// Load any `.hsn` file (v1 or v2, sniffed by magic) into an owned
+/// [`Network`]. For the zero-copy mmap path use
+/// [`crate::model_fmt::NetFile::open`] (v2 only) or the
+/// [`crate::sim::SimConfig::from_path`] facade entry.
+pub fn read_hsn<P: AsRef<Path>>(path: P) -> Result<Network> {
+    let mut magic = [0u8; 8];
+    {
+        use std::io::Read as _;
+        let mut f = File::open(&path)
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let got = f.read(&mut magic)?;
+        if got < 8 {
+            bail!(HsnError::Truncated { need: 8, have: got as u64 });
+        }
+    }
+    if &magic == HSN_MAGIC_V2 {
+        let bytes = std::fs::read(&path)?;
+        return v2_decode_network(&bytes).map_err(anyhow::Error::from);
+    }
+    read_hsn_v1(path) // reports BadMagic itself for unknown magics
+}
+
+/// Write `net` as `.hsn` — the **v2** sectioned format (module docs).
+/// [`write_hsn_v1`] keeps emitting the legacy stream.
+pub fn write_hsn<'a, P: AsRef<Path>>(net: impl Into<NetView<'a>>, path: P) -> Result<()> {
+    let bytes = hsn_v2_bytes(net);
+    std::fs::write(&path, bytes)
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    Ok(())
+}
+
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
     use crate::snn::NetworkBuilder;
     use crate::util::prng::Xorshift32;
     use crate::util::ptest;
 
-    fn temp_path(name: &str) -> std::path::PathBuf {
+    pub(crate) fn temp_path(name: &str) -> std::path::PathBuf {
         let mut p = std::env::temp_dir();
         p.push(format!("hiaer_test_{}_{name}", std::process::id()));
         p
     }
 
-    fn sample_net(seed: u32) -> Network {
+    pub(crate) fn sample_net(seed: u32) -> Network {
         let mut rng = Xorshift32::new(seed);
         let m1 = NeuronModel::if_neuron(rng.range_i32(1, 100));
         let m2 = NeuronModel::ann(rng.range_i32(1, 50), -3, true).unwrap();
@@ -167,37 +647,86 @@ mod tests {
         b.build().unwrap().0
     }
 
-    #[test]
-    fn roundtrip_exact() {
-        let net = sample_net(42);
-        let p = temp_path("roundtrip.hsn");
-        write_hsn(&net, &p).unwrap();
-        let got = read_hsn(&p).unwrap();
-        std::fs::remove_file(&p).ok();
-        assert_eq!(got.params, net.params);
-        assert_eq!(got.syn_targets, net.syn_targets);
-        assert_eq!(got.syn_weights, net.syn_weights);
-        assert_eq!(got.neuron_off, net.neuron_off);
-        assert_eq!(got.axon_off, net.axon_off);
-        assert_eq!(got.outputs, net.outputs);
-        assert_eq!(got.base_seed, net.base_seed);
+    fn assert_net_eq(got: &Network, want: &Network) {
+        assert_eq!(got.params, want.params);
+        assert_eq!(got.syn_targets, want.syn_targets);
+        assert_eq!(got.syn_weights, want.syn_weights);
+        assert_eq!(got.neuron_off, want.neuron_off);
+        assert_eq!(got.axon_off, want.axon_off);
+        assert_eq!(got.outputs, want.outputs);
+        assert_eq!(got.base_seed, want.base_seed);
     }
 
     #[test]
-    fn prop_roundtrip_random_networks() {
+    fn roundtrip_exact_v2_default() {
+        let net = sample_net(42);
+        let p = temp_path("roundtrip.hsn");
+        write_hsn(&net, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..8], HSN_MAGIC_V2, "write_hsn emits v2 by default");
+        let got = read_hsn(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_net_eq(&got, &net);
+    }
+
+    #[test]
+    fn roundtrip_exact_v1() {
+        let net = sample_net(43);
+        let p = temp_path("roundtrip_v1.hsn");
+        write_hsn_v1(&net, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..8], HSN_MAGIC);
+        let got = read_hsn(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_net_eq(&got, &net);
+    }
+
+    /// v1 and v2 encode the same networks: reading either file yields the
+    /// identical `Network`, and re-encoding is byte-stable per version.
+    #[test]
+    fn prop_v1_v2_cross_roundtrip() {
         ptest::check("hsn_roundtrip", 20, |rng| {
             let net = sample_net(rng.next_u32());
-            let p = temp_path(&format!("prop_{}.hsn", rng.next_u32()));
-            write_hsn(&net, &p).map_err(|e| e.to_string())?;
-            let got = read_hsn(&p).map_err(|e| e.to_string())?;
-            std::fs::remove_file(&p).ok();
-            ptest::prop_assert_eq(got.params, net.params, "params")?;
-            ptest::prop_assert_eq(got.syn_targets, net.syn_targets, "syn_targets")?;
-            ptest::prop_assert_eq(got.syn_weights, net.syn_weights, "syn_weights")?;
-            ptest::prop_assert_eq(got.neuron_off, net.neuron_off, "neuron_off")?;
-            ptest::prop_assert_eq(got.axon_off, net.axon_off, "axon_off")?;
+            let tag = rng.next_u32();
+            let p1 = temp_path(&format!("prop_v1_{tag}.hsn"));
+            let p2 = temp_path(&format!("prop_v2_{tag}.hsn"));
+            write_hsn_v1(&net, &p1).map_err(|e| e.to_string())?;
+            write_hsn(&net, &p2).map_err(|e| e.to_string())?;
+            let from_v1 = read_hsn(&p1).map_err(|e| e.to_string())?;
+            let from_v2 = read_hsn(&p2).map_err(|e| e.to_string())?;
+            // Network-level equality across versions
+            ptest::prop_assert_eq(from_v1.params.clone(), from_v2.params.clone(), "params")?;
+            ptest::prop_assert_eq(from_v1.syn_targets.clone(), from_v2.syn_targets.clone(), "syn_targets")?;
+            ptest::prop_assert_eq(from_v1.syn_weights.clone(), from_v2.syn_weights.clone(), "syn_weights")?;
+            ptest::prop_assert_eq(from_v1.neuron_off.clone(), from_v2.neuron_off.clone(), "neuron_off")?;
+            ptest::prop_assert_eq(from_v1.axon_off.clone(), from_v2.axon_off.clone(), "axon_off")?;
+            ptest::prop_assert_eq(from_v1.outputs.clone(), from_v2.outputs.clone(), "outputs")?;
+            // byte-level: re-encoding each load reproduces each file
+            let v1_bytes = std::fs::read(&p1).unwrap();
+            let v2_bytes = std::fs::read(&p2).unwrap();
+            let p1b = temp_path(&format!("prop_v1b_{tag}.hsn"));
+            write_hsn_v1(&from_v2, &p1b).map_err(|e| e.to_string())?;
+            ptest::prop_assert_eq(std::fs::read(&p1b).unwrap(), v1_bytes, "v1 bytes stable")?;
+            ptest::prop_assert_eq(hsn_v2_bytes(&from_v1), v2_bytes, "v2 bytes stable")?;
+            for p in [&p1, &p2, &p1b] {
+                std::fs::remove_file(p).ok();
+            }
             Ok(())
         });
+    }
+
+    #[test]
+    fn v2_sections_are_aligned_and_ordered() {
+        let net = sample_net(7);
+        let bytes = hsn_v2_bytes(&net);
+        let lay = parse_v2(&bytes).unwrap();
+        for r in [lay.params, lay.neuron_off, lay.axon_off, lay.syn_targets, lay.outputs] {
+            assert_eq!(r.off % 8, 0, "section offset {} must be 8-aligned", r.off);
+        }
+        assert_eq!(lay.n_neurons, net.n_neurons());
+        assert_eq!(lay.n_axons, net.n_axons());
+        assert_eq!(lay.n_syn, net.n_synapses());
+        assert_eq!(lay.base_seed, net.base_seed);
     }
 
     #[test]
@@ -209,10 +738,10 @@ mod tests {
     }
 
     #[test]
-    fn rejects_out_of_range_target() {
+    fn rejects_out_of_range_target_v1() {
         let net = sample_net(1);
         let p = temp_path("oor.hsn");
-        write_hsn(&net, &p).unwrap();
+        write_hsn_v1(&net, &p).unwrap();
         // corrupt a synapse target beyond n
         let mut bytes = std::fs::read(&p).unwrap();
         // first adjacency count is at 8 + 20 + 16n; find first nonzero count
@@ -229,5 +758,86 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         assert!(read_hsn(&p).is_err());
         std::fs::remove_file(&p).ok();
+    }
+
+    /// The v1 reader accepts legacy unsorted files by falling back to the
+    /// canonicalising sort (the v2 reader rejects them — see netfile tests).
+    #[test]
+    fn v1_unsorted_legacy_fallback_sorts() {
+        let mut net = sample_net(5);
+        // axon "in0" targets two distinct neurons (n0, n1) — reversing its
+        // region guarantees an unsorted on-disk order
+        let r = net.axon_range(0);
+        assert!(r.len() >= 2 && net.syn_targets[r.start] != net.syn_targets[r.end - 1]);
+        net.syn_targets[r.clone()].reverse();
+        net.syn_weights[r].reverse();
+        let p = temp_path("unsorted_v1.hsn");
+        write_hsn_v1(&net, &p).unwrap();
+        let got = read_hsn(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert!(got.view().is_sorted(), "legacy fallback must canonicalise");
+        net.sort_synapses();
+        assert_net_eq(&got, &net);
+    }
+
+    #[test]
+    fn quantized_roundtrip_bounded_error() {
+        let net = sample_net(11);
+        let p = temp_path("quant.hsn");
+        let bytes = hsn_v2_bytes_quantized(&net, 8).unwrap();
+        std::fs::write(&p, &bytes).unwrap();
+        let got = read_hsn(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        // lossless fields
+        assert_eq!(got.params, net.params);
+        assert_eq!(got.syn_targets, net.syn_targets);
+        assert_eq!(got.neuron_off, net.neuron_off);
+        assert_eq!(got.axon_off, net.axon_off);
+        // weights: |round(q*scale) - w| <= scale/2 + 0.5
+        let lay = parse_v2(&bytes).unwrap();
+        let scale = match lay.weights {
+            WeightsSec::Quant { scale, .. } => scale,
+            _ => panic!("expected QWEIGHTS"),
+        };
+        for (&got_w, &want_w) in got.syn_weights.iter().zip(&net.syn_weights) {
+            let err = (got_w as f64 - want_w as f64).abs();
+            assert!(
+                err <= scale as f64 / 2.0 + 0.5,
+                "weight {want_w} -> {got_w}: error {err} > half-step at scale {scale}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantize_rejects_bad_bits() {
+        let net = sample_net(2);
+        assert!(matches!(hsn_v2_bytes_quantized(&net, 1), Err(HsnError::BadQuant(_))));
+        assert!(matches!(hsn_v2_bytes_quantized(&net, 9), Err(HsnError::BadQuant(_))));
+    }
+
+    #[test]
+    fn empty_network_round_trips_both_versions() {
+        let net = Network {
+            params: vec![],
+            syn_targets: vec![],
+            syn_weights: vec![],
+            neuron_off: vec![0],
+            axon_off: vec![0],
+            outputs: vec![],
+            base_seed: 0,
+        };
+        let writers: [(&str, fn(&Network, &std::path::Path) -> Result<()>); 2] = [
+            ("empty_v1.hsn", |n, p| write_hsn_v1(n, p)),
+            ("empty_v2.hsn", |n, p| write_hsn(n, p)),
+        ];
+        for (name, write) in writers {
+            let p = temp_path(name);
+            write(&net, &p).unwrap();
+            let got = read_hsn(&p).unwrap();
+            std::fs::remove_file(&p).ok();
+            assert_eq!(got.n_neurons(), 0, "{name}");
+            assert_eq!(got.n_axons(), 0, "{name}");
+            assert_eq!(got.n_synapses(), 0, "{name}");
+        }
     }
 }

@@ -12,9 +12,14 @@
 pub mod golden;
 pub mod hsl;
 pub mod hsn;
+pub mod netfile;
 
 pub use hsl::{Layer, LayerGraph, NeuronKind};
-pub use hsn::{read_hsn, write_hsn};
+pub use hsn::{
+    hsn_v2_bytes, hsn_v2_bytes_quantized, read_hsn, write_hsn, write_hsn_v1, HsnError,
+    HSN_MAGIC, HSN_MAGIC_V2,
+};
+pub use netfile::{open_netfile, NetFile};
 
 use std::io::{self, Read};
 

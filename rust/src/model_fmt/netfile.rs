@@ -1,0 +1,510 @@
+//! Mmap-backed `.hsn` v2 network file: the zero-copy load path.
+//!
+//! [`NetFile::open`] maps the file read-only, runs the full structural
+//! validation ([`parse_v2`] header/TOC checks, then CSR semantics and
+//! the sortedness contract), and afterwards hands out
+//! [`NetView`]s whose slices point **straight into the mapping** — no
+//! per-synapse parsing, no heap copy of the CSR arrays. Compile,
+//! partition, and split all consume the view generically, so cold-start
+//! cost is `mmap(2)` + an O(E) validation scan + HBM compile.
+//!
+//! Portability and fallbacks, in order:
+//! * non-Unix targets, or an `mmap` failure (e.g. a pseudo-filesystem):
+//!   the file is read into an 8-byte-aligned heap buffer — identical
+//!   zero-parse reinterpret, just backed by anonymous memory;
+//! * big-endian hosts: sections cannot be reinterpreted, so the image is
+//!   decoded into an owned [`Network`] (endian-safe byte swap);
+//! * QWEIGHTS files: targets/offsets/params stay zero-copy; only the
+//!   dequantized i16 weights are materialized (E×2 bytes).
+//!
+//! Safety argument for the reinterpret: every section range returned by
+//! [`parse_v2`] is bounds-checked against the image, starts on an
+//! 8-byte boundary, and has a length that is an exact multiple of the
+//! element size; the mapping base is page-aligned (or `Vec<u64>`-backed,
+//! 8-aligned), the mapping is private/read-only and outlives the views
+//! (slices borrow from `self`), and every element type
+//! (`u32`/`i16`/[`NeuronModel`] with `repr(C)`) is valid for all bit
+//! patterns. Semantic validity (offsets monotonic and covering, targets
+//! in range) is established once at `open` before any view escapes.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::snn::{NetView, Network, NeuronModel};
+
+use super::hsn::{
+    dequantize_weights, parse_v2, validate_v2_view, HsnError, SecRange, V2Layout, WeightsSec,
+};
+
+#[cfg(unix)]
+mod sys {
+    //! Minimal mmap(2)/munmap(2) FFI — libc is not a dependency, so bind
+    //! the two calls directly (precedent: the raw `signal(2)` binding in
+    //! `sim/serve.rs`). Constants are the POSIX-mandated values shared
+    //! by Linux and the BSDs.
+    use std::ffi::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub fn map_failed() -> *mut c_void {
+        usize::MAX as *mut c_void
+    }
+}
+
+/// The raw byte image backing a [`NetFile`]: a private read-only file
+/// mapping when available, else an 8-aligned heap buffer.
+enum Mapping {
+    #[cfg(unix)]
+    Mmap { ptr: *const u8, len: usize },
+    /// `Vec<u64>` guarantees 8-byte base alignment for the reinterpret.
+    Heap { buf: Vec<u64>, len: usize },
+}
+
+// The mapping is immutable (PROT_READ, MAP_PRIVATE) for its whole
+// lifetime, so shared references from any thread are fine.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            Mapping::Mmap { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Mapping::Heap { buf, len } => unsafe {
+                std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len)
+            },
+        }
+    }
+
+    fn is_mmap(&self) -> bool {
+        match self {
+            #[cfg(unix)]
+            Mapping::Mmap { .. } => true,
+            Mapping::Heap { .. } => false,
+        }
+    }
+
+    fn heap_read<P: AsRef<Path>>(path: P) -> Result<Self, HsnError> {
+        let bytes = std::fs::read(path)?;
+        let len = bytes.len();
+        let mut buf = vec![0u64; len.div_ceil(8)];
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), buf.as_mut_ptr() as *mut u8, len);
+        }
+        Ok(Mapping::Heap { buf, len })
+    }
+
+    fn open<P: AsRef<Path>>(path: P) -> Result<Self, HsnError> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let f = std::fs::File::open(&path)?;
+            let len = f.metadata()?.len();
+            if len == 0 {
+                // mmap(len = 0) is EINVAL; an empty file is handled (and
+                // rejected as truncated) through the heap path.
+                return Self::heap_read(path);
+            }
+            if len > usize::MAX as u64 {
+                return Err(HsnError::BadHeader(format!("file length {len} exceeds usize")));
+            }
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len as usize,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    f.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr == sys::map_failed() {
+                // some filesystems refuse mmap — fall back, same semantics
+                return Self::heap_read(path);
+            }
+            Ok(Mapping::Mmap { ptr: ptr as *const u8, len: len as usize })
+        }
+        #[cfg(not(unix))]
+        {
+            Self::heap_read(path)
+        }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Mapping::Mmap { ptr, len } = self {
+            unsafe {
+                sys::munmap(*ptr as *mut std::ffi::c_void, *len);
+            }
+        }
+    }
+}
+
+/// How the loaded image serves views.
+enum Backing {
+    /// Little-endian host: slices reinterpret the mapped/heap image in
+    /// place. `qweights` holds the dequantized weights for QWEIGHTS
+    /// files (the only materialized array); `None` means SYN_WEIGHTS is
+    /// served zero-copy too.
+    #[cfg(target_endian = "little")]
+    Zero { mapping: Mapping, lay: V2Layout, qweights: Option<Vec<i16>> },
+    /// Big-endian host: full endian-safe decode into an owned network.
+    #[allow(dead_code)] // constructed only on big-endian targets
+    Owned(Network),
+}
+
+/// An open, validated `.hsn` v2 file serving borrowed-CSR views
+/// (module docs). Cheap to share: wrap in an [`Arc`] and call
+/// [`NetFile::view`] wherever a `&Network` used to be passed.
+pub struct NetFile {
+    backing: Backing,
+    byte_len: usize,
+}
+
+/// Reinterpret a validated section range as a typed slice.
+///
+/// # Safety
+/// `r` must come from [`parse_v2`] over `bytes` (in-bounds, 8-aligned
+/// offset, exact multiple of `size_of::<T>()`), `bytes` must be 8-byte
+/// aligned at its base, and `T` must be valid for all bit patterns.
+unsafe fn sec_slice<T>(bytes: &[u8], r: SecRange) -> &[T] {
+    debug_assert_eq!(bytes.as_ptr() as usize % 8, 0, "image base must be 8-aligned");
+    debug_assert_eq!(r.off % 8, 0);
+    debug_assert_eq!(r.len % std::mem::size_of::<T>(), 0);
+    std::slice::from_raw_parts(
+        bytes.as_ptr().add(r.off) as *const T,
+        r.len / std::mem::size_of::<T>(),
+    )
+}
+
+/// Build the zero-copy view over a validated layout. Free function (not
+/// a method) so `open` can validate the view before `NetFile` exists.
+#[cfg(target_endian = "little")]
+fn zero_view<'a>(bytes: &'a [u8], lay: &V2Layout, qweights: Option<&'a [i16]>) -> NetView<'a> {
+    let syn_weights: &[i16] = match (lay.weights, qweights) {
+        (WeightsSec::Plain(r), _) => unsafe { sec_slice(bytes, r) },
+        (WeightsSec::Quant { .. }, Some(q)) => q,
+        (WeightsSec::Quant { .. }, None) => unreachable!("quantized file without decoded weights"),
+    };
+    NetView {
+        params: unsafe { sec_slice::<NeuronModel>(bytes, lay.params) },
+        syn_targets: unsafe { sec_slice(bytes, lay.syn_targets) },
+        syn_weights,
+        neuron_off: unsafe { sec_slice(bytes, lay.neuron_off) },
+        axon_off: unsafe { sec_slice(bytes, lay.axon_off) },
+        outputs: unsafe { sec_slice(bytes, lay.outputs) },
+        base_seed: lay.base_seed,
+    }
+}
+
+impl NetFile {
+    /// Map and validate a `.hsn` v2 file. Every malformed input returns
+    /// a typed [`HsnError`]; no view escapes before validation passes.
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self, HsnError> {
+        let mapping = Mapping::open(&path)?;
+        let byte_len = mapping.bytes().len();
+        #[cfg(target_endian = "little")]
+        {
+            let lay = parse_v2(mapping.bytes())?;
+            let qweights = match lay.weights {
+                WeightsSec::Plain(_) => None,
+                WeightsSec::Quant { scale, codes, .. } => {
+                    let raw = &mapping.bytes()[codes.off..codes.off + codes.len];
+                    // i8 from u8 bytes: same bit patterns
+                    let q: Vec<i8> = raw.iter().map(|&b| b as i8).collect();
+                    Some(dequantize_weights(&q, scale))
+                }
+            };
+            validate_v2_view(&zero_view(mapping.bytes(), &lay, qweights.as_deref()))?;
+            Ok(NetFile { backing: Backing::Zero { mapping, lay, qweights }, byte_len })
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            let net = super::hsn::v2_decode_network(mapping.bytes())?;
+            Ok(NetFile { backing: Backing::Owned(net), byte_len })
+        }
+    }
+
+    /// The borrowed-CSR view into this file — on little-endian hosts the
+    /// slices point into the mapping itself.
+    pub fn view(&self) -> NetView<'_> {
+        match &self.backing {
+            #[cfg(target_endian = "little")]
+            Backing::Zero { mapping, lay, qweights } => {
+                zero_view(mapping.bytes(), lay, qweights.as_deref())
+            }
+            Backing::Owned(net) => net.view(),
+        }
+    }
+
+    /// Materialize an owned [`Network`] (the explicit copy point for
+    /// consumers that must own, e.g. the session `SimFactory` seam).
+    pub fn to_network(&self) -> Network {
+        match &self.backing {
+            #[cfg(target_endian = "little")]
+            Backing::Zero { .. } => self.view().to_network(),
+            Backing::Owned(net) => net.clone(),
+        }
+    }
+
+    /// Total on-disk image size in bytes (header + TOC + sections).
+    pub fn byte_len(&self) -> usize {
+        self.byte_len
+    }
+
+    /// True when the image is an actual file mapping (false after the
+    /// heap fallback or an owned big-endian decode).
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(target_endian = "little")]
+            Backing::Zero { mapping, .. } => mapping.is_mmap(),
+            Backing::Owned(_) => false,
+        }
+    }
+
+    /// True when `ptr` points inside this file's byte image — the
+    /// zero-copy assertion hook used by tests: a borrowed CSR slice's
+    /// data pointer must land inside the mapping.
+    pub fn contains(&self, ptr: *const u8) -> bool {
+        match &self.backing {
+            #[cfg(target_endian = "little")]
+            Backing::Zero { mapping, .. } => {
+                let base = mapping.bytes().as_ptr() as usize;
+                let p = ptr as usize;
+                p >= base && p < base + self.byte_len
+            }
+            Backing::Owned(_) => false,
+        }
+    }
+}
+
+/// Open a `.hsn` v2 file as a shareable mapped handle.
+pub fn open_netfile<P: AsRef<Path>>(path: P) -> Result<Arc<NetFile>, HsnError> {
+    Ok(Arc::new(NetFile::open(path)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::hsn::{
+        hsn_v2_bytes, hsn_v2_bytes_quantized, sec, write_hsn, HsnError, V2_HEADER_BYTES,
+        V2_TOC_ENTRY_BYTES,
+    };
+    use super::super::hsn::tests::{sample_net, temp_path};
+    use super::*;
+
+    fn write_bytes(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = temp_path(name);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn mmap_view_matches_heap_network() {
+        let net = sample_net(77);
+        let p = temp_path("netfile_basic.hsn");
+        write_hsn(&net, &p).unwrap();
+        let nf = NetFile::open(&p).unwrap();
+        let v = nf.view();
+        assert_eq!(v.params, &net.params[..]);
+        assert_eq!(v.syn_targets, &net.syn_targets[..]);
+        assert_eq!(v.syn_weights, &net.syn_weights[..]);
+        assert_eq!(v.neuron_off, &net.neuron_off[..]);
+        assert_eq!(v.axon_off, &net.axon_off[..]);
+        assert_eq!(v.outputs, &net.outputs[..]);
+        assert_eq!(v.base_seed, net.base_seed);
+        assert_eq!(nf.byte_len(), std::fs::metadata(&p).unwrap().len() as usize);
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// The headline zero-copy claim: on a little-endian unix host the CSR
+    /// slices returned by `view()` point into the file mapping itself.
+    #[cfg(all(unix, target_endian = "little"))]
+    #[test]
+    fn view_slices_borrow_the_mapping() {
+        let net = sample_net(78);
+        let p = temp_path("netfile_zerocopy.hsn");
+        write_hsn(&net, &p).unwrap();
+        let nf = NetFile::open(&p).unwrap();
+        assert!(nf.is_mapped(), "regular tmpfile must mmap");
+        let v = nf.view();
+        assert!(nf.contains(v.syn_targets.as_ptr() as *const u8));
+        assert!(nf.contains(v.syn_weights.as_ptr() as *const u8));
+        assert!(nf.contains(v.neuron_off.as_ptr() as *const u8));
+        assert!(nf.contains(v.axon_off.as_ptr() as *const u8));
+        assert!(nf.contains(v.params.as_ptr() as *const u8));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn quantized_weights_are_materialized_rest_zero_copy() {
+        let net = sample_net(79);
+        let bytes = hsn_v2_bytes_quantized(&net, 6).unwrap();
+        let p = write_bytes("netfile_quant.hsn", &bytes);
+        let nf = NetFile::open(&p).unwrap();
+        let v = nf.view();
+        assert_eq!(v.syn_targets, &net.syn_targets[..]);
+        // weights decoded, not borrowed from the file
+        assert!(!nf.contains(v.syn_weights.as_ptr() as *const u8) || v.syn_weights.is_empty());
+        std::fs::remove_file(&p).ok();
+    }
+
+    // ---- corrupted-input coverage: typed errors, never panics --------
+
+    #[test]
+    fn truncated_file_is_typed_error() {
+        let net = sample_net(80);
+        let bytes = hsn_v2_bytes(&net);
+        // every prefix must fail cleanly (never panic); short prefixes
+        // specifically as Truncated
+        for cut in [0, 4, 8, 20, V2_HEADER_BYTES, V2_HEADER_BYTES + 30, bytes.len() - 1] {
+            let p = write_bytes(&format!("netfile_trunc_{cut}.hsn"), &bytes[..cut]);
+            let err = NetFile::open(&p).unwrap_err();
+            assert!(
+                matches!(err, HsnError::Truncated { .. } | HsnError::BadMagic { .. }),
+                "cut at {cut}: got {err:?}"
+            );
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_typed_error() {
+        let net = sample_net(81);
+        let mut bytes = hsn_v2_bytes(&net);
+        bytes[..8].copy_from_slice(b"HSNET9\x00\x00");
+        let p = write_bytes("netfile_magic.hsn", &bytes);
+        assert!(matches!(NetFile::open(&p).unwrap_err(), HsnError::BadMagic { .. }));
+        std::fs::remove_file(&p).ok();
+    }
+
+    fn toc_entry(k: usize) -> usize {
+        V2_HEADER_BYTES + k * V2_TOC_ENTRY_BYTES
+    }
+
+    #[test]
+    fn misaligned_section_offset_is_typed_error() {
+        let net = sample_net(82);
+        let mut bytes = hsn_v2_bytes(&net);
+        // PARAMS is TOC entry 0; knock its offset off the 8B boundary
+        let e = toc_entry(0);
+        let off = u64::from_le_bytes(bytes[e + 8..e + 16].try_into().unwrap());
+        bytes[e + 8..e + 16].copy_from_slice(&(off + 4).to_le_bytes());
+        let p = write_bytes("netfile_misaligned.hsn", &bytes);
+        assert!(matches!(
+            NetFile::open(&p).unwrap_err(),
+            HsnError::Misaligned { id: sec::PARAMS, .. } | HsnError::Overlap { .. }
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn overlapping_sections_is_typed_error() {
+        let net = sample_net(83);
+        let mut bytes = hsn_v2_bytes(&net);
+        // rewind entry 1 (NEURON_OFF) onto entry 0's payload
+        let e0 = toc_entry(0);
+        let off0 = u64::from_le_bytes(bytes[e0 + 8..e0 + 16].try_into().unwrap());
+        let e1 = toc_entry(1);
+        bytes[e1 + 8..e1 + 16].copy_from_slice(&off0.to_le_bytes());
+        let p = write_bytes("netfile_overlap.hsn", &bytes);
+        assert!(matches!(
+            NetFile::open(&p).unwrap_err(),
+            HsnError::Overlap { id: sec::NEURON_OFF, .. }
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn out_of_range_target_is_typed_error() {
+        let net = sample_net(84);
+        assert!(net.n_synapses() > 0);
+        let mut bytes = hsn_v2_bytes(&net);
+        let lay = super::super::hsn::parse_v2(&bytes).unwrap();
+        let t = lay.syn_targets.off; // first synapse target
+        bytes[t..t + 4].copy_from_slice(&(net.n_neurons() as u32 + 5).to_le_bytes());
+        let p = write_bytes("netfile_oor.hsn", &bytes);
+        assert!(matches!(NetFile::open(&p).unwrap_err(), HsnError::Invalid(_)));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn unsorted_v2_is_rejected_not_resorted() {
+        let net = sample_net(85);
+        let mut bytes = hsn_v2_bytes(&net);
+        let lay = super::super::hsn::parse_v2(&bytes).unwrap();
+        // axon "in0" targets two distinct neurons (n0, n1): swapping its
+        // first and last target guarantees an out-of-order region
+        let r = net.axon_range(0);
+        assert!(r.len() >= 2 && net.syn_targets[r.start] != net.syn_targets[r.end - 1]);
+        let a = lay.syn_targets.off + r.start * 4;
+        let b = lay.syn_targets.off + (r.end - 1) * 4;
+        let (ta, tb) = (bytes[a..a + 4].to_vec(), bytes[b..b + 4].to_vec());
+        bytes[a..a + 4].copy_from_slice(&tb);
+        bytes[b..b + 4].copy_from_slice(&ta);
+        let p = write_bytes("netfile_unsorted.hsn", &bytes);
+        assert!(matches!(NetFile::open(&p).unwrap_err(), HsnError::Unsorted));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn duplicate_and_missing_sections_are_typed_errors() {
+        let net = sample_net(86);
+        let mut bytes = hsn_v2_bytes(&net);
+        // relabel NEURON_OFF's TOC id as PARAMS -> duplicate + missing
+        let e1 = toc_entry(1);
+        bytes[e1..e1 + 4].copy_from_slice(&sec::PARAMS.to_le_bytes());
+        let p = write_bytes("netfile_dup.hsn", &bytes);
+        assert!(matches!(NetFile::open(&p).unwrap_err(), HsnError::DuplicateSection(_)));
+        std::fs::remove_file(&p).ok();
+
+        let mut bytes = hsn_v2_bytes(&net);
+        // unknown id: reader must skip it, then miss the required section
+        let e3 = toc_entry(3); // SYN_TARGETS
+        bytes[e3..e3 + 4].copy_from_slice(&999u32.to_le_bytes());
+        let p = write_bytes("netfile_missing.hsn", &bytes);
+        assert!(matches!(
+            NetFile::open(&p).unwrap_err(),
+            HsnError::MissingSection(sec::SYN_TARGETS)
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_is_truncated_error() {
+        let p = write_bytes("netfile_empty.hsn", b"");
+        assert!(matches!(NetFile::open(&p).unwrap_err(), HsnError::Truncated { .. }));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bad_section_len_is_typed_error() {
+        let net = sample_net(87);
+        let mut bytes = hsn_v2_bytes(&net);
+        // shrink OUTPUTS (entry 5) length below n_outputs * 4
+        let e5 = toc_entry(5);
+        let len = u64::from_le_bytes(bytes[e5 + 16..e5 + 24].try_into().unwrap());
+        assert!(len >= 4);
+        bytes[e5 + 16..e5 + 24].copy_from_slice(&(len - 4).to_le_bytes());
+        let p = write_bytes("netfile_badlen.hsn", &bytes);
+        assert!(matches!(
+            NetFile::open(&p).unwrap_err(),
+            HsnError::BadSectionLen { id: sec::OUTPUTS, .. }
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -9,7 +9,7 @@
 //! Kernighan-Lin-style refinement that migrates neurons whose gain
 //! (external minus internal degree) is positive.
 
-use crate::snn::Network;
+use crate::snn::NetView;
 
 /// The physical hierarchy (paper: 5 compute servers x 8 FPGAs x 32 cores;
 /// each FPGA targets 4M neurons / 1B synapses over its cores).
@@ -93,11 +93,14 @@ pub struct CutStats {
 
 impl Partition {
     /// Partition `net` over at most `topology.n_cores()` cores.
-    pub fn compute(
-        net: &Network,
+    /// Generic over the borrowed-CSR view ([`NetView`]): works identically
+    /// on an owned `&Network` and an mmap-backed `.hsn` v2 file.
+    pub fn compute<'a>(
+        net: impl Into<NetView<'a>>,
         topology: ClusterTopology,
         cap: CoreCapacity,
     ) -> Result<Partition, String> {
+        let net: NetView<'_> = net.into();
         let n = net.n_neurons();
         let n_cores = topology.n_cores();
         let syn_of: Vec<usize> = (0..n).map(|i| net.neuron_degree(i)).collect();
@@ -185,7 +188,8 @@ impl Partition {
     }
 
     /// Cut statistics under the topology's routing levels.
-    pub fn cut_stats(&self, net: &Network) -> CutStats {
+    pub fn cut_stats<'a>(&self, net: impl Into<NetView<'a>>) -> CutStats {
+        let net: NetView<'_> = net.into();
         let mut s = CutStats::default();
         for i in 0..net.n_neurons() {
             let ci = self.core_of[i] as usize;
@@ -204,7 +208,8 @@ impl Partition {
 
     /// Invariants: every neuron on exactly one core, capacities met,
     /// members/local consistent.
-    pub fn validate(&self, net: &Network, cap: CoreCapacity) -> Result<(), String> {
+    pub fn validate<'a>(&self, net: impl Into<NetView<'a>>, cap: CoreCapacity) -> Result<(), String> {
+        let net: NetView<'_> = net.into();
         let n = net.n_neurons();
         if self.core_of.len() != n {
             return Err("core_of length mismatch".into());
@@ -244,7 +249,7 @@ impl Partition {
 /// BFS over the synaptic graph from all axon roots (then any unreached
 /// neurons in index order). Keeps synaptically-close neurons adjacent in
 /// the seeding order.
-fn bfs_order(net: &Network) -> Vec<u32> {
+fn bfs_order(net: NetView<'_>) -> Vec<u32> {
     let n = net.n_neurons();
     let mut visited = vec![false; n];
     let mut order = Vec::with_capacity(n);
@@ -284,7 +289,7 @@ fn bfs_order(net: &Network) -> Vec<u32> {
 /// most neighbours if that reduces cut and capacity allows. `passes`
 /// bounds the sweeps (classic KL/FM simplification).
 fn refine(
-    net: &Network,
+    net: NetView<'_>,
     core_of: &mut [u32],
     counts: &mut [(usize, usize)],
     cap: CoreCapacity,
@@ -350,7 +355,7 @@ fn refine(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::snn::{NetworkBuilder, NeuronModel, Synapse};
+    use crate::snn::{Network, NetworkBuilder, NeuronModel, Synapse};
     use crate::util::prng::Xorshift32;
     use crate::util::ptest;
 
@@ -466,7 +471,7 @@ mod tests {
         neuron_adj[3].push(Synapse { target: 4, weight: 1 });
         neuron_adj[4].push(Synapse { target: 3, weight: 1 });
         let net = Network::from_adj(vec![m; 10], &neuron_adj, &[], vec![], 0);
-        let order = bfs_order(&net);
+        let order = bfs_order(net.view());
         let mut sorted = order.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..10u32).collect::<Vec<_>>());

@@ -19,7 +19,7 @@
 //! and latency for the scaling model.
 
 use crate::partition::{ClusterTopology, Partition};
-use crate::snn::Network;
+use crate::snn::{NetView, Network};
 
 /// Per-level fabric timing/bandwidth model (cycles at the core clock).
 #[derive(Clone, Copy, Debug)]
@@ -158,14 +158,21 @@ pub struct SplitNetwork {
 /// sub-network's flat arrays in one shot and fills them through write
 /// cursors derived from the offset tables. No per-source Vec churn — the
 /// seed's nested-Vec assembly allocated one Vec per (core, source).
-pub fn split_network(net: &Network, part: &Partition) -> SplitNetwork {
+///
+/// Generic over the borrowed-CSR view: the *global* network is only read
+/// through [`NetView`] slices (so an mmap-backed `.hsn` v2 splits without
+/// ever materialising the global CSR on the heap); the per-core subnets
+/// are owned by construction — re-homing remote sources rewrites targets
+/// and appends local axons, which cannot alias the source arrays.
+pub fn split_network<'a>(net: impl Into<NetView<'a>>, part: &Partition) -> SplitNetwork {
+    let net: NetView<'_> = net.into();
     let n_cores = part.topology.n_cores();
     let n = net.n_neurons();
     let a = net.n_axons();
 
     // output sets per core
     let mut is_output = vec![false; n];
-    for &o in &net.outputs {
+    for &o in net.outputs {
         is_output[o as usize] = true;
     }
 

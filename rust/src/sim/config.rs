@@ -3,16 +3,17 @@
 //! parameters, HBM slot strategy, seeding and the CLI flag parsing every
 //! subcommand shares ([`SimOptions::from_args`]).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::cluster::{MultiCoreEngine, PoolOptions, PoolSim, RouteGranularity};
 use crate::engine::{CoreEngine, DenseSim, RustBackend};
 use crate::hbm::SlotStrategy;
+use crate::model_fmt::{open_netfile, read_hsn, NetFile, HSN_MAGIC_V2};
 use crate::partition::{ClusterTopology, CoreCapacity};
 use crate::runtime::{pjrt_enabled, Runtime, XlaBackend};
 use crate::sim::{SimError, Simulator};
-use crate::snn::Network;
+use crate::snn::{NetView, Network};
 use crate::util::cli::Args;
 
 /// Which execution engine a [`SimConfig`] instantiates. See the module
@@ -199,9 +200,89 @@ impl SimOptions {
         }
     }
 
-    /// Attach a network, yielding a buildable [`SimConfig`].
-    pub fn into_config(self, net: Network) -> SimConfig {
-        SimConfig { net, opts: self }
+    /// Attach a network (owned [`Network`] or mmap-backed
+    /// [`NetSource::Mapped`]), yielding a buildable [`SimConfig`].
+    pub fn into_config(self, net: impl Into<NetSource>) -> SimConfig {
+        SimConfig { net: net.into(), opts: self }
+    }
+}
+
+/// The network a [`SimConfig`] builds from. Both variants expose the
+/// same borrowed [`NetView`]; [`SimConfig::build`] reads CSR only
+/// through that view and never heap-copies it.
+#[derive(Clone)]
+pub enum NetSource {
+    /// Owned heap CSR (builder, converter or `.hsn` v1 reader output).
+    Owned(Network),
+    /// Shared mmap-backed `.hsn` v2 file — the view's synapse slices
+    /// point straight into the mapped bytes (zero-copy cold start).
+    Mapped(Arc<NetFile>),
+}
+
+impl From<Network> for NetSource {
+    fn from(net: Network) -> Self {
+        NetSource::Owned(net)
+    }
+}
+
+impl From<Arc<NetFile>> for NetSource {
+    fn from(file: Arc<NetFile>) -> Self {
+        NetSource::Mapped(file)
+    }
+}
+
+impl std::fmt::Debug for NetSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetSource::Owned(net) => f.debug_tuple("Owned").field(net).finish(),
+            NetSource::Mapped(file) => f
+                .debug_struct("Mapped")
+                .field("bytes", &file.byte_len())
+                .field("mmap", &file.is_mapped())
+                .finish(),
+        }
+    }
+}
+
+impl NetSource {
+    /// Open a `.hsn` file as a build source: v2 maps the file zero-copy
+    /// ([`NetFile`]); v1 parses into a heap [`Network`]. The cold-start
+    /// path behind [`SimConfig::from_path`] and the session protocol's
+    /// `configure` op.
+    pub fn from_path<P: AsRef<Path>>(path: P) -> Result<NetSource, SimError> {
+        let path = path.as_ref();
+        let is_v2 = std::fs::File::open(path)
+            .and_then(|mut f| {
+                use std::io::Read;
+                let mut magic = [0u8; 8];
+                f.read_exact(&mut magic).map(|_| magic == *HSN_MAGIC_V2)
+            })
+            // open/short-read failures fall through to the v1 reader,
+            // which reports the typed error
+            .unwrap_or(false);
+        if is_v2 {
+            Ok(NetSource::Mapped(
+                open_netfile(path).map_err(|e| SimError::Engine(e.into()))?,
+            ))
+        } else {
+            Ok(NetSource::Owned(read_hsn(path)?))
+        }
+    }
+
+    /// Borrow the CSR view (owned heap arrays or mapped file bytes).
+    pub fn view(&self) -> NetView<'_> {
+        match self {
+            NetSource::Owned(net) => net.view(),
+            NetSource::Mapped(file) => file.view(),
+        }
+    }
+
+    /// On-disk byte size when backed by a file; `None` for owned nets.
+    pub fn file_bytes(&self) -> Option<u64> {
+        match self {
+            NetSource::Owned(_) => None,
+            NetSource::Mapped(file) => Some(file.byte_len() as u64),
+        }
     }
 }
 
@@ -209,18 +290,24 @@ impl SimOptions {
 /// for the lifecycle.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
-    pub net: Network,
+    pub net: NetSource,
     pub opts: SimOptions,
 }
 
 impl SimConfig {
-    pub fn new(net: Network) -> Self {
+    pub fn new(net: impl Into<NetSource>) -> Self {
         SimOptions::default().into_config(net)
+    }
+
+    /// Load a `.hsn` file with default options (v2 → mmap zero-copy,
+    /// v1 → heap parse; see [`NetSource::from_path`]).
+    pub fn from_path<P: AsRef<Path>>(path: P) -> Result<Self, SimError> {
+        Ok(SimConfig { net: NetSource::from_path(path)?, opts: SimOptions::default() })
     }
 
     /// Build a config straight from parsed CLI args (the deduplicated
     /// topology/strategy/backend/seed flag surface).
-    pub fn from_args(net: Network, args: &Args) -> Result<Self, SimError> {
+    pub fn from_args(net: impl Into<NetSource>, args: &Args) -> Result<Self, SimError> {
         Ok(SimOptions::from_args(args)?.into_config(net))
     }
 
@@ -299,7 +386,10 @@ impl SimConfig {
     /// starts worker pools. The returned box is the only public
     /// execution handle.
     pub fn build(self) -> Result<Box<dyn Simulator>, SimError> {
-        let SimConfig { mut net, opts } = self;
+        let SimConfig { net: src, opts } = self;
+        // The seed override mutates only the Copy view; the CSR arrays
+        // stay borrowed from the source (heap or mapping), never copied.
+        let mut net = src.view();
         if let Some(seed) = opts.seed {
             net.base_seed = seed;
         }
@@ -320,10 +410,10 @@ impl SimConfig {
             )));
         }
         match opts.backend {
-            Backend::Dense => Ok(Box::new(DenseSim::new(&net))),
+            Backend::Dense => Ok(Box::new(DenseSim::new(net))),
             Backend::Rust if n_cores > 1 => {
                 let engine = MultiCoreEngine::new(
-                    &net,
+                    net,
                     opts.topology,
                     opts.capacity,
                     opts.strategy,
@@ -332,10 +422,10 @@ impl SimConfig {
                 Ok(Box::new(engine))
             }
             Backend::Rust => {
-                Ok(Box::new(CoreEngine::new(&net, opts.strategy, RustBackend)?))
+                Ok(Box::new(CoreEngine::new(net, opts.strategy, RustBackend)?))
             }
             Backend::Pool => {
-                Ok(Box::new(PoolSim::new(&net, opts.strategy, opts.pool_options())?))
+                Ok(Box::new(PoolSim::new(net, opts.strategy, opts.pool_options())?))
             }
             Backend::Xla => {
                 if !pjrt_enabled() {
@@ -350,7 +440,7 @@ impl SimConfig {
                 }
                 let rt = Arc::new(Runtime::cpu(&opts.artifacts)?);
                 let backend = XlaBackend::new(rt, net.n_neurons())?;
-                Ok(Box::new(CoreEngine::new(&net, opts.strategy, backend)?))
+                Ok(Box::new(CoreEngine::new(net, opts.strategy, backend)?))
             }
         }
     }

@@ -69,7 +69,7 @@ mod config;
 pub mod serve;
 pub mod session;
 
-pub use config::{Backend, SimConfig, SimOptions};
+pub use config::{Backend, NetSource, SimConfig, SimOptions};
 pub use crate::cluster::RouteGranularity;
 
 use crate::energy::{CostReport, EnergyModel};

@@ -28,11 +28,14 @@
 //! Optional fields override the CLI options: `seed` (noise base seed)
 //! and `workers` (worker-thread count for the pooled backends, >= 1 —
 //! bit-exactness is worker-count-invariant, so this only tunes
-//! throughput):
+//! throughput). The response breaks the cold start down: `load_ms`
+//! (network load — mmap + validate for `.hsn` v2, full heap parse for
+//! v1), `compile_ms` (partition + HBM compile + worker pools) and
+//! `net_bytes` (on-disk file size):
 //!
 //! ```text
 //! -> {"op":"configure","net":"mnist.hsn","seed":7,"workers":4}
-//! <- {"axons":64,"backend":"rust","neurons":100000,"ok":true,"op":"configure","outputs":10,"protocol":1}
+//! <- {"axons":64,"backend":"rust","compile_ms":41.7,"load_ms":0.3,"net_bytes":6400512,"neurons":100000,"ok":true,"op":"configure","outputs":10,"protocol":1}
 //! ```
 //!
 //! `step` — advance one tick; `axons` lists fired global axon ids (the
@@ -86,13 +89,14 @@
 //! ```
 //!
 //! `metrics` — counters since the session started: requests served,
-//! error responses, simulation steps executed. The TCP server again
-//! intercepts this op and adds server-wide totals (sessions, evictions,
-//! queue depth, step rates — see [`crate::sim::serve`]):
+//! error responses, simulation steps executed, plus the most recent
+//! `configure`'s cold-start breakdown. The TCP server again intercepts
+//! this op and adds server-wide totals (sessions, evictions, queue
+//! depth, step rates — see [`crate::sim::serve`]):
 //!
 //! ```text
 //! -> {"op":"metrics"}
-//! <- {"errors":0,"ok":true,"op":"metrics","requests":5,"steps":12}
+//! <- {"errors":0,"last_compile_ms":41.7,"last_load_ms":0.3,"net_bytes":6400512,"ok":true,"op":"metrics","requests":5,"steps":12}
 //! ```
 //!
 //! `shutdown` — acknowledge, drop the simulator and end the serve loop.
@@ -148,10 +152,10 @@
 //! can never have more than one request in flight.
 
 use std::io::{BufRead, Write};
+use std::time::Instant;
 
 use crate::energy::EnergyModel;
-use crate::model_fmt::read_hsn;
-use crate::sim::{SimError, SimOptions, Simulator};
+use crate::sim::{NetSource, SimError, SimOptions, Simulator};
 use crate::util::json::{arr_i64, obj, Json};
 
 /// Protocol revision announced in the `hello` greeting and `configure`
@@ -386,6 +390,14 @@ pub struct SessionStats {
     pub errors: u64,
     /// Simulation steps executed successfully.
     pub steps: u64,
+    /// Network-load wall time of the most recent successful `configure`
+    /// (mmap + validate for `.hsn` v2; full heap parse for v1).
+    pub last_load_ms: f64,
+    /// Simulator-build wall time (partition + HBM compile + worker
+    /// pools) of the most recent successful `configure`.
+    pub last_compile_ms: f64,
+    /// On-disk byte size of the most recently configured network file.
+    pub net_bytes: u64,
 }
 
 /// Test seam: builds the simulator `configure` installs. Production code
@@ -626,6 +638,9 @@ impl Session {
                         ("requests", Json::Int(self.stats.requests as i64)),
                         ("errors", Json::Int(self.stats.errors as i64)),
                         ("steps", Json::Int(self.stats.steps as i64)),
+                        ("last_load_ms", Json::Num(self.stats.last_load_ms)),
+                        ("last_compile_ms", Json::Num(self.stats.last_compile_ms)),
+                        ("net_bytes", Json::Int(self.stats.net_bytes as i64)),
                     ],
                 ),
                 false,
@@ -638,23 +653,36 @@ impl Session {
     }
 
     fn configure(&mut self, net_path: &str, seed: Option<u32>, workers: Option<usize>) -> String {
-        let net = match read_hsn(net_path) {
-            Ok(n) => n,
-            Err(e) => return err_response(CODE_CONFIG, &format!("loading {net_path}: {e:#}")),
+        // Cold-start phase 1 — load: `.hsn` v2 is mmap + validate
+        // (zero-copy), v1 a full heap parse. Timed separately from the
+        // build so the response exposes where a slow configure went.
+        let t_load = Instant::now();
+        let src = match NetSource::from_path(net_path) {
+            Ok(s) => s,
+            Err(SimError::Engine(e)) => {
+                return err_response(CODE_CONFIG, &format!("loading {net_path}: {e:#}"))
+            }
+            Err(e) => return err_response(CODE_CONFIG, &format!("loading {net_path}: {e}")),
         };
-        if net.n_neurons() > self.limits.max_neurons {
+        let load_ms = t_load.elapsed().as_secs_f64() * 1e3;
+        let net_bytes = src
+            .file_bytes()
+            .or_else(|| std::fs::metadata(net_path).ok().map(|m| m.len()))
+            .unwrap_or(0);
+        let view = src.view();
+        if view.n_neurons() > self.limits.max_neurons {
             // checked before the (expensive) HBM compile: an over-quota
             // net must not cost the server the work of building it
             return err_response(
                 CODE_QUOTA,
                 &format!(
                     "network has {} neurons, over this session's {}-neuron quota",
-                    net.n_neurons(),
+                    view.n_neurons(),
                     self.limits.max_neurons
                 ),
             );
         }
-        let n_outputs = net.outputs.len();
+        let n_outputs = view.outputs.len();
         let mut opts = self.opts.clone();
         if seed.is_some() {
             opts.seed = seed;
@@ -664,10 +692,15 @@ impl Session {
             // with a `config` error (one validation point, not two)
             opts.workers = workers;
         }
+        // Cold-start phase 2 — build: partition + HBM compile + pools.
+        let t_compile = Instant::now();
         let built = match self.sim_factory.as_mut() {
-            Some(factory) => factory(net, opts),
-            None => opts.into_config(net).build(),
+            // the test seam keeps its owned-Network signature; this is
+            // the one materialisation point on the configure path
+            Some(factory) => factory(src.view().to_network(), opts),
+            None => opts.into_config(src).build(),
         };
+        let compile_ms = t_compile.elapsed().as_secs_f64() * 1e3;
         match built {
             Ok(sim) => {
                 let resp = ok_response(
@@ -678,9 +711,15 @@ impl Session {
                         ("neurons", Json::Int(sim.n_neurons() as i64)),
                         ("axons", Json::Int(sim.n_axons() as i64)),
                         ("outputs", Json::Int(n_outputs as i64)),
+                        ("load_ms", Json::Num(load_ms)),
+                        ("compile_ms", Json::Num(compile_ms)),
+                        ("net_bytes", Json::Int(net_bytes as i64)),
                     ],
                 );
                 self.sim = Some(sim);
+                self.stats.last_load_ms = load_ms;
+                self.stats.last_compile_ms = compile_ms;
+                self.stats.net_bytes = net_bytes;
                 resp
             }
             Err(e) => err_response(error_code(&e), &e.to_string()),
@@ -833,7 +872,7 @@ pub fn serve<R: BufRead, W: Write>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model_fmt::write_hsn;
+    use crate::model_fmt::{read_hsn, write_hsn};
     use crate::snn::{NetworkBuilder, NeuronModel};
 
     fn fig6_path(tag: &str) -> std::path::PathBuf {
@@ -1098,6 +1137,29 @@ mod tests {
         assert!(!done);
         assert_err(&resp, CODE_CONFIG);
         assert!(!s.is_configured());
+    }
+
+    /// Satellite: the configure response breaks the cold start down
+    /// into `load_ms` / `compile_ms` / `net_bytes`, and `metrics`
+    /// remembers the most recent breakdown.
+    #[test]
+    fn configure_reports_cold_start_breakdown() {
+        let p = fig6_path("coldstart");
+        let mut s = Session::new(SimOptions::default());
+        let (resp, _) =
+            s.handle_line(&format!("{{\"op\":\"configure\",\"net\":\"{}\"}}", p.display()));
+        let j = parsed(&resp);
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let bytes = std::fs::metadata(&p).unwrap().len() as i64;
+        assert_eq!(j.get("net_bytes").and_then(Json::as_i64), Some(bytes));
+        assert!(j.get("load_ms").and_then(Json::as_f64).unwrap() >= 0.0, "{resp}");
+        assert!(j.get("compile_ms").and_then(Json::as_f64).unwrap() >= 0.0, "{resp}");
+        let (m, _) = s.handle_line(r#"{"op":"metrics"}"#);
+        let mj = parsed(&m);
+        assert_eq!(mj.get("net_bytes").and_then(Json::as_i64), Some(bytes));
+        assert!(mj.get("last_load_ms").and_then(Json::as_f64).is_some(), "{m}");
+        assert!(mj.get("last_compile_ms").and_then(Json::as_f64).is_some(), "{m}");
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

@@ -10,10 +10,12 @@
 //! `network` module docs); [`EdgeList`] is the flat construction scratch
 //! for callers that discover synapses in arbitrary source order.
 
-mod neuron;
 mod network;
+mod neuron;
+mod view;
 
-pub use neuron::{NeuronModel, FLAG_LIF, FLAG_NOISE, LAM_MAX, NU_MAX, NU_MIN};
 pub use network::{
     EdgeList, KeyMap, NetError, Network, NetworkBuilder, Synapse, WEIGHT_MAX, WEIGHT_MIN,
 };
+pub use neuron::{NeuronModel, FLAG_LIF, FLAG_NOISE, LAM_MAX, NU_MAX, NU_MIN};
+pub use view::NetView;

@@ -28,6 +28,12 @@ pub enum ModelError {
 
 /// A neuron model: the per-neuron parameter tuple programmed into the
 /// neuron-model section of HBM and applied by the membrane-update kernel.
+///
+/// `repr(C)` pins the layout to four consecutive 32-bit words
+/// (`theta, nu, lam, flags` — 16 bytes, no padding): the `.hsn` PARAMS
+/// section stores exactly this struct, and the mmap loader reinterprets
+/// the section bytes as `[NeuronModel]` without a copy.
+#[repr(C)]
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct NeuronModel {
     pub theta: i32,

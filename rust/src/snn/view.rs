@@ -1,0 +1,270 @@
+//! Borrowed-CSR network view — the read-only slice-of-arrays subset of
+//! [`Network`]'s API that every consumer (HBM compile, partitioner,
+//! router, engines) actually needs.
+//!
+//! [`NetView`] is a `Copy` bundle of borrowed slices, so the same
+//! compile/partition/split code runs over
+//!
+//! * an owned heap [`Network`] (`(&net).into()` / [`Network::view`]), or
+//! * an mmap-backed [`crate::model_fmt::NetFile`] (`file.view()`), whose
+//!   slices point straight into the mapped `.hsn` v2 bytes — zero
+//!   per-synapse copying between file and engine compilation.
+//!
+//! Consumer entry points take `impl Into<NetView<'a>>`, so existing
+//! `&Network` call sites keep compiling unchanged while genuinely
+//! threading the view. The field invariants are exactly [`Network`]'s
+//! (see its module docs): `neuron_off` has `n_neurons + 1` entries
+//! starting at 0, `axon_off` continues it, per-source slices are sorted
+//! by target. [`NetView::validate`] checks them; both construction paths
+//! (builder / format readers) guarantee them.
+
+use std::ops::Range;
+
+use super::network::Network;
+use super::neuron::NeuronModel;
+
+/// Borrowed read-only CSR view of a network (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct NetView<'a> {
+    /// Per-neuron model parameters.
+    pub params: &'a [NeuronModel],
+    /// Flat synapse targets (neuron regions, then axon regions).
+    pub syn_targets: &'a [u32],
+    /// Flat synapse weights, parallel to `syn_targets`.
+    pub syn_weights: &'a [i16],
+    /// Per-neuron region offsets (`n_neurons + 1` entries).
+    pub neuron_off: &'a [u32],
+    /// Per-axon region offsets (`n_axons + 1`; first == last neuron_off).
+    pub axon_off: &'a [u32],
+    /// Indices of monitored output neurons.
+    pub outputs: &'a [u32],
+    /// Base RNG seed for the stochastic neuron noise.
+    pub base_seed: u32,
+}
+
+impl<'a> From<&'a Network> for NetView<'a> {
+    fn from(net: &'a Network) -> Self {
+        NetView {
+            params: &net.params,
+            syn_targets: &net.syn_targets,
+            syn_weights: &net.syn_weights,
+            neuron_off: &net.neuron_off,
+            axon_off: &net.axon_off,
+            outputs: &net.outputs,
+            base_seed: net.base_seed,
+        }
+    }
+}
+
+impl<'a> From<&NetView<'a>> for NetView<'a> {
+    fn from(v: &NetView<'a>) -> Self {
+        *v
+    }
+}
+
+impl Network {
+    /// Borrow this network as a [`NetView`].
+    pub fn view(&self) -> NetView<'_> {
+        self.into()
+    }
+}
+
+impl<'a> NetView<'a> {
+    pub fn n_neurons(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn n_axons(&self) -> usize {
+        self.axon_off.len() - 1
+    }
+
+    pub fn n_synapses(&self) -> usize {
+        self.syn_targets.len()
+    }
+
+    /// Flat-array range of neuron `i`'s outgoing synapses.
+    #[inline]
+    pub fn neuron_range(&self, i: usize) -> Range<usize> {
+        self.neuron_off[i] as usize..self.neuron_off[i + 1] as usize
+    }
+
+    /// Flat-array range of axon `i`'s outgoing synapses.
+    #[inline]
+    pub fn axon_range(&self, i: usize) -> Range<usize> {
+        self.axon_off[i] as usize..self.axon_off[i + 1] as usize
+    }
+
+    /// Contiguous (targets, weights) slices of neuron `i`.
+    #[inline]
+    pub fn neuron_syns(&self, i: usize) -> (&'a [u32], &'a [i16]) {
+        let r = self.neuron_range(i);
+        (&self.syn_targets[r.clone()], &self.syn_weights[r])
+    }
+
+    /// Contiguous (targets, weights) slices of axon `i`.
+    #[inline]
+    pub fn axon_syns(&self, i: usize) -> (&'a [u32], &'a [i16]) {
+        let r = self.axon_range(i);
+        (&self.syn_targets[r.clone()], &self.syn_weights[r])
+    }
+
+    /// Target ids of neuron `i`'s outgoing synapses.
+    #[inline]
+    pub fn neuron_targets(&self, i: usize) -> &'a [u32] {
+        &self.syn_targets[self.neuron_range(i)]
+    }
+
+    /// Target ids of axon `i`'s outgoing synapses.
+    #[inline]
+    pub fn axon_targets(&self, i: usize) -> &'a [u32] {
+        &self.syn_targets[self.axon_range(i)]
+    }
+
+    /// Out-degree of neuron `i`.
+    #[inline]
+    pub fn neuron_degree(&self, i: usize) -> usize {
+        self.neuron_range(i).len()
+    }
+
+    /// Out-degree of axon `i`.
+    #[inline]
+    pub fn axon_degree(&self, i: usize) -> usize {
+        self.axon_range(i).len()
+    }
+
+    /// Total fan-in per neuron — one linear pass over the flat targets.
+    pub fn fan_in(&self) -> Vec<u32> {
+        let mut f = vec![0u32; self.n_neurons()];
+        for &t in self.syn_targets {
+            f[t as usize] += 1;
+        }
+        f
+    }
+
+    /// True when every per-source slice is sorted ascending by target —
+    /// the canonical form all writers emit (duplicates allowed).
+    pub fn is_sorted(&self) -> bool {
+        let n = self.n_neurons();
+        (0..n + self.n_axons()).all(|s| {
+            let r = if s < n { self.neuron_range(s) } else { self.axon_range(s - n) };
+            self.syn_targets[r].windows(2).all(|w| w[0] <= w[1])
+        })
+    }
+
+    /// Structural validation — the same checks as [`Network::validate`].
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n_neurons() as u32;
+        if self.neuron_off.len() != self.params.len() + 1 {
+            return Err("params/neuron_off length mismatch".into());
+        }
+        if self.neuron_off[0] != 0 {
+            return Err("neuron_off must start at 0".into());
+        }
+        if self.axon_off.is_empty() || self.axon_off[0] != *self.neuron_off.last().unwrap() {
+            return Err("axon_off must continue neuron_off".into());
+        }
+        if self.syn_targets.len() != self.syn_weights.len() {
+            return Err("syn_targets/syn_weights length mismatch".into());
+        }
+        if *self.axon_off.last().unwrap() as usize != self.syn_targets.len() {
+            return Err("offset tables do not cover the synapse arrays".into());
+        }
+        if self.neuron_off.windows(2).any(|w| w[0] > w[1])
+            || self.axon_off.windows(2).any(|w| w[0] > w[1])
+        {
+            return Err("offsets not monotonic".into());
+        }
+        for (k, &t) in self.syn_targets.iter().enumerate() {
+            if t >= n {
+                return Err(format!("synapse {k} target {t} out of range"));
+            }
+        }
+        for &o in self.outputs {
+            if o >= n {
+                return Err(format!("output {o} out of range"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Deep-copy the view into an owned [`Network`] (the explicit
+    /// materialisation point — nothing else on the load path copies CSR).
+    pub fn to_network(&self) -> Network {
+        Network {
+            params: self.params.to_vec(),
+            syn_targets: self.syn_targets.to_vec(),
+            syn_weights: self.syn_weights.to_vec(),
+            neuron_off: self.neuron_off.to_vec(),
+            axon_off: self.axon_off.to_vec(),
+            outputs: self.outputs.to_vec(),
+            base_seed: self.base_seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::network::NetworkBuilder;
+    use super::super::neuron::NeuronModel;
+    use super::*;
+
+    fn sample() -> Network {
+        let m = NeuronModel::if_neuron(5);
+        let mut b = NetworkBuilder::new().seed(42);
+        b.add_neuron("a", m, &[("b", 1), ("c", -2)]).unwrap();
+        b.add_neuron("b", m, &[("a", 3)]).unwrap();
+        b.add_neuron("c", m, &[]).unwrap();
+        b.add_axon("in", &[("a", 7), ("b", 1)]).unwrap();
+        b.add_output("a");
+        b.add_output("c");
+        b.build().unwrap().0
+    }
+
+    #[test]
+    fn view_mirrors_network_accessors() {
+        let net = sample();
+        let v = net.view();
+        assert_eq!(v.n_neurons(), net.n_neurons());
+        assert_eq!(v.n_axons(), net.n_axons());
+        assert_eq!(v.n_synapses(), net.n_synapses());
+        assert_eq!(v.base_seed, net.base_seed);
+        for i in 0..net.n_neurons() {
+            assert_eq!(v.neuron_range(i), net.neuron_range(i));
+            assert_eq!(v.neuron_syns(i), net.neuron_syns(i));
+            assert_eq!(v.neuron_targets(i), net.neuron_targets(i));
+            assert_eq!(v.neuron_degree(i), net.neuron_degree(i));
+        }
+        for i in 0..net.n_axons() {
+            assert_eq!(v.axon_range(i), net.axon_range(i));
+            assert_eq!(v.axon_syns(i), net.axon_syns(i));
+            assert_eq!(v.axon_targets(i), net.axon_targets(i));
+            assert_eq!(v.axon_degree(i), net.axon_degree(i));
+        }
+        assert_eq!(v.fan_in(), net.fan_in());
+        assert!(v.is_sorted());
+        v.validate().unwrap();
+    }
+
+    #[test]
+    fn to_network_round_trips() {
+        let net = sample();
+        let copy = net.view().to_network();
+        assert_eq!(copy.params, net.params);
+        assert_eq!(copy.syn_targets, net.syn_targets);
+        assert_eq!(copy.syn_weights, net.syn_weights);
+        assert_eq!(copy.neuron_off, net.neuron_off);
+        assert_eq!(copy.axon_off, net.axon_off);
+        assert_eq!(copy.outputs, net.outputs);
+        assert_eq!(copy.base_seed, net.base_seed);
+    }
+
+    #[test]
+    fn is_sorted_detects_violations() {
+        let mut net = sample();
+        assert!(net.view().is_sorted());
+        // neuron "a" has two synapses; swap them out of order
+        net.syn_targets.swap(0, 1);
+        net.syn_weights.swap(0, 1);
+        assert!(!net.view().is_sorted());
+    }
+}

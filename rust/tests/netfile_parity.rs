@@ -1,0 +1,144 @@
+//! Mmap-vs-heap backend parity: the same `.hsn` v2 file loaded through
+//! the zero-copy [`NetFile`] mapping and through the owned-heap decoder
+//! must drive **bit-identical** runs on every backend (dense, rust,
+//! pool, cluster). The borrowed-CSR view is the only thing the engines
+//! see, so where the bytes live cannot change a single spike.
+
+use hiaer_spike::energy::EnergyModel;
+use hiaer_spike::model_fmt::{hsn_v2_bytes_quantized, open_netfile, read_hsn, write_hsn};
+use hiaer_spike::sim::{Backend, NetSource, SimConfig, Simulator};
+use hiaer_spike::snn::{Network, NetworkBuilder, NeuronModel};
+use hiaer_spike::util::prng::Xorshift32;
+
+fn random_net(seed: u32, n: usize, n_axons: usize) -> Network {
+    let mut rng = Xorshift32::new(seed);
+    let keys: Vec<String> = (0..n).map(|i| format!("n{i}")).collect();
+    let mut b = NetworkBuilder::new().seed(seed);
+    for (i, key) in keys.iter().enumerate() {
+        let model = if i % 3 == 2 {
+            NeuronModel::ann(4 + (i as i32 % 5), 0, rng.chance(0.3)).unwrap()
+        } else {
+            NeuronModel::lif(3 + (i as i32 % 7), 0, 63, rng.chance(0.2)).unwrap()
+        };
+        let syns: Vec<(String, i32)> = (0..rng.below(6))
+            .map(|_| (keys[rng.below(n as u32) as usize].clone(), rng.range_i32(-8, 8)))
+            .collect();
+        let refs: Vec<(&str, i32)> = syns.iter().map(|(k, w)| (k.as_str(), *w)).collect();
+        b.add_neuron(key, model, &refs).unwrap();
+    }
+    for a in 0..n_axons {
+        let syns: Vec<(String, i32)> = (0..1 + rng.below(4))
+            .map(|_| (keys[rng.below(n as u32) as usize].clone(), rng.range_i32(-8, 8)))
+            .collect();
+        let refs: Vec<(&str, i32)> = syns.iter().map(|(k, w)| (k.as_str(), *w)).collect();
+        b.add_axon(&format!("a{a}"), &refs).unwrap();
+    }
+    for key in keys.iter().step_by(3) {
+        b.add_output(key);
+    }
+    b.build().unwrap().0
+}
+
+fn schedule(seed: u32, n_axons: u32, steps: usize) -> Vec<Vec<u32>> {
+    let mut rng = Xorshift32::new(seed);
+    (0..steps).map(|_| (0..n_axons).filter(|_| rng.chance(0.35)).collect()).collect()
+}
+
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("hiaer_netfile_parity_{}_{tag}.hsn", std::process::id()));
+    p
+}
+
+fn build(src: NetSource, which: usize) -> Box<dyn Simulator> {
+    match which {
+        0 => SimConfig::new(src).backend(Backend::Dense).build().unwrap(),
+        1 => SimConfig::new(src).backend(Backend::Rust).build().unwrap(),
+        2 => SimConfig::new(src).backend(Backend::Pool).workers(3).build().unwrap(),
+        // multi-core topology -> the partitioned cluster engine
+        _ => SimConfig::new(src).topology(1, 1, 3).build().unwrap(),
+    }
+}
+
+#[test]
+fn mmap_and_heap_runs_are_bit_identical_on_every_backend() {
+    let net = random_net(11, 60, 12);
+    let path = temp_path("plain");
+    write_hsn(&net, &path).unwrap();
+
+    let heap = read_hsn(&path).unwrap();
+    let file = open_netfile(&path).unwrap();
+    assert_eq!(file.view().to_network().syn_targets, heap.syn_targets);
+
+    let stim = schedule(99, heap.n_axons() as u32, 40);
+    let energy = EnergyModel::default();
+    let all_ids: Vec<u32> = (0..heap.n_neurons() as u32).collect();
+    for which in 0..4 {
+        let mut h = build(NetSource::Owned(heap.clone()), which);
+        let mut m = build(NetSource::Mapped(file.clone()), which);
+        assert_eq!(h.backend_name(), m.backend_name());
+        let rh = h.run(&stim, &energy).unwrap();
+        let rm = m.run(&stim, &energy).unwrap();
+        assert_eq!(rh.steps, rm.steps);
+        assert_eq!(
+            rh.spikes,
+            rm.spikes,
+            "backend {}: mmap and heap sources must spike identically",
+            h.backend_name()
+        );
+        assert_eq!(rh.fired_total, rm.fired_total, "backend {}", h.backend_name());
+        assert_eq!(
+            h.read_membrane(&all_ids),
+            m.read_membrane(&all_ids),
+            "backend {}: final membranes",
+            h.backend_name()
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn quantized_v2_mmap_matches_heap_decode() {
+    let net = random_net(7, 40, 8);
+    let path = temp_path("quant");
+    std::fs::write(&path, hsn_v2_bytes_quantized(&net, 8).unwrap()).unwrap();
+
+    // both loaders dequantize to the same i16 weights...
+    let heap = read_hsn(&path).unwrap();
+    let file = open_netfile(&path).unwrap();
+    assert_eq!(file.view().syn_weights, &heap.syn_weights[..]);
+
+    // ...and runs stay bit-identical across the two sources
+    let stim = schedule(5, heap.n_axons() as u32, 25);
+    let energy = EnergyModel::default();
+    let mut h = SimConfig::new(heap).backend(Backend::Dense).build().unwrap();
+    let mut m = SimConfig::new(file).backend(Backend::Dense).build().unwrap();
+    let rh = h.run(&stim, &energy).unwrap();
+    let rm = m.run(&stim, &energy).unwrap();
+    assert_eq!(rh.spikes, rm.spikes);
+    assert_eq!(rh.fired_total, rm.fired_total);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn seed_override_applies_to_mapped_sources_without_copying() {
+    // the seed override rides on the Copy view, so a mapped (read-only)
+    // source accepts it exactly like an owned one
+    let net = random_net(23, 30, 6);
+    let path = temp_path("seed");
+    write_hsn(&net, &path).unwrap();
+    let file = open_netfile(&path).unwrap();
+    let heap = read_hsn(&path).unwrap();
+
+    let stim = schedule(17, heap.n_axons() as u32, 20);
+    let energy = EnergyModel::default();
+    let mut a = SimConfig::new(file.clone()).seed(1234).build().unwrap();
+    let mut b = SimConfig::new(heap).seed(1234).build().unwrap();
+    assert_eq!(
+        a.run(&stim, &energy).unwrap().spikes,
+        b.run(&stim, &energy).unwrap().spikes
+    );
+    // the mapping itself is untouched: re-opening yields the original seed
+    assert_eq!(open_netfile(&path).unwrap().view().base_seed, net.base_seed);
+    std::fs::remove_file(&path).ok();
+}
