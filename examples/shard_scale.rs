@@ -1,0 +1,128 @@
+//! Sharded scaling (PR 8): run a million-neuron clustered net through
+//! `Backend::Sharded` — real worker subprocesses joined by binary AER
+//! frames over pipes — at 1, 2 and 4 shards on a 4-core topology, and
+//! report the steps/s curve plus the cross-shard-count determinism check
+//! (identical output-spike streams regardless of how many processes the
+//! cores are split across).
+//!
+//! The worker binary is discovered next to this example
+//! (`target/release/hiaer-spike`); set `$HS_BIN` to override.
+//!
+//!     cargo build --release
+//!     cargo run --release --example shard_scale [-- --neurons 1000000 --steps 20]
+
+use anyhow::Result;
+use hiaer_spike::partition::CoreCapacity;
+use hiaer_spike::sim::{SimConfig, Simulator};
+use hiaer_spike::snn::{EdgeList, Network, NeuronModel};
+use hiaer_spike::util::cli::Args;
+use hiaer_spike::util::prng::Xorshift32;
+use std::time::Instant;
+
+/// Clustered random net (the shard-friendly workload): most synapses
+/// stay inside a `block`-sized neighbourhood, so contiguous-core shards
+/// keep the bulk of traffic off the inter-shard pipes — the regime the
+/// paper's hierarchical AER routing is built for.
+fn make_net(n: usize, d: usize, block: usize, p_local: f64, seed: u32) -> Network {
+    let mut rng = Xorshift32::new(seed);
+    let a = 64.min(n);
+    let mut edges = EdgeList::with_capacity(n, a, n * d + a * 8);
+    for i in 0..n {
+        let b0 = (i / block) * block;
+        for _ in 0..d {
+            let target = if rng.chance(p_local) {
+                (b0 + rng.below(block as u32) as usize).min(n - 1) as u32
+            } else {
+                rng.below(n as u32)
+            };
+            edges.push_neuron(i as u32, target, rng.range_i32(5, 40) as i16);
+        }
+    }
+    for ax in 0..a {
+        for _ in 0..8 {
+            edges.push_axon(ax as u32, rng.below(n as u32), 80);
+        }
+    }
+    // deterministic IF neurons: output spikes must be bit-identical
+    // across shard counts, so the parity column below is meaningful
+    edges.into_network(
+        vec![NeuronModel::if_neuron(60); n],
+        (0..(n as u32).min(32)).collect(),
+        seed,
+    )
+}
+
+/// Burst drive every third step, like the hot-path bench.
+fn drive(step: usize, n_axons: usize) -> Vec<u32> {
+    if step % 3 == 0 {
+        (0..n_axons as u32).step_by(2).collect()
+    } else {
+        Vec::new()
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env(&[]).map_err(anyhow::Error::msg)?;
+    let n = args.get_usize("neurons", 1_000_000).map_err(anyhow::Error::msg)?;
+    let degree = args.get_usize("degree", 8).map_err(anyhow::Error::msg)?;
+    let steps = args.get_usize("steps", 20).map_err(anyhow::Error::msg)?;
+
+    let block = (n / 40).max(1);
+    let net = make_net(n, degree, block, 0.95, 11);
+    let cap = CoreCapacity { max_neurons: n.div_ceil(4), max_synapses: usize::MAX };
+    println!(
+        "net: {} neurons, {} synapses, {} axons; topology 1x1x4, {steps} steps\n",
+        net.n_neurons(),
+        net.n_synapses(),
+        net.n_axons()
+    );
+
+    println!("{:>7} {:>12} {:>9} {:>14} {:>8}", "shards", "steps/s", "scaleup", "spikes", "parity");
+    let (mut base_rate, mut base_sig) = (0.0f64, None::<(u64, u64)>);
+    for shards in [1usize, 2, 4] {
+        let mut sim = SimConfig::new(net.clone())
+            .topology(1, 1, 4)
+            .capacity(cap)
+            .shards(shards)
+            .build()?;
+        // spike-stream signature: (total output spikes, order-sensitive
+        // rolling hash) — equal across shard counts iff the merged
+        // cross-shard event streams are bit-identical
+        let (mut total, mut hash) = (0u64, 0u64);
+        let t0 = Instant::now();
+        for s in 0..steps {
+            let out = sim.step(&drive(s, net.n_axons()))?;
+            for &id in out.output_spikes {
+                total += 1;
+                hash = hash.wrapping_mul(0x100000001b3).wrapping_add(id as u64 + 1);
+            }
+            hash = hash.wrapping_mul(0x100000001b3); // step boundary
+        }
+        let rate = steps as f64 / t0.elapsed().as_secs_f64();
+        if shards == 1 {
+            base_rate = rate;
+        }
+        let parity = match base_sig {
+            None => {
+                base_sig = Some((total, hash));
+                "ref"
+            }
+            Some(sig) if sig == (total, hash) => "OK",
+            Some(_) => "FAIL",
+        };
+        println!(
+            "{:>7} {:>12.2} {:>8.2}x {:>14} {:>8}",
+            shards,
+            rate,
+            rate / base_rate,
+            total,
+            parity
+        );
+        assert_ne!(parity, "FAIL", "output spikes diverged at {shards} shards");
+    }
+    println!(
+        "\nparity OK = output spike stream bit-identical to the 1-shard run \
+         (deterministic cross-shard merge)"
+    );
+    Ok(())
+}

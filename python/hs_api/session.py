@@ -253,11 +253,18 @@ class SessionClient:
     # ------------------------------------------------------------------ ops
 
     def configure(self, net_path: str, seed: int | None = None,
-                  workers: int | None = None) -> dict:
+                  workers: int | None = None,
+                  shards: int | None = None) -> dict:
         """Build/replace the server-side simulator. ``workers`` sets the
         worker-thread count of the pooled Rust backends (>= 1; the
         server rejects 0 with a ``config`` error). Spike trains are
         worker-count-invariant — this only tunes throughput.
+
+        ``shards`` selects the multi-process sharded backend with that
+        many worker subprocesses (>= 1, at most the server topology's
+        core count; out-of-range values are rejected with a ``config``
+        error). Spike trains are shard-count-invariant too — the
+        server's cross-shard merge is deterministic.
 
         The response dict includes the server's cold-start breakdown:
         ``load_ms`` (network load — mmap + validate for ``.hsn`` v2,
@@ -268,6 +275,8 @@ class SessionClient:
             fields["seed"] = int(seed)
         if workers is not None:
             fields["workers"] = int(workers)
+        if shards is not None:
+            fields["shards"] = int(shards)
         return self.request("configure", **fields)
 
     def step(self, axons: list[int]) -> list[int]:

@@ -137,6 +137,30 @@ def test_configure_workers_field_is_optional_and_forwarded():
         c3.configure("/tmp/net.hsn", workers=0)
 
 
+def test_configure_shards_field_is_optional_and_forwarded():
+    ok = {"ok": True, "op": "configure", "protocol": 1, "backend": "sharded",
+          "neurons": 4, "axons": 2, "outputs": 2}
+    c = client_with(ok)
+    c.configure("/tmp/net.hsn", shards=2)
+    assert json.loads(c.transport.sent[0]) == {
+        "op": "configure", "net": "/tmp/net.hsn", "shards": 2}
+    # composes with the other optional knobs on one wire line
+    c2 = client_with(ok)
+    c2.configure("/tmp/net.hsn", seed=7, workers=2, shards=4)
+    assert json.loads(c2.transport.sent[0]) == {
+        "op": "configure", "net": "/tmp/net.hsn", "seed": 7,
+        "workers": 2, "shards": 4}
+    # omitted -> not on the wire (server keeps its configured backend)
+    c3 = client_with(ok)
+    c3.configure("/tmp/net.hsn")
+    assert "shards" not in json.loads(c3.transport.sent[0])
+    # the server rejects shards=0 / shards > cores with the `config` code
+    c4 = client_with({"ok": False, "code": "config",
+                      "error": "shards must be >= 1"})
+    with pytest.raises(HsSessionError, match="shards must be >= 1"):
+        c4.configure("/tmp/net.hsn", shards=0)
+
+
 # ----------------------------------------------- stable codes -> exceptions
 
 

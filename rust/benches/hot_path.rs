@@ -13,7 +13,9 @@
 //!    steps/s over 1 and 4 concurrent TCP sessions; since PR 7 it also
 //!    carries the cold-start breakdown (v1 parse vs zero-copy v2 mmap
 //!    load, compile-from-view time, process peak RSS) and asserts the
-//!    mmap load beats the parse;
+//!    mmap load beats the parse; since PR 8 it also carries the
+//!    `Backend::Sharded` multi-process scaling curve (1/2/4 shard
+//!    workers over a 4-core topology, binary AER frames over pipes);
 //! 1. event-driven core engine steps/s across network sizes (rust
 //!    backend), synaptic events/s;
 //! 2. dense software-simulator baseline (the paper's Fig-8 CPU
@@ -458,6 +460,36 @@ fn main() {
          compile {cold_compile_ms:.1} ms, peak RSS {rss_mb:.0} MB"
     );
 
+    // sharded execution (PR 8): a clustered net partitioned over 4
+    // cores, run over 1/2/4 worker subprocesses exchanging binary AER
+    // frames through the parent's HiAER tree router. Spike trains are
+    // pinned bit-identical to the in-process cluster by the facade
+    // parity suite; here we record the wall-clock scaling curve of the
+    // multi-process path (worker spawn + compile excluded — cold start
+    // is covered separately above).
+    let (shn, shd) = (40_000usize, 8usize);
+    let shard_net = make_clustered_net(shn, shd, 2_500, 0.95, 11);
+    let shard_cap = CoreCapacity { max_neurons: shn.div_ceil(4), max_synapses: usize::MAX };
+    let shard_steps = steps.min(100);
+    let shard_rate = |shards: usize| -> f64 {
+        let mut sim = SimConfig::new(shard_net.clone())
+            .topology(1, 1, 4)
+            .capacity(shard_cap)
+            .shards(shards)
+            .shard_bin(env!("CARGO_BIN_EXE_hiaer-spike"))
+            .build()
+            .unwrap();
+        rate(&mut *sim, shard_steps, shard_net.n_axons())
+    };
+    let shard1_rate = shard_rate(1);
+    let shard2_rate = shard_rate(2);
+    let shard4_rate = shard_rate(4);
+    let shard_scaleup = shard4_rate / shard1_rate;
+    println!(
+        "  sharded         : {shard1_rate:>10.0} steps/s 1 shard, {shard2_rate:>10.0} 2 shards, \
+         {shard4_rate:>10.0} 4 shards ({shard_scaleup:.2}x, n = {shn})"
+    );
+
     // ---- append one record to the perf trajectory (one entry per PR)
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -520,6 +552,12 @@ fn main() {
         ("coldstart_load_speedup", Json::Num(cold_speedup)),
         ("coldstart_compile_ms", Json::Num(cold_compile_ms)),
         ("peak_rss_mb", Json::Num(rss_mb)),
+        // sharded execution (PR 8): multi-process steps/s on the 40k
+        // clustered net over a 4-core topology, 1/2/4 shard workers
+        ("shard1_steps_per_s", Json::Num(shard1_rate)),
+        ("shard2_steps_per_s", Json::Num(shard2_rate)),
+        ("shard4_steps_per_s", Json::Num(shard4_rate)),
+        ("shard_scaleup", Json::Num(shard_scaleup)),
     ]));
     let n_records = records.len();
     let doc = obj(vec![

@@ -4,6 +4,7 @@
 mod jobs;
 mod pool;
 mod multicore;
+pub mod shard;
 
 pub use jobs::{
     parse_stimulus, run_job, AdmissionGate, GatePermit, Job, JobQueue, JobResult, JobStatus,

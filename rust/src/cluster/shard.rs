@@ -1,0 +1,1234 @@
+//! Multi-process sharded execution — [`crate::sim::Backend::Sharded`].
+//!
+//! The partitioned cluster engine ([`crate::cluster::MultiCoreEngine`])
+//! runs every core in one address space. This module splits the same
+//! partition across `--shards` **worker subprocesses** (`hiaer-spike
+//! shard-worker`), each running its own [`CorePool`] over a contiguous
+//! block of cores, with the parent process acting as the HiAER tree
+//! router: per-step spikes travel as compact length-prefixed **binary
+//! AER frames** over the children's stdin/stdout pipes. Every worker
+//! maps the shared `.hsn` v2 file read-only ([`crate::model_fmt::NetFile`]),
+//! so N shards share one physical copy of the network via the page
+//! cache.
+//!
+//! # Determinism contract
+//!
+//! A sharded run is **bit-identical** to the single-process cluster
+//! (`Backend::Rust` on the same multi-core topology) — spikes,
+//! membranes and the [`CostSummary`]. Three ingredients:
+//!
+//! * every process (parent and all workers) recomputes the *same*
+//!   [`Partition`] and [`split_network`] from the same file + flags, so
+//!   core membership, local ids, remote-axon numbering and per-core
+//!   noise seeds (`base_seed + core`) agree everywhere;
+//! * the parent merges per-core fired lists in **core index order** and
+//!   runs the one [`HiaerRouter`] exactly as the in-process cluster
+//!   does, so delivery lists (sorted, deduped local axons) are
+//!   identical;
+//! * cost is shipped as raw per-core [`AccessCounters`] + cycles and
+//!   folded through [`EnergyModel::cost`] in core index order, so the
+//!   floating-point energy sum associates identically.
+//!
+//! `rust/tests/sim_facade.rs` pins the parity matrix across shard
+//! counts {1, 2, 4} × worker counts.
+//!
+//! # AER frame wire format
+//!
+//! Every frame is `u32 len (LE) | u8 kind | payload`, where `len`
+//! counts the kind byte plus the payload. All integers little-endian.
+//!
+//! Parent → shard:
+//!
+//! | kind | name       | payload                                              |
+//! |------|------------|------------------------------------------------------|
+//! | 0x01 | UPDATE     | `u64 epoch` — run the membrane sweep                 |
+//! | 0x02 | DELIVER    | `u64 epoch, u32 n_blocks, n×{u32 core, u32 n, n×u32 local_axon}` — route phase inputs (sorted); fire-and-forget |
+//! | 0x03 | READ_MEM   | `u32 n, n×{u32 core, u32 local}` — membrane probe    |
+//! | 0x04 | RESET      | empty                                                |
+//! | 0x05 | RESET_COST | empty                                                |
+//! | 0x06 | COST       | empty                                                |
+//! | 0x07 | SHUTDOWN   | empty — exit the frame loop                          |
+//!
+//! Shard → parent:
+//!
+//! | kind | name  | payload                                                   |
+//! |------|-------|-----------------------------------------------------------|
+//! | 0x80 | READY | `u32 shard, u32 n_cores` — engines built, pool warm       |
+//! | 0x81 | FIRED | `u64 epoch, u32 n_blocks, n×{u32 core, u32 n, n×u32 local_fired}` (ascending) |
+//! | 0x83 | MEMB  | `u32 n, n×i32` — membrane values in request order         |
+//! | 0x84 | ACK   | `u8 kind` — echoes RESET / RESET_COST                     |
+//! | 0x86 | COSTR | `u32 n_blocks, n×{u32 core, 5×u64 counters, u64 cycles}` (ascending core order) |
+//! | 0xEE | ERR   | UTF-8 message — the shard is failing; parent surfaces it  |
+//!
+//! # Tree topology and the step loop
+//!
+//! The routing hierarchy is the paper's HiAER tree (level 0 on-core,
+//! 1 NoC, 2 FireFly, 3 Ethernet — see [`crate::router`]); shards take
+//! contiguous core ranges, so a core's NoC neighbours stay in-process
+//! and only upper-tree traffic crosses the pipes. Per step the parent:
+//!
+//! 1. broadcasts `UPDATE` — all shards sweep membranes concurrently;
+//! 2. collects `FIRED` (epoch-checked) and merges in core order;
+//! 3. runs [`HiaerRouter::route_step`] with the merged fired lists +
+//!    host axon inputs;
+//! 4. broadcasts `DELIVER` **without awaiting a reply** — shards run
+//!    their route phase while the parent already returns to the caller
+//!    (pipe FIFO ordering keeps any later `READ_MEM`/`COST` behind the
+//!    route phase; a route-phase failure therefore surfaces on the
+//!    *next* frame exchange).
+//!
+//! # Fault model
+//!
+//! Every awaited frame has a deadline (`SimOptions::shard_timeout_ms`,
+//! default 30 s): a killed or hung shard yields a typed
+//! [`SimError::Engine`] naming the shard id, never a hang. One reader
+//! thread per child drains its stdout into a channel, so workers can
+//! never block on a full pipe. [`ShardedSim`]'s `Drop` reaps the
+//! children: best-effort `SHUTDOWN`, stdin EOF, a bounded `try_wait`
+//! poll, then `SIGKILL`. `rust/tests/shard_faults.rs` injects the
+//! failures.
+
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::cluster::pool::{CorePool, PoolOptions, RouteGranularity};
+use crate::energy::{CostReport, EnergyModel};
+use crate::engine::{CoreEngine, RustBackend};
+use crate::hbm::{AccessCounters, SlotStrategy};
+use crate::model_fmt::write_hsn;
+use crate::partition::{ClusterTopology, CoreCapacity, Partition};
+use crate::router::{split_network, FabricModel, HiaerRouter};
+use crate::sim::{
+    check_axons, CostSummary, NetSource, SimError, SimOptions, Simulator, StepResult,
+};
+use crate::util::cli::Args;
+
+// ---- frame codec ----------------------------------------------------------
+
+/// Parent → shard frame kinds.
+pub(crate) const K_UPDATE: u8 = 0x01;
+pub(crate) const K_DELIVER: u8 = 0x02;
+pub(crate) const K_READ_MEM: u8 = 0x03;
+pub(crate) const K_RESET: u8 = 0x04;
+pub(crate) const K_RESET_COST: u8 = 0x05;
+pub(crate) const K_COST: u8 = 0x06;
+pub(crate) const K_SHUTDOWN: u8 = 0x07;
+
+/// Shard → parent frame kinds.
+pub(crate) const K_READY: u8 = 0x80;
+pub(crate) const K_FIRED: u8 = 0x81;
+pub(crate) const K_MEMB: u8 = 0x83;
+pub(crate) const K_ACK: u8 = 0x84;
+pub(crate) const K_COSTR: u8 = 0x86;
+pub(crate) const K_ERR: u8 = 0xEE;
+
+/// Upper bound on one frame's payload — a corrupted length prefix must
+/// not drive a multi-GiB allocation. 256 MiB comfortably fits a
+/// whole-net burst (4 bytes/event ≈ 67M events).
+const MAX_FRAME_BYTES: u32 = 256 * 1024 * 1024;
+
+/// Write one `len | kind | payload` frame. The caller flushes.
+fn write_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> io::Result<()> {
+    let len = 1u32
+        .checked_add(payload.len() as u32)
+        .filter(|&l| l <= MAX_FRAME_BYTES)
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "frame too large"))?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&[kind])?;
+    w.write_all(payload)
+}
+
+/// Read one frame. `Ok(None)` on clean EOF **at the length prefix**
+/// (the peer closed between frames); EOF mid-frame is an error.
+fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<(u8, Vec<u8>)>> {
+    let mut len_buf = [0u8; 4];
+    // manual first-byte read so EOF-between-frames is distinguishable
+    match r.read(&mut len_buf[..1])? {
+        0 => return Ok(None),
+        _ => r.read_exact(&mut len_buf[1..])?,
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("bad frame length {len}"),
+        ));
+    }
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind)?;
+    let mut payload = vec![0u8; len as usize - 1];
+    r.read_exact(&mut payload)?;
+    Ok(Some((kind[0], payload)))
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i32(buf: &mut Vec<u8>, v: i32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Cursor over a frame payload; every read is bounds-checked so a
+/// malformed peer yields a typed error, never a panic.
+struct Payload<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Payload<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Payload { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let s = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(s)
+            }
+            None => bail!("truncated frame payload (want {n} at {}, have {})", self.pos, self.buf.len()),
+        }
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> anyhow::Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> anyhow::Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes in frame payload", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+fn kind_name(kind: u8) -> &'static str {
+    match kind {
+        K_UPDATE => "UPDATE",
+        K_DELIVER => "DELIVER",
+        K_READ_MEM => "READ_MEM",
+        K_RESET => "RESET",
+        K_RESET_COST => "RESET_COST",
+        K_COST => "COST",
+        K_SHUTDOWN => "SHUTDOWN",
+        K_READY => "READY",
+        K_FIRED => "FIRED",
+        K_MEMB => "MEMB",
+        K_ACK => "ACK",
+        K_COSTR => "COSTR",
+        K_ERR => "ERR",
+        _ => "?",
+    }
+}
+
+// ---- shard geometry -------------------------------------------------------
+
+/// Contiguous core range of shard `s` out of `shards`: `n_cores` split
+/// into near-equal blocks, the first `n_cores % shards` one core
+/// larger. Contiguity keeps NoC-level neighbours in one process.
+pub(crate) fn shard_core_range(n_cores: usize, shards: usize, s: usize) -> (usize, usize) {
+    debug_assert!(s < shards && shards <= n_cores.max(1));
+    let base = n_cores / shards;
+    let rem = n_cores % shards;
+    let lo = s * base + s.min(rem);
+    let hi = lo + base + usize::from(s < rem);
+    (lo, hi)
+}
+
+/// Inverse of [`shard_core_range`]: which shard owns `core`.
+fn shard_of_core(n_cores: usize, shards: usize, core: usize) -> usize {
+    for s in 0..shards {
+        let (lo, hi) = shard_core_range(n_cores, shards, s);
+        if core >= lo && core < hi {
+            return s;
+        }
+    }
+    unreachable!("core {core} outside every shard range ({n_cores} cores, {shards} shards)")
+}
+
+// local strategy/route name maps: the `sim::config` parsers are private
+// to the facade module, and the worker needs the reverse direction too.
+fn strategy_name(s: SlotStrategy) -> &'static str {
+    match s {
+        SlotStrategy::Modulo => "modulo",
+        SlotStrategy::BalanceFanIn => "balance",
+    }
+}
+
+fn strategy_from_name(s: &str) -> anyhow::Result<SlotStrategy> {
+    match s {
+        "modulo" => Ok(SlotStrategy::Modulo),
+        "balance" => Ok(SlotStrategy::BalanceFanIn),
+        other => bail!("shard-worker: unknown --strategy {other:?}"),
+    }
+}
+
+fn route_name(r: RouteGranularity) -> &'static str {
+    match r {
+        RouteGranularity::Core => "core",
+        RouteGranularity::Chunk => "chunk",
+    }
+}
+
+fn route_from_name(s: &str) -> anyhow::Result<RouteGranularity> {
+    match s {
+        "core" => Ok(RouteGranularity::Core),
+        "chunk" => Ok(RouteGranularity::Chunk),
+        other => bail!("shard-worker: unknown --route {other:?}"),
+    }
+}
+
+// ---- parent side ----------------------------------------------------------
+
+/// Default per-frame deadline when `SimOptions::shard_timeout_ms` is
+/// unset.
+const DEFAULT_FRAME_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// READY can legitimately take much longer than a step frame (the
+/// worker maps the net, partitions, splits and compiles every HBM
+/// image first), so the build deadline is at least this.
+const MIN_READY_TIMEOUT: Duration = Duration::from_secs(600);
+
+static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Guard for a temp-exported `.hsn` handed to the workers (owned
+/// in-memory nets have no path of their own); deletes the file on drop.
+struct TempNet {
+    path: PathBuf,
+}
+
+impl Drop for TempNet {
+    fn drop(&mut self) {
+        std::fs::remove_file(&self.path).ok();
+    }
+}
+
+/// Resolve the `hiaer-spike` binary to spawn as `shard-worker`:
+/// explicit option, `$HS_BIN`, the running executable itself (when it
+/// *is* the CLI), then `hiaer-spike` next to it / one dir up (covers
+/// `target/{debug,release}/deps/<test-bin>`).
+fn resolve_shard_bin(opts: &SimOptions) -> Result<PathBuf, SimError> {
+    if let Some(bin) = &opts.shard_bin {
+        return Ok(bin.clone());
+    }
+    if let Ok(env_bin) = std::env::var("HS_BIN") {
+        if !env_bin.is_empty() {
+            return Ok(PathBuf::from(env_bin));
+        }
+    }
+    if let Ok(exe) = std::env::current_exe() {
+        if exe.file_stem().map(|s| s == "hiaer-spike").unwrap_or(false) {
+            return Ok(exe);
+        }
+        for dir in [exe.parent(), exe.parent().and_then(Path::parent)].into_iter().flatten() {
+            let cand = dir.join("hiaer-spike");
+            if cand.is_file() {
+                return Ok(cand);
+            }
+        }
+    }
+    Err(SimError::Config(
+        "cannot locate the `hiaer-spike` binary for shard workers; set $HS_BIN or \
+         SimConfig::shard_bin"
+            .into(),
+    ))
+}
+
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One live worker subprocess: its pipes, the reader thread draining
+/// its stdout into `rx`, and the reaping logic.
+struct ShardLink {
+    shard: usize,
+    child: Child,
+    stdin: Option<std::process::ChildStdin>,
+    rx: mpsc::Receiver<io::Result<(u8, Vec<u8>)>>,
+    reader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardLink {
+    fn spawn(bin: &Path, shard: usize, worker_args: &[String]) -> Result<ShardLink, SimError> {
+        let mut child = Command::new(bin)
+            .arg("shard-worker")
+            .args(worker_args)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .map_err(|e| {
+                SimError::Engine(anyhow!("spawning shard {shard} ({}): {e}", bin.display()))
+            })?;
+        let stdin = child.stdin.take();
+        let stdout = child.stdout.take().expect("piped stdout");
+        let (tx, rx) = mpsc::channel();
+        // One reader per child: drains stdout continuously so the worker
+        // can never block writing a large FIRED frame, and converts EOF /
+        // IO errors into channel disconnection the parent can type.
+        let reader = std::thread::Builder::new()
+            .name(format!("hiaer-shard-rx-{shard}"))
+            .spawn(move || {
+                let mut r = io::BufReader::new(stdout);
+                loop {
+                    match read_frame(&mut r) {
+                        Ok(Some(frame)) => {
+                            if tx.send(Ok(frame)).is_err() {
+                                break; // parent gone
+                            }
+                        }
+                        Ok(None) => break, // clean EOF
+                        Err(e) => {
+                            tx.send(Err(e)).ok();
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawn shard reader thread");
+        Ok(ShardLink { shard, child, stdin, rx, reader: Some(reader) })
+    }
+
+    fn send(&mut self, kind: u8, payload: &[u8]) -> Result<(), SimError> {
+        let shard = self.shard;
+        let w = self.stdin.as_mut().ok_or_else(|| {
+            SimError::Engine(anyhow!("shard {shard}: stdin already closed"))
+        })?;
+        write_frame(w, kind, payload)
+            .and_then(|_| w.flush())
+            .map_err(|e| SimError::Engine(anyhow!("shard {shard}: writing {} frame: {e}", kind_name(kind))))
+    }
+
+    /// Await the next frame with a deadline. ERR frames and dead/hung
+    /// shards become typed engine errors naming the shard.
+    fn recv(&mut self, want: u8, timeout: Duration) -> Result<Vec<u8>, SimError> {
+        let shard = self.shard;
+        match self.rx.recv_timeout(timeout) {
+            Ok(Ok((kind, payload))) if kind == want => Ok(payload),
+            Ok(Ok((kind, payload))) if kind == K_ERR => {
+                let msg = String::from_utf8_lossy(&payload).into_owned();
+                Err(SimError::Engine(anyhow!("shard {shard} failed: {msg}")))
+            }
+            Ok(Ok((kind, _))) => Err(SimError::Engine(anyhow!(
+                "shard {shard}: protocol error — expected {} frame, got {} (0x{kind:02x})",
+                kind_name(want),
+                kind_name(kind),
+            ))),
+            Ok(Err(e)) => {
+                Err(SimError::Engine(anyhow!("shard {shard}: pipe read failed: {e}")))
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(SimError::Engine(anyhow!(
+                "shard {shard}: no {} frame within {timeout:?} (worker hung or overloaded)",
+                kind_name(want),
+            ))),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                let status = self
+                    .child
+                    .try_wait()
+                    .ok()
+                    .flatten()
+                    .map(|s| format!(" (exit status: {s})"))
+                    .unwrap_or_default();
+                Err(SimError::Engine(anyhow!(
+                    "shard {shard}: worker process died mid-session{status}"
+                )))
+            }
+        }
+    }
+}
+
+impl Drop for ShardLink {
+    fn drop(&mut self) {
+        // best-effort orderly shutdown: SHUTDOWN frame, then stdin EOF
+        if let Some(mut w) = self.stdin.take() {
+            let _ = write_frame(&mut w, K_SHUTDOWN, &[]).and_then(|_| w.flush());
+            drop(w);
+        }
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            match self.child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                _ => {
+                    self.child.kill().ok();
+                    self.child.wait().ok();
+                    break;
+                }
+            }
+        }
+        // child dead => its stdout is EOF => the reader thread exits
+        if let Some(h) = self.reader.take() {
+            h.join().ok();
+        }
+    }
+}
+
+/// The sharded cluster as a [`Simulator`]: parent-side router plus the
+/// worker links. See the module docs for the protocol and contracts.
+pub struct ShardedSim {
+    partition: Partition,
+    router: HiaerRouter,
+    /// Worker links behind a mutex so the `&self` trait surface
+    /// (`cost`, `read_membrane`) can exchange frames. Declared before
+    /// `temp_net` so children are reaped before the file is deleted.
+    links: Mutex<Vec<ShardLink>>,
+    shards: usize,
+    n_axons: usize,
+    is_output: Vec<bool>,
+    fired_by_core: Vec<Vec<u32>>,
+    fired_global: Vec<u32>,
+    out_global: Vec<u32>,
+    epoch: u64,
+    timeout: Duration,
+    _temp_net: Option<TempNet>,
+}
+
+impl ShardedSim {
+    /// Build the sharded session. Hidden from docs: external callers go
+    /// through [`crate::sim::SimConfig::build`]; integration tests use
+    /// this to reach [`ShardedSim::shard_pids`].
+    #[doc(hidden)]
+    pub fn build(src: NetSource, opts: &SimOptions) -> Result<ShardedSim, SimError> {
+        let n_cores = opts.topology.n_cores();
+        let shards = match opts.shards {
+            Some(0) => {
+                return Err(SimError::Config(
+                    "shards must be >= 1 (every shard runs at least one core)".into(),
+                ))
+            }
+            Some(n) => n,
+            None => n_cores.min(2).max(1),
+        };
+        if shards > n_cores {
+            return Err(SimError::Config(format!(
+                "shards ({shards}) exceeds the topology's core count ({n_cores}); \
+                 each shard needs at least one core"
+            )));
+        }
+        let bin = resolve_shard_bin(opts)?;
+
+        // Hand every worker a mappable path. Mapped sources already have
+        // one; owned nets (and pathless mapped handles) are exported to
+        // a temp `.hsn` v2 that lives as long as the session.
+        let (net_path, temp_net) = match &src {
+            NetSource::Mapped(file) if file.path().is_some() => {
+                (file.path().unwrap().to_path_buf(), None)
+            }
+            _ => {
+                let path = std::env::temp_dir().join(format!(
+                    "hiaer_shard_{}_{}.hsn",
+                    std::process::id(),
+                    TEMP_COUNTER.fetch_add(1, Ordering::Relaxed),
+                ));
+                write_hsn(src.view(), &path)
+                    .map_err(|e| SimError::Engine(anyhow!("exporting net for shards: {e}")))?;
+                (path.clone(), Some(TempNet { path }))
+            }
+        };
+
+        // The parent recomputes the partition + split for the routing
+        // table (the subnets themselves live only in the workers).
+        let mut view = src.view();
+        if let Some(seed) = opts.seed {
+            view.base_seed = seed;
+        }
+        let partition = Partition::compute(view, opts.topology, opts.capacity)
+            .map_err(|e| SimError::Engine(anyhow!(e)))?;
+        let split = split_network(view, &partition);
+        let router = HiaerRouter::new(opts.topology, FabricModel::default(), split.table);
+        drop(split.subnets);
+        let n_axons = view.n_axons();
+        let mut is_output = vec![false; view.n_neurons()];
+        for &o in view.outputs {
+            is_output[o as usize] = true;
+        }
+
+        let mut worker_args: Vec<String> = vec![
+            "--net".into(),
+            net_path.display().to_string(),
+            "--shards".into(),
+            shards.to_string(),
+            "--servers".into(),
+            opts.topology.servers.to_string(),
+            "--fpgas".into(),
+            opts.topology.fpgas_per_server.to_string(),
+            "--cores".into(),
+            opts.topology.cores_per_fpga.to_string(),
+            "--strategy".into(),
+            strategy_name(opts.strategy).into(),
+            "--route".into(),
+            route_name(opts.route).into(),
+            "--cap-neurons".into(),
+            opts.capacity.max_neurons.to_string(),
+            "--cap-synapses".into(),
+            opts.capacity.max_synapses.to_string(),
+        ];
+        if let Some(seed) = opts.seed {
+            worker_args.extend(["--seed".into(), seed.to_string()]);
+        }
+        if let Some(w) = opts.workers {
+            worker_args.extend(["--workers".into(), w.to_string()]);
+        }
+        if let Some(cw) = opts.chunk_words {
+            worker_args.extend(["--chunk-words".into(), cw.to_string()]);
+        }
+        if let Some(rp) = opts.route_chunk_ptrs {
+            worker_args.extend(["--route-chunk-ptrs".into(), rp.to_string()]);
+        }
+
+        let timeout = opts
+            .shard_timeout_ms
+            .map(Duration::from_millis)
+            .unwrap_or(DEFAULT_FRAME_TIMEOUT);
+        let mut links = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let mut args = worker_args.clone();
+            args.extend(["--shard".into(), s.to_string()]);
+            links.push(ShardLink::spawn(&bin, s, &args)?);
+        }
+        // Await READY from every worker (build can dwarf a step frame).
+        let ready_timeout = timeout.max(MIN_READY_TIMEOUT);
+        for (s, link) in links.iter_mut().enumerate() {
+            let payload = link.recv(K_READY, ready_timeout)?;
+            let mut p = Payload::new(&payload);
+            let got_shard = (|| -> anyhow::Result<(u32, u32)> {
+                let a = p.u32()?;
+                let b = p.u32()?;
+                p.done()?;
+                Ok((a, b))
+            })()
+            .map_err(|e| SimError::Engine(anyhow!("shard {s}: bad READY frame: {e}")))?;
+            let (lo, hi) = shard_core_range(n_cores, shards, s);
+            if got_shard != (s as u32, (hi - lo) as u32) {
+                return Err(SimError::Engine(anyhow!(
+                    "shard {s}: READY mismatch — got shard {} with {} cores, expected \
+                     shard {s} with {} cores (binary/flag skew?)",
+                    got_shard.0,
+                    got_shard.1,
+                    hi - lo,
+                )));
+            }
+        }
+
+        Ok(ShardedSim {
+            fired_by_core: vec![Vec::new(); n_cores],
+            partition,
+            router,
+            links: Mutex::new(links),
+            shards,
+            n_axons,
+            is_output,
+            fired_global: Vec::new(),
+            out_global: Vec::new(),
+            epoch: 0,
+            timeout,
+            _temp_net: temp_net,
+        })
+    }
+
+    /// Worker subprocess pids, in shard order (fault-injection tests).
+    #[doc(hidden)]
+    pub fn shard_pids(&self) -> Vec<u32> {
+        plock(&self.links).iter().map(|l| l.child.id()).collect()
+    }
+
+    /// Shard count behind this session.
+    pub fn n_shards(&self) -> usize {
+        self.shards
+    }
+
+    fn step_inner(&mut self, axon_in: &[u32]) -> Result<(), SimError> {
+        self.epoch += 1;
+        let epoch = self.epoch;
+        let n_cores = self.partition.topology.n_cores();
+        let mut links = plock(&self.links);
+
+        // phase A: broadcast UPDATE — every shard sweeps concurrently
+        let mut update = Vec::with_capacity(8);
+        put_u64(&mut update, epoch);
+        for link in links.iter_mut() {
+            link.send(K_UPDATE, &update)?;
+        }
+
+        // collect FIRED; merge per-core lists in core index order
+        for buf in &mut self.fired_by_core {
+            buf.clear();
+        }
+        for link in links.iter_mut() {
+            let shard = link.shard;
+            let payload = link.recv(K_FIRED, self.timeout)?;
+            let mut p = Payload::new(&payload);
+            (|| -> anyhow::Result<()> {
+                let got_epoch = p.u64()?;
+                if got_epoch != epoch {
+                    bail!("FIRED epoch {got_epoch}, expected {epoch} (desynchronised)");
+                }
+                let (lo, hi) = shard_core_range(n_cores, self.shards, shard);
+                let n_blocks = p.u32()? as usize;
+                for _ in 0..n_blocks {
+                    let core = p.u32()? as usize;
+                    if core < lo || core >= hi {
+                        bail!("FIRED block for core {core} outside shard range {lo}..{hi}");
+                    }
+                    let n = p.u32()? as usize;
+                    let bytes = p.take(n * 4)?;
+                    let g = &self.partition.members[core];
+                    let buf = &mut self.fired_by_core[core];
+                    for c in bytes.chunks_exact(4) {
+                        let local = u32::from_le_bytes(c.try_into().unwrap()) as usize;
+                        let global = *g
+                            .get(local)
+                            .ok_or_else(|| anyhow!("fired local id {local} out of range on core {core}"))?;
+                        buf.push(global);
+                    }
+                }
+                p.done()
+            })()
+            .map_err(|e| SimError::Engine(anyhow!("shard {shard}: bad FIRED frame: {e}")))?;
+        }
+        self.fired_global.clear();
+        for buf in &self.fired_by_core {
+            self.fired_global.extend_from_slice(buf);
+        }
+        self.fired_global.sort_unstable();
+
+        // barrier: the parent-side HiAER multicast (identical inputs to
+        // the in-process cluster => identical sorted delivery lists)
+        let pending = self.router.route_step(&self.fired_by_core, axon_in);
+
+        // phase B: DELIVER fire-and-forget — shards route while we return
+        for link in links.iter_mut() {
+            let shard = link.shard;
+            let (lo, hi) = shard_core_range(n_cores, self.shards, shard);
+            let mut payload = Vec::new();
+            put_u64(&mut payload, epoch);
+            let n_blocks = pending[lo..hi].iter().filter(|p| !p.is_empty()).count();
+            put_u32(&mut payload, n_blocks as u32);
+            for (c, axons) in pending[lo..hi].iter().enumerate() {
+                if axons.is_empty() {
+                    continue;
+                }
+                put_u32(&mut payload, (lo + c) as u32);
+                put_u32(&mut payload, axons.len() as u32);
+                for &a in axons {
+                    put_u32(&mut payload, a);
+                }
+            }
+            link.send(K_DELIVER, &payload)?;
+        }
+
+        // outputs: out_buf is the fired-set filtered per core, so the
+        // global concat+sort equals filtering the merged fired list
+        self.out_global.clear();
+        self.out_global
+            .extend(self.fired_global.iter().copied().filter(|&g| self.is_output[g as usize]));
+        Ok(())
+    }
+}
+
+impl Simulator for ShardedSim {
+    fn step(&mut self, axon_in: &[u32]) -> Result<StepResult<'_>, SimError> {
+        check_axons(axon_in, self.n_axons)?;
+        self.step_inner(axon_in)?;
+        Ok(StepResult { fired: &self.fired_global, output_spikes: &self.out_global })
+    }
+
+    fn fired(&self) -> &[u32] {
+        &self.fired_global
+    }
+
+    fn output_spikes(&self) -> &[u32] {
+        &self.out_global
+    }
+
+    fn reset(&mut self) {
+        let mut links = plock(&self.links);
+        for link in links.iter_mut() {
+            // &mut self but no Result surface: a dead shard will surface
+            // a typed error on the next step's frame exchange
+            if link.send(K_RESET, &[]).is_ok() {
+                link.recv(K_ACK, self.timeout).ok();
+            }
+        }
+        drop(links);
+        self.router.reset_stats();
+        self.fired_global.clear();
+        self.out_global.clear();
+        for buf in &mut self.fired_by_core {
+            buf.clear();
+        }
+    }
+
+    fn reset_cost(&mut self) {
+        let mut links = plock(&self.links);
+        for link in links.iter_mut() {
+            if link.send(K_RESET_COST, &[]).is_ok() {
+                link.recv(K_ACK, self.timeout).ok();
+            }
+        }
+        drop(links);
+        self.router.reset_stats();
+    }
+
+    fn read_membrane(&self, ids: &[u32]) -> Vec<i32> {
+        // group the probe by owning shard, preserving result order
+        let n_cores = self.partition.topology.n_cores();
+        let mut per_shard: Vec<Vec<u8>> = vec![Vec::new(); self.shards];
+        let mut counts: Vec<u32> = vec![0; self.shards];
+        let mut slot: Vec<(usize, u32)> = Vec::with_capacity(ids.len());
+        for &g in ids {
+            let core = self.partition.core_of[g as usize] as usize;
+            let local = self.partition.local_of[g as usize];
+            let s = shard_of_core(n_cores, self.shards, core);
+            slot.push((s, counts[s]));
+            counts[s] += 1;
+            put_u32(&mut per_shard[s], core as u32);
+            put_u32(&mut per_shard[s], local);
+        }
+        let mut replies: Vec<Vec<i32>> = Vec::with_capacity(self.shards);
+        let mut links = plock(&self.links);
+        for (s, link) in links.iter_mut().enumerate() {
+            if counts[s] == 0 {
+                replies.push(Vec::new());
+                continue;
+            }
+            let mut payload = Vec::with_capacity(4 + per_shard[s].len());
+            put_u32(&mut payload, counts[s]);
+            payload.extend_from_slice(&per_shard[s]);
+            // the trait surface has no Result here; failure is a contract
+            // violation the fault tests catch on `step` instead
+            link.send(K_MEMB_REQ, &payload)
+                .and_then(|_| link.recv(K_MEMB, self.timeout))
+                .map(|reply| {
+                    let mut p = Payload::new(&reply);
+                    let mut vals = Vec::new();
+                    if let Ok(n) = p.u32() {
+                        for _ in 0..n {
+                            match p.i32() {
+                                Ok(v) => vals.push(v),
+                                Err(_) => break,
+                            }
+                        }
+                    }
+                    replies.push(vals);
+                })
+                .unwrap_or_else(|e| panic!("shard {s}: membrane read failed: {e}"));
+        }
+        drop(links);
+        slot.iter()
+            .map(|&(s, i)| replies[s].get(i as usize).copied().unwrap_or_else(|| {
+                panic!("shard {s}: short MEMB reply ({} values)", replies[s].len())
+            }))
+            .collect()
+    }
+
+    fn cost(&self, model: &EnergyModel) -> CostSummary {
+        // fold per-core reports in core index order — bit-identical f64
+        // association with the in-process cluster
+        let n_cores = self.partition.topology.n_cores();
+        let mut energy = 0.0f64;
+        let mut max_cycles = 0u64;
+        let mut rows = 0u64;
+        let mut events = 0u64;
+        let mut links = plock(&self.links);
+        for link in links.iter_mut() {
+            let shard = link.shard;
+            let reply = link
+                .send(K_COST, &[])
+                .and_then(|_| link.recv(K_COSTR, self.timeout))
+                .unwrap_or_else(|e| panic!("shard {shard}: cost read failed: {e}"));
+            let mut p = Payload::new(&reply);
+            let parse = (|| -> anyhow::Result<()> {
+                let (lo, hi) = shard_core_range(n_cores, self.shards, shard);
+                let n_blocks = p.u32()? as usize;
+                if n_blocks != hi - lo {
+                    bail!("COSTR has {n_blocks} blocks, expected {}", hi - lo);
+                }
+                let mut expect_core = lo as u32;
+                for _ in 0..n_blocks {
+                    let core = p.u32()?;
+                    if core != expect_core {
+                        bail!("COSTR block for core {core}, expected {expect_core}");
+                    }
+                    expect_core += 1;
+                    let counters = AccessCounters {
+                        pointer_rows: p.u64()?,
+                        synapse_rows: p.u64()?,
+                        events: p.u64()?,
+                        uram_accesses: p.u64()?,
+                        bram_accesses: p.u64()?,
+                    };
+                    let cycles = p.u64()?;
+                    let r: CostReport = model.cost(&counters, cycles);
+                    energy += r.energy_uj;
+                    max_cycles = max_cycles.max(r.cycles);
+                    rows += r.hbm_rows;
+                    events += counters.events;
+                }
+                p.done()
+            })();
+            if let Err(e) = parse {
+                panic!("shard {shard}: bad COSTR frame: {e}");
+            }
+        }
+        drop(links);
+        let total_cycles = max_cycles + self.router.stats.cycles;
+        CostSummary {
+            energy_uj: energy,
+            latency_us: total_cycles as f64 / model.clk_hz * 1e6,
+            hbm_rows: rows,
+            events,
+            cycles: total_cycles,
+            router: Some(self.router.stats),
+        }
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn n_neurons(&self) -> usize {
+        self.partition.core_of.len()
+    }
+
+    fn n_axons(&self) -> usize {
+        self.n_axons
+    }
+
+    fn n_cores(&self) -> usize {
+        self.partition.topology.n_cores()
+    }
+
+    fn placement(&self) -> Option<&Partition> {
+        Some(&self.partition)
+    }
+}
+
+/// READ_MEM under its protocol name (the parent-side alias keeps the
+/// send-site readable).
+const K_MEMB_REQ: u8 = K_READ_MEM;
+
+// ---- worker side ----------------------------------------------------------
+
+/// Entry point of the `hiaer-spike shard-worker` subcommand: configure
+/// this shard's core block from `--net`, then serve binary AER frames
+/// on stdin/stdout until SHUTDOWN / EOF. All logging goes to stderr —
+/// stdout carries frames only.
+pub fn shard_worker_main(args: &Args) -> anyhow::Result<()> {
+    let result = shard_worker_run(args);
+    if let Err(e) = &result {
+        // best-effort typed error to the parent before exiting nonzero
+        let stdout = io::stdout();
+        let mut w = stdout.lock();
+        let msg = format!("{e:#}");
+        write_frame(&mut w, K_ERR, msg.as_bytes()).and_then(|_| w.flush()).ok();
+    }
+    result
+}
+
+fn shard_worker_run(args: &Args) -> anyhow::Result<()> {
+    let net_path = args.get("net").context("shard-worker: missing --net")?;
+    let shard = args.get_usize("shard", 0).map_err(anyhow::Error::msg)?;
+    let shards = args.get_usize("shards", 1).map_err(anyhow::Error::msg)?;
+    let topology = ClusterTopology {
+        servers: args.get_usize("servers", 1).map_err(anyhow::Error::msg)?,
+        fpgas_per_server: args.get_usize("fpgas", 1).map_err(anyhow::Error::msg)?,
+        cores_per_fpga: args.get_usize("cores", 1).map_err(anyhow::Error::msg)?,
+    };
+    let default_cap = CoreCapacity::default();
+    let cap = CoreCapacity {
+        max_neurons: args
+            .get_usize("cap-neurons", default_cap.max_neurons)
+            .map_err(anyhow::Error::msg)?,
+        max_synapses: args
+            .get_usize("cap-synapses", default_cap.max_synapses)
+            .map_err(anyhow::Error::msg)?,
+    };
+    let strategy = strategy_from_name(args.get_or("strategy", "balance"))?;
+    let route = route_from_name(args.get_or("route", "chunk"))?;
+    let pool_opts = PoolOptions {
+        chunk_words: match args.get("chunk-words") {
+            None => None,
+            Some(_) => Some(args.get_usize("chunk-words", 0).map_err(anyhow::Error::msg)?),
+        },
+        route,
+        route_chunk_ptrs: match args.get("route-chunk-ptrs") {
+            None => None,
+            Some(_) => Some(args.get_usize("route-chunk-ptrs", 0).map_err(anyhow::Error::msg)?),
+        },
+        workers: match args.get("workers") {
+            None => None,
+            Some(_) => Some(args.get_usize("workers", 0).map_err(anyhow::Error::msg)?),
+        },
+    };
+    let n_cores = topology.n_cores();
+    if shards == 0 || shard >= shards || shards > n_cores {
+        bail!("shard-worker: bad geometry (shard {shard} of {shards}, {n_cores} cores)");
+    }
+
+    // Identical partition + split as the parent (and every sibling): the
+    // determinism contract rests on this recomputation agreeing.
+    let src = NetSource::from_path(net_path).map_err(|e| anyhow!("{e}"))?;
+    let mut view = src.view();
+    if args.get("seed").is_some() {
+        view.base_seed = args.get_u32("seed", 0).map_err(anyhow::Error::msg)?;
+    }
+    let partition = Partition::compute(view, topology, cap).map_err(anyhow::Error::msg)?;
+    let split = split_network(view, &partition);
+    let (lo, hi) = shard_core_range(n_cores, shards, shard);
+    let mut cores = Vec::with_capacity(hi - lo);
+    for sub in split.subnets.into_iter().skip(lo).take(hi - lo) {
+        cores.push(CoreEngine::new(&sub, strategy, RustBackend)?);
+    }
+    let n_local = cores.len();
+    let mut pool = CorePool::with_options(cores, pool_opts);
+
+    let stdin = io::stdin();
+    let mut r = stdin.lock();
+    let stdout = io::stdout();
+    let mut w = io::BufWriter::new(stdout.lock());
+
+    let mut ready = Vec::with_capacity(8);
+    put_u32(&mut ready, shard as u32);
+    put_u32(&mut ready, n_local as u32);
+    write_frame(&mut w, K_READY, &ready)?;
+    w.flush()?;
+
+    let mut last_epoch = 0u64;
+    let mut inputs: Vec<Vec<u32>> = vec![Vec::new(); n_local];
+    let mut out = Vec::new();
+    loop {
+        let Some((kind, payload)) = read_frame(&mut r)? else {
+            break; // parent closed our stdin: clean shutdown
+        };
+        let mut p = Payload::new(&payload);
+        match kind {
+            K_UPDATE => {
+                last_epoch = p.u64()?;
+                p.done()?;
+                pool.phase_update()?;
+                out.clear();
+                put_u64(&mut out, last_epoch);
+                let n_blocks = (0..n_local).filter(|&c| !pool.core(c).fired().is_empty()).count();
+                put_u32(&mut out, n_blocks as u32);
+                for c in 0..n_local {
+                    let fired = pool.core(c).fired();
+                    if fired.is_empty() {
+                        continue;
+                    }
+                    put_u32(&mut out, (lo + c) as u32);
+                    put_u32(&mut out, fired.len() as u32);
+                    for &l in fired {
+                        put_u32(&mut out, l);
+                    }
+                }
+                write_frame(&mut w, K_FIRED, &out)?;
+                w.flush()?;
+            }
+            K_DELIVER => {
+                let epoch = p.u64()?;
+                if epoch != last_epoch {
+                    bail!("DELIVER epoch {epoch}, expected {last_epoch} (desynchronised)");
+                }
+                for buf in &mut inputs {
+                    buf.clear();
+                }
+                let n_blocks = p.u32()? as usize;
+                for _ in 0..n_blocks {
+                    let core = p.u32()? as usize;
+                    if core < lo || core >= hi {
+                        bail!("DELIVER block for core {core} outside shard range {lo}..{hi}");
+                    }
+                    let n = p.u32()? as usize;
+                    let bytes = p.take(n * 4)?;
+                    let buf = &mut inputs[core - lo];
+                    buf.reserve(n);
+                    for c in bytes.chunks_exact(4) {
+                        buf.push(u32::from_le_bytes(c.try_into().unwrap()));
+                    }
+                }
+                p.done()?;
+                // fire-and-forget: no reply — the parent overlaps this
+                // route phase with its own return to the caller
+                pool.phase_route(&inputs)?;
+            }
+            K_READ_MEM => {
+                let n = p.u32()? as usize;
+                out.clear();
+                put_u32(&mut out, n as u32);
+                for _ in 0..n {
+                    let core = p.u32()? as usize;
+                    let local = p.u32()? as usize;
+                    if core < lo || core >= hi {
+                        bail!("READ_MEM probe for core {core} outside shard range {lo}..{hi}");
+                    }
+                    let v = *pool
+                        .core(core - lo)
+                        .v
+                        .get(local)
+                        .ok_or_else(|| anyhow!("READ_MEM local id {local} out of range on core {core}"))?;
+                    put_i32(&mut out, v);
+                }
+                p.done()?;
+                write_frame(&mut w, K_MEMB, &out)?;
+                w.flush()?;
+            }
+            K_RESET => {
+                p.done()?;
+                for c in 0..n_local {
+                    pool.core_mut(c).reset();
+                }
+                write_frame(&mut w, K_ACK, &[K_RESET])?;
+                w.flush()?;
+            }
+            K_RESET_COST => {
+                p.done()?;
+                for c in 0..n_local {
+                    pool.core_mut(c).reset_cost();
+                }
+                write_frame(&mut w, K_ACK, &[K_RESET_COST])?;
+                w.flush()?;
+            }
+            K_COST => {
+                p.done()?;
+                out.clear();
+                put_u32(&mut out, n_local as u32);
+                for c in 0..n_local {
+                    let core = pool.core(c);
+                    let counters = core.counters();
+                    put_u32(&mut out, (lo + c) as u32);
+                    put_u64(&mut out, counters.pointer_rows);
+                    put_u64(&mut out, counters.synapse_rows);
+                    put_u64(&mut out, counters.events);
+                    put_u64(&mut out, counters.uram_accesses);
+                    put_u64(&mut out, counters.bram_accesses);
+                    put_u64(&mut out, core.cycles);
+                }
+                write_frame(&mut w, K_COSTR, &out)?;
+                w.flush()?;
+            }
+            K_SHUTDOWN => break,
+            other => bail!("shard-worker: unknown frame kind 0x{other:02x}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, K_UPDATE, &7u64.to_le_bytes()).unwrap();
+        write_frame(&mut buf, K_ACK, &[K_RESET]).unwrap();
+        write_frame(&mut buf, K_SHUTDOWN, &[]).unwrap();
+        let mut r = io::Cursor::new(buf);
+        let (k, p) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!((k, p.as_slice()), (K_UPDATE, &7u64.to_le_bytes()[..]));
+        let (k, p) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!((k, p.as_slice()), (K_ACK, &[K_RESET][..]));
+        let (k, p) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!((k, p.len()), (K_SHUTDOWN, 0));
+        // clean EOF at the length prefix
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, K_FIRED, &[1, 2, 3, 4]).unwrap();
+        buf.truncate(buf.len() - 2); // cut mid-payload
+        let mut r = io::Cursor::new(buf);
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        buf.push(K_FIRED);
+        let mut r = io::Cursor::new(buf);
+        assert!(read_frame(&mut r).is_err());
+        // zero-length frames (no kind byte) are malformed too
+        let mut r = io::Cursor::new(0u32.to_le_bytes().to_vec());
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn payload_cursor_checks_bounds_and_trailers() {
+        let bytes = [1u8, 0, 0, 0, 9];
+        let mut p = Payload::new(&bytes);
+        assert_eq!(p.u32().unwrap(), 1);
+        assert!(p.done().is_err()); // trailing byte
+        assert_eq!(p.u8().unwrap(), 9);
+        assert!(p.done().is_ok());
+        assert!(p.u64().is_err()); // past the end
+    }
+
+    #[test]
+    fn shard_ranges_cover_all_cores_contiguously() {
+        for n_cores in 1..=12 {
+            for shards in 1..=n_cores {
+                let mut next = 0;
+                for s in 0..shards {
+                    let (lo, hi) = shard_core_range(n_cores, shards, s);
+                    assert_eq!(lo, next, "{n_cores} cores / {shards} shards, shard {s}");
+                    assert!(hi > lo, "every shard owns at least one core");
+                    for c in lo..hi {
+                        assert_eq!(shard_of_core(n_cores, shards, c), s);
+                    }
+                    next = hi;
+                }
+                assert_eq!(next, n_cores, "ranges cover all cores");
+            }
+        }
+        // block sizes differ by at most one
+        let sizes: Vec<usize> = (0..3).map(|s| {
+            let (lo, hi) = shard_core_range(8, 3, s);
+            hi - lo
+        }).collect();
+        assert_eq!(sizes, vec![3, 3, 2]);
+    }
+
+    #[test]
+    fn strategy_and_route_names_roundtrip() {
+        for s in [SlotStrategy::Modulo, SlotStrategy::BalanceFanIn] {
+            assert_eq!(strategy_from_name(strategy_name(s)).unwrap(), s);
+        }
+        for r in [RouteGranularity::Core, RouteGranularity::Chunk] {
+            assert_eq!(route_from_name(route_name(r)).unwrap(), r);
+        }
+        assert!(strategy_from_name("zigzag").is_err());
+        assert!(route_from_name("warp").is_err());
+    }
+}

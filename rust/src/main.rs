@@ -7,6 +7,8 @@
 //!   serve   <spool-dir>               NSG-style job daemon (poll a dir)
 //!   serve   --listen <addr>           shared multi-session TCP server
 //!   serve-session                     JSON-lines session protocol on stdio
+//!   shard-worker                      one shard of a sharded session
+//!                                     (spawned by the parent, not users)
 //!   bench-step <net.hsn>              steps/s of the hot loop
 //!
 //! Every execution path goes through the unified `sim` facade: the
@@ -47,6 +49,9 @@ fn real_main() -> Result<()> {
         "convert" => cmd_convert(&args),
         "serve" => cmd_serve(&args),
         "serve-session" => cmd_serve_session(&args),
+        // internal: one shard subprocess of a Backend::Sharded session
+        // (binary AER frames on stdin/stdout; see cluster::shard docs)
+        "shard-worker" => hiaer_spike::cluster::shard::shard_worker_main(&args),
         "bench-step" => cmd_bench_step(&args),
         other => bail!("unknown subcommand {other:?} (try --help)"),
     }
@@ -79,13 +84,21 @@ fn print_help() {
          OPTIONS (shared deployment flags — any execution subcommand)\n\
            --servers N --fpgas N --cores N   topology (default 1/1/1)\n\
            --strategy modulo|balance         HBM slot assignment (default balance)\n\
-           --backend dense|rust|pool|xla     execution backend (default rust;\n\
+           --backend dense|rust|pool|xla|sharded\n\
+                                             execution backend (default rust;\n\
                                              xla needs --features pjrt)\n\
            --seed N                          override the network noise seed\n\
            --workers N                       worker threads for the pooled\n\
                                              backends (>= 1; default: available\n\
                                              parallelism; bit-exactness is\n\
                                              worker-count-invariant)\n\
+           --shards N                        shard subprocesses for the sharded\n\
+                                             backend (implies --backend sharded;\n\
+                                             >= 1, <= cores; default min(2,\n\
+                                             cores); spike trains are\n\
+                                             shard-count-invariant)\n\
+           --shard-timeout-ms N              per-frame deadline on shard\n\
+                                             subprocess reads (default 30s)\n\
            --route core|chunk                route-phase granularity (default\n\
                                              chunk: gather spread over workers)\n\
            --artifacts DIR                   AOT artifact dir (default artifacts/)\n\
@@ -306,6 +319,9 @@ fn cmd_bench_step(args: &Args) -> Result<()> {
     // primary engine: the selected backend on a single core
     let mut single = opts.clone();
     single.topology = hiaer_spike::partition::ClusterTopology::single_core();
+    if single.backend == Backend::Sharded {
+        single.shards = Some(1); // one core supports exactly one shard
+    }
     let mut sim = single.into_config(net.clone()).build()?;
     let t0 = Instant::now();
     for _ in 0..steps {
@@ -324,9 +340,11 @@ fn cmd_bench_step(args: &Args) -> Result<()> {
 
     // topology-aware path when the requested topology has > 1 core
     if opts.topology.n_cores() > 1 {
-        let mut cluster_opts = opts;
+        let sharded = opts.backend == Backend::Sharded;
+        let mut cluster_opts = opts.clone();
         cluster_opts.backend = Backend::Rust;
-        let mut mc = cluster_opts.into_config(net).build()?;
+        cluster_opts.shards = None;
+        let mut mc = cluster_opts.into_config(net.clone()).build()?;
         let t0 = Instant::now();
         for _ in 0..steps {
             mc.step(&axons)?;
@@ -334,6 +352,19 @@ fn cmd_bench_step(args: &Args) -> Result<()> {
         let dt = t0.elapsed().as_secs_f64();
         let used = mc.placement().map(|p| p.n_used_cores()).unwrap_or(mc.n_cores());
         println!("multicore ({used} cores): {:.0} steps/s", steps as f64 / dt);
+
+        // sharded path: the same topology split over worker subprocesses
+        if sharded {
+            let n_shards =
+                opts.shards.unwrap_or_else(|| opts.topology.n_cores().min(2));
+            let mut sh = opts.into_config(net).build()?;
+            let t0 = Instant::now();
+            for _ in 0..steps {
+                sh.step(&axons)?;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            println!("sharded ({n_shards} shards): {:.0} steps/s", steps as f64 / dt);
+        }
     }
     Ok(())
 }

@@ -19,7 +19,7 @@ pub use hsn::{
     hsn_v2_bytes, hsn_v2_bytes_quantized, read_hsn, write_hsn, write_hsn_v1, HsnError,
     HSN_MAGIC, HSN_MAGIC_V2,
 };
-pub use netfile::{open_netfile, NetFile};
+pub use netfile::{open_netfile, NetCache, NetFile};
 
 use std::io::{self, Read};
 

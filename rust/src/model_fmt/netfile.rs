@@ -174,6 +174,9 @@ enum Backing {
 pub struct NetFile {
     backing: Backing,
     byte_len: usize,
+    /// Where the image was opened from — lets multi-process consumers
+    /// (the sharded backend) hand the same file to subprocesses.
+    path: Option<std::path::PathBuf>,
 }
 
 /// Reinterpret a validated section range as a typed slice.
@@ -218,6 +221,7 @@ impl NetFile {
     pub fn open<P: AsRef<Path>>(path: P) -> Result<Self, HsnError> {
         let mapping = Mapping::open(&path)?;
         let byte_len = mapping.bytes().len();
+        let src_path = Some(path.as_ref().to_path_buf());
         #[cfg(target_endian = "little")]
         {
             let lay = parse_v2(mapping.bytes())?;
@@ -231,13 +235,23 @@ impl NetFile {
                 }
             };
             validate_v2_view(&zero_view(mapping.bytes(), &lay, qweights.as_deref()))?;
-            Ok(NetFile { backing: Backing::Zero { mapping, lay, qweights }, byte_len })
+            Ok(NetFile {
+                backing: Backing::Zero { mapping, lay, qweights },
+                byte_len,
+                path: src_path,
+            })
         }
         #[cfg(not(target_endian = "little"))]
         {
             let net = super::hsn::v2_decode_network(mapping.bytes())?;
-            Ok(NetFile { backing: Backing::Owned(net), byte_len })
+            Ok(NetFile { backing: Backing::Owned(net), byte_len, path: src_path })
         }
+    }
+
+    /// The path this image was opened from (`None` only for future
+    /// non-file constructions; [`NetFile::open`] always records it).
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
     }
 
     /// The borrowed-CSR view into this file — on little-endian hosts the
@@ -296,6 +310,71 @@ impl NetFile {
 /// Open a `.hsn` v2 file as a shareable mapped handle.
 pub fn open_netfile<P: AsRef<Path>>(path: P) -> Result<Arc<NetFile>, HsnError> {
     Ok(Arc::new(NetFile::open(path)?))
+}
+
+/// Shared-mapping cache for `.hsn` v2 files: sessions configuring from
+/// the same canonical path (and mtime) get the same [`Arc<NetFile>`]
+/// instead of re-mapping per session — N sessions ≈ one validation
+/// scan and one logical copy of the net (the serve tier holds one of
+/// these; `metrics` exposes the hit counter).
+///
+/// Entries are [`Weak`]: the cache never keeps a mapping alive on its
+/// own, so dropping every session releases the file. A changed mtime
+/// keys a fresh entry, so an overwritten net is re-validated instead of
+/// served stale.
+pub struct NetCache {
+    map: std::sync::Mutex<
+        std::collections::HashMap<(std::path::PathBuf, Option<std::time::SystemTime>), std::sync::Weak<NetFile>>,
+    >,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl Default for NetCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NetCache {
+    pub fn new() -> Self {
+        NetCache {
+            map: std::sync::Mutex::new(std::collections::HashMap::new()),
+            hits: std::sync::atomic::AtomicU64::new(0),
+            misses: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Open through the cache: an upgradable entry for (canonical path,
+    /// mtime) is a hit; otherwise the file is mapped, validated and
+    /// inserted. Dead entries are pruned on every miss.
+    pub fn open<P: AsRef<Path>>(&self, path: P) -> Result<Arc<NetFile>, HsnError> {
+        use std::sync::atomic::Ordering;
+        let canon = std::fs::canonicalize(&path)
+            .unwrap_or_else(|_| path.as_ref().to_path_buf());
+        let mtime = std::fs::metadata(&canon).and_then(|m| m.modified()).ok();
+        let key = (canon, mtime);
+        let mut map = self.map.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(file) = map.get(&key).and_then(std::sync::Weak::upgrade) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(file);
+        }
+        let file = Arc::new(NetFile::open(&key.0)?);
+        map.retain(|_, w| w.strong_count() > 0);
+        map.insert(key, Arc::downgrade(&file));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok(file)
+    }
+
+    /// Opens served from a live cached mapping.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Opens that had to map (first open, expired entry, or new mtime).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(std::sync::atomic::Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -481,6 +560,36 @@ mod tests {
             NetFile::open(&p).unwrap_err(),
             HsnError::MissingSection(sec::SYN_TARGETS)
         ));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn net_cache_shares_one_mapping_per_path() {
+        let net = sample_net(91);
+        let p = temp_path("netfile_cache.hsn");
+        write_hsn(&net, &p).unwrap();
+        let cache = NetCache::new();
+        let a = cache.open(&p).unwrap();
+        let b = cache.open(&p).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same path must share one mapping");
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // weak entries: dropping every handle releases the mapping, and
+        // the next open is a fresh (validated) miss
+        drop(a);
+        drop(b);
+        let c = cache.open(&p).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+        assert!(c.path().is_some());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn net_file_records_its_path() {
+        let net = sample_net(92);
+        let p = temp_path("netfile_path.hsn");
+        write_hsn(&net, &p).unwrap();
+        let nf = NetFile::open(&p).unwrap();
+        assert_eq!(nf.path(), Some(p.as_path()));
         std::fs::remove_file(&p).ok();
     }
 

@@ -9,7 +9,7 @@ use std::sync::Arc;
 use crate::cluster::{MultiCoreEngine, PoolOptions, PoolSim, RouteGranularity};
 use crate::engine::{CoreEngine, DenseSim, RustBackend};
 use crate::hbm::SlotStrategy;
-use crate::model_fmt::{open_netfile, read_hsn, NetFile, HSN_MAGIC_V2};
+use crate::model_fmt::{open_netfile, read_hsn, NetCache, NetFile, HSN_MAGIC_V2};
 use crate::partition::{ClusterTopology, CoreCapacity};
 use crate::runtime::{pjrt_enabled, Runtime, XlaBackend};
 use crate::sim::{SimError, Simulator};
@@ -36,10 +36,17 @@ pub enum Backend {
     /// otherwise [`SimConfig::build`] returns
     /// [`SimError::BackendUnavailable`].
     Xla,
+    /// Multi-process execution: the partitioned cluster split across
+    /// `--shards` worker subprocesses exchanging binary AER frames
+    /// through the parent's HiAER tree router. Bit-identical to the
+    /// single-process cluster (`rust` on a multi-core topology); see
+    /// [`crate::cluster::shard`].
+    Sharded,
 }
 
 impl Backend {
-    pub const ALL: [Backend; 4] = [Backend::Dense, Backend::Rust, Backend::Pool, Backend::Xla];
+    pub const ALL: [Backend; 5] =
+        [Backend::Dense, Backend::Rust, Backend::Pool, Backend::Xla, Backend::Sharded];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -47,6 +54,7 @@ impl Backend {
             Backend::Rust => "rust",
             Backend::Pool => "pool",
             Backend::Xla => "xla",
+            Backend::Sharded => "sharded",
         }
     }
 
@@ -58,8 +66,9 @@ impl Backend {
             "rust" => Ok(Backend::Rust),
             "pool" => Ok(Backend::Pool),
             "xla" => Ok(Backend::Xla),
+            "sharded" => Ok(Backend::Sharded),
             other => Err(SimError::Config(format!(
-                "unknown --backend {other:?} (options: dense, rust, pool, xla)"
+                "unknown --backend {other:?} (options: dense, rust, pool, xla, sharded)"
             ))),
         }
     }
@@ -122,6 +131,18 @@ pub struct SimOptions {
     /// and parity tests control parallelism instead of inheriting the
     /// host's. No-op for the serial single-core backends.
     pub workers: Option<usize>,
+    /// Shard-subprocess count for [`Backend::Sharded`] (`None` =
+    /// `min(2, n_cores)`). Must be >= 1 and <= the topology's core
+    /// count; spike trains are shard-count-invariant.
+    pub shards: Option<usize>,
+    /// Path of the `hiaer-spike` binary the shard parent spawns as
+    /// `shard-worker` children (`None` = discover: `$HS_BIN`, then the
+    /// running executable / its target dir).
+    pub shard_bin: Option<PathBuf>,
+    /// Deadline in milliseconds for each frame awaited from a shard
+    /// subprocess before the step fails with a typed engine error
+    /// (`None` = 30 000).
+    pub shard_timeout_ms: Option<u64>,
 }
 
 impl Default for SimOptions {
@@ -137,20 +158,25 @@ impl Default for SimOptions {
             route: RouteGranularity::default(),
             route_chunk_ptrs: None,
             workers: None,
+            shards: None,
+            shard_bin: None,
+            shard_timeout_ms: None,
         }
     }
 }
 
 impl SimOptions {
     /// The shared CLI surface: `--servers/--fpgas/--cores` (topology),
-    /// `--strategy modulo|balance`, `--backend dense|rust|pool|xla`
-    /// (plus the legacy `--xla` flag), `--seed N`, `--workers N`,
-    /// `--route core|chunk`, `--artifacts DIR`. Unknown
-    /// `--backend`/`--strategy`/`--route` values (and `--workers 0`)
-    /// are listed-options errors, never silent defaults. Used by every
-    /// execution subcommand, `serve-session` included — the protocol's
-    /// `configure` op supplies the network (and may override
-    /// `workers`), these flags fix the deployment.
+    /// `--strategy modulo|balance`, `--backend
+    /// dense|rust|pool|xla|sharded` (plus the legacy `--xla` flag),
+    /// `--seed N`, `--workers N`, `--shards N` (implies `sharded` when
+    /// `--backend` is not given), `--shard-timeout-ms N`, `--route
+    /// core|chunk`, `--artifacts DIR`. Unknown
+    /// `--backend`/`--strategy`/`--route` values (and `--workers 0` /
+    /// `--shards 0`) are listed-options errors, never silent defaults.
+    /// Used by every execution subcommand, `serve-session` included —
+    /// the protocol's `configure` op supplies the network (and may
+    /// override `workers`/`shards`), these flags fix the deployment.
     pub fn from_args(args: &Args) -> Result<SimOptions, SimError> {
         let topology = ClusterTopology {
             servers: args.get_usize("servers", 1).map_err(SimError::Config)?,
@@ -178,6 +204,42 @@ impl SimOptions {
                     .into(),
             ));
         }
+        let shards = match args.get("shards") {
+            None => None,
+            Some(_) => Some(args.get_usize("shards", 0).map_err(SimError::Config)?),
+        };
+        if shards == Some(0) {
+            return Err(SimError::Config(
+                "--shards must be >= 1 (shard subprocesses for the sharded backend; \
+                 omit the flag to default to min(2, cores))"
+                    .into(),
+            ));
+        }
+        if shards.is_some() {
+            if args.flag("xla") {
+                return Err(SimError::Config(
+                    "--shards conflicts with --xla (sharded execution uses the \
+                     native rust cluster engine per shard)"
+                        .into(),
+                ));
+            }
+            match args.get("backend") {
+                // `--shards N` alone implies the sharded backend
+                None => backend = Backend::Sharded,
+                Some(_) if backend == Backend::Sharded => {}
+                Some(other) => {
+                    return Err(SimError::Config(format!(
+                        "--shards requires --backend sharded (got --backend {other:?})"
+                    )));
+                }
+            }
+        }
+        let shard_timeout_ms = match args.get("shard-timeout-ms") {
+            None => None,
+            Some(_) => {
+                Some(args.get_usize("shard-timeout-ms", 0).map_err(SimError::Config)? as u64)
+            }
+        };
         Ok(SimOptions {
             topology,
             strategy,
@@ -186,6 +248,8 @@ impl SimOptions {
             artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
             route,
             workers,
+            shards,
+            shard_timeout_ms,
             ..SimOptions::default()
         })
     }
@@ -250,6 +314,18 @@ impl NetSource {
     /// path behind [`SimConfig::from_path`] and the session protocol's
     /// `configure` op.
     pub fn from_path<P: AsRef<Path>>(path: P) -> Result<NetSource, SimError> {
+        NetSource::from_path_cached(path, None)
+    }
+
+    /// [`NetSource::from_path`] with an optional shared-mapping cache:
+    /// when `cache` is given and the file is `.hsn` v2, sessions
+    /// configured from the same canonical path (and mtime) share one
+    /// [`Arc<NetFile>`] mapping instead of re-mapping per session. v1
+    /// files are heap parses and never cached.
+    pub fn from_path_cached<P: AsRef<Path>>(
+        path: P,
+        cache: Option<&NetCache>,
+    ) -> Result<NetSource, SimError> {
         let path = path.as_ref();
         let is_v2 = std::fs::File::open(path)
             .and_then(|mut f| {
@@ -261,9 +337,11 @@ impl NetSource {
             // which reports the typed error
             .unwrap_or(false);
         if is_v2 {
-            Ok(NetSource::Mapped(
-                open_netfile(path).map_err(|e| SimError::Engine(e.into()))?,
-            ))
+            let file = match cache {
+                Some(cache) => cache.open(path).map_err(|e| SimError::Engine(e.into()))?,
+                None => open_netfile(path).map_err(|e| SimError::Engine(e.into()))?,
+            };
+            Ok(NetSource::Mapped(file))
         } else {
             Ok(NetSource::Owned(read_hsn(path)?))
         }
@@ -381,18 +459,39 @@ impl SimConfig {
         self
     }
 
+    /// Shard-subprocess count (implies [`Backend::Sharded`]; must be
+    /// >= 1 and <= the topology's core count, [`SimConfig::build`]
+    /// rejects anything else). Spike trains are shard-count-invariant —
+    /// this only tunes process-level parallelism.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.opts.shards = Some(shards);
+        self.opts.backend = Backend::Sharded;
+        self
+    }
+
+    /// Explicit `hiaer-spike` binary for the shard-worker children
+    /// (tests and benches pass `env!("CARGO_BIN_EXE_hiaer-spike")`;
+    /// default is runtime discovery from `$HS_BIN` / the running
+    /// executable's directory).
+    pub fn shard_bin<P: Into<PathBuf>>(mut self, bin: P) -> Self {
+        self.opts.shard_bin = Some(bin.into());
+        self
+    }
+
+    /// Per-frame deadline (ms) for shard-subprocess reads; a shard that
+    /// produces nothing within it fails the step with a typed engine
+    /// error naming the shard.
+    pub fn shard_timeout_ms(mut self, ms: u64) -> Self {
+        self.opts.shard_timeout_ms = Some(ms);
+        self
+    }
+
     /// Compile and spin up the session: applies the seed override,
     /// partitions the network (multi-core), builds HBM images and
     /// starts worker pools. The returned box is the only public
     /// execution handle.
     pub fn build(self) -> Result<Box<dyn Simulator>, SimError> {
         let SimConfig { net: src, opts } = self;
-        // The seed override mutates only the Copy view; the CSR arrays
-        // stay borrowed from the source (heap or mapping), never copied.
-        let mut net = src.view();
-        if let Some(seed) = opts.seed {
-            net.base_seed = seed;
-        }
         if opts.workers == Some(0) {
             return Err(SimError::Config(
                 "workers must be >= 1 (omit to size to available parallelism)".into(),
@@ -401,6 +500,29 @@ impl SimConfig {
         let n_cores = opts.topology.n_cores();
         if n_cores == 0 {
             return Err(SimError::Config("topology has zero cores".into()));
+        }
+        if opts.shards.is_some() && opts.backend != Backend::Sharded {
+            return Err(SimError::Config(format!(
+                "shards is only meaningful with backend `sharded` (got `{}`)",
+                opts.backend.name()
+            )));
+        }
+        if opts.backend == Backend::Sharded {
+            if opts.shards == Some(0) {
+                return Err(SimError::Config(
+                    "shards must be >= 1 (omit to default to min(2, cores))".into(),
+                ));
+            }
+            // the shard parent needs the source itself (to hand each
+            // subprocess a mappable path), not just a borrowed view
+            let sim = crate::cluster::shard::ShardedSim::build(src, &opts)?;
+            return Ok(Box::new(sim));
+        }
+        // The seed override mutates only the Copy view; the CSR arrays
+        // stay borrowed from the source (heap or mapping), never copied.
+        let mut net = src.view();
+        if let Some(seed) = opts.seed {
+            net.base_seed = seed;
         }
         if n_cores > 1 && opts.backend != Backend::Rust {
             return Err(SimError::Config(format!(
@@ -442,6 +564,8 @@ impl SimConfig {
                 let backend = XlaBackend::new(rt, net.n_neurons())?;
                 Ok(Box::new(CoreEngine::new(net, opts.strategy, backend)?))
             }
+            // handled by the early return above (it consumes `src`)
+            Backend::Sharded => unreachable!("sharded backend returns before view creation"),
         }
     }
 }
@@ -504,6 +628,56 @@ mod tests {
             0,
         );
         let err = SimConfig::new(net).backend(Backend::Pool).workers(0).build();
+        assert!(matches!(err, Err(SimError::Config(_))));
+    }
+
+    #[test]
+    fn shards_flag_implies_sharded_backend_and_zero_is_an_error() {
+        let o = SimOptions::from_args(&args(&["--shards", "2"])).unwrap();
+        assert_eq!(o.shards, Some(2));
+        assert_eq!(o.backend, Backend::Sharded);
+        assert_eq!(SimOptions::from_args(&args(&[])).unwrap().shards, None);
+
+        let err = SimOptions::from_args(&args(&["--shards", "0"])).unwrap_err();
+        assert!(err.to_string().contains(">= 1"), "{err}");
+
+        // an explicit single-process backend conflicts with --shards
+        let err =
+            SimOptions::from_args(&args(&["--backend", "pool", "--shards", "2"])).unwrap_err();
+        assert!(err.to_string().contains("--backend sharded"), "{err}");
+        let err = SimOptions::from_args(&args(&["--xla", "--shards", "2"])).unwrap_err();
+        assert!(err.to_string().contains("--xla"), "{err}");
+
+        // explicit `--backend sharded --shards N` stays valid
+        let o = SimOptions::from_args(&args(&["--backend", "sharded", "--shards", "4"])).unwrap();
+        assert_eq!((o.backend, o.shards), (Backend::Sharded, Some(4)));
+
+        let o = SimOptions::from_args(&args(&["--shards", "2", "--shard-timeout-ms", "500"]))
+            .unwrap();
+        assert_eq!(o.shard_timeout_ms, Some(500));
+    }
+
+    #[test]
+    fn sharded_backend_parses_and_is_available() {
+        assert_eq!(Backend::parse("sharded").unwrap(), Backend::Sharded);
+        assert!(Backend::Sharded.available());
+        assert_eq!(Backend::Sharded.name(), "sharded");
+        let err = Backend::parse("gpu").unwrap_err();
+        assert!(err.to_string().contains("sharded"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_shards_on_other_backends() {
+        let net = crate::snn::Network::from_adj(
+            vec![crate::snn::NeuronModel::if_neuron(1); 2],
+            &[vec![], vec![]],
+            &[vec![crate::snn::Synapse { target: 0, weight: 1 }]],
+            vec![0],
+            0,
+        );
+        let mut cfg = SimConfig::new(net).shards(2);
+        cfg.opts.backend = Backend::Pool; // bypass the builder coupling
+        let err = cfg.build();
         assert!(matches!(err, Err(SimError::Config(_))));
     }
 

@@ -64,6 +64,7 @@
 //! | [`Backend::Rust`]  | event-driven HBM core      | default; becomes the cluster at >1 core     |
 //! | [`Backend::Pool`]  | chunk-parallel `CorePool`  | one big core, sweep spread over all workers |
 //! | [`Backend::Xla`]   | AOT Pallas artifacts, PJRT | needs the `pjrt` cargo feature + artifacts  |
+//! | [`Backend::Sharded`] | multi-process shard cluster | paper-scale nets, `--shards` subprocesses |
 
 mod config;
 pub mod serve;

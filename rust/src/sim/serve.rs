@@ -62,6 +62,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::cluster::AdmissionGate;
+use crate::model_fmt::NetCache;
 use crate::sim::session::{
     err_response, is_error_response, parse_request, CappedLineReader, LineRead, Request, Session,
     SessionLimits, CODE_DEADLINE, CODE_ENGINE, CODE_EVICTED, CODE_MALFORMED, CODE_SERVER_BUSY,
@@ -180,6 +181,10 @@ struct Shared {
     drain_cv: Condvar,
     counters: Counters,
     started: Instant,
+    /// Server-wide `.hsn` v2 mapping cache: sessions configured from the
+    /// same canonical path (and mtime) share one `Arc<NetFile>` mmap
+    /// instead of mapping the file once per session (PR 8 satellite).
+    net_cache: Arc<NetCache>,
 }
 
 impl Shared {
@@ -229,6 +234,8 @@ impl Shared {
                 ),
                 ("execute_us", Json::Int(exec_us as i64)),
                 ("steps_per_s", Json::Num(steps_per_s)),
+                ("net_cache_hits", Json::Int(self.net_cache.hits() as i64)),
+                ("net_cache_misses", Json::Int(self.net_cache.misses() as i64)),
             ],
         )
     }
@@ -281,6 +288,7 @@ pub fn serve_tcp_with_factory(
         drain_cv: Condvar::new(),
         counters: Counters::default(),
         started: Instant::now(),
+        net_cache: Arc::new(NetCache::new()),
     });
 
     let mut conn_threads = Vec::new();
@@ -400,6 +408,7 @@ fn handle_connection(stream: TcpStream, shared: &Shared, factory: &SessionFactor
     let mut reader = BufReader::new(stream);
 
     let mut session = factory(shared.opts.clone(), shared.limits.session_limits());
+    session.set_net_cache(Arc::clone(&shared.net_cache));
     if send_line(&mut writer, &session.hello()).is_err() {
         Counters::bump(&shared.counters.disconnects);
         return;

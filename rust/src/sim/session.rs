@@ -25,10 +25,13 @@
 //!
 //! `configure` — load a `.hsn` network and (re)build the simulator from
 //! the session's deployment options; an existing simulator is replaced.
-//! Optional fields override the CLI options: `seed` (noise base seed)
-//! and `workers` (worker-thread count for the pooled backends, >= 1 —
+//! Optional fields override the CLI options: `seed` (noise base seed),
+//! `workers` (worker-thread count for the pooled backends, >= 1 —
 //! bit-exactness is worker-count-invariant, so this only tunes
-//! throughput). The response breaks the cold start down: `load_ms`
+//! throughput) and `shards` (shard-subprocess count: implies
+//! `backend=sharded`, >= 1 and <= the topology's core count —
+//! spike trains are shard-count-invariant, see
+//! [`crate::cluster::shard`]). The response breaks the cold start down: `load_ms`
 //! (network load — mmap + validate for `.hsn` v2, full heap parse for
 //! v1), `compile_ms` (partition + HBM compile + worker pools) and
 //! `net_bytes` (on-disk file size):
@@ -152,9 +155,11 @@
 //! can never have more than one request in flight.
 
 use std::io::{BufRead, Write};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::energy::EnergyModel;
+use crate::model_fmt::NetCache;
 use crate::sim::{NetSource, SimError, SimOptions, Simulator};
 use crate::util::json::{arr_i64, obj, Json};
 
@@ -208,7 +213,7 @@ pub fn error_code(e: &SimError) -> &'static str {
 /// One parsed request line.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
-    Configure { net: String, seed: Option<u32>, workers: Option<usize> },
+    Configure { net: String, seed: Option<u32>, workers: Option<usize>, shards: Option<usize> },
     Step { axons: Vec<u32> },
     StepMany { batch: Vec<Vec<u32>> },
     ReadMembrane { ids: Vec<u32> },
@@ -281,7 +286,11 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                 None | Some(Json::Null) => None,
                 Some(v) => Some(id_value(v, "workers")? as usize),
             };
-            Ok(Request::Configure { net, seed, workers })
+            let shards = match j.get("shards") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(id_value(v, "shards")? as usize),
+            };
+            Ok(Request::Configure { net, seed, workers, shards })
         }
         "step" => Ok(Request::Step { axons: ids_field(&j, "axons", "step")? }),
         "step_many" => {
@@ -417,6 +426,7 @@ pub struct Session {
     sim: Option<Box<dyn Simulator>>,
     stats: SessionStats,
     sim_factory: Option<SimFactory>,
+    net_cache: Option<Arc<NetCache>>,
 }
 
 impl Session {
@@ -433,7 +443,16 @@ impl Session {
             sim: None,
             stats: SessionStats::default(),
             sim_factory: None,
+            net_cache: None,
         }
+    }
+
+    /// Install a shared network-mapping cache: `configure` ops on this
+    /// session then share one mmap per `.hsn` v2 path with every other
+    /// session holding the same cache (the TCP server installs one
+    /// server-wide cache; stdio sessions have one client and skip it).
+    pub fn set_net_cache(&mut self, cache: Arc<NetCache>) {
+        self.net_cache = Some(cache);
     }
 
     /// Test seam: replace the facade build with a custom simulator
@@ -505,8 +524,8 @@ impl Session {
 
     fn dispatch(&mut self, req: Request) -> (String, bool) {
         match req {
-            Request::Configure { net, seed, workers } => {
-                (self.configure(&net, seed, workers), false)
+            Request::Configure { net, seed, workers, shards } => {
+                (self.configure(&net, seed, workers, shards), false)
             }
             Request::Step { axons } => {
                 let sim = match self.sim_or_err() {
@@ -652,12 +671,18 @@ impl Session {
         }
     }
 
-    fn configure(&mut self, net_path: &str, seed: Option<u32>, workers: Option<usize>) -> String {
+    fn configure(
+        &mut self,
+        net_path: &str,
+        seed: Option<u32>,
+        workers: Option<usize>,
+        shards: Option<usize>,
+    ) -> String {
         // Cold-start phase 1 — load: `.hsn` v2 is mmap + validate
         // (zero-copy), v1 a full heap parse. Timed separately from the
         // build so the response exposes where a slow configure went.
         let t_load = Instant::now();
-        let src = match NetSource::from_path(net_path) {
+        let src = match NetSource::from_path_cached(net_path, self.net_cache.as_deref()) {
             Ok(s) => s,
             Err(SimError::Engine(e)) => {
                 return err_response(CODE_CONFIG, &format!("loading {net_path}: {e:#}"))
@@ -691,6 +716,13 @@ impl Session {
             // workers: 0 flows into SimConfig::build, which rejects it
             // with a `config` error (one validation point, not two)
             opts.workers = workers;
+        }
+        if let Some(n) = shards {
+            // shards implies the sharded backend, mirroring the CLI's
+            // `--shards N`; 0 / over-core-count flow into
+            // ShardedSim::build's single validation point
+            opts.shards = Some(n);
+            opts.backend = crate::sim::Backend::Sharded;
         }
         // Cold-start phase 2 — build: partition + HBM compile + pools.
         let t_compile = Instant::now();
@@ -1097,11 +1129,11 @@ mod tests {
     fn configure_workers_field_parses_and_zero_is_config_error() {
         assert_eq!(
             parse_request(r#"{"op":"configure","net":"x.hsn","workers":4}"#).unwrap(),
-            Request::Configure { net: "x.hsn".into(), seed: None, workers: Some(4) }
+            Request::Configure { net: "x.hsn".into(), seed: None, workers: Some(4), shards: None }
         );
         assert_eq!(
             parse_request(r#"{"op":"configure","net":"x.hsn"}"#).unwrap(),
-            Request::Configure { net: "x.hsn".into(), seed: None, workers: None }
+            Request::Configure { net: "x.hsn".into(), seed: None, workers: None, shards: None }
         );
         // mistyped workers is a malformed request, not a silent default
         let e = parse_request(r#"{"op":"configure","net":"x.hsn","workers":"two"}"#).unwrap_err();
@@ -1127,6 +1159,44 @@ mod tests {
         let (a, _) = s.handle_line(r#"{"op":"step","axons":[0,1]}"#);
         let (b, _) = d.handle_line(r#"{"op":"step","axons":[0,1]}"#);
         assert_eq!(a, b, "explicit workers changed the spike train");
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Satellite (PR 8): the `configure` op threads a shard-subprocess
+    /// count into the deployment options, implying `backend=sharded` —
+    /// parsed as an optional u32 field; `0` and over-core-count values
+    /// are rejected by [`ShardedSim::build`]'s single validation point
+    /// as `config` errors before any worker is spawned.
+    #[test]
+    fn configure_shards_field_parses_and_invalid_counts_are_config_errors() {
+        assert_eq!(
+            parse_request(r#"{"op":"configure","net":"x.hsn","shards":2}"#).unwrap(),
+            Request::Configure { net: "x.hsn".into(), seed: None, workers: None, shards: Some(2) }
+        );
+        // mistyped shards is a malformed request, not a silent default
+        let e = parse_request(r#"{"op":"configure","net":"x.hsn","shards":"two"}"#).unwrap_err();
+        assert_eq!(e.code, CODE_MALFORMED);
+
+        let p = fig6_path("shards");
+        // shards: 0 flows into ShardedSim::build, which rejects it with
+        // a `config` error before spawning any worker
+        let mut s = Session::new(SimOptions::default());
+        let (resp, _) = s.handle_line(&format!(
+            "{{\"op\":\"configure\",\"net\":\"{}\",\"shards\":0}}",
+            p.display()
+        ));
+        assert_err(&resp, CODE_CONFIG);
+        assert!(!s.is_configured());
+        // more shards than cores (default topology has one core) is a
+        // `config` error too — and the session stays usable
+        let (resp, _) = s.handle_line(&format!(
+            "{{\"op\":\"configure\",\"net\":\"{}\",\"shards\":4}}",
+            p.display()
+        ));
+        assert_err(&resp, CODE_CONFIG);
+        let (resp, _) =
+            s.handle_line(&format!("{{\"op\":\"configure\",\"net\":\"{}\"}}", p.display()));
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
         std::fs::remove_file(&p).ok();
     }
 

@@ -689,6 +689,40 @@ fn health_and_metrics_report_server_state() {
     std::fs::remove_file(&net_path).ok();
 }
 
+/// Satellite (PR 8): sessions configured from the same `.hsn` v2 path
+/// share one mmap through the server-wide `NetCache` — the second
+/// configure is a cache hit (visible in `metrics`) and both sessions
+/// still step bit-identically.
+#[test]
+fn sessions_share_one_net_mapping_per_path() {
+    let net_path = temp_hsn("netcache");
+    write_hsn(&fig6_net(), &net_path).unwrap(); // write_hsn emits v2
+    let server = start_server(ServeLimits::default());
+
+    let mut a = Client::connect(server.addr);
+    a.hello();
+    assert!(ok(&a.request(&configure_line(&net_path))));
+    let mut b = Client::connect(server.addr);
+    b.hello();
+    assert!(ok(&b.request(&configure_line(&net_path))));
+
+    // first configure mapped the file (miss), second reused it (hit)
+    wait_for_metric(&mut a, "net_cache_hits", 1);
+    let m = a.request("{\"op\":\"metrics\"}");
+    assert!(m.get("net_cache_misses").and_then(Json::as_i64).unwrap_or(0) >= 1, "{m:?}");
+
+    // the shared mapping is invisible to execution: both sessions step
+    // identically (each owns its simulator, only the bytes are shared)
+    let ra = a.request(&step_line(&[0, 1]));
+    let rb = b.request(&step_line(&[0, 1]));
+    assert!(ok(&ra), "{ra:?}");
+    assert_eq!(ra.get("spikes"), rb.get("spikes"), "{ra:?} vs {rb:?}");
+    drop(a);
+    drop(b);
+    server.stop();
+    std::fs::remove_file(&net_path).ok();
+}
+
 /// With the compute pool saturated by a slow session, a second session's
 /// permit wait times out with a retryable `deadline` error — and the
 /// waiting session survives to issue more requests.

@@ -1,0 +1,193 @@
+//! Fault injection for `Backend::Sharded` (`cluster::shard`): a shard
+//! worker that is killed or hung mid-session must fail the step with a
+//! **typed** `SimError::Engine` naming the shard — never a hang or a
+//! panic — and dropping the parent session must reap every worker
+//! subprocess (no zombies, no orphans). Companion to the serving-tier
+//! fault suite in `serve_tcp.rs`: same philosophy, one layer down.
+//!
+//! The tests drive `ShardedSim::build` directly (the `#[doc(hidden)]`
+//! seam) so they can reach `shard_pids()`; the worker binary is the
+//! crate's own `hiaer-spike` via `CARGO_BIN_EXE`.
+
+use std::time::{Duration, Instant};
+
+use hiaer_spike::cluster::shard::ShardedSim;
+use hiaer_spike::partition::CoreCapacity;
+use hiaer_spike::sim::{Backend, SimError, SimOptions, Simulator};
+use hiaer_spike::snn::{Network, NeuronModel, Synapse, FLAG_NOISE};
+use hiaer_spike::util::prng::Xorshift32;
+
+/// Deterministic multi-core net: enough neurons to spread over 2 cores
+/// under the capacity below, noise stripped so steps are reproducible.
+fn test_net() -> Network {
+    let mut rng = Xorshift32::new(0xFA);
+    let n = 60usize;
+    let params: Vec<NeuronModel> = (0..n).map(|_| NeuronModel::if_neuron(5)).collect();
+    let mut neuron_adj: Vec<Vec<Synapse>> = vec![Vec::new(); n];
+    for adj in neuron_adj.iter_mut() {
+        for _ in 0..4 {
+            adj.push(Synapse { target: rng.below(n as u32), weight: rng.range_i32(-3, 8) as i16 });
+        }
+    }
+    let axon_adj: Vec<Vec<Synapse>> = (0..4)
+        .map(|_| (0..6).map(|_| Synapse { target: rng.below(n as u32), weight: 6 }).collect())
+        .collect();
+    let mut net = Network::from_adj(params, &neuron_adj, &axon_adj, vec![0, 1, 2], 9);
+    for p in &mut net.params {
+        p.flags &= !FLAG_NOISE;
+    }
+    net
+}
+
+fn sharded_opts(shards: usize, timeout_ms: u64) -> SimOptions {
+    let mut opts = SimOptions::default();
+    opts.topology =
+        hiaer_spike::partition::ClusterTopology { servers: 1, fpgas_per_server: 1, cores_per_fpga: 2 };
+    opts.capacity = CoreCapacity { max_neurons: 40, max_synapses: usize::MAX };
+    opts.backend = Backend::Sharded;
+    opts.shards = Some(shards);
+    opts.shard_bin = Some(env!("CARGO_BIN_EXE_hiaer-spike").into());
+    opts.shard_timeout_ms = Some(timeout_ms);
+    opts
+}
+
+fn build_sharded(shards: usize, timeout_ms: u64) -> ShardedSim {
+    ShardedSim::build(test_net().into(), &sharded_opts(shards, timeout_ms))
+        .expect("sharded build")
+}
+
+fn send_signal(pid: u32, sig: &str) {
+    let status = std::process::Command::new("kill")
+        .arg(sig)
+        .arg(pid.to_string())
+        .status()
+        .expect("running kill");
+    assert!(status.success(), "kill {sig} {pid} failed");
+}
+
+/// `/proc/<pid>` vanishes only once the process is dead *and* reaped
+/// (zombies keep their entry), so this is exactly "no zombie, no orphan".
+fn proc_gone(pid: u32) -> bool {
+    !std::path::Path::new(&format!("/proc/{pid}")).exists()
+}
+
+fn wait_until(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    cond()
+}
+
+/// A SIGKILLed worker turns the next step into a typed engine error
+/// naming the dead shard — the parent never hangs on the vanished pipe.
+#[test]
+fn killed_shard_is_a_typed_engine_error_naming_the_shard() {
+    let mut sim = build_sharded(2, 10_000);
+    assert_eq!(sim.n_shards(), 2);
+    sim.step(&[0, 1]).expect("healthy step before the kill");
+
+    let pids = sim.shard_pids();
+    assert_eq!(pids.len(), 2);
+    send_signal(pids[1], "-KILL");
+
+    // the kill races the in-flight pipes: poll until the failure
+    // surfaces (it must, well within the 10 s frame deadline)
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let err = loop {
+        match sim.step(&[0]) {
+            Err(e) => break e,
+            Ok(_) => assert!(Instant::now() < deadline, "killed shard never surfaced an error"),
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    match &err {
+        SimError::Engine(e) => {
+            let msg = format!("{e:#}");
+            assert!(msg.contains("shard 1"), "error must name the dead shard: {msg}");
+        }
+        other => panic!("expected SimError::Engine, got {other}"),
+    }
+}
+
+/// A stopped (hung) worker trips the per-frame deadline with a typed
+/// error naming the shard, instead of wedging the parent forever.
+#[test]
+fn hung_shard_times_out_with_typed_engine_error() {
+    let mut sim = build_sharded(2, 300);
+    sim.step(&[0]).expect("healthy step before the stall");
+
+    let pids = sim.shard_pids();
+    send_signal(pids[0], "-STOP");
+
+    let t0 = Instant::now();
+    let err = sim.step(&[1]).expect_err("stalled shard must time the step out");
+    assert!(
+        t0.elapsed() < Duration::from_secs(15),
+        "timeout took {:?} — deadline not honoured",
+        t0.elapsed()
+    );
+    match &err {
+        SimError::Engine(e) => {
+            let msg = format!("{e:#}");
+            assert!(msg.contains("shard 0"), "error must name the hung shard: {msg}");
+            assert!(msg.contains("within"), "error should mention the deadline: {msg}");
+        }
+        other => panic!("expected SimError::Engine, got {other}"),
+    }
+
+    // SIGKILL terminates even a stopped process — un-wedge the worker
+    // so Drop's orderly shutdown stays fast
+    send_signal(pids[0], "-KILL");
+    drop(sim);
+    assert!(
+        wait_until(Duration::from_secs(10), || pids.iter().all(|&p| proc_gone(p))),
+        "workers not reaped after drop"
+    );
+}
+
+/// Dropping the session reaps every worker: orderly SHUTDOWN first,
+/// escalating to SIGKILL, and always wait()ed — `/proc` entries vanish.
+#[test]
+fn drop_reaps_all_worker_processes() {
+    let pids = {
+        let mut sim = build_sharded(2, 5_000);
+        sim.step(&[0, 2]).expect("healthy step");
+        let pids = sim.shard_pids();
+        for &p in &pids {
+            assert!(!proc_gone(p), "worker {p} should be alive while the session runs");
+        }
+        pids
+    }; // <- Drop: SHUTDOWN frames, reap, join readers
+    assert!(
+        wait_until(Duration::from_secs(10), || pids.iter().all(|&p| proc_gone(p))),
+        "worker pids {pids:?} still present after drop"
+    );
+}
+
+/// One sharded session dying must not disturb an independent healthy
+/// one (process isolation is the point of the backend).
+#[test]
+fn shard_failure_is_isolated_to_its_own_session() {
+    let mut healthy = build_sharded(2, 10_000);
+    let mut victim = build_sharded(2, 10_000);
+    healthy.step(&[0]).expect("healthy session step");
+
+    send_signal(victim.shard_pids()[0], "-KILL");
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        match victim.step(&[0]) {
+            Err(_) => break,
+            Ok(_) => assert!(Instant::now() < deadline, "killed shard never errored"),
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // the healthy session keeps stepping bit-deterministically
+    for _ in 0..3 {
+        healthy.step(&[0, 1]).expect("healthy session survives the neighbour's death");
+    }
+}

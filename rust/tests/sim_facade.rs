@@ -53,6 +53,12 @@ fn random_net(rng: &mut Xorshift32, n: usize, a: usize) -> Network {
 fn single_core_sessions(net: &Network) -> Vec<(String, Box<dyn Simulator>)> {
     let mut sims: Vec<(String, Box<dyn Simulator>)> = Vec::new();
     for b in Backend::ALL {
+        if b == Backend::Sharded {
+            // subprocess-backed: spawning workers per matrix case is
+            // disproportionate here; the dedicated parity test below
+            // pins sharded against the cluster reference instead
+            continue;
+        }
         let cfg = SimConfig::new(net.clone()).backend(b).artifacts(
             Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
         );
@@ -336,6 +342,63 @@ fn worker_count_and_route_granularity_leave_run_records_invariant() {
                 &rec,
                 &cluster_ref,
             );
+        }
+    }
+}
+
+/// Tentpole (PR 8): `Backend::Sharded` joins the parity matrix — the
+/// multi-process execution must be **bit-identical** to the in-process
+/// cluster backend (`RunRecord` including the full f64 `CostSummary`,
+/// plus membranes), invariant across shard counts {1, 2, 4} and worker
+/// counts {1, 2}, and its spike train must equal the dense golden
+/// reference on a noise-free net.
+#[test]
+fn sharded_backend_matches_cluster_bit_for_bit_across_shard_counts() {
+    let mut rng = Xorshift32::new(0x5A4D);
+    let n = 100usize;
+    let mut net = random_net(&mut rng, n, 6);
+    // dense runs one global noise lane, cluster/sharded one per core:
+    // strip noise so all three references legitimately agree
+    for p in &mut net.params {
+        p.flags &= !FLAG_NOISE;
+    }
+    let energy = EnergyModel::default();
+    let cap = hiaer_spike::partition::CoreCapacity { max_neurons: 30, max_synapses: usize::MAX };
+    let stimulus: Vec<Vec<u32>> = (0..10)
+        .map(|_| (0..net.n_axons() as u32).filter(|_| rng.chance(0.4)).collect())
+        .collect();
+    let all_ids: Vec<u32> = (0..n as u32).collect();
+
+    let dense_rec = {
+        let mut sim = SimConfig::new(net.clone()).backend(Backend::Dense).build().unwrap();
+        sim.run(&stimulus, &energy).unwrap()
+    };
+
+    // in-process cluster reference on a 1x2x2 topology (4 cores)
+    let mut cluster =
+        SimConfig::new(net.clone()).topology(1, 2, 2).capacity(cap).workers(1).build().unwrap();
+    let cluster_rec = cluster.run(&stimulus, &energy).unwrap();
+    let cluster_v = cluster.read_membrane(&all_ids);
+    assert_eq!(cluster_rec.spikes, dense_rec.spikes, "cluster vs dense spikes");
+    assert_eq!(cluster_rec.fired_total, dense_rec.fired_total, "cluster vs dense fired");
+    assert!(cluster_rec.fired_total > 0, "test net too quiet to prove anything");
+
+    for shards in [1usize, 2, 4] {
+        for workers in [1usize, 2] {
+            let mut sim = SimConfig::new(net.clone())
+                .topology(1, 2, 2)
+                .capacity(cap)
+                .workers(workers)
+                .shards(shards)
+                .shard_bin(env!("CARGO_BIN_EXE_hiaer-spike"))
+                .build()
+                .unwrap_or_else(|e| panic!("sharded s={shards} w={workers} build: {e}"));
+            assert_eq!(sim.backend_name(), "sharded");
+            assert_eq!(sim.n_cores(), 4);
+            let tag = format!("sharded s={shards} w={workers}");
+            let rec = sim.run(&stimulus, &energy).unwrap();
+            assert_records_identical(&tag, &rec, &cluster_rec);
+            assert_eq!(sim.read_membrane(&all_ids), cluster_v, "{tag}: membranes");
         }
     }
 }

@@ -1,0 +1,176 @@
+#!/usr/bin/env python3
+"""End-to-end smoke for `Backend::Sharded` on the release binary.
+
+Drives `hiaer-spike serve-session --cores 2` the way an operator would —
+real shard-worker subprocesses, not reachable through `cargo test`:
+
+1. start a `serve-session` child on stdio with a 2-core topology;
+2. `configure` with `"shards": 2` (the session-protocol field added in
+   PR 8) and run a few healthy steps;
+3. find the two `shard-worker` grandchildren via /proc and SIGKILL one;
+4. require the next step to answer a typed `"code": "engine"` error
+   naming the dead shard — never a hang;
+5. `shutdown`, then require every worker pid to vanish from /proc
+   (dead *and* reaped: zombies keep their /proc entry).
+
+Stdlib only; a watchdog plus per-read timeouts bound every phase so a
+wedged parent or worker fails the run instead of hanging CI. Exit
+code 0 = pass.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def find_binary(explicit: str | None) -> str:
+    if explicit:
+        return explicit
+    env = os.environ.get("HS_BIN")
+    if env:
+        return env
+    for rel in ("rust/target/release/hiaer-spike", "target/release/hiaer-spike",
+                "rust/target/debug/hiaer-spike", "target/debug/hiaer-spike"):
+        cand = os.path.join(REPO, rel)
+        if os.path.isfile(cand) and os.access(cand, os.X_OK):
+            return cand
+    sys.exit("shard_smoke: no hiaer-spike binary (build with `cargo build "
+             "--release`, or pass --binary / set $HS_BIN)")
+
+
+class Session:
+    """One serve-session child; each recv is deadline-bounded."""
+
+    def __init__(self, argv: list[str], timeout: float):
+        self.timeout = timeout
+        self.proc = subprocess.Popen(
+            argv, stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE, text=True)
+
+    def send(self, req: dict) -> None:
+        assert self.proc.stdin is not None
+        self.proc.stdin.write(json.dumps(req, separators=(",", ":")) + "\n")
+        self.proc.stdin.flush()
+
+    def recv(self) -> dict:
+        # readline on a thread so a wedged child trips the deadline
+        # instead of blocking the smoke forever
+        box: list[str] = []
+        t = threading.Thread(target=lambda: box.append(self.proc.stdout.readline()))
+        t.daemon = True
+        t.start()
+        t.join(timeout=self.timeout)
+        assert not t.is_alive(), f"no response within {self.timeout}s (parent wedged)"
+        assert box and box[0], "serve-session closed stdout unexpectedly"
+        return json.loads(box[0])
+
+    def request(self, req: dict) -> dict:
+        self.send(req)
+        resp = self.recv()
+        assert resp.get("ok"), f"{req.get('op')} failed: {resp}"
+        return resp
+
+
+def shard_worker_pids(parent_pid: int) -> list[int]:
+    """Direct children of `parent_pid` whose cmdline says shard-worker."""
+    pids = []
+    for entry in os.listdir("/proc"):
+        if not entry.isdigit():
+            continue
+        try:
+            with open(f"/proc/{entry}/stat") as f:
+                # field 4 (after the parenthesised comm) is ppid
+                ppid = int(f.read().rsplit(")", 1)[1].split()[1])
+            with open(f"/proc/{entry}/cmdline", "rb") as f:
+                cmdline = f.read()
+        except (OSError, ValueError, IndexError):
+            continue  # raced a process exit
+        if ppid == parent_pid and b"shard-worker" in cmdline:
+            pids.append(int(entry))
+    return sorted(pids)
+
+
+def wait_until(deadline_s: float, cond) -> bool:
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < deadline_s:
+        if cond():
+            return True
+        time.sleep(0.05)
+    return cond()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--binary", help="hiaer-spike binary (default: discover)")
+    ap.add_argument("--net", default=os.path.join(REPO, "testdata", "fig6_golden.hsn"))
+    ap.add_argument("--timeout", type=float, default=120.0,
+                    help="hard wall-clock bound for the whole smoke (s)")
+    args = ap.parse_args()
+    binary = find_binary(args.binary)
+    assert os.path.isfile(args.net), f"missing net fixture: {args.net}"
+
+    # --shard-timeout-ms keeps the post-kill step bounded well inside
+    # the watchdog even if the kill lands mid-frame
+    s = Session([binary, "serve-session", "--cores", "2",
+                 "--shard-timeout-ms", "10000"],
+                timeout=max(10.0, args.timeout / 4))
+    watchdog = threading.Timer(args.timeout, s.proc.kill)
+    watchdog.daemon = True
+    watchdog.start()
+    try:
+        hello = s.recv()
+        assert hello.get("op") == "hello" and hello.get("ok"), f"bad greeting: {hello}"
+
+        s.request({"op": "configure", "net": args.net, "seed": 7, "shards": 2})
+        for _ in range(3):
+            s.request({"op": "step", "axons": [0, 1]})
+        workers = shard_worker_pids(s.proc.pid)
+        assert len(workers) == 2, f"want 2 shard workers under {s.proc.pid}, found {workers}"
+        print(f"shard_smoke: configured shards=2, workers up: {workers}")
+
+        os.kill(workers[1], signal.SIGKILL)
+        # the kill races in-flight pipes: poll until the typed error lands
+        deadline = time.monotonic() + args.timeout / 2
+        while True:
+            s.send({"op": "step", "axons": [0]})
+            resp = s.recv()
+            if not resp.get("ok"):
+                break
+            assert time.monotonic() < deadline, "killed worker never surfaced an error"
+            time.sleep(0.05)
+        assert resp.get("code") == "engine", f"want code=engine, got: {resp}"
+        assert "shard" in json.dumps(resp), f"error should name the shard: {resp}"
+        print(f"shard_smoke: killed worker -> typed engine error: "
+              f"{resp.get('error', resp)}")
+
+        s.request({"op": "shutdown"})
+        s.proc.stdin.close()
+        out, err = s.proc.communicate(timeout=args.timeout / 4)
+        assert s.proc.returncode == 0, (
+            f"serve-session exited {s.proc.returncode}\nstdout: {out}\nstderr: {err}")
+        assert wait_until(10.0, lambda: all(not os.path.exists(f"/proc/{p}")
+                                           for p in workers)), \
+            f"worker pids {workers} still present after shutdown (zombie/orphan)"
+        print("shard_smoke: shutdown -> all workers reaped, exit 0. PASS")
+        return 0
+    except AssertionError as e:
+        print(f"shard_smoke: FAIL: {e}", file=sys.stderr)
+        return 1
+    finally:
+        watchdog.cancel()
+        if s.proc.poll() is None:
+            s.proc.kill()
+            s.proc.wait()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
