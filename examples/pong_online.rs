@@ -1,0 +1,173 @@
+//! Online Pong (PR 9, runtime plasticity): a tiny rate-coded paddle
+//! controller that **adapts while it plays** through the `Simulator`
+//! facade's live-edit surface — `write_synapse` re-weights existing
+//! synapses in place and `add_synapse` grows new ones, all without ever
+//! resetting membranes or rebuilding the engine (the paper's online
+//! `write_synapse` path; the server-side STDP kernel is the other half,
+//! see `SimConfig::learning`).
+//!
+//! The task is a 1-D pong: the ball random-walks over `LANES` lanes,
+//! one stimulus axon per lane, three integrate-and-fire action neurons
+//! (up / stay / down) vote by spike count over a short rate window, and
+//! the paddle moves by the argmax. Two engines run the **same** seeded
+//! ball trajectory from the **same** initial network:
+//!
+//! * **frozen** — inference only; its initial lane→stay wiring parks
+//!   the paddle, so it scores only when the ball wanders past it;
+//! * **online** — after every miss it nudges the active lane's synapses
+//!   (delta-rule: reinforce the correct action, weaken the chosen one),
+//!   creating lane→up / lane→down synapses on first use.
+//!
+//! The run prints both tracking accuracies over the scored second half
+//! and asserts the online agent wins — the "online adaptation beats
+//! frozen weights" check.
+//!
+//!     cargo run --release --example pong_online [-- --frames 400]
+
+use anyhow::Result;
+use hiaer_spike::sim::{Backend, SimConfig, Simulator};
+use hiaer_spike::snn::{EdgeList, NeuronModel};
+use hiaer_spike::util::cli::Args;
+use hiaer_spike::util::prng::Xorshift32;
+
+/// Ball / paddle positions live on this many lanes (= stimulus axons).
+const LANES: usize = 12;
+/// Action neurons: 0 = up (toward lane 0), 1 = stay, 2 = down.
+const UP: usize = 0;
+const STAY: usize = 1;
+const DOWN: usize = 2;
+/// IF threshold: a synapse of weight `w` yields roughly `T * w / 5`
+/// spikes over the rate window, so spike counts order like weights.
+const THETA: i32 = 4;
+/// Rate-coding window: steps the ball lane is presented per frame.
+const T_STEPS: usize = 6;
+/// Delta-rule step and weight ceiling for the online agent.
+const LR: i16 = 2;
+const W_MAX: i16 = 24;
+
+/// Initial policy network: every lane weakly wired to **stay** only.
+/// The per-lane axon row this creates is what later `add_synapse`
+/// calls grow into — the up/down synapses do not exist yet.
+fn initial_net() -> hiaer_spike::snn::Network {
+    let mut edges = EdgeList::with_capacity(3, LANES, LANES);
+    for lane in 0..LANES {
+        edges.push_axon(lane as u32, STAY as u32, 2);
+    }
+    edges.into_network(vec![NeuronModel::if_neuron(THETA); 3], vec![0, 1, 2], 7)
+}
+
+/// One rate-coded decision: present the ball's lane axon for the whole
+/// window and count output spikes per action neuron. Membranes are
+/// reset first so the vote is a pure function of the current weights —
+/// live edits survive `reset()` because they live in the HBM image.
+fn decide(sim: &mut dyn Simulator, ball: usize) -> Result<usize> {
+    sim.reset();
+    let mut counts = [0usize; 3];
+    for _ in 0..T_STEPS {
+        let r = sim.step(&[ball as u32])?;
+        for &f in r.output_spikes {
+            counts[f as usize] += 1;
+        }
+    }
+    // argmax, stay on ties (and when nothing fired at all)
+    let mut best = STAY;
+    for a in [UP, DOWN] {
+        if counts[a] > counts[best] {
+            best = a;
+        }
+    }
+    Ok(best)
+}
+
+/// Delta-rule weight nudge on one lane→action synapse: in-place
+/// `write_synapse` when it exists, `add_synapse` (structural growth)
+/// when a positive nudge targets a synapse that does not exist yet.
+fn nudge(sim: &mut dyn Simulator, lane: usize, action: usize, delta: i16) -> Result<()> {
+    let (lane, action) = (lane as u32, action as u32);
+    match sim.read_synapse(true, lane, action)? {
+        Some(cur) => {
+            sim.write_synapse(true, lane, action, (cur + delta).clamp(0, W_MAX))?;
+        }
+        None if delta > 0 => {
+            sim.add_synapse(true, lane, action, delta.min(W_MAX))?;
+        }
+        None => {}
+    }
+    Ok(())
+}
+
+fn step_paddle(paddle: usize, action: usize) -> usize {
+    match action {
+        UP => paddle.saturating_sub(1),
+        DOWN => (paddle + 1).min(LANES - 1),
+        _ => paddle,
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env(&[]).map_err(anyhow::Error::msg)?;
+    let frames = args.get_usize("frames", 400).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u32("seed", 11).map_err(anyhow::Error::msg)?;
+
+    let net = initial_net();
+    let mut online = SimConfig::new(net.clone()).backend(Backend::Rust).build()?;
+    let mut frozen = SimConfig::new(net).backend(Backend::Rust).build()?;
+
+    let mut rng = Xorshift32::new(seed);
+    let mut ball = LANES / 2;
+    let (mut p_online, mut p_frozen) = (LANES / 2, LANES / 2);
+    let scored_from = frames / 2; // let the online agent learn first
+    let (mut hits_online, mut hits_frozen, mut scored) = (0usize, 0usize, 0usize);
+    let mut edits = 0usize;
+
+    for frame in 0..frames {
+        // ball random-walks one lane every other frame (shared
+        // trajectory; the paddle is faster, so the task is learnable)
+        if frame % 2 == 0 {
+            ball = match rng.below(3) {
+                0 => ball.saturating_sub(1),
+                1 => ball,
+                _ => (ball + 1).min(LANES - 1),
+            };
+        }
+
+        // the action this frame *should* take: move toward the ball
+        let want = if ball < p_online {
+            UP
+        } else if ball > p_online {
+            DOWN
+        } else {
+            STAY
+        };
+        let act = decide(&mut *online, ball)?;
+        if act != want {
+            // reinforce the correct action, weaken the one chosen
+            nudge(&mut *online, ball, want, LR)?;
+            nudge(&mut *online, ball, act, -LR)?;
+            edits += 1;
+        }
+        p_online = step_paddle(p_online, act);
+
+        p_frozen = step_paddle(p_frozen, decide(&mut *frozen, ball)?);
+
+        if frame >= scored_from {
+            scored += 1;
+            hits_online += (p_online == ball) as usize;
+            hits_frozen += (p_frozen == ball) as usize;
+        }
+    }
+
+    let acc = |hits: usize| 100.0 * hits as f64 / scored.max(1) as f64;
+    let (acc_online, acc_frozen) = (acc(hits_online), acc(hits_frozen));
+    println!(
+        "online pong: {frames} frames ({scored} scored), {edits} corrective edit frames"
+    );
+    println!("  frozen weights : {acc_frozen:>5.1}% tracking accuracy");
+    println!("  online edits   : {acc_online:>5.1}% tracking accuracy");
+    assert!(
+        acc_online > acc_frozen,
+        "online adaptation ({acc_online:.1}%) must beat frozen weights ({acc_frozen:.1}%)"
+    );
+    println!("  online adaptation beats frozen weights");
+    Ok(())
+}

@@ -172,8 +172,13 @@ class RustSessionBackend(SimBackend):
     capacity raises :class:`~hs_api.exceptions.HsServerBusy` from the
     first call.
 
-    Weight edits (``write_synapse``) re-export and re-``configure`` the
-    live session — the hardware-reload semantics: membranes reset.
+    Weight edits (``write_synapse``) go over the wire as the protocol's
+    ``write_synapse`` op: the server patches the compiled engine slot in
+    place, so membranes and the step counter survive the edit — the
+    online-learning semantics, matching :class:`LocalBackend`'s in-place
+    matrix patch. Only a structurally impossible in-place patch makes
+    the server compact its edit journal and rebuild (which does reset
+    membranes, like a hardware routing-table reload).
     """
 
     name = "rust"
@@ -279,12 +284,14 @@ class RustSessionBackend(SimBackend):
         return self._client_or_raise().cost()
 
     def write_synapse(self, pre_is_axon, pre, post, old_weight, new_weight):
-        # weights live in the server's compiled HBM image: re-export and
-        # reconfigure the live session (replaces the simulator; membranes
-        # reset, matching a hardware routing-table reload). A closed
-        # session raises like every other op — no silent resurrection.
-        self._client_or_raise()
-        self.configure(self._network)
+        # one protocol round trip: the server upserts the weight into
+        # the compiled engine in place (membranes survive), falling back
+        # to a journal compaction + rebuild only when the slot layout
+        # cannot absorb the edit. A closed session raises like every
+        # other op — no silent resurrection.
+        client = self._client_or_raise()
+        client.write_synapse(int(pre), int(post), int(new_weight),
+                             pre_is_axon=bool(pre_is_axon))
 
     def close(self) -> None:
         if self._client is not None:

@@ -254,7 +254,8 @@ class SessionClient:
 
     def configure(self, net_path: str, seed: int | None = None,
                   workers: int | None = None,
-                  shards: int | None = None) -> dict:
+                  shards: int | None = None,
+                  learning: dict | None = None) -> dict:
         """Build/replace the server-side simulator. ``workers`` sets the
         worker-thread count of the pooled Rust backends (>= 1; the
         server rejects 0 with a ``config`` error). Spike trains are
@@ -265,6 +266,12 @@ class SessionClient:
         core count; out-of-range values are rejected with a ``config``
         error). Spike trains are shard-count-invariant too — the
         server's cross-shard merge is deterministic.
+
+        ``learning`` switches on pair-based STDP for this session: a
+        dict with any of the integer keys ``a_plus``, ``a_minus``,
+        ``tau_pre``, ``tau_post``, ``w_min``, ``w_max`` (server
+        defaults fill the rest). Mistyped fields are rejected with
+        ``malformed_request``, invalid combinations with ``config``.
 
         The response dict includes the server's cold-start breakdown:
         ``load_ms`` (network load — mmap + validate for ``.hsn`` v2,
@@ -277,6 +284,8 @@ class SessionClient:
             fields["workers"] = int(workers)
         if shards is not None:
             fields["shards"] = int(shards)
+        if learning is not None:
+            fields["learning"] = {k: int(v) for k, v in dict(learning).items()}
         return self.request("configure", **fields)
 
     def step(self, axons: list[int]) -> list[int]:
@@ -300,6 +309,22 @@ class SessionClient:
 
     def read_membrane(self, ids: list[int]) -> list[int]:
         return self.request("read_membrane", ids=[int(i) for i in ids])["v"]
+
+    def write_synapse(self, pre: int, post: int, weight: int,
+                      pre_is_axon: bool = False) -> dict:
+        """Upsert one synapse weight live, between steps. The engine
+        slot is patched in place — membranes and the step counter are
+        untouched (the online-learning fast path). When the in-place
+        patch is structurally impossible the server compacts its edit
+        journal into a fresh network and rebuilds (``compacted: True``
+        in the response; membranes reset on that path only). Returns
+        the response dict with ``created`` and ``compacted`` flags."""
+        resp = self.request(
+            "write_synapse",
+            pre=int(pre), post=int(post), weight=int(weight),
+            pre_is_axon=bool(pre_is_axon),
+        )
+        return {k: v for k, v in resp.items() if k not in ("ok", "op")}
 
     def reset(self) -> None:
         self.request("reset")

@@ -18,7 +18,7 @@ from hs_api import (
     SessionClient,
 )
 from hs_api.backend import SimBackend, make_backend, LocalBackend, RustSessionBackend
-from hs_api.exceptions import error_from_code
+from hs_api.exceptions import HsQuotaError, error_from_code
 
 
 HELLO = {"ok": True, "op": "hello", "protocol": 1, "backend": "rust"}
@@ -159,6 +159,53 @@ def test_configure_shards_field_is_optional_and_forwarded():
                       "error": "shards must be >= 1"})
     with pytest.raises(HsSessionError, match="shards must be >= 1"):
         c4.configure("/tmp/net.hsn", shards=0)
+
+
+def test_configure_learning_field_is_optional_and_forwarded():
+    ok = {"ok": True, "op": "configure", "protocol": 1, "backend": "rust",
+          "neurons": 4, "axons": 2, "outputs": 2}
+    # any subset of the integer knobs goes on the wire verbatim (ints)
+    c = client_with(ok)
+    c.configure("/tmp/net.hsn", learning={"a_plus": 8, "w_max": 64.0})
+    assert json.loads(c.transport.sent[0]) == {
+        "op": "configure", "net": "/tmp/net.hsn",
+        "learning": {"a_plus": 8, "w_max": 64}}
+    # omitted -> not on the wire (learning stays off)
+    c2 = client_with(ok)
+    c2.configure("/tmp/net.hsn")
+    assert "learning" not in json.loads(c2.transport.sent[0])
+    # the server validates the rule with the stable `config` code
+    c3 = client_with({"ok": False, "code": "config",
+                      "error": "learning: a_plus must be >= 0"})
+    with pytest.raises(HsSessionError, match="a_plus"):
+        c3.configure("/tmp/net.hsn", learning={"a_plus": -1})
+
+
+def test_write_synapse_marshals_and_strips_envelope():
+    c = client_with(
+        {"ok": True, "op": "write_synapse", "created": False,
+         "compacted": False},
+        {"ok": True, "op": "write_synapse", "created": True,
+         "compacted": False},
+    )
+    out = c.write_synapse(0, 2, 7)
+    # pre_is_axon defaults to False and is always explicit on the wire
+    assert json.loads(c.transport.sent[0]) == {
+        "op": "write_synapse", "pre": 0, "post": 2, "weight": 7,
+        "pre_is_axon": False}
+    assert out == {"created": False, "compacted": False}
+    out = c.write_synapse(1, 3, -4, pre_is_axon=True)
+    assert json.loads(c.transport.sent[1]) == {
+        "op": "write_synapse", "pre": 1, "post": 3, "weight": -4,
+        "pre_is_axon": True}
+    assert out == {"created": True, "compacted": False}
+
+
+def test_write_synapse_quota_code_maps_to_quota_error():
+    c = client_with({"ok": False, "code": "quota",
+                     "error": "write_synapse budget exhausted (8 per step)"})
+    with pytest.raises(HsQuotaError, match="budget"):
+        c.write_synapse(0, 1, 5)
 
 
 # ----------------------------------------------- stable codes -> exceptions

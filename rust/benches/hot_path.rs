@@ -16,6 +16,9 @@
 //!    mmap load beats the parse; since PR 8 it also carries the
 //!    `Backend::Sharded` multi-process scaling curve (1/2/4 shard
 //!    workers over a 4-core topology, binary AER frames over pipes);
+//!    since PR 9 it also carries the runtime-plasticity numbers
+//!    (STDP-enabled steps/s vs frozen weights, and the mean in-place
+//!    `write_synapse` live-edit latency);
 //! 1. event-driven core engine steps/s across network sizes (rust
 //!    backend), synaptic events/s;
 //! 2. dense software-simulator baseline (the paper's Fig-8 CPU
@@ -490,6 +493,44 @@ fn main() {
          {shard4_rate:>10.0} 4 shards ({shard_scaleup:.2}x, n = {shn})"
     );
 
+    // runtime plasticity (PR 9): the headline net re-run with the
+    // pair-based STDP kernel enabled — trace decay/bump, depression and
+    // potentiation all ride the sweep/route hot path, so comparing
+    // against a frozen-weight run of the same length is the kernel's
+    // true overhead. Also measured: the live-edit path, i.e. the mean
+    // in-place `write_synapse` upsert latency on the compiled engine
+    // (what one session-protocol `write_synapse` op costs server-side,
+    // marshalling excluded). Edits target existing synapses so every
+    // call takes the hit path (slot rewrite), not the cheap miss.
+    use hiaer_spike::plasticity::PlasticityConfig;
+    let stdp_steps = steps.min(100);
+    let mut frozen = SimConfig::new(net.clone()).backend(Backend::Rust).build().unwrap();
+    let frozen_rate = rate(&mut *frozen, stdp_steps, net.n_axons());
+    let mut learner = SimConfig::new(net.clone())
+        .backend(Backend::Rust)
+        .learning(PlasticityConfig::default())
+        .build()
+        .unwrap();
+    let stdp_rate = rate(&mut *learner, stdp_steps, net.n_axons());
+    let stdp_overhead = frozen_rate / stdp_rate;
+    let n_edits = 2_000usize;
+    let mut edit_rng = Xorshift32::new(7);
+    let t0 = Instant::now();
+    for _ in 0..n_edits {
+        // every neuron in make_net has fan-out d, so sampling a source
+        // neuron and one of its targets always names a real synapse
+        let p = edit_rng.below(hn as u32);
+        let row = net.neuron_targets(p as usize);
+        let q = row[edit_rng.below(row.len() as u32) as usize];
+        let w = edit_rng.range_i32(5, 40) as i16; // nonzero: stays plastic
+        assert!(learner.write_synapse(false, p, q, w).unwrap());
+    }
+    let edit_apply_us = t0.elapsed().as_secs_f64() * 1e6 / n_edits as f64;
+    println!(
+        "  stdp learning   : {frozen_rate:>10.0} steps/s frozen, {stdp_rate:>10.0} learning \
+         ({stdp_overhead:.2}x cost); write_synapse {edit_apply_us:.2} us/edit in place"
+    );
+
     // ---- append one record to the perf trajectory (one entry per PR)
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -558,6 +599,12 @@ fn main() {
         ("shard2_steps_per_s", Json::Num(shard2_rate)),
         ("shard4_steps_per_s", Json::Num(shard4_rate)),
         ("shard_scaleup", Json::Num(shard_scaleup)),
+        // runtime plasticity (PR 9): headline net with the STDP kernel
+        // on vs frozen weights, and the mean in-place write_synapse
+        // upsert latency on the compiled engine (hit path)
+        ("stdp_steps_per_s", Json::Num(stdp_rate)),
+        ("stdp_overhead", Json::Num(stdp_overhead)),
+        ("edit_apply_us", Json::Num(edit_apply_us)),
     ]));
     let n_records = records.len();
     let doc = obj(vec![

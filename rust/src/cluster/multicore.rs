@@ -26,6 +26,7 @@ use crate::energy::{CostReport, EnergyModel};
 use crate::engine::{CoreEngine, RustBackend};
 use crate::hbm::SlotStrategy;
 use crate::partition::{ClusterTopology, CoreCapacity, Partition};
+use crate::plasticity::PlasticityConfig;
 use crate::router::{split_network, FabricModel, HiaerRouter, RouterStats};
 use crate::snn::NetView;
 
@@ -54,6 +55,12 @@ pub struct MultiCoreEngine {
     /// all fired global ids this step, ascending (facade `fired()`)
     fired_global: Vec<u32>,
     out_global: Vec<u32>,
+    /// local axon id of each (core, global axon), u32::MAX if unused —
+    /// addresses live edits whose pre is a global input axon.
+    axon_local: Vec<Vec<u32>>,
+    /// per core: global source neuron -> local axon its remote synapses
+    /// were re-homed under — addresses cross-core live edits.
+    remote_axon: Vec<std::collections::HashMap<u32, u32>>,
     /// wall-clock accumulators per sub-phase: `[membrane sweep, HiAER
     /// multicast barrier, route prepare+gather, route merge/accumulate]`
     /// — exposed for the perf harness. The route split mirrors the
@@ -74,6 +81,7 @@ impl MultiCoreEngine {
         cap: CoreCapacity,
         strategy: SlotStrategy,
         pool_opts: PoolOptions,
+        learning: Option<PlasticityConfig>,
     ) -> Result<Self> {
         // convert once; the Copy view threads through partition + split so
         // an mmap-backed global net is never copied to the heap here
@@ -83,7 +91,15 @@ impl MultiCoreEngine {
         let split = split_network(net, &partition);
         let mut cores = Vec::with_capacity(split.subnets.len());
         for sub in &split.subnets {
-            cores.push(CoreEngine::new(sub, strategy, RustBackend)?);
+            let mut core = CoreEngine::new(sub, strategy, RustBackend)?;
+            // STDP per core: a remote pre-neuron's trace is mirrored by
+            // its re-homed local axon (same fire pattern, same decay
+            // schedule), so cluster weight updates are bit-identical to
+            // the single-core run — see crate::plasticity module docs.
+            if let Some(cfg) = learning {
+                core.enable_plasticity(cfg)?;
+            }
+            cores.push(core);
         }
         let router = HiaerRouter::new(topology, FabricModel::default(), split.table);
         let n_cores = cores.len();
@@ -96,6 +112,8 @@ impl MultiCoreEngine {
             merged_axons: vec![Vec::new(); n_cores],
             fired_global: Vec::new(),
             out_global: Vec::new(),
+            axon_local: split.axon_local,
+            remote_axon: split.remote_axon,
             phase_wall: [std::time::Duration::ZERO; 4],
         })
     }
@@ -199,6 +217,104 @@ impl MultiCoreEngine {
             .collect()
     }
 
+    /// Resolve a *global* (pre, post) synapse address to the post
+    /// neuron's core and that core's local source id. `Ok(None)` means
+    /// the source has no presence (local neuron / re-homed axon) on
+    /// post's core — the synapse cannot currently exist there.
+    fn resolve_edit(
+        &self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+    ) -> Result<Option<(usize, bool, u32, u32)>> {
+        let n = self.partition.core_of.len() as u32;
+        if post >= n {
+            anyhow::bail!("post neuron id {post} out of range ({n} global neurons)");
+        }
+        let c = self.partition.core_of[post as usize] as usize;
+        let lpost = self.partition.local_of[post as usize];
+        if pre_is_axon {
+            let a = self.axon_local.first().map_or(0, Vec::len) as u32;
+            if pre >= a {
+                anyhow::bail!("axon id {pre} out of range ({a} global axons)");
+            }
+            let la = self.axon_local[c][pre as usize];
+            if la == u32::MAX {
+                return Ok(None);
+            }
+            Ok(Some((c, true, la, lpost)))
+        } else {
+            if pre >= n {
+                anyhow::bail!("pre neuron id {pre} out of range ({n} global neurons)");
+            }
+            if self.partition.core_of[pre as usize] as usize == c {
+                Ok(Some((c, false, self.partition.local_of[pre as usize], lpost)))
+            } else {
+                match self.remote_axon[c].get(&pre) {
+                    Some(&la) => Ok(Some((c, true, la, lpost))),
+                    None => Ok(None),
+                }
+            }
+        }
+    }
+
+    /// Global-id live weight edit (all duplicate slots); `Ok(false)` =
+    /// absent. See [`CoreEngine::write_synapse`].
+    pub fn write_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> Result<bool> {
+        match self.resolve_edit(pre_is_axon, pre, post)? {
+            Some((c, ax, lpre, lpost)) => {
+                self.pool.core_mut(c).write_synapse(ax, lpre, lpost, weight)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Global-id live synapse read (first duplicate slot).
+    pub fn read_synapse(&self, pre_is_axon: bool, pre: u32, post: u32) -> Result<Option<i16>> {
+        match self.resolve_edit(pre_is_axon, pre, post)? {
+            Some((c, ax, lpre, lpost)) => Ok(self.pool.core(c).read_synapse(ax, lpre, lpost)),
+            None => Ok(None),
+        }
+    }
+
+    /// Global-id live structural add (upsert). Creating a synapse whose
+    /// source has no presence on the post core would need a new local
+    /// axon + routing-table entry in the compiled cluster — that is a
+    /// re-partition, reported as an error (compact the session's edit
+    /// journal and rebuild instead).
+    pub fn add_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> Result<bool> {
+        match self.resolve_edit(pre_is_axon, pre, post)? {
+            Some((c, ax, lpre, lpost)) => {
+                self.pool.core_mut(c).add_synapse(ax, lpre, lpost, weight)
+            }
+            None => anyhow::bail!(
+                "source {} {pre} has no presence on neuron {post}'s core: adding this \
+                 synapse needs a new HiAER route — journal compaction required",
+                if pre_is_axon { "axon" } else { "neuron" },
+            ),
+        }
+    }
+
+    /// Global-id live structural remove; returns slots cleared.
+    pub fn remove_synapse(&mut self, pre_is_axon: bool, pre: u32, post: u32) -> Result<usize> {
+        match self.resolve_edit(pre_is_axon, pre, post)? {
+            Some((c, ax, lpre, lpost)) => self.pool.core_mut(c).remove_synapse(ax, lpre, lpost),
+            None => Ok(0),
+        }
+    }
+
     /// Aggregate cost since the last `reset_cost`.
     pub fn cost(&self, model: &EnergyModel) -> ClusterCost {
         let mut energy = 0.0;
@@ -256,6 +372,38 @@ impl Simulator for MultiCoreEngine {
 
     fn read_membrane(&self, ids: &[u32]) -> Vec<i32> {
         MultiCoreEngine::read_membrane(self, ids)
+    }
+
+    fn write_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> Result<bool, SimError> {
+        MultiCoreEngine::write_synapse(self, pre_is_axon, pre, post, weight)
+            .map_err(|e| SimError::Config(e.to_string()))
+    }
+
+    fn read_synapse(&self, pre_is_axon: bool, pre: u32, post: u32) -> Result<Option<i16>, SimError> {
+        MultiCoreEngine::read_synapse(self, pre_is_axon, pre, post)
+            .map_err(|e| SimError::Config(e.to_string()))
+    }
+
+    fn add_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> Result<bool, SimError> {
+        MultiCoreEngine::add_synapse(self, pre_is_axon, pre, post, weight)
+            .map_err(|e| SimError::Config(e.to_string()))
+    }
+
+    fn remove_synapse(&mut self, pre_is_axon: bool, pre: u32, post: u32) -> Result<usize, SimError> {
+        MultiCoreEngine::remove_synapse(self, pre_is_axon, pre, post)
+            .map_err(|e| SimError::Config(e.to_string()))
     }
 
     fn cost(&self, model: &EnergyModel) -> CostSummary {
@@ -359,9 +507,15 @@ mod tests {
                 max_neurons: (n / 3).max(4),
                 max_synapses: usize::MAX,
             };
-            let mut cluster =
-                MultiCoreEngine::new(&net, topo, cap, SlotStrategy::Modulo, PoolOptions::default())
-                    .map_err(|e| e.to_string())?;
+            let mut cluster = MultiCoreEngine::new(
+                &net,
+                topo,
+                cap,
+                SlotStrategy::Modulo,
+                PoolOptions::default(),
+                None,
+            )
+            .map_err(|e| e.to_string())?;
             // per-core base seeds differ but deterministic nets ignore them
             let mut dense = DenseEngine::new(&net);
             let mut is_output = vec![false; n];
@@ -394,7 +548,7 @@ mod tests {
         let topo = ClusterTopology { servers: 1, fpgas_per_server: 2, cores_per_fpga: 2 };
         let cap = CoreCapacity { max_neurons: 25, max_synapses: usize::MAX };
         let mut cluster =
-            MultiCoreEngine::new(&net, topo, cap, SlotStrategy::Modulo, PoolOptions::default())
+            MultiCoreEngine::new(&net, topo, cap, SlotStrategy::Modulo, PoolOptions::default(), None)
                 .unwrap();
         let axons: Vec<u32> = (0..net.n_axons() as u32).collect();
         for _ in 0..5 {

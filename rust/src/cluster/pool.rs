@@ -89,6 +89,7 @@ use std::time::{Duration, Instant};
 use crate::engine::backend::sweep_chunk;
 use crate::engine::core::{gather_chunk, RouteView, SweepView};
 use crate::engine::{mask_words, CoreEngine, RustBackend, UpdateBackend};
+use crate::plasticity::trace_chunk;
 
 /// Default chunk granularity: 64 spike words = 4096 neurons. Small enough
 /// that a 100k-neuron core splits into ~25 chunks for load balance, large
@@ -504,9 +505,13 @@ impl PoolSim {
         net: impl Into<NetView<'a>>,
         strategy: SlotStrategy,
         opts: PoolOptions,
+        learning: Option<crate::plasticity::PlasticityConfig>,
     ) -> anyhow::Result<Self> {
         let net: NetView<'_> = net.into();
-        let engine = CoreEngine::new(net, strategy, RustBackend)?;
+        let mut engine = CoreEngine::new(net, strategy, RustBackend)?;
+        if let Some(cfg) = learning {
+            engine.enable_plasticity(cfg)?;
+        }
         let pool = CorePool::with_options(vec![engine], opts);
         Ok(Self { pool, inputs: vec![Vec::new()], n_axons: net.n_axons() })
     }
@@ -562,6 +567,53 @@ impl Simulator for PoolSim {
     fn hbm_stats(&self) -> Option<crate::hbm::LayoutStats> {
         Some(self.pool.core(0).hbm.image.stats)
     }
+
+    fn write_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> Result<bool, SimError> {
+        self.pool
+            .core_mut(0)
+            .write_synapse(pre_is_axon, pre, post, weight)
+            .map_err(|e| SimError::Config(e.to_string()))
+    }
+
+    fn read_synapse(
+        &self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+    ) -> Result<Option<i16>, SimError> {
+        Ok(self.pool.core(0).read_synapse(pre_is_axon, pre, post))
+    }
+
+    fn add_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> Result<bool, SimError> {
+        self.pool
+            .core_mut(0)
+            .add_synapse(pre_is_axon, pre, post, weight)
+            .map_err(|e| SimError::Config(e.to_string()))
+    }
+
+    fn remove_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+    ) -> Result<usize, SimError> {
+        self.pool
+            .core_mut(0)
+            .remove_synapse(pre_is_axon, pre, post)
+            .map_err(|e| SimError::Config(e.to_string()))
+    }
 }
 
 impl<B: UpdateBackend> Drop for CorePool<B> {
@@ -588,6 +640,14 @@ unsafe fn run_chunk(view: &SweepView, word_lo: usize, word_hi: usize) {
     let spikes = std::slice::from_raw_parts_mut(view.spikes.add(word_lo), word_hi - word_lo);
     let params = &*view.params;
     sweep_chunk(v, params.slice(lo, hi), view.step_seed, spikes, lo as u32);
+    // STDP trace columns ride the same chunk: per-lane independent, so
+    // any chunking/worker interleaving matches the serial trace pass
+    // bit-for-bit (null when plasticity is off).
+    if !view.trace_pre.is_null() {
+        let pre = std::slice::from_raw_parts_mut(view.trace_pre.add(lo), hi - lo);
+        let post = std::slice::from_raw_parts_mut(view.trace_post.add(lo), hi - lo);
+        trace_chunk(spikes, pre, post, view.tau_pre, view.tau_post);
+    }
 }
 
 /// Gather one pointer chunk of a prepared route view into the chunk's

@@ -48,6 +48,7 @@
 //! | 0x05 | RESET_COST | empty                                                |
 //! | 0x06 | COST       | empty                                                |
 //! | 0x07 | SHUTDOWN   | empty — exit the frame loop                          |
+//! | 0x08 | EDIT       | `u8 op (0 write, 1 add, 2 remove, 3 read), u8 pre_is_axon, u32 core, u32 local_pre, u32 local_post, i32 weight` — live synapse edit on one core |
 //!
 //! Shard → parent:
 //!
@@ -58,6 +59,7 @@
 //! | 0x83 | MEMB  | `u32 n, n×i32` — membrane values in request order         |
 //! | 0x84 | ACK   | `u8 kind` — echoes RESET / RESET_COST                     |
 //! | 0x86 | COSTR | `u32 n_blocks, n×{u32 core, 5×u64 counters, u64 cycles}` (ascending core order) |
+//! | 0x87 | EDITR | `u8 status` then: 0 (ok) `i32 value` — write 1/0 matched, add 1 created / 0 re-weighted, remove slot count, read the weight; 2 (absent, read only) empty; 1 (edit failed) UTF-8 message — the shard stays alive |
 //! | 0xEE | ERR   | UTF-8 message — the shard is failing; parent surfaces it  |
 //!
 //! # Tree topology and the step loop
@@ -120,6 +122,13 @@ pub(crate) const K_RESET: u8 = 0x04;
 pub(crate) const K_RESET_COST: u8 = 0x05;
 pub(crate) const K_COST: u8 = 0x06;
 pub(crate) const K_SHUTDOWN: u8 = 0x07;
+pub(crate) const K_EDIT: u8 = 0x08;
+
+/// EDIT-frame op codes.
+pub(crate) const EDIT_WRITE: u8 = 0;
+pub(crate) const EDIT_ADD: u8 = 1;
+pub(crate) const EDIT_REMOVE: u8 = 2;
+pub(crate) const EDIT_READ: u8 = 3;
 
 /// Shard → parent frame kinds.
 pub(crate) const K_READY: u8 = 0x80;
@@ -127,6 +136,7 @@ pub(crate) const K_FIRED: u8 = 0x81;
 pub(crate) const K_MEMB: u8 = 0x83;
 pub(crate) const K_ACK: u8 = 0x84;
 pub(crate) const K_COSTR: u8 = 0x86;
+pub(crate) const K_EDITR: u8 = 0x87;
 pub(crate) const K_ERR: u8 = 0xEE;
 
 /// Upper bound on one frame's payload — a corrupted length prefix must
@@ -237,11 +247,13 @@ fn kind_name(kind: u8) -> &'static str {
         K_RESET_COST => "RESET_COST",
         K_COST => "COST",
         K_SHUTDOWN => "SHUTDOWN",
+        K_EDIT => "EDIT",
         K_READY => "READY",
         K_FIRED => "FIRED",
         K_MEMB => "MEMB",
         K_ACK => "ACK",
         K_COSTR => "COSTR",
+        K_EDITR => "EDITR",
         K_ERR => "ERR",
         _ => "?",
     }
@@ -503,6 +515,9 @@ pub struct ShardedSim {
     shards: usize,
     n_axons: usize,
     is_output: Vec<bool>,
+    /// live-edit addressing (same maps as the in-process cluster)
+    axon_local: Vec<Vec<u32>>,
+    remote_axon: Vec<std::collections::HashMap<u32, u32>>,
     fired_by_core: Vec<Vec<u32>>,
     fired_global: Vec<u32>,
     out_global: Vec<u32>,
@@ -565,6 +580,7 @@ impl ShardedSim {
         let split = split_network(view, &partition);
         let router = HiaerRouter::new(opts.topology, FabricModel::default(), split.table);
         drop(split.subnets);
+        let (axon_local, remote_axon) = (split.axon_local, split.remote_axon);
         let n_axons = view.n_axons();
         let mut is_output = vec![false; view.n_neurons()];
         for &o in view.outputs {
@@ -602,6 +618,17 @@ impl ShardedSim {
         }
         if let Some(rp) = opts.route_chunk_ptrs {
             worker_args.extend(["--route-chunk-ptrs".into(), rp.to_string()]);
+        }
+        if let Some(cfg) = opts.learning {
+            // every worker enables the same STDP config on its cores,
+            // so a sharded learning run stays bit-identical to the
+            // in-process cluster (weight updates are purely core-local)
+            worker_args.extend([
+                "--learn".into(),
+                format!("{},{},{},{}", cfg.a_plus, cfg.a_minus, cfg.tau_pre, cfg.tau_post),
+                "--learn-clamp".into(),
+                format!("{},{}", cfg.w_min, cfg.w_max),
+            ]);
         }
 
         let timeout = opts
@@ -646,6 +673,8 @@ impl ShardedSim {
             shards,
             n_axons,
             is_output,
+            axon_local,
+            remote_axon,
             fired_global: Vec::new(),
             out_global: Vec::new(),
             epoch: 0,
@@ -663,6 +692,98 @@ impl ShardedSim {
     /// Shard count behind this session.
     pub fn n_shards(&self) -> usize {
         self.shards
+    }
+
+    /// Resolve a global (pre, post) synapse address to the post
+    /// neuron's core + that core's local source id (see
+    /// `MultiCoreEngine::resolve_edit` — same maps, same semantics).
+    /// `Ok(None)` = the source has no presence on post's core.
+    fn resolve_edit(
+        &self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+    ) -> Result<Option<(usize, bool, u32, u32)>, SimError> {
+        let n = self.partition.core_of.len() as u32;
+        if post >= n {
+            return Err(SimError::Config(format!(
+                "post neuron id {post} out of range ({n} global neurons)"
+            )));
+        }
+        let c = self.partition.core_of[post as usize] as usize;
+        let lpost = self.partition.local_of[post as usize];
+        if pre_is_axon {
+            if pre as usize >= self.n_axons {
+                return Err(SimError::Config(format!(
+                    "axon id {pre} out of range ({} global axons)",
+                    self.n_axons
+                )));
+            }
+            match self.axon_local[c][pre as usize] {
+                u32::MAX => Ok(None),
+                la => Ok(Some((c, true, la, lpost))),
+            }
+        } else {
+            if pre >= n {
+                return Err(SimError::Config(format!(
+                    "pre neuron id {pre} out of range ({n} global neurons)"
+                )));
+            }
+            if self.partition.core_of[pre as usize] as usize == c {
+                Ok(Some((c, false, self.partition.local_of[pre as usize], lpost)))
+            } else {
+                Ok(self.remote_axon[c].get(&pre).map(|&la| (c, true, la, lpost)))
+            }
+        }
+    }
+
+    /// One EDIT/EDITR frame exchange with the shard owning `core`.
+    /// `Ok(None)` = absent (read op); edit failures (e.g. a full HBM
+    /// row) come back as [`SimError::Config`] without killing the shard.
+    fn edit_frame(
+        &self,
+        op: u8,
+        pre_is_axon: bool,
+        core: usize,
+        lpre: u32,
+        lpost: u32,
+        weight: i16,
+    ) -> Result<Option<i32>, SimError> {
+        let n_cores = self.partition.topology.n_cores();
+        let s = shard_of_core(n_cores, self.shards, core);
+        let mut payload = Vec::with_capacity(18);
+        payload.push(op);
+        payload.push(pre_is_axon as u8);
+        put_u32(&mut payload, core as u32);
+        put_u32(&mut payload, lpre);
+        put_u32(&mut payload, lpost);
+        put_i32(&mut payload, weight as i32);
+        let mut links = plock(&self.links);
+        let link = &mut links[s];
+        link.send(K_EDIT, &payload)?;
+        let reply = link.recv(K_EDITR, self.timeout)?;
+        drop(links);
+        let mut p = Payload::new(&reply);
+        let status = p
+            .u8()
+            .map_err(|e| SimError::Engine(anyhow!("shard {s}: bad EDITR frame: {e}")))?;
+        match status {
+            0 => {
+                let v = p
+                    .i32()
+                    .and_then(|v| p.done().map(|_| v))
+                    .map_err(|e| SimError::Engine(anyhow!("shard {s}: bad EDITR frame: {e}")))?;
+                Ok(Some(v))
+            }
+            2 => Ok(None),
+            1 => {
+                let msg = String::from_utf8_lossy(p.buf.get(p.pos..).unwrap_or(&[])).into_owned();
+                Err(SimError::Config(msg))
+            }
+            other => Err(SimError::Engine(anyhow!(
+                "shard {s}: bad EDITR status {other}"
+            ))),
+        }
     }
 
     fn step_inner(&mut self, axon_in: &[u32]) -> Result<(), SimError> {
@@ -796,6 +917,58 @@ impl Simulator for ShardedSim {
         }
         drop(links);
         self.router.reset_stats();
+    }
+
+    fn write_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> Result<bool, SimError> {
+        match self.resolve_edit(pre_is_axon, pre, post)? {
+            Some((c, ax, lpre, lpost)) => Ok(self
+                .edit_frame(EDIT_WRITE, ax, c, lpre, lpost, weight)?
+                .is_some_and(|v| v != 0)),
+            None => Ok(false),
+        }
+    }
+
+    fn read_synapse(&self, pre_is_axon: bool, pre: u32, post: u32) -> Result<Option<i16>, SimError> {
+        match self.resolve_edit(pre_is_axon, pre, post)? {
+            Some((c, ax, lpre, lpost)) => Ok(self
+                .edit_frame(EDIT_READ, ax, c, lpre, lpost, 0)?
+                .map(|v| v as i16)),
+            None => Ok(None),
+        }
+    }
+
+    fn add_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> Result<bool, SimError> {
+        match self.resolve_edit(pre_is_axon, pre, post)? {
+            Some((c, ax, lpre, lpost)) => Ok(self
+                .edit_frame(EDIT_ADD, ax, c, lpre, lpost, weight)?
+                .is_some_and(|v| v != 0)),
+            None => Err(SimError::Config(format!(
+                "source {} {pre} has no presence on neuron {post}'s core: adding this \
+                 synapse needs a new HiAER route — journal compaction required",
+                if pre_is_axon { "axon" } else { "neuron" },
+            ))),
+        }
+    }
+
+    fn remove_synapse(&mut self, pre_is_axon: bool, pre: u32, post: u32) -> Result<usize, SimError> {
+        match self.resolve_edit(pre_is_axon, pre, post)? {
+            Some((c, ax, lpre, lpost)) => Ok(self
+                .edit_frame(EDIT_REMOVE, ax, c, lpre, lpost, 0)?
+                .map_or(0, |v| v.max(0) as usize)),
+            None => Ok(0),
+        }
     }
 
     fn read_membrane(&self, ids: &[u32]) -> Vec<i32> {
@@ -993,6 +1166,13 @@ fn shard_worker_run(args: &Args) -> anyhow::Result<()> {
     if shards == 0 || shard >= shards || shards > n_cores {
         bail!("shard-worker: bad geometry (shard {shard} of {shards}, {n_cores} cores)");
     }
+    let learning = match args.get("learn") {
+        None => None,
+        Some(spec) => Some(
+            crate::sim::parse_learning(spec, args.get("learn-clamp"))
+                .map_err(|e| anyhow!("shard-worker: {e}"))?,
+        ),
+    };
 
     // Identical partition + split as the parent (and every sibling): the
     // determinism contract rests on this recomputation agreeing.
@@ -1006,7 +1186,11 @@ fn shard_worker_run(args: &Args) -> anyhow::Result<()> {
     let (lo, hi) = shard_core_range(n_cores, shards, shard);
     let mut cores = Vec::with_capacity(hi - lo);
     for sub in split.subnets.into_iter().skip(lo).take(hi - lo) {
-        cores.push(CoreEngine::new(&sub, strategy, RustBackend)?);
+        let mut core = CoreEngine::new(&sub, strategy, RustBackend)?;
+        if let Some(cfg) = learning {
+            core.enable_plasticity(cfg)?;
+        }
+        cores.push(core);
     }
     let n_local = cores.len();
     let mut pool = CorePool::with_options(cores, pool_opts);
@@ -1133,6 +1317,48 @@ fn shard_worker_run(args: &Args) -> anyhow::Result<()> {
                     put_u64(&mut out, core.cycles);
                 }
                 write_frame(&mut w, K_COSTR, &out)?;
+                w.flush()?;
+            }
+            K_EDIT => {
+                let op = p.u8()?;
+                let ax = p.u8()? != 0;
+                let core = p.u32()? as usize;
+                let lpre = p.u32()?;
+                let lpost = p.u32()?;
+                let weight = p.i32()? as i16;
+                p.done()?;
+                if core < lo || core >= hi {
+                    bail!("EDIT for core {core} outside shard range {lo}..{hi}");
+                }
+                let engine = pool.core_mut(core - lo);
+                let res: anyhow::Result<Option<i32>> = match op {
+                    EDIT_WRITE => {
+                        engine.write_synapse(ax, lpre, lpost, weight).map(|b| Some(b as i32))
+                    }
+                    EDIT_ADD => {
+                        engine.add_synapse(ax, lpre, lpost, weight).map(|b| Some(b as i32))
+                    }
+                    EDIT_REMOVE => {
+                        engine.remove_synapse(ax, lpre, lpost).map(|n| Some(n as i32))
+                    }
+                    EDIT_READ => Ok(engine.read_synapse(ax, lpre, lpost).map(|w| w as i32)),
+                    other => bail!("shard-worker: unknown EDIT op {other}"),
+                };
+                out.clear();
+                match res {
+                    Ok(Some(v)) => {
+                        out.push(0);
+                        put_i32(&mut out, v);
+                    }
+                    Ok(None) => out.push(2),
+                    // an edit that fails (e.g. full HBM row) keeps the
+                    // worker alive — the parent types it as a config error
+                    Err(e) => {
+                        out.push(1);
+                        out.extend_from_slice(format!("{e:#}").as_bytes());
+                    }
+                }
+                write_frame(&mut w, K_EDITR, &out)?;
                 w.flush()?;
             }
             K_SHUTDOWN => break,

@@ -27,6 +27,14 @@
 //! chunk-parallel across worker threads (backends opt in via
 //! [`UpdateBackend::chunkable`]).
 //!
+//! When runtime plasticity is enabled, the per-neuron STDP eligibility
+//! traces are advanced by [`crate::plasticity::trace_chunk`] — a
+//! branch-free extension of this kernel that runs over the same
+//! word-aligned chunks, immediately after each chunk's sweep, and is
+//! per-lane independent so the chunking invariance above carries over
+//! verbatim (weight mutation itself stays in the serial route
+//! epilogue; see the `plasticity` module docs' ordering contract).
+//!
 //! Spike output is a packed `u64` bitmask (bit `i` = neuron `i` fired),
 //! matching the hardware's BRAM spike registers; fired ids are decoded
 //! word-at-a-time with [`extract_fired`] instead of an O(N) scalar scan.

@@ -58,7 +58,11 @@
 
 use crate::energy::{CostReport, EnergyModel};
 use crate::engine::backend::{extract_fired, mask_words, CoreParams, UpdateBackend};
-use crate::hbm::{AccessCounters, HbmImage, HbmSim, Pointer, SlotStrategy};
+use crate::hbm::{AccessCounters, HbmImage, HbmSim, Pointer, SlotStrategy, SynEntry, SYN_VALID};
+use crate::plasticity::{
+    apply_delta, decay_trace, stdp_delta, trace_chunk, PlasticState, PlasticityConfig, TRACE_CEIL,
+    TRACE_ONE,
+};
 use crate::snn::NetView;
 use crate::util::prng::mix_seed;
 
@@ -74,6 +78,14 @@ pub(crate) struct SweepView {
     pub params: *const CoreParams,
     pub n: usize,
     pub step_seed: u32,
+    /// STDP trace columns (null when plasticity is off). Chunks update
+    /// their own word-aligned trace range right after the sweep — the
+    /// trace kernel is per-lane independent, so this inherits the
+    /// sweep's chunking invariance.
+    pub trace_pre: *mut i32,
+    pub trace_post: *mut i32,
+    pub tau_pre: u32,
+    pub tau_post: u32,
 }
 
 /// Raw pointers into one engine's prepared route state, handed to
@@ -130,6 +142,9 @@ pub struct CoreEngine<B: UpdateBackend> {
     /// phase-1 pointer-row delta of the current route phase (for the
     /// cycle accounting in `route_finish`)
     route_ptr_rows: u64,
+    /// opt-in STDP learning state (traces + reverse in-edge index);
+    /// see `crate::plasticity` for the ordering contract
+    plastic: Option<Box<PlasticState>>,
 }
 
 impl<B: UpdateBackend> CoreEngine<B> {
@@ -172,7 +187,28 @@ impl<B: UpdateBackend> CoreEngine<B> {
             route_chunks: 0,
             route_chunk_ptrs: usize::MAX,
             route_ptr_rows: 0,
+            plastic: None,
         }
+    }
+
+    /// Opt in to pair-based STDP (see `crate::plasticity` for the rule
+    /// and the trace/update ordering contract). Builds the traces and
+    /// the reverse in-edge index over the compiled image; call before
+    /// the first step (traces start at zero).
+    pub(crate) fn enable_plasticity(&mut self, cfg: PlasticityConfig) -> anyhow::Result<()> {
+        cfg.validate().map_err(|e| anyhow::anyhow!("invalid learning config: {e}"))?;
+        self.plastic = Some(Box::new(PlasticState::from_image(&self.hbm.image, cfg)));
+        Ok(())
+    }
+
+    /// True when STDP learning is enabled on this engine.
+    pub fn plasticity_enabled(&self) -> bool {
+        self.plastic.is_some()
+    }
+
+    /// STDP weight deltas applied since construction (diagnostics).
+    pub fn stdp_events(&self) -> u64 {
+        self.plastic.as_ref().map_or(0, |p| p.events)
     }
 
     pub fn n_neurons(&self) -> usize {
@@ -187,6 +223,12 @@ impl<B: UpdateBackend> CoreEngine<B> {
         // backend (facade contract)
         self.fired_buf.clear();
         self.out_buf.clear();
+        // traces restart with the membranes; learned weights stay — a
+        // reset returns the session to quiescent state, it does not
+        // undo learning (compile a fresh engine for pristine weights)
+        if let Some(p) = self.plastic.as_deref_mut() {
+            p.reset();
+        }
         self.reset_cost();
     }
 
@@ -227,6 +269,18 @@ impl<B: UpdateBackend> CoreEngine<B> {
     pub fn phase_update(&mut self) -> anyhow::Result<()> {
         let ss = self.sweep_seed();
         self.backend.update(&mut self.v, &self.params, ss, &mut self.spike_words)?;
+        // STDP step 2: decay-then-bump the neuron traces off the fresh
+        // spike words (one full-range chunk here; the pool runs the
+        // same kernel per sweep chunk — bit-identical either way)
+        if let Some(p) = self.plastic.as_deref_mut() {
+            trace_chunk(
+                &self.spike_words,
+                &mut p.trace_pre,
+                &mut p.trace_post,
+                p.cfg.tau_pre,
+                p.cfg.tau_post,
+            );
+        }
         self.finish_update();
         Ok(())
     }
@@ -247,12 +301,23 @@ impl<B: UpdateBackend> CoreEngine<B> {
     /// [`Self::finish_update`] — together the two are equivalent to
     /// [`Self::phase_update`].
     pub(crate) fn sweep_view(&mut self) -> SweepView {
+        let seed = self.sweep_seed();
+        let (trace_pre, trace_post, tau_pre, tau_post) = match self.plastic.as_deref_mut() {
+            Some(p) => {
+                (p.trace_pre.as_mut_ptr(), p.trace_post.as_mut_ptr(), p.cfg.tau_pre, p.cfg.tau_post)
+            }
+            None => (std::ptr::null_mut(), std::ptr::null_mut(), 0, 0),
+        };
         SweepView {
             v: self.v.as_mut_ptr(),
             spikes: self.spike_words.as_mut_ptr(),
             params: &self.params,
             n: self.v.len(),
-            step_seed: self.sweep_seed(),
+            step_seed: seed,
+            trace_pre,
+            trace_post,
+            tau_pre,
+            tau_post,
         }
     }
 
@@ -300,6 +365,20 @@ impl<B: UpdateBackend> CoreEngine<B> {
     /// chunk-parallel in `CorePool`) and [`Self::route_finish`].
     pub(crate) fn route_prepare(&mut self, axon_in: &[u32], chunk_ptrs: usize) {
         debug_assert!(axon_in.windows(2).all(|w| w[0] < w[1]), "axon ids must be sorted");
+        // STDP step 3: axon pre-traces advance with the route phase —
+        // decay every trace once per step, then bump the axons
+        // delivered this step (axons decay with tau_pre: they are
+        // pre-synaptic only)
+        if let Some(p) = self.plastic.as_deref_mut() {
+            let tau = p.cfg.tau_pre;
+            for tr in p.trace_axon.iter_mut() {
+                *tr = decay_trace(*tr, tau);
+            }
+            for &a in axon_in {
+                let tr = &mut p.trace_axon[a as usize];
+                *tr = (*tr + TRACE_ONE).min(TRACE_CEIL);
+            }
+        }
         self.hbm.counters.bram_accesses += axon_in.len() as u64 + self.fired_buf.len() as u64;
 
         // ---- phase 1: pointer fetches
@@ -353,6 +432,48 @@ impl<B: UpdateBackend> CoreEngine<B> {
         // ---- phase 4: fused accumulate over the ordered buffer list
         self.backend.accumulate_bufs(&mut self.v, bufs)?;
 
+        // ---- STDP steps 5-6: weight mutation, serial, after the
+        // ordered merge — deliveries above used end-of-previous-step
+        // weights (gathered in phase 2), and the chunk-merge
+        // determinism contract is untouched. Depression first (fired
+        // sources' outgoing plastic slots, via the pointer queue — one
+        // region per fired source, regions disjoint), then
+        // potentiation (fired neurons' incoming plastic slots, via the
+        // reverse index). Deltas are per-slot and additive, so
+        // traversal order never changes a weight's value.
+        if let Some(p) = self.plastic.as_deref_mut() {
+            let PlasticState { cfg, trace_pre, trace_post, trace_axon, in_edges, events } = p;
+            let cfg = *cfg;
+            let image = &mut self.hbm.image;
+            for ptr in &self.ptr_queue {
+                for r in ptr.start_row..ptr.start_row + ptr.rows {
+                    let mut m = image.row_mask[r as usize];
+                    let row = &mut image.syn_rows[r as usize];
+                    while m != 0 {
+                        let slot = m.trailing_zeros() as usize;
+                        m &= m - 1;
+                        let e = &mut row[slot];
+                        let d = stdp_delta(cfg.a_minus, trace_post[e.target as usize]);
+                        e.weight = apply_delta(e.weight, -d, &cfg);
+                        *events += 1;
+                    }
+                }
+            }
+            for &post in &self.fired_buf {
+                for edge in &in_edges[post as usize] {
+                    let tr = if edge.axon_src {
+                        trace_axon[edge.src as usize]
+                    } else {
+                        trace_pre[edge.src as usize]
+                    };
+                    let d = stdp_delta(cfg.a_plus, tr);
+                    let e = &mut image.syn_rows[edge.row as usize][edge.slot as usize];
+                    e.weight = apply_delta(e.weight, d, &cfg);
+                    *events += 1;
+                }
+            }
+        }
+
         // outputs
         self.out_buf.clear();
         for &i in &self.fired_buf {
@@ -399,6 +520,164 @@ impl<B: UpdateBackend> CoreEngine<B> {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Resolve a source's synapse region, or error on a bad id.
+    fn source_region(&self, pre_is_axon: bool, pre: u32) -> anyhow::Result<Pointer> {
+        let table =
+            if pre_is_axon { &self.hbm.image.axon_ptr } else { &self.hbm.image.neuron_ptr };
+        table.get(pre as usize).copied().ok_or_else(|| {
+            anyhow::anyhow!(
+                "synapse source out of range: {} {pre} (have {})",
+                if pre_is_axon { "axon" } else { "neuron" },
+                table.len()
+            )
+        })
+    }
+
+    /// A region entry counts as a **live** synapse `pre -> post` iff it
+    /// is valid, targets `post`, and is distinguishable from the
+    /// compiler's dummy padding (valid, target 0, weight 0, mask
+    /// clear). The one ambiguous corner — a compile-time zero-weight
+    /// synapse onto neuron 0 — is treated as absent by live edits; the
+    /// journal/compaction path preserves it exactly.
+    #[inline]
+    fn entry_live(e: &SynEntry, mask: u16, slot: usize, post: u32) -> bool {
+        e.is_valid() && e.target == post && (post != 0 || e.weight != 0 || mask & (1 << slot) != 0)
+    }
+
+    /// Live in-place weight edit on the compiled image — the engine
+    /// half of `Simulator::write_synapse`. Sets **every** duplicate
+    /// slot of `pre -> post` to `weight`; membranes, traces and all
+    /// other weights are untouched. Setting a non-zero weight (re-)arms
+    /// the slot for delivery and plasticity; writing zero keeps the
+    /// slot armed so it can learn back (row-mask policy of
+    /// `crate::plasticity`). Returns false when the synapse does not
+    /// exist (callers fall back to [`Self::add_synapse`]).
+    pub fn write_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> anyhow::Result<bool> {
+        let ptr = self.source_region(pre_is_axon, pre)?;
+        if post as usize >= self.hbm.image.n_neurons {
+            anyhow::bail!("synapse target out of range: {post}");
+        }
+        let mut plastic = self.plastic.as_deref_mut();
+        let image = &mut self.hbm.image;
+        let slot = image.slot_of[post as usize] as usize;
+        let mut matched = false;
+        for r in ptr.start_row..ptr.start_row + ptr.rows {
+            let mask = image.row_mask[r as usize];
+            let e = &mut image.syn_rows[r as usize][slot];
+            if Self::entry_live(e, mask, slot, post) {
+                e.weight = weight;
+                if weight != 0 && mask & (1 << slot) == 0 {
+                    image.row_mask[r as usize] |= 1 << slot;
+                    if let Some(p) = plastic.as_deref_mut() {
+                        p.note_install(r, slot as u8, pre_is_axon, pre, post);
+                    }
+                }
+                matched = true;
+            }
+        }
+        Ok(matched)
+    }
+
+    /// Read a synapse weight off the live image (first duplicate slot),
+    /// or None when absent / out of range.
+    pub fn read_synapse(&self, pre_is_axon: bool, pre: u32, post: u32) -> Option<i16> {
+        let ptr = self.source_region(pre_is_axon, pre).ok()?;
+        let image = &self.hbm.image;
+        if post as usize >= image.n_neurons {
+            return None;
+        }
+        let slot = image.slot_of[post as usize] as usize;
+        for r in ptr.start_row..ptr.start_row + ptr.rows {
+            let e = &image.syn_rows[r as usize][slot];
+            if Self::entry_live(e, image.row_mask[r as usize], slot, post) {
+                return Some(e.weight);
+            }
+        }
+        None
+    }
+
+    /// Live structural edit: install a new synapse into a free slot of
+    /// the source's existing region (dummy padding is reusable).
+    /// Upserts — when the synapse already exists this is exactly
+    /// [`Self::write_synapse`] and returns Ok(false); returns Ok(true)
+    /// when a slot was created. Errors when the region has no free row
+    /// at the target's slot: the image needs a journal compaction +
+    /// rebuild (the facade surfaces this as a config error).
+    pub fn add_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> anyhow::Result<bool> {
+        if self.write_synapse(pre_is_axon, pre, post, weight)? {
+            return Ok(false);
+        }
+        let ptr = self.source_region(pre_is_axon, pre)?;
+        let mut plastic = self.plastic.as_deref_mut();
+        let image = &mut self.hbm.image;
+        let slot = image.slot_of[post as usize] as usize;
+        for r in ptr.start_row..ptr.start_row + ptr.rows {
+            let mask = image.row_mask[r as usize];
+            let e = &mut image.syn_rows[r as usize][slot];
+            // free = never valid, or dead weight-0 padding (mask clear)
+            let free = !e.is_valid() || (e.weight == 0 && mask & (1 << slot) == 0);
+            if free {
+                *e = SynEntry { target: post, weight, flags: SYN_VALID };
+                if weight != 0 {
+                    image.row_mask[r as usize] |= 1 << slot;
+                    if let Some(p) = plastic.as_deref_mut() {
+                        p.note_install(r, slot as u8, pre_is_axon, pre, post);
+                    }
+                }
+                return Ok(true);
+            }
+        }
+        anyhow::bail!(
+            "no free HBM slot for synapse {} {pre} -> {post}: journal compaction required",
+            if pre_is_axon { "axon" } else { "neuron" },
+        )
+    }
+
+    /// Live structural edit: remove every duplicate slot of
+    /// `pre -> post` from the image (slots are cleared and disarmed —
+    /// physically reclaimed at the next journal compaction). Returns
+    /// the number of slots removed.
+    pub fn remove_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+    ) -> anyhow::Result<usize> {
+        let ptr = self.source_region(pre_is_axon, pre)?;
+        if post as usize >= self.hbm.image.n_neurons {
+            anyhow::bail!("synapse target out of range: {post}");
+        }
+        let mut plastic = self.plastic.as_deref_mut();
+        let image = &mut self.hbm.image;
+        let slot = image.slot_of[post as usize] as usize;
+        let mut removed = 0;
+        for r in ptr.start_row..ptr.start_row + ptr.rows {
+            let mask = image.row_mask[r as usize];
+            let e = &mut image.syn_rows[r as usize][slot];
+            if Self::entry_live(e, mask, slot, post) {
+                *e = SynEntry::default();
+                image.row_mask[r as usize] &= !(1 << slot);
+                if let Some(p) = plastic.as_deref_mut() {
+                    p.note_remove(r, slot as u8, post);
+                }
+                removed += 1;
+            }
+        }
+        Ok(removed)
     }
 }
 
@@ -471,6 +750,47 @@ impl<B: UpdateBackend> Simulator for CoreEngine<B> {
 
     fn hbm_stats(&self) -> Option<crate::hbm::LayoutStats> {
         Some(self.hbm.image.stats)
+    }
+
+    fn write_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> Result<bool, SimError> {
+        CoreEngine::write_synapse(self, pre_is_axon, pre, post, weight)
+            .map_err(|e| SimError::Config(e.to_string()))
+    }
+
+    fn read_synapse(
+        &self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+    ) -> Result<Option<i16>, SimError> {
+        Ok(CoreEngine::read_synapse(self, pre_is_axon, pre, post))
+    }
+
+    fn add_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> Result<bool, SimError> {
+        CoreEngine::add_synapse(self, pre_is_axon, pre, post, weight)
+            .map_err(|e| SimError::Config(e.to_string()))
+    }
+
+    fn remove_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+    ) -> Result<usize, SimError> {
+        CoreEngine::remove_synapse(self, pre_is_axon, pre, post)
+            .map_err(|e| SimError::Config(e.to_string()))
     }
 }
 

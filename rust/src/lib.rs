@@ -25,6 +25,10 @@
 //! * [`engine`] — single-core execution engines ("grey matter"): the
 //!   two-phase event-driven core and the dense-matrix golden model,
 //!   plus the pluggable membrane-update backend kernels.
+//! * [`plasticity`] — the opt-in pair-based STDP learning kernel
+//!   (eligibility traces as a branch-free extension of the membrane
+//!   sweep, weight updates in the route epilogue) — runtime plasticity
+//!   with bit-identical results across worker/shard counts.
 //! * [`router`] — hierarchical address-event routing between cores, FPGAs
 //!   and servers ("white matter", HiAER levels: NoC / FireFly / Ethernet).
 //! * [`partition`] — network partitioning and resource allocation across
@@ -51,6 +55,7 @@ pub mod hbm;
 pub mod metrics;
 pub mod model_fmt;
 pub mod partition;
+pub mod plasticity;
 pub mod router;
 pub mod runtime;
 pub mod sim;

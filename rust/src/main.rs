@@ -101,6 +101,11 @@ fn print_help() {
                                              subprocess reads (default 30s)\n\
            --route core|chunk                route-phase granularity (default\n\
                                              chunk: gather spread over workers)\n\
+           --learn AP,AM,TPRE,TPOST          switch on pair-based STDP (A+/A-\n\
+                                             amplitudes, trace tau shifts);\n\
+                                             event-driven backends only\n\
+           --learn-clamp MIN,MAX             learned-weight clamp (default full\n\
+                                             i16 range; requires --learn)\n\
            --artifacts DIR                   AOT artifact dir (default artifacts/)\n\
          \n\
          OPTIONS (subcommand-specific)\n\
@@ -115,6 +120,8 @@ fn print_help() {
                                              available parallelism)\n\
            --max-neurons N                   per-session net-size quota\n\
            --max-batch N                     per-session step_many quota\n\
+           --max-edits-per-step N            per-session write_synapse budget\n\
+                                             between step intervals\n\
            --max-line-bytes N                request-line byte cap (default 8 MiB)\n\
            --request-timeout-ms N            compute-permit deadline (default 30s)\n\
            --idle-timeout-ms N               idle-session eviction TTL (default 5m)\n\

@@ -1,0 +1,144 @@
+//! Runtime plasticity: the pair-based STDP learning kernel (ROADMAP
+//! "runtime plasticity and live reconfiguration"; SpiNNaker2-style
+//! event-based learning in PAPERS.md).
+//!
+//! This module is the **learning-kernel half** of the plasticity
+//! subsystem; the other half — the [`crate::snn::EditJournal`] overlay
+//! for explicit `write_synapse`/`add_synapse`/`remove_synapse` edits —
+//! lives with the network primitives it edits. Both surface through
+//! [`crate::sim::Simulator`] (`write_synapse`/`apply_edits`) and the
+//! session protocol (`write_synapse`, `configure` with `"learning"`).
+//!
+//! # The rule
+//!
+//! Opt-in pair-based STDP with per-neuron eligibility traces, all in the
+//! same fixed-point integer arithmetic as the membrane kernel:
+//!
+//! * every neuron keeps a **pre trace** and a **post trace**; every axon
+//!   keeps a pre trace. A trace decays exponentially by shift
+//!   (`tr -= tr >> tau`, the FLAG_LIF leak idiom) and is bumped by
+//!   [`TRACE_ONE`] (saturating at [`TRACE_CEIL`]) when its source fires;
+//! * when a source fires, every **outgoing** plastic synapse is
+//!   *depressed* by `(a_minus * trace_post[target]) >> TRACE_SHIFT`;
+//! * when a neuron fires, every **incoming** plastic synapse is
+//!   *potentiated* by `(a_plus * pre_trace[source]) >> TRACE_SHIFT`;
+//! * every delta is applied per-slot and clamped to
+//!   `[w_min, w_max]`. Deltas are **additive** (independent of the
+//!   current weight), so the order in which distinct slots are updated
+//!   can never change any weight's value.
+//!
+//! A synapse is **plastic** iff it participates in delivery — i.e. its
+//! HBM `row_mask` bit is set (valid entry, non-zero weight at compile
+//! time or set non-zero by a live edit). Learning never clears a mask
+//! bit: a weight driven to zero stays plastic and can recover.
+//!
+//! # Trace/update ordering contract
+//!
+//! Per timestep `t` (one `step()` = membrane sweep + route), in this
+//! exact order — every execution path (serial engine, chunk-parallel
+//! `CorePool`, multi-core cluster, sharded multi-process) implements
+//! the same sequence, which is why learning runs are bit-identical
+//! across worker counts, chunk sizes, route granularities and shard
+//! counts:
+//!
+//! 1. **sweep** — membranes update and the spike bitmask for step `t`
+//!    is written (weights play no part here);
+//! 2. **neuron traces** — every neuron's pre and post trace decays,
+//!    then fired neurons' traces are bumped ([`trace_chunk`], run over
+//!    the same word-aligned chunks as `sweep_chunk`; per-lane
+//!    independent, so chunking/order is irrelevant);
+//! 3. **axon traces** — every axon trace decays, then axons delivered
+//!    this step (`axon_in`, which in the cluster includes the dedicated
+//!    local axon of each remote source — delivery is same-step, so the
+//!    local trace mirrors the remote neuron's trace exactly) are
+//!    bumped;
+//! 4. **deliveries accumulate** — phase-4 consumes events gathered in
+//!    phase 2, i.e. with the weights as of the **end of step `t-1`**;
+//! 5. **depression** — for every source that fired/arrived at step `t`,
+//!    each outgoing plastic slot gets `-(a_minus * trace_post[target])
+//!    >> TRACE_SHIFT` (post traces already include step-`t` bumps:
+//!    same-step pre/post pairing counts);
+//! 6. **potentiation** — for every neuron that fired at step `t`, each
+//!    incoming plastic slot gets `+(a_plus * pre_trace[src]) >>
+//!    TRACE_SHIFT` (pre traces likewise include step-`t` bumps). A slot
+//!    whose source **and** target both fired is depressed first, then
+//!    potentiated, each step clamped at application.
+//!
+//! All weight mutation happens in the serial RouteAccum epilogue
+//! (`route_finish`), after the ordered buffer merge — the chunk-merge
+//! determinism contract of the route phase is untouched. Stochastic
+//! neurons keep their counter-based `noise17(mix_seed(base_seed, t), i)`
+//! schedule, so a learning run is a pure function of (network, seed,
+//! stimulus): re-running reproduces every spike, membrane and final
+//! weight bit-for-bit.
+//!
+//! Not modelled (ROADMAP follow-ups): reward-modulated (three-factor)
+//! STDP, and structural plasticity — learning never creates or removes
+//! synapses; that is the edit journal's job.
+
+mod stdp;
+
+pub use stdp::{
+    apply_delta, decay_trace, stdp_delta, trace_chunk, InEdge, PlasticState, TRACE_CEIL, TRACE_ONE,
+    TRACE_SHIFT,
+};
+
+/// STDP rule parameters (the `SimConfig` / session `configure.learning`
+/// surface). Amplitudes are non-negative fixed-point factors applied as
+/// `(a * trace) >> TRACE_SHIFT`: with the trace freshly bumped
+/// ([`TRACE_ONE`] = `1 << TRACE_SHIFT`), a same-step pairing moves the
+/// weight by exactly `a_plus` (or `-a_minus`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlasticityConfig {
+    /// Potentiation amplitude (post fires after/with pre), >= 0.
+    pub a_plus: i32,
+    /// Depression amplitude (pre fires after/with post), >= 0.
+    pub a_minus: i32,
+    /// Pre-trace decay shift: `tr -= tr >> tau_pre` per step (window
+    /// ~`2^tau_pre` steps). 0 = traces survive only within the step.
+    pub tau_pre: u32,
+    /// Post-trace decay shift.
+    pub tau_post: u32,
+    /// Weight clamp floor (inclusive).
+    pub w_min: i16,
+    /// Weight clamp ceiling (inclusive).
+    pub w_max: i16,
+}
+
+impl Default for PlasticityConfig {
+    fn default() -> Self {
+        Self {
+            a_plus: 8,
+            a_minus: 9,
+            tau_pre: 3,
+            tau_post: 3,
+            w_min: crate::snn::WEIGHT_MIN as i16,
+            w_max: crate::snn::WEIGHT_MAX as i16,
+        }
+    }
+}
+
+impl PlasticityConfig {
+    /// Reject configurations the fixed-point kernel cannot honour.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.a_plus < 0 || self.a_minus < 0 {
+            return Err(format!(
+                "learning amplitudes must be >= 0 (a_plus={}, a_minus={})",
+                self.a_plus, self.a_minus
+            ));
+        }
+        if self.a_plus > 1 << 20 || self.a_minus > 1 << 20 {
+            return Err("learning amplitudes must be <= 2^20".into());
+        }
+        if self.tau_pre > 31 || self.tau_post > 31 {
+            return Err(format!(
+                "tau shifts must be <= 31 (tau_pre={}, tau_post={})",
+                self.tau_pre, self.tau_post
+            ));
+        }
+        if self.w_min > self.w_max {
+            return Err(format!("w_min {} > w_max {}", self.w_min, self.w_max));
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,237 @@
+//! The STDP trace kernel and per-engine learning state.
+//!
+//! [`trace_chunk`] is the branch-free extension of
+//! [`crate::engine::backend::sweep_chunk`]: it runs over the same
+//! word-aligned chunks, right after the sweep wrote the chunk's spike
+//! words, and is per-lane independent — chunking, chunk order and
+//! worker interleaving cannot change any trace. [`PlasticState`] holds
+//! the traces plus the reverse (incoming-synapse) index over the HBM
+//! image that the potentiation pass walks; weight mutation itself
+//! happens in the engine's RouteAccum epilogue (see the module docs'
+//! ordering contract).
+
+use super::PlasticityConfig;
+use crate::engine::mask_words;
+use crate::hbm::HbmImage;
+
+/// Trace value added when a source fires; one "unit" of coincidence.
+pub const TRACE_ONE: i32 = 1 << TRACE_SHIFT;
+/// Saturation ceiling for traces (bounds `a * trace` well inside i64).
+pub const TRACE_CEIL: i32 = 1 << 20;
+/// Fixed-point shift applied to `amplitude * trace` products.
+pub const TRACE_SHIFT: u32 = 10;
+
+/// One decay step: `tr - (tr >> tau)`, the FLAG_LIF leak idiom. Traces
+/// are non-negative, so the shift is a floor division and the result
+/// stays in `[0, tr]`.
+#[inline(always)]
+pub fn decay_trace(tr: i32, tau: u32) -> i32 {
+    tr - (tr >> tau.min(31))
+}
+
+/// Fixed-point STDP delta: `(a * trace) >> TRACE_SHIFT`, widened to
+/// i64 so saturated traces times large amplitudes cannot overflow.
+#[inline(always)]
+pub fn stdp_delta(a: i32, trace: i32) -> i32 {
+    ((a as i64 * trace as i64) >> TRACE_SHIFT) as i32
+}
+
+/// Apply one clamped additive delta to a weight.
+#[inline(always)]
+pub fn apply_delta(w: i16, delta: i32, cfg: &PlasticityConfig) -> i16 {
+    (w as i32).saturating_add(delta).clamp(cfg.w_min as i32, cfg.w_max as i32) as i16
+}
+
+/// Decay-then-bump both neuron traces over one word-aligned chunk.
+///
+/// `pre`/`post` cover the same neurons as `spikes` (`mask_words` words
+/// for `pre.len()` lanes); the chunk's first neuron must sit on a word
+/// boundary, exactly like `sweep_chunk`. Branch-free per lane: the
+/// fired bit multiplies the bump in, and saturation is a `min`.
+pub fn trace_chunk(spikes: &[u64], pre: &mut [i32], post: &mut [i32], tau_pre: u32, tau_post: u32) {
+    let n = pre.len();
+    debug_assert_eq!(post.len(), n);
+    debug_assert_eq!(spikes.len(), mask_words(n));
+    for (w, &word) in spikes.iter().enumerate() {
+        let base = w * 64;
+        let valid = 64.min(n - base);
+        for lane in 0..valid {
+            let i = base + lane;
+            let fired = ((word >> lane) & 1) as i32;
+            pre[i] = (decay_trace(pre[i], tau_pre) + fired * TRACE_ONE).min(TRACE_CEIL);
+            post[i] = (decay_trace(post[i], tau_post) + fired * TRACE_ONE).min(TRACE_CEIL);
+        }
+    }
+}
+
+/// Address of one plastic synapse slot in the HBM image, as seen from
+/// its **target** (the potentiation pass walks these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InEdge {
+    /// Synapse-section row holding the slot.
+    pub row: u32,
+    /// Slot within the row (== `slot_of[target]`).
+    pub slot: u8,
+    /// Source is an axon (true) or a local neuron (false).
+    pub axon_src: bool,
+    /// Source id in its own namespace.
+    pub src: u32,
+}
+
+/// Per-engine learning state: the rule parameters, the eligibility
+/// traces, and the reverse in-edge index over the compiled image.
+///
+/// The in-edge index covers exactly the plastic slots (row-mask bits at
+/// construction) and is kept in sync by the engine's live-edit path
+/// ([`PlasticState::note_install`] / [`PlasticState::note_remove`]).
+/// `reset()` clears the traces but **keeps** learned weights — they
+/// live in the image, and resetting a session back to quiescent
+/// membranes must not undo learning.
+pub struct PlasticState {
+    pub cfg: PlasticityConfig,
+    /// Per-neuron presynaptic trace (for the neuron's outgoing slots).
+    pub trace_pre: Vec<i32>,
+    /// Per-neuron postsynaptic trace (for the neuron's incoming slots).
+    pub trace_post: Vec<i32>,
+    /// Per-axon presynaptic trace, advanced with the route phase.
+    pub trace_axon: Vec<i32>,
+    /// Incoming plastic slots per target neuron.
+    pub in_edges: Vec<Vec<InEdge>>,
+    /// Weight deltas applied since construction/`reset_cost`-style
+    /// clears (diagnostics; not part of the determinism contract).
+    pub events: u64,
+}
+
+impl PlasticState {
+    /// Build the learning state for a compiled image: zero traces plus
+    /// the reverse index of every masked (plastic) slot, axon regions
+    /// first, then neuron regions — construction order only affects the
+    /// order slots are visited, never any weight value (deltas are
+    /// per-slot and additive).
+    pub fn from_image(image: &HbmImage, cfg: PlasticityConfig) -> Self {
+        let n = image.n_neurons;
+        let mut in_edges: Vec<Vec<InEdge>> = vec![Vec::new(); n];
+        let mut index_region = |ptr: crate::hbm::Pointer, axon_src: bool, src: u32| {
+            for r in ptr.start_row..ptr.start_row + ptr.rows {
+                let mut m = image.row_mask[r as usize];
+                while m != 0 {
+                    let slot = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let t = image.syn_rows[r as usize][slot].target as usize;
+                    in_edges[t].push(InEdge { row: r, slot: slot as u8, axon_src, src });
+                }
+            }
+        };
+        for (a, &p) in image.axon_ptr.iter().enumerate() {
+            index_region(p, true, a as u32);
+        }
+        for (i, &p) in image.neuron_ptr.iter().enumerate() {
+            index_region(p, false, i as u32);
+        }
+        Self {
+            cfg,
+            trace_pre: vec![0; n],
+            trace_post: vec![0; n],
+            trace_axon: vec![0; image.n_axons],
+            in_edges,
+            events: 0,
+        }
+    }
+
+    /// Clear all traces (session reset). Learned weights stay.
+    pub fn reset(&mut self) {
+        self.trace_pre.iter_mut().for_each(|t| *t = 0);
+        self.trace_post.iter_mut().for_each(|t| *t = 0);
+        self.trace_axon.iter_mut().for_each(|t| *t = 0);
+    }
+
+    /// Presynaptic trace of a source in either namespace.
+    #[inline]
+    pub fn pre_trace(&self, axon_src: bool, src: u32) -> i32 {
+        if axon_src {
+            self.trace_axon[src as usize]
+        } else {
+            self.trace_pre[src as usize]
+        }
+    }
+
+    /// A live edit installed (or re-armed) a plastic slot: index it.
+    /// Idempotent per (row, slot) — re-writing an already-plastic slot
+    /// must not duplicate its in-edge.
+    pub fn note_install(&mut self, row: u32, slot: u8, axon_src: bool, src: u32, target: u32) {
+        let list = &mut self.in_edges[target as usize];
+        if !list.iter().any(|e| e.row == row && e.slot == slot) {
+            list.push(InEdge { row, slot, axon_src, src });
+        }
+    }
+
+    /// A live edit removed a slot: drop it from the reverse index.
+    pub fn note_remove(&mut self, row: u32, slot: u8, target: u32) {
+        self.in_edges[target as usize].retain(|e| !(e.row == row && e.slot == slot));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_decay_and_bump() {
+        // tau=1 halves; bump adds TRACE_ONE; ceiling saturates
+        let mut pre = vec![0i32, 1024, TRACE_CEIL];
+        let mut post = vec![0i32, 0, 0];
+        // neurons 0 and 2 fire
+        trace_chunk(&[0b101], &mut pre, &mut post, 1, 2);
+        assert_eq!(pre[0], TRACE_ONE);
+        assert_eq!(pre[1], 512); // decayed, no bump
+        assert_eq!(pre[2], TRACE_CEIL); // saturated
+        assert_eq!(post[0], TRACE_ONE);
+        assert_eq!(post[1], 0);
+        assert_eq!(post[2], TRACE_ONE);
+    }
+
+    #[test]
+    fn trace_chunking_is_order_invariant() {
+        let n = 130;
+        let spikes: Vec<u64> = vec![0xDEADBEEF, u64::MAX, 0b11];
+        let mut pre_a = (0..n as i32).map(|i| i * 7).collect::<Vec<_>>();
+        let mut post_a = (0..n as i32).map(|i| i * 3).collect::<Vec<_>>();
+        let mut pre_b = pre_a.clone();
+        let mut post_b = post_a.clone();
+        trace_chunk(&spikes, &mut pre_a, &mut post_a, 2, 4);
+        // word-by-word, reversed order
+        for w in (0..3usize).rev() {
+            let lo = w * 64;
+            let hi = (lo + 64).min(n);
+            trace_chunk(
+                &spikes[w..w + 1],
+                &mut pre_b[lo..hi],
+                &mut post_b[lo..hi],
+                2,
+                4,
+            );
+        }
+        assert_eq!(pre_a, pre_b);
+        assert_eq!(post_a, post_b);
+    }
+
+    #[test]
+    fn delta_clamps_and_saturates() {
+        let cfg = PlasticityConfig { w_min: -4, w_max: 7, ..PlasticityConfig::default() };
+        assert_eq!(stdp_delta(8, TRACE_ONE), 8);
+        assert_eq!(stdp_delta(1 << 20, TRACE_CEIL), 1 << 30); // no overflow
+        assert_eq!(apply_delta(5, 100, &cfg), 7);
+        assert_eq!(apply_delta(5, -100, &cfg), -4);
+        assert_eq!(apply_delta(0, 3, &cfg), 3);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(PlasticityConfig::default().validate().is_ok());
+        assert!(PlasticityConfig { a_plus: -1, ..Default::default() }.validate().is_err());
+        assert!(PlasticityConfig { tau_pre: 32, ..Default::default() }.validate().is_err());
+        assert!(PlasticityConfig { w_min: 5, w_max: 4, ..Default::default() }
+            .validate()
+            .is_err());
+    }
+}

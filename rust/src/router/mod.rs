@@ -151,6 +151,11 @@ pub struct SplitNetwork {
     pub table: RoutingTable,
     /// local axon id of each (core, global axon) pair, u32::MAX if unused.
     pub axon_local: Vec<Vec<u32>>,
+    /// per core: global source neuron -> the local axon its remote
+    /// synapses were re-homed under. Needed to address a (pre, post)
+    /// synapse on the post neuron's core when pre lives elsewhere
+    /// (live edits, plasticity bookkeeping).
+    pub remote_axon: Vec<std::collections::HashMap<u32, u32>>,
 }
 
 /// Two-pass CSR extraction: pass 1 walks the global CSR once to discover
@@ -330,7 +335,7 @@ pub fn split_network<'a>(net: impl Into<NetView<'a>>, part: &Partition) -> Split
         s.sort_synapses();
     }
 
-    SplitNetwork { subnets, table: RoutingTable { neuron_routes, axon_routes }, axon_local }
+    SplitNetwork { subnets, table: RoutingTable { neuron_routes, axon_routes }, axon_local, remote_axon }
 }
 
 #[cfg(test)]

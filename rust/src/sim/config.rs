@@ -11,6 +11,7 @@ use crate::engine::{CoreEngine, DenseSim, RustBackend};
 use crate::hbm::SlotStrategy;
 use crate::model_fmt::{open_netfile, read_hsn, NetCache, NetFile, HSN_MAGIC_V2};
 use crate::partition::{ClusterTopology, CoreCapacity};
+use crate::plasticity::PlasticityConfig;
 use crate::runtime::{pjrt_enabled, Runtime, XlaBackend};
 use crate::sim::{SimError, Simulator};
 use crate::snn::{NetView, Network};
@@ -143,6 +144,10 @@ pub struct SimOptions {
     /// subprocess before the step fails with a typed engine error
     /// (`None` = 30 000).
     pub shard_timeout_ms: Option<u64>,
+    /// Opt-in pair-based STDP (`None` = frozen weights). Event-driven
+    /// backends only (`rust`/`pool`/`xla`/`sharded`); the dense golden
+    /// model rejects it at build time. See [`crate::plasticity`].
+    pub learning: Option<PlasticityConfig>,
 }
 
 impl Default for SimOptions {
@@ -161,8 +166,45 @@ impl Default for SimOptions {
             shards: None,
             shard_bin: None,
             shard_timeout_ms: None,
+            learning: None,
         }
     }
+}
+
+/// Parse a `--learn A_PLUS,A_MINUS,TAU_PRE,TAU_POST` value (with an
+/// optional `--learn-clamp MIN,MAX` refinement) into a
+/// [`PlasticityConfig`]; malformed values name the expected shape.
+pub(crate) fn parse_learning(
+    learn: &str,
+    clamp: Option<&str>,
+) -> Result<PlasticityConfig, SimError> {
+    fn fields<const N: usize>(flag: &str, s: &str, shape: &str) -> Result<[i64; N], SimError> {
+        let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+        if parts.len() != N {
+            return Err(SimError::Config(format!("--{flag} expects {shape} (got {s:?})")));
+        }
+        let mut out = [0i64; N];
+        for (slot, p) in out.iter_mut().zip(&parts) {
+            *slot = p
+                .parse::<i64>()
+                .map_err(|_| SimError::Config(format!("--{flag} expects {shape} (got {s:?})")))?;
+        }
+        Ok(out)
+    }
+    let mut cfg = PlasticityConfig::default();
+    let [a_plus, a_minus, tau_pre, tau_post] =
+        fields::<4>("learn", learn, "A_PLUS,A_MINUS,TAU_PRE,TAU_POST")?;
+    cfg.a_plus = a_plus as i32;
+    cfg.a_minus = a_minus as i32;
+    cfg.tau_pre = tau_pre.clamp(0, u32::MAX as i64) as u32;
+    cfg.tau_post = tau_post.clamp(0, u32::MAX as i64) as u32;
+    if let Some(clamp) = clamp {
+        let [lo, hi] = fields::<2>("learn-clamp", clamp, "MIN,MAX")?;
+        cfg.w_min = lo.clamp(i16::MIN as i64, i16::MAX as i64) as i16;
+        cfg.w_max = hi.clamp(i16::MIN as i64, i16::MAX as i64) as i16;
+    }
+    cfg.validate().map_err(SimError::Config)?;
+    Ok(cfg)
 }
 
 impl SimOptions {
@@ -174,6 +216,8 @@ impl SimOptions {
     /// core|chunk`, `--artifacts DIR`. Unknown
     /// `--backend`/`--strategy`/`--route` values (and `--workers 0` /
     /// `--shards 0`) are listed-options errors, never silent defaults.
+    /// `--learn A_PLUS,A_MINUS,TAU_PRE,TAU_POST` (with optional
+    /// `--learn-clamp MIN,MAX`) switches on STDP.
     /// Used by every execution subcommand, `serve-session` included —
     /// the protocol's `configure` op supplies the network (and may
     /// override `workers`/`shards`), these flags fix the deployment.
@@ -240,6 +284,17 @@ impl SimOptions {
                 Some(args.get_usize("shard-timeout-ms", 0).map_err(SimError::Config)? as u64)
             }
         };
+        let learning = match args.get("learn") {
+            None => {
+                if args.get("learn-clamp").is_some() {
+                    return Err(SimError::Config(
+                        "--learn-clamp requires --learn A_PLUS,A_MINUS,TAU_PRE,TAU_POST".into(),
+                    ));
+                }
+                None
+            }
+            Some(spec) => Some(parse_learning(spec, args.get("learn-clamp"))?),
+        };
         Ok(SimOptions {
             topology,
             strategy,
@@ -250,6 +305,7 @@ impl SimOptions {
             workers,
             shards,
             shard_timeout_ms,
+            learning,
             ..SimOptions::default()
         })
     }
@@ -486,6 +542,13 @@ impl SimConfig {
         self
     }
 
+    /// Switch on pair-based STDP with the given config (event-driven
+    /// backends only; [`SimConfig::build`] rejects it on `dense`).
+    pub fn learning(mut self, cfg: PlasticityConfig) -> Self {
+        self.opts.learning = Some(cfg);
+        self
+    }
+
     /// Compile and spin up the session: applies the seed override,
     /// partitions the network (multi-core), builds HBM images and
     /// starts worker pools. The returned box is the only public
@@ -500,6 +563,17 @@ impl SimConfig {
         let n_cores = opts.topology.n_cores();
         if n_cores == 0 {
             return Err(SimError::Config("topology has zero cores".into()));
+        }
+        if let Some(cfg) = opts.learning {
+            cfg.validate().map_err(SimError::Config)?;
+            if opts.backend == Backend::Dense {
+                return Err(SimError::Config(
+                    "learning (STDP) requires an event-driven backend \
+                     (rust, pool, xla or sharded); the dense golden model \
+                     runs frozen weights only"
+                        .into(),
+                ));
+            }
         }
         if opts.shards.is_some() && opts.backend != Backend::Sharded {
             return Err(SimError::Config(format!(
@@ -540,14 +614,19 @@ impl SimConfig {
                     opts.capacity,
                     opts.strategy,
                     opts.pool_options(),
+                    opts.learning,
                 )?;
                 Ok(Box::new(engine))
             }
             Backend::Rust => {
-                Ok(Box::new(CoreEngine::new(net, opts.strategy, RustBackend)?))
+                let mut engine = CoreEngine::new(net, opts.strategy, RustBackend)?;
+                if let Some(cfg) = opts.learning {
+                    engine.enable_plasticity(cfg).map_err(|e| SimError::Config(e.to_string()))?;
+                }
+                Ok(Box::new(engine))
             }
             Backend::Pool => {
-                Ok(Box::new(PoolSim::new(net, opts.strategy, opts.pool_options())?))
+                Ok(Box::new(PoolSim::new(net, opts.strategy, opts.pool_options(), opts.learning)?))
             }
             Backend::Xla => {
                 if !pjrt_enabled() {
@@ -562,7 +641,11 @@ impl SimConfig {
                 }
                 let rt = Arc::new(Runtime::cpu(&opts.artifacts)?);
                 let backend = XlaBackend::new(rt, net.n_neurons())?;
-                Ok(Box::new(CoreEngine::new(net, opts.strategy, backend)?))
+                let mut engine = CoreEngine::new(net, opts.strategy, backend)?;
+                if let Some(cfg) = opts.learning {
+                    engine.enable_plasticity(cfg).map_err(|e| SimError::Config(e.to_string()))?;
+                }
+                Ok(Box::new(engine))
             }
             // handled by the early return above (it consumes `src`)
             Backend::Sharded => unreachable!("sharded backend returns before view creation"),
@@ -679,6 +762,48 @@ mod tests {
         cfg.opts.backend = Backend::Pool; // bypass the builder coupling
         let err = cfg.build();
         assert!(matches!(err, Err(SimError::Config(_))));
+    }
+
+    #[test]
+    fn learn_flag_parses_and_rejects_malformed_specs() {
+        let o = SimOptions::from_args(&args(&["--learn", "8,9,3,4"])).unwrap();
+        let cfg = o.learning.unwrap();
+        assert_eq!((cfg.a_plus, cfg.a_minus, cfg.tau_pre, cfg.tau_post), (8, 9, 3, 4));
+        assert_eq!(SimOptions::from_args(&args(&[])).unwrap().learning, None);
+
+        let o = SimOptions::from_args(&args(&[
+            "--learn", "8,9,3,4", "--learn-clamp", "-100,100",
+        ]))
+        .unwrap();
+        let cfg = o.learning.unwrap();
+        assert_eq!((cfg.w_min, cfg.w_max), (-100, 100));
+
+        let err = SimOptions::from_args(&args(&["--learn", "8,9"])).unwrap_err();
+        assert!(err.to_string().contains("A_PLUS,A_MINUS,TAU_PRE,TAU_POST"), "{err}");
+        let err = SimOptions::from_args(&args(&["--learn-clamp", "0,1"])).unwrap_err();
+        assert!(err.to_string().contains("requires --learn"), "{err}");
+        let err = SimOptions::from_args(&args(&["--learn", "8,9,3,4", "--learn-clamp", "5,-5"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("w_min"), "{err}");
+    }
+
+    #[test]
+    fn dense_backend_rejects_learning() {
+        let net = crate::snn::Network::from_adj(
+            vec![crate::snn::NeuronModel::if_neuron(1); 2],
+            &[vec![], vec![]],
+            &[vec![crate::snn::Synapse { target: 0, weight: 1 }]],
+            vec![0],
+            0,
+        );
+        let err = SimConfig::new(net)
+            .backend(Backend::Dense)
+            .learning(crate::plasticity::PlasticityConfig::default())
+            .build();
+        match err {
+            Err(SimError::Config(msg)) => assert!(msg.contains("event-driven"), "{msg}"),
+            other => panic!("expected Config error, got {other:?}"),
+        }
     }
 
     #[test]

@@ -71,12 +71,14 @@ pub mod serve;
 pub mod session;
 
 pub use config::{Backend, NetSource, SimConfig, SimOptions};
+pub(crate) use config::parse_learning;
 pub use crate::cluster::RouteGranularity;
 
 use crate::energy::{CostReport, EnergyModel};
 use crate::hbm::LayoutStats;
 use crate::partition::Partition;
 use crate::router::RouterStats;
+use crate::snn::{EditJournal, EditState};
 
 /// Errors surfaced by the facade (configuration and execution).
 #[derive(Debug, thiserror::Error)]
@@ -156,6 +158,24 @@ pub struct BatchResult {
     pub fired_total: u64,
 }
 
+/// Outcome of one [`Simulator::apply_edits`] batch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EditReport {
+    /// Existing synapses whose weight was set.
+    pub updated: u64,
+    /// Synapses newly created.
+    pub created: u64,
+    /// Synapses removed.
+    pub removed: u64,
+}
+
+impl EditReport {
+    /// Total edits that changed the live network.
+    pub fn applied(&self) -> u64 {
+        self.updated + self.created + self.removed
+    }
+}
+
 /// Record of one [`Simulator::run`] over a stimulus schedule.
 #[derive(Clone, Debug, Default)]
 pub struct RunRecord {
@@ -226,6 +246,97 @@ pub trait Simulator {
     /// second `HbmImage::compile` when they only want the stats.
     fn hbm_stats(&self) -> Option<LayoutStats> {
         None
+    }
+
+    /// Live weight edit between steps: set **every** duplicate slot of
+    /// the synapse `pre -> post` to `weight`, in place — membranes,
+    /// traces and all other weights survive (the paper's
+    /// `write_synapse`, no re-export/reconfigure round trip). Returns
+    /// Ok(false) when the synapse does not exist (use
+    /// [`Simulator::add_synapse`] / [`Simulator::apply_edits`] to
+    /// create one). Backends without live-edit support return a
+    /// [`SimError::Config`] error.
+    fn write_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> Result<bool, SimError> {
+        let _ = (pre_is_axon, pre, post, weight);
+        Err(SimError::Config(format!(
+            "backend `{}` does not support live synapse edits",
+            self.backend_name()
+        )))
+    }
+
+    /// Read one live synapse weight (first duplicate slot), `Ok(None)`
+    /// when absent. Reads through the same live state `write_synapse`
+    /// mutates, so an edit is immediately visible.
+    fn read_synapse(&self, pre_is_axon: bool, pre: u32, post: u32) -> Result<Option<i16>, SimError> {
+        let _ = (pre_is_axon, pre, post);
+        Err(SimError::Config(format!(
+            "backend `{}` does not support live synapse edits",
+            self.backend_name()
+        )))
+    }
+
+    /// Live structural edit: create the synapse `pre -> post` (upsert —
+    /// an existing synapse is re-weighted instead). Returns Ok(true)
+    /// when a synapse was created. May fail with a config error when
+    /// the backend's compiled layout has no room left; compact the
+    /// session's [`EditJournal`] into a fresh network and rebuild.
+    fn add_synapse(
+        &mut self,
+        pre_is_axon: bool,
+        pre: u32,
+        post: u32,
+        weight: i16,
+    ) -> Result<bool, SimError> {
+        let _ = (pre_is_axon, pre, post, weight);
+        Err(SimError::Config(format!(
+            "backend `{}` does not support live synapse edits",
+            self.backend_name()
+        )))
+    }
+
+    /// Live structural edit: remove every duplicate slot of
+    /// `pre -> post`. Returns the number of slots removed (0 = absent).
+    fn remove_synapse(&mut self, pre_is_axon: bool, pre: u32, post: u32) -> Result<usize, SimError> {
+        let _ = (pre_is_axon, pre, post);
+        Err(SimError::Config(format!(
+            "backend `{}` does not support live synapse edits",
+            self.backend_name()
+        )))
+    }
+
+    /// Apply a canonicalized [`EditJournal`] batch (at most one pending
+    /// state per synapse) to the live session, in the journal's
+    /// deterministic key order. Default implementation dispatches each
+    /// edit through the per-synapse methods above; all-or-nothing is
+    /// NOT guaranteed — on error a prefix may be applied (the journal
+    /// stays intact for compaction/rebuild recovery).
+    fn apply_edits(&mut self, journal: &EditJournal) -> Result<EditReport, SimError> {
+        let mut rep = EditReport::default();
+        for edit in journal.iter() {
+            let k = edit.key;
+            match edit.state {
+                EditState::Set(w) => {
+                    if self.write_synapse(k.pre_is_axon, k.pre, k.post, w)? {
+                        rep.updated += 1;
+                    } else if self.add_synapse(k.pre_is_axon, k.pre, k.post, w)? {
+                        rep.created += 1;
+                    } else {
+                        rep.updated += 1;
+                    }
+                }
+                EditState::Removed => {
+                    rep.removed +=
+                        (self.remove_synapse(k.pre_is_axon, k.pre, k.post)? > 0) as u64;
+                }
+            }
+        }
+        Ok(rep)
     }
 
     /// Batched stepping: advance one step per `batch` entry and collect

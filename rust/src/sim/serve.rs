@@ -19,7 +19,9 @@
 //!   permit within `request_timeout_ms` gets a `deadline` error and the
 //!   session survives; one greedy session cannot starve the rest,
 //!   because admission is strictly arrival-ordered.
-//! * **Quotas** — `max_neurons` / `max_batch` become the session's
+//! * **Quotas** — `max_neurons` / `max_batch` / `max-edits-per-step`
+//!   (the `write_synapse` budget between step intervals) become the
+//!   session's
 //!   [`SessionLimits`] (code `quota`); the read side caps request lines
 //!   at `max_line_bytes` (answered `malformed_request`, bytes past the
 //!   cap never buffered). In-flight requests per session are capped at
@@ -85,6 +87,10 @@ pub struct ServeLimits {
     pub max_neurons: usize,
     /// Per-session `step_many` cap (`--max-batch`).
     pub max_batch_steps: usize,
+    /// Per-session `write_synapse` budget between step intervals
+    /// (`--max-edits-per-step`) — a learning client must keep stepping,
+    /// not mutate weights unboundedly.
+    pub max_edits_per_step: usize,
     /// Read-side request-line byte cap (`--max-line-bytes`).
     pub max_line_bytes: usize,
     /// Max wait for a compute permit before `deadline`
@@ -107,6 +113,7 @@ impl Default for ServeLimits {
             concurrency: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             max_neurons: usize::MAX,
             max_batch_steps: usize::MAX,
+            max_edits_per_step: usize::MAX,
             max_line_bytes: 8 << 20,
             request_timeout_ms: 30_000,
             idle_timeout_ms: 300_000,
@@ -124,6 +131,7 @@ impl ServeLimits {
             concurrency: args.get_usize("concurrency", d.concurrency)?.max(1),
             max_neurons: args.get_usize("max-neurons", d.max_neurons)?,
             max_batch_steps: args.get_usize("max-batch", d.max_batch_steps)?,
+            max_edits_per_step: args.get_usize("max-edits-per-step", d.max_edits_per_step)?,
             max_line_bytes: args.get_usize("max-line-bytes", d.max_line_bytes)?,
             request_timeout_ms: args.get_usize("request-timeout-ms", d.request_timeout_ms as usize)?
                 as u64,
@@ -134,7 +142,11 @@ impl ServeLimits {
     }
 
     fn session_limits(&self) -> SessionLimits {
-        SessionLimits { max_neurons: self.max_neurons, max_batch_steps: self.max_batch_steps }
+        SessionLimits {
+            max_neurons: self.max_neurons,
+            max_batch_steps: self.max_batch_steps,
+            max_edits_per_step: self.max_edits_per_step,
+        }
     }
 }
 
@@ -152,6 +164,10 @@ struct Counters {
     requests_total: AtomicU64,
     errors_total: AtomicU64,
     steps_total: AtomicU64,
+    /// `write_synapse` edits applied across all sessions.
+    edits_applied: AtomicU64,
+    /// Edit-journal compactions (CSR rebuilds) across all sessions.
+    journal_compactions: AtomicU64,
     /// Wall time spent waiting for admission-gate permits (µs).
     queue_wait_us: AtomicU64,
     /// Wall time spent executing simulator work under a permit (µs).
@@ -226,6 +242,11 @@ impl Shared {
                 ("requests_total", Json::Int(c.requests_total.load(Ordering::Relaxed) as i64)),
                 ("errors_total", Json::Int(c.errors_total.load(Ordering::Relaxed) as i64)),
                 ("steps_total", Json::Int(steps as i64)),
+                ("edits_applied", Json::Int(c.edits_applied.load(Ordering::Relaxed) as i64)),
+                (
+                    "journal_compactions",
+                    Json::Int(c.journal_compactions.load(Ordering::Relaxed) as i64),
+                ),
                 ("queue_depth", Json::Int(self.gate.queue_depth() as i64)),
                 ("concurrency", Json::Int(self.limits.concurrency as i64)),
                 (
@@ -584,6 +605,7 @@ fn execute(
     };
 
     let steps = req.steps_requested() as u64;
+    let stats_before = session.stats();
     let exec0 = Instant::now();
     let outcome = catch_unwind(AssertUnwindSafe(|| session.handle_request(req)));
     Counters::add(&shared.counters.execute_us, exec0.elapsed().as_micros() as u64);
@@ -593,6 +615,16 @@ fn execute(
         Ok((resp, done)) => {
             if !is_error_response(&resp) {
                 Counters::add(&shared.counters.steps_total, steps);
+                // fold the session's edit deltas into server totals
+                let after = session.stats();
+                Counters::add(
+                    &shared.counters.edits_applied,
+                    after.edits_applied - stats_before.edits_applied,
+                );
+                Counters::add(
+                    &shared.counters.journal_compactions,
+                    after.journal_compactions - stats_before.journal_compactions,
+                );
             }
             Ok((resp, done))
         }

@@ -31,7 +31,12 @@
 //! throughput) and `shards` (shard-subprocess count: implies
 //! `backend=sharded`, >= 1 and <= the topology's core count —
 //! spike trains are shard-count-invariant, see
-//! [`crate::cluster::shard`]). The response breaks the cold start down: `load_ms`
+//! [`crate::cluster::shard`]) and `learning` (an object switching on
+//! pair-based STDP for this session — integer fields `a_plus`,
+//! `a_minus`, `tau_pre`, `tau_post`, `w_min`, `w_max`, each optional
+//! over [`PlasticityConfig::default`]; mistyped fields answer
+//! `malformed_request`, invalid combinations and unsupported backends
+//! answer `config`; see [`crate::plasticity`]). The response breaks the cold start down: `load_ms`
 //! (network load — mmap + validate for `.hsn` v2, full heap parse for
 //! v1), `compile_ms` (partition + HBM compile + worker pools) and
 //! `net_bytes` (on-disk file size):
@@ -66,7 +71,26 @@
 //! <- {"ok":true,"op":"read_membrane","v":[3,-1,0]}
 //! ```
 //!
-//! `reset` — restore membranes/step counter and clear cost counters:
+//! `write_synapse` — upsert one synapse weight live, between steps.
+//! `pre` names the source (`"pre_is_axon": true` selects the axon id
+//! space; default `false` = neuron source), `post` the target neuron,
+//! `weight` an i16. The engine slot is patched in place — membranes,
+//! step counter and accumulated cost are untouched (the
+//! online-learning fast path) — and the edit is also recorded in the
+//! session's [`EditJournal`]. When the in-place patch is structurally
+//! impossible (full HBM row, a source with no HiAER route to the
+//! target's core, an edit-less backend), the journal is compacted into
+//! a fresh CSR and the simulator rebuilt from it: `"compacted": true`,
+//! and membranes reset on that path only. `created` reports whether
+//! the edit created the synapse (`false` = overwrote an existing one):
+//!
+//! ```text
+//! -> {"op":"write_synapse","pre":0,"post":2,"weight":7}
+//! <- {"compacted":false,"created":true,"ok":true,"op":"write_synapse"}
+//! ```
+//!
+//! `reset` — restore membranes/step counter and clear cost counters
+//! (learned/edited weights persist — see [`crate::plasticity`]):
 //!
 //! ```text
 //! -> {"op":"reset"}
@@ -92,14 +116,16 @@
 //! ```
 //!
 //! `metrics` — counters since the session started: requests served,
-//! error responses, simulation steps executed, plus the most recent
-//! `configure`'s cold-start breakdown. The TCP server again intercepts
+//! error responses, simulation steps executed, synapse edits applied
+//! (`edits_applied`) and edit-journal compactions (rebuilds —
+//! `journal_compactions`), plus the most recent `configure`'s
+//! cold-start breakdown. The TCP server again intercepts
 //! this op and adds server-wide totals (sessions, evictions, queue
 //! depth, step rates — see [`crate::sim::serve`]):
 //!
 //! ```text
 //! -> {"op":"metrics"}
-//! <- {"errors":0,"last_compile_ms":41.7,"last_load_ms":0.3,"net_bytes":6400512,"ok":true,"op":"metrics","requests":5,"steps":12}
+//! <- {"edits_applied":3,"errors":0,"journal_compactions":0,"last_compile_ms":41.7,"last_load_ms":0.3,"net_bytes":6400512,"ok":true,"op":"metrics","requests":5,"steps":12}
 //! ```
 //!
 //! `shutdown` — acknowledge, drop the simulator and end the serve loop.
@@ -118,11 +144,12 @@
 //! |-----------------------|----------------------------------------------------|
 //! | `malformed_request`   | line is not JSON / missing or mistyped fields /    |
 //! |                       | line longer than the transport's byte cap          |
-//! | `unknown_op`          | `op` is not one of the nine ops                    |
+//! | `unknown_op`          | `op` is not one of the ten ops                     |
 //! | `no_session`          | execution op before a successful `configure`       |
 //! | `oversized_batch`     | `step_many` batch exceeds [`MAX_BATCH_STEPS`]      |
 //! | `quota`               | a per-session quota ([`SessionLimits`]) exceeded:  |
-//! |                       | net too large, batch over the session's step cap   |
+//! |                       | net too large, batch over the session's step cap,  |
+//! |                       | synapse edits over the per-step edit cap           |
 //! | `server_busy`         | shared server at capacity / draining; reconnect    |
 //! |                       | later (emitted instead of `hello`, then closed)    |
 //! | `deadline`            | request waited too long for shared-server capacity |
@@ -146,7 +173,10 @@
 //! A [`Session`] can carry [`SessionLimits`] (a shared server sets them
 //! from its CLI flags): `max_neurons` bounds the network a `configure`
 //! may load, `max_batch_steps` tightens the global
-//! [`MAX_BATCH_STEPS`] cap per session. Both violations answer `quota`
+//! [`MAX_BATCH_STEPS`] cap per session, `max_edits_per_step` bounds
+//! `write_synapse` ops between two step intervals (a learning client
+//! must keep stepping, not mutate weights unboundedly — the serving
+//! tier's `--max-edits-per-step`). All violations answer `quota`
 //! and leave the session alive. Deadlines (`deadline`) and eviction
 //! (`evicted`) only exist on the shared server — the stdio transport
 //! has one client and no contention; see [`crate::sim::serve`] for
@@ -160,7 +190,9 @@ use std::time::Instant;
 
 use crate::energy::EnergyModel;
 use crate::model_fmt::NetCache;
+use crate::plasticity::PlasticityConfig;
 use crate::sim::{NetSource, SimError, SimOptions, Simulator};
+use crate::snn::{EditJournal, EditKey};
 use crate::util::json::{arr_i64, obj, Json};
 
 /// Protocol revision announced in the `hello` greeting and `configure`
@@ -213,10 +245,17 @@ pub fn error_code(e: &SimError) -> &'static str {
 /// One parsed request line.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
-    Configure { net: String, seed: Option<u32>, workers: Option<usize>, shards: Option<usize> },
+    Configure {
+        net: String,
+        seed: Option<u32>,
+        workers: Option<usize>,
+        shards: Option<usize>,
+        learning: Option<PlasticityConfig>,
+    },
     Step { axons: Vec<u32> },
     StepMany { batch: Vec<Vec<u32>> },
     ReadMembrane { ids: Vec<u32> },
+    WriteSynapse { pre_is_axon: bool, pre: u32, post: u32, weight: i16 },
     Reset,
     Cost,
     Health,
@@ -262,6 +301,61 @@ fn ids_field(j: &Json, key: &str, op: &str) -> Result<Vec<u32>, ProtoError> {
     arr.iter().map(|v| id_value(v, key)).collect()
 }
 
+fn u32_field(j: &Json, key: &str, op: &str) -> Result<u32, ProtoError> {
+    match j.get(key) {
+        Some(v) => id_value(v, key),
+        None => Err(perr(CODE_MALFORMED, format!("{op}: missing u32 field `{key}`"))),
+    }
+}
+
+/// Parse a `configure.learning` object into a [`PlasticityConfig`].
+/// Every field is optional over [`PlasticityConfig::default`]; mistyped
+/// or out-of-range fields answer `malformed_request`. Cross-field
+/// validity (`w_min <= w_max`, backend support) stays in
+/// [`SimConfig::build`](crate::sim::SimConfig::build) — one validation
+/// point, answered as `config`.
+fn learning_field(v: &Json) -> Result<PlasticityConfig, ProtoError> {
+    if !matches!(v, Json::Obj(_)) {
+        return Err(perr(
+            CODE_MALFORMED,
+            "configure: `learning` must be an object like \
+             {\"a_plus\":8,\"a_minus\":9,\"tau_pre\":3,\"tau_post\":3,\"w_min\":-128,\"w_max\":127}",
+        ));
+    }
+    fn int(v: &Json, key: &str, lo: i64, hi: i64) -> Result<Option<i64>, ProtoError> {
+        match v.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(x) => match x.as_i64() {
+                Some(n) if (lo..=hi).contains(&n) => Ok(Some(n)),
+                _ => Err(perr(
+                    CODE_MALFORMED,
+                    format!("learning.{key} must be an integer in [{lo}, {hi}]"),
+                )),
+            },
+        }
+    }
+    let mut cfg = PlasticityConfig::default();
+    if let Some(x) = int(v, "a_plus", i32::MIN as i64, i32::MAX as i64)? {
+        cfg.a_plus = x as i32;
+    }
+    if let Some(x) = int(v, "a_minus", i32::MIN as i64, i32::MAX as i64)? {
+        cfg.a_minus = x as i32;
+    }
+    if let Some(x) = int(v, "tau_pre", 0, u32::MAX as i64)? {
+        cfg.tau_pre = x as u32;
+    }
+    if let Some(x) = int(v, "tau_post", 0, u32::MAX as i64)? {
+        cfg.tau_post = x as u32;
+    }
+    if let Some(x) = int(v, "w_min", i16::MIN as i64, i16::MAX as i64)? {
+        cfg.w_min = x as i16;
+    }
+    if let Some(x) = int(v, "w_max", i16::MIN as i64, i16::MAX as i64)? {
+        cfg.w_max = x as i16;
+    }
+    Ok(cfg)
+}
+
 /// Parse one request line. Protocol-level failures (not JSON, bad
 /// shape, unknown op, oversized batch) come back as a [`ProtoError`]
 /// with the stable code; they never depend on session state.
@@ -290,7 +384,11 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                 None | Some(Json::Null) => None,
                 Some(v) => Some(id_value(v, "shards")? as usize),
             };
-            Ok(Request::Configure { net, seed, workers, shards })
+            let learning = match j.get("learning") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(learning_field(v)?),
+            };
+            Ok(Request::Configure { net, seed, workers, shards, learning })
         }
         "step" => Ok(Request::Step { axons: ids_field(&j, "axons", "step")? }),
         "step_many" => {
@@ -321,6 +419,40 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
             Ok(Request::StepMany { batch })
         }
         "read_membrane" => Ok(Request::ReadMembrane { ids: ids_field(&j, "ids", "read_membrane")? }),
+        "write_synapse" => {
+            let pre = u32_field(&j, "pre", "write_synapse")?;
+            let post = u32_field(&j, "post", "write_synapse")?;
+            let weight = match j.get("weight").map(Json::as_i64) {
+                Some(Some(w)) if (i16::MIN as i64..=i16::MAX as i64).contains(&w) => w as i16,
+                Some(Some(w)) => {
+                    return Err(perr(
+                        CODE_MALFORMED,
+                        format!(
+                            "write_synapse: `weight` {w} outside the i16 range [{}, {}]",
+                            i16::MIN,
+                            i16::MAX
+                        ),
+                    ))
+                }
+                _ => {
+                    return Err(perr(
+                        CODE_MALFORMED,
+                        "write_synapse: missing integer field `weight`",
+                    ))
+                }
+            };
+            let pre_is_axon = match j.get("pre_is_axon") {
+                None | Some(Json::Null) => false,
+                Some(Json::Bool(b)) => *b,
+                Some(_) => {
+                    return Err(perr(
+                        CODE_MALFORMED,
+                        "write_synapse: `pre_is_axon` must be a boolean",
+                    ))
+                }
+            };
+            Ok(Request::WriteSynapse { pre_is_axon, pre, post, weight })
+        }
         "reset" => Ok(Request::Reset),
         "cost" => Ok(Request::Cost),
         "health" => Ok(Request::Health),
@@ -330,7 +462,7 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
             CODE_UNKNOWN_OP,
             format!(
                 "unknown op {other:?} (options: configure, step, step_many, read_membrane, \
-                 reset, cost, health, metrics, shutdown)"
+                 write_synapse, reset, cost, health, metrics, shutdown)"
             ),
         )),
     }
@@ -382,11 +514,19 @@ pub struct SessionLimits {
     pub max_neurons: usize,
     /// Per-request `step_many` cap, tightened below [`MAX_BATCH_STEPS`].
     pub max_batch_steps: usize,
+    /// `write_synapse` ops allowed between two step intervals (the
+    /// serving tier's `--max-edits-per-step`). A successful `step` /
+    /// `step_many` / `reset` / `configure` opens a fresh budget.
+    pub max_edits_per_step: usize,
 }
 
 impl Default for SessionLimits {
     fn default() -> Self {
-        SessionLimits { max_neurons: usize::MAX, max_batch_steps: usize::MAX }
+        SessionLimits {
+            max_neurons: usize::MAX,
+            max_batch_steps: usize::MAX,
+            max_edits_per_step: usize::MAX,
+        }
     }
 }
 
@@ -399,6 +539,12 @@ pub struct SessionStats {
     pub errors: u64,
     /// Simulation steps executed successfully.
     pub steps: u64,
+    /// `write_synapse` edits applied (fast path and compaction path).
+    pub edits_applied: u64,
+    /// Edit-journal compactions: structural edits that forced a CSR
+    /// rebuild (each one is a cold start — a high rate relative to
+    /// `edits_applied` means the workload wants a different topology).
+    pub journal_compactions: u64,
     /// Network-load wall time of the most recent successful `configure`
     /// (mmap + validate for `.hsn` v2; full heap parse for v1).
     pub last_load_ms: f64,
@@ -427,6 +573,21 @@ pub struct Session {
     stats: SessionStats,
     sim_factory: Option<SimFactory>,
     net_cache: Option<Arc<NetCache>>,
+    /// Network source of the most recent successful `configure`,
+    /// retained as the edit journal's compaction base (`.hsn` v2 is an
+    /// `Arc` clone of the shared mapping; owned heap nets are kept by
+    /// reference-of-record in the same enum).
+    base: Option<NetSource>,
+    /// Effective deployment options of the most recent successful
+    /// `configure` (CLI opts + per-request overrides) — what a
+    /// compaction rebuild must reuse to stay bit-compatible.
+    active_opts: Option<SimOptions>,
+    /// Pending + applied `write_synapse` edits since the last
+    /// compaction, recorded against `base` (see [`EditJournal`]).
+    journal: EditJournal,
+    /// `write_synapse` ops since the last step interval (the
+    /// `max_edits_per_step` quota counter).
+    edits_since_step: usize,
 }
 
 impl Session {
@@ -444,6 +605,10 @@ impl Session {
             stats: SessionStats::default(),
             sim_factory: None,
             net_cache: None,
+            base: None,
+            active_opts: None,
+            journal: EditJournal::new(),
+            edits_since_step: 0,
         }
     }
 
@@ -518,14 +683,18 @@ impl Session {
             self.stats.errors += 1;
         } else {
             self.stats.steps += steps;
+            if steps > 0 {
+                // a successful step interval opens a fresh edit budget
+                self.edits_since_step = 0;
+            }
         }
         (resp, done)
     }
 
     fn dispatch(&mut self, req: Request) -> (String, bool) {
         match req {
-            Request::Configure { net, seed, workers, shards } => {
-                (self.configure(&net, seed, workers, shards), false)
+            Request::Configure { net, seed, workers, shards, learning } => {
+                (self.configure(&net, seed, workers, shards, learning), false)
             }
             Request::Step { axons } => {
                 let sim = match self.sim_or_err() {
@@ -610,12 +779,16 @@ impl Session {
                     false,
                 )
             }
+            Request::WriteSynapse { pre_is_axon, pre, post, weight } => {
+                (self.write_synapse_op(pre_is_axon, pre, post, weight), false)
+            }
             Request::Reset => {
                 let sim = match self.sim_or_err() {
                     Ok(s) => s,
                     Err(resp) => return (resp, false),
                 };
                 sim.reset();
+                self.edits_since_step = 0;
                 (ok_response("reset", vec![]), false)
             }
             Request::Cost => {
@@ -657,6 +830,11 @@ impl Session {
                         ("requests", Json::Int(self.stats.requests as i64)),
                         ("errors", Json::Int(self.stats.errors as i64)),
                         ("steps", Json::Int(self.stats.steps as i64)),
+                        ("edits_applied", Json::Int(self.stats.edits_applied as i64)),
+                        (
+                            "journal_compactions",
+                            Json::Int(self.stats.journal_compactions as i64),
+                        ),
                         ("last_load_ms", Json::Num(self.stats.last_load_ms)),
                         ("last_compile_ms", Json::Num(self.stats.last_compile_ms)),
                         ("net_bytes", Json::Int(self.stats.net_bytes as i64)),
@@ -671,12 +849,109 @@ impl Session {
         }
     }
 
+    /// The `write_synapse` op: quota + range checks, journal record,
+    /// then the in-place engine patch — falling back to a journal
+    /// compaction + rebuild when the patch is structurally impossible.
+    fn write_synapse_op(&mut self, pre_is_axon: bool, pre: u32, post: u32, weight: i16) -> String {
+        let (n, a) = match self.sim.as_deref() {
+            Some(sim) => (sim.n_neurons(), sim.n_axons()),
+            None => {
+                return err_response(CODE_NO_SESSION, "no simulator: send `configure` first")
+            }
+        };
+        if self.edits_since_step >= self.limits.max_edits_per_step {
+            return err_response(
+                CODE_QUOTA,
+                &format!(
+                    "{} synapse edits since the last step reach this session's {}-edit \
+                     quota; step before editing further",
+                    self.edits_since_step, self.limits.max_edits_per_step
+                ),
+            );
+        }
+        if post as usize >= n {
+            return err_response(
+                CODE_STIMULUS,
+                &format!("neuron id {post} out of range ({n} neurons)"),
+            );
+        }
+        let (space, bound) = if pre_is_axon { ("axon", a) } else { ("neuron", n) };
+        if pre as usize >= bound {
+            return err_response(
+                CODE_STIMULUS,
+                &format!("{space} id {pre} out of range ({bound} {space}s)"),
+            );
+        }
+        // Record in the journal first: the journal is the compaction
+        // source of truth, so the structural fallback below already
+        // sees this edit when it rebuilds.
+        let key = EditKey { pre_is_axon, pre, post };
+        let journal_created = match self.base.as_ref() {
+            Some(base) => Some(self.journal.add_synapse(base.view(), key, weight)),
+            // test-factory sessions retain no base; fast path only
+            None => None,
+        };
+        // Fast path: patch the engine slot in place — membranes, step
+        // counter and cost counters untouched.
+        let sim = self.sim.as_deref_mut().expect("checked above");
+        let patched = match sim.write_synapse(pre_is_axon, pre, post, weight) {
+            Ok(true) => Ok(false), // overwrote an existing synapse
+            Ok(false) => sim.add_synapse(pre_is_axon, pre, post, weight).map(|_| true),
+            Err(e) => Err(e),
+        };
+        let (created, compacted) = match patched {
+            Ok(created) => (created, false),
+            // Structurally impossible in place (full HBM row, a source
+            // with no HiAER route to the target's core, an edit-less
+            // backend): compact base + journal into a fresh CSR and
+            // rebuild — the slow path the journal exists to make rare.
+            Err(_) => match self.compact_and_rebuild() {
+                Ok(()) => (journal_created.unwrap_or(true), true),
+                Err(e) => return err_response(error_code(&e), &e.to_string()),
+            },
+        };
+        self.edits_since_step += 1;
+        self.stats.edits_applied += 1;
+        ok_response(
+            "write_synapse",
+            vec![("created", Json::Bool(created)), ("compacted", Json::Bool(compacted))],
+        )
+    }
+
+    /// Slow-path edit application: materialise the retained base CSR +
+    /// journal into a fresh [`crate::snn::Network`] and rebuild the
+    /// simulator with the session's active deployment options. The
+    /// rebuild is a cold start (membranes/step counter reset). On error
+    /// nothing is swapped — the old simulator, base and journal all
+    /// survive, so the pending edit lands at the next successful
+    /// compaction.
+    fn compact_and_rebuild(&mut self) -> Result<(), SimError> {
+        let base = self.base.as_ref().ok_or_else(|| {
+            SimError::Config(
+                "this session retains no base network; reconfigure before structural edits"
+                    .into(),
+            )
+        })?;
+        let fresh = self.journal.compact(base.view());
+        let opts = self.active_opts.clone().unwrap_or_else(|| self.opts.clone());
+        let sim = match self.sim_factory.as_mut() {
+            Some(factory) => factory(fresh.clone(), opts)?,
+            None => opts.into_config(fresh.clone()).build()?,
+        };
+        self.sim = Some(sim);
+        self.base = Some(NetSource::Owned(fresh));
+        self.journal.clear();
+        self.stats.journal_compactions += 1;
+        Ok(())
+    }
+
     fn configure(
         &mut self,
         net_path: &str,
         seed: Option<u32>,
         workers: Option<usize>,
         shards: Option<usize>,
+        learning: Option<PlasticityConfig>,
     ) -> String {
         // Cold-start phase 1 — load: `.hsn` v2 is mmap + validate
         // (zero-copy), v1 a full heap parse. Timed separately from the
@@ -724,13 +999,19 @@ impl Session {
             opts.shards = Some(n);
             opts.backend = crate::sim::Backend::Sharded;
         }
+        if learning.is_some() {
+            // per-session STDP switch-on; invalid configs flow into
+            // SimConfig::build's single validation point
+            opts.learning = learning;
+        }
         // Cold-start phase 2 — build: partition + HBM compile + pools.
         let t_compile = Instant::now();
+        let active_opts = opts.clone();
         let built = match self.sim_factory.as_mut() {
             // the test seam keeps its owned-Network signature; this is
             // the one materialisation point on the configure path
             Some(factory) => factory(src.view().to_network(), opts),
-            None => opts.into_config(src).build(),
+            None => opts.into_config(src.clone()).build(),
         };
         let compile_ms = t_compile.elapsed().as_secs_f64() * 1e3;
         match built {
@@ -749,6 +1030,12 @@ impl Session {
                     ],
                 );
                 self.sim = Some(sim);
+                // fresh network ⇒ stale pending edits die with it; the
+                // source + effective opts become the compaction base
+                self.base = Some(src);
+                self.active_opts = Some(active_opts);
+                self.journal.clear();
+                self.edits_since_step = 0;
                 self.stats.last_load_ms = load_ms;
                 self.stats.last_compile_ms = compile_ms;
                 self.stats.net_bytes = net_bytes;
@@ -1129,11 +1416,23 @@ mod tests {
     fn configure_workers_field_parses_and_zero_is_config_error() {
         assert_eq!(
             parse_request(r#"{"op":"configure","net":"x.hsn","workers":4}"#).unwrap(),
-            Request::Configure { net: "x.hsn".into(), seed: None, workers: Some(4), shards: None }
+            Request::Configure {
+                net: "x.hsn".into(),
+                seed: None,
+                workers: Some(4),
+                shards: None,
+                learning: None
+            }
         );
         assert_eq!(
             parse_request(r#"{"op":"configure","net":"x.hsn"}"#).unwrap(),
-            Request::Configure { net: "x.hsn".into(), seed: None, workers: None, shards: None }
+            Request::Configure {
+                net: "x.hsn".into(),
+                seed: None,
+                workers: None,
+                shards: None,
+                learning: None
+            }
         );
         // mistyped workers is a malformed request, not a silent default
         let e = parse_request(r#"{"op":"configure","net":"x.hsn","workers":"two"}"#).unwrap_err();
@@ -1171,7 +1470,13 @@ mod tests {
     fn configure_shards_field_parses_and_invalid_counts_are_config_errors() {
         assert_eq!(
             parse_request(r#"{"op":"configure","net":"x.hsn","shards":2}"#).unwrap(),
-            Request::Configure { net: "x.hsn".into(), seed: None, workers: None, shards: Some(2) }
+            Request::Configure {
+                net: "x.hsn".into(),
+                seed: None,
+                workers: None,
+                shards: Some(2),
+                learning: None
+            }
         );
         // mistyped shards is a malformed request, not a silent default
         let e = parse_request(r#"{"op":"configure","net":"x.hsn","shards":"two"}"#).unwrap_err();
@@ -1283,7 +1588,8 @@ mod tests {
         let p = fig6_path("quota");
         // net-size quota: the fig6 net has 4 neurons
         let mut s = Session::new(SimOptions::default());
-        let limits = SessionLimits { max_neurons: 3, max_batch_steps: 2 };
+        let limits =
+            SessionLimits { max_neurons: 3, max_batch_steps: 2, ..SessionLimits::default() };
         let mut q = Session::with_limits(SimOptions::default(), limits);
         let conf = format!("{{\"op\":\"configure\",\"net\":\"{}\"}}", p.display());
         let (resp, done) = q.handle_line(&conf);
@@ -1294,7 +1600,8 @@ mod tests {
         // batch quota: allowed size passes, over-quota answers `quota`
         // and executes nothing; the global cap still reports
         // `oversized_batch` (distinct codes, distinct remedies)
-        let limits = SessionLimits { max_neurons: 100, max_batch_steps: 2 };
+        let limits =
+            SessionLimits { max_neurons: 100, max_batch_steps: 2, ..SessionLimits::default() };
         let mut q = Session::with_limits(SimOptions::default(), limits);
         let (resp, _) = q.handle_line(&conf);
         assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
@@ -1374,6 +1681,162 @@ mod tests {
         // ...and the step after the flood still executed normally
         assert_eq!(parsed(lines[3]).get("op").and_then(Json::as_str), Some("step"));
         assert_eq!(parsed(lines[4]).get("op").and_then(Json::as_str), Some("shutdown"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// PR 9 tentpole: `write_synapse` request shapes — defaults, id and
+    /// weight validation, unknown-field tolerance — all protocol-level
+    /// (`malformed_request`), never session-state-dependent.
+    #[test]
+    fn write_synapse_parses_and_validates() {
+        assert_eq!(
+            parse_request(r#"{"op":"write_synapse","pre":0,"post":2,"weight":7}"#).unwrap(),
+            Request::WriteSynapse { pre_is_axon: false, pre: 0, post: 2, weight: 7 }
+        );
+        assert_eq!(
+            parse_request(
+                r#"{"op":"write_synapse","pre_is_axon":true,"pre":1,"post":0,"weight":-3}"#
+            )
+            .unwrap(),
+            Request::WriteSynapse { pre_is_axon: true, pre: 1, post: 0, weight: -3 }
+        );
+        for bad in [
+            r#"{"op":"write_synapse","post":2,"weight":7}"#, // missing pre
+            r#"{"op":"write_synapse","pre":0,"weight":7}"#,  // missing post
+            r#"{"op":"write_synapse","pre":0,"post":2}"#,    // missing weight
+            r#"{"op":"write_synapse","pre":0,"post":2,"weight":40000}"#, // > i16
+            r#"{"op":"write_synapse","pre":0,"post":2,"weight":"big"}"#,
+            r#"{"op":"write_synapse","pre":-1,"post":2,"weight":7}"#,
+            r#"{"op":"write_synapse","pre_is_axon":1,"pre":0,"post":2,"weight":7}"#,
+        ] {
+            let e = parse_request(bad).unwrap_err();
+            assert_eq!(e.code, CODE_MALFORMED, "{bad}");
+        }
+    }
+
+    /// PR 9 tentpole acceptance: a live `write_synapse` mutates the
+    /// next step's behaviour without resetting membranes — the in-place
+    /// fast path, `compacted: false`.
+    #[test]
+    fn write_synapse_mutates_next_step_without_membrane_reset() {
+        let p = fig6_path("edit");
+        let mut s = configured_session(&p);
+        let mut t = configured_session(&p);
+        for sess in [&mut s, &mut t] {
+            sess.handle_line(r#"{"op":"step","axons":[0]}"#);
+        }
+        let (v_before, _) = s.handle_line(r#"{"op":"read_membrane","ids":[0,1,2,3]}"#);
+        // flip a→b (pre 0 → post 1, an existing weight-1 synapse) in s
+        let (resp, done) =
+            s.handle_line(r#"{"op":"write_synapse","pre":0,"post":1,"weight":-63}"#);
+        assert!(!done);
+        let j = parsed(&resp);
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(j.get("created"), Some(&Json::Bool(false)), "{resp}");
+        assert_eq!(j.get("compacted"), Some(&Json::Bool(false)), "{resp}");
+        // the edit itself left membranes untouched
+        let (v_after, _) = s.handle_line(r#"{"op":"read_membrane","ids":[0,1,2,3]}"#);
+        assert_eq!(v_before, v_after, "live edit reset membranes");
+        // ...but the sessions diverge once the pre neuron fires again
+        let mut diverged = false;
+        for _ in 0..8 {
+            let (a, _) = s.handle_line(r#"{"op":"step","axons":[0]}"#);
+            let (b, _) = t.handle_line(r#"{"op":"step","axons":[0]}"#);
+            let (ma, _) = s.handle_line(r#"{"op":"read_membrane","ids":[1]}"#);
+            let (mb, _) = t.handle_line(r#"{"op":"read_membrane","ids":[1]}"#);
+            if a != b || ma != mb {
+                diverged = true;
+                break;
+            }
+        }
+        assert!(diverged, "weight edit never changed behaviour");
+        // out-of-range ids answer `stimulus`, session stays alive
+        let (resp, _) = s.handle_line(r#"{"op":"write_synapse","pre":9,"post":1,"weight":1}"#);
+        assert_err(&resp, CODE_STIMULUS);
+        let (resp, _) = s.handle_line(r#"{"op":"write_synapse","pre":0,"post":9,"weight":1}"#);
+        assert_err(&resp, CODE_STIMULUS);
+        let (resp, _) = s.handle_line(r#"{"op":"step","axons":[0]}"#);
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Satellite: the per-session edit quota answers the stable `quota`
+    /// code between step intervals, a step reopens the budget, and
+    /// `metrics` reports `edits_applied` / `journal_compactions`.
+    #[test]
+    fn edit_quota_and_edit_metrics() {
+        let p = fig6_path("editquota");
+        let limits = SessionLimits { max_edits_per_step: 2, ..SessionLimits::default() };
+        let mut s = Session::with_limits(SimOptions::default(), limits);
+        let (resp, _) =
+            s.handle_line(&format!("{{\"op\":\"configure\",\"net\":\"{}\"}}", p.display()));
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+        for _ in 0..2 {
+            let (resp, _) =
+                s.handle_line(r#"{"op":"write_synapse","pre":0,"post":1,"weight":2}"#);
+            assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+        }
+        let (resp, _) = s.handle_line(r#"{"op":"write_synapse","pre":0,"post":1,"weight":3}"#);
+        assert_err(&resp, CODE_QUOTA);
+        // a step interval reopens the budget
+        let (resp, _) = s.handle_line(r#"{"op":"step","axons":[]}"#);
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let (resp, _) = s.handle_line(r#"{"op":"write_synapse","pre":0,"post":1,"weight":3}"#);
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let (m, _) = s.handle_line(r#"{"op":"metrics"}"#);
+        let mj = parsed(&m);
+        assert_eq!(mj.get("edits_applied").and_then(Json::as_i64), Some(3), "{m}");
+        // all three edits overwrote an existing engine slot in place
+        assert_eq!(mj.get("journal_compactions").and_then(Json::as_i64), Some(0), "{m}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// PR 9 tentpole: the `configure` op's `learning` field switches on
+    /// per-session STDP — mistyped fields are `malformed_request`,
+    /// invalid combinations `config` (one validation point in the
+    /// facade), and a valid config builds a stepping session.
+    #[test]
+    fn configure_learning_field_parses_and_validates() {
+        match parse_request(
+            r#"{"op":"configure","net":"x.hsn","learning":{"a_plus":4,"tau_post":5}}"#,
+        )
+        .unwrap()
+        {
+            Request::Configure { learning: Some(cfg), .. } => {
+                assert_eq!(cfg.a_plus, 4);
+                assert_eq!(cfg.tau_post, 5);
+                let d = PlasticityConfig::default();
+                assert_eq!(cfg.a_minus, d.a_minus);
+                assert_eq!(cfg.tau_pre, d.tau_pre);
+            }
+            other => panic!("{other:?}"),
+        }
+        for bad in [
+            r#"{"op":"configure","net":"x.hsn","learning":5}"#,
+            r#"{"op":"configure","net":"x.hsn","learning":{"a_plus":"big"}}"#,
+            r#"{"op":"configure","net":"x.hsn","learning":{"w_min":-40000}}"#,
+        ] {
+            let e = parse_request(bad).unwrap_err();
+            assert_eq!(e.code, CODE_MALFORMED, "{bad}");
+        }
+
+        let p = fig6_path("learning");
+        let mut s = Session::new(SimOptions::default());
+        // w_min > w_max flows into the facade's validation: `config`
+        let (resp, _) = s.handle_line(&format!(
+            "{{\"op\":\"configure\",\"net\":\"{}\",\"learning\":{{\"w_min\":10,\"w_max\":-10}}}}",
+            p.display()
+        ));
+        assert_err(&resp, CODE_CONFIG);
+        assert!(!s.is_configured());
+        // a valid learning config builds and steps
+        let (resp, _) = s.handle_line(&format!(
+            "{{\"op\":\"configure\",\"net\":\"{}\",\"learning\":{{\"a_plus\":4,\"a_minus\":5}}}}",
+            p.display()
+        ));
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let (resp, _) = s.handle_line(r#"{"op":"step","axons":[0,1]}"#);
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
         std::fs::remove_file(&p).ok();
     }
 

@@ -1,0 +1,396 @@
+//! `EditJournal` — a sorted overlay of pending synapse edits over a
+//! borrowed CSR, plus compaction into a fresh [`Network`].
+//!
+//! Live engines and sessions cannot afford an O(n_synapses) CSR splice
+//! per `add_synapse`, and an mmap-backed `.hsn` v2 [`NetView`] is
+//! read-only, so *no* in-place edit is even legal there. The journal
+//! makes both cases cheap: edits land in a `BTreeMap` keyed by
+//! `(pre_is_axon, pre, post)` (neurons order before axons — the CSR
+//! source order), reads consult the overlay first
+//! ([`JournaledView::read_synapse`]), and a periodic
+//! [`EditJournal::compact`] materialises base + overlay into a fresh
+//! owned CSR in one linear merge pass.
+//!
+//! # Edit semantics (the overlay contract)
+//!
+//! The journal holds **at most one pending state per key**: `Set(w)`
+//! (the synapse exists with weight `w`) or `Removed`. Consequences:
+//!
+//! * `write_synapse` targets an *existing* synapse (base or pending
+//!   `Set`); it returns `false` for a miss rather than creating one.
+//! * `add_synapse` is an upsert: it records `Set(w)` whether or not the
+//!   base has the synapse, and reports whether it created one.
+//! * Base **duplicate** `(pre, post)` slots (legal in the CSR; delivery
+//!   sums them) are treated as one logical synapse by the overlay: a
+//!   `Set` collapses them to a single slot at compaction, `Removed`
+//!   drops them all — mirroring [`Network::write_synapse`] /
+//!   [`Network::remove_synapse`] whole-run semantics.
+//! * Untouched base entries are copied verbatim (duplicates preserved),
+//!   so compacting an empty journal reproduces the base CSR
+//!   bit-identically.
+//!
+//! The property suite (`rust/tests/plasticity.rs`) pins overlay reads
+//! and the compacted CSR against an eagerly rebuilt `Network` across
+//! random edit sequences.
+
+use std::collections::BTreeMap;
+
+use super::network::Network;
+use super::view::NetView;
+
+/// Identity of one logical synapse. Derived `Ord` sorts neurons
+/// (`pre_is_axon == false`) before axons, then by `(pre, post)` — the
+/// flat CSR source order, which is what lets compaction merge the
+/// journal against the base arrays in one forward pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct EditKey {
+    pub pre_is_axon: bool,
+    pub pre: u32,
+    pub post: u32,
+}
+
+/// Pending overlay state of one key (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EditState {
+    /// Synapse exists with this weight.
+    Set(i16),
+    /// Synapse does not exist.
+    Removed,
+}
+
+/// One recorded edit, as consumed by engines applying a journal live
+/// (`Simulator::apply_edits`) and by the session wire protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SynEdit {
+    pub key: EditKey,
+    pub state: EditState,
+}
+
+/// Sorted overlay of pending synapse edits (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct EditJournal {
+    pending: BTreeMap<EditKey, EditState>,
+    /// Total edit operations recorded since construction/`clear` —
+    /// monotonic even when edits coalesce onto one key (serving-tier
+    /// quota accounting wants operations, not distinct keys).
+    recorded: u64,
+}
+
+impl EditJournal {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Distinct keys with pending state.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Total edit operations recorded (monotonic until [`Self::clear`]).
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Drop all pending state (after a compaction consumed it).
+    pub fn clear(&mut self) {
+        self.pending.clear();
+        self.recorded = 0;
+    }
+
+    /// Pending edits in key order.
+    pub fn iter(&self) -> impl Iterator<Item = SynEdit> + '_ {
+        self.pending.iter().map(|(&key, &state)| SynEdit { key, state })
+    }
+
+    fn base_has(base: NetView<'_>, key: EditKey) -> bool {
+        let (tg, _) = if key.pre_is_axon {
+            base.axon_syns(key.pre as usize)
+        } else {
+            base.neuron_syns(key.pre as usize)
+        };
+        tg.binary_search(&key.post).is_ok()
+    }
+
+    /// True if `key` resolves to a synapse through the overlay.
+    pub fn exists(&self, base: NetView<'_>, key: EditKey) -> bool {
+        match self.pending.get(&key) {
+            Some(EditState::Set(_)) => true,
+            Some(EditState::Removed) => false,
+            None => Self::base_has(base, key),
+        }
+    }
+
+    /// Record a weight write. Returns `false` (and records nothing) if
+    /// the synapse does not exist through the overlay.
+    pub fn write_synapse(&mut self, base: NetView<'_>, key: EditKey, weight: i16) -> bool {
+        if !self.exists(base, key) {
+            return false;
+        }
+        self.pending.insert(key, EditState::Set(weight));
+        self.recorded += 1;
+        true
+    }
+
+    /// Record an upsert. Returns `true` if the synapse did not exist
+    /// through the overlay (i.e. this edit creates it).
+    pub fn add_synapse(&mut self, base: NetView<'_>, key: EditKey, weight: i16) -> bool {
+        let created = !self.exists(base, key);
+        self.pending.insert(key, EditState::Set(weight));
+        self.recorded += 1;
+        created
+    }
+
+    /// Record a removal. Returns `false` if already absent.
+    pub fn remove_synapse(&mut self, base: NetView<'_>, key: EditKey) -> bool {
+        if !self.exists(base, key) {
+            return false;
+        }
+        if Self::base_has(base, key) {
+            self.pending.insert(key, EditState::Removed);
+        } else {
+            // journal-only synapse: the add and the remove annihilate
+            self.pending.remove(&key);
+        }
+        self.recorded += 1;
+        true
+    }
+
+    /// Effective (targets, weights) of one source under the overlay —
+    /// the per-source merge step compaction runs for every source.
+    /// Sorted by target; base duplicates of an edited target collapse.
+    fn effective_syns(
+        &self,
+        base: NetView<'_>,
+        pre_is_axon: bool,
+        pre: u32,
+        out: &mut Vec<(u32, i16)>,
+    ) {
+        out.clear();
+        let (tg, wt) = if pre_is_axon {
+            base.axon_syns(pre as usize)
+        } else {
+            base.neuron_syns(pre as usize)
+        };
+        let lo = EditKey { pre_is_axon, pre, post: 0 };
+        let hi = EditKey { pre_is_axon, pre, post: u32::MAX };
+        let mut edits = self.pending.range(lo..=hi).peekable();
+        let mut k = 0usize;
+        while k < tg.len() || edits.peek().is_some() {
+            match edits.peek() {
+                Some((&ekey, &state)) if k >= tg.len() || ekey.post <= tg[k] => {
+                    // emit the edit, skipping any base duplicates of it
+                    if let EditState::Set(w) = state {
+                        out.push((ekey.post, w));
+                    }
+                    while k < tg.len() && tg[k] == ekey.post {
+                        k += 1;
+                    }
+                    edits.next();
+                }
+                _ => {
+                    out.push((tg[k], wt[k]));
+                    k += 1;
+                }
+            }
+        }
+    }
+
+    /// Materialise base + overlay into a fresh owned [`Network`] (same
+    /// params/outputs/base_seed). One linear merge pass per source; the
+    /// result is sorted/canonical, ready for recompilation. The journal
+    /// is not consumed — callers [`Self::clear`] after swapping the new
+    /// CSR in.
+    pub fn compact<'a>(&self, base: impl Into<NetView<'a>>) -> Network {
+        let base: NetView<'_> = base.into();
+        let n = base.n_neurons();
+        let a = base.n_axons();
+        let mut scratch: Vec<(u32, i16)> = Vec::new();
+        let mut neuron_deg = vec![0u32; n];
+        let mut axon_deg = vec![0u32; a];
+        for i in 0..n {
+            self.effective_syns(base, false, i as u32, &mut scratch);
+            neuron_deg[i] = scratch.len() as u32;
+        }
+        for i in 0..a {
+            self.effective_syns(base, true, i as u32, &mut scratch);
+            axon_deg[i] = scratch.len() as u32;
+        }
+        let mut net = Network::with_degrees(
+            base.params.to_vec(),
+            &neuron_deg,
+            &axon_deg,
+            base.outputs.to_vec(),
+            base.base_seed,
+        );
+        let mut k = 0usize;
+        for (pre_is_axon, count) in [(false, n), (true, a)] {
+            for i in 0..count {
+                self.effective_syns(base, pre_is_axon, i as u32, &mut scratch);
+                for &(t, w) in &scratch {
+                    net.syn_targets[k] = t;
+                    net.syn_weights[k] = w;
+                    k += 1;
+                }
+            }
+        }
+        debug_assert_eq!(k, net.n_synapses());
+        net
+    }
+
+    /// Borrow base + journal as an overlay reader.
+    pub fn view<'a>(&'a self, base: NetView<'a>) -> JournaledView<'a> {
+        JournaledView { base, journal: self }
+    }
+}
+
+/// The thin overlay reader over a borrowed CSR: pending journal state
+/// wins, otherwise the base answers. This is what makes `write_synapse`
+/// legal on a read-only mmap-backed `NetFile` — the mapped bytes are
+/// never touched.
+#[derive(Clone, Copy)]
+pub struct JournaledView<'a> {
+    pub base: NetView<'a>,
+    pub journal: &'a EditJournal,
+}
+
+impl<'a> JournaledView<'a> {
+    /// Effective weight of `(pre, post)` (first base duplicate when the
+    /// key is untouched, matching [`Network::read_synapse`]).
+    pub fn read_synapse(&self, pre_is_axon: bool, pre: u32, post: u32) -> Option<i16> {
+        let key = EditKey { pre_is_axon, pre, post };
+        match self.journal.pending.get(&key) {
+            Some(EditState::Set(w)) => Some(*w),
+            Some(EditState::Removed) => None,
+            None => {
+                let (tg, wt) = if pre_is_axon {
+                    self.base.axon_syns(pre as usize)
+                } else {
+                    self.base.neuron_syns(pre as usize)
+                };
+                let s = tg.partition_point(|&t| t < post);
+                (s < tg.len() && tg[s] == post).then(|| wt[s])
+            }
+        }
+    }
+
+    /// Effective out-degree of one source under the overlay.
+    pub fn degree(&self, pre_is_axon: bool, pre: u32) -> usize {
+        let mut scratch = Vec::new();
+        self.journal.effective_syns(self.base, pre_is_axon, pre, &mut scratch);
+        scratch.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::{NetworkBuilder, NeuronModel};
+
+    fn toy() -> Network {
+        let m = NeuronModel::if_neuron(5);
+        let mut b = NetworkBuilder::new();
+        for i in 0..4 {
+            let key = format!("n{i}");
+            if i == 0 {
+                b.add_neuron(&key, m, &[("n1", 10), ("n3", 30)]).unwrap();
+            } else {
+                b.add_neuron(&key, m, &[]).unwrap();
+            }
+        }
+        b.add_axon("a0", &[("n0", 1), ("n2", 2)]).unwrap();
+        b.build().unwrap().0
+    }
+
+    #[test]
+    fn overlay_reads_and_states() {
+        let net = toy();
+        let mut j = EditJournal::new();
+        let k01 = EditKey { pre_is_axon: false, pre: 0, post: 1 };
+        let k02 = EditKey { pre_is_axon: false, pre: 0, post: 2 };
+        // write hits an existing synapse, misses an absent one
+        assert!(j.write_synapse(net.view(), k01, 11));
+        assert!(!j.write_synapse(net.view(), k02, 5));
+        // add is an upsert; remove needs existence
+        assert!(j.add_synapse(net.view(), k02, 5));
+        assert!(!j.add_synapse(net.view(), k02, 6));
+        let v = j.view(net.view());
+        assert_eq!(v.read_synapse(false, 0, 1), Some(11));
+        assert_eq!(v.read_synapse(false, 0, 2), Some(6));
+        assert_eq!(v.read_synapse(false, 0, 3), Some(30)); // untouched base
+        assert_eq!(v.read_synapse(true, 0, 0), Some(1));
+        assert!(j.remove_synapse(net.view(), k01));
+        assert!(!j.remove_synapse(net.view(), k01));
+        assert_eq!(j.view(net.view()).read_synapse(false, 0, 1), None);
+        // journal-only add + remove annihilate to no pending state
+        let before = j.len();
+        let k13 = EditKey { pre_is_axon: false, pre: 1, post: 3 };
+        assert!(j.add_synapse(net.view(), k13, 4));
+        assert!(j.remove_synapse(net.view(), k13));
+        assert_eq!(j.len(), before);
+        assert_eq!(j.recorded(), 7);
+    }
+
+    #[test]
+    fn compact_empty_journal_is_identity() {
+        let net = toy();
+        let j = EditJournal::new();
+        let out = j.compact(&net);
+        assert_eq!(out.syn_targets, net.syn_targets);
+        assert_eq!(out.syn_weights, net.syn_weights);
+        assert_eq!(out.neuron_off, net.neuron_off);
+        assert_eq!(out.axon_off, net.axon_off);
+    }
+
+    #[test]
+    fn compact_matches_eager_network_edits() {
+        let net = toy();
+        let mut j = EditJournal::new();
+        let mut eager = net.clone();
+        let edits: [(bool, u32, u32, Option<i16>); 5] = [
+            (false, 0, 1, Some(-4)), // write existing
+            (false, 2, 3, Some(8)),  // add new
+            (true, 0, 2, None),      // remove axon synapse
+            (true, 0, 3, Some(6)),   // add axon synapse
+            (false, 0, 3, None),     // remove existing
+        ];
+        for (ax, pre, post, w) in edits {
+            let key = EditKey { pre_is_axon: ax, pre, post };
+            match w {
+                Some(w) => {
+                    j.add_synapse(net.view(), key, w);
+                    eager.add_synapse(ax, pre, post, w);
+                }
+                None => {
+                    j.remove_synapse(net.view(), key);
+                    eager.remove_synapse(ax, pre, post);
+                }
+            }
+        }
+        let out = j.compact(&net);
+        assert_eq!(out.syn_targets, eager.syn_targets);
+        assert_eq!(out.syn_weights, eager.syn_weights);
+        assert_eq!(out.neuron_off, eager.neuron_off);
+        assert_eq!(out.axon_off, eager.axon_off);
+        out.validate().unwrap();
+    }
+
+    #[test]
+    fn edited_duplicates_collapse_at_compaction() {
+        use crate::snn::Synapse;
+        let m = NeuronModel::if_neuron(5);
+        let adj = vec![
+            vec![Synapse { target: 1, weight: 2 }, Synapse { target: 1, weight: 3 }],
+            vec![],
+        ];
+        let net = Network::from_adj(vec![m; 2], &adj, &[], vec![], 0);
+        let mut j = EditJournal::new();
+        let key = EditKey { pre_is_axon: false, pre: 0, post: 1 };
+        assert!(j.write_synapse(net.view(), key, 9));
+        let out = j.compact(&net);
+        assert_eq!(out.neuron_syns(0), (&[1u32][..], &[9i16][..]));
+    }
+}

@@ -10,10 +10,12 @@
 //! `network` module docs); [`EdgeList`] is the flat construction scratch
 //! for callers that discover synapses in arbitrary source order.
 
+mod journal;
 mod network;
 mod neuron;
 mod view;
 
+pub use journal::{EditJournal, EditKey, EditState, JournaledView, SynEdit};
 pub use network::{
     EdgeList, KeyMap, NetError, Network, NetworkBuilder, Synapse, WEIGHT_MAX, WEIGHT_MIN,
 };

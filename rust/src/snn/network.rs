@@ -544,11 +544,35 @@ impl Network {
             .map(|k| r.start + k)
     }
 
-    pub fn read_synapse(&self, pre_is_axon: bool, pre: u32, post: u32) -> Option<i16> {
-        self.find_synapse(pre_is_axon, pre, post)
-            .map(|k| self.syn_weights[k])
+    /// Flat-index range of every `(pre, post)` duplicate (contiguous,
+    /// because per-source slices are sorted by target). Empty if absent.
+    fn synapse_run(&self, pre_is_axon: bool, pre: u32, post: u32) -> Range<usize> {
+        let r = if pre_is_axon {
+            self.axon_range(pre as usize)
+        } else {
+            self.neuron_range(pre as usize)
+        };
+        let s = self.syn_targets[r.clone()].partition_point(|&t| t < post);
+        let e = self.syn_targets[r.clone()].partition_point(|&t| t <= post);
+        r.start + s..r.start + e
     }
 
+    /// Weight of the first `(pre, post)` duplicate (they are adjacent;
+    /// after any `write_synapse` all duplicates hold the same weight).
+    pub fn read_synapse(&self, pre_is_axon: bool, pre: u32, post: u32) -> Option<i16> {
+        let run = self.synapse_run(pre_is_axon, pre, post);
+        if run.is_empty() {
+            None
+        } else {
+            Some(self.syn_weights[run.start])
+        }
+    }
+
+    /// Set the weight of `(pre, post)`. Every duplicate slot is written
+    /// (delivery sums duplicates, so partial writes would make the
+    /// effective weight depend on which duplicate a lookup resolved to).
+    /// Returns `false` if no such synapse exists — use
+    /// [`Network::add_synapse`] to create one.
     pub fn write_synapse(
         &mut self,
         pre_is_axon: bool,
@@ -556,12 +580,59 @@ impl Network {
         post: u32,
         weight: i16,
     ) -> bool {
-        match self.find_synapse(pre_is_axon, pre, post) {
-            Some(k) => {
-                self.syn_weights[k] = weight;
-                true
+        let run = self.synapse_run(pre_is_axon, pre, post);
+        if run.is_empty() {
+            return false;
+        }
+        for k in run {
+            self.syn_weights[k] = weight;
+        }
+        true
+    }
+
+    /// Upsert a synapse: overwrite `(pre, post)` if present (all
+    /// duplicates, as [`Network::write_synapse`]), else splice a new slot
+    /// into the sorted per-source slice and shift the offset tables.
+    /// Returns `true` if a new synapse was created. O(n_synapses) on
+    /// insert — live engines buffer edits in [`super::EditJournal`] and
+    /// compact instead of calling this per edit.
+    pub fn add_synapse(&mut self, pre_is_axon: bool, pre: u32, post: u32, weight: i16) -> bool {
+        if self.write_synapse(pre_is_axon, pre, post, weight) {
+            return false;
+        }
+        let run = self.synapse_run(pre_is_axon, pre, post);
+        self.syn_targets.insert(run.start, post);
+        self.syn_weights.insert(run.start, weight);
+        self.shift_offsets(pre_is_axon, pre, 1);
+        true
+    }
+
+    /// Remove every `(pre, post)` duplicate. Returns the number removed.
+    pub fn remove_synapse(&mut self, pre_is_axon: bool, pre: u32, post: u32) -> usize {
+        let run = self.synapse_run(pre_is_axon, pre, post);
+        let count = run.len();
+        if count > 0 {
+            self.syn_targets.drain(run.clone());
+            self.syn_weights.drain(run);
+            self.shift_offsets(pre_is_axon, pre, -(count as i64));
+        }
+        count
+    }
+
+    /// Shift every offset after source `pre`'s region by `delta` slots.
+    fn shift_offsets(&mut self, pre_is_axon: bool, pre: u32, delta: i64) {
+        let apply = |o: &mut u32| *o = (*o as i64 + delta) as u32;
+        if !pre_is_axon {
+            for o in &mut self.neuron_off[pre as usize + 1..] {
+                apply(o);
             }
-            None => false,
+            for o in &mut self.axon_off {
+                apply(o);
+            }
+        } else {
+            for o in &mut self.axon_off[pre as usize + 1..] {
+                apply(o);
+            }
         }
     }
 }
@@ -630,6 +701,52 @@ mod tests {
         assert_eq!(net.read_synapse(false, a, b), Some(2));
         let c = keys.neuron("c").unwrap();
         assert!(!net.write_synapse(false, b, c, 1)); // no such synapse
+    }
+
+    #[test]
+    fn add_remove_synapse_splice_csr() {
+        let (mut net, keys) = fig6();
+        let b = keys.neuron("b").unwrap();
+        let c = keys.neuron("c").unwrap();
+        let before = net.n_synapses();
+        // b has no outgoing synapses; create b -> c
+        assert!(net.add_synapse(false, b, c, 7));
+        assert_eq!(net.n_synapses(), before + 1);
+        assert_eq!(net.read_synapse(false, b, c), Some(7));
+        net.validate().unwrap();
+        // upsert on an existing synapse overwrites in place
+        assert!(!net.add_synapse(false, b, c, 9));
+        assert_eq!(net.n_synapses(), before + 1);
+        assert_eq!(net.read_synapse(false, b, c), Some(9));
+        // axon-sourced splice
+        let beta = keys.axon("beta").unwrap();
+        assert!(net.add_synapse(true, beta, c, -3));
+        assert_eq!(net.read_synapse(true, beta, c), Some(-3));
+        net.validate().unwrap();
+        // removals restore the original counts
+        assert_eq!(net.remove_synapse(false, b, c), 1);
+        assert_eq!(net.remove_synapse(true, beta, c), 1);
+        assert_eq!(net.remove_synapse(false, b, c), 0);
+        assert_eq!(net.n_synapses(), before);
+        assert_eq!(net.read_synapse(false, b, c), None);
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn write_and_remove_cover_duplicates() {
+        // duplicate (0 -> 1) synapses built through from_adj
+        let m = NeuronModel::if_neuron(5);
+        let adj = vec![
+            vec![Synapse { target: 1, weight: 2 }, Synapse { target: 1, weight: 3 }],
+            vec![],
+        ];
+        let mut net = Network::from_adj(vec![m; 2], &adj, &[], vec![], 0);
+        assert_eq!(net.read_synapse(false, 0, 1), Some(2)); // first duplicate
+        assert!(net.write_synapse(false, 0, 1, 5));
+        assert_eq!(net.neuron_syns(0).1, &[5, 5]); // both slots written
+        assert_eq!(net.remove_synapse(false, 0, 1), 2);
+        assert_eq!(net.n_synapses(), 0);
+        net.validate().unwrap();
     }
 
     #[test]

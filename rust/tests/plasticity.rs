@@ -1,0 +1,586 @@
+//! Runtime-plasticity contracts (PR 9), both halves of the subsystem:
+//!
+//! * **Edit journal** — a property test drives random
+//!   `write/add/remove_synapse` sequences through an `EditJournal` and
+//!   an eagerly-edited `Network` side by side: overlay reads, degrees
+//!   and the post-compaction CSR must be bit-identical to the eager
+//!   reference (duplicates of an edited key collapse, untouched base
+//!   slots survive verbatim).
+//! * **STDP kernel** — a scalar reference model re-implements the
+//!   documented trace/update ordering contract (`crate::plasticity`
+//!   module docs) from the network adjacency alone, fed only the
+//!   engine's observed spike train; every weight must match after
+//!   every step, on the serial engine and the chunk-parallel pool.
+//! * **Determinism** — a learning-enabled run is bit-identical
+//!   (RunRecord *and* final weights) across worker counts, chunk
+//!   sizes, route granularities and shard counts, like every other
+//!   parallelism knob in the facade.
+//! * **Live edits** — `Simulator::write_synapse` and friends mutate
+//!   the next step's behaviour without touching membranes.
+
+use std::collections::BTreeMap;
+
+use hiaer_spike::energy::EnergyModel;
+use hiaer_spike::plasticity::{
+    apply_delta, decay_trace, stdp_delta, PlasticityConfig, TRACE_CEIL, TRACE_ONE,
+};
+use hiaer_spike::sim::{Backend, RouteGranularity, RunRecord, SimConfig, SimError, Simulator};
+use hiaer_spike::snn::{EditJournal, EditKey, Network, NeuronModel, Synapse};
+use hiaer_spike::util::prng::Xorshift32;
+
+/// Non-zero random weight: zero-weight slots are masked out of the HBM
+/// image at compile time and would not be plastic.
+fn nonzero_weight(rng: &mut Xorshift32) -> i16 {
+    let w = rng.range_i32(-25, 25) as i16;
+    if w == 0 {
+        7
+    } else {
+        w
+    }
+}
+
+/// One per-source synapse row with unique, sorted targets and non-zero
+/// weights.
+fn adj_row(rng: &mut Xorshift32, n: usize, count: usize) -> Vec<Synapse> {
+    let mut tgts: Vec<u32> = (0..count).map(|_| rng.below(n as u32)).collect();
+    tgts.sort_unstable();
+    tgts.dedup();
+    tgts.into_iter().map(|target| Synapse { target, weight: nonzero_weight(rng) }).collect()
+}
+
+/// Random network for learning tests: mixed neuron models (noise lanes
+/// included — single-core backends share the global index space, so
+/// even stochastic nets must agree), every weight non-zero (all slots
+/// plastic), and **no duplicate (pre, post) pairs**, so each weight is
+/// uniquely addressable through `read_synapse`.
+fn learning_net(rng: &mut Xorshift32, n: usize, a: usize) -> Network {
+    let models = [
+        NeuronModel::if_neuron(rng.range_i32(4, 30)),
+        NeuronModel::lif(rng.range_i32(4, 30), -3, 4, false).unwrap(),
+        NeuronModel::ann(rng.range_i32(3, 20), -6, true).unwrap(),
+    ];
+    let params: Vec<NeuronModel> = (0..n).map(|_| models[rng.below(3) as usize]).collect();
+    let outputs: Vec<u32> = (0..n as u32).filter(|i| i % 3 == 0).collect();
+    let base_seed = rng.next_u32();
+    let neuron_adj: Vec<Vec<Synapse>> = (0..n)
+        .map(|_| {
+            let count = rng.below(8) as usize;
+            adj_row(rng, n, count)
+        })
+        .collect();
+    let axon_adj: Vec<Vec<Synapse>> = (0..a)
+        .map(|_| {
+            let count = 2 + rng.below(6) as usize;
+            adj_row(rng, n, count)
+        })
+        .collect();
+    Network::from_adj(params, &neuron_adj, &axon_adj, outputs, base_seed)
+}
+
+/// Every (pre_is_axon, pre, post) synapse key of a network, deduped.
+fn all_keys(net: &Network) -> Vec<(bool, u32, u32)> {
+    let mut keys = Vec::new();
+    for i in 0..net.n_neurons() {
+        for &t in net.neuron_targets(i) {
+            keys.push((false, i as u32, t));
+        }
+    }
+    for i in 0..net.n_axons() {
+        for &t in net.axon_targets(i) {
+            keys.push((true, i as u32, t));
+        }
+    }
+    keys.dedup();
+    keys
+}
+
+fn weights_of(sim: &dyn Simulator, keys: &[(bool, u32, u32)]) -> Vec<Option<i16>> {
+    keys.iter().map(|&(ax, p, q)| sim.read_synapse(ax, p, q).unwrap()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Edit journal: overlay + compaction vs an eagerly rebuilt Network
+// ---------------------------------------------------------------------------
+
+/// Random base network **with** duplicate (pre, post) pairs allowed —
+/// compaction must collapse duplicates of edited keys and keep
+/// untouched duplicates verbatim, so the generator must produce both.
+fn dup_net(rng: &mut Xorshift32, n: usize, a: usize) -> Network {
+    let params: Vec<NeuronModel> =
+        (0..n).map(|_| NeuronModel::if_neuron(rng.range_i32(3, 20))).collect();
+    let outputs: Vec<u32> = (0..n as u32).filter(|_| rng.chance(0.3)).collect();
+    let mut neuron_adj: Vec<Vec<Synapse>> = vec![Vec::new(); n];
+    for adj in neuron_adj.iter_mut() {
+        for _ in 0..rng.below(7) as usize {
+            adj.push(Synapse {
+                target: rng.below(n as u32),
+                weight: rng.range_i32(-60, 60) as i16,
+            });
+        }
+    }
+    let mut axon_adj: Vec<Vec<Synapse>> = vec![Vec::new(); a];
+    for adj in axon_adj.iter_mut() {
+        for _ in 0..1 + rng.below(5) as usize {
+            adj.push(Synapse {
+                target: rng.below(n as u32),
+                weight: rng.range_i32(-60, 60) as i16,
+            });
+        }
+    }
+    Network::from_adj(params, &neuron_adj, &axon_adj, outputs, rng.next_u32())
+}
+
+/// The eager mirror of one journal `Set`: compaction collapses every
+/// base duplicate of an edited key into a single slot, so the eager
+/// reference removes all duplicates and re-inserts one.
+fn eager_set(net: &mut Network, k: EditKey, w: i16) {
+    net.remove_synapse(k.pre_is_axon, k.pre, k.post);
+    net.add_synapse(k.pre_is_axon, k.pre, k.post, w);
+}
+
+fn assert_same_csr(tag: &str, got: &Network, want: &Network) {
+    assert_eq!(got.syn_targets, want.syn_targets, "{tag}: syn_targets");
+    assert_eq!(got.syn_weights, want.syn_weights, "{tag}: syn_weights");
+    assert_eq!(got.neuron_off, want.neuron_off, "{tag}: neuron_off");
+    assert_eq!(got.axon_off, want.axon_off, "{tag}: axon_off");
+    assert_eq!(got.outputs, want.outputs, "{tag}: outputs");
+    assert_eq!(got.base_seed, want.base_seed, "{tag}: base_seed");
+}
+
+#[test]
+fn journal_overlay_and_compaction_match_eager_network() {
+    let mut rng = Xorshift32::new(0xED17);
+    for case in 0..6 {
+        let n = 20 + rng.below(40) as usize;
+        let a = 2 + rng.below(5) as usize;
+        let base = dup_net(&mut rng, n, a);
+        let mut eager = base.clone();
+        let mut journal = EditJournal::new();
+        let mut expect_recorded = 0u64;
+        for op in 0..200 {
+            let pre_is_axon = rng.chance(0.4);
+            let bound = if pre_is_axon { a } else { n } as u32;
+            let key =
+                EditKey { pre_is_axon, pre: rng.below(bound), post: rng.below(n as u32) };
+            let w = rng.range_i32(-60, 60) as i16;
+            let existed = eager.read_synapse(key.pre_is_axon, key.pre, key.post).is_some();
+            match rng.below(3) {
+                0 => {
+                    // write: miss records nothing, hit sets (and collapses)
+                    let got = journal.write_synapse(base.view(), key, w);
+                    assert_eq!(got, existed, "case {case} op {op}: write hit/miss");
+                    if existed {
+                        eager_set(&mut eager, key, w);
+                        expect_recorded += 1;
+                    }
+                }
+                1 => {
+                    // add: upsert, created iff previously absent
+                    let created = journal.add_synapse(base.view(), key, w);
+                    assert_eq!(created, !existed, "case {case} op {op}: add created");
+                    eager_set(&mut eager, key, w);
+                    expect_recorded += 1;
+                }
+                _ => {
+                    let got = journal.remove_synapse(base.view(), key);
+                    assert_eq!(got, existed, "case {case} op {op}: remove hit/miss");
+                    eager.remove_synapse(key.pre_is_axon, key.pre, key.post);
+                    if existed {
+                        expect_recorded += 1;
+                    }
+                }
+            }
+            // the touched key reads identically through the overlay
+            assert_eq!(
+                journal.view(base.view()).read_synapse(key.pre_is_axon, key.pre, key.post),
+                eager.read_synapse(key.pre_is_axon, key.pre, key.post),
+                "case {case} op {op}: overlay read of touched key"
+            );
+        }
+        assert_eq!(journal.recorded(), expect_recorded, "case {case}: recorded()");
+
+        // exhaustive overlay reads + effective degrees
+        let view = journal.view(base.view());
+        for i in 0..n as u32 {
+            for j in 0..n as u32 {
+                assert_eq!(
+                    view.read_synapse(false, i, j),
+                    eager.read_synapse(false, i, j),
+                    "case {case}: neuron {i}->{j}"
+                );
+            }
+            assert_eq!(view.degree(false, i), eager.neuron_degree(i as usize), "case {case}");
+        }
+        for i in 0..a as u32 {
+            for j in 0..n as u32 {
+                assert_eq!(
+                    view.read_synapse(true, i, j),
+                    eager.read_synapse(true, i, j),
+                    "case {case}: axon {i}->{j}"
+                );
+            }
+            assert_eq!(view.degree(true, i), eager.axon_degree(i as usize), "case {case}");
+        }
+
+        // compaction materialises the exact same CSR the eager edits built
+        let compacted = journal.compact(&base);
+        compacted.validate().unwrap_or_else(|e| panic!("case {case}: compacted invalid: {e}"));
+        assert_same_csr(&format!("case {case}: compacted"), &compacted, &eager);
+
+        // an empty journal compacts to the base verbatim
+        assert_same_csr(
+            &format!("case {case}: identity"),
+            &EditJournal::new().compact(&base),
+            &base,
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// STDP kernel vs a scalar reference model
+// ---------------------------------------------------------------------------
+
+/// Scalar re-implementation of the `crate::plasticity` ordering
+/// contract, built from the network adjacency alone and fed the
+/// engine's observed per-step spike train. Shares only the exported
+/// fixed-point primitives (`decay_trace`/`stdp_delta`/`apply_delta`) —
+/// the trace bookkeeping, in-edge indexing and update ordering are all
+/// independent of the engine's chunked/HBM-indexed implementation.
+struct ScalarStdp {
+    cfg: PlasticityConfig,
+    tr_pre: Vec<i32>,
+    tr_post: Vec<i32>,
+    tr_axon: Vec<i32>,
+    w: BTreeMap<(bool, u32, u32), i16>,
+    out_n: Vec<Vec<u32>>,
+    out_a: Vec<Vec<u32>>,
+    in_edges: Vec<Vec<(bool, u32)>>,
+}
+
+impl ScalarStdp {
+    fn new(net: &Network, cfg: PlasticityConfig) -> Self {
+        let (n, a) = (net.n_neurons(), net.n_axons());
+        let mut w = BTreeMap::new();
+        let mut out_n = vec![Vec::new(); n];
+        let mut out_a = vec![Vec::new(); a];
+        let mut in_edges = vec![Vec::new(); n];
+        for i in 0..n {
+            let (tg, wt) = net.neuron_syns(i);
+            for (&t, &ww) in tg.iter().zip(wt) {
+                w.insert((false, i as u32, t), ww);
+                out_n[i].push(t);
+                in_edges[t as usize].push((false, i as u32));
+            }
+        }
+        for i in 0..a {
+            let (tg, wt) = net.axon_syns(i);
+            for (&t, &ww) in tg.iter().zip(wt) {
+                w.insert((true, i as u32, t), ww);
+                out_a[i].push(t);
+                in_edges[t as usize].push((true, i as u32));
+            }
+        }
+        Self {
+            cfg,
+            tr_pre: vec![0; n],
+            tr_post: vec![0; n],
+            tr_axon: vec![0; a],
+            w,
+            out_n,
+            out_a,
+            in_edges,
+        }
+    }
+
+    /// One step of the ordering contract: neuron traces decay+bump,
+    /// axon traces decay+bump, depression for every fired/delivered
+    /// source's outgoing slots, then potentiation for every fired
+    /// neuron's incoming slots — each delta clamped at application.
+    fn step(&mut self, axon_in: &[u32], fired: &[u32]) {
+        let c = self.cfg;
+        for i in 0..self.tr_pre.len() {
+            let f = fired.binary_search(&(i as u32)).is_ok() as i32;
+            self.tr_pre[i] =
+                (decay_trace(self.tr_pre[i], c.tau_pre) + f * TRACE_ONE).min(TRACE_CEIL);
+            self.tr_post[i] =
+                (decay_trace(self.tr_post[i], c.tau_post) + f * TRACE_ONE).min(TRACE_CEIL);
+        }
+        for tr in self.tr_axon.iter_mut() {
+            *tr = decay_trace(*tr, c.tau_pre);
+        }
+        for &a in axon_in {
+            let tr = &mut self.tr_axon[a as usize];
+            *tr = (*tr + TRACE_ONE).min(TRACE_CEIL);
+        }
+        for &a in axon_in {
+            for &t in &self.out_a[a as usize] {
+                let d = stdp_delta(c.a_minus, self.tr_post[t as usize]);
+                let e = self.w.get_mut(&(true, a, t)).unwrap();
+                *e = apply_delta(*e, -d, &c);
+            }
+        }
+        for &f in fired {
+            for &t in &self.out_n[f as usize] {
+                let d = stdp_delta(c.a_minus, self.tr_post[t as usize]);
+                let e = self.w.get_mut(&(false, f, t)).unwrap();
+                *e = apply_delta(*e, -d, &c);
+            }
+        }
+        for &post in fired {
+            for &(ax, src) in &self.in_edges[post as usize] {
+                let tr = if ax {
+                    self.tr_axon[src as usize]
+                } else {
+                    self.tr_pre[src as usize]
+                };
+                let d = stdp_delta(c.a_plus, tr);
+                let e = self.w.get_mut(&(ax, src, post)).unwrap();
+                *e = apply_delta(*e, d, &c);
+            }
+        }
+    }
+}
+
+#[test]
+fn stdp_kernel_matches_scalar_reference() {
+    let mut rng = Xorshift32::new(0x57D9);
+    let cfg = PlasticityConfig {
+        a_plus: 8,
+        a_minus: 9,
+        tau_pre: 2,
+        tau_post: 3,
+        w_min: -30,
+        w_max: 30,
+    };
+    for case in 0..3 {
+        let n = 40 + rng.below(60) as usize;
+        let a = 3 + rng.below(4) as usize;
+        let net = learning_net(&mut rng, n, a);
+        let schedule: Vec<Vec<u32>> = (0..15)
+            .map(|_| (0..a as u32).filter(|_| rng.chance(0.5)).collect())
+            .collect();
+        let sessions: Vec<(&str, Box<dyn Simulator>)> = vec![
+            (
+                "rust",
+                SimConfig::new(net.clone()).backend(Backend::Rust).learning(cfg).build().unwrap(),
+            ),
+            (
+                "pool",
+                SimConfig::new(net.clone())
+                    .backend(Backend::Pool)
+                    .workers(3)
+                    .chunk_words(1)
+                    .learning(cfg)
+                    .build()
+                    .unwrap(),
+            ),
+        ];
+        for (name, mut sim) in sessions {
+            let mut scalar = ScalarStdp::new(&net, cfg);
+            let mut changed = false;
+            for (t, axons) in schedule.iter().enumerate() {
+                let fired = sim.step(axons).unwrap().fired.to_vec();
+                scalar.step(axons, &fired);
+                for (&(ax, pre, post), &want) in scalar.w.iter() {
+                    let got = sim.read_synapse(ax, pre, post).unwrap();
+                    assert_eq!(
+                        got,
+                        Some(want),
+                        "{name} case {case} t {t}: weight ({ax}, {pre} -> {post})"
+                    );
+                    changed |= net.read_synapse(ax, pre, post) != Some(want);
+                }
+            }
+            assert!(changed, "{name} case {case}: learning never moved a weight");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Determinism: learning runs are invariant under every parallelism knob
+// ---------------------------------------------------------------------------
+
+fn assert_records_identical(tag: &str, a: &RunRecord, b: &RunRecord) {
+    assert_eq!(a.steps, b.steps, "{tag}: steps");
+    assert_eq!(a.spikes, b.spikes, "{tag}: per-step spikes");
+    assert_eq!(a.fired_total, b.fired_total, "{tag}: fired_total");
+    assert_eq!(a.cost.events, b.cost.events, "{tag}: cost events");
+    assert_eq!(a.cost.hbm_rows, b.cost.hbm_rows, "{tag}: cost hbm_rows");
+    assert_eq!(a.cost.cycles, b.cost.cycles, "{tag}: cost cycles");
+}
+
+#[test]
+fn learning_run_is_invariant_across_workers_chunks_and_routes() {
+    let mut rng = Xorshift32::new(0x1EA4);
+    let net = learning_net(&mut rng, 120, 6);
+    let cfg = PlasticityConfig { w_min: -40, w_max: 40, ..PlasticityConfig::default() };
+    let energy = EnergyModel::default();
+    let keys = all_keys(&net);
+    let stimulus: Vec<Vec<u32>> = (0..12)
+        .map(|_| (0..net.n_axons() as u32).filter(|_| rng.chance(0.5)).collect())
+        .collect();
+
+    // serial event-driven reference
+    let (reference, ref_weights) = {
+        let mut sim =
+            SimConfig::new(net.clone()).backend(Backend::Rust).learning(cfg).build().unwrap();
+        let rec = sim.run(&stimulus, &energy).unwrap();
+        (rec, weights_of(sim.as_ref(), &keys))
+    };
+    assert!(reference.fired_total > 0, "test net too quiet to prove anything");
+    let initial: Vec<Option<i16>> =
+        keys.iter().map(|&(ax, p, q)| net.read_synapse(ax, p, q)).collect();
+    assert_ne!(ref_weights, initial, "learning never moved a weight");
+
+    for workers in [1usize, 2, 6] {
+        for route in [RouteGranularity::Core, RouteGranularity::Chunk] {
+            for chunk_words in [0usize, 1] {
+                let mut c = SimConfig::new(net.clone())
+                    .backend(Backend::Pool)
+                    .workers(workers)
+                    .route_granularity(route)
+                    .learning(cfg);
+                if chunk_words > 0 {
+                    c = c.chunk_words(chunk_words);
+                }
+                let mut sim = c.build().unwrap();
+                let tag = format!("pool w={workers} {route:?} cw={chunk_words}");
+                let rec = sim.run(&stimulus, &energy).unwrap();
+                assert_records_identical(&tag, &rec, &reference);
+                assert_eq!(weights_of(sim.as_ref(), &keys), ref_weights, "{tag}: weights");
+            }
+        }
+    }
+}
+
+#[test]
+fn learning_run_is_invariant_across_cluster_workers_and_shard_counts() {
+    let mut rng = Xorshift32::new(0x1EA5);
+    let net = learning_net(&mut rng, 100, 6);
+    let cfg = PlasticityConfig { w_min: -40, w_max: 40, ..PlasticityConfig::default() };
+    let energy = EnergyModel::default();
+    let keys = all_keys(&net);
+    let cap = hiaer_spike::partition::CoreCapacity { max_neurons: 30, max_synapses: usize::MAX };
+    let stimulus: Vec<Vec<u32>> = (0..10)
+        .map(|_| (0..net.n_axons() as u32).filter(|_| rng.chance(0.5)).collect())
+        .collect();
+
+    // in-process cluster reference (1x2x2 = 4 cores, 1 worker)
+    let (cluster_rec, cluster_w, cluster_v) = {
+        let mut sim = SimConfig::new(net.clone())
+            .topology(1, 2, 2)
+            .capacity(cap)
+            .workers(1)
+            .learning(cfg)
+            .build()
+            .unwrap();
+        let rec = sim.run(&stimulus, &energy).unwrap();
+        let w = weights_of(sim.as_ref(), &keys);
+        let v = sim.read_membrane(&(0..net.n_neurons() as u32).collect::<Vec<_>>());
+        (rec, w, v)
+    };
+    assert!(cluster_rec.fired_total > 0, "test net too quiet to prove anything");
+
+    // cluster: worker count and route granularity are pure throughput knobs
+    for workers in [2usize, 5] {
+        for route in [RouteGranularity::Core, RouteGranularity::Chunk] {
+            let mut sim = SimConfig::new(net.clone())
+                .topology(1, 2, 2)
+                .capacity(cap)
+                .workers(workers)
+                .route_granularity(route)
+                .learning(cfg)
+                .build()
+                .unwrap();
+            let tag = format!("cluster w={workers} {route:?}");
+            let rec = sim.run(&stimulus, &energy).unwrap();
+            assert_records_identical(&tag, &rec, &cluster_rec);
+            assert_eq!(weights_of(sim.as_ref(), &keys), cluster_w, "{tag}: weights");
+        }
+    }
+
+    // sharded: the multi-process execution matches the in-process
+    // cluster bit-for-bit (spikes, membranes AND final weights) for
+    // every shard count
+    let all_ids: Vec<u32> = (0..net.n_neurons() as u32).collect();
+    for shards in [1usize, 2, 4] {
+        let mut sim = SimConfig::new(net.clone())
+            .topology(1, 2, 2)
+            .capacity(cap)
+            .workers(2)
+            .shards(shards)
+            .shard_bin(env!("CARGO_BIN_EXE_hiaer-spike"))
+            .learning(cfg)
+            .build()
+            .unwrap_or_else(|e| panic!("sharded s={shards} build: {e}"));
+        let tag = format!("sharded s={shards}");
+        let rec = sim.run(&stimulus, &energy).unwrap();
+        assert_records_identical(&tag, &rec, &cluster_rec);
+        assert_eq!(sim.read_membrane(&all_ids), cluster_v, "{tag}: membranes");
+        assert_eq!(weights_of(sim.as_ref(), &keys), cluster_w, "{tag}: weights");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Facade live edits: next-step behaviour changes, membranes survive
+// ---------------------------------------------------------------------------
+
+/// Two-neuron chain: a0 -(4)-> n0 -(1)-> n1, IF theta 3. n0 fires every
+/// step once charged; n1 charges 1/step through the chain synapse, so
+/// re-weighting that synapse provably changes n1's firing rate.
+fn chain_net() -> Network {
+    let lif = NeuronModel::if_neuron(3);
+    Network::from_adj(
+        vec![lif; 2],
+        &[vec![Synapse { target: 1, weight: 1 }], vec![]],
+        &[vec![Synapse { target: 0, weight: 4 }]],
+        vec![0, 1],
+        9,
+    )
+}
+
+#[test]
+fn live_edits_change_next_step_without_membrane_reset() {
+    for backend in [Backend::Rust, Backend::Pool] {
+        let name = backend.name();
+        let build = || SimConfig::new(chain_net()).backend(backend).build().unwrap();
+        let mut edited = build();
+        let mut frozen = build();
+        for _ in 0..4 {
+            edited.step(&[0]).unwrap();
+            frozen.step(&[0]).unwrap();
+        }
+        let v_before = edited.read_membrane(&[0, 1]);
+        assert_eq!(v_before, frozen.read_membrane(&[0, 1]), "{name}: twins diverged early");
+
+        // in-place weight edit: visible immediately, membranes untouched
+        assert!(edited.write_synapse(false, 0, 1, 3).unwrap(), "{name}: existing synapse");
+        assert_eq!(edited.read_synapse(false, 0, 1).unwrap(), Some(3), "{name}");
+        assert_eq!(edited.read_membrane(&[0, 1]), v_before, "{name}: membranes reset by edit");
+
+        // n1 now charges 3/step instead of 1/step: more n1 spikes
+        let mut edited_n1 = 0;
+        let mut frozen_n1 = 0;
+        for _ in 0..8 {
+            edited_n1 += edited.step(&[0]).unwrap().fired.contains(&1) as u32;
+            frozen_n1 += frozen.step(&[0]).unwrap().fired.contains(&1) as u32;
+        }
+        assert!(
+            edited_n1 > frozen_n1,
+            "{name}: edit had no behavioural effect ({edited_n1} vs {frozen_n1})"
+        );
+
+        // structural edits through the same surface
+        assert!(!edited.write_synapse(true, 0, 1, 5).unwrap(), "{name}: missing synapse");
+        assert!(edited.add_synapse(true, 0, 1, 5).unwrap(), "{name}: created");
+        assert_eq!(edited.read_synapse(true, 0, 1).unwrap(), Some(5), "{name}");
+        assert!(!edited.add_synapse(true, 0, 1, 6).unwrap(), "{name}: upsert re-weighted");
+        assert_eq!(edited.read_synapse(true, 0, 1).unwrap(), Some(6), "{name}");
+        assert_eq!(edited.remove_synapse(true, 0, 1).unwrap(), 1, "{name}: removed");
+        assert_eq!(edited.read_synapse(true, 0, 1).unwrap(), None, "{name}");
+    }
+
+    // the dense golden model runs frozen weights only
+    let mut dense = SimConfig::new(chain_net()).backend(Backend::Dense).build().unwrap();
+    assert!(matches!(dense.write_synapse(false, 0, 1, 3), Err(SimError::Config(_))));
+}
