@@ -24,6 +24,7 @@ from .exceptions import (  # noqa: F401
     HsServerBusy,
     HsSessionError,
     HsStimulusError,
+    HsWireNegotiationError,
 )
 from .network import CRI_network  # noqa: F401
 from .neuron_models import ANN_neuron, LIF_neuron  # noqa: F401

@@ -172,6 +172,10 @@ class RustSessionBackend(SimBackend):
     capacity raises :class:`~hs_api.exceptions.HsServerBusy` from the
     first call.
 
+    ``wire="binary"`` negotiates the binary stimulus/spike wire for
+    ``step_many`` (works over both transports; spike trains are
+    wire-invariant — see the "Binary wire" section of the README).
+
     Weight edits (``write_synapse``) go over the wire as the protocol's
     ``write_synapse`` op: the server patches the compiled engine slot in
     place, so membranes and the step counter survive the edit — the
@@ -186,7 +190,8 @@ class RustSessionBackend(SimBackend):
     def __init__(self, binary: str | None = None,
                  server_args: list[str] | None = None,
                  workers: int | None = None,
-                 address: str | None = None):
+                 address: str | None = None,
+                 wire: str = "json"):
         #: ``"host:port"`` of a shared ``hiaer-spike serve --listen``
         #: server. When set, the backend connects over TCP instead of
         #: spawning a subprocess (``binary``/``server_args`` are ignored
@@ -198,6 +203,14 @@ class RustSessionBackend(SimBackend):
         #: every ``configure`` (None = server default). Spike trains are
         #: worker-count-invariant; this only tunes throughput.
         self._workers = workers
+        #: ``"json"`` (default) or ``"binary"``: the wire encoding for
+        #: ``step_many`` stimulus/spikes. Binary skips per-spike string
+        #: formatting/parsing on both sides; spike trains are
+        #: wire-invariant (pinned by parity tests). Against an old
+        #: server ``"binary"`` raises
+        #: :class:`~hs_api.exceptions.HsWireNegotiationError` at
+        #: configure time.
+        self._wire = wire
         self._client: SessionClient | None = None
         self._hsn_path: str | None = None
         self._network = None
@@ -206,7 +219,7 @@ class RustSessionBackend(SimBackend):
         if self._address is not None:
             transport = TcpTransport(self._address)
             try:
-                return SessionClient(transport)
+                return SessionClient(transport, wire=self._wire)
             except Exception:
                 transport.close()  # busy/refused greeting: free the socket
                 raise
@@ -219,7 +232,7 @@ class RustSessionBackend(SimBackend):
             )
         transport = SubprocessTransport(binary, self._server_args)
         try:
-            return SessionClient(transport)
+            return SessionClient(transport, wire=self._wire)
         except Exception:
             transport.close()  # bad/failed greeting: don't orphan the child
             raise

@@ -32,6 +32,13 @@ class HsProtocolError(HsError):
     batch, protocol-version mismatch, or the server closed the stream."""
 
 
+class HsWireNegotiationError(HsProtocolError):
+    """``wire="binary"`` was requested but the server did not
+    acknowledge it — an old server ignores unknown ``configure`` fields
+    and omits the ``wire`` echo from its response. Reconnect with
+    ``wire="json"`` (the default) to talk to that server."""
+
+
 class HsSessionError(HsError):
     """Session-level failure: no configured simulator, bad network file,
     an engine error inside the server, or an eviction (``evicted``)."""

@@ -11,7 +11,20 @@ The transport is pluggable: :class:`SubprocessTransport` speaks to a
 spawned ``hiaer-spike serve-session`` process; :class:`TcpTransport`
 connects to a shared ``hiaer-spike serve --listen`` server; tests
 inject fakes with the same three methods (``send_line`` / ``recv_line``
-/ ``close``).
+/ ``close``) — plus ``send_bytes`` / ``recv_exact`` when the binary
+wire is in play.
+
+**Binary wire (wire v2).** ``SessionClient(transport, wire="binary")``
+asks the server — in the ``configure`` request — to carry ``step_many``
+stimulus and spikes as length-prefixed binary frames instead of JSON
+lines: no per-spike integer formatting/parsing on either side. The
+server echoes ``"wire": "binary"`` in the configure response; an old
+server silently ignores the field, which the client detects (missing
+echo) and reports as
+:class:`~hs_api.exceptions.HsWireNegotiationError`. Everything except
+``step_many`` — and every error, on either wire — stays line-delimited
+JSON, so the binary wire is bit-identical by construction: same
+requests, same spike trains, different encoding.
 """
 
 from __future__ import annotations
@@ -20,12 +33,27 @@ import json
 import os
 import shutil
 import socket
+import struct
 import subprocess
 import time
 
-from .exceptions import HsBackendUnavailable, HsProtocolError, error_from_code
+from .exceptions import (
+    HsBackendUnavailable,
+    HsProtocolError,
+    HsStimulusError,
+    HsWireNegotiationError,
+    error_from_code,
+)
 
 PROTOCOL_VERSION = 1
+
+#: Binary wire-v2 framing (rust/src/sim/frames.rs): a frame is
+#: ``0x00 sentinel | u32-LE length | u8 kind | payload`` where the
+#: length counts the kind byte plus the payload. JSON lines never start
+#: with NUL, so one peeked byte routes each direction of the stream.
+WIRE_SENTINEL = b"\x00"
+FRAME_STIM = 0x10  # client -> server: u32 n_steps, n x {u32 n, n x u32 axon_id}
+FRAME_SPIKES = 0x90  # server -> client: u64 fired_total, u32 n_steps, rows
 
 #: Server-side cap on steps per `step_many` request
 #: (rust/src/sim/session.rs MAX_BATCH_STEPS); the client transparently
@@ -57,8 +85,10 @@ def find_server_binary() -> str | None:
 
 
 class SubprocessTransport:
-    """Line transport over a spawned ``hiaer-spike serve-session``
-    subprocess (stdin/stdout pipes, line-buffered text mode)."""
+    """Line + frame transport over a spawned ``hiaer-spike
+    serve-session`` subprocess. The pipes are byte streams (binary
+    frames and JSON lines share one stdout), but the line API stays
+    ``str``-in/``str``-out."""
 
     def __init__(self, binary: str, extra_args: list[str] | None = None):
         argv = [binary, "serve-session", *(extra_args or [])]
@@ -68,8 +98,6 @@ class SubprocessTransport:
                 stdin=subprocess.PIPE,
                 stdout=subprocess.PIPE,
                 stderr=subprocess.PIPE,
-                text=True,
-                bufsize=1,
             )
         except OSError as e:
             raise HsBackendUnavailable(
@@ -77,8 +105,11 @@ class SubprocessTransport:
             ) from e
 
     def send_line(self, line: str) -> None:
+        self.send_bytes(line.encode("utf-8") + b"\n")
+
+    def send_bytes(self, data: bytes) -> None:
         try:
-            self.proc.stdin.write(line + "\n")
+            self.proc.stdin.write(data)
             self.proc.stdin.flush()
         except (BrokenPipeError, ValueError) as e:
             raise HsProtocolError(f"server pipe closed: {e}", code="closed") from e
@@ -90,7 +121,8 @@ class SubprocessTransport:
             # flag error) instead of an opaque "closed"
             detail = ""
             try:
-                err = self.proc.stderr.read() if self.proc.stderr else ""
+                err = self.proc.stderr.read() if self.proc.stderr else b""
+                err = err.decode("utf-8", errors="replace")
                 if err.strip():
                     detail = f" (server stderr: {err.strip()[-500:]})"
             except (OSError, ValueError):
@@ -98,7 +130,22 @@ class SubprocessTransport:
             raise HsProtocolError(
                 f"server closed the connection{detail}", code="closed"
             )
-        return line.rstrip("\n")
+        return line.decode("utf-8").rstrip("\n")
+
+    def recv_exact(self, n: int) -> bytes:
+        """Exactly ``n`` bytes from the server, or a typed error on EOF
+        mid-read (a truncated frame is never silently padded)."""
+        chunks = []
+        remaining = n
+        while remaining > 0:
+            chunk = self.proc.stdout.read(remaining)
+            if not chunk:
+                raise HsProtocolError(
+                    f"server closed mid-frame ({n - remaining}/{n} bytes)", code="closed"
+                )
+            chunks.append(chunk)
+            remaining -= len(chunk)
+        return b"".join(chunks)
 
     def close(self) -> None:
         for pipe in (self.proc.stdin, self.proc.stdout, self.proc.stderr):
@@ -159,12 +206,17 @@ class TcpTransport:
                 code="backend_unavailable",
             )
         self._sock.settimeout(timeout_s)  # None = block indefinitely
-        self._rfile = self._sock.makefile("r", encoding="utf-8", newline="\n")
-        self._wfile = self._sock.makefile("w", encoding="utf-8", newline="\n")
+        # byte-mode file objects: binary frames and JSON lines share the
+        # one stream, so decoding happens per-line, not per-stream
+        self._rfile = self._sock.makefile("rb")
+        self._wfile = self._sock.makefile("wb")
 
     def send_line(self, line: str) -> None:
+        self.send_bytes(line.encode("utf-8") + b"\n")
+
+    def send_bytes(self, data: bytes) -> None:
         try:
-            self._wfile.write(line + "\n")
+            self._wfile.write(data)
             self._wfile.flush()
         except (OSError, ValueError) as e:
             raise HsProtocolError(f"server connection closed: {e}", code="closed") from e
@@ -180,7 +232,30 @@ class TcpTransport:
             raise HsProtocolError(f"server connection closed: {e}", code="closed") from e
         if not line:
             raise HsProtocolError("server closed the connection", code="closed")
-        return line.rstrip("\n")
+        return line.decode("utf-8").rstrip("\n")
+
+    def recv_exact(self, n: int) -> bytes:
+        """Exactly ``n`` bytes, or a typed error on timeout/EOF mid-read."""
+        chunks = []
+        remaining = n
+        while remaining > 0:
+            try:
+                chunk = self._rfile.read(remaining)
+            except socket.timeout as e:
+                raise HsProtocolError(
+                    "timed out waiting for server frame bytes", code="closed"
+                ) from e
+            except (OSError, ValueError) as e:
+                raise HsProtocolError(
+                    f"server connection closed: {e}", code="closed"
+                ) from e
+            if not chunk:
+                raise HsProtocolError(
+                    f"server closed mid-frame ({n - remaining}/{n} bytes)", code="closed"
+                )
+            chunks.append(chunk)
+            remaining -= len(chunk)
+        return b"".join(chunks)
 
     def close(self) -> None:
         for f in (self._wfile, self._rfile):
@@ -198,17 +273,76 @@ class TcpTransport:
             pass
 
 
+def _pack_stim_frame(rows: list[list[int]]) -> bytes:
+    """One complete STIM wire frame (sentinel + length + kind +
+    payload) for a validated stimulus batch — ``struct``-packed, no
+    per-id string formatting."""
+    parts = [struct.pack("<I", len(rows))]
+    for row in rows:
+        parts.append(struct.pack("<I", len(row)))
+        if row:
+            parts.append(struct.pack(f"<{len(row)}I", *row))
+    payload = b"".join(parts)
+    return (
+        WIRE_SENTINEL
+        + struct.pack("<I", len(payload) + 1)
+        + bytes([FRAME_STIM])
+        + payload
+    )
+
+
+def _unpack_spikes_payload(payload: bytes) -> tuple[list[list[int]], int]:
+    """Decode a SPIKES payload to (per-step output-id rows,
+    fired_total); trailing or missing bytes are a protocol error."""
+    if len(payload) < 12:
+        raise HsProtocolError(f"SPIKES payload truncated ({len(payload)} bytes)")
+    fired_total, n_steps = struct.unpack_from("<QI", payload, 0)
+    off = 12
+    rows: list[list[int]] = []
+    for _ in range(n_steps):
+        if off + 4 > len(payload):
+            raise HsProtocolError("SPIKES payload truncated mid-row")
+        (n,) = struct.unpack_from("<I", payload, off)
+        off += 4
+        if off + 4 * n > len(payload):
+            raise HsProtocolError("SPIKES payload truncated mid-row")
+        rows.append(list(struct.unpack_from(f"<{n}I", payload, off)))
+        off += 4 * n
+    if off != len(payload):
+        raise HsProtocolError(
+            f"SPIKES payload has {len(payload) - off} trailing byte(s)"
+        )
+    return rows, fired_total
+
+
 class SessionClient:
     """Synchronous request/response client for one protocol session.
 
     ``transport`` needs ``send_line`` / ``recv_line`` / ``close``. On
     construction the client consumes the server's ``hello`` greeting and
     checks the protocol version (disable with ``expect_hello=False`` for
-    transports that do not greet)."""
+    transports that do not greet).
 
-    def __init__(self, transport, expect_hello: bool = True):
+    ``wire="binary"`` requests the binary stimulus/spike wire at every
+    ``configure`` (the transport additionally needs ``send_bytes`` /
+    ``recv_exact``). Negotiation failure — an old server that does not
+    echo the ``wire`` field — raises
+    :class:`~hs_api.exceptions.HsWireNegotiationError` from
+    :meth:`configure`."""
+
+    def __init__(self, transport, expect_hello: bool = True, wire: str = "json"):
+        if wire not in ("json", "binary"):
+            raise ValueError(f"wire must be 'json' or 'binary', not {wire!r}")
         self.transport = transport
         self.server_backend: str | None = None
+        self.wire = wire
+        #: True only after the server acknowledged ``"wire":"binary"``
+        #: for the current configure epoch.
+        self._wire_binary = False
+        #: axon count of the configured net (from the configure
+        #: response) — lets the client validate whole schedules before
+        #: sending anything, so multi-chunk ``step_many`` stays atomic.
+        self._n_axons: int | None = None
         if expect_hello:
             hello = self._recv()
             if not hello.get("ok") and hello.get("code"):
@@ -276,7 +410,11 @@ class SessionClient:
         The response dict includes the server's cold-start breakdown:
         ``load_ms`` (network load — mmap + validate for ``.hsn`` v2,
         full parse for v1), ``compile_ms`` (partition + HBM compile)
-        and ``net_bytes`` (on-disk file size)."""
+        and ``net_bytes`` (on-disk file size).
+
+        With ``wire="binary"`` on the client, this request also carries
+        the wire negotiation; a server that does not acknowledge it
+        raises :class:`~hs_api.exceptions.HsWireNegotiationError`."""
         fields = {"net": net_path}
         if seed is not None:
             fields["seed"] = int(seed)
@@ -286,7 +424,20 @@ class SessionClient:
             fields["shards"] = int(shards)
         if learning is not None:
             fields["learning"] = {k: int(v) for k, v in dict(learning).items()}
-        return self.request("configure", **fields)
+        if self.wire == "binary":
+            fields["wire"] = "binary"
+        self._wire_binary = False  # each configure re-negotiates
+        resp = self.request("configure", **fields)
+        if self.wire == "binary":
+            if resp.get("wire") != "binary":
+                raise HsWireNegotiationError(
+                    "server did not acknowledge the binary wire (response "
+                    f"echoed wire={resp.get('wire')!r}; old servers omit the "
+                    "field entirely) — reconnect with wire='json'"
+                )
+            self._wire_binary = True
+        self._n_axons = resp.get("axons")
+        return resp
 
     def step(self, axons: list[int]) -> list[int]:
         """One tick; returns fired output-neuron ids (ascending)."""
@@ -296,16 +447,62 @@ class SessionClient:
         """A whole stimulus batch in one round trip (split transparently
         into <= MAX_BATCH_STEPS-step requests for longer schedules, so
         schedules that run locally run over the wire too); returns the
-        per-step output-spike lists. Each request is validated atomically
-        server-side; with multiple chunks, earlier chunks may have
-        executed when a later chunk's stimulus is rejected."""
+        per-step output-spike lists.
+
+        The whole schedule is range-checked against the configured
+        net's axon count *before the first chunk is sent*, so a bad id
+        anywhere — including the last chunk of a multi-chunk schedule —
+        executes zero steps, matching the server's own atomic per-request
+        validation. On the negotiated binary wire each chunk travels as
+        one struct-packed STIM frame and comes back as a SPIKES frame."""
         rows = [[int(a) for a in row] for row in batch]
+        # atomicity across chunks: the server validates each *request*
+        # atomically, but once the client has split a long schedule,
+        # only client-side whole-schedule validation stops chunk 1 from
+        # executing when chunk 2 holds a bad id
+        if self._n_axons is not None:
+            for row in rows:
+                for a in row:
+                    if not (0 <= a < self._n_axons):
+                        raise HsStimulusError(
+                            f"axon id {a} out of range ({self._n_axons} axons); "
+                            "no steps executed",
+                            code="stimulus",
+                        )
         spikes: list[list[int]] = []
         for i in range(0, len(rows), MAX_BATCH_STEPS):
-            spikes.extend(
-                self.request("step_many", batch=rows[i:i + MAX_BATCH_STEPS])["spikes"]
-            )
+            chunk = rows[i:i + MAX_BATCH_STEPS]
+            if self._wire_binary:
+                spikes.extend(self._step_many_binary(chunk))
+            else:
+                spikes.extend(self.request("step_many", batch=chunk)["spikes"])
         return spikes
+
+    def _step_many_binary(self, rows: list[list[int]]) -> list[list[int]]:
+        """One STIM frame out, one SPIKES frame (or a JSON error line)
+        back. Errors are always JSON lines, on either wire."""
+        self.transport.send_bytes(_pack_stim_frame(rows))
+        first = self.transport.recv_exact(1)
+        if first != WIRE_SENTINEL:
+            # a JSON error line: the peeked byte is its first character
+            line = first.decode("utf-8") + self.transport.recv_line()
+            try:
+                resp = json.loads(line)
+            except ValueError as e:
+                raise HsProtocolError(f"unparseable server line {line!r}: {e}") from e
+            raise error_from_code(
+                resp.get("code", "engine"),
+                resp.get("error", f"step_many failed: {resp!r}"),
+            )
+        (frame_len,) = struct.unpack("<I", self.transport.recv_exact(4))
+        if frame_len < 1:
+            raise HsProtocolError(f"bad server frame length {frame_len}")
+        body = self.transport.recv_exact(frame_len)
+        kind, payload = body[0], body[1:]
+        if kind != FRAME_SPIKES:
+            raise HsProtocolError(f"expected SPIKES frame, got kind 0x{kind:02x}")
+        rows_out, _fired_total = _unpack_spikes_payload(payload)
+        return rows_out
 
     def read_membrane(self, ids: list[int]) -> list[int]:
         return self.request("read_membrane", ids=[int(i) for i in ids])["v"]

@@ -1,0 +1,231 @@
+"""Client-side tests for the binary stimulus/spike wire (wire v2):
+negotiation at ``configure`` (including the old-server fallback path),
+struct-level STIM packing / SPIKES unpacking, JSON error lines on the
+binary wire, and the chunked ``step_many`` atomicity regression — a bad
+axon id in the *last* chunk of a multi-chunk schedule must execute zero
+steps.
+
+Everything runs against scripted fakes — no Rust binary required; the
+server half (and the stdio/TCP parity pins) lives in
+``rust/src/sim/session.rs`` and ``rust/tests/serve_tcp.rs``."""
+
+import json
+import struct
+
+import pytest
+
+import hs_api.session as session_mod
+from hs_api import (
+    HsProtocolError,
+    HsStimulusError,
+    HsWireNegotiationError,
+    SessionClient,
+)
+from hs_api.session import (
+    FRAME_SPIKES,
+    FRAME_STIM,
+    WIRE_SENTINEL,
+    _pack_stim_frame,
+    _unpack_spikes_payload,
+)
+
+HELLO = {"ok": True, "op": "hello", "protocol": 1, "backend": "rust"}
+
+CONFIGURED_BINARY = {
+    "ok": True, "op": "configure", "protocol": 1, "backend": "rust",
+    "neurons": 4, "axons": 4, "outputs": 2, "wire": "binary",
+}
+
+
+class FakeWireTransport:
+    """Scripted byte-stream transport: one response buffer that JSON
+    lines and binary frames are both consumed from, with every send
+    recorded."""
+
+    def __init__(self, script: bytes = b"", hello: bool = True):
+        if hello:
+            script = (json.dumps(HELLO) + "\n").encode("utf-8") + script
+        self.buf = script
+        self.sent_lines = []
+        self.sent_bytes = []
+        self.closed = False
+
+    def feed(self, more: bytes) -> None:
+        self.buf += more
+
+    def feed_line(self, resp: dict) -> None:
+        self.buf += (json.dumps(resp) + "\n").encode("utf-8")
+
+    def send_line(self, line):
+        self.sent_lines.append(line)
+
+    def send_bytes(self, data):
+        self.sent_bytes.append(data)
+
+    def recv_line(self):
+        i = self.buf.find(b"\n")
+        if i < 0:
+            raise HsProtocolError("server closed the connection", code="closed")
+        line, self.buf = self.buf[:i], self.buf[i + 1:]
+        return line.decode("utf-8")
+
+    def recv_exact(self, n):
+        if len(self.buf) < n:
+            raise HsProtocolError("server closed mid-frame", code="closed")
+        out, self.buf = self.buf[:n], self.buf[n:]
+        return out
+
+    def close(self):
+        self.closed = True
+
+
+def spikes_reply(rows, fired_total=0) -> bytes:
+    """A complete server SPIKES wire frame for the given output rows."""
+    payload = struct.pack("<QI", fired_total, len(rows))
+    for r in rows:
+        payload += struct.pack("<I", len(r))
+        if r:
+            payload += struct.pack(f"<{len(r)}I", *r)
+    return WIRE_SENTINEL + struct.pack("<I", len(payload) + 1) + bytes([FRAME_SPIKES]) + payload
+
+
+def binary_client(t: FakeWireTransport) -> SessionClient:
+    t.feed_line(CONFIGURED_BINARY)
+    c = SessionClient(t, wire="binary")
+    c.configure("net.hsn")
+    return c
+
+
+# ------------------------------------------------------------ negotiation
+
+
+def test_configure_sends_wire_field_and_honours_echo():
+    t = FakeWireTransport()
+    c = binary_client(t)
+    req = json.loads(t.sent_lines[0])
+    assert req["op"] == "configure"
+    assert req["wire"] == "binary"
+    assert c._wire_binary is True
+    assert c._n_axons == 4
+
+
+def test_json_wire_default_sends_no_wire_field():
+    t = FakeWireTransport()
+    t.feed_line({**CONFIGURED_BINARY, "wire": "json"})
+    c = SessionClient(t)
+    c.configure("net.hsn")
+    assert "wire" not in json.loads(t.sent_lines[0])
+    assert c._wire_binary is False
+
+
+def test_old_server_missing_echo_raises_negotiation_error():
+    # an old server ignores unknown configure fields: ok response, no echo
+    old_style = {k: v for k, v in CONFIGURED_BINARY.items() if k != "wire"}
+    t = FakeWireTransport()
+    t.feed_line(old_style)
+    c = SessionClient(t, wire="binary")
+    with pytest.raises(HsWireNegotiationError, match="did not acknowledge"):
+        c.configure("net.hsn")
+    # the typed error is still a protocol error for coarse handlers
+    assert issubclass(HsWireNegotiationError, HsProtocolError)
+    assert c._wire_binary is False, "negotiation failure must not half-enable binary"
+
+
+def test_wire_argument_is_validated():
+    with pytest.raises(ValueError, match="wire"):
+        SessionClient(FakeWireTransport(), wire="carrier-pigeon")
+
+
+# ------------------------------------------------------- packing / framing
+
+
+def test_stim_frame_layout_is_exact():
+    frame = _pack_stim_frame([[0, 1], [], [7]])
+    payload = (
+        struct.pack("<I", 3)
+        + struct.pack("<I", 2) + struct.pack("<2I", 0, 1)
+        + struct.pack("<I", 0)
+        + struct.pack("<I", 1) + struct.pack("<I", 7)
+    )
+    assert frame == WIRE_SENTINEL + struct.pack("<I", len(payload) + 1) + bytes([FRAME_STIM]) + payload
+
+
+def test_step_many_binary_round_trip():
+    t = FakeWireTransport()
+    c = binary_client(t)
+    t.feed(spikes_reply([[1], [], [0, 1]], fired_total=5))
+    assert c.step_many([[0, 1], [2], []]) == [[1], [], [0, 1]]
+    # the stimulus travelled as one packed frame, not a JSON line
+    assert t.sent_bytes == [_pack_stim_frame([[0, 1], [2], []])]
+    assert len(t.sent_lines) == 1, "only the configure line goes as JSON"
+
+
+def test_binary_error_reply_is_a_typed_json_line():
+    t = FakeWireTransport()
+    c = binary_client(t)
+    # errors are ALWAYS JSON lines, even on the binary wire
+    t.feed_line({"ok": False, "code": "quota", "error": "batch too long"})
+    from hs_api import HsQuotaError
+
+    with pytest.raises(HsQuotaError):
+        c.step_many([[0]])
+
+
+def test_unexpected_reply_kind_is_protocol_error():
+    t = FakeWireTransport()
+    c = binary_client(t)
+    bad = WIRE_SENTINEL + struct.pack("<I", 2) + bytes([0x77, 0x00])
+    t.feed(bad)
+    with pytest.raises(HsProtocolError, match="0x77"):
+        c.step_many([[0]])
+
+
+def test_spikes_unpack_rejects_truncation_and_trailers():
+    good = struct.pack("<QI", 2, 1) + struct.pack("<I", 2) + struct.pack("<2I", 3, 9)
+    assert _unpack_spikes_payload(good) == ([[3, 9]], 2)
+    with pytest.raises(HsProtocolError, match="truncated"):
+        _unpack_spikes_payload(good[:-1])
+    with pytest.raises(HsProtocolError, match="trailing"):
+        _unpack_spikes_payload(good + b"\x00")
+    with pytest.raises(HsProtocolError, match="truncated"):
+        _unpack_spikes_payload(b"\x00" * 4)  # shorter than the fixed header
+
+
+# ------------------------------------------- chunked step_many atomicity
+
+
+def test_bad_id_in_last_chunk_executes_zero_steps(monkeypatch):
+    """Regression: the client splits long schedules into
+    MAX_BATCH_STEPS-sized requests; a bad axon id in the *last* chunk
+    used to surface only after earlier chunks had already executed.
+    Whole-schedule validation must reject before anything is sent."""
+    monkeypatch.setattr(session_mod, "MAX_BATCH_STEPS", 2)
+    t = FakeWireTransport()
+    t.feed_line({**CONFIGURED_BINARY, "wire": "json"})
+    c = SessionClient(t)
+    c.configure("net.hsn")
+    sent_before = len(t.sent_lines)
+    with pytest.raises(HsStimulusError, match="axon id 99") as ei:
+        c.step_many([[0], [1], [99]])  # 2 chunks; bad id in chunk 2
+    assert ei.value.code == "stimulus"
+    assert len(t.sent_lines) == sent_before, "no chunk may reach the wire"
+    assert t.sent_bytes == []
+
+
+def test_bad_id_in_last_chunk_executes_zero_steps_binary(monkeypatch):
+    monkeypatch.setattr(session_mod, "MAX_BATCH_STEPS", 2)
+    t = FakeWireTransport()
+    c = binary_client(t)
+    with pytest.raises(HsStimulusError):
+        c.step_many([[0], [1], [99]])
+    assert t.sent_bytes == [], "no frame may reach the wire"
+
+
+def test_in_range_schedule_still_chunks(monkeypatch):
+    monkeypatch.setattr(session_mod, "MAX_BATCH_STEPS", 2)
+    t = FakeWireTransport()
+    c = binary_client(t)
+    t.feed(spikes_reply([[0], [1]]))
+    t.feed(spikes_reply([[]]))
+    assert c.step_many([[0], [1], [2]]) == [[0], [1], []]
+    assert len(t.sent_bytes) == 2, "3 steps at cap 2 = 2 STIM frames"

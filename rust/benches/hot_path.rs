@@ -18,7 +18,10 @@
 //!    workers over a 4-core topology, binary AER frames over pipes);
 //!    since PR 9 it also carries the runtime-plasticity numbers
 //!    (STDP-enabled steps/s vs frozen weights, and the mean in-place
-//!    `write_synapse` live-edit latency);
+//!    `write_synapse` live-edit latency); since PR 10 it also carries
+//!    the serving tier's binary-wire comparison (`step_many` over JSON
+//!    vs negotiated STIM/SPIKES frames on a marshalling-heavy dense
+//!    stimulus, `serve_wire_speedup` asserted > 1.0);
 //! 1. event-driven core engine steps/s across network sizes (rust
 //!    backend), synaptic events/s;
 //! 2. dense software-simulator baseline (the paper's Fig-8 CPU
@@ -420,6 +423,129 @@ fn main() {
     };
     let serve1_rate = bench_serve(1);
     let serve4_rate = bench_serve(4);
+
+    // binary wire (PR 10): the same dense schedule over the JSON wire
+    // and the negotiated binary STIM/SPIKES wire, against the same
+    // server. A marshalling-heavy workload — tiny net (per-step compute
+    // negligible), every axon fired every step — so the wire encoding
+    // dominates the round trip; timed end to end (client encode +
+    // server decode/execute/encode + client decode), best of 3
+    // exchanges per wire, bit-identical spike trains asserted.
+    use hiaer_spike::sim::frames;
+    let wire_net = make_net(256, 4, 42, false);
+    let wire_axons = wire_net.n_axons();
+    let wire_hsn = std::env::temp_dir().join(format!("hotpath_wire_{}.hsn", std::process::id()));
+    write_hsn(&wire_net, &wire_hsn).unwrap();
+    let wire_steps = 2048usize;
+    let wire_batch: Vec<Vec<u32>> =
+        (0..wire_steps).map(|_| (0..wire_axons as u32).collect()).collect();
+
+    let (json_wire_rate, json_rows, json_fired) = {
+        use std::io::{BufRead, Write};
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let mut w = stream;
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap(); // hello
+        writeln!(w, r#"{{"op":"configure","net":"{}","seed":7}}"#, wire_hsn.display()).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains(r#""ok":true"#), "configure failed: {line}");
+        let mut best_dt = f64::INFINITY;
+        let mut first: Option<(Vec<Vec<i64>>, i64)> = None;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            let rows: Vec<String> = wire_batch
+                .iter()
+                .map(|r| {
+                    let ids: Vec<String> = r.iter().map(u32::to_string).collect();
+                    format!("[{}]", ids.join(","))
+                })
+                .collect();
+            writeln!(w, r#"{{"op":"step_many","batch":[{}]}}"#, rows.join(",")).unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(line.trim_end()).unwrap();
+            assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "step_many failed: {line}");
+            let got: Vec<Vec<i64>> = j
+                .get("spikes")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .map(|r| r.int_vec().unwrap())
+                .collect();
+            let fired = j.get("fired_total").and_then(Json::as_i64).unwrap();
+            best_dt = best_dt.min(t0.elapsed().as_secs_f64());
+            first.get_or_insert((got, fired));
+        }
+        writeln!(w, r#"{{"op":"shutdown"}}"#).unwrap();
+        line.clear();
+        let _ = reader.read_line(&mut line);
+        let (rows, fired) = first.unwrap();
+        (wire_steps as f64 / best_dt, rows, fired)
+    };
+
+    let (binary_wire_rate, bin_rows, bin_fired) = {
+        use std::io::{BufRead, Read, Write};
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let mut w = stream;
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap(); // hello
+        writeln!(
+            w,
+            r#"{{"op":"configure","net":"{}","seed":7,"wire":"binary"}}"#,
+            wire_hsn.display()
+        )
+        .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(
+            line.contains(r#""wire":"binary""#),
+            "binary wire not negotiated: {line}"
+        );
+        let mut best_dt = f64::INFINITY;
+        let mut first: Option<(Vec<Vec<u32>>, u64)> = None;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            let frame = frames::encode_wire_frame(
+                frames::FRAME_STIM,
+                &frames::encode_stim(&wire_batch),
+            )
+            .unwrap();
+            w.write_all(&frame).unwrap();
+            w.flush().unwrap();
+            let mut head = [0u8; 5];
+            reader.read_exact(&mut head).unwrap();
+            assert_eq!(head[0], frames::WIRE_SENTINEL, "expected a SPIKES frame");
+            let len = u32::from_le_bytes([head[1], head[2], head[3], head[4]]) as usize;
+            let mut body = vec![0u8; len];
+            reader.read_exact(&mut body).unwrap();
+            assert_eq!(body[0], frames::FRAME_SPIKES);
+            let (rows, fired) = frames::decode_spikes(&body[1..]).unwrap();
+            best_dt = best_dt.min(t0.elapsed().as_secs_f64());
+            first.get_or_insert((rows, fired));
+        }
+        writeln!(w, r#"{{"op":"shutdown"}}"#).unwrap();
+        line.clear();
+        let _ = reader.read_line(&mut line);
+        let (rows, fired) = first.unwrap();
+        (wire_steps as f64 / best_dt, rows, fired)
+    };
+    let bin_rows_i64: Vec<Vec<i64>> =
+        bin_rows.iter().map(|r| r.iter().map(|&s| s as i64).collect()).collect();
+    assert_eq!(bin_rows_i64, json_rows, "binary and JSON wires must be bit-identical");
+    assert_eq!(bin_fired as i64, json_fired, "fired_total must match across wires");
+    let serve_wire_speedup = binary_wire_rate / json_wire_rate;
+    assert!(
+        serve_wire_speedup > 1.0,
+        "binary wire ({binary_wire_rate:.0} steps/s) must beat JSON \
+         ({json_wire_rate:.0} steps/s) on the marshalling-heavy workload"
+    );
+    let _ = std::fs::remove_file(&wire_hsn);
+
     shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
     server.join().unwrap().unwrap();
     let _ = std::fs::remove_file(&hsn);
@@ -427,6 +553,10 @@ fn main() {
     println!(
         "  serve tier      : {serve1_rate:>10.0} steps/s 1 session, \
          {serve4_rate:>10.0} aggregate over 4 sessions ({serve_scaleup:.2}x, n = {sn})"
+    );
+    println!(
+        "  binary wire     : {json_wire_rate:>10.0} steps/s JSON, \
+         {binary_wire_rate:>10.0} binary ({serve_wire_speedup:.2}x, dense stimulus)"
     );
 
     // cold start: serving the same headline net from disk — the v1
@@ -584,6 +714,12 @@ fn main() {
         ("serve_sessions1_steps_per_s", Json::Num(serve1_rate)),
         ("serve_sessions4_steps_per_s", Json::Num(serve4_rate)),
         ("serve_scaleup", Json::Num(serve_scaleup)),
+        // binary wire (PR 10): the dense-stimulus schedule over JSON vs
+        // negotiated STIM/SPIKES frames (n = 256 marshalling-heavy
+        // workload, best of 3); asserted > 1.0 above
+        ("serve_json_steps_per_s", Json::Num(json_wire_rate)),
+        ("serve_binary_steps_per_s", Json::Num(binary_wire_rate)),
+        ("serve_wire_speedup", Json::Num(serve_wire_speedup)),
         // cold start on the headline net: v1 per-synapse parse vs the
         // zero-copy v2 mmap+validate, compile from the mapped view,
         // and the process peak RSS (VmHWM, MB) at measurement time

@@ -90,7 +90,7 @@
 //! poll, then `SIGKILL`. `rust/tests/shard_faults.rs` injects the
 //! failures.
 
-use std::io::{self, Read, Write};
+use std::io::{self, Write};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -107,12 +107,19 @@ use crate::hbm::{AccessCounters, SlotStrategy};
 use crate::model_fmt::write_hsn;
 use crate::partition::{ClusterTopology, CoreCapacity, Partition};
 use crate::router::{split_network, FabricModel, HiaerRouter};
+use crate::sim::frames::{
+    put_i32, put_u32, put_u64, read_frame, write_frame, Payload, MAX_FRAME_BYTES,
+};
 use crate::sim::{
     check_axons, CostSummary, NetSource, SimError, SimOptions, Simulator, StepResult,
 };
 use crate::util::cli::Args;
 
-// ---- frame codec ----------------------------------------------------------
+// ---- frame kinds ----------------------------------------------------------
+//
+// The `len | kind | payload` codec itself lives in [`crate::sim::frames`]
+// (shared with the session protocol's binary wire since PR 10); only the
+// shard-pipe kind space is defined here.
 
 /// Parent → shard frame kinds.
 pub(crate) const K_UPDATE: u8 = 0x01;
@@ -138,105 +145,6 @@ pub(crate) const K_ACK: u8 = 0x84;
 pub(crate) const K_COSTR: u8 = 0x86;
 pub(crate) const K_EDITR: u8 = 0x87;
 pub(crate) const K_ERR: u8 = 0xEE;
-
-/// Upper bound on one frame's payload — a corrupted length prefix must
-/// not drive a multi-GiB allocation. 256 MiB comfortably fits a
-/// whole-net burst (4 bytes/event ≈ 67M events).
-const MAX_FRAME_BYTES: u32 = 256 * 1024 * 1024;
-
-/// Write one `len | kind | payload` frame. The caller flushes.
-fn write_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> io::Result<()> {
-    let len = 1u32
-        .checked_add(payload.len() as u32)
-        .filter(|&l| l <= MAX_FRAME_BYTES)
-        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "frame too large"))?;
-    w.write_all(&len.to_le_bytes())?;
-    w.write_all(&[kind])?;
-    w.write_all(payload)
-}
-
-/// Read one frame. `Ok(None)` on clean EOF **at the length prefix**
-/// (the peer closed between frames); EOF mid-frame is an error.
-fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<(u8, Vec<u8>)>> {
-    let mut len_buf = [0u8; 4];
-    // manual first-byte read so EOF-between-frames is distinguishable
-    match r.read(&mut len_buf[..1])? {
-        0 => return Ok(None),
-        _ => r.read_exact(&mut len_buf[1..])?,
-    }
-    let len = u32::from_le_bytes(len_buf);
-    if len == 0 || len > MAX_FRAME_BYTES {
-        return Err(io::Error::new(
-            io::ErrorKind::InvalidData,
-            format!("bad frame length {len}"),
-        ));
-    }
-    let mut kind = [0u8; 1];
-    r.read_exact(&mut kind)?;
-    let mut payload = vec![0u8; len as usize - 1];
-    r.read_exact(&mut payload)?;
-    Ok(Some((kind[0], payload)))
-}
-
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_i32(buf: &mut Vec<u8>, v: i32) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-
-/// Cursor over a frame payload; every read is bounds-checked so a
-/// malformed peer yields a typed error, never a panic.
-struct Payload<'a> {
-    buf: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Payload<'a> {
-    fn new(buf: &'a [u8]) -> Self {
-        Payload { buf, pos: 0 }
-    }
-
-    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
-        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
-        match end {
-            Some(end) => {
-                let s = &self.buf[self.pos..end];
-                self.pos = end;
-                Ok(s)
-            }
-            None => bail!("truncated frame payload (want {n} at {}, have {})", self.pos, self.buf.len()),
-        }
-    }
-
-    fn u8(&mut self) -> anyhow::Result<u8> {
-        Ok(self.take(1)?[0])
-    }
-
-    fn u32(&mut self) -> anyhow::Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> anyhow::Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn i32(&mut self) -> anyhow::Result<i32> {
-        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn done(&self) -> anyhow::Result<()> {
-        if self.pos != self.buf.len() {
-            bail!("{} trailing bytes in frame payload", self.buf.len() - self.pos);
-        }
-        Ok(())
-    }
-}
 
 fn kind_name(kind: u8) -> &'static str {
     match kind {

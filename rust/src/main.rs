@@ -123,6 +123,9 @@ fn print_help() {
            --max-edits-per-step N            per-session write_synapse budget\n\
                                              between step intervals\n\
            --max-line-bytes N                request-line byte cap (default 8 MiB)\n\
+           --max-frame-bytes N               binary-wire frame byte cap (wire v2;\n\
+                                             default 256 MiB; sessions opt in\n\
+                                             with \"wire\":\"binary\" at configure)\n\
            --request-timeout-ms N            compute-permit deadline (default 30s)\n\
            --idle-timeout-ms N               idle-session eviction TTL (default 5m)\n\
            --max-errors N                    protocol-error flood eviction\n\

@@ -313,21 +313,50 @@ pub fn open_netfile<P: AsRef<Path>>(path: P) -> Result<Arc<NetFile>, HsnError> {
 }
 
 /// Shared-mapping cache for `.hsn` v2 files: sessions configuring from
-/// the same canonical path (and mtime) get the same [`Arc<NetFile>`]
-/// instead of re-mapping per session — N sessions ≈ one validation
-/// scan and one logical copy of the net (the serve tier holds one of
-/// these; `metrics` exposes the hit counter).
+/// the same canonical path (and file identity) get the same
+/// [`Arc<NetFile>`] instead of re-mapping per session — N sessions ≈
+/// one validation scan and one logical copy of the net (the serve tier
+/// holds one of these; `metrics` exposes the hit counter).
 ///
 /// Entries are [`Weak`]: the cache never keeps a mapping alive on its
-/// own, so dropping every session releases the file. A changed mtime
-/// keys a fresh entry, so an overwritten net is re-validated instead of
-/// served stale.
+/// own, so dropping every session releases the file. The key is the
+/// canonical path plus the file's identity — mtime, byte length and
+/// (on unix) inode — so an overwritten net is re-validated instead of
+/// served stale. mtime alone was not enough: a rename-over rewrite
+/// that lands within the filesystem's timestamp granularity (or with
+/// a deliberately restored mtime) used to hit the old mapping and
+/// serve stale bytes; the inode catches the rename, the length catches
+/// in-place growth.
 pub struct NetCache {
-    map: std::sync::Mutex<
-        std::collections::HashMap<(std::path::PathBuf, Option<std::time::SystemTime>), std::sync::Weak<NetFile>>,
-    >,
+    map: std::sync::Mutex<std::collections::HashMap<CacheKey, std::sync::Weak<NetFile>>>,
     hits: std::sync::atomic::AtomicU64,
     misses: std::sync::atomic::AtomicU64,
+}
+
+/// On-disk identity of a `.hsn` file at open time; see [`NetCache`].
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct CacheKey {
+    path: std::path::PathBuf,
+    mtime: Option<std::time::SystemTime>,
+    len: u64,
+    /// unix inode; 0 on platforms without one (the other fields still key)
+    ino: u64,
+}
+
+impl CacheKey {
+    fn for_path(canon: std::path::PathBuf) -> CacheKey {
+        let (mtime, len, ino) = match std::fs::metadata(&canon) {
+            Ok(m) => {
+                #[cfg(unix)]
+                let ino = std::os::unix::fs::MetadataExt::ino(&m);
+                #[cfg(not(unix))]
+                let ino = 0u64;
+                (m.modified().ok(), m.len(), ino)
+            }
+            Err(_) => (None, 0, 0),
+        };
+        CacheKey { path: canon, mtime, len, ino }
+    }
 }
 
 impl Default for NetCache {
@@ -346,20 +375,19 @@ impl NetCache {
     }
 
     /// Open through the cache: an upgradable entry for (canonical path,
-    /// mtime) is a hit; otherwise the file is mapped, validated and
-    /// inserted. Dead entries are pruned on every miss.
+    /// mtime, length, inode) is a hit; otherwise the file is mapped,
+    /// validated and inserted. Dead entries are pruned on every miss.
     pub fn open<P: AsRef<Path>>(&self, path: P) -> Result<Arc<NetFile>, HsnError> {
         use std::sync::atomic::Ordering;
         let canon = std::fs::canonicalize(&path)
             .unwrap_or_else(|_| path.as_ref().to_path_buf());
-        let mtime = std::fs::metadata(&canon).and_then(|m| m.modified()).ok();
-        let key = (canon, mtime);
+        let key = CacheKey::for_path(canon);
         let mut map = self.map.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         if let Some(file) = map.get(&key).and_then(std::sync::Weak::upgrade) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(file);
         }
-        let file = Arc::new(NetFile::open(&key.0)?);
+        let file = Arc::new(NetFile::open(&key.path)?);
         map.retain(|_, w| w.strong_count() > 0);
         map.insert(key, Arc::downgrade(&file));
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -371,7 +399,8 @@ impl NetCache {
         self.hits.load(std::sync::atomic::Ordering::Relaxed)
     }
 
-    /// Opens that had to map (first open, expired entry, or new mtime).
+    /// Opens that had to map (first open, expired entry, or changed
+    /// file identity — mtime, length or inode).
     pub fn misses(&self) -> u64 {
         self.misses.load(std::sync::atomic::Ordering::Relaxed)
     }
@@ -580,6 +609,53 @@ mod tests {
         let c = cache.open(&p).unwrap();
         assert_eq!((cache.hits(), cache.misses()), (1, 2));
         assert!(c.path().is_some());
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Regression (PR 10): a rename-over rewrite of the same byte
+    /// length with a restored mtime used to hit the (path, mtime)
+    /// cache entry and serve stale bytes. The inode/length key fields
+    /// must force a re-map.
+    #[cfg(unix)]
+    #[test]
+    fn net_cache_misses_on_same_size_rewrite_with_pinned_mtime() {
+        let net = sample_net(101);
+        // same structure, one weight flipped: identical serialized length
+        let mut net2 = sample_net(101);
+        net2.syn_weights[0] = net2.syn_weights[0].wrapping_add(1);
+
+        let p = temp_path("netfile_cache_stale.hsn");
+        write_hsn(&net, &p).unwrap();
+        let cache = NetCache::new();
+        let a = cache.open(&p).unwrap();
+        let w0 = a.view().syn_weights[0];
+        let mtime0 = std::fs::metadata(&p).unwrap().modified().unwrap();
+
+        // rewrite via rename (new inode), then pin the mtime back so
+        // (path, mtime) alone cannot tell the files apart
+        let tmp = temp_path("netfile_cache_stale.hsn.tmp");
+        write_hsn(&net2, &tmp).unwrap();
+        assert_eq!(
+            std::fs::metadata(&tmp).unwrap().len(),
+            std::fs::metadata(&p).unwrap().len(),
+            "rewrite must be same-size for this regression to mean anything"
+        );
+        let times = std::fs::FileTimes::new().set_modified(mtime0);
+        std::fs::File::options()
+            .append(true)
+            .open(&tmp)
+            .unwrap()
+            .set_times(times)
+            .unwrap();
+        std::fs::rename(&tmp, &p).unwrap();
+        assert_eq!(std::fs::metadata(&p).unwrap().modified().unwrap(), mtime0);
+
+        // `a` is still live, so a (path, mtime)-keyed cache would hit
+        let b = cache.open(&p).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "rewritten file must get a fresh mapping");
+        assert_eq!((cache.hits(), cache.misses()), (0, 2));
+        assert_eq!(a.view().syn_weights[0], w0);
+        assert_eq!(b.view().syn_weights[0], w0.wrapping_add(1), "must see the new bytes");
         std::fs::remove_file(&p).ok();
     }
 

@@ -1,0 +1,331 @@
+//! Length-prefixed binary frame codec shared by every binary wire in
+//! the crate — the shard AER pipes ([`crate::cluster::shard`], PR 8)
+//! and the session protocol's opt-in wire v2 ([`crate::sim::session`]).
+//!
+//! # Frame layout
+//!
+//! ```text
+//! u32 len (LE) | u8 kind | payload
+//! ```
+//!
+//! `len` counts the kind byte plus the payload, so `len >= 1` always;
+//! `len == 0` and `len > MAX_FRAME_BYTES` are rejected on read — a
+//! corrupted prefix can never drive a multi-GiB allocation. All
+//! integers are little-endian.
+//!
+//! The *session* wire additionally prefixes every frame with a one-byte
+//! sentinel ([`WIRE_SENTINEL`], `0x00`) so binary frames can interleave
+//! with JSON control lines on one stream: a JSON line always starts
+//! with `{` (or whitespace), never NUL, so peeking a single byte routes
+//! the parser. The shard pipes carry frames only and skip the sentinel.
+//! [`encode_wire_frame`] builds the sentinel-prefixed form.
+//!
+//! # Session wire v2 frame kinds
+//!
+//! | kind | name   | dir             | payload                                         |
+//! |------|--------|-----------------|-------------------------------------------------|
+//! | 0x10 | STIM   | client → server | `u32 n_steps, n×{u32 n_ids, n_ids×u32 axon}`    |
+//! | 0x90 | SPIKES | server → client | `u64 fired_total, u32 n_steps, n×{u32 n_ids, n_ids×u32 output_neuron}` |
+//!
+//! Shard-pipe kinds (`UPDATE`/`DELIVER`/`FIRED`/...) are defined next
+//! to their protocol in [`crate::cluster::shard`].
+//!
+//! # The length-truncation fix
+//!
+//! `write_frame` previously computed `1u32.checked_add(payload.len()
+//! as u32)`: the `as u32` cast truncates *before* the overflow check,
+//! so a payload over 4 GiB silently wrapped to a small length prefix
+//! and wrote a corrupt frame. [`frame_len`] now validates
+//! `payload.len()` as a `usize` against [`MAX_FRAME_BYTES`] before any
+//! cast (see `frame_len_rejects_overflow_before_any_cast`).
+
+use std::io::{self, Read, Write};
+
+use anyhow::bail;
+
+/// Upper bound on one frame's `len` field (kind byte + payload) — a
+/// corrupted length prefix must not drive a multi-GiB allocation.
+/// 256 MiB comfortably fits a whole-net burst (4 bytes/event ≈ 67M
+/// events).
+pub const MAX_FRAME_BYTES: u32 = 256 * 1024 * 1024;
+
+/// First byte of every *session-wire* binary frame (never of a JSON
+/// line): `0x00`. See the module docs.
+pub const WIRE_SENTINEL: u8 = 0x00;
+
+/// Session wire v2, client → server: one `step_many` stimulus batch.
+pub const FRAME_STIM: u8 = 0x10;
+
+/// Session wire v2, server → client: the batch's per-step output
+/// spikes.
+pub const FRAME_SPIKES: u8 = 0x90;
+
+/// Validated `len` field for a payload of `payload_len` bytes. The
+/// check runs on the untruncated `usize` — `payload_len >=
+/// MAX_FRAME_BYTES` (including > 4 GiB values whose `as u32` cast would
+/// wrap) is an [`io::ErrorKind::InvalidInput`] error, never a silent
+/// wrong prefix.
+pub fn frame_len(payload_len: usize) -> io::Result<u32> {
+    if payload_len >= MAX_FRAME_BYTES as usize {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!(
+                "frame payload of {payload_len} bytes exceeds the {} byte frame cap",
+                MAX_FRAME_BYTES - 1
+            ),
+        ));
+    }
+    Ok(payload_len as u32 + 1)
+}
+
+/// Write one `len | kind | payload` frame. The caller flushes.
+pub fn write_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> io::Result<()> {
+    let len = frame_len(payload.len())?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&[kind])?;
+    w.write_all(payload)
+}
+
+/// Read one frame. `Ok(None)` on clean EOF **at the length prefix**
+/// (the peer closed between frames); EOF mid-frame is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<(u8, Vec<u8>)>> {
+    let mut len_buf = [0u8; 4];
+    // manual first-byte read so EOF-between-frames is distinguishable
+    match r.read(&mut len_buf[..1])? {
+        0 => return Ok(None),
+        _ => r.read_exact(&mut len_buf[1..])?,
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("bad frame length {len}"),
+        ));
+    }
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind)?;
+    let mut payload = vec![0u8; len as usize - 1];
+    r.read_exact(&mut payload)?;
+    Ok(Some((kind[0], payload)))
+}
+
+/// One session-wire frame as raw bytes: `sentinel | len | kind |
+/// payload`, ready to write to the stream in one call.
+pub fn encode_wire_frame(kind: u8, payload: &[u8]) -> io::Result<Vec<u8>> {
+    let len = frame_len(payload.len())?;
+    let mut out = Vec::with_capacity(6 + payload.len());
+    out.push(WIRE_SENTINEL);
+    out.extend_from_slice(&len.to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(payload);
+    Ok(out)
+}
+
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_i32(buf: &mut Vec<u8>, v: i32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Cursor over a frame payload; every read is bounds-checked so a
+/// malformed peer yields a typed error, never a panic.
+pub struct Payload<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Payload<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Payload { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let s = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(s)
+            }
+            None => bail!(
+                "truncated frame payload (want {n} at {}, have {})",
+                self.pos,
+                self.buf.len()
+            ),
+        }
+    }
+
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> anyhow::Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn done(&self) -> anyhow::Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes in frame payload", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+// ---- session wire v2 STIM / SPIKES payloads -------------------------------
+
+/// Encode a `step_many` batch as a STIM payload:
+/// `u32 n_steps, n×{u32 n_ids, n_ids×u32 axon_id}`.
+pub fn encode_stim(batch: &[Vec<u32>]) -> Vec<u8> {
+    let ids: usize = batch.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(4 + batch.len() * 4 + ids * 4);
+    put_u32(&mut out, batch.len() as u32);
+    for row in batch {
+        put_u32(&mut out, row.len() as u32);
+        for &a in row {
+            put_u32(&mut out, a);
+        }
+    }
+    out
+}
+
+/// Decode a STIM payload. Claimed counts are only trusted up to the
+/// bytes actually present (`Payload` bounds-checks every read, and
+/// pre-allocation is capped by the remaining byte count), so a hostile
+/// header cannot force a huge allocation.
+pub fn decode_stim(payload: &[u8]) -> anyhow::Result<Vec<Vec<u32>>> {
+    let mut p = Payload::new(payload);
+    let n_steps = p.u32()? as usize;
+    let mut batch = Vec::with_capacity(n_steps.min(p.remaining() / 4 + 1));
+    for _ in 0..n_steps {
+        let n = p.u32()? as usize;
+        let bytes = p.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("row overflow"))?)?;
+        let row: Vec<u32> = bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        batch.push(row);
+    }
+    p.done()?;
+    Ok(batch)
+}
+
+/// Encode a `step_many` result as a SPIKES payload:
+/// `u64 fired_total, u32 n_steps, n×{u32 n_ids, n_ids×u32 neuron_id}`.
+pub fn encode_spikes(spikes: &[Vec<u32>], fired_total: u64) -> Vec<u8> {
+    let ids: usize = spikes.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(12 + spikes.len() * 4 + ids * 4);
+    put_u64(&mut out, fired_total);
+    put_u32(&mut out, spikes.len() as u32);
+    for row in spikes {
+        put_u32(&mut out, row.len() as u32);
+        for &s in row {
+            put_u32(&mut out, s);
+        }
+    }
+    out
+}
+
+/// Decode a SPIKES payload into `(per-step spikes, fired_total)`.
+pub fn decode_spikes(payload: &[u8]) -> anyhow::Result<(Vec<Vec<u32>>, u64)> {
+    let mut p = Payload::new(payload);
+    let fired_total = p.u64()?;
+    let n_steps = p.u32()? as usize;
+    let mut spikes = Vec::with_capacity(n_steps.min(p.remaining() / 4 + 1));
+    for _ in 0..n_steps {
+        let n = p.u32()? as usize;
+        let bytes = p.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("row overflow"))?)?;
+        let row: Vec<u32> = bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        spikes.push(row);
+    }
+    p.done()?;
+    Ok((spikes, fired_total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite (PR 10): the pre-fix code computed
+    /// `1u32.checked_add(payload.len() as u32)` — for a > 4 GiB payload
+    /// the cast wraps first, the checked_add then "succeeds" on the
+    /// wrapped value, and a corrupt (small) length prefix is written.
+    /// `frame_len` must reject such lengths on the untruncated usize.
+    #[test]
+    fn frame_len_rejects_overflow_before_any_cast() {
+        // boundary: largest legal payload is MAX - 1 (len == MAX)
+        assert_eq!(frame_len(MAX_FRAME_BYTES as usize - 1).unwrap(), MAX_FRAME_BYTES);
+        assert_eq!(
+            frame_len(MAX_FRAME_BYTES as usize).unwrap_err().kind(),
+            io::ErrorKind::InvalidInput
+        );
+        // the truncation trap: 4 GiB + 9 wraps to 9 under `as u32`; the
+        // pre-fix check would have accepted it and written len == 10
+        #[cfg(target_pointer_width = "64")]
+        assert_eq!(
+            frame_len((1usize << 32) + 9).unwrap_err().kind(),
+            io::ErrorKind::InvalidInput
+        );
+        assert_eq!(frame_len(0).unwrap(), 1); // empty payload: kind only
+    }
+
+    #[test]
+    fn wire_frame_has_sentinel_then_frame_bytes() {
+        let f = encode_wire_frame(FRAME_STIM, &[1, 2, 3]).unwrap();
+        assert_eq!(f[0], WIRE_SENTINEL);
+        assert_eq!(&f[1..5], &4u32.to_le_bytes()); // kind + 3 payload bytes
+        assert_eq!(f[5], FRAME_STIM);
+        assert_eq!(&f[6..], &[1, 2, 3]);
+        // the post-sentinel bytes are a plain frame
+        let mut r = io::Cursor::new(&f[1..]);
+        let (k, p) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!((k, p.as_slice()), (FRAME_STIM, &[1u8, 2, 3][..]));
+    }
+
+    #[test]
+    fn stim_and_spikes_payloads_roundtrip() {
+        let batch = vec![vec![0u32, 3, 7], vec![], vec![2]];
+        assert_eq!(decode_stim(&encode_stim(&batch)).unwrap(), batch);
+        let spikes = vec![vec![1u32], vec![0, 1], vec![]];
+        let (got, fired) = decode_spikes(&encode_spikes(&spikes, 42)).unwrap();
+        assert_eq!(got, spikes);
+        assert_eq!(fired, 42);
+        // empty batch round-trips too
+        assert_eq!(decode_stim(&encode_stim(&[])).unwrap(), Vec::<Vec<u32>>::new());
+    }
+
+    #[test]
+    fn decoders_reject_truncation_trailers_and_hostile_counts() {
+        let good = encode_stim(&[vec![1, 2], vec![3]]);
+        assert!(decode_stim(&good[..good.len() - 2]).is_err(), "truncated");
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(decode_stim(&trailing).is_err(), "trailing bytes");
+        // a header claiming 2^31 steps with no bytes behind it must
+        // error cheaply instead of allocating
+        let hostile = (1u32 << 31).to_le_bytes().to_vec();
+        assert!(decode_stim(&hostile).is_err());
+        assert!(decode_spikes(&hostile).is_err());
+    }
+}

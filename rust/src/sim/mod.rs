@@ -67,6 +67,7 @@
 //! | [`Backend::Sharded`] | multi-process shard cluster | paper-scale nets, `--shards` subprocesses |
 
 mod config;
+pub mod frames;
 pub mod serve;
 pub mod session;
 

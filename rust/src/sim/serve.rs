@@ -5,9 +5,16 @@
 //! One TCP connection is one protocol session: the server speaks exactly
 //! the line-delimited JSON wire format of [`crate::sim::session`]
 //! (greeting, then one response line per request line), so the Python
-//! `SessionClient` works unchanged over its TCP transport. What this
-//! module adds on top of the codec is everything a *shared* service
-//! needs to survive hostile or unlucky clients:
+//! `SessionClient` works unchanged over its TCP transport. Sessions
+//! that negotiate `"wire":"binary"` at `configure` (wire v2 — see the
+//! session module docs) additionally exchange `step_many` batches as
+//! sentinel-prefixed binary STIM/SPIKES frames on the same stream;
+//! JSON stays the control channel, every robustness property below
+//! applies to both wires, and binary frame lengths are capped at
+//! `--max-frame-bytes` (a corrupt prefix answers `malformed_request`
+//! and closes that one connection — it can never OOM the server). What
+//! this module adds on top of the codec is everything a *shared*
+//! service needs to survive hostile or unlucky clients:
 //!
 //! * **Admission control** — at most `max_sessions` concurrent
 //!   connections; a connection over that answers one
@@ -65,9 +72,10 @@ use std::time::{Duration, Instant};
 
 use crate::cluster::AdmissionGate;
 use crate::model_fmt::NetCache;
+use crate::sim::frames;
 use crate::sim::session::{
-    err_response, is_error_response, parse_request, CappedLineReader, LineRead, Request, Session,
-    SessionLimits, CODE_DEADLINE, CODE_ENGINE, CODE_EVICTED, CODE_MALFORMED, CODE_SERVER_BUSY,
+    err_response, is_error_response, parse_request, Request, Session, SessionLimits, WireRead,
+    WireReader, CODE_DEADLINE, CODE_ENGINE, CODE_EVICTED, CODE_MALFORMED, CODE_SERVER_BUSY,
 };
 use crate::sim::SimOptions;
 use crate::util::cli::Args;
@@ -93,6 +101,10 @@ pub struct ServeLimits {
     pub max_edits_per_step: usize,
     /// Read-side request-line byte cap (`--max-line-bytes`).
     pub max_line_bytes: usize,
+    /// Read-side binary frame-length cap (`--max-frame-bytes`), clamped
+    /// to the protocol-wide [`frames::MAX_FRAME_BYTES`]. A length
+    /// prefix over this closes the connection with `malformed_request`.
+    pub max_frame_bytes: u32,
     /// Max wait for a compute permit before `deadline`
     /// (`--request-timeout-ms`).
     pub request_timeout_ms: u64,
@@ -115,6 +127,7 @@ impl Default for ServeLimits {
             max_batch_steps: usize::MAX,
             max_edits_per_step: usize::MAX,
             max_line_bytes: 8 << 20,
+            max_frame_bytes: frames::MAX_FRAME_BYTES,
             request_timeout_ms: 30_000,
             idle_timeout_ms: 300_000,
             max_errors: 64,
@@ -133,6 +146,9 @@ impl ServeLimits {
             max_batch_steps: args.get_usize("max-batch", d.max_batch_steps)?,
             max_edits_per_step: args.get_usize("max-edits-per-step", d.max_edits_per_step)?,
             max_line_bytes: args.get_usize("max-line-bytes", d.max_line_bytes)?,
+            max_frame_bytes: args
+                .get_usize("max-frame-bytes", d.max_frame_bytes as usize)?
+                .min(frames::MAX_FRAME_BYTES as usize) as u32,
             request_timeout_ms: args.get_usize("request-timeout-ms", d.request_timeout_ms as usize)?
                 as u64,
             idle_timeout_ms: args.get_usize("idle-timeout-ms", d.idle_timeout_ms as usize)? as u64,
@@ -464,7 +480,7 @@ fn connection_loop(
     session: &mut Session,
     shared: &Shared,
 ) -> Exit {
-    let mut lines = CappedLineReader::new(shared.limits.max_line_bytes);
+    let mut wire = WireReader::new(shared.limits.max_line_bytes, shared.limits.max_frame_bytes);
     let idle_ttl = Duration::from_millis(shared.limits.idle_timeout_ms);
     let mut last_activity = Instant::now();
     let mut consecutive_errors: u32 = 0;
@@ -476,7 +492,7 @@ fn connection_loop(
                 notices: vec![err_response(CODE_EVICTED, "server draining; session closed")],
             };
         }
-        let read = match lines.read_line(reader) {
+        let read = match wire.read(reader) {
             // no complete line yet (read timeout tick, or a byte-drip
             // client hit the reader's per-call budget): this is NOT
             // activity — check the idle TTL, then poll again
@@ -498,7 +514,7 @@ fn connection_loop(
                 }
                 continue;
             }
-            Ok(LineRead::Pending) => {
+            Ok(WireRead::Pending) => {
                 if last_activity.elapsed() >= idle_ttl {
                     return Exit::Evicted {
                         counter: "idle",
@@ -514,23 +530,60 @@ fn connection_loop(
                 continue;
             }
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            // hard I/O error or EOF (incl. a dropped partial line):
-            // the client is gone — close without executing anything
-            Err(_) | Ok(LineRead::Eof) => return Exit::Closed,
+            // hard I/O error or EOF (incl. a dropped partial line or a
+            // disconnect mid-frame): the client is gone — close without
+            // executing anything
+            Err(_) | Ok(WireRead::Eof) => return Exit::Closed,
             Ok(r) => r,
         };
         last_activity = Instant::now();
 
         let (resp, done) = match read {
-            LineRead::Eof | LineRead::Pending => unreachable!("handled above"),
-            LineRead::TooLong => (
+            WireRead::Eof | WireRead::Pending => unreachable!("handled above"),
+            WireRead::TooLong => (
                 err_response(
                     CODE_MALFORMED,
                     &format!("request line exceeds {} bytes", shared.limits.max_line_bytes),
                 ),
                 false,
             ),
-            LineRead::Line(line) => {
+            // a corrupt binary length prefix: the stream cannot be
+            // resynchronised — one best-effort error line, then close
+            // (isolated to this connection; the server keeps serving)
+            WireRead::BadFrameLen(len) => {
+                Counters::bump(&shared.counters.requests_total);
+                Counters::bump(&shared.counters.errors_total);
+                let _ = send_line(
+                    writer,
+                    &err_response(
+                        CODE_MALFORMED,
+                        &format!(
+                            "binary frame length {len} invalid (1..={} allowed); closing",
+                            shared.limits.max_frame_bytes
+                        ),
+                    ),
+                );
+                return Exit::Closed;
+            }
+            // binary STIM frame: same permit gate, panic isolation and
+            // counters as a JSON request; a success reply is raw frame
+            // bytes, an error is a JSON line that flows through the
+            // shared error-flood accounting below
+            WireRead::Frame(kind, payload) => {
+                match execute_frame(session, kind, &payload, shared) {
+                    Err(exit) => return exit,
+                    Ok(Ok(reply)) => {
+                        Counters::bump(&shared.counters.requests_total);
+                        consecutive_errors = 0;
+                        if writer.write_all(&reply).and_then(|_| writer.flush()).is_err() {
+                            return Exit::Closed;
+                        }
+                        continue;
+                    }
+                    Ok(Err(line)) => (line, false),
+                }
+            }
+            WireRead::Line(line) => {
                 if line.trim().is_empty() {
                     continue;
                 }
@@ -627,6 +680,62 @@ fn execute(
                 );
             }
             Ok((resp, done))
+        }
+        Err(panic) => {
+            let what = panic_message(&panic);
+            Err(Exit::Evicted {
+                counter: "panic",
+                notices: vec![
+                    err_response(CODE_ENGINE, &format!("session panicked: {what}")),
+                    err_response(CODE_EVICTED, "session evicted after engine panic"),
+                ],
+            })
+        }
+    }
+}
+
+/// [`execute`]'s binary-wire twin: one STIM frame through the session
+/// under a compute permit with panic isolation. Outer `Err` = eviction
+/// (panic); inner `Ok` = raw SPIKES reply bytes; inner `Err` = a JSON
+/// error line (deadline, malformed frame, quota, ...) — the session
+/// survives those exactly as on the JSON wire.
+fn execute_frame(
+    session: &mut Session,
+    kind: u8,
+    payload: &[u8],
+    shared: &Shared,
+) -> Result<Result<Vec<u8>, String>, Exit> {
+    let wait0 = Instant::now();
+    let permit = shared
+        .gate
+        .acquire(Duration::from_millis(shared.limits.request_timeout_ms));
+    Counters::add(&shared.counters.queue_wait_us, wait0.elapsed().as_micros() as u64);
+    let Some(permit) = permit else {
+        return Ok(Err(err_response(
+            CODE_DEADLINE,
+            &format!(
+                "no compute capacity within {} ms (queue depth {})",
+                shared.limits.request_timeout_ms,
+                shared.gate.queue_depth()
+            ),
+        )));
+    };
+
+    let stats_before = session.stats();
+    let exec0 = Instant::now();
+    let outcome = catch_unwind(AssertUnwindSafe(|| session.handle_frame(kind, payload)));
+    Counters::add(&shared.counters.execute_us, exec0.elapsed().as_micros() as u64);
+    drop(permit);
+
+    match outcome {
+        Ok(result) => {
+            if result.is_ok() {
+                // the session counted its executed steps; fold the delta
+                // into the server totals
+                let after = session.stats();
+                Counters::add(&shared.counters.steps_total, after.steps - stats_before.steps);
+            }
+            Ok(result)
         }
         Err(panic) => {
             let what = panic_message(&panic);

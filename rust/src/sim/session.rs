@@ -138,6 +138,58 @@
 //! <- {"ok":true,"op":"shutdown"}
 //! ```
 //!
+//! # Binary wire (wire v2, PR 10)
+//!
+//! JSON lines are the default and remain the *control channel* forever
+//! — `configure`, errors, `health`, `metrics`, eviction notices are
+//! always JSON lines. What the binary wire replaces is the marshalling
+//! hot path: `step_many` batches and their spike responses.
+//!
+//! **Negotiation.** A client opts in per session by sending
+//! `"wire":"binary"` in a `configure` request; the response echoes
+//! `"wire":"binary"` back (`"wire":"json"` otherwise). An old server
+//! ignores the unknown field and echoes nothing — that missing echo is
+//! how clients detect negotiation failure. The mode applies from the
+//! next request after the successful `configure` and is re-negotiated
+//! (default: JSON) by every later `configure`.
+//!
+//! **Framing.** After negotiation the client may send stimulus batches
+//! as binary frames interleaved with JSON lines on the same stream:
+//!
+//! ```text
+//! 0x00 sentinel | u32 len (LE) | u8 kind | payload
+//! ```
+//!
+//! The one-byte `0x00` sentinel can never begin a JSON line (`{` is
+//! 0x7B), so the server routes on a single peeked byte. `len` counts
+//! the kind byte plus payload (codec shared with the shard AER pipes —
+//! [`crate::sim::frames`]) and is capped at
+//! [`frames::MAX_FRAME_BYTES`](crate::sim::frames::MAX_FRAME_BYTES):
+//! a corrupt prefix can never OOM the server, and because a binary
+//! stream cannot be resynchronised after a bad length, the server
+//! answers one `malformed_request` line and closes the connection (the
+//! only binary-wire fault that ends the session; every in-frame fault
+//! below keeps it alive).
+//!
+//! Frame kinds (payload ids all u32-LE; see [`crate::sim::frames`]):
+//!
+//! | kind | name   | dir             | payload                                     |
+//! |------|--------|-----------------|---------------------------------------------|
+//! | 0x10 | STIM   | client → server | `u32 n_steps, n×{u32 n, n×u32 axon_id}`     |
+//! | 0x90 | SPIKES | server → client | `u64 fired_total, u32 n_steps, n×{u32 n, n×u32 output_neuron_id}` |
+//!
+//! A STIM frame is exactly a `step_many` request: same
+//! [`MAX_BATCH_STEPS`] / quota caps, same server-side sort+dedup
+//! marshalling, same atomic validation — the same schedule produces a
+//! **bit-identical** spike train over either wire (pinned by parity
+//! tests). Errors are *always* JSON lines, so error handling is
+//! wire-independent: a frame before negotiation, an unknown kind or an
+//! undecodable payload answers `malformed_request`; oversized batches,
+//! quotas, `no_session` and engine errors answer their usual codes; in
+//! all those cases the session survives and the next request (either
+//! wire) is served normally. [`PROTOCOL_VERSION`] stays 1 — the binary
+//! wire is opt-in and fully backward compatible.
+//!
 //! # Error codes
 //!
 //! | code                  | meaning                                            |
@@ -191,6 +243,7 @@ use std::time::Instant;
 use crate::energy::EnergyModel;
 use crate::model_fmt::NetCache;
 use crate::plasticity::PlasticityConfig;
+use crate::sim::frames;
 use crate::sim::{NetSource, SimError, SimOptions, Simulator};
 use crate::snn::{EditJournal, EditKey};
 use crate::util::json::{arr_i64, obj, Json};
@@ -251,6 +304,10 @@ pub enum Request {
         workers: Option<usize>,
         shards: Option<usize>,
         learning: Option<PlasticityConfig>,
+        /// `"wire":"binary"` negotiation (wire v2): `true` switches the
+        /// session's `step_many` hot path to binary STIM/SPIKES frames
+        /// once this configure succeeds.
+        wire_binary: bool,
     },
     Step { axons: Vec<u32> },
     StepMany { batch: Vec<Vec<u32>> },
@@ -388,7 +445,18 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                 None | Some(Json::Null) => None,
                 Some(v) => Some(learning_field(v)?),
             };
-            Ok(Request::Configure { net, seed, workers, shards, learning })
+            let wire_binary = match j.get("wire") {
+                None | Some(Json::Null) => false,
+                Some(Json::Str(s)) if s == "json" => false,
+                Some(Json::Str(s)) if s == "binary" => true,
+                Some(_) => {
+                    return Err(perr(
+                        CODE_MALFORMED,
+                        "configure: `wire` must be \"json\" or \"binary\"",
+                    ))
+                }
+            };
+            Ok(Request::Configure { net, seed, workers, shards, learning, wire_binary })
         }
         "step" => Ok(Request::Step { axons: ids_field(&j, "axons", "step")? }),
         "step_many" => {
@@ -588,6 +656,9 @@ pub struct Session {
     /// `write_synapse` ops since the last step interval (the
     /// `max_edits_per_step` quota counter).
     edits_since_step: usize,
+    /// Whether the most recent successful `configure` negotiated the
+    /// binary wire (`"wire":"binary"`); gates [`Session::handle_frame`].
+    wire_binary: bool,
 }
 
 impl Session {
@@ -609,7 +680,15 @@ impl Session {
             active_opts: None,
             journal: EditJournal::new(),
             edits_since_step: 0,
+            wire_binary: false,
         }
+    }
+
+    /// Whether the session has negotiated the binary wire (wire v2) —
+    /// i.e. the most recent successful `configure` carried
+    /// `"wire":"binary"`.
+    pub fn wire_is_binary(&self) -> bool {
+        self.wire_binary
     }
 
     /// Install a shared network-mapping cache: `configure` ops on this
@@ -691,10 +770,78 @@ impl Session {
         (resp, done)
     }
 
+    /// Handle one binary-wire frame (wire v2). `Ok` is the complete
+    /// sentinel-prefixed SPIKES reply, ready to write to the stream;
+    /// `Err` is a JSON error line — errors always travel as JSON, so a
+    /// client's error handling is wire-independent. Every error leaves
+    /// the session alive and the simulator untouched, exactly like the
+    /// JSON `step_many` path.
+    pub fn handle_frame(&mut self, kind: u8, payload: &[u8]) -> Result<Vec<u8>, String> {
+        let out = self.frame_response(kind, payload);
+        self.stats.requests += 1;
+        if out.is_err() {
+            self.stats.errors += 1;
+        }
+        out
+    }
+
+    fn frame_response(&mut self, kind: u8, payload: &[u8]) -> Result<Vec<u8>, String> {
+        if !self.wire_binary {
+            return Err(err_response(
+                CODE_MALFORMED,
+                "binary frame before `\"wire\":\"binary\"` was negotiated at configure",
+            ));
+        }
+        if kind != frames::FRAME_STIM {
+            return Err(err_response(
+                CODE_MALFORMED,
+                &format!("unexpected binary frame kind 0x{kind:02x} (clients send STIM 0x10)"),
+            ));
+        }
+        let batch = frames::decode_stim(payload)
+            .map_err(|e| err_response(CODE_MALFORMED, &format!("bad STIM frame: {e}")))?;
+        if batch.len() > MAX_BATCH_STEPS {
+            return Err(err_response(
+                CODE_OVERSIZED_BATCH,
+                &format!(
+                    "batch of {} steps exceeds the {MAX_BATCH_STEPS}-step limit; split it",
+                    batch.len()
+                ),
+            ));
+        }
+        if batch.len() > self.limits.max_batch_steps {
+            return Err(err_response(
+                CODE_QUOTA,
+                &format!(
+                    "batch of {} steps exceeds this session's {}-step quota",
+                    batch.len(),
+                    self.limits.max_batch_steps
+                ),
+            ));
+        }
+        let sim = self.sim.as_deref_mut().ok_or_else(|| {
+            err_response(CODE_NO_SESSION, "no simulator: send `configure` first")
+        })?;
+        // same server-side canonicalisation as the JSON path — this is
+        // what keeps the two wires bit-identical on the same schedule
+        let batch: Vec<Vec<u32>> = batch.iter().map(|row| marshal_axons(row)).collect();
+        match sim.step_many(&batch) {
+            Ok(r) => {
+                self.stats.steps += batch.len() as u64;
+                self.edits_since_step = 0;
+                let payload = frames::encode_spikes(&r.spikes, r.fired_total);
+                frames::encode_wire_frame(frames::FRAME_SPIKES, &payload).map_err(|e| {
+                    err_response(CODE_ENGINE, &format!("encoding SPIKES frame: {e}"))
+                })
+            }
+            Err(e) => Err(err_response(error_code(&e), &e.to_string())),
+        }
+    }
+
     fn dispatch(&mut self, req: Request) -> (String, bool) {
         match req {
-            Request::Configure { net, seed, workers, shards, learning } => {
-                (self.configure(&net, seed, workers, shards, learning), false)
+            Request::Configure { net, seed, workers, shards, learning, wire_binary } => {
+                (self.configure(&net, seed, workers, shards, learning, wire_binary), false)
             }
             Request::Step { axons } => {
                 let sim = match self.sim_or_err() {
@@ -952,6 +1099,7 @@ impl Session {
         workers: Option<usize>,
         shards: Option<usize>,
         learning: Option<PlasticityConfig>,
+        wire_binary: bool,
     ) -> String {
         // Cold-start phase 1 — load: `.hsn` v2 is mmap + validate
         // (zero-copy), v1 a full heap parse. Timed separately from the
@@ -1027,9 +1175,17 @@ impl Session {
                         ("load_ms", Json::Num(load_ms)),
                         ("compile_ms", Json::Num(compile_ms)),
                         ("net_bytes", Json::Int(net_bytes as i64)),
+                        // the negotiation echo (wire v2): an old server
+                        // omits this field, which is how clients detect
+                        // that `"wire":"binary"` was silently ignored
+                        (
+                            "wire",
+                            Json::Str(if wire_binary { "binary" } else { "json" }.to_string()),
+                        ),
                     ],
                 );
                 self.sim = Some(sim);
+                self.wire_binary = wire_binary;
                 // fresh network ⇒ stale pending edits die with it; the
                 // source + effective opts become the compaction base
                 self.base = Some(src);
@@ -1082,6 +1238,14 @@ pub(crate) struct CappedLineReader {
 impl CappedLineReader {
     pub(crate) fn new(cap: usize) -> Self {
         CappedLineReader { buf: Vec::new(), overflow: false, cap }
+    }
+
+    /// Whether a partial line is buffered (or being drained as
+    /// overflow). While true, [`WireReader`] must keep feeding this
+    /// reader instead of sniffing for a frame sentinel — a stray NUL
+    /// *inside* a line is line content, not a frame boundary.
+    pub(crate) fn is_mid_line(&self) -> bool {
+        !self.buf.is_empty() || self.overflow
     }
 
     pub(crate) fn read_line<R: BufRead>(&mut self, r: &mut R) -> std::io::Result<LineRead> {
@@ -1143,6 +1307,153 @@ impl CappedLineReader {
     }
 }
 
+/// One read outcome from [`WireReader`]: the [`LineRead`] outcomes plus
+/// the binary-wire cases.
+#[derive(Debug)]
+pub(crate) enum WireRead {
+    /// A complete JSON line (see [`LineRead::Line`]).
+    Line(String),
+    /// Line over the byte cap, drained unbuffered ([`LineRead::TooLong`]).
+    TooLong,
+    /// A complete binary frame: `(kind, payload)`.
+    Frame(u8, Vec<u8>),
+    /// The frame length prefix was 0 or over the frame cap. The prefix
+    /// was consumed but nothing after it — a binary stream cannot be
+    /// resynchronised past a corrupt length, so the caller must answer
+    /// `malformed_request` and close the connection.
+    BadFrameLen(u32),
+    /// Clean end of input ([`LineRead::Eof`]).
+    Eof,
+    /// Time budget elapsed mid-line or mid-frame; state is kept, call
+    /// again ([`LineRead::Pending`] — not activity for idle TTLs).
+    Pending,
+}
+
+/// Resumable mid-frame state of a [`WireReader`].
+enum FrameState {
+    /// Between requests: the next byte routes (0x00 → frame, else line).
+    Idle,
+    /// Collecting the 4-byte length prefix.
+    Len { buf: [u8; 4], got: usize },
+    /// Collecting the kind byte + `need` payload bytes. The payload
+    /// buffer grows only as bytes actually arrive, so a hostile length
+    /// prefix (already capped) never forces a large up-front allocation.
+    Body { kind: Option<u8>, need: usize, payload: Vec<u8> },
+}
+
+/// The wire-v2 reader: routes a mixed stream of JSON lines and
+/// sentinel-prefixed binary frames ([`crate::sim::frames`]), preserving
+/// every [`CappedLineReader`] robustness property — bounded memory
+/// (lines capped at `line_cap` bytes, frame lengths at `frame_cap`),
+/// state that survives `WouldBlock`/`TimedOut` from a read-timeout
+/// transport, and a per-call time budget against byte-drip clients.
+/// EOF mid-frame is an `UnexpectedEof` error (a disconnect, like EOF
+/// mid-line, executes nothing).
+pub(crate) struct WireReader {
+    lines: CappedLineReader,
+    frame_cap: u32,
+    state: FrameState,
+}
+
+impl WireReader {
+    pub(crate) fn new(line_cap: usize, frame_cap: u32) -> Self {
+        WireReader {
+            lines: CappedLineReader::new(line_cap),
+            frame_cap: frame_cap.min(frames::MAX_FRAME_BYTES),
+            state: FrameState::Idle,
+        }
+    }
+
+    pub(crate) fn read<R: BufRead>(&mut self, r: &mut R) -> std::io::Result<WireRead> {
+        let call_start = std::time::Instant::now();
+        loop {
+            if call_start.elapsed() > std::time::Duration::from_millis(150) {
+                return Ok(WireRead::Pending);
+            }
+            match &mut self.state {
+                FrameState::Idle => {
+                    if !self.lines.is_mid_line() {
+                        let chunk = r.fill_buf()?;
+                        if !chunk.is_empty() && chunk[0] == frames::WIRE_SENTINEL {
+                            r.consume(1);
+                            self.state = FrameState::Len { buf: [0; 4], got: 0 };
+                            continue;
+                        }
+                        // empty chunk (EOF) falls through: the line
+                        // reader reports it as a clean Eof
+                    }
+                    return Ok(match self.lines.read_line(r)? {
+                        LineRead::Line(l) => WireRead::Line(l),
+                        LineRead::TooLong => WireRead::TooLong,
+                        LineRead::Eof => WireRead::Eof,
+                        LineRead::Pending => WireRead::Pending,
+                    });
+                }
+                FrameState::Len { buf, got } => {
+                    let chunk = r.fill_buf()?;
+                    if chunk.is_empty() {
+                        self.state = FrameState::Idle;
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::UnexpectedEof,
+                            "EOF inside a binary frame length prefix",
+                        ));
+                    }
+                    let take = chunk.len().min(4 - *got);
+                    buf[*got..*got + take].copy_from_slice(&chunk[..take]);
+                    r.consume(take);
+                    *got += take;
+                    if *got == 4 {
+                        let len = u32::from_le_bytes(*buf);
+                        if len == 0 || len > self.frame_cap {
+                            self.state = FrameState::Idle;
+                            return Ok(WireRead::BadFrameLen(len));
+                        }
+                        self.state = FrameState::Body {
+                            kind: None,
+                            need: len as usize - 1,
+                            payload: Vec::new(),
+                        };
+                    }
+                }
+                FrameState::Body { kind, need, payload } => {
+                    if kind.is_none() {
+                        let chunk = r.fill_buf()?;
+                        if chunk.is_empty() {
+                            self.state = FrameState::Idle;
+                            return Err(std::io::Error::new(
+                                std::io::ErrorKind::UnexpectedEof,
+                                "EOF inside a binary frame",
+                            ));
+                        }
+                        *kind = Some(chunk[0]);
+                        r.consume(1);
+                    }
+                    if *need > 0 {
+                        let chunk = r.fill_buf()?;
+                        if chunk.is_empty() {
+                            self.state = FrameState::Idle;
+                            return Err(std::io::Error::new(
+                                std::io::ErrorKind::UnexpectedEof,
+                                "EOF inside a binary frame payload",
+                            ));
+                        }
+                        let take = chunk.len().min(*need);
+                        payload.extend_from_slice(&chunk[..take]);
+                        r.consume(take);
+                        *need -= take;
+                    }
+                    if *need == 0 {
+                        let k = kind.expect("kind read before payload");
+                        let p = std::mem::take(payload);
+                        self.state = FrameState::Idle;
+                        return Ok(WireRead::Frame(k, p));
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// The `serve-session` loop: greeting line, then one response line per
 /// request line until `shutdown` or EOF. Flushes after every line (the
 /// client blocks on each response). Blank lines are ignored.
@@ -1151,7 +1462,11 @@ impl CappedLineReader {
 /// [`MAX_LINE_BYTES_STDIO`] are answered with `malformed_request`
 /// without ever being buffered whole, and I/O errors on either side end
 /// the loop cleanly (`Ok`) — a vanished client is the normal end of a
-/// session, not a process error.
+/// session, not a process error. Binary frames (wire v2) are accepted
+/// once negotiated; frame lengths are capped at
+/// [`frames::MAX_FRAME_BYTES`](crate::sim::frames::MAX_FRAME_BYTES),
+/// and a corrupt length prefix — the one unrecoverable wire fault —
+/// answers `malformed_request` and ends the loop.
 pub fn serve<R: BufRead, W: Write>(
     opts: SimOptions,
     mut input: R,
@@ -1161,20 +1476,41 @@ pub fn serve<R: BufRead, W: Write>(
     if writeln!(out, "{}", session.hello()).and_then(|_| out.flush()).is_err() {
         return Ok(());
     }
-    let mut reader = CappedLineReader::new(MAX_LINE_BYTES_STDIO);
+    let mut reader = WireReader::new(MAX_LINE_BYTES_STDIO, frames::MAX_FRAME_BYTES);
     loop {
-        let (resp, done) = match reader.read_line(&mut input) {
+        let (resp, done) = match reader.read(&mut input) {
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Ok(LineRead::Pending) => continue,
-            Err(_) | Ok(LineRead::Eof) => break,
-            Ok(LineRead::TooLong) => (
+            Ok(WireRead::Pending) => continue,
+            Err(_) | Ok(WireRead::Eof) => break,
+            Ok(WireRead::TooLong) => (
                 err_response(
                     CODE_MALFORMED,
                     &format!("request line exceeds {MAX_LINE_BYTES_STDIO} bytes"),
                 ),
                 false,
             ),
-            Ok(LineRead::Line(line)) => {
+            Ok(WireRead::BadFrameLen(len)) => {
+                // unrecoverable: the stream cannot be resynchronised
+                let resp = err_response(
+                    CODE_MALFORMED,
+                    &format!(
+                        "binary frame length {len} invalid (1..={} allowed); closing",
+                        frames::MAX_FRAME_BYTES
+                    ),
+                );
+                let _ = writeln!(out, "{resp}").and_then(|_| out.flush());
+                break;
+            }
+            Ok(WireRead::Frame(kind, payload)) => match session.handle_frame(kind, &payload) {
+                Ok(reply) => {
+                    if out.write_all(&reply).and_then(|_| out.flush()).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+                Err(line) => (line, false),
+            },
+            Ok(WireRead::Line(line)) => {
                 if line.trim().is_empty() {
                     continue;
                 }
@@ -1421,7 +1757,8 @@ mod tests {
                 seed: None,
                 workers: Some(4),
                 shards: None,
-                learning: None
+                learning: None,
+                wire_binary: false
             }
         );
         assert_eq!(
@@ -1431,7 +1768,8 @@ mod tests {
                 seed: None,
                 workers: None,
                 shards: None,
-                learning: None
+                learning: None,
+                wire_binary: false
             }
         );
         // mistyped workers is a malformed request, not a silent default
@@ -1475,7 +1813,8 @@ mod tests {
                 seed: None,
                 workers: None,
                 shards: Some(2),
-                learning: None
+                learning: None,
+                wire_binary: false
             }
         );
         // mistyped shards is a malformed request, not a silent default
@@ -1838,6 +2177,225 @@ mod tests {
         let (resp, _) = s.handle_line(r#"{"op":"step","axons":[0,1]}"#);
         assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
         std::fs::remove_file(&p).ok();
+    }
+
+    /// PR 10 tentpole: `"wire":"binary"` negotiation — parse, echo in
+    /// the configure response, re-negotiation by a later configure, and
+    /// rejection of unknown wire names.
+    #[test]
+    fn configure_wire_field_parses_and_is_echoed() {
+        match parse_request(r#"{"op":"configure","net":"x.hsn","wire":"binary"}"#).unwrap() {
+            Request::Configure { wire_binary, .. } => assert!(wire_binary),
+            other => panic!("{other:?}"),
+        }
+        match parse_request(r#"{"op":"configure","net":"x.hsn","wire":"json"}"#).unwrap() {
+            Request::Configure { wire_binary, .. } => assert!(!wire_binary),
+            other => panic!("{other:?}"),
+        }
+        for bad in [
+            r#"{"op":"configure","net":"x.hsn","wire":"carrier-pigeon"}"#,
+            r#"{"op":"configure","net":"x.hsn","wire":2}"#,
+        ] {
+            assert_eq!(parse_request(bad).unwrap_err().code, CODE_MALFORMED, "{bad}");
+        }
+
+        let p = fig6_path("wirenego");
+        let mut s = Session::new(SimOptions::default());
+        let (resp, _) = s.handle_line(&format!(
+            "{{\"op\":\"configure\",\"net\":\"{}\",\"wire\":\"binary\"}}",
+            p.display()
+        ));
+        assert_eq!(parsed(&resp).get("wire").and_then(Json::as_str), Some("binary"), "{resp}");
+        assert!(s.wire_is_binary());
+        // a later configure without the field re-negotiates back to JSON
+        let (resp, _) =
+            s.handle_line(&format!("{{\"op\":\"configure\",\"net\":\"{}\"}}", p.display()));
+        assert_eq!(parsed(&resp).get("wire").and_then(Json::as_str), Some("json"), "{resp}");
+        assert!(!s.wire_is_binary());
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// PR 10 acceptance: the same schedule over the JSON wire and the
+    /// binary wire produces a bit-identical spike train (stdio serve
+    /// loop; the TCP side is pinned in `tests/serve_tcp.rs`).
+    #[test]
+    fn binary_wire_matches_json_wire_over_stdio_serve() {
+        let p = fig6_path("wireparity");
+        let stimulus: Vec<Vec<u32>> = vec![vec![0, 1], vec![0], vec![], vec![1], vec![0]];
+
+        // reference: the JSON wire
+        let mut t = configured_session(&p);
+        let rows = Json::Arr(
+            stimulus.iter().map(|r| arr_i64(r.iter().map(|&a| a as i64))).collect(),
+        );
+        let req = obj(vec![("op", Json::Str("step_many".into())), ("batch", rows)]);
+        let (resp, _) = t.handle_line(&req.to_string());
+        let j = parsed(&resp);
+        let want: Vec<Vec<u32>> = j
+            .get("spikes")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|r| r.int_vec().unwrap().into_iter().map(|x| x as u32).collect())
+            .collect();
+        let want_fired = j.get("fired_total").and_then(Json::as_i64).unwrap() as u64;
+
+        // binary wire through the full serve loop: a configure line and
+        // a STIM frame interleaved on one input stream
+        let mut input = format!(
+            "{{\"op\":\"configure\",\"net\":\"{}\",\"wire\":\"binary\"}}\n",
+            p.display()
+        )
+        .into_bytes();
+        input.extend_from_slice(
+            &frames::encode_wire_frame(frames::FRAME_STIM, &frames::encode_stim(&stimulus))
+                .unwrap(),
+        );
+        let mut out = Vec::new();
+        serve(SimOptions::default(), &input[..], &mut out).unwrap();
+
+        // output: hello line, configure line, then one SPIKES frame
+        let frame_at = out
+            .iter()
+            .position(|&b| b == frames::WIRE_SENTINEL)
+            .expect("no SPIKES frame in output");
+        let text = std::str::from_utf8(&out[..frame_at]).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "{text}");
+        assert_eq!(parsed(lines[0]).get("op").and_then(Json::as_str), Some("hello"));
+        assert_eq!(
+            parsed(lines[1]).get("wire").and_then(Json::as_str),
+            Some("binary"),
+            "{}",
+            lines[1]
+        );
+        let mut r = std::io::Cursor::new(&out[frame_at + 1..]);
+        let (kind, payload) = frames::read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(kind, frames::FRAME_SPIKES);
+        let (got, fired) = frames::decode_spikes(&payload).unwrap();
+        assert_eq!(got, want, "binary wire diverged from the JSON wire");
+        assert_eq!(fired, want_fired);
+        assert_eq!(r.position() as usize, out.len() - frame_at - 1, "trailing output bytes");
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Satellite (PR 10): in-frame fault paths answer the same stable
+    /// JSON error codes as the JSON wire and leave the session alive.
+    #[test]
+    fn binary_frame_faults_answer_stable_codes_and_session_survives() {
+        let p = fig6_path("wirefaults");
+        // frame before negotiation (fresh session, JSON wire)
+        let mut s = configured_session(&p);
+        let stim = frames::encode_stim(&[vec![0u32]]);
+        assert_err(&s.handle_frame(frames::FRAME_STIM, &stim).unwrap_err(), CODE_MALFORMED);
+
+        // negotiate, then: bad kind, undecodable payload, bad stimulus
+        let (resp, _) = s.handle_line(&format!(
+            "{{\"op\":\"configure\",\"net\":\"{}\",\"wire\":\"binary\"}}",
+            p.display()
+        ));
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_err(&s.handle_frame(0x77, &stim).unwrap_err(), CODE_MALFORMED);
+        assert_err(
+            &s.handle_frame(frames::FRAME_STIM, &stim[..stim.len() - 1]).unwrap_err(),
+            CODE_MALFORMED,
+        );
+        let bad_axon = frames::encode_stim(&[vec![0u32], vec![99]]);
+        assert_err(&s.handle_frame(frames::FRAME_STIM, &bad_axon).unwrap_err(), CODE_STIMULUS);
+        // atomicity held: nothing executed across all those faults
+        let (resp, _) = s.handle_line(r#"{"op":"read_membrane","ids":[0,1,2,3]}"#);
+        assert_eq!(parsed(&resp).get("v").and_then(Json::i32_vec), Some(vec![0, 0, 0, 0]));
+        // and a good frame still works
+        let reply = s.handle_frame(frames::FRAME_STIM, &stim).unwrap();
+        assert_eq!(reply[0], frames::WIRE_SENTINEL);
+        let mut r = std::io::Cursor::new(&reply[1..]);
+        let (kind, payload) = frames::read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(kind, frames::FRAME_SPIKES);
+        let (spikes, _) = frames::decode_spikes(&payload).unwrap();
+        assert_eq!(spikes.len(), 1);
+
+        // quota + oversized caps mirror the JSON path
+        let limits = SessionLimits { max_batch_steps: 2, ..SessionLimits::default() };
+        let mut q = Session::with_limits(SimOptions::default(), limits);
+        let (resp, _) = q.handle_line(&format!(
+            "{{\"op\":\"configure\",\"net\":\"{}\",\"wire\":\"binary\"}}",
+            p.display()
+        ));
+        assert_eq!(parsed(&resp).get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let big = frames::encode_stim(&vec![Vec::new(); 3]);
+        assert_err(&q.handle_frame(frames::FRAME_STIM, &big).unwrap_err(), CODE_QUOTA);
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Satellite (PR 10): a corrupt binary length prefix answers one
+    /// `malformed_request` line and ends the stdio serve loop — the
+    /// stream cannot be resynchronised.
+    #[test]
+    fn serve_loop_closes_on_bad_frame_length() {
+        let p = fig6_path("badframelen");
+        let mut input = format!(
+            "{{\"op\":\"configure\",\"net\":\"{}\",\"wire\":\"binary\"}}\n",
+            p.display()
+        )
+        .into_bytes();
+        input.push(frames::WIRE_SENTINEL);
+        input.extend_from_slice(&u32::MAX.to_le_bytes()); // over the cap
+        input.extend_from_slice(b"garbage that must never be parsed");
+        let mut out = Vec::new();
+        serve(SimOptions::default(), &input[..], &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "{text}");
+        assert_eq!(
+            parsed(lines[2]).get("code").and_then(Json::as_str),
+            Some(CODE_MALFORMED),
+            "{}",
+            lines[2]
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// The wire reader routes interleaved lines and frames, and never
+    /// mistakes a NUL byte *inside* a line for a frame sentinel.
+    #[test]
+    fn wire_reader_routes_lines_and_frames() {
+        let mut input: Vec<u8> = b"{\"op\":\"health\"}\n".to_vec();
+        input.extend_from_slice(&frames::encode_wire_frame(frames::FRAME_STIM, &[9, 9]).unwrap());
+        input.extend_from_slice(b"tail\x00line\n"); // NUL inside a line
+        input.extend_from_slice(&frames::encode_wire_frame(frames::FRAME_STIM, &[]).unwrap());
+        let mut r = WireReader::new(1024, frames::MAX_FRAME_BYTES);
+        let mut cursor = std::io::BufReader::with_capacity(3, &input[..]); // tiny chunks
+        match r.read(&mut cursor).unwrap() {
+            WireRead::Line(l) => assert_eq!(l, "{\"op\":\"health\"}"),
+            other => panic!("{other:?}"),
+        }
+        match r.read(&mut cursor).unwrap() {
+            WireRead::Frame(k, p) => assert_eq!((k, p.as_slice()), (frames::FRAME_STIM, &[9u8, 9][..])),
+            other => panic!("{other:?}"),
+        }
+        match r.read(&mut cursor).unwrap() {
+            WireRead::Line(l) => assert_eq!(l, "tail\x00line"),
+            other => panic!("{other:?}"),
+        }
+        match r.read(&mut cursor).unwrap() {
+            WireRead::Frame(k, p) => assert_eq!((k, p.len()), (frames::FRAME_STIM, 0)),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(r.read(&mut cursor).unwrap(), WireRead::Eof));
+
+        // EOF mid-frame is an error, not a silent request
+        let whole = frames::encode_wire_frame(frames::FRAME_STIM, &[1, 2, 3, 4]).unwrap();
+        let cut = &whole[..whole.len() - 2];
+        let mut r = WireReader::new(1024, frames::MAX_FRAME_BYTES);
+        let mut cursor = std::io::BufReader::new(cut);
+        assert!(r.read(&mut cursor).is_err());
+
+        // a corrupt length prefix reports BadFrameLen without reading on
+        let mut input = vec![frames::WIRE_SENTINEL];
+        input.extend_from_slice(&0u32.to_le_bytes());
+        let mut r = WireReader::new(1024, frames::MAX_FRAME_BYTES);
+        let mut cursor = std::io::BufReader::new(&input[..]);
+        assert!(matches!(r.read(&mut cursor).unwrap(), WireRead::BadFrameLen(0)));
     }
 
     #[test]

@@ -21,6 +21,7 @@ use hiaer_spike::energy::EnergyModel;
 use hiaer_spike::engine::{sweep_chunk, CoreParams, UpdateBackend};
 use hiaer_spike::hbm::{HbmImage, Pointer};
 use hiaer_spike::model_fmt::write_hsn;
+use hiaer_spike::sim::frames;
 use hiaer_spike::sim::serve::{serve_tcp_with_factory, ServeLimits, SessionFactory};
 use hiaer_spike::sim::session::Session;
 use hiaer_spike::sim::{CostSummary, SimConfig, SimError, SimOptions, Simulator, StepResult};
@@ -127,6 +128,31 @@ impl Client {
         self.send(line);
         self.read_json().expect("response line")
     }
+
+    /// Send one binary wire-v2 frame (sentinel + length + kind + payload).
+    fn send_frame(&mut self, kind: u8, payload: &[u8]) {
+        let bytes = frames::encode_wire_frame(kind, payload).unwrap();
+        self.stream.write_all(&bytes).unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    /// Read one binary reply frame; panics on a JSON line (use
+    /// `read_json` for those).
+    fn read_frame(&mut self) -> (u8, Vec<u8>) {
+        use std::io::Read;
+        let mut sentinel = [0u8; 1];
+        self.reader.read_exact(&mut sentinel).expect("frame sentinel");
+        assert_eq!(sentinel[0], frames::WIRE_SENTINEL, "expected a binary frame");
+        let mut lenb = [0u8; 4];
+        self.reader.read_exact(&mut lenb).expect("frame length");
+        let len = u32::from_le_bytes(lenb) as usize;
+        assert!(len >= 1, "frame length must count the kind byte");
+        let mut kind = [0u8; 1];
+        self.reader.read_exact(&mut kind).expect("frame kind");
+        let mut payload = vec![0u8; len - 1];
+        self.reader.read_exact(&mut payload).expect("frame payload");
+        (kind[0], payload)
+    }
 }
 
 fn ok(j: &Json) -> bool {
@@ -139,6 +165,10 @@ fn code(j: &Json) -> Option<&str> {
 
 fn configure_line(p: &std::path::Path) -> String {
     format!("{{\"op\":\"configure\",\"net\":\"{}\"}}", p.display())
+}
+
+fn configure_binary_line(p: &std::path::Path) -> String {
+    format!("{{\"op\":\"configure\",\"net\":\"{}\",\"wire\":\"binary\"}}", p.display())
 }
 
 fn step_line(axons: &[u32]) -> String {
@@ -786,5 +816,181 @@ fn graceful_drain_finishes_in_flight_and_notifies() {
     assert_eq!(c.read_json(), None, "EOF after drain");
 
     server.handle.join().expect("server thread").expect("serve_tcp drain");
+    std::fs::remove_file(&net_path).ok();
+}
+
+// ------------------------------------------------- binary wire (PR 10)
+
+/// Tentpole parity pin (TCP): the same `step_many` schedule over the
+/// JSON wire and over binary STIM/SPIKES frames must produce
+/// bit-identical spike trains — the binary wire is an encoding, never a
+/// semantic fork.
+#[test]
+fn binary_wire_matches_json_wire_over_tcp() {
+    let net_path = temp_hsn("binparity");
+    write_hsn(&fig6_net(), &net_path).unwrap();
+    let server = start_server(ServeLimits::default());
+
+    let schedule: Vec<Vec<u32>> =
+        (0..16u32).map(|t| if t % 3 == 0 { vec![0, 1] } else { vec![t % 2] }).collect();
+
+    // reference run over the JSON wire
+    let mut json_c = Client::connect(server.addr);
+    json_c.hello();
+    assert!(ok(&json_c.request(&configure_line(&net_path))));
+    let json_resp = json_c.request(&step_many_line(&schedule));
+    assert!(ok(&json_resp), "{json_resp:?}");
+    let json_rows: Vec<Vec<i64>> = json_resp
+        .get("spikes")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|r| r.int_vec().unwrap())
+        .collect();
+
+    // same schedule over the binary wire
+    let mut bin_c = Client::connect(server.addr);
+    bin_c.hello();
+    let conf = bin_c.request(&configure_binary_line(&net_path));
+    assert!(ok(&conf), "{conf:?}");
+    assert_eq!(conf.get("wire").and_then(Json::as_str), Some("binary"), "{conf:?}");
+    bin_c.send_frame(frames::FRAME_STIM, &frames::encode_stim(&schedule));
+    let (kind, payload) = bin_c.read_frame();
+    assert_eq!(kind, frames::FRAME_SPIKES);
+    let (bin_rows, fired_total) = frames::decode_spikes(&payload).unwrap();
+
+    let bin_rows_i64: Vec<Vec<i64>> =
+        bin_rows.iter().map(|r| r.iter().map(|&s| s as i64).collect()).collect();
+    assert_eq!(bin_rows_i64, json_rows, "binary and JSON wires must be bit-identical");
+    assert_eq!(
+        json_resp.get("fired_total").and_then(Json::as_i64),
+        Some(fired_total as i64),
+        "{json_resp:?}"
+    );
+
+    drop(json_c);
+    drop(bin_c);
+    server.stop();
+    std::fs::remove_file(&net_path).ok();
+}
+
+/// An unknown frame kind answers `malformed_request` as a JSON line and
+/// the session survives to serve a good frame right after.
+#[test]
+fn binary_bad_kind_answers_malformed_and_session_survives() {
+    let net_path = temp_hsn("binbadkind");
+    write_hsn(&fig6_net(), &net_path).unwrap();
+    let server = start_server(ServeLimits::default());
+
+    let mut c = Client::connect(server.addr);
+    c.hello();
+    assert!(ok(&c.request(&configure_binary_line(&net_path))));
+
+    c.send_frame(0x77, &[1, 2, 3]);
+    let r = c.read_json().expect("malformed line for bad kind");
+    assert_eq!(code(&r), Some("malformed_request"), "{r:?}");
+
+    // undecodable STIM payload: also malformed, also survivable
+    c.send_frame(frames::FRAME_STIM, &[9, 9]);
+    let r = c.read_json().expect("malformed line for truncated payload");
+    assert_eq!(code(&r), Some("malformed_request"), "{r:?}");
+
+    c.send_frame(frames::FRAME_STIM, &frames::encode_stim(&[vec![0, 1], vec![]]));
+    let (kind, payload) = c.read_frame();
+    assert_eq!(kind, frames::FRAME_SPIKES);
+    let (rows, _) = frames::decode_spikes(&payload).unwrap();
+    assert_eq!(rows.len(), 2, "session must still step after frame faults");
+    drop(c);
+    server.stop();
+    std::fs::remove_file(&net_path).ok();
+}
+
+/// A corrupt length prefix cannot be resynchronised: the server answers
+/// one `malformed_request` line and closes that connection — and only
+/// that connection.
+#[test]
+fn oversized_binary_length_prefix_closes_only_that_connection() {
+    let net_path = temp_hsn("binlen");
+    write_hsn(&fig6_net(), &net_path).unwrap();
+    let server = start_server(ServeLimits::default());
+
+    let mut survivor = Client::connect(server.addr);
+    survivor.hello();
+    assert!(ok(&survivor.request(&configure_line(&net_path))));
+
+    let mut victim = Client::connect(server.addr);
+    victim.hello();
+    assert!(ok(&victim.request(&configure_binary_line(&net_path))));
+    let mut bad = vec![frames::WIRE_SENTINEL];
+    bad.extend_from_slice(&u32::MAX.to_le_bytes());
+    victim.stream.write_all(&bad).unwrap();
+    victim.stream.flush().unwrap();
+    let r = victim.read_json().expect("malformed line before close");
+    assert_eq!(code(&r), Some("malformed_request"), "{r:?}");
+    assert_eq!(victim.read_json(), None, "EOF after corrupt length prefix");
+
+    wait_for_metric(&mut survivor, "disconnects", 1);
+    assert!(ok(&survivor.request(&step_line(&[0, 1]))));
+    drop(survivor);
+    server.stop();
+    std::fs::remove_file(&net_path).ok();
+}
+
+/// A client dropping mid-frame (length promised, bytes never sent) is a
+/// clean disconnect: nothing executes, peers keep serving.
+#[test]
+fn truncated_binary_frame_disconnect_is_clean() {
+    let net_path = temp_hsn("bintrunc");
+    write_hsn(&fig6_net(), &net_path).unwrap();
+    let server = start_server(ServeLimits::default());
+
+    let mut survivor = Client::connect(server.addr);
+    survivor.hello();
+    assert!(ok(&survivor.request(&configure_line(&net_path))));
+
+    {
+        let mut half = Client::connect(server.addr);
+        half.hello();
+        assert!(ok(&half.request(&configure_binary_line(&net_path))));
+        // promise a 100-byte frame, deliver 5, vanish
+        let mut partial = vec![frames::WIRE_SENTINEL];
+        partial.extend_from_slice(&100u32.to_le_bytes());
+        partial.extend_from_slice(&[frames::FRAME_STIM, 1, 2, 3, 4]);
+        half.stream.write_all(&partial).unwrap();
+        half.stream.flush().unwrap();
+    }
+
+    wait_for_metric(&mut survivor, "disconnects", 1);
+    let m = survivor.request("{\"op\":\"metrics\"}");
+    assert_eq!(m.get("steps_total").and_then(Json::as_i64), Some(0), "{m:?}");
+    assert!(ok(&survivor.request(&step_line(&[0]))));
+    drop(survivor);
+    server.stop();
+    std::fs::remove_file(&net_path).ok();
+}
+
+/// A binary frame before `"wire":"binary"` was negotiated answers
+/// `malformed_request`; the session stays on the JSON wire and keeps
+/// working.
+#[test]
+fn frame_before_negotiation_is_malformed_and_json_still_works() {
+    let net_path = temp_hsn("binnoneg");
+    write_hsn(&fig6_net(), &net_path).unwrap();
+    let server = start_server(ServeLimits::default());
+
+    let mut c = Client::connect(server.addr);
+    c.hello();
+    // plain JSON configure: binary was never negotiated
+    let conf = c.request(&configure_line(&net_path));
+    assert!(ok(&conf), "{conf:?}");
+    assert_eq!(conf.get("wire").and_then(Json::as_str), Some("json"), "{conf:?}");
+
+    c.send_frame(frames::FRAME_STIM, &frames::encode_stim(&[vec![0]]));
+    let r = c.read_json().expect("malformed line for unnegotiated frame");
+    assert_eq!(code(&r), Some("malformed_request"), "{r:?}");
+
+    assert!(ok(&c.request(&step_line(&[0, 1]))));
+    drop(c);
+    server.stop();
     std::fs::remove_file(&net_path).ok();
 }

@@ -8,8 +8,12 @@ through `cargo test`:
    tight limits and parse the announced address from stdout;
 2. run 4 concurrent TCP clients (configure + step_many) — one of them
    disconnects mid-batch without reading its response;
-3. check the server still answers `health` (not draining, 0 queue);
-4. send SIGTERM and require a clean drain: exit code 0 and the
+3. run the same schedule over the JSON wire and the negotiated binary
+   wire (wire v2 STIM/SPIKES frames) and require identical spike rows,
+   then probe with a corrupt binary length prefix and require one
+   `malformed_request` line + connection close;
+4. check the server still answers `health` (not draining, 0 queue);
+5. send SIGTERM and require a clean drain: exit code 0 and the
    "drained" line on stdout.
 
 Stdlib only; every phase is timeout-bounded so a wedged server fails
@@ -23,12 +27,29 @@ import json
 import os
 import signal
 import socket
+import struct
 import subprocess
 import sys
 import threading
 import time
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# binary wire v2 framing (rust/src/sim/frames.rs)
+WIRE_SENTINEL = b"\x00"
+FRAME_STIM = 0x10
+FRAME_SPIKES = 0x90
+
+
+def pack_stim(rows: list[list[int]]) -> bytes:
+    """One complete STIM wire frame for a stimulus batch."""
+    parts = [struct.pack("<I", len(rows))]
+    for row in rows:
+        parts.append(struct.pack("<I", len(row)))
+        if row:
+            parts.append(struct.pack(f"<{len(row)}I", *row))
+    payload = b"".join(parts)
+    return WIRE_SENTINEL + struct.pack("<I", len(payload) + 1) + bytes([FRAME_STIM]) + payload
 
 
 def find_binary(explicit: str | None) -> str:
@@ -71,6 +92,56 @@ class Client:
         resp = self.recv()
         assert resp.get("ok"), f"{req.get('op')} failed: {resp}"
         return resp
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class BinaryClient:
+    """Byte-stream client for the wire-v2 binary path: JSON lines and
+    binary frames share one socket, so reads go through a binary file
+    object and lines are decoded per-read."""
+
+    def __init__(self, addr: tuple[str, int], timeout: float):
+        self.sock = socket.create_connection(addr, timeout=timeout)
+        self.sock.settimeout(timeout)
+        self.rfile = self.sock.makefile("rb")
+        hello = self.recv_json()
+        assert hello.get("op") == "hello" and hello.get("ok"), f"bad greeting: {hello}"
+
+    def send_json(self, req: dict) -> None:
+        self.sock.sendall((json.dumps(req, separators=(",", ":")) + "\n").encode("utf-8"))
+
+    def recv_json(self) -> dict:
+        line = self.rfile.readline()
+        assert line, "server closed the connection unexpectedly"
+        return json.loads(line)
+
+    def recv_exact(self, n: int) -> bytes:
+        data = self.rfile.read(n)
+        assert data is not None and len(data) == n, f"short read ({len(data or b'')}/{n})"
+        return data
+
+    def recv_spikes(self) -> tuple[list[list[int]], int]:
+        first = self.recv_exact(1)
+        assert first == WIRE_SENTINEL, f"expected a binary frame, got {first!r}"
+        (ln,) = struct.unpack("<I", self.recv_exact(4))
+        body = self.recv_exact(ln)
+        assert body[0] == FRAME_SPIKES, f"unexpected frame kind 0x{body[0]:02x}"
+        payload = body[1:]
+        fired_total, n_steps = struct.unpack_from("<QI", payload, 0)
+        off = 12
+        rows = []
+        for _ in range(n_steps):
+            (n,) = struct.unpack_from("<I", payload, off)
+            off += 4
+            rows.append(list(struct.unpack_from(f"<{n}I", payload, off)))
+            off += 4 * n
+        assert off == len(payload), "trailing bytes in SPIKES payload"
+        return rows, fired_total
 
     def close(self) -> None:
         try:
@@ -138,6 +209,41 @@ def main() -> int:
             assert not t.is_alive(), "client thread wedged"
         assert not errors, "client failures:\n  " + "\n  ".join(errors)
         print("serve_smoke: 4 concurrent clients done (1 disconnected mid-batch)")
+
+        # binary wire (wire v2): the same schedule over both wires must
+        # give identical spike rows
+        schedule = [[0, 1] if s % 2 == 0 else [] for s in range(64)]
+        cj = Client(addr, per_client_timeout)
+        cj.request({"op": "configure", "net": args.net, "seed": 7})
+        json_rows = cj.request({"op": "step_many", "batch": schedule})["spikes"]
+        cj.request({"op": "shutdown"})
+        cj.close()
+
+        cb = BinaryClient(addr, per_client_timeout)
+        cb.send_json({"op": "configure", "net": args.net, "seed": 7, "wire": "binary"})
+        conf = cb.recv_json()
+        assert conf.get("ok") and conf.get("wire") == "binary", f"negotiation failed: {conf}"
+        cb.sock.sendall(pack_stim(schedule))
+        bin_rows, _fired = cb.recv_spikes()
+        assert bin_rows == json_rows, (
+            f"binary wire diverged from JSON wire: {bin_rows[:3]}... vs {json_rows[:3]}...")
+        cb.send_json({"op": "shutdown"})
+        cb.recv_json()
+        cb.close()
+        print(f"serve_smoke: binary wire parity over {len(schedule)} steps")
+
+        # malformed-frame probe: a corrupt length prefix gets one
+        # malformed_request line, then the connection closes — and the
+        # server keeps serving
+        mb = BinaryClient(addr, per_client_timeout)
+        mb.send_json({"op": "configure", "net": args.net, "wire": "binary"})
+        assert mb.recv_json().get("wire") == "binary"
+        mb.sock.sendall(WIRE_SENTINEL + struct.pack("<I", 0xFFFFFFFF))
+        resp = mb.recv_json()
+        assert resp.get("code") == "malformed_request", f"want malformed_request: {resp}"
+        assert mb.rfile.readline() == b"", "connection must close after a corrupt prefix"
+        mb.close()
+        print("serve_smoke: malformed-frame probe answered and closed")
 
         # the rude disconnect must not have hurt the server
         c = Client(addr, per_client_timeout)
